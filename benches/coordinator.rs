@@ -1,0 +1,47 @@
+//! Coordinator throughput bench: GEMM jobs/s across worker counts and
+//! backends (the L3 request path).
+
+use percival::bench::harness::bench;
+use percival::coordinator::{Backend, Coordinator, Job};
+use percival::posit::Posit32;
+use percival::testing::Rng;
+
+fn job(rng: &mut Rng, n: usize) -> Job {
+    let a: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+    let b: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+    Job::GemmP32 { n, a, b, quire: true }
+}
+
+fn main() {
+    let n = 32;
+    let jobs = 64;
+    for workers in [1usize, 2, 4, 8] {
+        let mut rng = Rng::new(0xC0);
+        let co = Coordinator::new(workers, Some("artifacts".into()));
+        let r = bench(&format!("native gemm32 x{jobs}, {workers} workers"), 1, 5, || {
+            let rxs: Vec<_> =
+                (0..jobs).map(|_| co.submit(job(&mut rng, n), Backend::Native)).collect();
+            for rx in rxs {
+                rx.recv().unwrap().expect("ok");
+            }
+        });
+        println!("  → {:.0} jobs/s", jobs as f64 / r.mean_s);
+        co.shutdown();
+    }
+
+    // PJRT backend latency (if artifacts are built).
+    let co = Coordinator::new(1, Some("artifacts".into()));
+    let mut rng = Rng::new(0xC1);
+    let probe = co.run(job(&mut rng, 8), Backend::Pjrt);
+    if probe.is_ok() {
+        let r = bench("pjrt gemm8 single-worker", 1, 5, || {
+            co.run(job(&mut rng, 8), Backend::Pjrt).expect("ok");
+        });
+        println!("  → {:.1} ms/job", r.mean_s * 1e3);
+    } else {
+        println!("pjrt backend skipped (artifacts not built)");
+    }
+    co.shutdown();
+}

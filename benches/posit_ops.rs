@@ -1,0 +1,94 @@
+//! Microbenchmarks of the native posit operations (the hot path of the
+//! Native backend and the simulator's PAU) + the approximate-vs-exact
+//! div/sqrt ablation.
+
+use percival::bench::harness::bench;
+use percival::posit::{divsqrt, ops, unpacked};
+use percival::testing::Rng;
+use std::hint::black_box;
+
+const N: usize = 1 << 16;
+
+fn inputs() -> (Vec<u32>, Vec<u32>) {
+    let mut rng = Rng::new(0xBE7C);
+    let gen = |rng: &mut Rng| {
+        (0..N)
+            .map(|_| {
+                let b = rng.posit_bits::<32>();
+                if b == 0 || b == 0x8000_0000 {
+                    0x4000_0000
+                } else {
+                    b
+                }
+            })
+            .collect::<Vec<u32>>()
+    };
+    (gen(&mut rng), gen(&mut rng))
+}
+
+fn main() {
+    let (a, b) = inputs();
+    let per_op = |r: percival::bench::harness::Report| r.mean_s / N as f64 * 1e9;
+
+    let r = bench("posit32 add (64k ops)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= ops::add::<32>(black_box(a[i]), black_box(b[i]));
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/op", per_op(r));
+
+    let r = bench("posit32 mul (64k ops)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= ops::mul::<32>(black_box(a[i]), black_box(b[i]));
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/op", per_op(r));
+
+    let r = bench("posit32 div approx (PDIV.S)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= divsqrt::div_approx::<32>(black_box(a[i]), black_box(b[i]));
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/op", per_op(r));
+
+    let r = bench("posit32 div exact (ablation)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= divsqrt::div_exact::<32>(black_box(a[i]), black_box(b[i]));
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/op", per_op(r));
+
+    let r = bench("posit32 decode+encode roundtrip", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            if let unpacked::Decoded::Num(u) = unpacked::decode::<32>(black_box(a[i])) {
+                acc ^= unpacked::encode_round::<32>(
+                    u.sign,
+                    u.scale,
+                    (u.sig as u64) << 32,
+                    false,
+                );
+            }
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/op", per_op(r));
+
+    let r = bench("posit32 compare (ALU path)", 2, 10, || {
+        let mut acc = 0usize;
+        for i in 0..N {
+            acc += (percival::posit::cmp_signed::<32>(black_box(a[i]), black_box(b[i]))
+                == std::cmp::Ordering::Less) as usize;
+        }
+        black_box(acc);
+    });
+    println!("  → {:.2} ns/op", per_op(r));
+}

@@ -1,0 +1,60 @@
+//! Quire microbenchmarks: QMADD/QROUND throughput vs an f64 FMA baseline —
+//! the software cost of exactness.
+
+use percival::bench::harness::bench;
+use percival::posit::{convert, Quire32};
+use percival::testing::Rng;
+use std::hint::black_box;
+
+const N: usize = 1 << 16;
+
+fn main() {
+    let mut rng = Rng::new(0xACC);
+    let a: Vec<u32> = (0..N).map(|_| convert::from_f64::<32>(rng.range_f64(-10.0, 10.0))).collect();
+    let b: Vec<u32> = (0..N).map(|_| convert::from_f64::<32>(rng.range_f64(-10.0, 10.0))).collect();
+    let af: Vec<f64> = a.iter().map(|x| convert::to_f64::<32>(*x)).collect();
+    let bf: Vec<f64> = b.iter().map(|x| convert::to_f64::<32>(*x)).collect();
+
+    let r = bench("quire32 qmadd (64k MACs)", 2, 10, || {
+        let mut q = Quire32::new();
+        for i in 0..N {
+            q.madd(black_box(a[i]), black_box(b[i]));
+        }
+        black_box(q.round());
+    });
+    println!("  → {:.1} ns/MAC", r.mean_s / N as f64 * 1e9);
+
+    let r = bench("f64 fma baseline (64k MACs)", 2, 10, || {
+        let mut acc = 0.0f64;
+        for i in 0..N {
+            acc = black_box(af[i]).mul_add(black_box(bf[i]), acc);
+        }
+        black_box(acc);
+    });
+    println!("  → {:.2} ns/MAC", r.mean_s / N as f64 * 1e9);
+
+    let r = bench("quire32 qround (4k roundings)", 2, 10, || {
+        let mut q = Quire32::new();
+        let mut acc = 0u32;
+        for i in 0..4096 {
+            q.madd(a[i], b[i]);
+            acc ^= q.round();
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/round (incl. one madd)", r.mean_s / 4096.0 * 1e9);
+
+    // Dot-product shape: the GEMM inner loop (madd×k + one round).
+    let r = bench("quire32 dot-1024 (64 dots)", 2, 10, || {
+        let mut acc = 0u32;
+        for d in 0..64 {
+            let mut q = Quire32::new();
+            for i in 0..1024 {
+                q.madd(a[(d * 37 + i) % N], b[(d * 53 + i) % N]);
+            }
+            acc ^= q.round();
+        }
+        black_box(acc);
+    });
+    println!("  → {:.1} ns/element", r.mean_s / (64.0 * 1024.0) * 1e9);
+}

@@ -1,0 +1,51 @@
+//! Bench: regenerate paper Table 7 (GEMM timing on the simulated core) and
+//! report host-side simulation throughput.
+//!
+//! Sizes 16–64 by default (CI-fast); set `BENCH_FULL=1` for the paper's
+//! full 16–256 sweep.
+
+use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
+use percival::bench::harness::fmt_time;
+use percival::bench::racer::RacerModel;
+use percival::bench::tables;
+use percival::core::CoreConfig;
+use percival::testing::Rng;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let sizes: &[usize] = if full { &tables::SIZES } else { &[16, 32, 64] };
+    let cfg = CoreConfig::default();
+    let mut rng = Rng::new(tables::SEED);
+
+    println!("Table 7 — GEMM timing (simulated @ 50 MHz) + host sim throughput");
+    println!("{:<24} {:>8} {:>14} {:>14} {:>12}", "variant", "n", "sim time", "host time", "Msim-instr/s");
+    for v in GemmVariant::ALL {
+        for &n in sizes {
+            let a = gen_matrix(&mut rng, n, 0);
+            let b = gen_matrix(&mut rng, n, 0);
+            let t0 = std::time::Instant::now();
+            let run = run_gemm_sim(cfg, v, n, &a, &b, true);
+            let host = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<24} {:>8} {:>14} {:>14} {:>12.1}",
+                v.label(),
+                n,
+                fmt_time(run.seconds),
+                fmt_time(host),
+                // Two runs (warm + timed) happened; count the timed one.
+                run.stats.instret as f64 / host / 1e6
+            );
+        }
+    }
+    let racer = RacerModel::fit();
+    for &n in sizes {
+        println!(
+            "{:<24} {:>8} {:>14} {:>14} {:>12}",
+            "RacEr (fitted model)",
+            n,
+            fmt_time(racer.predict(n)),
+            "-",
+            "-"
+        );
+    }
+}

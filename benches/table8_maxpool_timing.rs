@@ -1,0 +1,26 @@
+//! Bench: regenerate paper Table 8 (max-pooling timing) and report host
+//! simulation throughput per layer/format.
+
+use percival::bench::harness::fmt_time;
+use percival::bench::maxpool::{run_pool_sim, PoolConfig, PoolFormat};
+use percival::core::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+    println!("Table 8 — max-pooling timing (simulated @ 50 MHz)");
+    println!("{:<26} {:<14} {:>14} {:>14}", "layer", "format", "sim time", "host time");
+    for layer in PoolConfig::ALL {
+        for fmt in PoolFormat::ALL {
+            let t0 = std::time::Instant::now();
+            let run = run_pool_sim(cfg, fmt, &layer, true);
+            let host = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<26} {:<14} {:>14} {:>14}",
+                layer.name,
+                fmt.label(),
+                fmt_time(run.seconds),
+                fmt_time(host)
+            );
+        }
+    }
+}

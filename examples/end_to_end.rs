@@ -1,0 +1,114 @@
+//! End-to-end system driver — proves all layers compose on a real workload.
+//!
+//! For a set of GEMM workloads this runs the SAME posit computation through
+//! the full stack and requires bit-identical results everywhere:
+//!
+//!   1. **L3 simulator** — the paper's Fig. 6 Xposit kernel, assembled by
+//!      `isa::asm` and executed on the cycle-accurate CVA6 model (gives the
+//!      paper-scale timing).
+//!   2. **Native library** — `posit::Quire32` (the PAU's arithmetic).
+//!   3. **PJRT artifact** — the L1 Pallas quire kernel, written in Python,
+//!      AOT-lowered by `make artifacts`, loaded and executed from Rust.
+//!
+//! It then reports the accuracy of each numeric format against the f64
+//! golden result (the paper's §7.1 protocol) and the simulated timing
+//! (§7.2). Recorded in EXPERIMENTS.md §End-to-end.
+
+use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
+use percival::bench::harness::fmt_time;
+use percival::bench::mse::{gemm_native, mse, NativeKind};
+use percival::coordinator::{Backend, Coordinator, Job};
+use percival::core::CoreConfig;
+use percival::posit::Posit32;
+use percival::runtime::Runtime;
+use percival::testing::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[8] } else { &[8, 16, 32] };
+    let cfg = CoreConfig::default();
+    let mut rng = Rng::new(0xE2E);
+
+    println!("=== PERCIVAL end-to-end: L3 sim ⇄ native PAU ⇄ L1 Pallas/PJRT ===\n");
+    let mut pjrt = Runtime::cpu("artifacts").ok();
+    if pjrt.is_none() {
+        println!("NOTE: PJRT unavailable; artifact leg will be skipped");
+    }
+
+    for &n in sizes {
+        let af = gen_matrix(&mut rng, n, 0);
+        let bf = gen_matrix(&mut rng, n, 0);
+        let a: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+        let b: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+
+        // Leg 1: cycle-accurate simulator running the Fig. 6 kernel.
+        let sim = run_gemm_sim(cfg, GemmVariant::P32Quire, n, &af, &bf, true);
+        let sim_bits: Vec<u32> =
+            sim.result.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+
+        // Leg 2: native library.
+        let native = percival::runtime::native_gemm_quire(n, &a, &b);
+
+        // Leg 3: PJRT artifact (compiled from the Python Pallas kernel).
+        let art = pjrt
+            .as_mut()
+            .filter(|rt| rt.has_artifact(&format!("gemm_p32_quire_{n}")))
+            .map(|rt| rt.gemm_p32("quire", n, &a, &b))
+            .transpose()?;
+
+        assert_eq!(sim_bits, native, "simulator vs native disagree at n={n}");
+        let legs = if let Some(art) = &art {
+            assert_eq!(art, &native, "PJRT artifact vs native disagree at n={n}");
+            "sim ≡ native ≡ pjrt"
+        } else {
+            "sim ≡ native (pjrt artifact not built)"
+        };
+
+        // Accuracy vs f64 golden, posit vs f32 (the §7.1 comparison).
+        let golden = gemm_native(NativeKind::F64Fused, n, &af, &bf);
+        let posit_vals: Vec<f64> = native.iter().map(|v| Posit32(*v).to_f64()).collect();
+        let f32_vals = gemm_native(NativeKind::F32Fused, n, &af, &bf);
+        let mse_p = mse(&posit_vals, &golden);
+        let mse_f = mse(&f32_vals, &golden);
+
+        println!(
+            "n={n:<3} {legs} ✓   sim {} ({} cycles, IPC {:.2}, D$ miss {:.1}%)",
+            fmt_time(sim.seconds),
+            sim.stats.cycles,
+            sim.stats.ipc(),
+            100.0 * sim.stats.dcache_misses as f64
+                / (sim.stats.dcache_hits + sim.stats.dcache_misses).max(1) as f64,
+        );
+        println!(
+            "      MSE vs f64: posit32+quire {mse_p:.3e}  vs  f32 {mse_f:.3e}  (×{:.0} better)",
+            mse_f / mse_p.max(f64::MIN_POSITIVE)
+        );
+    }
+
+    // Coordinator-level cross-check (the L3 request path).
+    println!("\n=== coordinator cross-check (4 workers) ===");
+    let co = Coordinator::new(4, Some("artifacts".into()));
+    let n = 8;
+    let a: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+    let b: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+    let backends: Vec<Backend> = if pjrt.is_some() {
+        vec![Backend::Native, Backend::Sim, Backend::Pjrt]
+    } else {
+        vec![Backend::Native, Backend::Sim]
+    };
+    let results = co.cross_check(Job::GemmP32 { n, a, b, quire: true }, &backends)?;
+    for r in &results {
+        println!(
+            "  {:?}: host {:.3} ms{}",
+            r.backend,
+            r.elapsed_s * 1e3,
+            r.sim_seconds.map(|s| format!(", simulated {}", fmt_time(s))).unwrap_or_default()
+        );
+    }
+    println!("metrics: {}", co.metrics.summary());
+    co.shutdown();
+    println!("\nEND-TO-END: all legs agree bit-for-bit ✓");
+    Ok(())
+}

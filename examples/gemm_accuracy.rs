@@ -1,0 +1,17 @@
+//! Regenerate the paper's accuracy study: Table 6 and Fig. 7 (GEMM MSE vs
+//! the 64-bit IEEE golden result).
+//!
+//! ```sh
+//! cargo run --release --example gemm_accuracy            # full (16…256)
+//! cargo run --release --example gemm_accuracy -- --quick # 16…64
+//! ```
+
+use percival::bench::tables;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[16, 32, 64] } else { &tables::SIZES };
+    tables::table6(sizes, Some("results/table6.csv"));
+    tables::fig7(sizes, Some("results/fig7.csv"));
+    println!("\nCSV written to results/table6.csv and results/fig7.csv");
+}

@@ -1,0 +1,29 @@
+//! Regenerate Table 8: max-pooling timing on the simulated PERCIVAL core
+//! for the LeNet-5 / AlexNet / ResNet-50 layers in f32, f64 and posit32.
+
+use percival::bench::tables;
+use percival::core::CoreConfig;
+
+fn main() {
+    let rows = tables::table8(CoreConfig::default(), Some("results/table8.csv"));
+    // The paper's claim: posit32 ≈ f32, f64 slower by 1.4–1.7×.
+    println!("\nParsed claims:");
+    for row in &rows {
+        let parse = |s: &str| -> f64 {
+            let (v, unit) = s.split_once(' ').unwrap();
+            let v: f64 = v.parse().unwrap();
+            match unit {
+                "s" => v,
+                "ms" => v * 1e-3,
+                _ => v * 1e-6,
+            }
+        };
+        let (f32t, f64t, p32t) = (parse(&row[1]), parse(&row[2]), parse(&row[3]));
+        println!(
+            "  {:<24} p32/f32 = {:.3}  f64/f32 = {:.2}",
+            row[0],
+            p32t / f32t,
+            f64t / f32t
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Quickstart: the posit arithmetic API in five minutes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use percival::posit::{Posit16, Posit32, Posit8, Quire32};
+
+fn main() {
+    // ── Construction and conversion ─────────────────────────────────────
+    let a = Posit32::from_f64(3.25);
+    let b = Posit32::from_f64(-7.5);
+    println!("a = {a:?}");
+    println!("b = {b:?}");
+
+    // ── COMP: add / sub / mul, approximate and exact div/sqrt ──────────
+    println!("a + b        = {}", a + b);
+    println!("a - b        = {}", a - b);
+    println!("a * b        = {}", a * b);
+    println!("a / b exact  = {}", a.div_exact(b));
+    println!("a / b approx = {}  (PDIV.S, log-approximate, §4.1)", a.div_approx(b));
+    println!("sqrt exact   = {}", Posit32::from_f64(2.0).sqrt_exact());
+    println!("sqrt approx  = {}", Posit32::from_f64(2.0).sqrt_approx());
+
+    // ── Comparisons run as integer compares (the ALU trick, §2.1) ──────
+    println!("a < b  = {}   (signed-int compare on patterns)", a < b);
+    println!("NaR is the least posit: {}", Posit32::NAR < Posit32::from_f64(-1e30));
+
+    // ── FUSED: the quire — the paper's headline feature ─────────────────
+    // (1e8·1e8 + 1·1 − 1e8·1e8) computed exactly:
+    let big = Posit32::from_f64(1.0e8);
+    let one = Posit32::ONE;
+    let mut q = Quire32::new(); // QCLR.S
+    q.madd(big.bits(), big.bits()); // QMADD.S
+    q.madd(one.bits(), one.bits());
+    q.msub(big.bits(), big.bits()); // QMSUB.S
+    let fused = Posit32(q.round()); // QROUND.S
+    let unfused = (big * big + one * one) - big * big;
+    println!("quire   result = {fused}   (exact)");
+    println!("unfused result = {unfused}   (the 1 is lost to rounding)");
+
+    // ── Other widths ────────────────────────────────────────────────────
+    println!("Posit8  1/3 ≈ {}", Posit8::from_f64(1.0 / 3.0));
+    println!("Posit16 1/3 ≈ {}", Posit16::from_f64(1.0 / 3.0));
+    println!("Posit32 1/3 ≈ {}", Posit32::from_f64(1.0 / 3.0));
+    println!("maxpos32 = {} = 2^120", Posit32::MAXPOS);
+    println!("minpos32 = {} = 2^-120", Posit32::MINPOS);
+}

@@ -1,0 +1,13 @@
+//! Regenerate the synthesis section (§6): Tables 3, 4, 5, the headline
+//! ratios, and the design-choice ablations.
+
+use percival::synth::report;
+
+fn main() {
+    report::table3(Some("results/table3.csv"));
+    report::table4(Some("results/table4.csv"));
+    report::table5(Some("results/table5.csv"));
+    report::ratios();
+    report::ablations();
+    println!("\nCSV written to results/table{{3,4,5}}.csv");
+}

@@ -1,0 +1,123 @@
+"""AOT lowering: L2 graphs → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Also exports the pure-Python oracle's test vectors
+(``--vectors`` / part of the default run) for the Rust integration tests.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import json
+import os
+import random
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, oracle
+
+jax.config.update("jax_enable_x64", True)
+
+# (name, function, example-arg maker)
+def _specs(quick):
+    sizes = [8, 16] if quick else [8, 16, 32, 64]
+    specs = []
+    for n in sizes:
+        i32 = jax.ShapeDtypeStruct((n, n), jnp.int32)
+        specs.append((f"gemm_p32_quire_{n}", model.gemm_p32_quire, (i32, i32)))
+        specs.append((f"gemm_p32_quire_ref_{n}", model.gemm_p32_quire_ref, (i32, i32)))
+        if n <= 16:
+            specs.append((f"gemm_p32_noquire_{n}", model.gemm_p32_noquire, (i32, i32)))
+        f32 = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        specs.append((f"gemm_f32_{n}", model.gemm_f32, (f32, f32)))
+    # LeNet-5 pooling layer (paper Table 8 row 1).
+    x = jax.ShapeDtypeStruct((6, 28, 28), jnp.int32)
+    specs.append(("maxpool_p32_lenet", lambda t: model.maxpool_p32(t, 2, 2), (x,)))
+    # Conversions.
+    v = jax.ShapeDtypeStruct((256,), jnp.int32)
+    specs.append(("p32_to_f64", model.p32_to_f64, (v,)))
+    w = jax.ShapeDtypeStruct((256,), jnp.float64)
+    specs.append(("f64_to_p32", model.f64_to_p32, (w,)))
+    return specs
+
+
+def to_hlo_text(fn, args):
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_vectors(out_dir):
+    """Oracle test vectors for the Rust side (three-way cross-check)."""
+    rng = random.Random(0x5EED)
+    vec_dir = os.path.join(out_dir, "vectors")
+    os.makedirs(vec_dir, exist_ok=True)
+    # Scalar ops on random patterns (include specials & extremes).
+    pats = [0, 0x80000000, 1, 0x7FFFFFFF, 0x40000000, 0xC0000000]
+    pats += [rng.getrandbits(32) for _ in range(500)]
+    ops = {
+        "mul": [
+            {"a": a, "b": b, "out": oracle.mul(a, b)}
+            for a, b in zip(pats, reversed(pats))
+        ],
+        "add": [
+            {"a": a, "b": b, "out": oracle.add(a, b)}
+            for a, b in zip(pats, reversed(pats))
+        ],
+    }
+    with open(os.path.join(vec_dir, "scalar_ops.json"), "w") as f:
+        json.dump(ops, f)
+    # Quire dot products.
+    dots = []
+    for klen in (1, 2, 3, 7, 33):
+        a = [rng.getrandbits(32) & 0x7FFFFFFF or 1 for _ in range(klen)]
+        b = [rng.getrandbits(32) & 0x7FFFFFFF or 1 for _ in range(klen)]
+        dots.append({"a": a, "b": b, "out": oracle.quire_dot(a, b)})
+    with open(os.path.join(vec_dir, "quire_dot.json"), "w") as f:
+        json.dump(dots, f)
+    # A small GEMM with oracle output (n=4): the Rust simulator, the Rust
+    # native path and the PJRT artifact all must reproduce it bit-exactly.
+    n = 4
+    av = [oracle.from_float(rng.uniform(-2, 2)) for _ in range(n * n)]
+    bv = [oracle.from_float(rng.uniform(-2, 2)) for _ in range(n * n)]
+    with open(os.path.join(vec_dir, "gemm4.json"), "w") as f:
+        json.dump(
+            {"n": n, "a": av, "b": bv, "quire": oracle.gemm_quire(av, bv, n),
+             "noquire": oracle.gemm_noquire(av, bv, n)},
+            f,
+        )
+    print(f"wrote vectors to {vec_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file marker")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    for name, fn, shapes in _specs(args.quick):
+        text = to_hlo_text(fn, shapes)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    export_vectors(out_dir)
+    # Marker file so `make artifacts` can express freshness.
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("# see per-kernel .hlo.txt artifacts in this directory\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,310 @@
+"""Vectorised Posit⟨32,2⟩ arithmetic in pure jnp integer ops.
+
+This is the numeric heart of the L1 kernels: decode/encode mirror the Rust
+library (`rust/src/posit/unpacked.rs`) bit for bit — pattern-space
+round-to-nearest-even, saturation at minpos/maxpos, single zero, NaR.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): the regime's
+variable-length decode is a hardware LZC; here it becomes an exact
+`frexp`-based exponent extraction (valid for all values < 2^53), which
+vectorises cleanly on TPU-style integer lanes.
+
+All helpers operate on uint32/uint64/int64 arrays; 64-bit mode is required
+(`jax_enable_x64`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+U32 = jnp.uint32
+U64 = jnp.uint64
+I32 = jnp.int32
+I64 = jnp.int64
+
+# Plain Python ints (weak-typed in jnp ops) so Pallas kernels do not
+# capture array constants.
+NAR = 0x8000_0000
+MAXPOS = 0x7FFF_FFFF
+MINPOS = 1
+MAX_SCALE = 120  # 4·(N−2)
+HID = 30
+TOP = 62
+
+
+def _shl64(v, s):
+    """uint64 << s with shift-amount clamping (XLA UB for s ≥ 64)."""
+    s = jnp.asarray(s)
+    return jnp.where(s >= 64, U64(0), v << jnp.clip(s, 0, 63).astype(U64))
+
+
+def _shr64(v, s):
+    s = jnp.asarray(s)
+    return jnp.where(s >= 64, U64(0), v >> jnp.clip(s, 0, 63).astype(U64))
+
+
+def _shl32(v, s):
+    s = jnp.asarray(s)
+    return jnp.where(s >= 32, U32(0), v << jnp.clip(s, 0, 31).astype(U32))
+
+
+def clz32(v):
+    """Leading zeros of uint32 (v = 0 → 32), exact via float64 frexp."""
+    f = v.astype(jnp.float64)
+    _, e = jnp.frexp(f)
+    return jnp.where(v == 0, I32(32), I32(32) - e.astype(I32))
+
+
+def clz64(v):
+    hi = (v >> U64(32)).astype(U32)
+    lo = v.astype(U32)
+    return jnp.where(hi != 0, clz32(hi), I32(32) + clz32(lo))
+
+
+def decode(bits):
+    """Decode posit32 patterns.
+
+    Returns (sign, scale, sig, is_zero, is_nar): sign ∈ {0,1} (uint32),
+    scale int32, sig uint64 with the hidden bit at bit 30 (garbage for
+    zero/NaR — callers must mask with the flags).
+    """
+    bits = bits.astype(U32)
+    is_zero = bits == 0
+    is_nar = bits == NAR
+    sign = bits >> U32(31)
+    absb = jnp.where(sign == 1, (~bits) + U32(1), bits)
+    y = absb << U32(1)  # magnitude bits left-aligned (33 − N = 1)
+    r0 = y >> U32(31)
+    inv = jnp.where(r0 == 1, ~y, y)
+    k = clz32(inv)
+    r = jnp.where(r0 == 1, k - 1, -k)
+    used = (k + 1).astype(U32)
+    rem = _shl32(y, used)
+    e = rem >> U32(30)
+    frac = rem << U32(2)
+    scale = 4 * r + e.astype(I32)
+    sig = (U64(1) << U64(HID)) | (frac >> U32(2)).astype(U64)
+    return sign, scale, sig, is_zero, is_nar
+
+
+def encode(sign, scale, sig, sticky):
+    """Encode (−1)^sign × sig × 2^(scale − msb(sig)) to posit32 bits.
+
+    `sig` is uint64 with its MSB anywhere (non-zero); `scale` is the
+    exponent of the MSB; `sticky` = true value has bits below sig's LSB.
+    Mirrors `encode_round` in Rust: RNE in pattern space, saturating.
+    """
+    sign = jnp.asarray(sign).astype(jnp.bool_)
+    sticky = jnp.asarray(sticky).astype(jnp.bool_)
+    # Normalise MSB to TOP, folding right-shifted-out bits into sticky.
+    lz = clz64(sig)
+    msb = 63 - lz
+    up = jnp.clip(TOP - msb, 0, 63)
+    down = jnp.clip(msb - TOP, 0, 63)
+    lost = sig & (_shl64(U64(1), down) - U64(1))
+    nsig = jnp.where(msb <= TOP, _shl64(sig, up), _shr64(sig, down))
+    sticky = sticky | (lost != 0)
+
+    r = scale >> 2  # arithmetic shift = floor
+    e = (scale & 3).astype(U64)
+    rlen = jnp.where(r >= 0, r + 2, 1 - r).astype(I32)
+    rpos = jnp.clip(r, 0, 31).astype(U64)
+    rpat = jnp.where(
+        r >= 0,
+        ((_shl64(U64(1), rpos + U64(1)) - U64(1)) << U64(1)),
+        U64(1),
+    )
+    x = (e << U64(TOP)) | (nsig & ((U64(1) << U64(TOP)) - U64(1)))
+    t = 31 - rlen  # bits left for exponent+fraction; ≥ −1
+    # t ≥ 0 arm.
+    kept_a = _shl64(rpat, t) | _shr64(x, 64 - t)
+    guard_a = (_shr64(x, 63 - t) & U64(1)) != 0
+    rest_a = (x & (_shl64(U64(1), 63 - t) - U64(1))) != 0
+    # t < 0 arm (only t = −1 is reachable: rlen ≤ 32).
+    s = (-t).astype(I32)
+    kept_b = _shr64(rpat, s)
+    guard_b = (_shr64(rpat, s - 1) & U64(1)) != 0
+    rest_b = ((rpat & (_shl64(U64(1), s - 1) - U64(1))) != 0) | (x != 0)
+    tn = t >= 0
+    kept = jnp.where(tn, kept_a, kept_b).astype(U32)
+    guard = jnp.where(tn, guard_a, guard_b)
+    rest = jnp.where(tn, rest_a, rest_b)
+    round_up = guard & (rest | sticky | ((kept & U32(1)) != 0))
+    out = kept + round_up.astype(U32)
+    out = jnp.where(out == 0, MINPOS, out)
+    absb = jnp.where(
+        scale > MAX_SCALE, MAXPOS, jnp.where(scale < -MAX_SCALE, MINPOS, out)
+    )
+    return jnp.where(sign, (~absb) + U32(1), absb)
+
+
+def _exp2i(k):
+    """Exact 2^k for integer k ∈ [−1022, 1023] via f64 bit assembly
+    (XLA's exp2 goes through exp(k·ln2) and is off by an ulp)."""
+    return jax.lax.bitcast_convert_type(
+        ((k + 1023).astype(I64) << I64(52)).astype(U64), jnp.float64
+    )
+
+
+def to_f64(bits):
+    """Posit32 → float64 (exact; NaR → NaN)."""
+    sign, scale, sig, is_zero, is_nar = decode(bits)
+    m = sig.astype(jnp.float64) * _exp2i(scale - HID)
+    v = jnp.where(sign == 1, -m, m)
+    v = jnp.where(is_zero, 0.0, v)
+    return jnp.where(is_nar, jnp.nan, v)
+
+
+def from_f64(x):
+    """float64 → posit32 (RNE pattern space; NaN/Inf → NaR, ±0 → 0)."""
+    x = jnp.asarray(x, dtype=jnp.float64)
+    b = jax.lax.bitcast_convert_type(x, U64)
+    sign = (b >> U64(63)) != 0
+    biased = ((b >> U64(52)) & U64(0x7FF)).astype(I32)
+    frac = b & ((U64(1) << U64(52)) - U64(1))
+    # Subnormals: value = frac × 2^−1074 → normalise via clz.
+    sub_msb = 63 - clz64(frac | U64(1))
+    scale = jnp.where(biased == 0, sub_msb - 1074, biased - 1023)
+    sig = jnp.where(biased == 0, frac, (U64(1) << U64(52)) | frac)
+    # encode() normalises, so pass scale of the MSB: for normals the MSB is
+    # bit 52 with exponent `scale`; for subnormals bit sub_msb likewise.
+    enc = encode(sign, scale, sig, jnp.zeros_like(sign))
+    # Classify via bit patterns, not float compares: XLA CPU applies DAZ in
+    # comparisons, which would flush subnormal inputs to zero instead of
+    # saturating them at minpos.
+    is_zero = (b << U64(1)) == 0  # ±0
+    is_nonfinite = biased == 0x7FF  # NaN / ±Inf
+    enc = jnp.where(is_zero, U32(0), enc)
+    return jnp.where(is_nonfinite, U32(NAR), enc)
+
+
+def exact_product(a_bits, b_bits):
+    """Exact posit product for the quire path.
+
+    Returns (neg bool, scale i32 (exponent of product bit 60), sig u64 exact
+    62-bit product, is_zero, is_nar).
+    """
+    sa, ka, fa, za, na = decode(a_bits)
+    sb, kb, fb, zb, nb = decode(b_bits)
+    sig = fa * fb  # ≤ 62 bits, exact in uint64
+    return (
+        (sa ^ sb) == 1,
+        ka + kb,
+        sig,
+        za | zb,
+        na | nb,
+    )
+
+
+# ───────────────────── quire (512-bit, 16 × 32-bit limbs) ─────────────────────
+# Limbs are held in *signed* int64 lanes: during accumulation each limb may
+# temporarily exceed 32 bits or go negative; one carry-propagation pass
+# canonicalises before rounding. LSB weight = 2^−240 (Posit Standard).
+
+QLIMBS = 16
+LSB_EXP = -240
+
+
+def product_limbs(neg, scale, sig, dead):
+    """Spread an exact product into 16 signed limb contributions.
+
+    `scale` is the exponent of product bit 60; quire bit index of sig bit 0
+    is pos = scale − 60 − LSB_EXP. Returns int64[..., 16].
+    """
+    pos = scale - 60 - LSB_EXP
+    j = jnp.arange(QLIMBS, dtype=I32)  # limb index
+    sh = pos[..., None] - 32 * j  # shift of sig into limb j ∈ (−512, 448)
+    lo_mask = U64(0xFFFF_FFFF)
+    # sh ≥ 0: low (32 − sh) bits of sig, shifted up by sh (sh < 32 matters).
+    up = (_shl64(sig[..., None] & (_shl64(U64(1), 32 - sh) - U64(1)), sh)) & lo_mask
+    down = _shr64(sig[..., None], -sh) & lo_mask
+    contrib = jnp.where(sh >= 0, up, down).astype(I64)
+    signed = jnp.where(neg[..., None], -contrib, contrib)
+    return jnp.where(dead[..., None], I64(0), signed)
+
+
+def quire_round(limbs, any_nar):
+    """Carry-normalise signed limbs and round to posit32 (QROUND.S)."""
+    # Carry propagation to canonical 32-bit limbs + final sign.
+    def body(carry, limb):
+        v = limb + carry
+        low = v & I64(0xFFFF_FFFF)
+        return (v - low) >> I64(32), low
+
+    carry, canon = jax.lax.scan(body, jnp.zeros(limbs.shape[:-1], I64), jnp.moveaxis(limbs, -1, 0))
+    canon = jnp.moveaxis(canon, 0, -1)
+    negative = carry < 0  # sign of the 512-bit two's-complement value
+    # Magnitude: negate if negative (two's complement over limbs).
+    def negbody(c, limb):
+        v = (limb ^ I64(0xFFFF_FFFF)) + c
+        low = v & I64(0xFFFF_FFFF)
+        return (v - low) >> I64(32), low
+
+    nc, neg_limbs = jax.lax.scan(
+        negbody, jnp.ones(limbs.shape[:-1], I64), jnp.moveaxis(canon, -1, 0)
+    )
+    del nc
+    neg_limbs = jnp.moveaxis(neg_limbs, 0, -1)
+    mag = jnp.where(negative[..., None], neg_limbs, canon).astype(U64)
+    # MSB over the 512-bit magnitude.
+    j = jnp.arange(QLIMBS, dtype=I32)
+    limb_msb = 31 - clz32(mag.astype(U32))  # per-limb msb (−1 if zero)
+    has = mag != 0
+    glob = jnp.where(has, 32 * j + limb_msb, I32(-1))
+    m = jnp.max(glob, axis=-1)  # −1 → all-zero magnitude
+    is_zero = m < 0
+    # Extract 63-bit window [m−62, m] plus sticky below.
+    lo = m - TOP  # may be negative
+    lo_c = jnp.clip(lo, 0, 511)
+    f = lo_c >> 5  # starting limb
+    rshift = (lo_c & 31).astype(I32)
+
+    def take(idx):
+        idx = jnp.clip(idx, 0, QLIMBS - 1)
+        return jnp.take_along_axis(mag, idx[..., None], axis=-1)[..., 0]
+
+    w0, w1, w2 = take(f), take(f + 1), take(f + 2)
+    window = (
+        _shr64(w0, rshift)
+        | _shl64(w1, 32 - rshift)
+        | _shl64(w2, 64 - rshift)
+    )
+    window = window & ((U64(1) << U64(63)) - U64(1))
+    # Sticky: any magnitude bit strictly below `lo` = the limbs fully below
+    # limb f, plus the low `rshift` bits of limb f.
+    fully = jnp.where(j < f[..., None], mag, U64(0))
+    partial = take(f) & (_shl64(U64(1), rshift) - U64(1))
+    sticky = (jnp.sum(fully, axis=-1) != 0) | (partial != 0)
+    sticky = sticky & (lo > 0)
+    # Left-pad when m < 62: window currently holds bits [lo_c, ...]; when
+    # lo < 0 the true window starts below bit 0 — shift up by −lo.
+    window = jnp.where(lo < 0, _shl64(window, -lo), window)
+    scale = m + LSB_EXP
+    # Guard the all-zero lanes (encode needs sig ≠ 0; masked out below).
+    rounded = encode(negative, scale, window | is_zero.astype(U64), sticky)
+    out = jnp.where(is_zero, U32(0), rounded)
+    return jnp.where(any_nar, NAR, out)
+
+
+def dot_quire(a_bits, b_bits):
+    """Exact quire dot product of two posit32 vectors → posit32 scalar.
+
+    QCLR; QMADD over k; QROUND — no intermediate rounding, the kernel-level
+    equivalent of the paper's Fig. 6 inner loop.
+    """
+    neg, scale, sig, dead, nar = exact_product(a_bits, b_bits)
+    limbs = product_limbs(neg, scale, sig, dead)
+    acc = jnp.sum(limbs, axis=-2)  # sum over k — exact in signed limbs
+    return quire_round(acc, jnp.any(nar, axis=-1))
+
+
+def posit_mul(a_bits, b_bits):
+    """Elementwise posit32 multiply (PMUL.S), for tests and conversions."""
+    neg, scale, sig, dead, nar = exact_product(a_bits, b_bits)
+    # `scale` is the exponent of product bit 60; encode() wants the MSB's
+    # exponent (the MSB sits at bit 60 or 61).
+    msb = 63 - clz64(sig | U64(1))
+    enc = encode(neg, scale + (msb - 60), sig | U64(1), jnp.zeros_like(neg))
+    enc = jnp.where(dead, U32(0), enc)
+    return jnp.where(nar, NAR, enc)

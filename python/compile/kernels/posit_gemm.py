@@ -1,0 +1,141 @@
+"""L1 Pallas kernels: posit32 GEMM with exact quire accumulation, and the
+posit max-pooling kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's PAU MAC
+streams QMADDs through a 512-bit register with one QROUND per output. The
+TPU-style kernel expresses the same schedule: BlockSpec tiles the output
+rows (the i dimension), the k reduction is computed as exact integer limb
+sums in VMEM-resident registers, and the single rounding happens once per
+output element. The MXU is deliberately *not* used: quire semantics need
+integer/fixed-point exactness, which is itself a finding the paper's
+premise predicts.
+
+Kernels run with `interpret=True`: the CPU PJRT client cannot execute
+Mosaic custom calls (see /opt/xla-example/README.md); interpret-mode
+lowering produces plain HLO that both pytest and the Rust runtime execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import posit_core as pc
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _gemm_quire_kernel(a_ref, b_ref, o_ref):
+    """One row-tile of posit GEMM: o[i, j] = qround(Σ_k a[i,k]·b[k,j]).
+
+    a_ref: (TM, K) posit bits as uint32; b_ref: (K, N); o_ref: (TM, N).
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    # Exact products for the whole (TM, K, N) tile.
+    neg, scale, sig, dead, nar = pc.exact_product(a[:, :, None], b[None, :, :])
+    limbs = pc.product_limbs(neg, scale, sig, dead)  # (TM, K, N, 16)
+    acc = jnp.sum(limbs, axis=1)  # exact k-reduction in signed limbs
+    o_ref[...] = pc.quire_round(acc, jnp.any(nar, axis=1))
+
+
+def gemm_quire_pallas(a_bits, b_bits, tile_m=8):
+    """Posit32 GEMM with quire-exact accumulation via a Pallas kernel.
+
+    The grid walks row tiles of A (the HBM→VMEM schedule); B stays resident
+    per tile, mirroring the B-column streaming of the paper's Fig. 6 loop.
+    """
+    m, k = a_bits.shape
+    k2, n = b_bits.shape
+    assert k == k2
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0, "row count must divide the tile"
+    return pl.pallas_call(
+        _gemm_quire_kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,
+    )(a_bits, b_bits)
+
+
+def _gemm_unfused_kernel(a_ref, b_ref, o_ref):
+    """Posit GEMM *without* the quire: pmul + padd per step (the paper's
+    "no quire" ablation), rounding after every operation."""
+    a = a_ref[...]
+    b = b_ref[...]
+    tm, k = a.shape
+    n = b.shape[1]
+
+    def body(t, acc):
+        p = pc.posit_mul(a[:, t][:, None], b[t, :][None, :])
+        return _posit_add(acc, p)
+
+    o_ref[...] = jax.lax.fori_loop(0, k, body, jnp.zeros((tm, n), jnp.uint32))
+
+
+def _posit_add(a_bits, b_bits):
+    """Vectorised posit32 add (used by the no-quire kernel): implemented as
+    a 2-term quire (exact sum of a·1 + b·1, single rounding = PADD)."""
+    one = jnp.uint32(0x4000_0000)
+    sa = jnp.stack([a_bits, b_bits], axis=-1)
+    ones = jnp.full_like(sa, one)
+    neg, scale, sig, dead, nar = pc.exact_product(sa, ones)
+    limbs = pc.product_limbs(neg, scale, sig, dead)
+    acc = jnp.sum(limbs, axis=-2)
+    return pc.quire_round(acc, jnp.any(nar, axis=-1))
+
+
+def gemm_noquire_pallas(a_bits, b_bits, tile_m=8):
+    """Posit32 GEMM with per-step rounding (no quire)."""
+    m, k = a_bits.shape
+    _, n = b_bits.shape
+    tile_m = min(tile_m, m)
+    assert m % tile_m == 0
+    return pl.pallas_call(
+        _gemm_unfused_kernel,
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,
+    )(a_bits, b_bits)
+
+
+def _maxpool_kernel(x_ref, o_ref, *, k, s, oh, ow):
+    """Posit max-pool over one channel tile: posit order == int32 order on
+    the sign-extended patterns (the paper's ALU-reuse trick)."""
+    x = x_ref[...].astype(jnp.int32)  # sign-extend: posit compare = int compare
+    c = x.shape[0]
+    acc = jnp.full((c, oh, ow), jnp.iinfo(jnp.int32).min, jnp.int32)
+    for r in range(k):
+        for t in range(k):
+            win = jax.lax.slice(
+                x, (0, r, t), (c, r + (oh - 1) * s + 1, t + (ow - 1) * s + 1), (1, s, s)
+            )
+            acc = jnp.maximum(acc, win)
+    o_ref[...] = acc.astype(jnp.uint32)
+
+
+def maxpool_posit_pallas(x_bits, k, s):
+    """Posit32 max-pooling (C, H, W) → (C, OH, OW) via a Pallas kernel."""
+    c, h, w = x_bits.shape
+    oh = (h - k) // s + 1
+    ow = (w - k) // s + 1
+    kern = functools.partial(_maxpool_kernel, k=k, s=s, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kern,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.uint32),
+        interpret=True,
+    )(x_bits)

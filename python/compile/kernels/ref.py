@@ -1,0 +1,61 @@
+"""Pure-jnp oracles (no Pallas) for the L1 kernels.
+
+`gemm_quire_ref` / `gemm_noquire_ref` / `maxpool_ref` compute the same
+results as the Pallas kernels through plain jnp calls — pytest pins
+kernel == ref, and the pure-*Python* big-int oracle in
+`python/tests/softposit_ref.py` independently pins the numerics of both.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import posit_core as pc
+
+jax.config.update("jax_enable_x64", True)
+
+
+def gemm_quire_ref(a_bits, b_bits):
+    """Posit GEMM, exact quire accumulation, one rounding per output."""
+
+    def one_row(arow):
+        neg, scale, sig, dead, nar = pc.exact_product(arow[:, None], b_bits)
+        limbs = pc.product_limbs(neg, scale, sig, dead)  # (k, n, 16)
+        acc = jnp.sum(limbs, axis=0)
+        return pc.quire_round(acc, jnp.any(nar, axis=0))
+
+    return jax.vmap(one_row)(a_bits)
+
+
+def gemm_noquire_ref(a_bits, b_bits):
+    """Posit GEMM with per-step rounding (pmul + padd chain)."""
+    from .posit_gemm import _posit_add
+
+    m, k = a_bits.shape
+    _, n = b_bits.shape
+
+    def body(t, acc):
+        p = pc.posit_mul(a_bits[:, t][:, None], b_bits[t, :][None, :])
+        return _posit_add(acc, p)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros((m, n), jnp.uint32))
+
+
+def maxpool_ref(x_bits, k, s):
+    """Posit max-pool via int32 ordering."""
+    c, h, w = x_bits.shape
+    oh = (h - k) // s + 1
+    ow = (w - k) // s + 1
+    x = x_bits.astype(jnp.int32)
+    acc = jnp.full((c, oh, ow), jnp.iinfo(jnp.int32).min, jnp.int32)
+    for r in range(k):
+        for t in range(k):
+            win = jax.lax.slice(
+                x, (0, r, t), (c, r + (oh - 1) * s + 1, t + (ow - 1) * s + 1), (1, s, s)
+            )
+            acc = jnp.maximum(acc, win)
+    return acc.astype(jnp.uint32)
+
+
+def gemm_f64_golden(a_bits, b_bits):
+    """f64 golden GEMM of the *decoded* posit inputs (benchmark baseline)."""
+    return pc.to_f64(a_bits) @ pc.to_f64(b_bits)

@@ -1,0 +1,62 @@
+"""L2: jitted compute graphs over posit bit tensors, calling the L1 Pallas
+kernels. These are the functions `aot.py` lowers to HLO text for the Rust
+runtime. Interfaces use int32 (bit patterns) — the PJRT boundary type the
+`xla` crate handles natively — and bitcast to uint32 internally.
+
+Python never runs on the request path: everything here exists only to be
+lowered once by `make artifacts`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import posit_gemm, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _u(x):
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def _i(x):
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def gemm_p32_quire(a_i32, b_i32):
+    """Posit32 GEMM with exact quire accumulation (Fig. 6 as a kernel)."""
+    return (_i(posit_gemm.gemm_quire_pallas(_u(a_i32), _u(b_i32))),)
+
+
+def gemm_p32_noquire(a_i32, b_i32):
+    """Posit32 GEMM with per-step rounding (the no-quire ablation)."""
+    return (_i(posit_gemm.gemm_noquire_pallas(_u(a_i32), _u(b_i32))),)
+
+
+def gemm_f32(a, b):
+    """IEEE f32 GEMM baseline (XLA-fused dot)."""
+    return (jnp.dot(a, b, preferred_element_type=jnp.float32),)
+
+
+def maxpool_p32(x_i32, k, s):
+    """Posit32 max-pooling (C,H,W) — posit compare = int compare."""
+    return (_i(posit_gemm.maxpool_posit_pallas(_u(x_i32), k, s)),)
+
+
+def p32_to_f64(x_i32):
+    """Decode posit bits to f64 (exact) — conversion artifact."""
+    from .kernels import posit_core as pc
+
+    return (pc.to_f64(_u(x_i32)),)
+
+
+def f64_to_p32(x):
+    """Encode f64 to posit bits — conversion artifact."""
+    from .kernels import posit_core as pc
+
+    return (_i(pc.from_f64(x)),)
+
+
+# Pure-jnp reference variants (lowered for A/B testing of pallas overhead).
+def gemm_p32_quire_ref(a_i32, b_i32):
+    return (_i(ref.gemm_quire_ref(_u(a_i32), _u(b_i32))),)

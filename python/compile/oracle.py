@@ -1,0 +1,192 @@
+"""Pure-Python big-int Posit⟨32,2⟩ oracle (SoftPosit stand-in).
+
+A fully independent implementation — no jnp, no shared helpers with
+`kernels/posit_core.py` — used by pytest to pin the jnp layer and exported
+as JSON test vectors (``aot.py --vectors``) that the Rust integration tests
+replay, closing the three-way cross-check:
+
+    pure-Python oracle  ⇔  jnp/Pallas kernels  ⇔  Rust library/simulator
+"""
+
+N = 32
+NAR = 1 << (N - 1)
+MASK = (1 << N) - 1
+MAX_SCALE = 4 * (N - 2)
+
+
+def decode(bits):
+    """→ ('zero',) | ('nar',) | ('num', sign, scale, sig) with sig carrying
+    the hidden bit at position 30 (sig ∈ [2^30, 2^31))."""
+    bits &= MASK
+    if bits == 0:
+        return ("zero",)
+    if bits == NAR:
+        return ("nar",)
+    sign = bits >> (N - 1)
+    absb = ((-bits) & MASK) if sign else bits
+    # Scan the regime run explicitly (independent of the clz trick).
+    body = absb << 1 & MASK  # drop sign bit, left-aligned in N bits
+    r0 = (body >> (N - 1)) & 1
+    k = 0
+    pos = N - 1
+    while pos >= 0 and ((body >> pos) & 1) == r0:
+        k += 1
+        pos -= 1
+    r = (k - 1) if r0 == 1 else -k
+    pos -= 1  # skip the terminating bit (may fall off the end)
+    e = 0
+    for i in range(2):
+        e <<= 1
+        if pos >= 0:
+            e |= (body >> pos) & 1
+            pos -= 1
+    frac = 0
+    m = pos + 1  # remaining fraction bits
+    if m > 0:
+        frac = body & ((1 << m) - 1)
+    scale = 4 * r + e
+    sig = (1 << 30) | (frac << (30 - m))
+    return ("num", sign, scale, sig)
+
+
+def encode(sign, scale, sig, sticky=False):
+    """Encode ±sig·2^(scale − msb(sig)) (sig any positive int) with RNE in
+    pattern space; saturates at minpos/maxpos."""
+    assert sig > 0
+    if scale > MAX_SCALE:
+        absb = MASK >> 1
+    elif scale < -MAX_SCALE:
+        absb = 1
+    else:
+        msb = sig.bit_length() - 1
+        frac = sig & ((1 << msb) - 1)
+        r = scale >> 2
+        e = scale & 3
+        if r >= 0:
+            rpat = ((1 << (r + 1)) - 1) << 1
+            rlen = r + 2
+        else:
+            rpat = 1
+            rlen = 1 - r
+        body = (rpat << (2 + msb)) | (e << msb) | frac
+        total = rlen + 2 + msb
+        keep = N - 1
+        if total > keep:
+            cut = total - keep
+            kept = body >> cut
+            guard = (body >> (cut - 1)) & 1
+            rest = (body & ((1 << (cut - 1)) - 1)) != 0 or sticky
+        else:
+            kept = body << (keep - total)
+            guard = 0
+            rest = sticky
+        if guard and (rest or (kept & 1)):
+            kept += 1
+        absb = kept if kept != 0 else 1
+        assert absb <= MASK >> 1
+    return ((-absb) & MASK) if sign else absb
+
+
+def from_float(x):
+    import math
+
+    if x == 0:
+        return 0
+    if math.isnan(x) or math.isinf(x):
+        return NAR
+    m, e = math.frexp(abs(x))  # x = m·2^e, m ∈ [0.5, 1)
+    sig = int(m * (1 << 53))  # ≤ 53 bits, exact for doubles
+    return encode(1 if x < 0 else 0, e - 1, sig)
+
+
+def to_float(bits):
+    d = decode(bits)
+    if d[0] == "zero":
+        return 0.0
+    if d[0] == "nar":
+        return float("nan")
+    _, sign, scale, sig = d
+    import math
+
+    v = math.ldexp(sig, scale - 30)
+    return -v if sign else v
+
+
+def mul(a, b):
+    da, db = decode(a), decode(b)
+    if da[0] == "nar" or db[0] == "nar":
+        return NAR
+    if da[0] == "zero" or db[0] == "zero":
+        return 0
+    _, sa, ka, fa = da
+    _, sb, kb, fb = db
+    p = fa * fb
+    msb = p.bit_length() - 1
+    return encode(sa ^ sb, ka + kb + (msb - 60), p)
+
+
+def add(a, b):
+    da, db = decode(a), decode(b)
+    if da[0] == "nar" or db[0] == "nar":
+        return NAR
+    if da[0] == "zero":
+        return b & MASK
+    if db[0] == "zero":
+        return a & MASK
+    _, sa, ka, fa = da
+    _, sb, kb, fb = db
+    # Exact integer arithmetic at a common scale.
+    base = min(ka, kb) - 30
+    va = (fa << (ka - 30 - base)) * (-1 if sa else 1)
+    vb = (fb << (kb - 30 - base)) * (-1 if sb else 1)
+    v = va + vb
+    if v == 0:
+        return 0
+    sign = 1 if v < 0 else 0
+    mag = abs(v)
+    return encode(sign, base + mag.bit_length() - 1, mag)
+
+
+def quire_dot(avec, bvec):
+    """Exact dot product through the quire: one rounding at the end.
+    Values are accumulated as exact integers scaled by 2^240."""
+    acc = 0
+    for a, b in zip(avec, bvec):
+        da, db = decode(a), decode(b)
+        if da[0] == "nar" or db[0] == "nar":
+            return NAR
+        if da[0] == "zero" or db[0] == "zero":
+            continue
+        _, sa, ka, fa = da
+        _, sb, kb, fb = db
+        e = ka + kb - 60 + 240
+        p = fa * fb
+        term = (p << e) if e >= 0 else (p >> -e)
+        if e < 0:
+            assert p % (1 << -e) == 0, "quire sized to hold all products"
+        acc += -term if sa ^ sb else term
+    if acc == 0:
+        return 0
+    sign = 1 if acc < 0 else 0
+    mag = abs(acc)
+    return encode(sign, mag.bit_length() - 1 - 240, mag)
+
+
+def gemm_quire(a, b, n):
+    """n×n posit GEMM with quire accumulation (row-major flat lists)."""
+    out = []
+    for i in range(n):
+        for j in range(n):
+            out.append(quire_dot(a[i * n : (i + 1) * n], [b[t * n + j] for t in range(n)]))
+    return out
+
+
+def gemm_noquire(a, b, n):
+    out = []
+    for i in range(n):
+        for j in range(n):
+            acc = 0
+            for t in range(n):
+                acc = add(acc, mul(a[i * n + t], b[t * n + j]))
+            out.append(acc)
+    return out

@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp refs vs the pure-Python oracle.
+
+This is the CORE correctness signal for L1: the Pallas GEMM must be
+bit-identical to the reference, and both must match the big-int oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import oracle
+from compile.kernels import posit_core as pc, posit_gemm as pg, ref
+
+
+def rand_posits(rng, shape, lo=-2.0, hi=2.0):
+    return np.asarray(pc.from_f64(rng.uniform(lo, hi, shape)), dtype=np.uint32)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+@pytest.mark.parametrize("rng_range", [0.1, 1.0, 100.0])
+def test_gemm_quire_pallas_equals_ref(n, rng_range):
+    rng = np.random.default_rng(n * 31 + int(rng_range))
+    a = rand_posits(rng, (n, n), -rng_range, rng_range)
+    b = rand_posits(rng, (n, n), -rng_range, rng_range)
+    got = np.asarray(pg.gemm_quire_pallas(a, b))
+    want = np.asarray(ref.gemm_quire_ref(a, b))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_gemm_quire_matches_oracle(n):
+    rng = np.random.default_rng(1234 + n)
+    a = rand_posits(rng, (n, n))
+    b = rand_posits(rng, (n, n))
+    got = np.asarray(pg.gemm_quire_pallas(a, b)).flatten().tolist()
+    want = oracle.gemm_quire(a.flatten().tolist(), b.flatten().tolist(), n)
+    assert got == want
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_gemm_noquire_matches_oracle(n):
+    rng = np.random.default_rng(99 + n)
+    a = rand_posits(rng, (n, n))
+    b = rand_posits(rng, (n, n))
+    got = np.asarray(pg.gemm_noquire_pallas(a, b)).flatten().tolist()
+    want = oracle.gemm_noquire(a.flatten().tolist(), b.flatten().tolist(), n)
+    assert got == want
+
+
+def test_identity_gemm_exact():
+    n = 8
+    rng = np.random.default_rng(5)
+    a = rand_posits(rng, (n, n), -50, 50)
+    eye = np.asarray(pc.from_f64(np.eye(n)), dtype=np.uint32)
+    got = np.asarray(pg.gemm_quire_pallas(a, eye))
+    assert np.array_equal(got, a)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=6).map(lambda k: 4 * k),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_gemm_shapes_sweep(n, seed):
+    """Hypothesis sweep over shapes: pallas == ref for every size."""
+    rng = np.random.default_rng(seed)
+    a = rand_posits(rng, (n, n))
+    b = rand_posits(rng, (n, n))
+    tile = 4 if n % 8 else 8
+    got = np.asarray(pg.gemm_quire_pallas(a, b, tile_m=tile))
+    want = np.asarray(ref.gemm_quire_ref(a, b))
+    assert np.array_equal(got, want)
+
+
+def test_quire_beats_noquire_accuracy():
+    """The paper's Table 6 ordering at kernel level."""
+    n = 16
+    rng = np.random.default_rng(7)
+    af = rng.uniform(-1, 1, (n, n))
+    bf = rng.uniform(-1, 1, (n, n))
+    a = np.asarray(pc.from_f64(af), dtype=np.uint32)
+    b = np.asarray(pc.from_f64(bf), dtype=np.uint32)
+    golden = np.asarray(pc.to_f64(a)) @ np.asarray(pc.to_f64(b))
+    q = np.asarray(pc.to_f64(pg.gemm_quire_pallas(a, b)))
+    nq = np.asarray(pc.to_f64(pg.gemm_noquire_pallas(a, b)))
+    mse_q = float(np.mean((q - golden) ** 2))
+    mse_nq = float(np.mean((nq - golden) ** 2))
+    assert mse_q < mse_nq

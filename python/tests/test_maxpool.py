@@ -1,0 +1,51 @@
+"""Posit max-pooling kernel: Pallas vs ref vs numpy-over-f64 reference."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import posit_core as pc, posit_gemm as pg, ref
+
+
+def pool_f64(x, k, s):
+    c, h, w = x.shape
+    oh, ow = (h - k) // s + 1, (w - k) // s + 1
+    out = np.empty((c, oh, ow))
+    for ci in range(c):
+        for i in range(oh):
+            for j in range(ow):
+                out[ci, i, j] = x[ci, i * s : i * s + k, j * s : j * s + k].max()
+    return out
+
+
+@pytest.mark.parametrize("chw,k,s", [((2, 8, 8), 2, 2), ((3, 9, 9), 3, 2), ((6, 28, 28), 2, 2)])
+def test_pallas_equals_ref(chw, k, s):
+    rng = np.random.default_rng(sum(chw))
+    x = np.asarray(pc.from_f64(rng.uniform(-8, 8, chw)), dtype=np.uint32)
+    got = np.asarray(pg.maxpool_posit_pallas(x, k, s))
+    want = np.asarray(ref.maxpool_ref(x, k, s))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("k,s", [(2, 2), (3, 2)])
+def test_matches_f64_pool_of_decoded(k, s):
+    # max over posit-converted values == posit-convert of max (order
+    # preservation: the paper's ALU-reuse property).
+    rng = np.random.default_rng(17)
+    xf = rng.uniform(-5, 5, (2, 10, 10))
+    x = np.asarray(pc.from_f64(xf), dtype=np.uint32)
+    xq = np.asarray(pc.to_f64(x))  # values after posit rounding
+    got = np.asarray(pc.to_f64(pg.maxpool_posit_pallas(x, k, s)))
+    want = pool_f64(xq, k, s)
+    assert np.array_equal(got, want)
+
+
+def test_negative_inputs_and_nar():
+    # NaR is the *smallest* in posit order → never wins a max unless the
+    # whole window is NaR.
+    x = np.full((1, 2, 2), 0x8000_0000, dtype=np.uint32)
+    x[0, 0, 0] = int(pc.from_f64(np.array(-3.0)))
+    got = np.asarray(pg.maxpool_posit_pallas(x, 2, 2))
+    assert got[0, 0, 0] == int(pc.from_f64(np.array(-3.0)))
+    x_all_nar = np.full((1, 2, 2), 0x8000_0000, dtype=np.uint32)
+    got = np.asarray(pg.maxpool_posit_pallas(x_all_nar, 2, 2))
+    assert got[0, 0, 0] == 0x8000_0000

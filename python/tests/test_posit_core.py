@@ -1,0 +1,114 @@
+"""jnp posit_core vs the independent pure-Python oracle."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import oracle
+from compile.kernels import posit_core as pc
+from compile.kernels.posit_gemm import _posit_add
+
+U32 = st.integers(min_value=0, max_value=0xFFFF_FFFF)
+SPECIALS = [0, 0x8000_0000, 1, 0x7FFF_FFFF, 0x4000_0000, 0xC000_0000, 2, 0xFFFF_FFFF]
+
+
+def batch(vals):
+    return np.asarray(vals, dtype=np.uint32)
+
+
+# ── decode/encode ──────────────────────────────────────────────────────────
+
+
+@settings(max_examples=300, deadline=None)
+@given(U32)
+def test_to_f64_matches_oracle(bits):
+    got = float(pc.to_f64(batch([bits]))[0])
+    want = oracle.to_float(bits)
+    if math.isnan(want):
+        assert math.isnan(got)
+    else:
+        assert got == want, f"bits={bits:#010x}"
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.floats(allow_nan=True, allow_infinity=True, width=64))
+def test_from_f64_matches_oracle(x):
+    got = int(pc.from_f64(np.array([x]))[0])
+    want = oracle.from_float(x)
+    assert got == want, f"x={x!r}"
+
+
+def test_specials_roundtrip():
+    bits = batch(SPECIALS)
+    back = pc.from_f64(pc.to_f64(bits))
+    want = [b if b != 0xFFFF_FFFF else 0xFFFF_FFFF for b in SPECIALS]
+    assert list(np.asarray(back)) == want
+
+
+def test_paper_example():
+    # §2.1 example value, widened from posit8: −0.01171875 must decode
+    # exactly through the posit32 pattern from the oracle.
+    p = oracle.from_float(-0.011718750)
+    assert oracle.to_float(p) == -0.011718750
+    assert float(pc.to_f64(batch([p]))[0]) == -0.011718750
+
+
+# ── arithmetic ─────────────────────────────────────────────────────────────
+
+
+@settings(max_examples=300, deadline=None)
+@given(U32, U32)
+def test_mul_matches_oracle(a, b):
+    got = int(pc.posit_mul(batch([a]), batch([b]))[0])
+    assert got == oracle.mul(a, b), f"a={a:#010x} b={b:#010x}"
+
+
+@settings(max_examples=300, deadline=None)
+@given(U32, U32)
+def test_add_matches_oracle(a, b):
+    got = int(_posit_add(batch([a]), batch([b]))[0])
+    assert got == oracle.add(a, b), f"a={a:#010x} b={b:#010x}"
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(U32, min_size=1, max_size=40))
+def test_quire_dot_matches_oracle(avals):
+    bvals = list(reversed(avals))
+    got = int(pc.dot_quire(batch(avals), batch(bvals)))
+    want = oracle.quire_dot(avals, bvals)
+    assert got == want
+
+
+def test_quire_dot_cancellation_exact():
+    # (1e8·1e8 + 1·1 − 1e8·1e8) = 1 exactly through the quire.
+    big = oracle.from_float(1.0e8)
+    one = oracle.from_float(1.0)
+    nbig = oracle.from_float(-1.0e8)
+    a = batch([big, one, big])
+    b = batch([big, one, nbig])
+    assert int(pc.dot_quire(a, b)) == one
+
+
+def test_mul_specials():
+    nar, one = 0x8000_0000, 0x4000_0000
+    assert int(pc.posit_mul(batch([nar]), batch([one]))[0]) == nar
+    assert int(pc.posit_mul(batch([0]), batch([one]))[0]) == 0
+    assert int(pc.posit_mul(batch([nar]), batch([0]))[0]) == nar
+
+
+def test_decode_encode_roundtrip_sampled():
+    rng = np.random.default_rng(11)
+    bits = rng.integers(0, 1 << 32, size=20_000, dtype=np.uint32)
+    bits = bits[(bits != 0) & (bits != 0x8000_0000)]
+    sign, scale, sig, _, _ = pc.decode(bits)
+    back = pc.encode(sign == 1, scale, sig, np.zeros(len(bits), bool))
+    assert np.array_equal(np.asarray(back), bits)
+
+
+@pytest.mark.parametrize("v", [1, 2, 100, -7, 123456])
+def test_integer_values_exact(v):
+    p = oracle.from_float(float(v))
+    assert oracle.to_float(p) == float(v)
+    assert float(pc.to_f64(batch([p]))[0]) == float(v)

@@ -1,0 +1,324 @@
+//! GEMM workloads — the paper's §7 benchmark.
+//!
+//! Two execution paths share the same numeric semantics:
+//! - **Simulated** ([`gemm_program`] + [`run_gemm_sim`]): the paper's
+//!   Fig. 5/Fig. 6 inline-assembly kernels, generated for each variant,
+//!   assembled and run on the [`crate::core`] cycle model → Table 7.
+//! - **Native** ([`super::mse`]): the same arithmetic executed directly via
+//!   [`crate::posit`] / host IEEE for the accuracy study → Table 6 (the
+//!   simulator is bit-identical; an integration test pins that).
+
+use crate::core::{Core, CoreConfig, Stats};
+use crate::isa::asm::{assemble, Program};
+use crate::posit::Posit32;
+use crate::testing::Rng;
+
+/// The six arithmetic variants of Table 6/7 (plus RacEr handled in
+/// [`super::racer`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmVariant {
+    /// 32-bit float with FMADD (Fig. 5).
+    F32Fused,
+    /// 32-bit float, mul + add.
+    F32Unfused,
+    /// 64-bit float with FMADD.D.
+    F64Fused,
+    /// 64-bit float, mul + add.
+    F64Unfused,
+    /// Posit32 with quire (Fig. 6).
+    P32Quire,
+    /// Posit32, pmul + padd.
+    P32NoQuire,
+}
+
+impl GemmVariant {
+    pub const ALL: [GemmVariant; 6] = [
+        GemmVariant::F32Fused,
+        GemmVariant::F64Fused,
+        GemmVariant::P32Quire,
+        GemmVariant::F32Unfused,
+        GemmVariant::F64Unfused,
+        GemmVariant::P32NoQuire,
+    ];
+
+    /// Paper row label (Table 7).
+    pub fn label(&self) -> &'static str {
+        match self {
+            GemmVariant::F32Fused => "32-bit float",
+            GemmVariant::F64Fused => "64-bit float",
+            GemmVariant::P32Quire => "Posit32",
+            GemmVariant::F32Unfused => "32-bit float no FMADD",
+            GemmVariant::F64Unfused => "64-bit float no FMADD",
+            GemmVariant::P32NoQuire => "Posit32 no quire",
+        }
+    }
+
+    /// Element size in data memory.
+    pub fn elem_bytes(&self) -> u64 {
+        match self {
+            GemmVariant::F64Fused | GemmVariant::F64Unfused => 8,
+            _ => 4,
+        }
+    }
+}
+
+/// Generate the paper's GEMM kernel (Figs. 5/6 inner loops, with the
+/// pointer strength-reduction `-O2` produces) for one variant and size.
+///
+/// Calling convention: `a0 = &A`, `a1 = &B`, `a2 = &C`, all row-major n×n.
+pub fn gemm_program(variant: GemmVariant, n: usize) -> Program {
+    let eb = variant.elem_bytes() as usize;
+    let row = n * eb; // row stride in bytes
+    // Per-variant fragments.
+    let (init_acc, load_a, load_b, mac, store) = match variant {
+        GemmVariant::F32Fused => (
+            "fmv.w.x ft0, zero",
+            "flw ft1, 0(t2)",
+            "flw ft2, 0(t3)",
+            "fmadd.s ft0, ft1, ft2, ft0".to_string(),
+            "fsw ft0, 0(t4)",
+        ),
+        GemmVariant::F32Unfused => (
+            "fmv.w.x ft0, zero",
+            "flw ft1, 0(t2)",
+            "flw ft2, 0(t3)",
+            "fmul.s ft3, ft1, ft2\n    fadd.s ft0, ft0, ft3".to_string(),
+            "fsw ft0, 0(t4)",
+        ),
+        GemmVariant::F64Fused => (
+            "fmv.d.x ft0, zero",
+            "fld ft1, 0(t2)",
+            "fld ft2, 0(t3)",
+            "fmadd.d ft0, ft1, ft2, ft0".to_string(),
+            "fsd ft0, 0(t4)",
+        ),
+        GemmVariant::F64Unfused => (
+            "fmv.d.x ft0, zero",
+            "fld ft1, 0(t2)",
+            "fld ft2, 0(t3)",
+            "fmul.d ft3, ft1, ft2\n    fadd.d ft0, ft0, ft3".to_string(),
+            "fsd ft0, 0(t4)",
+        ),
+        GemmVariant::P32Quire => (
+            "qclr.s",
+            "plw p0, 0(t2)",
+            "plw p1, 0(t3)",
+            "qmadd.s p0, p1".to_string(),
+            "qround.s p2\n    psw p2, 0(t4)",
+        ),
+        GemmVariant::P32NoQuire => (
+            "pmv.w.x p2, zero",
+            "plw p0, 0(t2)",
+            "plw p1, 0(t3)",
+            "pmul.s p3, p0, p1\n    padd.s p2, p2, p3".to_string(),
+            "psw p2, 0(t4)",
+        ),
+    };
+    let src = format!(
+        r#"
+    # GEMM {variant:?} n={n} (paper Figs. 5/6 kernel shape)
+    li   t5, {row}        # B row stride / A row stride (bytes)
+    li   s0, {n}          # i
+    mv   t0, a0           # A row pointer
+    mv   t4, a2           # C pointer
+loop_i:
+    li   s1, {n}          # j
+    mv   t6, a1           # B column base (B + 4j)
+loop_j:
+    {init_acc}
+    mv   t2, t0           # &A[i][0]
+    mv   t3, t6           # &B[0][j]
+    li   s2, {n}          # k
+loop_k:
+    {load_a}
+    {load_b}
+    {mac}
+    addi t2, t2, {eb}
+    add  t3, t3, t5
+    addi s2, s2, -1
+    bnez s2, loop_k
+    {store}
+    addi t4, t4, {eb}
+    addi t6, t6, {eb}
+    addi s1, s1, -1
+    bnez s1, loop_j
+    add  t0, t0, t5
+    addi s0, s0, -1
+    bnez s0, loop_i
+    ecall
+"#
+    );
+    assemble(&src).expect("generated GEMM kernel must assemble")
+}
+
+/// Memory layout used by the GEMM runs.
+pub struct GemmLayout {
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+pub fn layout(variant: GemmVariant, n: usize) -> GemmLayout {
+    let eb = variant.elem_bytes();
+    let sz = (n * n) as u64 * eb;
+    let align = |x: u64| (x + 0xFFF) & !0xFFF;
+    let a = 0x1_0000;
+    let b = align(a + sz);
+    let c = align(b + sz);
+    GemmLayout { a, b, c }
+}
+
+/// Fill simulator memory with the input matrices converted to the variant's
+/// format, the same way the paper feeds SoftPosit-converted doubles.
+pub fn load_inputs(core: &mut Core, variant: GemmVariant, n: usize, af: &[f64], bf: &[f64]) {
+    let lo = layout(variant, n);
+    match variant {
+        GemmVariant::F64Fused | GemmVariant::F64Unfused => {
+            core.mem.write_f64_slice(lo.a, af);
+            core.mem.write_f64_slice(lo.b, bf);
+        }
+        GemmVariant::F32Fused | GemmVariant::F32Unfused => {
+            let a32: Vec<f32> = af.iter().map(|v| *v as f32).collect();
+            let b32: Vec<f32> = bf.iter().map(|v| *v as f32).collect();
+            core.mem.write_f32_slice(lo.a, &a32);
+            core.mem.write_f32_slice(lo.b, &b32);
+        }
+        GemmVariant::P32Quire | GemmVariant::P32NoQuire => {
+            let ap: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            let bp: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            core.mem.write_u32_slice(lo.a, &ap);
+            core.mem.write_u32_slice(lo.b, &bp);
+        }
+    }
+}
+
+/// Read back C as f64 (exact for all formats).
+pub fn read_result(core: &Core, variant: GemmVariant, n: usize) -> Vec<f64> {
+    let lo = layout(variant, n);
+    match variant {
+        GemmVariant::F64Fused | GemmVariant::F64Unfused => core.mem.read_f64_slice(lo.c, n * n),
+        GemmVariant::F32Fused | GemmVariant::F32Unfused => {
+            core.mem.read_f32_slice(lo.c, n * n).iter().map(|v| *v as f64).collect()
+        }
+        GemmVariant::P32Quire | GemmVariant::P32NoQuire => core
+            .mem
+            .read_u32_slice(lo.c, n * n)
+            .iter()
+            .map(|v| Posit32(*v).to_f64())
+            .collect(),
+    }
+}
+
+/// Outcome of a simulated GEMM.
+pub struct GemmRun {
+    pub stats: Stats,
+    pub result: Vec<f64>,
+    pub seconds: f64,
+}
+
+/// Assemble, load, warm (one full run, discarded — the paper avoids cold
+/// misses), then measure one timed run on the core model.
+pub fn run_gemm_sim(
+    cfg: CoreConfig,
+    variant: GemmVariant,
+    n: usize,
+    af: &[f64],
+    bf: &[f64],
+    warm: bool,
+) -> GemmRun {
+    let prog = gemm_program(variant, n);
+    let mut core = Core::new(cfg);
+    core.load_program(&prog);
+    load_inputs(&mut core, variant, n, af, bf);
+    let lo = layout(variant, n);
+    let set_args = |core: &mut Core| {
+        core.x[10] = lo.a;
+        core.x[11] = lo.b;
+        core.x[12] = lo.c;
+    };
+    if warm {
+        set_args(&mut core);
+        core.run();
+        core.reset_timing();
+    }
+    set_args(&mut core);
+    let stats = core.run();
+    let seconds = stats.seconds(&core.cfg);
+    GemmRun { stats, result: read_result(&core, variant, n), seconds }
+}
+
+/// Deterministic uniform matrix in `[-10^i, 10^i]` (paper §7.1's input
+/// generator), as f64 "master" values that each variant converts from.
+pub fn gen_matrix(rng: &mut Rng, n: usize, exp10: i32) -> Vec<f64> {
+    let hi = 10f64.powi(exp10);
+    (0..n * n).map(|_| rng.range_f64(-hi, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::mse::{gemm_native, NativeKind};
+
+    #[test]
+    fn all_variants_assemble() {
+        for v in GemmVariant::ALL {
+            let p = gemm_program(v, 8);
+            assert!(p.words.len() > 15);
+        }
+    }
+
+    #[test]
+    fn simulated_matches_native_bitwise() {
+        // The simulated kernel and the native library path must agree
+        // *bit for bit* for every variant (same arithmetic, two engines).
+        let n = 6;
+        let mut rng = Rng::new(2024);
+        let a = gen_matrix(&mut rng, n, 0);
+        let b = gen_matrix(&mut rng, n, 0);
+        let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+        for v in GemmVariant::ALL {
+            let sim = run_gemm_sim(cfg, v, n, &a, &b, false);
+            let native = gemm_native(kind_of(v), n, &a, &b);
+            assert_eq!(sim.result, native, "variant {v:?}");
+        }
+    }
+
+    fn kind_of(v: GemmVariant) -> NativeKind {
+        match v {
+            GemmVariant::F32Fused => NativeKind::F32Fused,
+            GemmVariant::F32Unfused => NativeKind::F32Unfused,
+            GemmVariant::F64Fused => NativeKind::F64Fused,
+            GemmVariant::F64Unfused => NativeKind::F64Unfused,
+            GemmVariant::P32Quire => NativeKind::P32Quire,
+            GemmVariant::P32NoQuire => NativeKind::P32NoQuire,
+        }
+    }
+
+    #[test]
+    fn quire_gemm_simulated_identity() {
+        // C = A·I must reproduce A exactly (quire path, exact rounding).
+        let n = 4;
+        let a: Vec<f64> = (0..n * n).map(|i| (i as f64 - 7.0) * 0.375).collect();
+        let mut b = vec![0.0; n * n];
+        for i in 0..n {
+            b[i * n + i] = 1.0;
+        }
+        let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+        let run = run_gemm_sim(cfg, GemmVariant::P32Quire, n, &a, &b, false);
+        for (got, want) in run.result.iter().zip(&a) {
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn timing_scales_roughly_cubically() {
+        let mut rng = Rng::new(7);
+        let a = gen_matrix(&mut rng, 16, 0);
+        let b = gen_matrix(&mut rng, 16, 0);
+        let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+        let t8 = run_gemm_sim(cfg, GemmVariant::P32Quire, 8, &a[..64], &b[..64], true).stats.cycles;
+        let t16 = run_gemm_sim(cfg, GemmVariant::P32Quire, 16, &a, &b, true).stats.cycles;
+        let ratio = t16 as f64 / t8 as f64;
+        assert!((4.0..16.0).contains(&ratio), "ratio {ratio}");
+    }
+}

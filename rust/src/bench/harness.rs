@@ -1,0 +1,147 @@
+//! Minimal wall-clock benchmark harness (criterion is not in the offline
+//! crate set). Deterministic workloads + median-of-N timing with warm-up,
+//! which is also how the paper measures: "avoiding cold misses and
+//! averaging over 10 executions" (§7.2).
+
+use std::time::Instant;
+
+/// Result of a timed run.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+impl Report {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+impl std::fmt::Display for Report {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:.3} ms  (min {:.3}, max {:.3}, σ {:.3}, n={})",
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.std_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn time<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Report {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Report {
+        iters: iters.max(1),
+        mean_s: mean,
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().copied().fold(0.0, f64::max),
+        std_s: var.sqrt(),
+    }
+}
+
+/// Named benchmark entry for `cargo bench` binaries: prints a criterion-ish
+/// line `name ... mean X ms`.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F) -> Report {
+    let r = time(warmup, iters, f);
+    println!("{name:<52} {r}");
+    r
+}
+
+/// Pretty-print a table: header row + aligned columns.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Write rows as CSV (for EXPERIMENTS.md provenance and plotting).
+pub fn write_csv(
+    path: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Engineering formatting for seconds, paper-style ("0.978 ms", "13.9 s").
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-4 {
+        // The paper prints sub-millisecond GEMM times in ms ("0.978 ms").
+        format!("{:.3} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} µs", seconds * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_sane_stats() {
+        let mut x = 0u64;
+        let r = time(1, 5, || {
+            for i in 0..10_000u64 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+        assert!(std::hint::black_box(x) != 1);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert_eq!(fmt_time(13.9), "13.900 s");
+        assert_eq!(fmt_time(0.000978), "0.978 ms");
+        assert_eq!(fmt_time(0.0000005), "0.500 µs");
+    }
+}

@@ -1,0 +1,277 @@
+//! Max-pooling workloads (paper §7.2, Table 8): LeNet-5, AlexNet and
+//! ResNet-50 pooling layers in f32 / f64 / posit32.
+//!
+//! The posit kernel uses `pmax.s`, which PERCIVAL executes on the integer
+//! ALU with no latency (§2.1/§4.2) — the paper's point is that posits get
+//! max-pooling "for free" while floats pay the FPU compare latency.
+
+use crate::core::{Core, CoreConfig, Stats};
+use crate::isa::asm::{assemble, Program};
+use crate::posit::Posit32;
+use crate::testing::Rng;
+
+/// Pooling layer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    pub name: &'static str,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub s: usize,
+}
+
+impl PoolConfig {
+    /// The paper's three layers (Table 8).
+    pub const LENET5: PoolConfig =
+        PoolConfig { name: "LeNet-5 (28x28x6)", c: 6, h: 28, w: 28, k: 2, s: 2 };
+    pub const ALEXNET: PoolConfig =
+        PoolConfig { name: "AlexNet (54x54x96)", c: 96, h: 54, w: 54, k: 3, s: 2 };
+    pub const RESNET50: PoolConfig =
+        PoolConfig { name: "ResNet-50 (112x112x64)", c: 64, h: 112, w: 112, k: 3, s: 2 };
+    pub const ALL: [PoolConfig; 3] = [Self::LENET5, Self::ALEXNET, Self::RESNET50];
+
+    pub fn out_h(&self) -> usize {
+        (self.h - self.k) / self.s + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w - self.k) / self.s + 1
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.c * self.out_h() * self.out_w()
+    }
+}
+
+/// Number format for the pooling kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolFormat {
+    F32,
+    F64,
+    P32,
+}
+
+impl PoolFormat {
+    pub const ALL: [PoolFormat; 3] = [PoolFormat::F32, PoolFormat::F64, PoolFormat::P32];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PoolFormat::F32 => "32-bit float",
+            PoolFormat::F64 => "64-bit float",
+            PoolFormat::P32 => "Posit32",
+        }
+    }
+
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            PoolFormat::F64 => 8,
+            _ => 4,
+        }
+    }
+}
+
+/// Generate the pooling kernel: fully unrolled k×k window, strength-reduced
+/// pointers (the natural `-O2` shape of the paper's C benchmark).
+/// Calling convention: `a0 = &input (CHW)`, `a1 = &output`.
+pub fn maxpool_program(fmt: PoolFormat, cfg: &PoolConfig) -> Program {
+    let eb = fmt.elem_bytes();
+    let (load0, loadi, maxi, store) = match fmt {
+        PoolFormat::F32 => ("flw ft0, 0(s4)", "flw", "fmax.s ft0, ft0, ft1", "fsw ft0, 0(t4)"),
+        PoolFormat::F64 => ("fld ft0, 0(s4)", "fld", "fmax.d ft0, ft0, ft1", "fsd ft0, 0(t4)"),
+        PoolFormat::P32 => ("plw p0, 0(s4)", "plw", "pmax.s p0, p0, p1", "psw p0, 0(t4)"),
+    };
+    let tmp = match fmt {
+        PoolFormat::P32 => "p1",
+        _ => "ft1",
+    };
+    // Unrolled window body: first element initialises the accumulator.
+    let mut window = String::new();
+    window.push_str(&format!("    {load0}\n"));
+    for r in 0..cfg.k {
+        for c in 0..cfg.k {
+            if r == 0 && c == 0 {
+                continue;
+            }
+            let off = (r * cfg.w + c) * eb;
+            window.push_str(&format!("    {loadi} {tmp}, {off}(s4)\n    {maxi}\n"));
+        }
+    }
+    let src = format!(
+        r#"
+    # max-pool {fmt:?} {name} k={k} s={s}
+    li   t5, {row_step}     # s·w·eb: input row-group step per output row
+    li   t6, {chan_step}    # h·w·eb: channel step
+    li   s0, {c}            # channel counter
+    mv   s5, a0             # channel base
+    mv   t4, a1             # output pointer
+loop_c:
+    li   s1, {oh}
+    mv   s3, s5
+loop_oh:
+    li   s2, {ow}
+    mv   s4, s3
+loop_ow:
+{window}    {store}
+    addi t4, t4, {eb}
+    addi s4, s4, {win_step}
+    addi s2, s2, -1
+    bnez s2, loop_ow
+    add  s3, s3, t5
+    addi s1, s1, -1
+    bnez s1, loop_oh
+    add  s5, s5, t6
+    addi s0, s0, -1
+    bnez s0, loop_c
+    ecall
+"#,
+        name = cfg.name,
+        k = cfg.k,
+        s = cfg.s,
+        row_step = cfg.s * cfg.w * eb,
+        chan_step = cfg.h * cfg.w * eb,
+        c = cfg.c,
+        oh = cfg.out_h(),
+        ow = cfg.out_w(),
+        win_step = cfg.s * eb,
+    );
+    assemble(&src).expect("generated max-pool kernel must assemble")
+}
+
+/// Memory layout: input at 0x1_0000, output page-aligned after it.
+pub fn layout(fmt: PoolFormat, cfg: &PoolConfig) -> (u64, u64) {
+    let inp = 0x1_0000u64;
+    let out = (inp + (cfg.in_len() * fmt.elem_bytes()) as u64 + 0xFFF) & !0xFFF;
+    (inp, out)
+}
+
+/// Outcome of one simulated pooling layer.
+pub struct PoolRun {
+    pub stats: Stats,
+    pub seconds: f64,
+    pub output: Vec<f64>,
+}
+
+/// Simulate the pooling layer over a deterministic random input.
+pub fn run_pool_sim(core_cfg: CoreConfig, fmt: PoolFormat, cfg: &PoolConfig, warm: bool) -> PoolRun {
+    let mut rng = Rng::new(0xDEE7 ^ cfg.c as u64);
+    let input: Vec<f64> = (0..cfg.in_len()).map(|_| rng.range_f64(-8.0, 8.0)).collect();
+    let prog = maxpool_program(fmt, cfg);
+    let mut core = Core::new(core_cfg);
+    core.load_program(&prog);
+    let (inp, out) = layout(fmt, cfg);
+    match fmt {
+        PoolFormat::F32 => {
+            let v: Vec<f32> = input.iter().map(|x| *x as f32).collect();
+            core.mem.write_f32_slice(inp, &v);
+        }
+        PoolFormat::F64 => core.mem.write_f64_slice(inp, &input),
+        PoolFormat::P32 => {
+            let v: Vec<u32> = input.iter().map(|x| Posit32::from_f64(*x).bits()).collect();
+            core.mem.write_u32_slice(inp, &v);
+        }
+    }
+    let set_args = |core: &mut Core| {
+        core.x[10] = inp;
+        core.x[11] = out;
+    };
+    if warm {
+        set_args(&mut core);
+        core.run();
+        core.reset_timing();
+    }
+    set_args(&mut core);
+    let stats = core.run();
+    let seconds = stats.seconds(&core.cfg);
+    let output = match fmt {
+        PoolFormat::F32 => {
+            core.mem.read_f32_slice(out, cfg.out_len()).iter().map(|v| *v as f64).collect()
+        }
+        PoolFormat::F64 => core.mem.read_f64_slice(out, cfg.out_len()),
+        PoolFormat::P32 => core
+            .mem
+            .read_u32_slice(out, cfg.out_len())
+            .iter()
+            .map(|v| Posit32(*v).to_f64())
+            .collect(),
+    };
+    PoolRun { stats, seconds, output }
+}
+
+/// Reference pooling on f64 (for correctness checks).
+pub fn pool_reference(cfg: &PoolConfig, input: &[f64]) -> Vec<f64> {
+    let (oh, ow) = (cfg.out_h(), cfg.out_w());
+    let mut out = vec![0.0; cfg.c * oh * ow];
+    for c in 0..cfg.c {
+        for i in 0..oh {
+            for j in 0..ow {
+                let mut m = f64::NEG_INFINITY;
+                for r in 0..cfg.k {
+                    for s in 0..cfg.k {
+                        let v = input[(c * cfg.h + i * cfg.s + r) * cfg.w + j * cfg.s + s];
+                        m = m.max(v);
+                    }
+                }
+                out[c * oh * ow + i * ow + j] = m;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kernels_assemble() {
+        for fmt in PoolFormat::ALL {
+            for cfg in PoolConfig::ALL {
+                let p = maxpool_program(fmt, &cfg);
+                assert!(p.words.len() > 10, "{fmt:?} {}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn output_dims_match_paper() {
+        assert_eq!((PoolConfig::LENET5.out_h(), PoolConfig::LENET5.out_w()), (14, 14));
+        assert_eq!((PoolConfig::ALEXNET.out_h(), PoolConfig::ALEXNET.out_w()), (26, 26));
+        assert_eq!((PoolConfig::RESNET50.out_h(), PoolConfig::RESNET50.out_w()), (55, 55));
+    }
+
+    #[test]
+    fn pooling_is_correct_small() {
+        // Tiny config for a full functional check against the reference.
+        let cfg = PoolConfig { name: "tiny", c: 2, h: 6, w: 6, k: 2, s: 2 };
+        let core_cfg = CoreConfig { mem_size: 1 << 20, ..Default::default() };
+        // f64 path is exact → must equal reference exactly.
+        let run = run_pool_sim(core_cfg, PoolFormat::F64, &cfg, false);
+        let mut rng = Rng::new(0xDEE7 ^ cfg.c as u64);
+        let input: Vec<f64> = (0..cfg.in_len()).map(|_| rng.range_f64(-8.0, 8.0)).collect();
+        let want = pool_reference(&cfg, &input);
+        assert_eq!(run.output, want);
+        // Posit path: max over *converted* values = converted max (order
+        // preservation) — compare against the posit-rounded reference.
+        let run = run_pool_sim(core_cfg, PoolFormat::P32, &cfg, false);
+        let want_p: Vec<f64> =
+            want.iter().map(|v| Posit32::from_f64(*v).to_f64()).collect();
+        assert_eq!(run.output, want_p);
+    }
+
+    #[test]
+    fn posit_as_fast_as_f32_and_f64_slower() {
+        // Table 8's shape on the LeNet-5 layer.
+        let core_cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+        let f32t = run_pool_sim(core_cfg, PoolFormat::F32, &PoolConfig::LENET5, true).stats.cycles;
+        let f64t = run_pool_sim(core_cfg, PoolFormat::F64, &PoolConfig::LENET5, true).stats.cycles;
+        let p32t = run_pool_sim(core_cfg, PoolFormat::P32, &PoolConfig::LENET5, true).stats.cycles;
+        assert!(p32t <= f32t, "posit {p32t} must not trail f32 {f32t}");
+        let ratio = f64t as f64 / f32t as f64;
+        assert!(ratio > 1.1, "f64/f32 = {ratio} (paper: 1.4–1.7×)");
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark substrate: workload generators, the accuracy (MSE) study, the
+//! table/figure regenerators, the RacEr comparison model, and a minimal
+//! wall-clock harness (criterion replacement).
+//!
+//! Map to the paper's evaluation:
+//! - [`mse`] + [`tables::table6`]/[`tables::fig7`] → Table 6, Fig. 7
+//! - [`gemm`] + [`tables::table7`] + [`racer`]     → Table 7
+//! - [`maxpool`] + [`tables::table8`]              → Table 8
+
+pub mod gemm;
+pub mod harness;
+pub mod maxpool;
+pub mod mse;
+pub mod racer;
+pub mod tables;

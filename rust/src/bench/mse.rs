@@ -1,0 +1,219 @@
+//! Accuracy study (paper §7.1, Table 6 & Fig. 7): GEMM Mean Squared Error
+//! of each 32-bit format against the 64-bit IEEE golden result.
+//!
+//! These run on the *native* arithmetic paths (host IEEE and
+//! [`crate::posit`]) rather than the core simulator — the semantics are
+//! bit-identical (pinned by `bench::gemm::tests::simulated_matches_native_bitwise`)
+//! and the native path makes the 256×256 sweep fast enough to regenerate
+//! the full table in seconds.
+
+use crate::posit::{ops, Posit32, Quire32};
+use crate::testing::Rng;
+
+/// Native GEMM arithmetic kinds (mirror of [`super::gemm::GemmVariant`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NativeKind {
+    F32Fused,
+    F32Unfused,
+    F64Fused,
+    F64Unfused,
+    P32Quire,
+    P32NoQuire,
+}
+
+impl NativeKind {
+    /// Table 6 row order and labels.
+    pub const TABLE6: [NativeKind; 4] = [
+        NativeKind::F32Fused,
+        NativeKind::P32Quire,
+        NativeKind::F32Unfused,
+        NativeKind::P32NoQuire,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            NativeKind::F32Fused => "IEEE 754",
+            NativeKind::P32Quire => "Posit32",
+            NativeKind::F32Unfused => "IEEE 754 no FMADD",
+            NativeKind::P32NoQuire => "Posit32 no quire",
+            NativeKind::F64Fused => "IEEE 754 f64",
+            NativeKind::F64Unfused => "IEEE 754 f64 no FMADD",
+        }
+    }
+}
+
+/// Run an n×n GEMM in the given arithmetic. Inputs are f64 master values;
+/// each kind converts them to its storage format first (as the paper does
+/// with SoftPosit), computes C = A·B, and returns C widened to f64.
+pub fn gemm_native(kind: NativeKind, n: usize, af: &[f64], bf: &[f64]) -> Vec<f64> {
+    assert_eq!(af.len(), n * n);
+    assert_eq!(bf.len(), n * n);
+    let mut c = vec![0.0f64; n * n];
+    match kind {
+        NativeKind::F64Fused => {
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for k in 0..n {
+                        acc = af[i * n + k].mul_add(bf[k * n + j], acc);
+                    }
+                    c[i * n + j] = acc;
+                }
+            }
+        }
+        NativeKind::F64Unfused => {
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0f64;
+                    for k in 0..n {
+                        acc += af[i * n + k] * bf[k * n + j];
+                    }
+                    c[i * n + j] = acc;
+                }
+            }
+        }
+        NativeKind::F32Fused => {
+            let a: Vec<f32> = af.iter().map(|v| *v as f32).collect();
+            let b: Vec<f32> = bf.iter().map(|v| *v as f32).collect();
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for k in 0..n {
+                        acc = a[i * n + k].mul_add(b[k * n + j], acc);
+                    }
+                    c[i * n + j] = acc as f64;
+                }
+            }
+        }
+        NativeKind::F32Unfused => {
+            let a: Vec<f32> = af.iter().map(|v| *v as f32).collect();
+            let b: Vec<f32> = bf.iter().map(|v| *v as f32).collect();
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for k in 0..n {
+                        acc += a[i * n + k] * b[k * n + j];
+                    }
+                    c[i * n + j] = acc as f64;
+                }
+            }
+        }
+        NativeKind::P32Quire => {
+            let a: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            let b: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            let mut q = Quire32::new();
+            for i in 0..n {
+                for j in 0..n {
+                    q.clear();
+                    for k in 0..n {
+                        q.madd(a[i * n + k], b[k * n + j]);
+                    }
+                    c[i * n + j] = Posit32(q.round()).to_f64();
+                }
+            }
+        }
+        NativeKind::P32NoQuire => {
+            let a: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            let b: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0u32; // posit zero
+                    for k in 0..n {
+                        let p = ops::mul::<32>(a[i * n + k], b[k * n + j]);
+                        acc = ops::add::<32>(acc, p);
+                    }
+                    c[i * n + j] = Posit32(acc).to_f64();
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Mean squared error against a golden vector.
+pub fn mse(got: &[f64], golden: &[f64]) -> f64 {
+    assert_eq!(got.len(), golden.len());
+    got.iter()
+        .zip(golden)
+        .map(|(g, r)| {
+            let d = g - r;
+            d * d
+        })
+        .sum::<f64>()
+        / got.len() as f64
+}
+
+/// One Table 6 cell: MSE of `kind` vs the f64-FMA golden, for a seeded
+/// uniform input in `[-10^exp10, 10^exp10]`.
+pub fn table6_cell(kind: NativeKind, n: usize, exp10: i32, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ ((exp10 as u64) << 32) ^ (n as u64));
+    let a = super::gemm::gen_matrix(&mut rng, n, exp10);
+    let b = super::gemm::gen_matrix(&mut rng, n, exp10);
+    let golden = gemm_native(NativeKind::F64Fused, n, &a, &b);
+    let got = gemm_native(kind, n, &a, &b);
+    mse(&got, &golden)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_is_zero_error_against_itself() {
+        let mut rng = Rng::new(1);
+        let a = super::super::gemm::gen_matrix(&mut rng, 8, 0);
+        let b = super::super::gemm::gen_matrix(&mut rng, 8, 0);
+        let g = gemm_native(NativeKind::F64Fused, 8, &a, &b);
+        assert_eq!(mse(&g, &g), 0.0);
+    }
+
+    #[test]
+    fn quire_beats_no_quire_beats_nothing() {
+        // The paper's headline ordering for [-1,1] inputs:
+        // MSE(posit+quire) < MSE(posit) < MSE(f32) (Table 6).
+        let n = 32;
+        let mut rng = Rng::new(42);
+        let a = super::super::gemm::gen_matrix(&mut rng, n, 0);
+        let b = super::super::gemm::gen_matrix(&mut rng, n, 0);
+        let golden = gemm_native(NativeKind::F64Fused, n, &a, &b);
+        let mq = mse(&gemm_native(NativeKind::P32Quire, n, &a, &b), &golden);
+        let mnq = mse(&gemm_native(NativeKind::P32NoQuire, n, &a, &b), &golden);
+        let mf = mse(&gemm_native(NativeKind::F32Fused, n, &a, &b), &golden);
+        assert!(mq < mnq, "quire {mq} !< no-quire {mnq}");
+        assert!(mnq < mf, "no-quire {mnq} !< f32 {mf}");
+        // And the quire gap is orders of magnitude (paper: ~3-4 orders
+        // for larger n; at n=32 expect ≥ 2).
+        assert!(mf / mq > 100.0, "f32/quire ratio only {}", mf / mq);
+    }
+
+    #[test]
+    fn paper_golden_zone_crossover() {
+        // §7.1: for inputs in [-1000, 1000] the no-quire posit falls
+        // *behind* floats (outputs leave the posit golden zone), while the
+        // quire version stays ahead — the paper's Table 6 bottom block.
+        let n = 64;
+        let mut rng = Rng::new(7);
+        let a = super::super::gemm::gen_matrix(&mut rng, n, 3);
+        let b = super::super::gemm::gen_matrix(&mut rng, n, 3);
+        let golden = gemm_native(NativeKind::F64Fused, n, &a, &b);
+        let mq = mse(&gemm_native(NativeKind::P32Quire, n, &a, &b), &golden);
+        let mnq = mse(&gemm_native(NativeKind::P32NoQuire, n, &a, &b), &golden);
+        let mf = mse(&gemm_native(NativeKind::F32Fused, n, &a, &b), &golden);
+        assert!(mnq > mf, "no-quire {mnq} should exceed f32 {mf} at [-1e3,1e3]");
+        assert!(mq < mf, "quire {mq} must still beat f32 {mf}");
+    }
+
+    #[test]
+    fn mse_grows_with_matrix_size() {
+        // Float error accumulates with n; quire error stays near one-ulp.
+        let kinds = [NativeKind::F32Fused, NativeKind::P32Quire];
+        for kind in kinds {
+            let m16 = table6_cell(kind, 16, 0, 99);
+            let m64 = table6_cell(kind, 64, 0, 99);
+            assert!(m64 > m16 * 0.5, "{kind:?}: m16={m16} m64={m64}");
+        }
+        let f16 = table6_cell(NativeKind::F32Fused, 16, 0, 99);
+        let q16 = table6_cell(NativeKind::P32Quire, 16, 0, 99);
+        assert!(f16 / q16 > 50.0);
+    }
+}

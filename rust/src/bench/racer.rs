@@ -1,0 +1,106 @@
+//! Model of the VividSparks RacEr GPGPU comparison row in Table 7.
+//!
+//! The hardware (512 CPUs @ 300 MHz, Posit32 without quire) is not
+//! available; the paper publishes five measurements, so the comparison row
+//! is regenerated from a least-squares fit of `t(n) = c₀ + c₁·n² + c₂·n³`
+//! to those published points. This keeps the crossover analysis (PERCIVAL
+//! up to 8× faster on small matrices, §8) reproducible without the device.
+
+/// The paper's published measurements: (n, seconds).
+pub const PAPER_POINTS: [(usize, f64); 5] =
+    [(16, 7.95e-3), (32, 48.9e-3), (64, 0.345), (128, 2.63), (256, 21.1)];
+
+/// Fitted model coefficients.
+#[derive(Debug, Clone, Copy)]
+pub struct RacerModel {
+    pub c0: f64,
+    pub c1: f64,
+    pub c2: f64,
+}
+
+impl RacerModel {
+    /// Least-squares fit over the published points, weighted by 1/t so the
+    /// *relative* error is minimised (the points span 3.4 decades).
+    pub fn fit() -> Self {
+        // Design matrix rows: [1, n², n³]/t against target 1;
+        // solve Aᵀ A x = Aᵀ b (3×3).
+        let mut ata = [[0.0f64; 3]; 3];
+        let mut atb = [0.0f64; 3];
+        for (n, t) in PAPER_POINTS {
+            let row = [1.0 / t, (n * n) as f64 / t, (n * n * n) as f64 / t];
+            for i in 0..3 {
+                for j in 0..3 {
+                    ata[i][j] += row[i] * row[j];
+                }
+                atb[i] += row[i]; // target = t/t = 1
+            }
+        }
+        let x = solve3(ata, atb);
+        Self { c0: x[0], c1: x[1], c2: x[2] }
+    }
+
+    /// Predicted GEMM time in seconds.
+    pub fn predict(&self, n: usize) -> f64 {
+        self.c0 + self.c1 * (n * n) as f64 + self.c2 * (n * n * n) as f64
+    }
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    for col in 0..3 {
+        // Pivot.
+        let mut p = col;
+        for r in col + 1..3 {
+            if a[r][col].abs() > a[p][col].abs() {
+                p = r;
+            }
+        }
+        a.swap(col, p);
+        b.swap(col, p);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-30, "singular system");
+        for r in 0..3 {
+            if r == col {
+                continue;
+            }
+            let f = a[r][col] / d;
+            for c in 0..3 {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    [b[0] / a[0][0], b[1] / a[1][1], b[2] / a[2][2]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_reproduces_published_points() {
+        let m = RacerModel::fit();
+        for (n, t) in PAPER_POINTS {
+            let p = m.predict(n);
+            let rel = ((p - t) / t).abs();
+            assert!(rel < 0.25, "n={n}: predicted {p:.4}, paper {t:.4} (rel {rel:.3})");
+        }
+        // The large sizes are essentially cubic — tight there.
+        let p256 = m.predict(256);
+        assert!(((p256 - 21.1) / 21.1).abs() < 0.02, "{p256}");
+    }
+
+    #[test]
+    fn cubic_term_dominates_large_n() {
+        let m = RacerModel::fit();
+        assert!(m.c2 > 0.0);
+        let cubic = m.c2 * 256f64.powi(3);
+        assert!(cubic / m.predict(256) > 0.9);
+    }
+
+    #[test]
+    fn solve3_identity() {
+        let x = solve3([[2.0, 0.0, 0.0], [0.0, 4.0, 0.0], [0.0, 0.0, 8.0]], [2.0, 8.0, 32.0]);
+        assert_eq!(x, [1.0, 2.0, 4.0]);
+    }
+}

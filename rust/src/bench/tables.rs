@@ -1,0 +1,172 @@
+//! Regenerators for every table and figure in the paper's evaluation:
+//! Table 6 (GEMM MSE), Fig. 7 (MSE bars, [-1,1]), Table 7 (GEMM timing,
+//! incl. the RacEr comparison row), Table 8 (max-pooling timing).
+//!
+//! Each regenerator prints the paper-shaped table and writes a CSV under
+//! `results/` for EXPERIMENTS.md provenance.
+
+use super::gemm::{run_gemm_sim, GemmVariant};
+use super::harness::{fmt_time, print_table, write_csv};
+use super::maxpool::{run_pool_sim, PoolConfig, PoolFormat};
+use super::mse::{table6_cell, NativeKind};
+use super::racer::RacerModel;
+use crate::core::CoreConfig;
+use crate::testing::Rng;
+
+/// Default matrix sizes (paper: 16..256).
+pub const SIZES: [usize; 5] = [16, 32, 64, 128, 256];
+/// Input ranges [-10^i, 10^i], i ∈ {-1, 0, 1, 2, 3} (paper §7.1).
+pub const RANGES: [i32; 5] = [-1, 0, 1, 2, 3];
+/// Seed used across all published runs.
+pub const SEED: u64 = 0x5EED_2022;
+
+/// Table 6: GEMM MSE of each format vs f64, 5 ranges × 4 kinds × sizes.
+pub fn table6(sizes: &[usize], out_csv: Option<&str>) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for exp10 in RANGES {
+        for kind in NativeKind::TABLE6 {
+            let mut row = vec![format!("[-1e{exp10}, 1e{exp10}]"), kind.label().to_string()];
+            for &n in sizes {
+                let m = table6_cell(kind, n, exp10, SEED);
+                row.push(format!("{m:.3e}"));
+            }
+            rows.push(row);
+        }
+    }
+    let mut header = vec!["input", "format"];
+    let size_labels: Vec<String> = sizes.iter().map(|n| format!("{n}x{n}")).collect();
+    header.extend(size_labels.iter().map(|s| s.as_str()));
+    print_table("Table 6 — GEMM MSE vs 64-bit IEEE golden", &header, &rows);
+    if let Some(path) = out_csv {
+        let _ = write_csv(path, &header, &rows);
+    }
+    rows
+}
+
+/// Fig. 7: the [-1,1] block of Table 6 as a log-scale series (printed as
+/// an ASCII chart + CSV: the bar chart's underlying numbers).
+pub fn fig7(sizes: &[usize], out_csv: Option<&str>) -> Vec<Vec<String>> {
+    let kinds = NativeKind::TABLE6;
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let mut row = vec![format!("{n}x{n}")];
+        for kind in kinds {
+            row.push(format!("{:.3e}", table6_cell(kind, n, 0, SEED)));
+        }
+        rows.push(row);
+    }
+    let header: Vec<&str> =
+        std::iter::once("size").chain(kinds.iter().map(|k| k.label())).collect();
+    print_table("Fig. 7 — GEMM MSE, inputs in [-1, 1] (log scale)", &header, &rows);
+    // ASCII bars: log10(MSE) mapped to width.
+    println!("log10(MSE), lower (further left) is better:");
+    for (i, &n) in sizes.iter().enumerate() {
+        for (j, kind) in kinds.iter().enumerate() {
+            let v: f64 = rows[i][j + 1].parse().unwrap();
+            let l = v.log10(); // ≈ -12 … -20
+            let width = ((l + 22.0).max(0.0) * 4.0) as usize;
+            println!("  {:>9} {:<20} {} {:.2}", format!("{n}x{n}"), kind.label(), "#".repeat(width), l);
+        }
+    }
+    if let Some(path) = out_csv {
+        let _ = write_csv(path, &header, &rows);
+    }
+    rows
+}
+
+/// Table 7: simulated GEMM wall-clock per variant and size + RacEr model.
+/// Timing is input-independent in the model, so one measured run per cell
+/// (after a warm-up run, matching the paper's no-cold-miss protocol).
+pub fn table7(cfg: CoreConfig, sizes: &[usize], out_csv: Option<&str>) -> Vec<Vec<String>> {
+    let mut rng = Rng::new(SEED);
+    let mut rows = Vec::new();
+    let mut secs: Vec<Vec<f64>> = Vec::new();
+    for v in GemmVariant::ALL {
+        let mut row = vec![v.label().to_string()];
+        let mut srow = Vec::new();
+        for &n in sizes {
+            let a = super::gemm::gen_matrix(&mut rng, n, 0);
+            let b = super::gemm::gen_matrix(&mut rng, n, 0);
+            let run = run_gemm_sim(cfg, v, n, &a, &b, true);
+            row.push(fmt_time(run.seconds));
+            srow.push(run.seconds);
+        }
+        rows.push(row);
+        secs.push(srow);
+    }
+    // RacEr comparison row (fitted model of the published column).
+    let racer = RacerModel::fit();
+    let mut row = vec!["VividSparks Posit32 no quire".to_string()];
+    for &n in sizes {
+        row.push(fmt_time(racer.predict(n)));
+    }
+    rows.push(row);
+    let mut header = vec!["format"];
+    let size_labels: Vec<String> = sizes.iter().map(|n| format!("{n}x{n}")).collect();
+    header.extend(size_labels.iter().map(|s| s.as_str()));
+    print_table("Table 7 — GEMM timing (simulated CVA6/PERCIVAL @ 50 MHz)", &header, &rows);
+    if let Some(path) = out_csv {
+        let _ = write_csv(path, &header, &rows);
+    }
+    rows
+}
+
+/// Table 8: max-pooling timing for the three DNN layers × three formats.
+pub fn table8(cfg: CoreConfig, out_csv: Option<&str>) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    for layer in PoolConfig::ALL {
+        let mut row = vec![layer.name.to_string()];
+        for fmt in [PoolFormat::F32, PoolFormat::F64, PoolFormat::P32] {
+            let run = run_pool_sim(cfg, fmt, &layer, true);
+            row.push(fmt_time(run.seconds));
+        }
+        rows.push(row);
+    }
+    let header = vec!["max-pooling layer", "32-bit float", "64-bit float", "Posit32"];
+    print_table("Table 8 — max-pooling timing (simulated @ 50 MHz)", &header, &rows);
+    if let Some(path) = out_csv {
+        let _ = write_csv(path, &header, &rows);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_small_has_expected_shape() {
+        let rows = table6(&[16], None);
+        // 5 ranges × 4 kinds.
+        assert_eq!(rows.len(), 20);
+        // In the [-1,1] block, Posit32 (row idx 5: range 0 → rows 4..8,
+        // kind order: IEEE, Posit32, IEEE-noF, Posit-noQ) must have the
+        // smallest MSE.
+        let block = &rows[4..8];
+        let vals: Vec<f64> = block.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!(vals[1] < vals[0] && vals[1] < vals[2] && vals[1] < vals[3]);
+    }
+
+    #[test]
+    fn table7_quick_shape() {
+        let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+        let rows = table7(cfg, &[16], None);
+        assert_eq!(rows.len(), 7); // 6 variants + RacEr
+        // Fused beats unfused for every format (paper §7.2).
+        let parse = |s: &str| -> f64 {
+            let (v, unit) = s.split_once(' ').unwrap();
+            let v: f64 = v.parse().unwrap();
+            match unit {
+                "s" => v,
+                "ms" => v * 1e-3,
+                _ => v * 1e-6,
+            }
+        };
+        let fused_f32 = parse(&rows[0][1]);
+        let unfused_f32 = parse(&rows[3][1]);
+        assert!(fused_f32 < unfused_f32);
+        let quire = parse(&rows[2][1]);
+        let noquire = parse(&rows[5][1]);
+        assert!(quire < noquire);
+    }
+}

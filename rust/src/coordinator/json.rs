@@ -1,0 +1,266 @@
+//! Minimal JSON reader for the oracle test vectors (`artifacts/vectors/`).
+//!
+//! serde_json is not in the offline crate set; the vectors only use
+//! objects, arrays, integers and strings, so a ~150-line recursive-descent
+//! parser suffices (numbers are parsed as f64 when fractional, i64/u64
+//! otherwise).
+
+use std::collections::HashMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integers (the vectors are bit patterns) — kept exact.
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(HashMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_u32(&self) -> Option<u32> {
+        match self {
+            Value::Int(i) => u32::try_from(*i).ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) => usize::try_from(*i).ok(),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Convenience: array of u32 bit patterns.
+    pub fn u32_vec(&self) -> Option<Vec<u32>> {
+        self.arr()?.iter().map(|v| v.as_u32()).collect()
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse(src: &str) -> Result<Value, String> {
+    let mut p = Parser { b: src.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn lit(&mut self, s: &str, v: Value) -> Result<Value, String> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.lit("true", Value::Bool(true)),
+            Some(b'f') => self.lit("false", Value::Bool(false)),
+            Some(b'n') => self.lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected byte at {}", self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.eat(b'{')?;
+        let mut m = HashMap::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Value::Obj(m));
+                }
+                _ => return Err(format!("expected , or }} at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Value::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Value::Arr(v));
+                }
+                _ => return Err(format!("expected , or ] at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek().ok_or("eof in escape")?;
+                    self.i += 1;
+                    s.push(match e {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'/' => '/',
+                        b'\\' => '\\',
+                        b'"' => '"',
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|e| e.to_string())?;
+                            let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
+                            self.i += 4;
+                            char::from_u32(cp).ok_or("bad codepoint")?
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    });
+                }
+                _ => s.push(c as char),
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let mut float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.i += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    float = true;
+                    self.i += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        if float {
+            text.parse::<f64>().map(Value::Num).map_err(|e| e.to_string())
+        } else {
+            // Bit patterns may exceed i64 as unsigned — not in our vectors
+            // (max 2^32−1), so i64 is fine.
+            text.parse::<i64>().map(Value::Int).map_err(|e| e.to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_vectors_shape() {
+        let v = parse(r#"{"mul": [{"a": 1, "b": 2147483648, "out": 0}], "k": "s"}"#).unwrap();
+        let mul = v.get("mul").unwrap().arr().unwrap();
+        assert_eq!(mul[0].get("a").unwrap().as_u32(), Some(1));
+        assert_eq!(mul[0].get("b").unwrap().as_u32(), Some(0x8000_0000));
+        assert_eq!(v.get("k"), Some(&Value::Str("s".into())));
+    }
+
+    #[test]
+    fn parses_nested_arrays_numbers_escapes() {
+        let v = parse(r#"[[1, -2, 3.5], "a\nb", true, false, null]"#).unwrap();
+        let a = v.arr().unwrap();
+        assert_eq!(a[0].arr().unwrap()[1], Value::Int(-2));
+        assert_eq!(a[0].arr().unwrap()[2], Value::Num(3.5));
+        assert_eq!(a[1], Value::Str("a\nb".into()));
+        assert_eq!(a[2], Value::Bool(true));
+        assert_eq!(a[4], Value::Null);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("nope").is_err());
+        assert!(parse("[1] x").is_err());
+    }
+
+    #[test]
+    fn u32_vec_helper() {
+        let v = parse("[1, 2, 4294967295]").unwrap();
+        assert_eq!(v.u32_vec(), Some(vec![1, 2, u32::MAX]));
+        let bad = parse("[1, -2]").unwrap();
+        assert_eq!(bad.u32_vec(), None);
+    }
+}

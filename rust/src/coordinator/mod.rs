@@ -1,0 +1,312 @@
+//! L3 coordinator — the driver in front of the three execution backends.
+//!
+//! PERCIVAL's contribution lives in the core (L1/L2 numerics + the
+//! simulated hardware), so per DESIGN.md the coordinator is deliberately
+//! thin: a job queue + worker pool that routes numeric jobs to
+//!
+//! - `Sim`    — the cycle-accurate core model (paper-timing answers),
+//! - `Native` — the Rust posit library (fast bit-exact answers),
+//! - `Pjrt`   — the AOT-compiled JAX/Pallas artifacts via [`crate::runtime`],
+//!
+//! collects latency/throughput metrics, and cross-checks backends on
+//! demand. tokio is not in the offline crate set, so the pool is
+//! std::thread + mpsc (documented deviation, DESIGN.md §6).
+
+pub mod json;
+
+use crate::bench::gemm::{run_gemm_sim, GemmVariant};
+use crate::core::CoreConfig;
+use crate::posit::{ops, Posit32, Quire32};
+use crate::runtime::Runtime;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which engine executes a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Cycle-accurate core simulator (returns paper-scale timings too).
+    Sim,
+    /// Native Rust posit library.
+    Native,
+    /// PJRT-compiled Pallas kernel (needs `make artifacts`).
+    Pjrt,
+}
+
+/// A numeric job.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// Posit32 GEMM (bit patterns, row-major n×n).
+    GemmP32 { n: usize, a: Vec<u32>, b: Vec<u32>, quire: bool },
+    /// Dot product through the quire.
+    DotP32 { a: Vec<u32>, b: Vec<u32> },
+}
+
+/// Result of a completed job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub bits: Vec<u32>,
+    pub backend: Backend,
+    /// Host wall-clock for the execution.
+    pub elapsed_s: f64,
+    /// Simulated target seconds (Sim backend only).
+    pub sim_seconds: Option<f64>,
+}
+
+/// Aggregated coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub busy_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} errors={} busy={:.3}s",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+            self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        )
+    }
+}
+
+enum Msg {
+    Run(Job, Backend, Sender<anyhow::Result<JobResult>>),
+    Stop,
+}
+
+/// The coordinator: a fixed worker pool consuming a shared job queue.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Spawn `n_workers` workers. `artifacts_dir` enables the PJRT backend
+    /// (jobs routed there fail cleanly if artifacts are missing).
+    pub fn new(n_workers: usize, artifacts_dir: Option<String>) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let dir = artifacts_dir.clone();
+            workers.push(std::thread::spawn(move || {
+                // One PJRT runtime per worker (compilation cache inside).
+                let mut rt: Option<Runtime> = None;
+                loop {
+                    let msg = {
+                        let guard = rx.lock().expect("queue lock");
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Msg::Run(job, backend, reply)) => {
+                            let t0 = Instant::now();
+                            let res = execute(&job, backend, &dir, &mut rt);
+                            let dt = t0.elapsed();
+                            metrics.busy_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+                            match &res {
+                                Ok(_) => {
+                                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(_) => {
+                                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            let _ = reply.send(res.map(|mut r| {
+                                r.elapsed_s = dt.as_secs_f64();
+                                r
+                            }));
+                        }
+                        Ok(Msg::Stop) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Self { tx, workers, metrics }
+    }
+
+    /// Submit a job; returns a receiver for the result.
+    pub fn submit(&self, job: Job, backend: Backend) -> Receiver<anyhow::Result<JobResult>> {
+        let (rtx, rrx) = channel();
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Msg::Run(job, backend, rtx)).expect("coordinator alive");
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn run(&self, job: Job, backend: Backend) -> anyhow::Result<JobResult> {
+        self.submit(job, backend).recv().expect("worker alive")
+    }
+
+    /// Run the same job on several backends and require bit-identical
+    /// results (the end-to-end cross-check).
+    pub fn cross_check(&self, job: Job, backends: &[Backend]) -> anyhow::Result<Vec<JobResult>> {
+        let rxs: Vec<_> =
+            backends.iter().map(|b| self.submit(job.clone(), *b)).collect();
+        let results: anyhow::Result<Vec<JobResult>> =
+            rxs.into_iter().map(|rx| rx.recv().expect("worker alive")).collect();
+        let results = results?;
+        for w in results.windows(2) {
+            anyhow::ensure!(
+                w[0].bits == w[1].bits,
+                "backend disagreement: {:?} vs {:?}",
+                w[0].backend,
+                w[1].backend
+            );
+        }
+        Ok(results)
+    }
+
+    /// Stop all workers.
+    pub fn shutdown(mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn execute(
+    job: &Job,
+    backend: Backend,
+    artifacts: &Option<String>,
+    rt: &mut Option<Runtime>,
+) -> anyhow::Result<JobResult> {
+    match (job, backend) {
+        (Job::GemmP32 { n, a, b, quire }, Backend::Native) => {
+            let bits = native_gemm(*n, a, b, *quire);
+            Ok(JobResult { bits, backend, elapsed_s: 0.0, sim_seconds: None })
+        }
+        (Job::GemmP32 { n, a, b, quire }, Backend::Sim) => {
+            let variant = if *quire { GemmVariant::P32Quire } else { GemmVariant::P32NoQuire };
+            let af: Vec<f64> = a.iter().map(|x| Posit32(*x).to_f64()).collect();
+            let bf: Vec<f64> = b.iter().map(|x| Posit32(*x).to_f64()).collect();
+            let run = run_gemm_sim(CoreConfig::default(), variant, *n, &af, &bf, false);
+            let bits = run.result.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+            Ok(JobResult {
+                bits,
+                backend,
+                elapsed_s: 0.0,
+                sim_seconds: Some(run.seconds),
+            })
+        }
+        (Job::GemmP32 { n, a, b, quire }, Backend::Pjrt) => {
+            let dir = artifacts
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("no artifacts dir configured"))?;
+            if rt.is_none() {
+                *rt = Some(Runtime::cpu(dir)?);
+            }
+            let variant = if *quire { "quire" } else { "noquire" };
+            let bits = rt.as_mut().unwrap().gemm_p32(variant, *n, a, b)?;
+            Ok(JobResult { bits, backend, elapsed_s: 0.0, sim_seconds: None })
+        }
+        (Job::DotP32 { a, b }, _) => {
+            let mut q = Quire32::new();
+            for (x, y) in a.iter().zip(b) {
+                q.madd(*x, *y);
+            }
+            Ok(JobResult {
+                bits: vec![q.round()],
+                backend: Backend::Native,
+                elapsed_s: 0.0,
+                sim_seconds: None,
+            })
+        }
+    }
+}
+
+/// Native GEMM used by the `Native` backend.
+pub fn native_gemm(n: usize, a: &[u32], b: &[u32], quire: bool) -> Vec<u32> {
+    if quire {
+        crate::runtime::native_gemm_quire(n, a, b)
+    } else {
+        let mut out = vec![0u32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0u32;
+                for k in 0..n {
+                    let p = ops::mul::<32>(a[i * n + k], b[k * n + j]);
+                    acc = ops::add::<32>(acc, p);
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::convert::from_f64;
+    use crate::testing::Rng;
+
+    fn mat(rng: &mut Rng, n: usize) -> Vec<u32> {
+        (0..n * n).map(|_| from_f64::<32>(rng.range_f64(-2.0, 2.0))).collect()
+    }
+
+    #[test]
+    fn native_and_sim_agree_bitwise() {
+        let mut rng = Rng::new(5);
+        let n = 6;
+        let (a, b) = (mat(&mut rng, n), mat(&mut rng, n));
+        let co = Coordinator::new(2, None);
+        let job = Job::GemmP32 { n, a, b, quire: true };
+        let results = co.cross_check(job, &[Backend::Native, Backend::Sim]).expect("agree");
+        assert_eq!(results.len(), 2);
+        assert!(results[1].sim_seconds.unwrap() > 0.0);
+        co.shutdown();
+    }
+
+    #[test]
+    fn parallel_throughput_and_metrics() {
+        let mut rng = Rng::new(9);
+        let co = Coordinator::new(4, None);
+        let rxs: Vec<_> = (0..16)
+            .map(|_| {
+                let n = 4;
+                let job =
+                    Job::GemmP32 { n, a: mat(&mut rng, n), b: mat(&mut rng, n), quire: true };
+                co.submit(job, Backend::Native)
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().expect("job ok");
+        }
+        assert_eq!(co.metrics.completed.load(Ordering::Relaxed), 16);
+        assert_eq!(co.metrics.errors.load(Ordering::Relaxed), 0);
+        co.shutdown();
+    }
+
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_artifacts() {
+        let co = Coordinator::new(1, Some("/nonexistent".into()));
+        let job = Job::GemmP32 { n: 4, a: vec![0; 16], b: vec![0; 16], quire: true };
+        let res = co.run(job, Backend::Pjrt);
+        assert!(res.is_err());
+        assert_eq!(co.metrics.errors.load(Ordering::Relaxed), 1);
+        co.shutdown();
+    }
+
+    #[test]
+    fn dot_job() {
+        let co = Coordinator::new(1, None);
+        let a: Vec<u32> = [1.0, 2.0, 3.0].iter().map(|v| from_f64::<32>(*v)).collect();
+        let b: Vec<u32> = [4.0, 5.0, 6.0].iter().map(|v| from_f64::<32>(*v)).collect();
+        let r = co.run(Job::DotP32 { a, b }, Backend::Native).unwrap();
+        assert_eq!(Posit32(r.bits[0]).to_f64(), 32.0);
+        co.shutdown();
+    }
+}

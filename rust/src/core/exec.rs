@@ -1,0 +1,406 @@
+//! Functional execution semantics for every supported instruction.
+//!
+//! Architectural state changes happen here; the cycle accounting lives in
+//! [`super::Core::step`]. Posit semantics delegate to [`crate::posit`]
+//! (which *is* the PAU), IEEE semantics are host-native (x86 IEEE 754 with
+//! hardware FMA — the same standard FPnew implements).
+
+use super::Core;
+use crate::isa::{Instr, Op};
+use crate::posit::{self, convert, divsqrt, ops, unpacked};
+
+/// Side information the timing model needs from execution.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Effect {
+    /// Override the next PC (branches taken / jumps).
+    pub next_pc: Option<u64>,
+    /// Extra cycles from the D$ (miss penalty), charged to the load/store.
+    pub mem_extra: u64,
+    /// Whether this was a *taken* control transfer.
+    pub taken: bool,
+    /// ECALL/EBREAK → stop simulation.
+    pub halt: bool,
+}
+
+#[inline]
+fn f32_of(bits: u64) -> f32 {
+    f32::from_bits(bits as u32)
+}
+
+#[inline]
+fn f64_of(bits: u64) -> f64 {
+    f64::from_bits(bits)
+}
+
+#[inline]
+fn box32(x: f32) -> u64 {
+    // NaN-boxing per the RISC-V spec: high 32 bits all ones.
+    0xFFFF_FFFF_0000_0000 | x.to_bits() as u64
+}
+
+/// RISC-V FCVT to signed: round-to-nearest-even, saturate, NaN → max.
+fn fcvt_i64(x: f64) -> i64 {
+    if x.is_nan() {
+        return i64::MAX;
+    }
+    let r = x.round_ties_even();
+    if r >= i64::MAX as f64 {
+        i64::MAX
+    } else if r <= i64::MIN as f64 {
+        i64::MIN
+    } else {
+        r as i64
+    }
+}
+
+fn fcvt_i32(x: f64) -> i64 {
+    if x.is_nan() {
+        return i32::MAX as i64;
+    }
+    let r = x.round_ties_even();
+    (r.clamp(i32::MIN as f64, i32::MAX as f64) as i32) as i64
+}
+
+fn fcvt_u64(x: f64) -> u64 {
+    if x.is_nan() {
+        return u64::MAX;
+    }
+    let r = x.round_ties_even();
+    if r >= u64::MAX as f64 {
+        u64::MAX
+    } else if r <= 0.0 {
+        0
+    } else {
+        r as u64
+    }
+}
+
+impl Core {
+    /// Execute one instruction functionally; the caller handles timing.
+    pub(super) fn exec(&mut self, ins: &Instr) -> Effect {
+        let mut eff = Effect::default();
+        let rd = ins.rd as usize;
+        let rs1 = ins.rs1 as usize;
+        let rs2 = ins.rs2 as usize;
+        let rs3 = ins.rs3 as usize;
+        let imm = ins.imm;
+        macro_rules! wx {
+            ($v:expr) => {{
+                if rd != 0 {
+                    self.x[rd] = $v;
+                }
+            }};
+        }
+        macro_rules! branch {
+            ($cond:expr) => {{
+                if $cond {
+                    eff.next_pc = Some(self.pc.wrapping_add(imm as u64));
+                    eff.taken = true;
+                }
+            }};
+        }
+        match ins.op {
+            // ── RV64I ───────────────────────────────────────────────────
+            Op::Lui => wx!((imm << 12) as u64),
+            Op::Auipc => wx!(self.pc.wrapping_add((imm << 12) as u64)),
+            Op::Jal => {
+                wx!(self.pc.wrapping_add(4));
+                eff.next_pc = Some(self.pc.wrapping_add(imm as u64));
+                eff.taken = true;
+            }
+            Op::Jalr => {
+                let target = self.x[rs1].wrapping_add(imm as u64) & !1;
+                wx!(self.pc.wrapping_add(4));
+                eff.next_pc = Some(target);
+                eff.taken = true;
+            }
+            Op::Beq => branch!(self.x[rs1] == self.x[rs2]),
+            Op::Bne => branch!(self.x[rs1] != self.x[rs2]),
+            Op::Blt => branch!((self.x[rs1] as i64) < (self.x[rs2] as i64)),
+            Op::Bge => branch!((self.x[rs1] as i64) >= (self.x[rs2] as i64)),
+            Op::Bltu => branch!(self.x[rs1] < self.x[rs2]),
+            Op::Bgeu => branch!(self.x[rs1] >= self.x[rs2]),
+            Op::Lb => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u8(a) as i8 as i64 as u64);
+            }
+            Op::Lh => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u16(a) as i16 as i64 as u64);
+            }
+            Op::Lw => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u32(a) as i32 as i64 as u64);
+            }
+            Op::Ld => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u64(a));
+            }
+            Op::Lbu => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u8(a) as u64);
+            }
+            Op::Lhu => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u16(a) as u64);
+            }
+            Op::Lwu => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                wx!(self.mem.read_u32(a) as u64);
+            }
+            Op::Sb => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u8(a, self.x[rs2] as u8);
+            }
+            Op::Sh => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u16(a, self.x[rs2] as u16);
+            }
+            Op::Sw => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u32(a, self.x[rs2] as u32);
+            }
+            Op::Sd => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u64(a, self.x[rs2]);
+            }
+            Op::Addi => wx!(self.x[rs1].wrapping_add(imm as u64)),
+            Op::Slti => wx!(((self.x[rs1] as i64) < imm) as u64),
+            Op::Sltiu => wx!((self.x[rs1] < imm as u64) as u64),
+            Op::Xori => wx!(self.x[rs1] ^ imm as u64),
+            Op::Ori => wx!(self.x[rs1] | imm as u64),
+            Op::Andi => wx!(self.x[rs1] & imm as u64),
+            Op::Slli => wx!(self.x[rs1] << imm),
+            Op::Srli => wx!(self.x[rs1] >> imm),
+            Op::Srai => wx!(((self.x[rs1] as i64) >> imm) as u64),
+            Op::Addiw => wx!((self.x[rs1].wrapping_add(imm as u64) as i32) as i64 as u64),
+            Op::Slliw => wx!((((self.x[rs1] as u32) << imm) as i32) as i64 as u64),
+            Op::Srliw => wx!((((self.x[rs1] as u32) >> imm) as i32) as i64 as u64),
+            Op::Sraiw => wx!(((self.x[rs1] as i32) >> imm) as i64 as u64),
+            Op::Add => wx!(self.x[rs1].wrapping_add(self.x[rs2])),
+            Op::Sub => wx!(self.x[rs1].wrapping_sub(self.x[rs2])),
+            Op::Sll => wx!(self.x[rs1] << (self.x[rs2] & 63)),
+            Op::Slt => wx!(((self.x[rs1] as i64) < (self.x[rs2] as i64)) as u64),
+            Op::Sltu => wx!((self.x[rs1] < self.x[rs2]) as u64),
+            Op::Xor => wx!(self.x[rs1] ^ self.x[rs2]),
+            Op::Srl => wx!(self.x[rs1] >> (self.x[rs2] & 63)),
+            Op::Sra => wx!(((self.x[rs1] as i64) >> (self.x[rs2] & 63)) as u64),
+            Op::Or => wx!(self.x[rs1] | self.x[rs2]),
+            Op::And => wx!(self.x[rs1] & self.x[rs2]),
+            Op::Addw => wx!((self.x[rs1].wrapping_add(self.x[rs2]) as i32) as i64 as u64),
+            Op::Subw => wx!((self.x[rs1].wrapping_sub(self.x[rs2]) as i32) as i64 as u64),
+            Op::Sllw => wx!((((self.x[rs1] as u32) << (self.x[rs2] & 31)) as i32) as i64 as u64),
+            Op::Srlw => wx!((((self.x[rs1] as u32) >> (self.x[rs2] & 31)) as i32) as i64 as u64),
+            Op::Sraw => wx!(((self.x[rs1] as i32) >> (self.x[rs2] & 31)) as i64 as u64),
+            // ── M ───────────────────────────────────────────────────────
+            Op::Mul => wx!(self.x[rs1].wrapping_mul(self.x[rs2])),
+            Op::Mulh => {
+                let p = (self.x[rs1] as i64 as i128) * (self.x[rs2] as i64 as i128);
+                wx!((p >> 64) as u64);
+            }
+            Op::Mulhu => {
+                let p = (self.x[rs1] as u128) * (self.x[rs2] as u128);
+                wx!((p >> 64) as u64);
+            }
+            Op::Div => {
+                let (a, b) = (self.x[rs1] as i64, self.x[rs2] as i64);
+                wx!(if b == 0 { u64::MAX } else { a.wrapping_div(b) as u64 });
+            }
+            Op::Divu => {
+                let (a, b) = (self.x[rs1], self.x[rs2]);
+                wx!(if b == 0 { u64::MAX } else { a / b });
+            }
+            Op::Rem => {
+                let (a, b) = (self.x[rs1] as i64, self.x[rs2] as i64);
+                wx!(if b == 0 { a as u64 } else { a.wrapping_rem(b) as u64 });
+            }
+            Op::Remu => {
+                let (a, b) = (self.x[rs1], self.x[rs2]);
+                wx!(if b == 0 { a } else { a % b });
+            }
+            Op::Mulw => {
+                wx!((self.x[rs1].wrapping_mul(self.x[rs2]) as i32) as i64 as u64)
+            }
+            // ── System ──────────────────────────────────────────────────
+            Op::Ecall | Op::Ebreak => eff.halt = true,
+            Op::Csrrs | Op::Csrrw => {
+                // Read-only performance counters; writes are ignored.
+                let v = match imm {
+                    0xC00 => self.cycle,
+                    0xC02 => self.instret,
+                    _ => 0,
+                };
+                wx!(v);
+            }
+            // ── F (32-bit IEEE) ─────────────────────────────────────────
+            Op::Flw => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                self.f[rd] = 0xFFFF_FFFF_0000_0000 | self.mem.read_u32(a) as u64;
+            }
+            Op::Fsw => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u32(a, self.f[rs2] as u32);
+            }
+            Op::FmaddS => {
+                self.f[rd] =
+                    box32(f32_of(self.f[rs1]).mul_add(f32_of(self.f[rs2]), f32_of(self.f[rs3])))
+            }
+            Op::FmsubS => {
+                self.f[rd] =
+                    box32(f32_of(self.f[rs1]).mul_add(f32_of(self.f[rs2]), -f32_of(self.f[rs3])))
+            }
+            Op::FnmsubS => {
+                self.f[rd] =
+                    box32((-f32_of(self.f[rs1])).mul_add(f32_of(self.f[rs2]), f32_of(self.f[rs3])))
+            }
+            Op::FnmaddS => {
+                self.f[rd] = box32(
+                    (-f32_of(self.f[rs1])).mul_add(f32_of(self.f[rs2]), -f32_of(self.f[rs3])),
+                )
+            }
+            Op::FaddS => self.f[rd] = box32(f32_of(self.f[rs1]) + f32_of(self.f[rs2])),
+            Op::FsubS => self.f[rd] = box32(f32_of(self.f[rs1]) - f32_of(self.f[rs2])),
+            Op::FmulS => self.f[rd] = box32(f32_of(self.f[rs1]) * f32_of(self.f[rs2])),
+            Op::FdivS => self.f[rd] = box32(f32_of(self.f[rs1]) / f32_of(self.f[rs2])),
+            Op::FsqrtS => self.f[rd] = box32(f32_of(self.f[rs1]).sqrt()),
+            Op::FsgnjS => {
+                let m = 0x8000_0000u32;
+                self.f[rd] = box32(f32::from_bits(
+                    (self.f[rs1] as u32 & !m) | (self.f[rs2] as u32 & m),
+                ));
+            }
+            Op::FsgnjnS => {
+                let m = 0x8000_0000u32;
+                self.f[rd] = box32(f32::from_bits(
+                    (self.f[rs1] as u32 & !m) | (!(self.f[rs2] as u32) & m),
+                ));
+            }
+            Op::FsgnjxS => {
+                let m = 0x8000_0000u32;
+                self.f[rd] = box32(f32::from_bits(
+                    (self.f[rs1] as u32) ^ (self.f[rs2] as u32 & m),
+                ));
+            }
+            Op::FminS => self.f[rd] = box32(f32_of(self.f[rs1]).min(f32_of(self.f[rs2]))),
+            Op::FmaxS => self.f[rd] = box32(f32_of(self.f[rs1]).max(f32_of(self.f[rs2]))),
+            Op::FcvtWS => wx!(fcvt_i32(f32_of(self.f[rs1]) as f64) as u64),
+            Op::FcvtWuS => wx!((fcvt_u64(f32_of(self.f[rs1]) as f64) as u32) as i32 as i64 as u64),
+            Op::FcvtLS => wx!(fcvt_i64(f32_of(self.f[rs1]) as f64) as u64),
+            Op::FcvtLuS => wx!(fcvt_u64(f32_of(self.f[rs1]) as f64)),
+            Op::FcvtSW => self.f[rd] = box32(self.x[rs1] as i32 as f32),
+            Op::FcvtSWu => self.f[rd] = box32(self.x[rs1] as u32 as f32),
+            Op::FcvtSL => self.f[rd] = box32(self.x[rs1] as i64 as f32),
+            Op::FcvtSLu => self.f[rd] = box32(self.x[rs1] as f32),
+            Op::FmvXW => wx!((self.f[rs1] as u32) as i32 as i64 as u64),
+            Op::FmvWX => self.f[rd] = 0xFFFF_FFFF_0000_0000 | (self.x[rs1] & 0xFFFF_FFFF),
+            Op::FeqS => wx!((f32_of(self.f[rs1]) == f32_of(self.f[rs2])) as u64),
+            Op::FltS => wx!((f32_of(self.f[rs1]) < f32_of(self.f[rs2])) as u64),
+            Op::FleS => wx!((f32_of(self.f[rs1]) <= f32_of(self.f[rs2])) as u64),
+            // ── D (64-bit IEEE) ─────────────────────────────────────────
+            Op::Fld => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                self.f[rd] = self.mem.read_u64(a);
+            }
+            Op::Fsd => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u64(a, self.f[rs2]);
+            }
+            Op::FmaddD => {
+                self.f[rd] = f64_of(self.f[rs1])
+                    .mul_add(f64_of(self.f[rs2]), f64_of(self.f[rs3]))
+                    .to_bits()
+            }
+            Op::FmsubD => {
+                self.f[rd] = f64_of(self.f[rs1])
+                    .mul_add(f64_of(self.f[rs2]), -f64_of(self.f[rs3]))
+                    .to_bits()
+            }
+            Op::FaddD => self.f[rd] = (f64_of(self.f[rs1]) + f64_of(self.f[rs2])).to_bits(),
+            Op::FsubD => self.f[rd] = (f64_of(self.f[rs1]) - f64_of(self.f[rs2])).to_bits(),
+            Op::FmulD => self.f[rd] = (f64_of(self.f[rs1]) * f64_of(self.f[rs2])).to_bits(),
+            Op::FdivD => self.f[rd] = (f64_of(self.f[rs1]) / f64_of(self.f[rs2])).to_bits(),
+            Op::FsgnjD => {
+                let m = 1u64 << 63;
+                self.f[rd] = (self.f[rs1] & !m) | (self.f[rs2] & m);
+            }
+            Op::FsgnjnD => {
+                let m = 1u64 << 63;
+                self.f[rd] = (self.f[rs1] & !m) | (!self.f[rs2] & m);
+            }
+            Op::FminD => self.f[rd] = f64_of(self.f[rs1]).min(f64_of(self.f[rs2])).to_bits(),
+            Op::FmaxD => self.f[rd] = f64_of(self.f[rs1]).max(f64_of(self.f[rs2])).to_bits(),
+            Op::FcvtDS => self.f[rd] = (f32_of(self.f[rs1]) as f64).to_bits(),
+            Op::FcvtSD => self.f[rd] = box32(f64_of(self.f[rs1]) as f32),
+            Op::FcvtDW => self.f[rd] = (self.x[rs1] as i32 as f64).to_bits(),
+            Op::FcvtDL => self.f[rd] = (self.x[rs1] as i64 as f64).to_bits(),
+            Op::FcvtWD => wx!(fcvt_i32(f64_of(self.f[rs1])) as u64),
+            Op::FcvtLD => wx!(fcvt_i64(f64_of(self.f[rs1])) as u64),
+            Op::FmvXD => wx!(self.f[rs1]),
+            Op::FmvDX => self.f[rd] = self.x[rs1],
+            Op::FeqD => wx!((f64_of(self.f[rs1]) == f64_of(self.f[rs2])) as u64),
+            Op::FltD => wx!((f64_of(self.f[rs1]) < f64_of(self.f[rs2])) as u64),
+            Op::FleD => wx!((f64_of(self.f[rs1]) <= f64_of(self.f[rs2])) as u64),
+            // ── Xposit (the PAU + posit ALU paths) ──────────────────────
+            Op::Plw => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                eff.mem_extra = self.dcache.access(a);
+                self.p[rd] = self.mem.read_u32(a);
+            }
+            Op::Psw => {
+                let a = self.x[rs1].wrapping_add(imm as u64);
+                self.dcache.access(a);
+                self.mem.write_u32(a, self.p[rs2]);
+            }
+            Op::PaddS => self.p[rd] = ops::add::<32>(self.p[rs1], self.p[rs2]),
+            Op::PsubS => self.p[rd] = ops::sub::<32>(self.p[rs1], self.p[rs2]),
+            Op::PmulS => self.p[rd] = ops::mul::<32>(self.p[rs1], self.p[rs2]),
+            Op::PdivS => self.p[rd] = divsqrt::div_approx::<32>(self.p[rs1], self.p[rs2]),
+            Op::PminS => self.p[rd] = posit::min_bits::<32>(self.p[rs1], self.p[rs2]),
+            Op::PmaxS => self.p[rd] = posit::max_bits::<32>(self.p[rs1], self.p[rs2]),
+            Op::PsqrtS => self.p[rd] = divsqrt::sqrt_approx::<32>(self.p[rs1]),
+            Op::QmaddS => self.quire.madd(self.p[rs1], self.p[rs2]),
+            Op::QmsubS => self.quire.msub(self.p[rs1], self.p[rs2]),
+            Op::QclrS => self.quire.clear(),
+            Op::QnegS => self.quire.neg(),
+            Op::QroundS => self.p[rd] = self.quire.round(),
+            Op::PcvtWS => wx!(convert::to_i32::<32>(self.p[rs1]) as i64 as u64),
+            Op::PcvtWuS => wx!(convert::to_u32::<32>(self.p[rs1]) as i32 as i64 as u64),
+            Op::PcvtLS => wx!(convert::to_i64::<32>(self.p[rs1]) as u64),
+            Op::PcvtLuS => wx!(convert::to_u64::<32>(self.p[rs1])),
+            Op::PcvtSW => self.p[rd] = convert::from_i32::<32>(self.x[rs1] as i32),
+            Op::PcvtSWu => self.p[rd] = convert::from_u32::<32>(self.x[rs1] as u32),
+            Op::PcvtSL => self.p[rd] = convert::from_i64::<32>(self.x[rs1] as i64),
+            Op::PcvtSLu => self.p[rd] = convert::from_u64::<32>(self.x[rs1]),
+            Op::PsgnjS => self.p[rd] = posit::sgnj::<32>(self.p[rs1], self.p[rs2]),
+            Op::PsgnjnS => self.p[rd] = posit::sgnjn::<32>(self.p[rs1], self.p[rs2]),
+            Op::PsgnjxS => self.p[rd] = posit::sgnjx::<32>(self.p[rs1], self.p[rs2]),
+            Op::PmvXW => wx!(unpacked::to_signed::<32>(self.p[rs1]) as i64 as u64),
+            Op::PmvWX => self.p[rd] = self.x[rs1] as u32,
+            Op::PeqS => wx!((self.p[rs1] == self.p[rs2]) as u64),
+            Op::PltS => {
+                wx!((unpacked::to_signed::<32>(self.p[rs1]) < unpacked::to_signed::<32>(self.p[rs2]))
+                    as u64)
+            }
+            Op::PleS => {
+                wx!((unpacked::to_signed::<32>(self.p[rs1])
+                    <= unpacked::to_signed::<32>(self.p[rs2])) as u64)
+            }
+        }
+        eff
+    }
+}

@@ -1,0 +1,305 @@
+//! Data memory and the L1 data-cache timing model.
+//!
+//! CVA6's L1 D$ on the Genesys II build is 32 KiB, 8-way set-associative
+//! with 16-byte lines; misses go to DDR over AXI. The *functional* memory is
+//! a flat little-endian byte array; the *timing* side is a tag-only cache
+//! model (contents are irrelevant for timing, only hit/miss is) with LRU
+//! replacement and write-allocate.
+//!
+//! The paper's GEMM timings (Table 7) are dominated by exactly this
+//! structure: the B-matrix column walk strides `4n` bytes and starts
+//! missing once `n` exceeds the cache's reach, which is why the 64→128
+//! step in the paper grows ~28× rather than 8×.
+
+/// Cache geometry + penalty configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    /// Total size in bytes (default 32 KiB, CVA6).
+    pub size: usize,
+    /// Associativity (default 8).
+    pub ways: usize,
+    /// Line size in bytes (default 16, CVA6's 128-bit lines).
+    pub line: usize,
+    /// Extra cycles on a miss (DRAM + AXI round trip at 50 MHz).
+    pub miss_penalty: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        // miss_penalty = 20 cycles is the one calibrated knob in the whole
+        // timing model: chosen so the 64×64 f64 GEMM lands on the paper's
+        // 69.4 ms (we get 69.8 ms); everything else then falls out — see
+        // EXPERIMENTS.md §Calibration.
+        Self { size: 32 * 1024, ways: 8, line: 16, miss_penalty: 20 }
+    }
+}
+
+/// Tag-only LRU cache (timing model).
+#[derive(Debug, Clone)]
+pub struct DCache {
+    cfg: CacheConfig,
+    sets: usize,
+    /// tags[set * ways + way] — tag value or u64::MAX for invalid.
+    tags: Vec<u64>,
+    /// Per-entry LRU stamp.
+    stamp: Vec<u64>,
+    /// Per-set most-recently-used way (fast-path probe — §Perf).
+    mru: Vec<u8>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl DCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let sets = cfg.size / (cfg.ways * cfg.line);
+        assert!(sets.is_power_of_two(), "cache sets must be a power of two");
+        Self {
+            cfg,
+            sets,
+            tags: vec![u64::MAX; sets * cfg.ways],
+            stamp: vec![0; sets * cfg.ways],
+            mru: vec![0; sets],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Access `addr`; returns the extra latency (0 on hit, miss_penalty on
+    /// miss) and updates the tag state.
+    pub fn access(&mut self, addr: u64) -> u64 {
+        self.tick += 1;
+        let line = addr / self.cfg.line as u64;
+        let set = (line as usize) & (self.sets - 1);
+        let tag = line / self.sets as u64;
+        let base = set * self.cfg.ways;
+        // Fast path: the per-set MRU way (hot loops hammer one line per
+        // set — §Perf optimisation, no LRU-order change).
+        let m = base + self.mru[set] as usize;
+        if self.tags[m] == tag {
+            self.stamp[m] = self.tick;
+            self.hits += 1;
+            return 0;
+        }
+        // Hit?
+        for w in 0..self.cfg.ways {
+            if self.tags[base + w] == tag {
+                self.stamp[base + w] = self.tick;
+                self.mru[set] = w as u8;
+                self.hits += 1;
+                return 0;
+            }
+        }
+        // Miss: fill LRU way.
+        self.misses += 1;
+        let mut victim = 0;
+        let mut oldest = u64::MAX;
+        for w in 0..self.cfg.ways {
+            if self.stamp[base + w] < oldest {
+                oldest = self.stamp[base + w];
+                victim = w;
+            }
+        }
+        self.tags[base + victim] = tag;
+        self.stamp[base + victim] = self.tick;
+        self.mru[set] = victim as u8;
+        self.cfg.miss_penalty
+    }
+
+    /// Drop all lines (used between benchmark repetitions when modelling
+    /// cold caches; the paper explicitly *avoids* cold misses, so the
+    /// harness warms instead).
+    pub fn flush(&mut self) {
+        self.tags.fill(u64::MAX);
+        self.stamp.fill(0);
+        self.mru.fill(0);
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Flat little-endian data memory.
+#[derive(Debug, Clone)]
+pub struct Memory {
+    bytes: Vec<u8>,
+}
+
+impl Memory {
+    pub fn new(size: usize) -> Self {
+        Self { bytes: vec![0; size] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    #[inline]
+    fn check(&self, addr: u64, n: usize) -> usize {
+        let a = addr as usize;
+        assert!(
+            a.checked_add(n).is_some_and(|end| end <= self.bytes.len()),
+            "memory access out of range: {addr:#x}+{n} (mem size {:#x})",
+            self.bytes.len()
+        );
+        a
+    }
+
+    #[inline]
+    pub fn read_u8(&self, addr: u64) -> u8 {
+        self.bytes[self.check(addr, 1)]
+    }
+
+    #[inline]
+    pub fn read_u16(&self, addr: u64) -> u16 {
+        let a = self.check(addr, 2);
+        u16::from_le_bytes(self.bytes[a..a + 2].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        let a = self.check(addr, 4);
+        u32::from_le_bytes(self.bytes[a..a + 4].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        let a = self.check(addr, 8);
+        u64::from_le_bytes(self.bytes[a..a + 8].try_into().unwrap())
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, addr: u64, v: u8) {
+        let a = self.check(addr, 1);
+        self.bytes[a] = v;
+    }
+
+    #[inline]
+    pub fn write_u16(&mut self, addr: u64, v: u16) {
+        let a = self.check(addr, 2);
+        self.bytes[a..a + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, addr: u64, v: u32) {
+        let a = self.check(addr, 4);
+        self.bytes[a..a + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, addr: u64, v: u64) {
+        let a = self.check(addr, 8);
+        self.bytes[a..a + 8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bulk helpers used by the workload generators.
+    pub fn write_f32_slice(&mut self, addr: u64, xs: &[f32]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.write_u32(addr + 4 * i as u64, x.to_bits());
+        }
+    }
+
+    pub fn write_f64_slice(&mut self, addr: u64, xs: &[f64]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.write_u64(addr + 8 * i as u64, x.to_bits());
+        }
+    }
+
+    pub fn write_u32_slice(&mut self, addr: u64, xs: &[u32]) {
+        for (i, x) in xs.iter().enumerate() {
+            self.write_u32(addr + 4 * i as u64, *x);
+        }
+    }
+
+    pub fn read_f32_slice(&self, addr: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| f32::from_bits(self.read_u32(addr + 4 * i as u64))).collect()
+    }
+
+    pub fn read_f64_slice(&self, addr: u64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| f64::from_bits(self.read_u64(addr + 8 * i as u64))).collect()
+    }
+
+    pub fn read_u32_slice(&self, addr: u64, n: usize) -> Vec<u32> {
+        (0..n).map(|i| self.read_u32(addr + 4 * i as u64)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_rw_roundtrip() {
+        let mut m = Memory::new(1024);
+        m.write_u64(8, 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u64(8), 0x1122_3344_5566_7788);
+        assert_eq!(m.read_u32(8), 0x5566_7788);
+        assert_eq!(m.read_u32(12), 0x1122_3344);
+        assert_eq!(m.read_u16(8), 0x7788);
+        assert_eq!(m.read_u8(15), 0x11);
+        m.write_u32(100, 0xDEAD_BEEF);
+        assert_eq!(m.read_u32(100), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oob_read_panics() {
+        let m = Memory::new(16);
+        m.read_u32(14);
+    }
+
+    #[test]
+    fn cache_hits_after_first_touch() {
+        let mut c = DCache::new(CacheConfig::default());
+        assert_eq!(c.access(0x1000), c.config().miss_penalty);
+        assert_eq!(c.access(0x1004), 0); // same 16B line
+        assert_eq!(c.access(0x100C), 0);
+        assert_eq!(c.access(0x1010), c.config().miss_penalty); // next line
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 2);
+    }
+
+    #[test]
+    fn cache_lru_eviction() {
+        // 2 sets × 2 ways × 16B = 64B cache: set = line index & 1.
+        let mut c = DCache::new(CacheConfig { size: 64, ways: 2, line: 16, miss_penalty: 10 });
+        // Three distinct lines mapping to set 0: 0x00, 0x40, 0x80.
+        assert_eq!(c.access(0x00), 10);
+        assert_eq!(c.access(0x40), 10);
+        assert_eq!(c.access(0x00), 0); // both resident
+        assert_eq!(c.access(0x80), 10); // evicts 0x40 (LRU)
+        assert_eq!(c.access(0x00), 0);
+        assert_eq!(c.access(0x40), 10); // was evicted
+    }
+
+    #[test]
+    fn cache_capacity_reach() {
+        // A 32 KiB cache must hold a 16 KiB array entirely.
+        let mut c = DCache::new(CacheConfig::default());
+        for pass in 0..2 {
+            for addr in (0..16 * 1024u64).step_by(4) {
+                let extra = c.access(addr);
+                if pass == 1 {
+                    assert_eq!(extra, 0, "second pass must fully hit");
+                }
+            }
+        }
+        // …and a 256 KiB stream must keep missing per line.
+        c.reset_stats();
+        for addr in (0x10_0000..0x14_0000u64).step_by(16) {
+            c.access(addr);
+        }
+        assert_eq!(c.misses, (0x4_0000u64) / 16);
+    }
+}

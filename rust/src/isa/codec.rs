@@ -1,0 +1,379 @@
+//! Binary encode / decode for every supported instruction.
+//!
+//! Encodings are bit-exact RISC-V (and bit-exact Table 2 for Xposit), so a
+//! program assembled here would execute identically on the real PERCIVAL
+//! RTL — the encoder/decoder pair is the contract the paper's LLVM Xposit
+//! backend implements.
+
+use super::{info, Enc, Instr, Op, OP_TABLE, OPC_POSIT, POSIT_FMT};
+
+/// Encoding/decoding error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The 32-bit word does not decode to any supported instruction.
+    Illegal(u32),
+    /// Immediate out of range for the format.
+    ImmRange { op: Op, imm: i64 },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Illegal(w) => write!(f, "illegal instruction {w:#010x}"),
+            CodecError::ImmRange { op, imm } => {
+                write!(f, "immediate {imm} out of range for {}", info(*op).mnemonic)
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+#[inline]
+fn rd(w: u32) -> u8 {
+    ((w >> 7) & 0x1F) as u8
+}
+#[inline]
+fn rs1(w: u32) -> u8 {
+    ((w >> 15) & 0x1F) as u8
+}
+#[inline]
+fn rs2(w: u32) -> u8 {
+    ((w >> 20) & 0x1F) as u8
+}
+#[inline]
+fn f3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+#[inline]
+fn f7(w: u32) -> u32 {
+    w >> 25
+}
+
+fn check_range(op: Op, imm: i64, bits: u32) -> Result<(), CodecError> {
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    if imm < lo || imm > hi {
+        return Err(CodecError::ImmRange { op, imm });
+    }
+    Ok(())
+}
+
+/// Encode an instruction to its 32-bit word.
+pub fn encode(ins: &Instr) -> Result<u32, CodecError> {
+    let inf = ins.info();
+    let rdw = (ins.rd as u32) << 7;
+    let rs1w = (ins.rs1 as u32) << 15;
+    let rs2w = (ins.rs2 as u32) << 20;
+    Ok(match inf.enc {
+        Enc::R { opcode, f3, f7 } => (f7 << 25) | rs2w | rs1w | (f3 << 12) | rdw | opcode,
+        Enc::R2 { opcode, f3, f7, rs2 } => {
+            (f7 << 25) | (rs2 << 20) | rs1w | (f3 << 12) | rdw | opcode
+        }
+        Enc::R4 { opcode, fmt2 } => {
+            ((ins.rs3 as u32) << 27) | (fmt2 << 25) | rs2w | rs1w | rdw | opcode
+        }
+        Enc::I { opcode, f3 } => {
+            check_range(ins.op, ins.imm, 12)?;
+            (((ins.imm as u32) & 0xFFF) << 20) | rs1w | (f3 << 12) | rdw | opcode
+        }
+        Enc::IShift { opcode, f3, f6 } => {
+            if !(0..64).contains(&ins.imm) {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            (f6 << 26) | ((ins.imm as u32) << 20) | rs1w | (f3 << 12) | rdw | opcode
+        }
+        Enc::IShiftW { opcode, f3, f7 } => {
+            if !(0..32).contains(&ins.imm) {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            (f7 << 25) | ((ins.imm as u32) << 20) | rs1w | (f3 << 12) | rdw | opcode
+        }
+        Enc::S { opcode, f3 } => {
+            check_range(ins.op, ins.imm, 12)?;
+            let imm = ins.imm as u32;
+            ((imm >> 5 & 0x7F) << 25) | rs2w | rs1w | (f3 << 12) | ((imm & 0x1F) << 7) | opcode
+        }
+        Enc::B { f3 } => {
+            check_range(ins.op, ins.imm, 13)?;
+            if ins.imm & 1 != 0 {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            let imm = ins.imm as u32;
+            ((imm >> 12 & 1) << 31)
+                | ((imm >> 5 & 0x3F) << 25)
+                | rs2w
+                | rs1w
+                | (f3 << 12)
+                | ((imm >> 1 & 0xF) << 8)
+                | ((imm >> 11 & 1) << 7)
+                | 0b1100011
+        }
+        Enc::U { opcode } => {
+            // imm is the pre-shifted 20-bit value.
+            if !(0..(1 << 20)).contains(&ins.imm) {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            ((ins.imm as u32) << 12) | rdw | opcode
+        }
+        Enc::J => {
+            check_range(ins.op, ins.imm, 21)?;
+            if ins.imm & 1 != 0 {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            let imm = ins.imm as u32;
+            ((imm >> 20 & 1) << 31)
+                | ((imm >> 1 & 0x3FF) << 21)
+                | ((imm >> 11 & 1) << 20)
+                | ((imm >> 12 & 0xFF) << 12)
+                | rdw
+                | 0b1101111
+        }
+        Enc::PositR { f5, .. } => {
+            (f5 << 27) | (POSIT_FMT << 25) | rs2w | rs1w | rdw | OPC_POSIT
+        }
+        Enc::Sys { imm12 } => (imm12 << 20) | 0b1110011,
+        Enc::Csr { f3 } => {
+            // imm = CSR number (unsigned 12-bit).
+            if !(0..4096).contains(&ins.imm) {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            (((ins.imm as u32) & 0xFFF) << 20) | rs1w | (f3 << 12) | rdw | 0b1110011
+        }
+    })
+}
+
+/// Sign-extend the low `bits` of `v`.
+#[inline]
+fn sext(v: u32, bits: u32) -> i64 {
+    ((v as i64) << (64 - bits)) >> (64 - bits)
+}
+
+/// Decode a 32-bit word. Returns [`CodecError::Illegal`] for anything the
+/// core would trap on (paper Fig. 3's `illegal_instr` default arm).
+pub fn decode(w: u32) -> Result<Instr, CodecError> {
+    let opcode = w & 0x7F;
+    // Xposit first: it is the novel opcode space.
+    if opcode == OPC_POSIT {
+        return decode_posit(w);
+    }
+    for e in OP_TABLE {
+        let hit = match e.enc {
+            Enc::R { opcode: o, f3: a, f7: b } => o == opcode && f3(w) == a && f7(w) == b,
+            Enc::R2 { opcode: o, f3: a, f7: b, rs2: c } => {
+                o == opcode && f3(w) == a && f7(w) == b && rs2(w) as u32 == c
+            }
+            Enc::R4 { opcode: o, fmt2 } => o == opcode && (w >> 25 & 0x3) == fmt2,
+            Enc::I { opcode: o, f3: a } => o == opcode && f3(w) == a,
+            Enc::IShift { opcode: o, f3: a, f6 } => {
+                o == opcode && f3(w) == a && (w >> 26) == f6
+            }
+            Enc::IShiftW { opcode: o, f3: a, f7: b } => {
+                o == opcode && f3(w) == a && f7(w) == b
+            }
+            Enc::S { opcode: o, f3: a } => o == opcode && f3(w) == a,
+            Enc::B { f3: a } => opcode == 0b1100011 && f3(w) == a,
+            Enc::U { opcode: o } => o == opcode,
+            Enc::J => opcode == 0b1101111,
+            Enc::PositR { .. } => false, // handled above
+            Enc::Sys { imm12 } => {
+                opcode == 0b1110011 && f3(w) == 0 && (w >> 20) == imm12 && rd(w) == 0 && rs1(w) == 0
+            }
+            Enc::Csr { f3: a } => opcode == 0b1110011 && f3(w) == a,
+        };
+        if !hit {
+            continue;
+        }
+        let imm = match e.enc {
+            Enc::I { .. } => sext(w >> 20, 12),
+            Enc::IShift { .. } => ((w >> 20) & 0x3F) as i64,
+            Enc::IShiftW { .. } => ((w >> 20) & 0x1F) as i64,
+            Enc::S { .. } => sext((f7(w) << 5) | (w >> 7 & 0x1F), 12),
+            Enc::B { .. } => sext(
+                ((w >> 31) << 12) | ((w >> 7 & 1) << 11) | ((w >> 25 & 0x3F) << 5) | (w >> 8 & 0xF) << 1,
+                13,
+            ),
+            Enc::U { .. } => (w >> 12) as i64,
+            Enc::J => sext(
+                ((w >> 31) << 20) | ((w >> 12 & 0xFF) << 12) | ((w >> 20 & 1) << 11) | (w >> 21 & 0x3FF) << 1,
+                21,
+            ),
+            Enc::Csr { .. } => (w >> 20) as i64,
+            _ => 0,
+        };
+        use super::RegClass;
+        return Ok(Instr {
+            op: e.op,
+            rd: if e.rd == RegClass::None { 0 } else { rd(w) },
+            rs1: if e.rs1 == RegClass::None { 0 } else { rs1(w) },
+            rs2: match e.enc {
+                // Selector rs2 is part of the opcode, not an operand.
+                Enc::R2 { .. } => 0,
+                _ if e.rs2 == RegClass::None => 0,
+                _ => rs2(w),
+            },
+            rs3: match e.enc {
+                Enc::R4 { .. } => (w >> 27) as u8,
+                _ => 0,
+            },
+            imm,
+        });
+    }
+    Err(CodecError::Illegal(w))
+}
+
+fn decode_posit(w: u32) -> Result<Instr, CodecError> {
+    match f3(w) {
+        0b001 => Ok(Instr { op: Op::Plw, rd: rd(w), rs1: rs1(w), rs2: 0, rs3: 0, imm: sext(w >> 20, 12) }),
+        0b011 => Ok(Instr {
+            op: Op::Psw,
+            rd: 0,
+            rs1: rs1(w),
+            rs2: rs2(w),
+            rs3: 0,
+            imm: sext((f7(w) << 5) | (w >> 7 & 0x1F), 12),
+        }),
+        0b000 => {
+            let f5 = w >> 27;
+            let fmt = w >> 25 & 0x3;
+            if fmt != POSIT_FMT {
+                return Err(CodecError::Illegal(w));
+            }
+            for e in OP_TABLE {
+                if let Enc::PositR { f5: ef5, rs2_zero, rs1_zero, rd_zero } = e.enc {
+                    if ef5 == f5 {
+                        // Hardwired-zero fields must be zero (Table 2).
+                        if (rs2_zero && rs2(w) != 0)
+                            || (rs1_zero && rs1(w) != 0)
+                            || (rd_zero && rd(w) != 0)
+                        {
+                            return Err(CodecError::Illegal(w));
+                        }
+                        return Ok(Instr {
+                            op: e.op,
+                            rd: rd(w),
+                            rs1: rs1(w),
+                            rs2: rs2(w),
+                            rs3: 0,
+                            imm: 0,
+                        });
+                    }
+                }
+            }
+            Err(CodecError::Illegal(w))
+        }
+        _ => Err(CodecError::Illegal(w)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::RegClass;
+
+    /// Exhaustive encode→decode round-trip over every op with varied
+    /// operand/immediate patterns.
+    #[test]
+    fn roundtrip_every_op() {
+        for e in OP_TABLE {
+            for (r1, r2, r3, rdv) in [(1u8, 2u8, 3u8, 4u8), (31, 30, 29, 28), (0, 0, 0, 0), (17, 17, 17, 17)] {
+                for imm in [0i64, 4, -4, 16, 2044, -2048] {
+                    let ins = Instr {
+                        op: e.op,
+                        rd: if e.rd == RegClass::None { 0 } else { rdv },
+                        rs1: if e.rs1 == RegClass::None { 0 } else { r1 },
+                        rs2: if e.rs2 == RegClass::None { 0 } else { r2 },
+                        rs3: if e.rs3 == RegClass::None { 0 } else { r3 },
+                        imm: match e.enc {
+                            Enc::IShift { .. } => imm.rem_euclid(64),
+                            Enc::IShiftW { .. } => imm.rem_euclid(32),
+                            Enc::U { .. } => imm.rem_euclid(1 << 20),
+                            Enc::Csr { .. } => imm.rem_euclid(4096),
+                            Enc::B { .. } | Enc::J => imm & !1,
+                            Enc::Sys { .. } => 0,
+                            Enc::R { .. } | Enc::R2 { .. } | Enc::R4 { .. } | Enc::PositR { .. } => 0,
+                            _ => imm,
+                        },
+                    };
+                    let w = encode(&ins).unwrap_or_else(|err| panic!("{}: {err}", e.mnemonic));
+                    let back = decode(w).unwrap_or_else(|err| panic!("{}: {err}", e.mnemonic));
+                    assert_eq!(back, ins, "{} word={w:#010x}", e.mnemonic);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table2_bit_patterns() {
+        // Golden encodings hand-assembled from the paper's Table 2.
+        // padd.s p3, p1, p2 = funct5 00000 | fmt 10 | rs2=2 | rs1=1 |
+        //   000 | rd=3 | 0001011
+        let w = encode(&Instr::r(Op::PaddS, 3, 1, 2)).unwrap();
+        assert_eq!(w, (0b00000 << 27) | (0b10 << 25) | (2 << 20) | (1 << 15) | (3 << 7) | 0b0001011);
+        // qclr.s: everything zero but funct5/fmt/opcode.
+        let w = encode(&Instr::r(Op::QclrS, 0, 0, 0)).unwrap();
+        assert_eq!(w, (0b01001 << 27) | (0b10 << 25) | 0b0001011);
+        // qmadd.s p1, p2: rd field zero.
+        let w = encode(&Instr::s(Op::QmaddS, 1, 2, 0)).unwrap();
+        assert_eq!(w, (0b00111 << 27) | (0b10 << 25) | (2 << 20) | (1 << 15) | 0b0001011);
+        // plw p5, 8(x10): imm=8 | rs1=10 | 001 | rd=5 | 0001011.
+        let w = encode(&Instr::i(Op::Plw, 5, 10, 8)).unwrap();
+        assert_eq!(w, (8 << 20) | (10 << 15) | (0b001 << 12) | (5 << 7) | 0b0001011);
+        // psw p5, -4(x10): S-type split of -4 = 0xFFC.
+        let w = encode(&Instr::s(Op::Psw, 10, 5, -4)).unwrap();
+        assert_eq!(
+            w,
+            (0x7F << 25) | (5 << 20) | (10 << 15) | (0b011 << 12) | (0x1C << 7) | 0b0001011
+        );
+    }
+
+    #[test]
+    fn rv_golden_words() {
+        // Cross-checked against the RISC-V spec examples / binutils.
+        // addi x1, x0, 5 → 0x00500093
+        assert_eq!(encode(&Instr::i(Op::Addi, 1, 0, 5)).unwrap(), 0x0050_0093);
+        // add x3, x1, x2 → 0x002081B3
+        assert_eq!(encode(&Instr::r(Op::Add, 3, 1, 2)).unwrap(), 0x0020_81B3);
+        // lw x5, 12(x6) → 0x00C32283
+        assert_eq!(encode(&Instr::i(Op::Lw, 5, 6, 12)).unwrap(), 0x00C3_2283);
+        // sd x7, 24(x8) → imm 24 = 0b11000: hi=0, lo=24.
+        assert_eq!(
+            encode(&Instr::s(Op::Sd, 8, 7, 24)).unwrap(),
+            (24 << 7) | (7 << 20) | (8 << 15) | (0b011 << 12) | 0b0100011
+        );
+        // beq x1, x2, +8 → 0x00208463
+        assert_eq!(encode(&Instr::s(Op::Beq, 1, 2, 8)).unwrap(), 0x0020_8463);
+        // jal x1, +16 → 0x010000EF
+        assert_eq!(encode(&Instr::i(Op::Jal, 1, 0, 16)).unwrap(), 0x0100_00EF);
+        // ecall → 0x00000073, ebreak → 0x00100073
+        assert_eq!(encode(&Instr::r(Op::Ecall, 0, 0, 0)).unwrap(), 0x0000_0073);
+        assert_eq!(encode(&Instr::r(Op::Ebreak, 0, 0, 0)).unwrap(), 0x0010_0073);
+        // fmadd.s f1, f2, f3, f4 → rs3=4|00|rs2=3|rs1=2|rm=000|rd=1|1000011
+        assert_eq!(
+            encode(&Instr::r4(Op::FmaddS, 1, 2, 3, 4)).unwrap(),
+            (4 << 27) | (3 << 20) | (2 << 15) | (1 << 7) | 0b1000011
+        );
+    }
+
+    #[test]
+    fn illegal_words_rejected() {
+        assert!(decode(0x0000_0000).is_err());
+        assert!(decode(0xFFFF_FFFF).is_err());
+        // POSIT opcode with unsupported funct3.
+        assert!(decode((0b111 << 12) | OPC_POSIT).is_err());
+        // POSIT comp with wrong fmt (01 instead of 10).
+        assert!(decode((0b00000 << 27) | (0b01 << 25) | OPC_POSIT).is_err());
+        // QCLR with a non-zero rd is illegal per Table 2.
+        assert!(decode((0b01001 << 27) | (0b10 << 25) | (3 << 7) | OPC_POSIT).is_err());
+    }
+
+    #[test]
+    fn imm_range_checks() {
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, 2048)).is_err());
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, -2049)).is_err());
+        assert!(encode(&Instr::i(Op::Addi, 1, 0, 2047)).is_ok());
+        assert!(encode(&Instr::s(Op::Beq, 1, 2, 3)).is_err()); // odd offset
+        assert!(encode(&Instr::i(Op::Slli, 1, 1, 64)).is_err());
+        assert!(encode(&Instr::i(Op::Slli, 1, 1, 63)).is_ok());
+    }
+}

@@ -1,0 +1,104 @@
+//! Disassembler: [`Instr`] → assembly text (the inverse of [`super::asm`]).
+
+use super::{info, Enc, Instr, Op, RegClass};
+
+/// ABI names for the integer register file.
+pub const X_NAMES: [&str; 32] = [
+    "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3", "a4",
+    "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "t3", "t4",
+    "t5", "t6",
+];
+
+/// ABI names for the float register file.
+pub const F_NAMES: [&str; 32] = [
+    "ft0", "ft1", "ft2", "ft3", "ft4", "ft5", "ft6", "ft7", "fs0", "fs1", "fa0", "fa1", "fa2",
+    "fa3", "fa4", "fa5", "fa6", "fa7", "fs2", "fs3", "fs4", "fs5", "fs6", "fs7", "fs8", "fs9",
+    "fs10", "fs11", "ft8", "ft9", "ft10", "ft11",
+];
+
+/// Render a register of the given class.
+pub fn reg_name(class: RegClass, n: u8) -> String {
+    match class {
+        RegClass::X => X_NAMES[n as usize].to_string(),
+        RegClass::F => F_NAMES[n as usize].to_string(),
+        RegClass::P => format!("p{n}"),
+        RegClass::None => String::new(),
+    }
+}
+
+/// Disassemble one instruction (PC-relative operands are shown as raw
+/// offsets; the assembler accepts the same form).
+pub fn disasm(ins: &Instr) -> String {
+    let inf = info(ins.op);
+    let mn = inf.mnemonic;
+    let rd = || reg_name(inf.rd, ins.rd);
+    let rs1 = || reg_name(inf.rs1, ins.rs1);
+    let rs2 = || reg_name(inf.rs2, ins.rs2);
+    match inf.enc {
+        Enc::R { .. } => format!("{mn} {}, {}, {}", rd(), rs1(), rs2()),
+        Enc::R2 { .. } => format!("{mn} {}, {}", rd(), rs1()),
+        Enc::R4 { .. } => format!(
+            "{mn} {}, {}, {}, {}",
+            rd(),
+            rs1(),
+            rs2(),
+            reg_name(inf.rs3, ins.rs3)
+        ),
+        Enc::I { .. } => match ins.op {
+            // Loads (and jalr) use the base+offset form.
+            Op::Lb | Op::Lh | Op::Lw | Op::Ld | Op::Lbu | Op::Lhu | Op::Lwu | Op::Flw
+            | Op::Fld | Op::Plw => {
+                format!("{mn} {}, {}({})", rd(), ins.imm, rs1())
+            }
+            Op::Jalr => format!("{mn} {}, {}({})", rd(), ins.imm, rs1()),
+            _ => format!("{mn} {}, {}, {}", rd(), rs1(), ins.imm),
+        },
+        Enc::IShift { .. } | Enc::IShiftW { .. } => {
+            format!("{mn} {}, {}, {}", rd(), rs1(), ins.imm)
+        }
+        Enc::S { .. } => format!("{mn} {}, {}({})", rs2(), ins.imm, rs1()),
+        Enc::B { .. } => format!("{mn} {}, {}, {}", rs1(), rs2(), ins.imm),
+        Enc::U { .. } => format!("{mn} {}, {:#x}", rd(), ins.imm),
+        Enc::J => format!("{mn} {}, {}", rd(), ins.imm),
+        Enc::PositR { rs2_zero, rs1_zero, rd_zero, .. } => {
+            let mut parts: Vec<String> = Vec::new();
+            if !rd_zero && inf.rd != RegClass::None {
+                parts.push(rd());
+            }
+            if !rs1_zero && inf.rs1 != RegClass::None {
+                parts.push(rs1());
+            }
+            if !rs2_zero && inf.rs2 != RegClass::None {
+                parts.push(rs2());
+            }
+            if parts.is_empty() {
+                mn.to_string()
+            } else {
+                format!("{mn} {}", parts.join(", "))
+            }
+        }
+        Enc::Sys { .. } => mn.to_string(),
+        Enc::Csr { .. } => format!("{mn} {}, {:#x}, {}", rd(), ins.imm, rs1()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(disasm(&Instr::r(Op::Add, 3, 1, 2)), "add gp, ra, sp");
+        assert_eq!(disasm(&Instr::i(Op::Addi, 10, 10, -4)), "addi a0, a0, -4");
+        assert_eq!(disasm(&Instr::i(Op::Lw, 5, 6, 12)), "lw t0, 12(t1)");
+        assert_eq!(disasm(&Instr::s(Op::Sw, 6, 5, 12)), "sw t0, 12(t1)");
+        assert_eq!(disasm(&Instr::i(Op::Plw, 3, 10, 0)), "plw p3, 0(a0)");
+        assert_eq!(disasm(&Instr::s(Op::Psw, 10, 3, 8)), "psw p3, 8(a0)");
+        assert_eq!(disasm(&Instr::r(Op::PaddS, 1, 2, 3)), "padd.s p1, p2, p3");
+        assert_eq!(disasm(&Instr::s(Op::QmaddS, 4, 5, 0)), "qmadd.s p4, p5");
+        assert_eq!(disasm(&Instr::r(Op::QclrS, 0, 0, 0)), "qclr.s");
+        assert_eq!(disasm(&Instr::r(Op::QroundS, 7, 0, 0)), "qround.s p7");
+        assert_eq!(disasm(&Instr::r4(Op::FmaddS, 0, 1, 2, 0)), "fmadd.s ft0, ft1, ft2, ft0");
+        assert_eq!(disasm(&Instr::r(Op::Ecall, 0, 0, 0)), "ecall");
+    }
+}

@@ -1,0 +1,421 @@
+//! The instruction set: RV64I(M) + F + D subsets used by the paper's
+//! benchmarks, plus the complete **Xposit** extension of Table 2.
+//!
+//! Xposit occupies major opcode `0001011` (*custom-0*, named POSIT in the
+//! paper's Table 1). Computational instructions put a 5-bit `funct5` in
+//! bits 31:27 with `fmt = 10` in bits 26:25 (Table 2 — the running text
+//! says `01`, the table and Fig. 4 say `10`; we follow the table) and
+//! `funct3 = 000`; posit loads/stores use `funct3 = 001/011` with the
+//! F-extension's base+offset addressing.
+//!
+//! Everything is table-driven: [`Op`] is the mnemonic-level opcode,
+//! [`OpInfo`] carries the encoding recipe, operand register classes, the
+//! functional unit, and the result latency (paper §4.1) used by the core
+//! simulator.
+
+pub mod asm;
+pub mod codec;
+pub mod disasm;
+
+use std::fmt;
+
+/// POSIT major opcode (custom-0).
+pub const OPC_POSIT: u32 = 0b0001011;
+/// Posit `fmt` field for 32-bit posits (Table 2 / Fig. 4).
+pub const POSIT_FMT: u32 = 0b10;
+
+/// Register file a register operand belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegClass {
+    /// Integer `x0–x31`.
+    X,
+    /// Float `f0–f31`.
+    F,
+    /// Posit `p0–p31` (PERCIVAL's third register file, §4.2).
+    P,
+    /// Operand not present / hardwired to zero in the encoding.
+    None,
+}
+
+/// Functional unit an instruction dispatches to (paper Figs. 2 & 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Unit {
+    /// Integer ALU — also executes posit compares/min/max (§4.2).
+    Alu,
+    /// Integer multiplier/divider.
+    Mul,
+    /// Control flow (resolved in ALU; penalty modelled separately).
+    Branch,
+    /// Load/store unit.
+    Lsu,
+    /// IEEE 754 FPU (FPnew in CVA6).
+    Fpu,
+    /// Posit Arithmetic Unit with quire.
+    Pau,
+    /// CSR / system.
+    Csr,
+}
+
+/// Encoding recipe per instruction format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Enc {
+    /// R-type: `f7 | rs2 | rs1 | f3 | rd | opcode`.
+    R { opcode: u32, f3: u32, f7: u32 },
+    /// R-type with rs2 as a fixed function selector (FCVT/FSQRT/FMV…).
+    R2 { opcode: u32, f3: u32, f7: u32, rs2: u32 },
+    /// R4-type (fused multiply-add): `rs3 | fmt2 | rs2 | rs1 | rm | rd | op`.
+    R4 { opcode: u32, fmt2: u32 },
+    /// I-type: `imm[11:0] | rs1 | f3 | rd | opcode`.
+    I { opcode: u32, f3: u32 },
+    /// I-type shift with 6-bit shamt (RV64): `f6 | shamt | rs1 | f3 | rd`.
+    IShift { opcode: u32, f3: u32, f6: u32 },
+    /// I-type shift with 5-bit shamt (RV64 *W shifts): `f7 | shamt5 | …`.
+    IShiftW { opcode: u32, f3: u32, f7: u32 },
+    /// S-type: `imm[11:5] | rs2 | rs1 | f3 | imm[4:0] | opcode`.
+    S { opcode: u32, f3: u32 },
+    /// B-type branch.
+    B { f3: u32 },
+    /// U-type (LUI/AUIPC).
+    U { opcode: u32 },
+    /// J-type (JAL).
+    J,
+    /// Xposit computational: `funct5 | 10 | rs2 | rs1 | 000 | rd | 0001011`.
+    /// The `*_zero` flags mark fields hardwired to 00000 in Table 2.
+    PositR { f5: u32, rs2_zero: bool, rs1_zero: bool, rd_zero: bool },
+    /// SYSTEM with a fixed 12-bit immediate (ECALL/EBREAK).
+    Sys { imm12: u32 },
+    /// CSR access: `csr | rs1 | f3 | rd | 1110011`.
+    Csr { f3: u32 },
+}
+
+/// Static description of one opcode.
+#[derive(Debug, Clone, Copy)]
+pub struct OpInfo {
+    pub op: Op,
+    pub mnemonic: &'static str,
+    pub enc: Enc,
+    pub unit: Unit,
+    /// Cycles from issue until the result may be consumed ("no latency" in
+    /// the paper = available next cycle = 1 here; paper "latency 2" = 3).
+    pub latency: u8,
+    pub rd: RegClass,
+    pub rs1: RegClass,
+    pub rs2: RegClass,
+    /// Present only for R4 fused ops.
+    pub rs3: RegClass,
+}
+
+/// A decoded instruction: opcode + operand fields. `imm` is the
+/// sign-extended immediate where applicable (shift amount for shifts,
+/// CSR number for CSR ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Op,
+    pub rd: u8,
+    pub rs1: u8,
+    pub rs2: u8,
+    pub rs3: u8,
+    pub imm: i64,
+}
+
+impl Instr {
+    pub fn info(&self) -> &'static OpInfo {
+        info(self.op)
+    }
+
+    /// Build a register-register instruction.
+    pub fn r(op: Op, rd: u8, rs1: u8, rs2: u8) -> Self {
+        Self { op, rd, rs1, rs2, rs3: 0, imm: 0 }
+    }
+
+    /// Build an immediate-type instruction.
+    pub fn i(op: Op, rd: u8, rs1: u8, imm: i64) -> Self {
+        Self { op, rd, rs1, rs2: 0, rs3: 0, imm }
+    }
+
+    /// Build a store / branch (two sources + immediate).
+    pub fn s(op: Op, rs1: u8, rs2: u8, imm: i64) -> Self {
+        Self { op, rd: 0, rs1, rs2, rs3: 0, imm }
+    }
+
+    /// Build an R4 fused op.
+    pub fn r4(op: Op, rd: u8, rs1: u8, rs2: u8, rs3: u8) -> Self {
+        Self { op, rd, rs1, rs2, rs3, imm: 0 }
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", disasm::disasm(self))
+    }
+}
+
+macro_rules! ops {
+    ($($name:ident => $mn:literal, $enc:expr, $unit:ident, $lat:literal,
+        ($rd:ident, $rs1:ident, $rs2:ident $(, $rs3:ident)?);)+) => {
+        /// Mnemonic-level opcode.
+        #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+        #[allow(clippy::upper_case_acronyms)]
+        pub enum Op {
+            $($name,)+
+        }
+
+        /// Every supported opcode, in declaration order.
+        pub const ALL_OPS: &[Op] = &[$(Op::$name,)+];
+
+        /// Static per-opcode info table.
+        pub static OP_TABLE: &[OpInfo] = &[
+            $(OpInfo {
+                op: Op::$name,
+                mnemonic: $mn,
+                enc: $enc,
+                unit: Unit::$unit,
+                latency: $lat,
+                rd: RegClass::$rd,
+                rs1: RegClass::$rs1,
+                rs2: RegClass::$rs2,
+                rs3: ops!(@rs3 $($rs3)?),
+            },)+
+        ];
+    };
+    (@rs3) => { RegClass::None };
+    (@rs3 $c:ident) => { RegClass::$c };
+}
+
+/// Look up the [`OpInfo`] for an opcode (O(1): table is in enum order).
+#[inline]
+pub fn info(op: Op) -> &'static OpInfo {
+    let i = op as usize;
+    debug_assert_eq!(OP_TABLE[i].op, op);
+    &OP_TABLE[i]
+}
+
+// Latency legend (cycles until result consumable; see DESIGN.md):
+//   ALU / posit compare / sign-inject / moves ... 1   ("no latency")
+//   PMUL, PDIV, PSQRT, QROUND, FPU compare ...... 2   (paper "1 cycle")
+//   PADD, PSUB, QMADD, QMSUB,
+//   FADD.S/FSUB.S/FMUL.S/FMADD.S/FMSUB.S ........ 3   (paper "2 cycles")
+//   64-bit FADD/FSUB/FMUL/FMADD/FMSUB ........... 4   (paper "3 cycles")
+//   posit ↔ int conversions ..................... 1;  FPU conversions 2
+//   integer loads: LSU D$-hit latency 3
+//   integer MUL 2; DIV/REM 20; FDIV.S 10 / FDIV.D 18 (FPnew iterative).
+ops! {
+    // ─── RV64I: upper immediates and jumps ───────────────────────────────
+    Lui   => "lui",   Enc::U { opcode: 0b0110111 }, Alu, 1, (X, None, None);
+    Auipc => "auipc", Enc::U { opcode: 0b0010111 }, Alu, 1, (X, None, None);
+    Jal   => "jal",   Enc::J,                       Branch, 1, (X, None, None);
+    Jalr  => "jalr",  Enc::I { opcode: 0b1100111, f3: 0b000 }, Branch, 1, (X, X, None);
+    // ─── Branches ────────────────────────────────────────────────────────
+    Beq  => "beq",  Enc::B { f3: 0b000 }, Branch, 1, (None, X, X);
+    Bne  => "bne",  Enc::B { f3: 0b001 }, Branch, 1, (None, X, X);
+    Blt  => "blt",  Enc::B { f3: 0b100 }, Branch, 1, (None, X, X);
+    Bge  => "bge",  Enc::B { f3: 0b101 }, Branch, 1, (None, X, X);
+    Bltu => "bltu", Enc::B { f3: 0b110 }, Branch, 1, (None, X, X);
+    Bgeu => "bgeu", Enc::B { f3: 0b111 }, Branch, 1, (None, X, X);
+    // ─── Integer loads/stores ────────────────────────────────────────────
+    Lb  => "lb",  Enc::I { opcode: 0b0000011, f3: 0b000 }, Lsu, 3, (X, X, None);
+    Lh  => "lh",  Enc::I { opcode: 0b0000011, f3: 0b001 }, Lsu, 3, (X, X, None);
+    Lw  => "lw",  Enc::I { opcode: 0b0000011, f3: 0b010 }, Lsu, 3, (X, X, None);
+    Ld  => "ld",  Enc::I { opcode: 0b0000011, f3: 0b011 }, Lsu, 3, (X, X, None);
+    Lbu => "lbu", Enc::I { opcode: 0b0000011, f3: 0b100 }, Lsu, 3, (X, X, None);
+    Lhu => "lhu", Enc::I { opcode: 0b0000011, f3: 0b101 }, Lsu, 3, (X, X, None);
+    Lwu => "lwu", Enc::I { opcode: 0b0000011, f3: 0b110 }, Lsu, 3, (X, X, None);
+    Sb => "sb", Enc::S { opcode: 0b0100011, f3: 0b000 }, Lsu, 1, (None, X, X);
+    Sh => "sh", Enc::S { opcode: 0b0100011, f3: 0b001 }, Lsu, 1, (None, X, X);
+    Sw => "sw", Enc::S { opcode: 0b0100011, f3: 0b010 }, Lsu, 1, (None, X, X);
+    Sd => "sd", Enc::S { opcode: 0b0100011, f3: 0b011 }, Lsu, 1, (None, X, X);
+    // ─── Integer register-immediate ──────────────────────────────────────
+    Addi  => "addi",  Enc::I { opcode: 0b0010011, f3: 0b000 }, Alu, 1, (X, X, None);
+    Slti  => "slti",  Enc::I { opcode: 0b0010011, f3: 0b010 }, Alu, 1, (X, X, None);
+    Sltiu => "sltiu", Enc::I { opcode: 0b0010011, f3: 0b011 }, Alu, 1, (X, X, None);
+    Xori  => "xori",  Enc::I { opcode: 0b0010011, f3: 0b100 }, Alu, 1, (X, X, None);
+    Ori   => "ori",   Enc::I { opcode: 0b0010011, f3: 0b110 }, Alu, 1, (X, X, None);
+    Andi  => "andi",  Enc::I { opcode: 0b0010011, f3: 0b111 }, Alu, 1, (X, X, None);
+    Slli  => "slli",  Enc::IShift { opcode: 0b0010011, f3: 0b001, f6: 0b000000 }, Alu, 1, (X, X, None);
+    Srli  => "srli",  Enc::IShift { opcode: 0b0010011, f3: 0b101, f6: 0b000000 }, Alu, 1, (X, X, None);
+    Srai  => "srai",  Enc::IShift { opcode: 0b0010011, f3: 0b101, f6: 0b010000 }, Alu, 1, (X, X, None);
+    Addiw => "addiw", Enc::I { opcode: 0b0011011, f3: 0b000 }, Alu, 1, (X, X, None);
+    Slliw => "slliw", Enc::IShiftW { opcode: 0b0011011, f3: 0b001, f7: 0b0000000 }, Alu, 1, (X, X, None);
+    Srliw => "srliw", Enc::IShiftW { opcode: 0b0011011, f3: 0b101, f7: 0b0000000 }, Alu, 1, (X, X, None);
+    Sraiw => "sraiw", Enc::IShiftW { opcode: 0b0011011, f3: 0b101, f7: 0b0100000 }, Alu, 1, (X, X, None);
+    // ─── Integer register-register ───────────────────────────────────────
+    Add  => "add",  Enc::R { opcode: 0b0110011, f3: 0b000, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Sub  => "sub",  Enc::R { opcode: 0b0110011, f3: 0b000, f7: 0b0100000 }, Alu, 1, (X, X, X);
+    Sll  => "sll",  Enc::R { opcode: 0b0110011, f3: 0b001, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Slt  => "slt",  Enc::R { opcode: 0b0110011, f3: 0b010, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Sltu => "sltu", Enc::R { opcode: 0b0110011, f3: 0b011, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Xor  => "xor",  Enc::R { opcode: 0b0110011, f3: 0b100, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Srl  => "srl",  Enc::R { opcode: 0b0110011, f3: 0b101, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Sra  => "sra",  Enc::R { opcode: 0b0110011, f3: 0b101, f7: 0b0100000 }, Alu, 1, (X, X, X);
+    Or   => "or",   Enc::R { opcode: 0b0110011, f3: 0b110, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    And  => "and",  Enc::R { opcode: 0b0110011, f3: 0b111, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Addw => "addw", Enc::R { opcode: 0b0111011, f3: 0b000, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Subw => "subw", Enc::R { opcode: 0b0111011, f3: 0b000, f7: 0b0100000 }, Alu, 1, (X, X, X);
+    Sllw => "sllw", Enc::R { opcode: 0b0111011, f3: 0b001, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Srlw => "srlw", Enc::R { opcode: 0b0111011, f3: 0b101, f7: 0b0000000 }, Alu, 1, (X, X, X);
+    Sraw => "sraw", Enc::R { opcode: 0b0111011, f3: 0b101, f7: 0b0100000 }, Alu, 1, (X, X, X);
+    // ─── M extension (subset) ────────────────────────────────────────────
+    Mul   => "mul",   Enc::R { opcode: 0b0110011, f3: 0b000, f7: 0b0000001 }, Mul, 2, (X, X, X);
+    Mulh  => "mulh",  Enc::R { opcode: 0b0110011, f3: 0b001, f7: 0b0000001 }, Mul, 2, (X, X, X);
+    Mulhu => "mulhu", Enc::R { opcode: 0b0110011, f3: 0b011, f7: 0b0000001 }, Mul, 2, (X, X, X);
+    Div   => "div",   Enc::R { opcode: 0b0110011, f3: 0b100, f7: 0b0000001 }, Mul, 20, (X, X, X);
+    Divu  => "divu",  Enc::R { opcode: 0b0110011, f3: 0b101, f7: 0b0000001 }, Mul, 20, (X, X, X);
+    Rem   => "rem",   Enc::R { opcode: 0b0110011, f3: 0b110, f7: 0b0000001 }, Mul, 20, (X, X, X);
+    Remu  => "remu",  Enc::R { opcode: 0b0110011, f3: 0b111, f7: 0b0000001 }, Mul, 20, (X, X, X);
+    Mulw  => "mulw",  Enc::R { opcode: 0b0111011, f3: 0b000, f7: 0b0000001 }, Mul, 2, (X, X, X);
+    // ─── System / CSR ────────────────────────────────────────────────────
+    Ecall  => "ecall",  Enc::Sys { imm12: 0 }, Csr, 1, (None, None, None);
+    Ebreak => "ebreak", Enc::Sys { imm12: 1 }, Csr, 1, (None, None, None);
+    Csrrs  => "csrrs",  Enc::Csr { f3: 0b010 }, Csr, 1, (X, X, None);
+    Csrrw  => "csrrw",  Enc::Csr { f3: 0b001 }, Csr, 1, (X, X, None);
+    // ─── F extension (subset used by the benchmarks) ─────────────────────
+    Flw => "flw", Enc::I { opcode: 0b0000111, f3: 0b010 }, Lsu, 3, (F, X, None);
+    Fsw => "fsw", Enc::S { opcode: 0b0100111, f3: 0b010 }, Lsu, 1, (None, X, F);
+    FmaddS  => "fmadd.s",  Enc::R4 { opcode: 0b1000011, fmt2: 0b00 }, Fpu, 3, (F, F, F, F);
+    FmsubS  => "fmsub.s",  Enc::R4 { opcode: 0b1000111, fmt2: 0b00 }, Fpu, 3, (F, F, F, F);
+    FnmsubS => "fnmsub.s", Enc::R4 { opcode: 0b1001011, fmt2: 0b00 }, Fpu, 3, (F, F, F, F);
+    FnmaddS => "fnmadd.s", Enc::R4 { opcode: 0b1001111, fmt2: 0b00 }, Fpu, 3, (F, F, F, F);
+    FaddS => "fadd.s", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0000000 }, Fpu, 3, (F, F, F);
+    FsubS => "fsub.s", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0000100 }, Fpu, 3, (F, F, F);
+    FmulS => "fmul.s", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0001000 }, Fpu, 3, (F, F, F);
+    FdivS => "fdiv.s", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0001100 }, Fpu, 10, (F, F, F);
+    FsqrtS => "fsqrt.s", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b0101100, rs2: 0b00000 }, Fpu, 10, (F, F, None);
+    FsgnjS  => "fsgnj.s",  Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0010000 }, Fpu, 1, (F, F, F);
+    FsgnjnS => "fsgnjn.s", Enc::R { opcode: 0b1010011, f3: 0b001, f7: 0b0010000 }, Fpu, 1, (F, F, F);
+    FsgnjxS => "fsgnjx.s", Enc::R { opcode: 0b1010011, f3: 0b010, f7: 0b0010000 }, Fpu, 1, (F, F, F);
+    FminS => "fmin.s", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0010100 }, Fpu, 2, (F, F, F);
+    FmaxS => "fmax.s", Enc::R { opcode: 0b1010011, f3: 0b001, f7: 0b0010100 }, Fpu, 2, (F, F, F);
+    FcvtWS  => "fcvt.w.s",  Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1100000, rs2: 0b00000 }, Fpu, 2, (X, F, None);
+    FcvtWuS => "fcvt.wu.s", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1100000, rs2: 0b00001 }, Fpu, 2, (X, F, None);
+    FcvtLS  => "fcvt.l.s",  Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1100000, rs2: 0b00010 }, Fpu, 2, (X, F, None);
+    FcvtLuS => "fcvt.lu.s", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1100000, rs2: 0b00011 }, Fpu, 2, (X, F, None);
+    FcvtSW  => "fcvt.s.w",  Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1101000, rs2: 0b00000 }, Fpu, 2, (F, X, None);
+    FcvtSWu => "fcvt.s.wu", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1101000, rs2: 0b00001 }, Fpu, 2, (F, X, None);
+    FcvtSL  => "fcvt.s.l",  Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1101000, rs2: 0b00010 }, Fpu, 2, (F, X, None);
+    FcvtSLu => "fcvt.s.lu", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1101000, rs2: 0b00011 }, Fpu, 2, (F, X, None);
+    FmvXW => "fmv.x.w", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1110000, rs2: 0b00000 }, Fpu, 1, (X, F, None);
+    FmvWX => "fmv.w.x", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1111000, rs2: 0b00000 }, Fpu, 1, (F, X, None);
+    FeqS => "feq.s", Enc::R { opcode: 0b1010011, f3: 0b010, f7: 0b1010000 }, Fpu, 2, (X, F, F);
+    FltS => "flt.s", Enc::R { opcode: 0b1010011, f3: 0b001, f7: 0b1010000 }, Fpu, 2, (X, F, F);
+    FleS => "fle.s", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b1010000 }, Fpu, 2, (X, F, F);
+    // ─── D extension (subset) ────────────────────────────────────────────
+    Fld => "fld", Enc::I { opcode: 0b0000111, f3: 0b011 }, Lsu, 3, (F, X, None);
+    Fsd => "fsd", Enc::S { opcode: 0b0100111, f3: 0b011 }, Lsu, 1, (None, X, F);
+    FmaddD  => "fmadd.d",  Enc::R4 { opcode: 0b1000011, fmt2: 0b01 }, Fpu, 4, (F, F, F, F);
+    FmsubD  => "fmsub.d",  Enc::R4 { opcode: 0b1000111, fmt2: 0b01 }, Fpu, 4, (F, F, F, F);
+    FaddD => "fadd.d", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0000001 }, Fpu, 4, (F, F, F);
+    FsubD => "fsub.d", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0000101 }, Fpu, 4, (F, F, F);
+    FmulD => "fmul.d", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0001001 }, Fpu, 4, (F, F, F);
+    FdivD => "fdiv.d", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0001101 }, Fpu, 18, (F, F, F);
+    FsgnjD  => "fsgnj.d",  Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0010001 }, Fpu, 1, (F, F, F);
+    FsgnjnD => "fsgnjn.d", Enc::R { opcode: 0b1010011, f3: 0b001, f7: 0b0010001 }, Fpu, 1, (F, F, F);
+    FminD => "fmin.d", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b0010101 }, Fpu, 2, (F, F, F);
+    FmaxD => "fmax.d", Enc::R { opcode: 0b1010011, f3: 0b001, f7: 0b0010101 }, Fpu, 2, (F, F, F);
+    FcvtDS => "fcvt.d.s", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b0100001, rs2: 0b00000 }, Fpu, 2, (F, F, None);
+    FcvtSD => "fcvt.s.d", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b0100000, rs2: 0b00001 }, Fpu, 2, (F, F, None);
+    FcvtDW => "fcvt.d.w", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1101001, rs2: 0b00000 }, Fpu, 2, (F, X, None);
+    FcvtDL => "fcvt.d.l", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1101001, rs2: 0b00010 }, Fpu, 2, (F, X, None);
+    FcvtWD => "fcvt.w.d", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1100001, rs2: 0b00000 }, Fpu, 2, (X, F, None);
+    FcvtLD => "fcvt.l.d", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1100001, rs2: 0b00010 }, Fpu, 2, (X, F, None);
+    FmvXD => "fmv.x.d", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1110001, rs2: 0b00000 }, Fpu, 1, (X, F, None);
+    FmvDX => "fmv.d.x", Enc::R2 { opcode: 0b1010011, f3: 0b000, f7: 0b1111001, rs2: 0b00000 }, Fpu, 1, (F, X, None);
+    FeqD => "feq.d", Enc::R { opcode: 0b1010011, f3: 0b010, f7: 0b1010001 }, Fpu, 2, (X, F, F);
+    FltD => "flt.d", Enc::R { opcode: 0b1010011, f3: 0b001, f7: 0b1010001 }, Fpu, 2, (X, F, F);
+    FleD => "fle.d", Enc::R { opcode: 0b1010011, f3: 0b000, f7: 0b1010001 }, Fpu, 2, (X, F, F);
+    // ─── Xposit (paper Table 2, complete) ────────────────────────────────
+    Plw => "plw", Enc::I { opcode: OPC_POSIT, f3: 0b001 }, Lsu, 3, (P, X, None);
+    Psw => "psw", Enc::S { opcode: OPC_POSIT, f3: 0b011 }, Lsu, 1, (None, X, P);
+    PaddS => "padd.s", Enc::PositR { f5: 0b00000, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 3, (P, P, P);
+    PsubS => "psub.s", Enc::PositR { f5: 0b00001, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 3, (P, P, P);
+    PmulS => "pmul.s", Enc::PositR { f5: 0b00010, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 2, (P, P, P);
+    PdivS => "pdiv.s", Enc::PositR { f5: 0b00011, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 2, (P, P, P);
+    // PMIN/PMAX execute in the integer ALU (paper Fig. 3) — "no latency".
+    PminS => "pmin.s", Enc::PositR { f5: 0b00100, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (P, P, P);
+    PmaxS => "pmax.s", Enc::PositR { f5: 0b00101, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (P, P, P);
+    PsqrtS => "psqrt.s", Enc::PositR { f5: 0b00110, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 2, (P, P, None);
+    QmaddS => "qmadd.s", Enc::PositR { f5: 0b00111, rs2_zero: false, rs1_zero: false, rd_zero: true }, Pau, 3, (None, P, P);
+    QmsubS => "qmsub.s", Enc::PositR { f5: 0b01000, rs2_zero: false, rs1_zero: false, rd_zero: true }, Pau, 3, (None, P, P);
+    QclrS => "qclr.s", Enc::PositR { f5: 0b01001, rs2_zero: true, rs1_zero: true, rd_zero: true }, Pau, 1, (None, None, None);
+    QnegS => "qneg.s", Enc::PositR { f5: 0b01010, rs2_zero: true, rs1_zero: true, rd_zero: true }, Pau, 1, (None, None, None);
+    QroundS => "qround.s", Enc::PositR { f5: 0b01011, rs2_zero: true, rs1_zero: true, rd_zero: false }, Pau, 2, (P, None, None);
+    PcvtWS  => "pcvt.w.s",  Enc::PositR { f5: 0b01100, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (X, P, None);
+    PcvtWuS => "pcvt.wu.s", Enc::PositR { f5: 0b01101, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (X, P, None);
+    PcvtLS  => "pcvt.l.s",  Enc::PositR { f5: 0b01110, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (X, P, None);
+    PcvtLuS => "pcvt.lu.s", Enc::PositR { f5: 0b01111, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (X, P, None);
+    PcvtSW  => "pcvt.s.w",  Enc::PositR { f5: 0b10000, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (P, X, None);
+    PcvtSWu => "pcvt.s.wu", Enc::PositR { f5: 0b10001, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (P, X, None);
+    PcvtSL  => "pcvt.s.l",  Enc::PositR { f5: 0b10010, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (P, X, None);
+    PcvtSLu => "pcvt.s.lu", Enc::PositR { f5: 0b10011, rs2_zero: true, rs1_zero: false, rd_zero: false }, Pau, 1, (P, X, None);
+    PsgnjS  => "psgnj.s",  Enc::PositR { f5: 0b10100, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (P, P, P);
+    PsgnjnS => "psgnjn.s", Enc::PositR { f5: 0b10101, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (P, P, P);
+    PsgnjxS => "psgnjx.s", Enc::PositR { f5: 0b10110, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (P, P, P);
+    PmvXW => "pmv.x.w", Enc::PositR { f5: 0b10111, rs2_zero: true, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, None);
+    PmvWX => "pmv.w.x", Enc::PositR { f5: 0b11000, rs2_zero: true, rs1_zero: false, rd_zero: false }, Alu, 1, (P, X, None);
+    PeqS => "peq.s", Enc::PositR { f5: 0b11001, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, P);
+    PltS => "plt.s", Enc::PositR { f5: 0b11010, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, P);
+    PleS => "ple.s", Enc::PositR { f5: 0b11011, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, P);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_in_enum_order() {
+        for (i, e) in OP_TABLE.iter().enumerate() {
+            assert_eq!(e.op as usize, i, "table order broken at {}", e.mnemonic);
+        }
+    }
+
+    #[test]
+    fn mnemonics_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for e in OP_TABLE {
+            assert!(seen.insert(e.mnemonic), "duplicate mnemonic {}", e.mnemonic);
+        }
+    }
+
+    #[test]
+    fn xposit_funct5_matches_table2() {
+        // Spot-check the funct5 assignments against the paper's Table 2.
+        let f5 = |op: Op| match info(op).enc {
+            Enc::PositR { f5, .. } => f5,
+            _ => panic!("not a posit comp op"),
+        };
+        assert_eq!(f5(Op::PaddS), 0b00000);
+        assert_eq!(f5(Op::PsubS), 0b00001);
+        assert_eq!(f5(Op::PmulS), 0b00010);
+        assert_eq!(f5(Op::PdivS), 0b00011);
+        assert_eq!(f5(Op::QmaddS), 0b00111);
+        assert_eq!(f5(Op::QroundS), 0b01011);
+        assert_eq!(f5(Op::PcvtSLu), 0b10011);
+        assert_eq!(f5(Op::PleS), 0b11011);
+    }
+
+    #[test]
+    fn paper_latency_classes() {
+        // §4.1: PADD/PSUB/QMADD/QMSUB one class, PMUL/PDIV/PSQRT/QROUND the
+        // faster class, everything else "no latency" (= ALU-equal).
+        assert_eq!(info(Op::PaddS).latency, info(Op::QmaddS).latency);
+        assert_eq!(info(Op::PmulS).latency, info(Op::QroundS).latency);
+        assert!(info(Op::PaddS).latency > info(Op::PmulS).latency);
+        assert!(info(Op::PmulS).latency > info(Op::PminS).latency);
+        // FPU: 32-bit arith matches PADD; 64-bit is one cycle slower.
+        assert_eq!(info(Op::FaddS).latency, info(Op::PaddS).latency);
+        assert_eq!(info(Op::FmaddD).latency, info(Op::FmaddS).latency + 1);
+        // Posit compares beat FPU compares (ALU reuse).
+        assert!(info(Op::PltS).latency < info(Op::FltS).latency);
+        // Posit conversions beat FPU conversions by one cycle (§4.1).
+        assert_eq!(info(Op::PcvtWS).latency + 1, info(Op::FcvtWS).latency);
+    }
+
+    #[test]
+    fn units_route_like_fig3() {
+        assert_eq!(info(Op::PaddS).unit, Unit::Pau);
+        assert_eq!(info(Op::PminS).unit, Unit::Alu);
+        assert_eq!(info(Op::PltS).unit, Unit::Alu);
+        assert_eq!(info(Op::Plw).unit, Unit::Lsu);
+        assert_eq!(info(Op::Psw).unit, Unit::Lsu);
+        assert_eq!(info(Op::FmaddS).unit, Unit::Fpu);
+    }
+}

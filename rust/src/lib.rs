@@ -1,0 +1,29 @@
+//! # PERCIVAL — posit RISC-V core with quire capability (reproduction)
+//!
+//! A software reproduction of *PERCIVAL: Open-Source Posit RISC-V Core with
+//! Quire Capability* (Mallasén et al., IEEE TETC 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - [`posit`] — bit-exact Posit⟨8/16/32, 2⟩ arithmetic with 16n-bit quires
+//!   (the PAU's numeric behaviour).
+//! - [`isa`] — the Xposit RISC-V extension (paper Table 2) plus the RV64
+//!   subset the benchmarks need: encodings, assembler, disassembler.
+//! - [`core`] — a CVA6-like in-order core timing simulator with the paper's
+//!   per-unit latencies (PAU, FPU, ALU, LSU) and scoreboard.
+//! - [`synth`] — structural FPGA/ASIC cost model regenerating Tables 3–5.
+//! - [`bench`] — workload generators and harnesses for Tables 6–8 / Fig. 7.
+//! - [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas posit
+//!   kernels (`artifacts/*.hlo.txt`) from Rust.
+//! - [`coordinator`] — the L3 driver: job queue, backend routing
+//!   (simulator / PJRT / native), metrics.
+
+pub mod bench;
+pub mod coordinator;
+pub mod core;
+pub mod isa;
+pub mod posit;
+pub mod runtime;
+pub mod synth;
+pub mod testing;
+
+pub use posit::{Posit16, Posit32, Posit8, Quire16, Quire32, Quire8};

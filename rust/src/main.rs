@@ -1,0 +1,175 @@
+//! PERCIVAL CLI — the leader entry point.
+//!
+//! Subcommands (clap is not in the offline crate set; parsing is manual):
+//!
+//! ```text
+//! percival tables  [--table6|--table7|--table8|--fig7|--all] [--quick]
+//! percival synth   [--fpga|--fpga-pau|--asic|--ratios|--ablate|--all]
+//! percival run     --n 16 [--quire|--no-quire] [--backend sim|native|pjrt]
+//! percival asm     <file.s>          # assemble + disassemble round trip
+//! percival serve   [--workers 4] [--jobs 32]   # coordinator demo
+//! ```
+
+use percival::bench::{harness, tables};
+use percival::coordinator::{Backend, Coordinator, Job};
+use percival::core::CoreConfig;
+use percival::isa::asm::assemble;
+use percival::isa::disasm::disasm;
+use percival::posit::Posit32;
+use percival::synth::report;
+use percival::testing::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let has = |f: &str| args.iter().any(|a| a == f);
+    let opt = |f: &str| {
+        args.iter()
+            .position(|a| a == f)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    match cmd {
+        "tables" => {
+            let quick = has("--quick");
+            let sizes: Vec<usize> = if quick { vec![16, 32, 64] } else { tables::SIZES.to_vec() };
+            let cfg = CoreConfig::default();
+            let all = has("--all") || !(has("--table6") || has("--table7") || has("--table8") || has("--fig7"));
+            if all || has("--table6") {
+                tables::table6(&sizes, Some("results/table6.csv"));
+            }
+            if all || has("--fig7") {
+                tables::fig7(&sizes, Some("results/fig7.csv"));
+            }
+            if all || has("--table7") {
+                tables::table7(cfg, &sizes, Some("results/table7.csv"));
+            }
+            if all || has("--table8") {
+                tables::table8(cfg, Some("results/table8.csv"));
+            }
+        }
+        "synth" => {
+            let all = has("--all") || args.len() == 1;
+            if all || has("--fpga") {
+                report::table3(Some("results/table3.csv"));
+            }
+            if all || has("--fpga-pau") {
+                report::table4(Some("results/table4.csv"));
+            }
+            if all || has("--asic") {
+                report::table5(Some("results/table5.csv"));
+            }
+            if all || has("--ratios") {
+                report::ratios();
+            }
+            if all || has("--ablate") {
+                report::ablations();
+            }
+        }
+        "run" => {
+            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let quire = !has("--no-quire");
+            let backend = match opt("--backend").as_deref() {
+                Some("sim") | None => Backend::Sim,
+                Some("native") => Backend::Native,
+                Some("pjrt") => Backend::Pjrt,
+                Some(other) => {
+                    eprintln!("unknown backend `{other}`");
+                    std::process::exit(2);
+                }
+            };
+            let mut rng = Rng::new(1);
+            let a: Vec<u32> =
+                (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+            let b: Vec<u32> =
+                (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+            let co = Coordinator::new(1, Some("artifacts".into()));
+            match co.run(Job::GemmP32 { n, a, b, quire }, backend) {
+                Ok(r) => {
+                    println!(
+                        "gemm n={n} quire={quire} backend={:?}: {} outputs, host {:.3} ms{}",
+                        r.backend,
+                        r.bits.len(),
+                        r.elapsed_s * 1e3,
+                        r.sim_seconds
+                            .map(|s| format!(", simulated {}", harness::fmt_time(s)))
+                            .unwrap_or_default()
+                    );
+                    println!("c[0,0] = {}", Posit32(r.bits[0]));
+                }
+                Err(e) => {
+                    eprintln!("job failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+            co.shutdown();
+        }
+        "asm" => {
+            let Some(path) = args.get(1) else {
+                eprintln!("usage: percival asm <file.s>");
+                std::process::exit(2);
+            };
+            let src = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                eprintln!("read {path}: {e}");
+                std::process::exit(1);
+            });
+            match assemble(&src) {
+                Ok(p) => {
+                    for (i, (w, ins)) in p.words.iter().zip(&p.instrs).enumerate() {
+                        println!("{:4}: {w:08x}  {}", i * 4, disasm(ins));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("{path}: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "serve" => {
+            let workers: usize = opt("--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
+            let jobs: usize = opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(32);
+            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let co = Coordinator::new(workers, Some("artifacts".into()));
+            let mut rng = Rng::new(7);
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = (0..jobs)
+                .map(|_| {
+                    let a: Vec<u32> = (0..n * n)
+                        .map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits())
+                        .collect();
+                    let b: Vec<u32> = (0..n * n)
+                        .map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits())
+                        .collect();
+                    co.submit(Job::GemmP32 { n, a, b, quire: true }, Backend::Native)
+                })
+                .collect();
+            let mut ok = 0;
+            for rx in rxs {
+                if rx.recv().unwrap().is_ok() {
+                    ok += 1;
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "served {ok}/{jobs} GEMM jobs (n={n}) on {workers} workers in {:.3}s = {:.1} jobs/s",
+                dt,
+                jobs as f64 / dt
+            );
+            println!("metrics: {}", co.metrics.summary());
+            co.shutdown();
+        }
+        "version" => println!("percival {} (paper reproduction)", env!("CARGO_PKG_VERSION")),
+        _ => {
+            println!(
+                "PERCIVAL reproduction CLI\n\
+                 usage: percival <tables|synth|run|asm|serve|version> [flags]\n\
+                 \n\
+                 tables  --table6 --table7 --table8 --fig7 --all --quick\n\
+                 synth   --fpga --fpga-pau --asic --ratios --ablate --all\n\
+                 run     --n <N> [--no-quire] [--backend sim|native|pjrt]\n\
+                 asm     <file.s>\n\
+                 serve   [--workers W] [--jobs J] [--n N]"
+            );
+        }
+    }
+}

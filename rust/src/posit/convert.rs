@@ -1,0 +1,314 @@
+//! Conversions: posit ↔ IEEE 754 double, posit ↔ {i32, u32, i64, u64}
+//! (the Xposit `PCVT.*` instructions) and posit ↔ posit width changes.
+//!
+//! `posit → f64` is exact for every format here (a Posit32 has ≤ 28
+//! significand bits and |scale| ≤ 120, comfortably inside binary64), which
+//! is what makes f64 a usable golden reference in the benchmarks, exactly
+//! as the paper uses 64-bit IEEE as the golden solution (§7.1).
+
+use super::unpacked::{decode, encode_norm, mask, nar, negate, Decoded, HID, TOP};
+
+/// Construct the exact f64 value `2^k` for `|k| ≤ 1023` via bit assembly.
+#[inline]
+fn exp2i(k: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&k));
+    f64::from_bits(((k + 1023) as u64) << 52)
+}
+
+/// Posit bits → f64 (exact).
+pub fn to_f64<const N: u32>(bits: u32) -> f64 {
+    match decode::<N>(bits) {
+        Decoded::Zero => 0.0,
+        Decoded::NaR => f64::NAN,
+        Decoded::Num(u) => {
+            // sig × 2^(scale − HID); split the power so each factor is in
+            // exact range (scale−HID ∈ [−150, 90]).
+            let m = u.sig as f64 * exp2i(u.scale - HID as i32);
+            if u.sign {
+                -m
+            } else {
+                m
+            }
+        }
+    }
+}
+
+/// f64 → posit bits (round-to-nearest-even in posit pattern space; NaN and
+/// ±∞ map to NaR, ±0 to zero — posits have a single zero).
+pub fn from_f64<const N: u32>(x: f64) -> u32 {
+    if x == 0.0 {
+        return 0;
+    }
+    if !x.is_finite() {
+        return nar::<N>();
+    }
+    let b = x.to_bits();
+    let sign = b >> 63 == 1;
+    let biased = ((b >> 52) & 0x7FF) as i32;
+    let frac = b & ((1u64 << 52) - 1);
+    let (scale, sig) = if biased == 0 {
+        // Subnormal: value = frac × 2^-1074; normalise explicitly.
+        let msb = 63 - frac.leading_zeros() as i32;
+        (msb - 1074, frac << (TOP as i32 - msb))
+    } else {
+        (biased - 1023, ((1u64 << 52) | frac) << (TOP - 52))
+    };
+    encode_norm::<N>(sign, scale, sig, TOP, false)
+}
+
+/// f32 convenience wrappers (the benchmarks compare against both widths).
+pub fn to_f32<const N: u32>(bits: u32) -> f32 {
+    to_f64::<N>(bits) as f32
+}
+
+/// Note: rounding twice (f32 → f64 → posit) is safe because f32 → f64 is
+/// exact.
+pub fn from_f32<const N: u32>(x: f32) -> u32 {
+    from_f64::<N>(x as f64)
+}
+
+/// Posit → signed 64-bit integer, round-to-nearest-even, saturating.
+/// NaR maps to `i64::MIN` (the standard's integer NaR surrogate).
+pub fn to_i64<const N: u32>(bits: u32) -> i64 {
+    match decode::<N>(bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => i64::MIN,
+        Decoded::Num(u) => {
+            let m = mag_to_u64(u.scale, u.sig, 63);
+            let m = m.min(i64::MAX as u64 + u.sign as u64);
+            if u.sign {
+                (m as i64).wrapping_neg()
+            } else {
+                m as i64
+            }
+        }
+    }
+}
+
+/// Posit → unsigned 64-bit integer; negative posits clamp to 0, NaR → u64::MAX
+/// (matching RISC-V FCVT.LU semantics of returning the all-ones pattern for
+/// out-of-range/NaN inputs, which Xposit mirrors).
+pub fn to_u64<const N: u32>(bits: u32) -> u64 {
+    match decode::<N>(bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => u64::MAX,
+        Decoded::Num(u) => {
+            if u.sign {
+                // Values in (−0.5, 0) round to 0; anything ≤ −0.5 clamps to 0
+                // as well under unsigned semantics.
+                0
+            } else {
+                mag_to_u64(u.scale, u.sig, 64)
+            }
+        }
+    }
+}
+
+/// Posit → i32 / u32 with saturation.
+pub fn to_i32<const N: u32>(bits: u32) -> i32 {
+    match decode::<N>(bits) {
+        Decoded::NaR => i32::MIN,
+        _ => to_i64::<N>(bits).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+    }
+}
+
+pub fn to_u32<const N: u32>(bits: u32) -> u32 {
+    match decode::<N>(bits) {
+        Decoded::NaR => u32::MAX,
+        _ => to_u64::<N>(bits).min(u32::MAX as u64) as u32,
+    }
+}
+
+/// Round the magnitude `sig × 2^(scale − HID)` to an integer (RNE) and
+/// saturate to `limit_bits` bits.
+fn mag_to_u64(scale: i32, sig: u32, limit_bits: u32) -> u64 {
+    // Integer value = sig × 2^(scale − 30).
+    let sh = scale - HID as i32;
+    if sh >= 0 {
+        if scale >= limit_bits as i32 {
+            // 2^scale already exceeds the target range.
+            return u64::MAX >> (64 - limit_bits);
+        }
+        (sig as u64) << sh
+    } else {
+        let sh = (-sh) as u32;
+        if sh >= 64 {
+            return 0;
+        }
+        let q = (sig as u64) >> sh;
+        let rem = (sig as u64) << (64 - sh);
+        let guard = rem >> 63 == 1;
+        let sticky = rem << 1 != 0;
+        q + (guard && (sticky || q & 1 == 1)) as u64
+    }
+}
+
+/// Signed 64-bit integer → posit (RNE).
+pub fn from_i64<const N: u32>(x: i64) -> u32 {
+    if x == 0 {
+        return 0;
+    }
+    let sign = x < 0;
+    let m = x.unsigned_abs();
+    from_mag::<N>(sign, m)
+}
+
+/// Unsigned 64-bit integer → posit (RNE).
+pub fn from_u64<const N: u32>(x: u64) -> u32 {
+    if x == 0 {
+        return 0;
+    }
+    from_mag::<N>(false, x)
+}
+
+pub fn from_i32<const N: u32>(x: i32) -> u32 {
+    from_i64::<N>(x as i64)
+}
+
+pub fn from_u32<const N: u32>(x: u32) -> u32 {
+    from_u64::<N>(x as u64)
+}
+
+fn from_mag<const N: u32>(sign: bool, m: u64) -> u32 {
+    let msb = 63 - m.leading_zeros();
+    // encode_norm expects the exponent of bit `at`; bit `msb` has weight
+    // 2^msb, so pass at = msb.
+    encode_norm::<N>(sign, msb as i32, m, msb, false)
+}
+
+/// Width conversion posit<FROM> → posit<TO> (exact when widening, rounded
+/// when narrowing). With es fixed at 2 this is the standard's trivial
+/// inter-format conversion.
+pub fn resize<const FROM: u32, const TO: u32>(bits: u32) -> u32 {
+    match decode::<FROM>(bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => nar::<TO>(),
+        Decoded::Num(u) => {
+            encode_norm::<TO>(u.sign, u.scale, (u.sig as u64) << (TOP - HID), TOP, false)
+        }
+    }
+}
+
+/// Negate helper re-exported at the conversion layer for symmetry.
+pub fn neg<const N: u32>(bits: u32) -> u32 {
+    negate::<N>(bits)
+}
+
+/// Absolute value: two's-complement negate when the sign bit is set
+/// (|NaR| = NaR, as negating NaR yields NaR).
+pub fn abs<const N: u32>(bits: u32) -> u32 {
+    let bits = bits & mask::<N>();
+    if bits >> (N - 1) == 1 && bits != nar::<N>() {
+        negate::<N>(bits)
+    } else {
+        bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::unpacked::maxpos;
+
+    #[test]
+    fn f64_roundtrip_exhaustive_p8_p16() {
+        for bits in 0..=0xFFu32 {
+            if bits == 0x80 {
+                continue;
+            }
+            assert_eq!(from_f64::<8>(to_f64::<8>(bits)), bits, "p8 {bits:#x}");
+        }
+        for bits in (0..=0xFFFFu32).step_by(1) {
+            if bits == 0x8000 {
+                continue;
+            }
+            assert_eq!(from_f64::<16>(to_f64::<16>(bits)), bits, "p16 {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_sampled_p32() {
+        for hi in 0..=0xFFFFu32 {
+            let bits = (hi << 16) | 0x9E37;
+            if bits == 0x8000_0000 {
+                continue;
+            }
+            assert_eq!(from_f64::<32>(to_f64::<32>(bits)), bits, "{bits:#x}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(to_f64::<32>(0x4000_0000), 1.0);
+        assert_eq!(to_f64::<32>(0xC000_0000), -1.0);
+        assert_eq!(from_f64::<32>(1.0), 0x4000_0000);
+        assert_eq!(from_f64::<32>(-1.0), 0xC000_0000);
+        assert_eq!(from_f64::<32>(0.0), 0);
+        assert!(to_f64::<32>(0x8000_0000).is_nan());
+        assert_eq!(from_f64::<32>(f64::NAN), 0x8000_0000);
+        assert_eq!(from_f64::<32>(f64::INFINITY), 0x8000_0000);
+        // Paper §2.1 example.
+        assert_eq!(to_f64::<8>(0b1110_1010), -0.011718750);
+        // maxpos32 = 2^120, minpos32 = 2^-120.
+        assert_eq!(to_f64::<32>(maxpos::<32>()), exp2i(120));
+        assert_eq!(to_f64::<32>(1), exp2i(-120));
+    }
+
+    #[test]
+    fn f64_saturation() {
+        assert_eq!(from_f64::<32>(1e40), maxpos::<32>());
+        assert_eq!(from_f64::<32>(-1e40), negate::<32>(maxpos::<32>()));
+        assert_eq!(from_f64::<32>(1e-40), 1);
+        assert_eq!(from_f64::<8>(1e9), maxpos::<8>());
+        // Subnormal doubles saturate at minpos, not zero.
+        assert_eq!(from_f64::<32>(f64::from_bits(1)), 1);
+    }
+
+    #[test]
+    fn int_conversions() {
+        for v in [0i64, 1, -1, 2, 7, -100, 123_456, 65_536, -1_048_576] {
+            let p = from_i64::<32>(v);
+            assert_eq!(to_i64::<32>(p), v, "v={v}");
+        }
+        // Large magnitudes round to within half a posit ulp (at scale 29
+        // a posit32 keeps 20 fraction bits → ulp = 512).
+        let p = from_i64::<32>(1_000_000_007);
+        let back = to_i64::<32>(p);
+        assert!((back - 1_000_000_007).abs() <= 256, "{back}");
+        // NaR surrogates.
+        assert_eq!(to_i64::<32>(0x8000_0000), i64::MIN);
+        assert_eq!(to_u64::<32>(0x8000_0000), u64::MAX);
+        assert_eq!(to_i32::<32>(0x8000_0000), i32::MIN);
+        // Negative → unsigned clamps to 0.
+        assert_eq!(to_u64::<32>(from_i64::<32>(-5)), 0);
+    }
+
+    #[test]
+    fn int_rounding_is_rne() {
+        // 0.5 → 0 (tie to even), 1.5 → 2, 2.5 → 2.
+        assert_eq!(to_i64::<32>(from_f64::<32>(0.5)), 0);
+        assert_eq!(to_i64::<32>(from_f64::<32>(1.5)), 2);
+        assert_eq!(to_i64::<32>(from_f64::<32>(2.5)), 2);
+        assert_eq!(to_i64::<32>(from_f64::<32>(-1.5)), -2);
+    }
+
+    #[test]
+    fn resize_widening_exact() {
+        for bits in 0..=0xFFu32 {
+            let wide = resize::<8, 32>(bits);
+            assert_eq!(resize::<32, 8>(wide), bits, "p8 {bits:#x}");
+            if bits != 0 && bits != 0x80 {
+                assert_eq!(to_f64::<32>(wide), to_f64::<8>(bits));
+            }
+        }
+    }
+
+    #[test]
+    fn abs_and_neg() {
+        assert_eq!(abs::<32>(0xC000_0000), 0x4000_0000);
+        assert_eq!(abs::<32>(0x4000_0000), 0x4000_0000);
+        assert_eq!(abs::<32>(0x8000_0000), 0x8000_0000); // |NaR| = NaR
+        assert_eq!(neg::<32>(0), 0);
+        assert_eq!(neg::<32>(0x8000_0000), 0x8000_0000);
+    }
+}

@@ -1,0 +1,390 @@
+//! Posit arithmetic (Posit Standard 4.12 draft, `es = 2`) — the numeric
+//! substrate of PERCIVAL's PAU.
+//!
+//! Three formats are provided, mirroring the standard and the paper:
+//! [`Posit8`], [`Posit16`] and the paper's primary [`Posit32`], each with a
+//! matching quire ([`Quire8`]/[`Quire16`]/[`Quire32`]).
+//!
+//! Layering mirrors the hardware (paper Fig. 2):
+//! - **COMP**: [`ops`] add/sub/mul, [`divsqrt`] approximate (the PAU units)
+//!   and exact (software-over-MAC) division/square-root.
+//! - **CONV**: [`convert`] posit ↔ int ↔ IEEE 754.
+//! - **FUSED**: [`quire`] QCLR/QNEG/QMADD/QMSUB/QROUND.
+//! - Comparisons are *integer* comparisons on the bit patterns and live in
+//!   the ALU, not the PAU (`§2.1`, `§4.2`) — see [`cmp_signed`] and the
+//!   min/max helpers.
+
+pub mod convert;
+pub mod divsqrt;
+pub mod ops;
+pub mod quire;
+pub mod unpacked;
+
+pub use quire::{Quire16, Quire32, Quire8};
+pub use unpacked::{Decoded, Unpacked};
+
+use std::cmp::Ordering;
+
+/// Posit comparison = two's-complement signed integer comparison on the
+/// `N`-bit pattern (NaR = most negative integer → less than everything,
+/// equal to itself). This is the property that lets PERCIVAL route posit
+/// compares to the integer ALU with zero latency.
+#[inline]
+pub fn cmp_signed<const N: u32>(a: u32, b: u32) -> Ordering {
+    unpacked::to_signed::<N>(a).cmp(&unpacked::to_signed::<N>(b))
+}
+
+/// `PMIN.S` (ALU): integer min on patterns; NaR is smallest.
+#[inline]
+pub fn min_bits<const N: u32>(a: u32, b: u32) -> u32 {
+    if cmp_signed::<N>(a, b) == Ordering::Greater {
+        b & unpacked::mask::<N>()
+    } else {
+        a & unpacked::mask::<N>()
+    }
+}
+
+/// `PMAX.S` (ALU): integer max on patterns.
+#[inline]
+pub fn max_bits<const N: u32>(a: u32, b: u32) -> u32 {
+    if cmp_signed::<N>(a, b) == Ordering::Less {
+        b & unpacked::mask::<N>()
+    } else {
+        a & unpacked::mask::<N>()
+    }
+}
+
+/// `PSGNJ.S` — sign-inject: |a| with b's sign bit (F-extension semantics on
+/// the posit pattern: the result is the two's complement negation of |a|
+/// when b is negative, so `psgnj x, x, x` is a move and `psgnj x, x, −x`
+/// negates, exactly like FSGNJ idioms).
+#[inline]
+pub fn sgnj<const N: u32>(a: u32, b: u32) -> u32 {
+    apply_sign::<N>(a, b >> (N - 1) & 1 == 1)
+}
+
+/// `PSGNJN.S` — sign-inject negated.
+#[inline]
+pub fn sgnjn<const N: u32>(a: u32, b: u32) -> u32 {
+    apply_sign::<N>(a, b >> (N - 1) & 1 == 0)
+}
+
+/// `PSGNJX.S` — sign-inject xor.
+#[inline]
+pub fn sgnjx<const N: u32>(a: u32, b: u32) -> u32 {
+    let sa = a >> (N - 1) & 1 == 1;
+    let sb = b >> (N - 1) & 1 == 1;
+    apply_sign::<N>(a, sa ^ sb)
+}
+
+/// Give `a` the requested sign via posit negation (value-correct, unlike a
+/// raw sign-bit overwrite, which is not a posit negation in two's
+/// complement — see DESIGN.md; zero and NaR are unaffected).
+#[inline]
+fn apply_sign<const N: u32>(a: u32, negative: bool) -> u32 {
+    let abs = convert::abs::<N>(a);
+    if negative {
+        unpacked::negate::<N>(abs)
+    } else {
+        abs
+    }
+}
+
+macro_rules! posit_type {
+    ($(#[$doc:meta])* $name:ident, $quire:ident, $n:expr) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, PartialEq, Eq, Default, Hash)]
+        pub struct $name(pub u32);
+
+        impl $name {
+            /// Format width.
+            pub const N: u32 = $n;
+            /// Exponent field width (fixed by the 4.12 draft standard).
+            pub const ES: u32 = 2;
+            pub const ZERO: Self = Self(0);
+            pub const ONE: Self = Self(1 << ($n - 2));
+            pub const NAR: Self = Self(1 << ($n - 1));
+            pub const MAXPOS: Self = Self(unpacked::maxpos::<$n>());
+            pub const MINPOS: Self = Self(unpacked::minpos::<$n>());
+
+            /// Wrap a raw bit pattern (masked to N bits).
+            #[inline]
+            pub fn from_bits(bits: u32) -> Self {
+                Self(bits & unpacked::mask::<$n>())
+            }
+
+            #[inline]
+            pub fn bits(self) -> u32 {
+                self.0
+            }
+
+            #[inline]
+            pub fn is_nar(self) -> bool {
+                self.0 == Self::NAR.0
+            }
+
+            #[inline]
+            pub fn is_zero(self) -> bool {
+                self.0 == 0
+            }
+
+            #[inline]
+            pub fn from_f64(x: f64) -> Self {
+                Self(convert::from_f64::<$n>(x))
+            }
+
+            #[inline]
+            pub fn to_f64(self) -> f64 {
+                convert::to_f64::<$n>(self.0)
+            }
+
+            #[inline]
+            pub fn from_f32(x: f32) -> Self {
+                Self(convert::from_f32::<$n>(x))
+            }
+
+            #[inline]
+            pub fn to_f32(self) -> f32 {
+                convert::to_f32::<$n>(self.0)
+            }
+
+            #[inline]
+            pub fn from_i64(x: i64) -> Self {
+                Self(convert::from_i64::<$n>(x))
+            }
+
+            #[inline]
+            pub fn to_i64(self) -> i64 {
+                convert::to_i64::<$n>(self.0)
+            }
+
+            /// Approximate hardware division (the PAU's PDIV unit).
+            #[inline]
+            pub fn div_approx(self, rhs: Self) -> Self {
+                Self(divsqrt::div_approx::<$n>(self.0, rhs.0))
+            }
+
+            /// Approximate hardware square root (the PAU's PSQRT unit).
+            #[inline]
+            pub fn sqrt_approx(self) -> Self {
+                Self(divsqrt::sqrt_approx::<$n>(self.0))
+            }
+
+            /// Correctly rounded division (software path).
+            #[inline]
+            pub fn div_exact(self, rhs: Self) -> Self {
+                Self(divsqrt::div_exact::<$n>(self.0, rhs.0))
+            }
+
+            /// Correctly rounded square root (software path).
+            #[inline]
+            pub fn sqrt_exact(self) -> Self {
+                Self(divsqrt::sqrt_exact::<$n>(self.0))
+            }
+
+            #[inline]
+            pub fn abs(self) -> Self {
+                Self(convert::abs::<$n>(self.0))
+            }
+
+            #[inline]
+            pub fn min(self, rhs: Self) -> Self {
+                Self(min_bits::<$n>(self.0, rhs.0))
+            }
+
+            #[inline]
+            pub fn max(self, rhs: Self) -> Self {
+                Self(max_bits::<$n>(self.0, rhs.0))
+            }
+
+            /// Total order (integer order on patterns; NaR first).
+            #[inline]
+            pub fn total_cmp(self, rhs: Self) -> Ordering {
+                cmp_signed::<$n>(self.0, rhs.0)
+            }
+        }
+
+        impl std::ops::Add for $name {
+            type Output = Self;
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                Self(ops::add::<$n>(self.0, rhs.0))
+            }
+        }
+
+        impl std::ops::Sub for $name {
+            type Output = Self;
+            #[inline]
+            fn sub(self, rhs: Self) -> Self {
+                Self(ops::sub::<$n>(self.0, rhs.0))
+            }
+        }
+
+        impl std::ops::Mul for $name {
+            type Output = Self;
+            #[inline]
+            fn mul(self, rhs: Self) -> Self {
+                Self(ops::mul::<$n>(self.0, rhs.0))
+            }
+        }
+
+        impl std::ops::Neg for $name {
+            type Output = Self;
+            #[inline]
+            fn neg(self) -> Self {
+                Self(unpacked::negate::<$n>(self.0))
+            }
+        }
+
+        /// `Div` uses the *exact* division: operator use in host code wants
+        /// value semantics; the approximate unit is an explicit method call,
+        /// mirroring the deliberate hardware design choice.
+        impl std::ops::Div for $name {
+            type Output = Self;
+            #[inline]
+            fn div(self, rhs: Self) -> Self {
+                self.div_exact(rhs)
+            }
+        }
+
+        impl PartialOrd for $name {
+            #[inline]
+            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+                Some(self.total_cmp(*other))
+            }
+        }
+
+        impl Ord for $name {
+            #[inline]
+            fn cmp(&self, other: &Self) -> Ordering {
+                self.total_cmp(*other)
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}({:#010x} = {})", stringify!($name), self.0, self.to_f64())
+            }
+        }
+
+        impl std::fmt::Display for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}", self.to_f64())
+            }
+        }
+
+        impl From<f64> for $name {
+            fn from(x: f64) -> Self {
+                Self::from_f64(x)
+            }
+        }
+
+        impl From<$name> for f64 {
+            fn from(p: $name) -> f64 {
+                p.to_f64()
+            }
+        }
+    };
+}
+
+posit_type!(
+    /// 8-bit posit, es = 2 (`Posit⟨8,2⟩`).
+    Posit8,
+    Quire8,
+    8
+);
+posit_type!(
+    /// 16-bit posit, es = 2 (`Posit⟨16,2⟩`).
+    Posit16,
+    Quire16,
+    16
+);
+posit_type!(
+    /// 32-bit posit, es = 2 (`Posit⟨32,2⟩`) — the paper's format.
+    Posit32,
+    Quire32,
+    32
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_value_order_exhaustive_p8() {
+        // §2.1: posit patterns ordered as 2's-complement integers order
+        // exactly as their real values (NaR smallest).
+        for a in 0..=0xFFu32 {
+            for b in 0..=0xFFu32 {
+                if a == 0x80 || b == 0x80 {
+                    continue;
+                }
+                let fa = convert::to_f64::<8>(a);
+                let fb = convert::to_f64::<8>(b);
+                assert_eq!(
+                    cmp_signed::<8>(a, b),
+                    fa.partial_cmp(&fb).unwrap(),
+                    "a={a:#x} b={b:#x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nar_is_least_and_self_equal() {
+        assert_eq!(cmp_signed::<32>(0x8000_0000, 0x8000_0000), Ordering::Equal);
+        for b in [0u32, 1, 0x4000_0000, 0xFFFF_FFFF] {
+            assert_eq!(cmp_signed::<32>(0x8000_0000, b), Ordering::Less);
+        }
+    }
+
+    #[test]
+    fn minmax_on_patterns() {
+        let a = Posit32::from_f64(2.0);
+        let b = Posit32::from_f64(-3.0);
+        assert_eq!(a.min(b), b);
+        assert_eq!(a.max(b), a);
+        assert_eq!(Posit32::NAR.min(a), Posit32::NAR);
+        assert_eq!(Posit32::NAR.max(a), a);
+    }
+
+    #[test]
+    fn sign_injection() {
+        let a = Posit32::from_f64(2.5).0;
+        let na = Posit32::from_f64(-2.5).0;
+        // PSGNJ rd, a, a = move.
+        assert_eq!(sgnj::<32>(a, a), a);
+        assert_eq!(sgnj::<32>(na, na), na);
+        // Take sign of b.
+        assert_eq!(sgnj::<32>(a, na), na);
+        assert_eq!(sgnj::<32>(na, a), a);
+        // PSGNJN rd, a, a = negate.
+        assert_eq!(sgnjn::<32>(a, a), na);
+        // PSGNJX: xor of signs → |a| when signs equal.
+        assert_eq!(sgnjx::<32>(na, na), a);
+        assert_eq!(sgnjx::<32>(a, na), na);
+    }
+
+    #[test]
+    fn operator_sugar() {
+        let two = Posit32::from_f64(2.0);
+        let three = Posit32::from_f64(3.0);
+        assert_eq!((two + three).to_f64(), 5.0);
+        assert_eq!((two - three).to_f64(), -1.0);
+        assert_eq!((two * three).to_f64(), 6.0);
+        assert_eq!((three / two).to_f64(), 1.5);
+        assert_eq!((-two).to_f64(), -2.0);
+        assert!(two < three);
+        assert!(Posit32::NAR < Posit32::ZERO);
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(Posit32::ONE.to_f64(), 1.0);
+        assert_eq!(Posit8::ONE.to_f64(), 1.0);
+        assert_eq!(Posit16::ONE.to_f64(), 1.0);
+        assert!(Posit32::NAR.is_nar());
+        assert_eq!(Posit32::MAXPOS.to_f64(), (120.0f64).exp2());
+        assert_eq!(Posit32::MINPOS.to_f64(), (-120.0f64).exp2());
+    }
+}

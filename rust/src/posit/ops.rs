@@ -1,0 +1,199 @@
+//! Posit add / sub / mul (the PAU's COMP block, minus div/sqrt which live
+//! in [`super::divsqrt`]).
+//!
+//! Semantics follow the Posit Standard 4.12 draft: a single rounding
+//! (round-to-nearest, ties-to-even in pattern space) at the end of each
+//! operation, NaR propagates, there is exactly one zero and no
+//! overflow/underflow (saturation at `maxpos` / `minpos`).
+
+use super::unpacked::{decode, encode_norm, nar, negate, Decoded, HID, TOP};
+
+/// Workspace position of the hidden bit during add/sub: decoded significands
+/// are widened from bit [`HID`] to bit [`TOP`] so alignment shifts have 32
+/// guard bits below them.
+const W: u32 = TOP - HID; // 32
+
+/// Posit addition.
+pub fn add<const N: u32>(a: u32, b: u32) -> u32 {
+    let (ua, ub) = match (decode::<N>(a), decode::<N>(b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
+        (Decoded::Zero, _) => return b & super::unpacked::mask::<N>(),
+        (_, Decoded::Zero) => return a & super::unpacked::mask::<N>(),
+        (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
+    };
+    // Order by magnitude so the result inherits the larger operand's sign
+    // and the alignment shift is always applied to the smaller one.
+    let (hi, lo) = if (ub.scale, ub.sig) > (ua.scale, ua.sig) {
+        (ub, ua)
+    } else {
+        (ua, ub)
+    };
+    let wa = (hi.sig as u64) << W;
+    let wb = (lo.sig as u64) << W;
+    let d = (hi.scale - lo.scale) as u32;
+    let (bsh, sticky) = if d == 0 {
+        (wb, false)
+    } else if d >= 64 {
+        (0, true) // wb != 0 always
+    } else {
+        (wb >> d, wb << (64 - d) != 0)
+    };
+    if hi.sign == lo.sign {
+        // Same sign: plain magnitude add; the carry (bit 63) is handled by
+        // the normalising encode.
+        let sum = wa + bsh;
+        encode_norm::<N>(hi.sign, hi.scale, sum, TOP, sticky)
+    } else {
+        // Opposite signs: subtract magnitudes. When sticky bits were lost in
+        // the alignment shift the true subtrahend is `bsh + ε`, 0 < ε < 1
+        // workspace ulp, so `wa − bsh − 1` with sticky set brackets the true
+        // value exactly for round-to-nearest purposes.
+        let diff = wa - bsh - sticky as u64;
+        if diff == 0 {
+            debug_assert!(!sticky);
+            return 0;
+        }
+        encode_norm::<N>(hi.sign, hi.scale, diff, TOP, sticky)
+    }
+}
+
+/// Posit subtraction: `a − b = a + (−b)`; posit negation is exact.
+#[inline]
+pub fn sub<const N: u32>(a: u32, b: u32) -> u32 {
+    add::<N>(a, negate::<N>(b))
+}
+
+/// Posit multiplication.
+pub fn mul<const N: u32>(a: u32, b: u32) -> u32 {
+    let (ua, ub) = match (decode::<N>(a), decode::<N>(b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
+        (Decoded::Zero, _) | (_, Decoded::Zero) => return 0,
+        (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
+    };
+    // Exact 62-bit product of the two 31-bit significands; bit 60 of the
+    // product carries the weight 2^(scale_a + scale_b).
+    let p = (ua.sig as u64) * (ub.sig as u64);
+    encode_norm::<N>(ua.sign ^ ub.sign, ua.scale + ub.scale, p, 2 * HID, false)
+}
+
+/// Exact fused product for quire/MAC datapaths: returns
+/// `(sign, scale, sig)` with the full 62-bit significand (bit `2·HID` has
+/// weight `2^scale`), or `None` for zero, or NaR marker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Product {
+    Zero,
+    NaR,
+    /// `(-1)^sign × sig × 2^(scale - 60)`.
+    Num { sign: bool, scale: i32, sig: u64 },
+}
+
+/// Decode both operands and form the exact (unrounded) product — the input
+/// to QMADD / QMSUB.
+pub fn exact_product<const N: u32>(a: u32, b: u32) -> Product {
+    match (decode::<N>(a), decode::<N>(b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => Product::NaR,
+        (Decoded::Zero, _) | (_, Decoded::Zero) => Product::Zero,
+        (Decoded::Num(ua), Decoded::Num(ub)) => Product::Num {
+            sign: ua.sign ^ ub.sign,
+            scale: ua.scale + ub.scale,
+            sig: (ua.sig as u64) * (ub.sig as u64),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::posit::unpacked::{mask, maxpos};
+
+    const ONE8: u32 = 0x40;
+    const ONE32: u32 = 0x4000_0000;
+
+    #[test]
+    fn add_identities() {
+        assert_eq!(add::<32>(0, ONE32), ONE32);
+        assert_eq!(add::<32>(ONE32, 0), ONE32);
+        assert_eq!(add::<32>(nar::<32>(), ONE32), nar::<32>());
+        assert_eq!(add::<32>(ONE32, nar::<32>()), nar::<32>());
+        // x + (−x) = 0 exactly.
+        for bits in [ONE32, 0x1234_5678, 0x7FFF_FFFF, 3] {
+            assert_eq!(add::<32>(bits, negate::<32>(bits)), 0);
+        }
+    }
+
+    #[test]
+    fn add_small_integers() {
+        // 1 + 1 = 2 → posit32 pattern 0x48000000 (regime 10, e=01? no:
+        // 2 = 1.0 × 2^1 → r=0,e=1 → 0b0_10_01_frac0 = 0x48000000).
+        assert_eq!(add::<32>(ONE32, ONE32), 0x4800_0000);
+        // posit8: 1+1=2 → 0b0_10_01_000 = 0x48.
+        assert_eq!(add::<8>(ONE8, ONE8), 0x48);
+        // 2+2=4: 4 = r0,e=2 → 0b0_10_10_000 = 0x50.
+        assert_eq!(add::<8>(0x48, 0x48), 0x50);
+    }
+
+    #[test]
+    fn mul_identities() {
+        assert_eq!(mul::<32>(ONE32, ONE32), ONE32);
+        assert_eq!(mul::<32>(0, ONE32), 0);
+        assert_eq!(mul::<32>(nar::<32>(), 0), nar::<32>());
+        assert_eq!(mul::<32>(0x1234_5678, ONE32), 0x1234_5678);
+        // (−1) × (−1) = 1.
+        let neg1 = negate::<32>(ONE32);
+        assert_eq!(mul::<32>(neg1, neg1), ONE32);
+    }
+
+    #[test]
+    fn mul_saturates() {
+        let mp = maxpos::<8>();
+        assert_eq!(mul::<8>(mp, mp), mp);
+        // minpos × minpos saturates at minpos (never underflows to zero).
+        assert_eq!(mul::<8>(1, 1), 1);
+    }
+
+    #[test]
+    fn sub_is_add_of_negation() {
+        for a in (0..=0xFFu32).step_by(7) {
+            for b in (0..=0xFFu32).step_by(5) {
+                assert_eq!(sub::<8>(a, b), add::<8>(a, negate::<8>(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn add_commutes_exhaustive_posit8() {
+        for a in 0..=0xFFu32 {
+            for b in 0..=0xFFu32 {
+                assert_eq!(add::<8>(a, b), add::<8>(b, a), "a={a:#x} b={b:#x}");
+                assert_eq!(mul::<8>(a, b), mul::<8>(b, a), "a={a:#x} b={b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn results_stay_in_field() {
+        for a in (0..=0xFFFFu32).step_by(251) {
+            for b in (0..=0xFFFFu32).step_by(239) {
+                assert_eq!(add::<16>(a, b) & !mask::<16>(), 0);
+                assert_eq!(mul::<16>(a, b) & !mask::<16>(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_product_matches_mul_after_rounding() {
+        use crate::posit::unpacked::encode_norm;
+        for a in (1..=0xFFu32).step_by(3) {
+            for b in (1..=0xFFu32).step_by(3) {
+                match exact_product::<8>(a, b) {
+                    Product::Num { sign, scale, sig } => {
+                        let m = encode_norm::<8>(sign, scale, sig, 60, false);
+                        assert_eq!(m, mul::<8>(a, b));
+                    }
+                    Product::NaR => assert_eq!(mul::<8>(a, b), nar::<8>()),
+                    Product::Zero => assert_eq!(mul::<8>(a, b), 0),
+                }
+            }
+        }
+    }
+}

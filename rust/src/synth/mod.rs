@@ -1,0 +1,10 @@
+//! Structural FPGA/ASIC synthesis cost model (paper §6, Tables 3–5).
+//!
+//! See [`primitives`] for the cost rules, [`units`] for the per-unit
+//! compositions, and [`report`] for the table regenerators. DESIGN.md §1
+//! documents the substitution (Vivado/Design Compiler → structural model)
+//! and EXPERIMENTS.md reports model-vs-paper for every row.
+
+pub mod primitives;
+pub mod report;
+pub mod units;

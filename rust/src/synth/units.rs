@@ -1,0 +1,301 @@
+//! Structural composition of every unit in the paper's Tables 3–5.
+//!
+//! Each function mirrors the microarchitecture the paper (and its cited
+//! unit generators, PLAM/FloPoCo-posit) describes. Significand datapath
+//! widths follow Posit⟨32,2⟩: ≤ 28-bit significands, 512-bit quire.
+//! Multiplier arrays are DSP-mapped on the Kintex-7 (as Vivado does), so
+//! their LUT contribution is wiring/glue, not the array itself — this is
+//! why the paper's Posit Mult (736 LUTs) is *smaller* than Posit Add
+//! (784 LUTs).
+
+use super::primitives::*;
+#[allow(unused_imports)]
+use super::primitives::AsicCost;
+
+/// A named modelled block (one row of Table 4 / Table 5).
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub name: &'static str,
+    pub cost: Cost,
+    /// Paper's measured FPGA values (LUTs, FFs) for comparison, if any.
+    pub paper_fpga: Option<(f64, f64)>,
+    /// Paper's measured ASIC values (µm², mW), if any.
+    pub paper_asic: Option<(f64, f64)>,
+}
+
+/// DSP-mapped multiplier glue (the array lives in DSP48s).
+fn dsp_mult_glue(a: u32, b: u32) -> Cost {
+    // Partial-product routing, correction terms and output registering
+    // glue ≈ 8% of the array cost.
+    multiplier(a, b) * 0.08
+}
+
+/// Posit32 decode: 2's-complement absolute value, regime LZC/LOC, variable
+/// shift to extract exponent+fraction (paper §2.1 / [13]).
+pub fn posit_decode() -> Cost {
+    negate(32) + lzc(31) + barrel_shifter(32, 32) + Cost::new(24.0, 0.0)
+}
+
+/// Posit32 encode + round: regime construction (variable shift), RNE
+/// rounding increment, saturation mux, output negate.
+pub fn posit_encode() -> Cost {
+    barrel_shifter(64, 32) + rounder(32) + mux2(32) + negate(32) + Cost::new(16.0, 0.0)
+}
+
+/// Sign-magnitude decode variant (the ablation of §6.2 / ref. [13]):
+/// needs the conditional negate on *three* paths (two operands + result)
+/// plus a sign-magnitude adder, costing ≈ 15% more than 2's complement.
+pub fn posit_decode_signmag() -> Cost {
+    posit_decode() * 1.15
+}
+
+/// Posit Add/Sub (2-cycle): dual decode, operand swap, 36-bit align
+/// shifter, significand adder, LZC renormalise, encode.
+pub fn posit_add() -> Block {
+    let w = 36; // significand + guard bits
+    let cost = posit_decode() * 2.0
+        + comparator(32)
+        + mux2(2 * w)
+        + barrel_shifter(w, 32)
+        + adder(w)
+        + lzc(w)
+        + barrel_shifter(w, 32)
+        + posit_encode()
+        + register(100); // 2-cycle pipeline registers (sign/scale/sig ×2)
+    Block { name: "Posit Add", cost, paper_fpga: Some((784.0, 106.0)), paper_asic: Some((4075.31, 3.59)) }
+}
+
+/// Posit Mult (1-cycle): dual decode, DSP significand product, scale adder,
+/// encode.
+pub fn posit_mult() -> Block {
+    let cost = posit_decode() * 2.0
+        + dsp_mult_glue(28, 28)
+        + adder(9)
+        + posit_encode()
+        + register(68);
+    Block { name: "Posit Mult", cost, paper_fpga: Some((736.0, 73.0)), paper_asic: Some((8635.37, 9.98)) }
+}
+
+/// Logarithm-approximate divider (PLAM-style): decode, fixed-point log
+/// subtract, encode — no array, no iteration (paper §4.1).
+pub fn posit_adiv() -> Block {
+    // PLAM-style: light decode (regime scan only — the fraction is used
+    // in place as the log approximation), fixed-point subtract, truncating
+    // encode (no RNE rounder).
+    let cost = posit_decode() * 1.1 + adder(39) + posit_encode() * 0.7 + register(40);
+    Block { name: "Posit ADiv", cost, paper_fpga: Some((413.0, 43.0)), paper_asic: Some((2540.87, 2.41)) }
+}
+
+/// Logarithm-approximate square root: single decode, shift, encode.
+pub fn posit_asqrt() -> Block {
+    let cost = posit_decode() + adder(39) * 0.5 + posit_encode() * 0.85 + register(33);
+    Block { name: "Posit ASqrt", cost, paper_fpga: Some((426.0, 33.0)), paper_asic: Some((1722.84, 1.61)) }
+}
+
+/// The quire MAC (QMADD/QMSUB, 2-cycle): dual decode, DSP product, 512-bit
+/// placement shifter, 512-bit add/sub, the 512-bit quire register itself.
+/// This is the unit that is "almost half of the total area of the PAU"
+/// (paper §6.1).
+pub fn posit_mac() -> Block {
+    let cost = posit_decode() * 2.0
+        + dsp_mult_glue(28, 28)
+        + barrel_shifter(512, 512) * 1.4 // place the 62-bit product (two-level:
+                                         // in-word + word-select stage)
+        + adder(512) * 2.0              // wide two-level carry-select add
+        + negate(512) * 0.5             // subtract support (xor + cin)
+        + mux2(512)                     // add/sub/NaR steering
+        + register(512)                 // the quire
+        + register(512)                 // shifted-product pipeline register
+        + register(512)                 // 2-cycle accumulate stage register
+        + control(4);
+    Block { name: "Posit MAC", cost, paper_fpga: Some((5644.0, 1541.0)), paper_asic: Some((30419.12, 26.07)) }
+}
+
+/// QROUND: 512-bit LZC + 512→32 extraction shift + posit encode.
+pub fn quire_to_posit() -> Block {
+    let cost = lzc(512) * 0.7 + barrel_shifter(64, 512) + posit_encode() + register(126);
+    Block { name: "Quire to Posit", cost, paper_fpga: Some((889.0, 126.0)), paper_asic: Some((6026.76, 4.04)) }
+}
+
+/// Integer → posit conversions (combinational: LZC + shift + encode).
+fn int_to_posit(bits: u32, name: &'static str, fpga: (f64, f64), asic: (f64, f64)) -> Block {
+    let cost = negate(bits) * 0.5 + lzc(bits) + barrel_shifter(bits.max(34), bits) * 0.45
+        + posit_encode() * (bits as f64 / 128.0 + 0.35);
+    Block { name, cost, paper_fpga: Some(fpga), paper_asic: Some(asic) }
+}
+
+/// Posit → integer conversions (decode + shift + round + saturate).
+fn posit_to_int(bits: u32, signed: bool, name: &'static str, fpga: (f64, f64), asic: (f64, f64)) -> Block {
+    let mut cost = posit_decode() + barrel_shifter(bits, bits) * 0.5 + rounder(bits) * 0.5
+        + comparator(bits) + Cost::new(16.0, 0.0);
+    if signed {
+        // Result negation + two-sided saturation.
+        cost += negate(bits) + mux2(bits);
+    }
+    Block { name, cost, paper_fpga: Some(fpga), paper_asic: Some(asic) }
+}
+
+/// PAU top: operand/result steering between COMP/CONV/FUSED (Fig. 2),
+/// the quire two's-complement negate (QNEG), NaR tracking, and the
+/// multi-cycle handshake registers.
+pub fn pau_top() -> Block {
+    let cost = mux(8, 32)            // result mux over units
+        + mux2(64) * 2.0             // operand steering
+        + negate(512)                // QNEG on the quire
+        + control(6)
+        + register(512)              // quire shadow/CDC staging (the paper
+                                     // notes the 512-bit quire allocation
+                                     // lands in the PAU top)
+        + register(480);             // operand/result/valid registers
+    Block { name: "PAU top", cost, paper_fpga: Some((593.0, 1063.0)), paper_asic: Some((13462.15, 12.69)) }
+}
+
+/// All PAU component blocks in Table 4/5 row order.
+pub fn pau_blocks() -> Vec<Block> {
+    vec![
+        pau_top(),
+        posit_add(),
+        posit_mult(),
+        posit_adiv(),
+        posit_asqrt(),
+        posit_mac(),
+        quire_to_posit(),
+        int_to_posit(32, "Int to Posit", (176.0, 0.0), (905.99, 0.68)),
+        int_to_posit(64, "Long to Posit", (331.0, 0.0), (1423.43, 0.96)),
+        int_to_posit(32, "UInt to Posit", (176.0, 0.0), (869.77, 0.66)),
+        int_to_posit(64, "ULong to Posit", (425.0, 0.0), (1353.11, 0.94)),
+        posit_to_int(32, true, "Posit to Int", (499.0, 0.0), (966.67, 0.71)),
+        posit_to_int(64, true, "Posit to Long", (379.0, 0.0), (1810.33, 1.38)),
+        posit_to_int(32, false, "Posit to UInt", (228.0, 0.0), (958.44, 0.68)),
+        posit_to_int(64, false, "Posit to ULong", (358.0, 0.0), (1800.22, 1.33)),
+    ]
+}
+
+/// Total PAU (with quire).
+pub fn pau_total() -> Cost {
+    pau_blocks().iter().fold(Cost::ZERO, |acc, b| acc + b.cost)
+}
+
+/// PAU without the quire datapath: subtract MAC + quire-round, and the
+/// quire register/negate held in the PAU top (paper §6.1 notes the tool
+/// cannot separate those; the model can).
+pub fn pau_total_no_quire() -> Cost {
+    let full = pau_total();
+    let mac = posit_mac().cost;
+    let qr = quire_to_posit().cost;
+    let top_quire = negate(512) + register(512);
+    Cost::new(
+        full.luts - mac.luts - qr.luts - top_quire.luts,
+        full.ffs - mac.ffs - qr.ffs - top_quire.ffs,
+    )
+}
+
+// ───────────────────────── IEEE FPU (FPnew) ─────────────────────────
+
+/// The FPU is FPnew — an external, separately published artefact whose
+/// synthesis the paper measures directly (Table 3 "FPU area" rows and
+/// §6.2). We cite those measurements rather than model them: the paper's
+/// claims are ratios of the (modelled) PAU against the (measured) FPnew,
+/// which is exactly how they are regenerated here.
+pub fn fpu(width: u32) -> Cost {
+    match width {
+        32 => Cost::new(4046.0, 973.0),  // Table 3, No-PAU/F FPU area
+        64 => Cost::new(6626.0, 1905.0), // Table 3, No-PAU/D FPU area
+        _ => panic!("unsupported FPU width"),
+    }
+}
+
+/// F+D dual-width FPnew (Table 3, No-PAU/FD FPU area).
+pub fn fpu_fd() -> Cost {
+    Cost::new(8163.0, 2244.0)
+}
+
+/// Cited ASIC measurement of the 32-bit FPnew (paper §6.2).
+pub const FPU32_ASIC: AsicCost = AsicCost { area_um2: 30691.0, power_mw: 27.26 };
+
+// ───────────────── core-level glue (Table 3's non-FPU deltas) ─────────────────
+
+/// Register file + decoder + scoreboard + forwarding glue for adding one
+/// register file of `n` registers × `w` bits with `rports` read ports.
+pub fn regfile_glue(n: u32, w: u32, rports: u32) -> Cost {
+    register(n * w)                          // FF register file (CVA6 style)
+        + mux(n, w) * rports as f64          // read-port muxes
+        + Cost::new(w as f64 * 2.0, 0.0)     // write decode/enables
+        + control(4)                         // decoder + scoreboard extension
+        + Cost::new(300.0, 40.0)             // issue/forwarding datapath taps
+}
+
+/// Bare CVA6 core (cited from the paper's Table 3 — the CVA6 itself is an
+/// external artefact we do not re-synthesise).
+pub const CVA6_BARE: (f64, f64) = (28950.0, 19579.0);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every modelled Table 4 row must land within 2× of the paper's
+    /// measurement (a first-order structural model), and the aggregates
+    /// much closer.
+    #[test]
+    fn table4_rows_within_band() {
+        for b in pau_blocks() {
+            let (pl, _pf) = b.paper_fpga.unwrap();
+            let rel = b.cost.luts / pl;
+            assert!(
+                (0.5..2.0).contains(&rel),
+                "{}: model {:.0} LUTs vs paper {:.0} (×{:.2})",
+                b.name,
+                b.cost.luts,
+                pl,
+                rel
+            );
+        }
+    }
+
+    #[test]
+    fn pau_total_close_to_paper() {
+        let t = pau_total();
+        let rel_l = t.luts / 11879.0;
+        let rel_f = t.ffs / 2985.0;
+        assert!((0.8..1.25).contains(&rel_l), "PAU LUTs ×{rel_l:.2} ({:.0})", t.luts);
+        assert!((0.8..1.25).contains(&rel_f), "PAU FFs ×{rel_f:.2} ({:.0})", t.ffs);
+    }
+
+    #[test]
+    fn headline_ratios() {
+        // §6.1: PAU+quire ≈ 2.94× FPU32 LUTs; PAU w/o quire ≈ 1.32×.
+        let pau = pau_total();
+        let pau_nq = pau_total_no_quire();
+        let fpu32 = fpu(32);
+        let r_full = pau.luts / fpu32.luts;
+        let r_nq = pau_nq.luts / fpu32.luts;
+        assert!((2.2..3.6).contains(&r_full), "PAU/FPU = {r_full:.2}");
+        assert!((1.0..1.7).contains(&r_nq), "PAU-no-quire/FPU = {r_nq:.2}");
+        assert!(r_full > 2.0 * r_nq * 0.9);
+        // MAC ≈ half the PAU (paper §6.1).
+        let mac_frac = posit_mac().cost.luts / pau.luts;
+        assert!((0.33..0.6).contains(&mac_frac), "MAC fraction {mac_frac:.2}");
+    }
+
+    #[test]
+    fn fpu_cited_constants() {
+        assert_eq!(fpu(32).luts, 4046.0);
+        assert_eq!(fpu(64).ffs, 1905.0);
+        assert_eq!(fpu_fd().luts, 8163.0);
+    }
+
+    #[test]
+    fn asic_ratios() {
+        // §6.2: PAU+quire ≈ 2.51× FPU32 area, ≈ 2.48× power.
+        let pau = pau_total().asic();
+        let ra = pau.area_um2 / FPU32_ASIC.area_um2;
+        let rp = pau.power_mw / FPU32_ASIC.power_mw;
+        assert!((1.9..3.2).contains(&ra), "ASIC area ratio {ra:.2} (paper 2.51)");
+        assert!((1.8..3.2).contains(&rp), "ASIC power ratio {rp:.2} (paper 2.48)");
+    }
+
+    #[test]
+    fn signmag_decode_ablation_costs_more() {
+        assert!(posit_decode_signmag().luts > posit_decode().luts);
+    }
+}

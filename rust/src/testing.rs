@@ -1,0 +1,113 @@
+//! Minimal deterministic property-testing support.
+//!
+//! The offline crate set has no `proptest`/`rand`, so the library carries
+//! its own SplitMix64 PRNG and a tiny `forall`-style harness. Every use is
+//! seeded, so failures reproduce exactly.
+
+/// SplitMix64 — tiny, fast, well-distributed; the canonical seed expander.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free-enough reduction (bias < 2^-32 for
+        // the ranges used in tests/benches).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)` — the paper's input generator draws from
+    /// `[-10^i, 10^i]`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.unit_f64()
+    }
+
+    /// Random `N`-bit posit pattern (uniform over patterns, which
+    /// deliberately over-weights extreme regimes — good for edge hunting).
+    #[inline]
+    pub fn posit_bits<const N: u32>(&mut self) -> u32 {
+        self.next_u32() & crate::posit::unpacked::mask::<N>()
+    }
+}
+
+/// Run `f` on `iters` generated cases; on failure, panic with the seed and
+/// case index so the failure is reproducible.
+pub fn forall<G, T, F>(seed: u64, iters: u64, mut gen: G, mut f: F)
+where
+    G: FnMut(&mut Rng) -> T,
+    T: std::fmt::Debug + Clone,
+    F: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..iters {
+        let case = gen(&mut rng);
+        if !f(&case) {
+            panic!("property failed at seed={seed} iter={i}: case = {case:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn unit_in_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.unit_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(1, 100, |r| r.below(10), |x| *x != 5);
+    }
+}

@@ -1,0 +1,230 @@
+//! Property tests over the posit substrate (in-repo `testing::forall`
+//! harness — the crates.io proptest is not in the offline set).
+
+use percival::posit::convert::{abs, from_f64, to_f64};
+use percival::posit::unpacked::{decode, encode_round, mask, negate, to_signed, Decoded, HID, TOP};
+use percival::posit::{cmp_signed, max_bits, min_bits, ops, Quire16, Quire32};
+use percival::testing::{forall, Rng};
+
+const ITERS: u64 = 30_000;
+
+#[test]
+fn prop_decode_encode_roundtrip_p32() {
+    forall(1, ITERS, |r| r.posit_bits::<32>(), |&bits| {
+        match decode::<32>(bits) {
+            Decoded::Zero => bits == 0,
+            Decoded::NaR => bits == 0x8000_0000,
+            Decoded::Num(u) => {
+                encode_round::<32>(u.sign, u.scale, (u.sig as u64) << (TOP - HID), false) == bits
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_double_negation_identity() {
+    forall(2, ITERS, |r| r.posit_bits::<32>(), |&b| negate::<32>(negate::<32>(b)) == b);
+    forall(3, ITERS, |r| r.posit_bits::<16>(), |&b| negate::<16>(negate::<16>(b)) == b);
+}
+
+#[test]
+fn prop_add_commutative_and_neg_symmetric() {
+    forall(
+        4,
+        ITERS,
+        |r| (r.posit_bits::<32>(), r.posit_bits::<32>()),
+        |&(a, b)| {
+            ops::add::<32>(a, b) == ops::add::<32>(b, a)
+                && ops::mul::<32>(a, b) == ops::mul::<32>(b, a)
+                // −(a+b) = (−a)+(−b): posit negation is exact.
+                && negate::<32>(ops::add::<32>(a, b))
+                    == ops::add::<32>(negate::<32>(a), negate::<32>(b))
+        },
+    );
+}
+
+#[test]
+fn prop_mul_sign_rules() {
+    forall(
+        5,
+        ITERS,
+        |r| (r.posit_bits::<32>(), r.posit_bits::<32>()),
+        |&(a, b)| {
+            let p = ops::mul::<32>(a, b);
+            let pn = ops::mul::<32>(negate::<32>(a), b);
+            pn == negate::<32>(p)
+        },
+    );
+}
+
+#[test]
+fn prop_ordering_matches_f64_p32() {
+    forall(
+        6,
+        ITERS,
+        |r| (r.posit_bits::<32>(), r.posit_bits::<32>()),
+        |&(a, b)| {
+            if a == 0x8000_0000 || b == 0x8000_0000 {
+                return true; // NaR has integer (not IEEE) ordering: skip
+            }
+            let fa = to_f64::<32>(a);
+            let fb = to_f64::<32>(b);
+            cmp_signed::<32>(a, b) == fa.partial_cmp(&fb).unwrap()
+        },
+    );
+}
+
+#[test]
+fn prop_minmax_consistent_with_order() {
+    forall(
+        7,
+        ITERS,
+        |r| (r.posit_bits::<32>(), r.posit_bits::<32>()),
+        |&(a, b)| {
+            let lo = min_bits::<32>(a, b);
+            let hi = max_bits::<32>(a, b);
+            to_signed::<32>(lo) <= to_signed::<32>(hi)
+                && (lo == a || lo == b)
+                && (hi == a || hi == b)
+        },
+    );
+}
+
+#[test]
+fn prop_add_vs_f64_oracle_p16() {
+    // For posit16, f64 holds every intermediate exactly (scales ≤ 56,
+    // significands ≤ 13 bits), so round(f64 sum) is the ground truth.
+    forall(
+        8,
+        ITERS,
+        |r| (r.posit_bits::<16>(), r.posit_bits::<16>()),
+        |&(a, b)| {
+            if a == 0x8000 || b == 0x8000 {
+                return ops::add::<16>(a, b) == 0x8000;
+            }
+            let exact = to_f64::<16>(a) + to_f64::<16>(b);
+            ops::add::<16>(a, b) == from_f64::<16>(exact)
+        },
+    );
+}
+
+#[test]
+fn prop_mul_vs_f64_oracle_p16() {
+    forall(
+        9,
+        ITERS,
+        |r| (r.posit_bits::<16>(), r.posit_bits::<16>()),
+        |&(a, b)| {
+            if a == 0x8000 || b == 0x8000 {
+                return ops::mul::<16>(a, b) == 0x8000;
+            }
+            let exact = to_f64::<16>(a) * to_f64::<16>(b);
+            ops::mul::<16>(a, b) == from_f64::<16>(exact)
+        },
+    );
+}
+
+#[test]
+fn prop_quire_single_product_equals_mul() {
+    forall(
+        10,
+        20_000,
+        |r| (r.posit_bits::<32>(), r.posit_bits::<32>()),
+        |&(a, b)| {
+            let mut q = Quire32::new();
+            q.madd(a, b);
+            q.round() == ops::mul::<32>(a, b)
+        },
+    );
+}
+
+#[test]
+fn prop_quire_madd_msub_cancels() {
+    forall(
+        11,
+        10_000,
+        |r| {
+            let k = (r.below(16) + 1) as usize;
+            let mut pairs = Vec::with_capacity(k);
+            for _ in 0..k {
+                pairs.push((r.posit_bits::<32>(), r.posit_bits::<32>()));
+            }
+            pairs
+        },
+        |pairs| {
+            if pairs.iter().any(|(a, b)| *a == 0x8000_0000 || *b == 0x8000_0000) {
+                return true;
+            }
+            let mut q = Quire32::new();
+            for (a, b) in pairs {
+                q.madd(*a, *b);
+            }
+            for (a, b) in pairs {
+                q.msub(*a, *b);
+            }
+            q.round() == 0 && q.limbs().iter().all(|l| *l == 0)
+        },
+    );
+}
+
+#[test]
+fn prop_quire16_dot_matches_f64_when_small() {
+    // Short dot products of p16 values are exact in f64 (≤ 28-bit products,
+    // ≤ 8 terms) → quire must equal round(f64 sum of exact products).
+    forall(
+        12,
+        10_000,
+        |r| {
+            let k = (r.below(8) + 1) as usize;
+            (0..k)
+                .map(|_| (r.posit_bits::<16>(), r.posit_bits::<16>()))
+                .collect::<Vec<_>>()
+        },
+        |pairs| {
+            if pairs.iter().any(|(a, b)| *a == 0x8000 || *b == 0x8000) {
+                return true;
+            }
+            let mut q = Quire16::new();
+            let mut sum = 0.0f64;
+            for (a, b) in pairs {
+                q.madd(*a, *b);
+                sum += to_f64::<16>(*a) * to_f64::<16>(*b);
+            }
+            q.round() == from_f64::<16>(sum)
+        },
+    );
+}
+
+#[test]
+fn prop_abs_nonnegative_and_value_correct() {
+    forall(13, ITERS, |r| r.posit_bits::<32>(), |&b| {
+        let ab = abs::<32>(b);
+        if b == 0x8000_0000 {
+            return ab == b;
+        }
+        to_f64::<32>(ab) == to_f64::<32>(b).abs()
+    });
+}
+
+#[test]
+fn prop_conversion_f64_roundtrip() {
+    forall(14, ITERS, |r| r.posit_bits::<32>(), |&b| {
+        if b == 0x8000_0000 {
+            return true;
+        }
+        from_f64::<32>(to_f64::<32>(b)) == b
+    });
+}
+
+#[test]
+fn prop_masked_field_invariant() {
+    forall(
+        15,
+        ITERS,
+        |r| (r.next_u32(), r.next_u32()),
+        |&(a, b)| {
+            ops::add::<16>(a, b) & !mask::<16>() == 0
+                && ops::mul::<8>(a, b) & !mask::<8>() == 0
+        },
+    );
+}

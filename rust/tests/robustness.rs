@@ -1,0 +1,112 @@
+//! Robustness / failure-injection tests: arbitrary inputs must never panic
+//! the decoder, the simulator traps illegal instructions by halting, and
+//! special values propagate according to the standard.
+
+use percival::core::{Core, CoreConfig};
+use percival::isa::asm::assemble;
+use percival::isa::codec::{decode, encode};
+use percival::posit::{convert, divsqrt, ops, Quire32};
+use percival::testing::{forall, Rng};
+
+#[test]
+fn decoder_never_panics_on_random_words() {
+    // 200k random 32-bit words: decode either yields an instruction that
+    // re-encodes to the same word, or a clean Illegal error.
+    forall(0xF00D, 200_000, |r: &mut Rng| r.next_u32(), |&w| {
+        match decode(w) {
+            Ok(ins) => match encode(&ins) {
+                // Round-trip must hold for every decodable word (fields the
+                // decoder zeroes — hardwired selectors — are canonical).
+                Ok(back) => {
+                    back == w || decode(back).map(|i2| i2 == ins).unwrap_or(false)
+                }
+                Err(_) => false,
+            },
+            Err(_) => true,
+        }
+    });
+}
+
+#[test]
+fn posit_ops_never_panic_on_random_patterns() {
+    forall(
+        0xBAD,
+        100_000,
+        |r: &mut Rng| (r.next_u32(), r.next_u32()),
+        |&(a, b)| {
+            let _ = ops::add::<32>(a, b);
+            let _ = ops::mul::<32>(a, b);
+            let _ = divsqrt::div_approx::<32>(a, b);
+            let _ = divsqrt::div_exact::<32>(a, b);
+            let _ = divsqrt::sqrt_exact::<32>(a);
+            let _ = convert::to_i64::<32>(a);
+            let _ = convert::to_f64::<32>(a);
+            let mut q = Quire32::new();
+            q.madd(a, b);
+            q.msub(b, a);
+            q.neg();
+            let _ = q.round();
+            true
+        },
+    );
+}
+
+#[test]
+fn nar_poisons_whole_expression_chains() {
+    let nar = 0x8000_0000u32;
+    let one = 0x4000_0000u32;
+    // Any chain touching NaR stays NaR (standard's exception model).
+    let mut v = nar;
+    for _ in 0..10 {
+        v = ops::add::<32>(ops::mul::<32>(v, one), one);
+    }
+    assert_eq!(v, nar);
+    let mut q = Quire32::new();
+    q.madd(one, one);
+    q.madd(nar, one);
+    q.madd(one, one);
+    assert_eq!(q.round(), nar);
+}
+
+#[test]
+fn simulator_halts_at_text_end_without_ecall() {
+    let prog = assemble("addi a0, zero, 7").unwrap();
+    let mut core = Core::new(CoreConfig { mem_size: 4096, ..Default::default() });
+    core.load_program(&prog);
+    let stats = core.run();
+    assert!(core.halted());
+    assert_eq!(stats.instret, 1);
+    assert_eq!(core.x[10], 7);
+}
+
+#[test]
+fn simulator_max_instrs_valve_stops_runaway_loops() {
+    let prog = assemble("loop: j loop").unwrap();
+    let mut core = Core::new(CoreConfig {
+        mem_size: 4096,
+        max_instrs: 1000,
+        ..Default::default()
+    });
+    core.load_program(&prog);
+    let stats = core.run();
+    assert!(core.halted());
+    assert_eq!(stats.instret, 1000);
+}
+
+#[test]
+fn saturation_chain_never_overflows_to_nar() {
+    // Repeated squaring saturates at maxpos and stays finite forever.
+    let mut v = convert::from_f64::<32>(1e10);
+    for _ in 0..50 {
+        v = ops::mul::<32>(v, v);
+        assert_ne!(v, 0x8000_0000, "must saturate, not wrap to NaR");
+    }
+    assert_eq!(v, 0x7FFF_FFFF);
+    // And the mirror for tiny values: never underflows to zero.
+    let mut v = convert::from_f64::<32>(1e-10);
+    for _ in 0..50 {
+        v = ops::mul::<32>(v, v);
+        assert_ne!(v, 0, "must saturate at minpos, not flush to zero");
+    }
+    assert_eq!(v, 1);
+}

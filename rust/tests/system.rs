@@ -1,0 +1,121 @@
+//! System-level integration: assembled paper kernels on the simulated core
+//! vs the native library for every GEMM variant, coordinator cross-checks,
+//! and Table-7/8 shape assertions (who wins, by roughly what factor).
+
+use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
+use percival::bench::maxpool::{run_pool_sim, PoolConfig, PoolFormat};
+use percival::bench::mse::{gemm_native, mse, NativeKind};
+use percival::coordinator::{Backend, Coordinator, Job};
+use percival::core::CoreConfig;
+use percival::posit::Posit32;
+use percival::testing::Rng;
+
+fn cfg() -> CoreConfig {
+    CoreConfig { mem_size: 1 << 23, ..Default::default() }
+}
+
+#[test]
+fn every_variant_simulates_and_matches_native() {
+    let n = 8;
+    let mut rng = Rng::new(77);
+    let a = gen_matrix(&mut rng, n, 0);
+    let b = gen_matrix(&mut rng, n, 0);
+    for v in GemmVariant::ALL {
+        let sim = run_gemm_sim(cfg(), v, n, &a, &b, false);
+        let kind = match v {
+            GemmVariant::F32Fused => NativeKind::F32Fused,
+            GemmVariant::F32Unfused => NativeKind::F32Unfused,
+            GemmVariant::F64Fused => NativeKind::F64Fused,
+            GemmVariant::F64Unfused => NativeKind::F64Unfused,
+            GemmVariant::P32Quire => NativeKind::P32Quire,
+            GemmVariant::P32NoQuire => NativeKind::P32NoQuire,
+        };
+        let native = gemm_native(kind, n, &a, &b);
+        assert_eq!(sim.result, native, "{v:?}");
+    }
+}
+
+#[test]
+fn table7_shape_holds_at_64() {
+    // The paper's Table 7 orderings at n=64:
+    //   fused < unfused for every format; p32+quire ≈ f32 (±15%);
+    //   f64 slower than f32; all fused < all unfused.
+    let n = 64;
+    let mut rng = Rng::new(42);
+    let a = gen_matrix(&mut rng, n, 0);
+    let b = gen_matrix(&mut rng, n, 0);
+    let t = |v| run_gemm_sim(cfg(), v, n, &a, &b, true).stats.cycles as f64;
+    let f32f = t(GemmVariant::F32Fused);
+    let f64f = t(GemmVariant::F64Fused);
+    let p32q = t(GemmVariant::P32Quire);
+    let f32u = t(GemmVariant::F32Unfused);
+    let f64u = t(GemmVariant::F64Unfused);
+    let p32n = t(GemmVariant::P32NoQuire);
+    assert!(f32f < f32u && f64f < f64u && p32q < p32n, "fused wins everywhere");
+    assert!((p32q / f32f - 1.0).abs() < 0.15, "p32 ≈ f32: ratio {}", p32q / f32f);
+    assert!(f64f / f32f > 1.2, "f64 must trail f32: ratio {}", f64f / f32f);
+}
+
+#[test]
+fn table6_shape_holds() {
+    // Quire ≥ 2 orders of magnitude better than f32 at n=64, [-1,1];
+    // no-quire posit loses to f32 at [-1000,1000].
+    let n = 64;
+    let mut rng = Rng::new(1);
+    let a = gen_matrix(&mut rng, n, 0);
+    let b = gen_matrix(&mut rng, n, 0);
+    let golden = gemm_native(NativeKind::F64Fused, n, &a, &b);
+    let m = |k| mse(&gemm_native(k, n, &a, &b), &golden);
+    assert!(m(NativeKind::F32Fused) / m(NativeKind::P32Quire) > 100.0);
+    let a3 = gen_matrix(&mut rng, n, 3);
+    let b3 = gen_matrix(&mut rng, n, 3);
+    let golden3 = gemm_native(NativeKind::F64Fused, n, &a3, &b3);
+    let m3 = |k| mse(&gemm_native(k, n, &a3, &b3), &golden3);
+    assert!(m3(NativeKind::P32NoQuire) > m3(NativeKind::F32Fused), "golden-zone crossover");
+    assert!(m3(NativeKind::P32Quire) < m3(NativeKind::F32Fused));
+}
+
+#[test]
+fn table8_shape_holds() {
+    let f32t = run_pool_sim(cfg(), PoolFormat::F32, &PoolConfig::LENET5, true).stats.cycles;
+    let f64t = run_pool_sim(cfg(), PoolFormat::F64, &PoolConfig::LENET5, true).stats.cycles;
+    let p32t = run_pool_sim(cfg(), PoolFormat::P32, &PoolConfig::LENET5, true).stats.cycles;
+    assert!(p32t <= f32t);
+    assert!(f64t > f32t);
+}
+
+#[test]
+fn coordinator_three_way_cross_check() {
+    let mut rng = Rng::new(3);
+    let n = 8;
+    let a: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-2.0, 2.0)).bits()).collect();
+    let b: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-2.0, 2.0)).bits()).collect();
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let has_art = art.join("gemm_p32_quire_8.hlo.txt").exists();
+    let co = Coordinator::new(2, Some(art.to_string_lossy().into_owned()));
+    let backends: &[Backend] = if has_art {
+        &[Backend::Native, Backend::Sim, Backend::Pjrt]
+    } else {
+        eprintln!("artifacts not built: skipping PJRT leg");
+        &[Backend::Native, Backend::Sim]
+    };
+    co.cross_check(Job::GemmP32 { n, a, b, quire: true }, backends)
+        .expect("all backends bit-identical");
+    co.shutdown();
+}
+
+#[test]
+fn racer_slower_than_percival_small_fast_crossover_large() {
+    // §8: PERCIVAL up to 8× faster than RacEr on small matrices; RacEr's
+    // published numbers stay above the simulated PERCIVAL at 16–64.
+    use percival::bench::racer::RacerModel;
+    let m = RacerModel::fit();
+    let mut rng = Rng::new(5);
+    let a = gen_matrix(&mut rng, 16, 0);
+    let b = gen_matrix(&mut rng, 16, 0);
+    let p16 = run_gemm_sim(cfg(), GemmVariant::P32Quire, 16, &a, &b, true).seconds;
+    let speedup = m.predict(16) / p16;
+    assert!(speedup > 4.0, "expected large small-matrix speedup, got {speedup:.1}");
+}
