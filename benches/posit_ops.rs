@@ -1,9 +1,17 @@
 //! Microbenchmarks of the native posit operations (the hot path of the
-//! Native backend and the simulator's PAU) + the approximate-vs-exact
-//! div/sqrt ablation.
+//! Native backend and the simulator's PAU), the approximate-vs-exact
+//! div/sqrt ablation, and the batched kernel layer: decode-once quire
+//! MACs, Posit8 LUT ops, the Posit16 decode LUT, and the headline
+//! kernel-vs-scalar 256×256 quire GEMM.
+//!
+//! Emits machine-readable rows to `BENCH_posit_kernels.json` (merged with
+//! the rows from `table7_gemm_timing`) so the perf trajectory is tracked
+//! across PRs.
 
-use percival::bench::harness::bench;
-use percival::posit::{divsqrt, ops, unpacked};
+use percival::bench::harness::{bench, write_bench_json, JsonRow, Report};
+use percival::kernels::{gemm, lut};
+use percival::posit::unpacked::{decode, Decoded};
+use percival::posit::{divsqrt, ops, unpacked, Quire32};
 use percival::testing::Rng;
 use std::hint::black_box;
 
@@ -28,7 +36,11 @@ fn inputs() -> (Vec<u32>, Vec<u32>) {
 
 fn main() {
     let (a, b) = inputs();
-    let per_op = |r: percival::bench::harness::Report| r.mean_s / N as f64 * 1e9;
+    let mut rows: Vec<JsonRow> = Vec::new();
+    let mut record = |name: &str, r: &Report, n: usize| {
+        println!("  → {:.1} ns/op", r.ns_per_op(n));
+        rows.push(JsonRow::from_report(name, r, n));
+    };
 
     let r = bench("posit32 add (64k ops)", 2, 10, || {
         let mut acc = 0u32;
@@ -37,7 +49,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/op", per_op(r));
+    record("p32_add", &r, N);
 
     let r = bench("posit32 mul (64k ops)", 2, 10, || {
         let mut acc = 0u32;
@@ -46,7 +58,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/op", per_op(r));
+    record("p32_mul", &r, N);
 
     let r = bench("posit32 div approx (PDIV.S)", 2, 10, || {
         let mut acc = 0u32;
@@ -55,7 +67,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/op", per_op(r));
+    record("p32_div_approx", &r, N);
 
     let r = bench("posit32 div exact (ablation)", 2, 10, || {
         let mut acc = 0u32;
@@ -64,7 +76,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/op", per_op(r));
+    record("p32_div_exact", &r, N);
 
     let r = bench("posit32 decode+encode roundtrip", 2, 10, || {
         let mut acc = 0u32;
@@ -80,7 +92,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/op", per_op(r));
+    record("p32_decode_encode", &r, N);
 
     let r = bench("posit32 compare (ALU path)", 2, 10, || {
         let mut acc = 0usize;
@@ -90,5 +102,117 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.2} ns/op", per_op(r));
+    record("p32_cmp", &r, N);
+
+    // ── Kernel layer: decode-once quire MACs ───────────────────────────
+    let r = bench("quire32 qmadd scalar (64k MACs)", 2, 10, || {
+        let mut q = Quire32::new();
+        for i in 0..N {
+            q.madd(black_box(a[i]), black_box(b[i]));
+        }
+        black_box(q.round());
+    });
+    record("q32_madd_scalar", &r, N);
+
+    let da: Vec<Decoded> = gemm::decode_matrix::<32>(&a);
+    let db: Vec<Decoded> = gemm::decode_matrix::<32>(&b);
+    let r = bench("quire32 qmadd unpacked (64k MACs)", 2, 10, || {
+        let mut q = Quire32::new();
+        for i in 0..N {
+            q.madd_unpacked(black_box(da[i]), black_box(db[i]));
+        }
+        black_box(q.round());
+    });
+    record("q32_madd_unpacked", &r, N);
+
+    // ── Posit8 LUT vs scalar ───────────────────────────────────────────
+    let a8: Vec<u32> = a.iter().map(|x| x & 0xFF).collect();
+    let b8: Vec<u32> = b.iter().map(|x| x & 0xFF).collect();
+    lut::p8_add_table(); // build outside the timed region
+    lut::p8_mul_table();
+    let r = bench("posit8 add scalar (64k ops)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= ops::add::<8>(black_box(a8[i]), black_box(b8[i]));
+        }
+        black_box(acc);
+    });
+    record("p8_add_scalar", &r, N);
+    let r = bench("posit8 add LUT (64k ops)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= lut::p8_add(black_box(a8[i]), black_box(b8[i]));
+        }
+        black_box(acc);
+    });
+    record("p8_add_lut", &r, N);
+    let r = bench("posit8 mul LUT (64k ops)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            acc ^= lut::p8_mul(black_box(a8[i]), black_box(b8[i]));
+        }
+        black_box(acc);
+    });
+    record("p8_mul_lut", &r, N);
+
+    // ── Posit16 decode LUT vs scalar decode ────────────────────────────
+    let a16: Vec<u32> = a.iter().map(|x| x & 0xFFFF).collect();
+    lut::p16_decode_table();
+    let r = bench("posit16 decode scalar (64k)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            if let Decoded::Num(u) = decode::<16>(black_box(a16[i])) {
+                acc ^= u.sig;
+            }
+        }
+        black_box(acc);
+    });
+    record("p16_decode_scalar", &r, N);
+    let r = bench("posit16 decode LUT (64k)", 2, 10, || {
+        let mut acc = 0u32;
+        for i in 0..N {
+            if let Decoded::Num(u) = lut::decode16(black_box(a16[i])) {
+                acc ^= u.sig;
+            }
+        }
+        black_box(acc);
+    });
+    record("p16_decode_lut", &r, N);
+
+    // ── Headline: 256×256 Posit32+quire GEMM, kernel vs pre-PR scalar ──
+    let n = 256usize;
+    let mut rng = Rng::new(0x6E33);
+    let ga: Vec<u32> = (0..n * n)
+        .map(|_| percival::posit::convert::from_f64::<32>(rng.range_f64(-1.0, 1.0)))
+        .collect();
+    let gb: Vec<u32> = (0..n * n)
+        .map(|_| percival::posit::convert::from_f64::<32>(rng.range_f64(-1.0, 1.0)))
+        .collect();
+    let macs = n * n * n;
+    let rs = bench("gemm256 p32+quire scalar (pre-PR)", 1, 3, || {
+        black_box(gemm::gemm_p32_quire_scalar(n, black_box(&ga), black_box(&gb)));
+    });
+    record("gemm256_p32_quire_scalar", &rs, macs);
+    let rk = bench("gemm256 p32+quire kernel", 1, 3, || {
+        black_box(gemm::gemm_p32_quire(n, black_box(&ga), black_box(&gb)));
+    });
+    println!("  → {:.1} ns/op", rk.ns_per_op(macs));
+    assert_eq!(
+        gemm::gemm_p32_quire(n, &ga, &gb),
+        gemm::gemm_p32_quire_scalar(n, &ga, &gb),
+        "kernel and scalar GEMM must agree bit-for-bit"
+    );
+    let speedup = rs.mean_s / rk.mean_s;
+    println!("  → kernel speedup over scalar: {speedup:.2}×  (bit-identical ✓)");
+    // The kernel row carries the ratio as an annotation; its timing
+    // fields stay real seconds/nanoseconds like every other row.
+    let mut kernel_row = JsonRow::from_report("gemm256_p32_quire_kernel", &rk, macs);
+    kernel_row.speedup_x = Some(speedup);
+    rows.push(kernel_row);
+
+    let path = "BENCH_posit_kernels.json";
+    match write_bench_json(path, &rows) {
+        Ok(()) => println!("\nwrote {} rows to {path}", rows.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

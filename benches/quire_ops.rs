@@ -22,7 +22,7 @@ fn main() {
         }
         black_box(q.round());
     });
-    println!("  → {:.1} ns/MAC", r.mean_s / N as f64 * 1e9);
+    println!("  → {:.1} ns/MAC", r.ns_per_op(N));
 
     let r = bench("f64 fma baseline (64k MACs)", 2, 10, || {
         let mut acc = 0.0f64;
@@ -31,7 +31,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.2} ns/MAC", r.mean_s / N as f64 * 1e9);
+    println!("  → {:.2} ns/MAC", r.ns_per_op(N));
 
     let r = bench("quire32 qround (4k roundings)", 2, 10, || {
         let mut q = Quire32::new();
@@ -42,7 +42,7 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/round (incl. one madd)", r.mean_s / 4096.0 * 1e9);
+    println!("  → {:.1} ns/round (incl. one madd)", r.ns_per_op(4096));
 
     // Dot-product shape: the GEMM inner loop (madd×k + one round).
     let r = bench("quire32 dot-1024 (64 dots)", 2, 10, || {
@@ -56,5 +56,5 @@ fn main() {
         }
         black_box(acc);
     });
-    println!("  → {:.1} ns/element", r.mean_s / (64.0 * 1024.0) * 1e9);
+    println!("  → {:.1} ns/element", r.ns_per_op(64 * 1024));
 }

@@ -2,10 +2,12 @@
 //! report host-side simulation throughput.
 //!
 //! Sizes 16–64 by default (CI-fast); set `BENCH_FULL=1` for the paper's
-//! full 16–256 sweep.
+//! full 16–256 sweep. Host-side timings are merged into
+//! `BENCH_posit_kernels.json` alongside the native-kernel rows from
+//! `posit_ops` so the perf trajectory is tracked across PRs.
 
 use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
-use percival::bench::harness::fmt_time;
+use percival::bench::harness::{fmt_time, write_bench_json, JsonRow};
 use percival::bench::racer::RacerModel;
 use percival::bench::tables;
 use percival::core::CoreConfig;
@@ -16,6 +18,7 @@ fn main() {
     let sizes: &[usize] = if full { &tables::SIZES } else { &[16, 32, 64] };
     let cfg = CoreConfig::default();
     let mut rng = Rng::new(tables::SEED);
+    let mut rows: Vec<JsonRow> = Vec::new();
 
     println!("Table 7 — GEMM timing (simulated @ 50 MHz) + host sim throughput");
     println!("{:<24} {:>8} {:>14} {:>14} {:>12}", "variant", "n", "sim time", "host time", "Msim-instr/s");
@@ -35,6 +38,12 @@ fn main() {
                 // Two runs (warm + timed) happened; count the timed one.
                 run.stats.instret as f64 / host / 1e6
             );
+            rows.push(JsonRow {
+                bench: format!("table7_sim_{v:?}_n{n}"),
+                mean_s: host,
+                ns_per_op: host / (n * n * n) as f64 * 1e9,
+                speedup_x: None,
+            });
         }
     }
     let racer = RacerModel::fit();
@@ -47,5 +56,11 @@ fn main() {
             "-",
             "-"
         );
+    }
+
+    let path = "BENCH_posit_kernels.json";
+    match write_bench_json(path, &rows) {
+        Ok(()) => println!("\nmerged {} rows into {path}", rows.len()),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }

@@ -4,7 +4,7 @@
 
 use percival::core::{Core, CoreConfig};
 use percival::isa::asm::assemble;
-use percival::posit::{ops, Posit32, Quire32};
+use percival::posit::{ops, Posit32};
 use percival::testing::Rng;
 
 fn main() {
@@ -33,12 +33,9 @@ fn main() {
         .map(|(x, y)| Posit32(*x).to_f64() * Posit32(*y).to_f64())
         .sum();
 
-    // Native, with quire.
-    let mut q = Quire32::new();
-    for (x, y) in a.iter().zip(&b) {
-        q.madd(*x, *y);
-    }
-    let with_quire = Posit32(q.round()).to_f64();
+    // Native, with quire — the decode-once kernel path (bit-identical to
+    // a scalar QMADD loop; pinned by tests/kernel_equiv.rs).
+    let with_quire = Posit32(percival::kernels::dot_p32_quire(&a, &b)).to_f64();
 
     // Native, without quire (pmul + padd).
     let mut acc = 0u32;

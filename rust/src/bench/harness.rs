@@ -10,6 +10,8 @@ use std::time::Instant;
 pub struct Report {
     pub iters: u32,
     pub mean_s: f64,
+    /// Median of the measured samples (robust to scheduler outliers).
+    pub median_s: f64,
     pub min_s: f64,
     pub max_s: f64,
     pub std_s: f64,
@@ -19,14 +21,22 @@ impl Report {
     pub fn mean_ms(&self) -> f64 {
         self.mean_s * 1e3
     }
+
+    /// Nanoseconds per operation for a run whose body performed `n` ops
+    /// per iteration (mean-based; the bench binaries share this instead
+    /// of each re-deriving the conversion).
+    pub fn ns_per_op(&self, n: usize) -> f64 {
+        self.mean_s / n.max(1) as f64 * 1e9
+    }
 }
 
 impl std::fmt::Display for Report {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "mean {:.3} ms  (min {:.3}, max {:.3}, σ {:.3}, n={})",
+            "mean {:.3} ms  (median {:.3}, min {:.3}, max {:.3}, σ {:.3}, n={})",
             self.mean_s * 1e3,
+            self.median_s * 1e3,
             self.min_s * 1e3,
             self.max_s * 1e3,
             self.std_s * 1e3,
@@ -49,9 +59,17 @@ pub fn time<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Report {
     let n = samples.len() as f64;
     let mean = samples.iter().sum::<f64>() / n;
     let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let median = if sorted.len() % 2 == 1 {
+        sorted[sorted.len() / 2]
+    } else {
+        (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2]) / 2.0
+    };
     Report {
         iters: iters.max(1),
         mean_s: mean,
+        median_s: median,
         min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
         max_s: samples.iter().copied().fold(0.0, f64::max),
         std_s: var.sqrt(),
@@ -109,6 +127,103 @@ pub fn write_csv(
     Ok(())
 }
 
+/// One machine-readable row of a `BENCH_*.json` perf-tracking file.
+/// `mean_s` is seconds and `ns_per_op` nanoseconds for every row;
+/// `speedup_x` optionally annotates a row with a unitless ratio against
+/// its baseline (kept out of the timing fields so aggregators can treat
+/// them uniformly).
+#[derive(Debug, Clone)]
+pub struct JsonRow {
+    pub bench: String,
+    pub mean_s: f64,
+    pub ns_per_op: f64,
+    pub speedup_x: Option<f64>,
+}
+
+impl JsonRow {
+    /// Build a row from a [`Report`] for a body that performed `n` ops
+    /// per iteration.
+    pub fn from_report(bench: impl Into<String>, r: &Report, n: usize) -> Self {
+        Self { bench: bench.into(), mean_s: r.mean_s, ns_per_op: r.ns_per_op(n), speedup_x: None }
+    }
+
+    fn to_json(&self) -> String {
+        // The bench names are ASCII identifiers/labels; escape the two
+        // characters that could break the literal anyway.
+        let name = self.bench.replace('\\', "\\\\").replace('"', "\\\"");
+        let extra = self
+            .speedup_x
+            .map(|s| format!(", \"speedup_x\": {s:.3}"))
+            .unwrap_or_default();
+        format!(
+            "{{\"bench\": \"{}\", \"mean_s\": {:e}, \"ns_per_op\": {:.3}{}}}",
+            name, self.mean_s, self.ns_per_op, extra
+        )
+    }
+}
+
+/// Merge `rows` into a JSON benchmark file (array of objects, one per
+/// line). Rows already in the file whose `bench` name is not being
+/// rewritten are preserved, so several bench binaries can contribute to
+/// the same tracking file (e.g. `BENCH_posit_kernels.json`). The
+/// existing file is read with the in-tree JSON parser, so any valid
+/// formatting survives a merge — but rows are normalised to the
+/// `{bench, mean_s, ns_per_op[, speedup_x]}` schema: rows missing the
+/// required fields, and any unknown extra fields, are dropped with a
+/// warning on stderr.
+pub fn write_bench_json(path: &str, rows: &[JsonRow]) -> std::io::Result<()> {
+    use crate::coordinator::json::{self, Value};
+    use std::io::Write;
+    let as_f64 = |v: &Value| match v {
+        Value::Num(x) => Some(*x),
+        Value::Int(i) => Some(*i as f64),
+        _ => None,
+    };
+    let mut merged: Vec<JsonRow> = Vec::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        match json::parse(&text) {
+            Ok(Value::Arr(items)) => {
+                for it in &items {
+                    let bench = match it.get("bench") {
+                        Some(Value::Str(s)) => s.clone(),
+                        _ => {
+                            eprintln!("warning: {path}: dropping row without a `bench` name");
+                            continue;
+                        }
+                    };
+                    let mean_s = it.get("mean_s").and_then(as_f64);
+                    let ns_per_op = it.get("ns_per_op").and_then(as_f64);
+                    let (Some(mean_s), Some(ns_per_op)) = (mean_s, ns_per_op) else {
+                        eprintln!(
+                            "warning: {path}: dropping row `{bench}` missing mean_s/ns_per_op"
+                        );
+                        continue;
+                    };
+                    if !rows.iter().any(|r| r.bench == bench) {
+                        let speedup_x = it.get("speedup_x").and_then(as_f64);
+                        merged.push(JsonRow { bench, mean_s, ns_per_op, speedup_x });
+                    }
+                }
+            }
+            Ok(_) | Err(_) => {
+                eprintln!("warning: {path} is not a JSON row array; rewriting from scratch");
+            }
+        }
+    }
+    merged.extend(rows.iter().cloned());
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let lines: Vec<String> = merged.iter().map(|r| r.to_json()).collect();
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    writeln!(f, "{}", lines.join(",\n"))?;
+    writeln!(f, "]")?;
+    Ok(())
+}
+
 /// Engineering formatting for seconds, paper-style ("0.978 ms", "13.9 s").
 pub fn fmt_time(seconds: f64) -> String {
     if seconds >= 1.0 {
@@ -135,7 +250,44 @@ mod tests {
         });
         assert_eq!(r.iters, 5);
         assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
         assert!(std::hint::black_box(x) != 1);
+        // ns_per_op is the shared mean→per-op conversion.
+        let per = r.ns_per_op(10_000);
+        assert!((per - r.mean_s / 10_000.0 * 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_merges_by_name() {
+        let dir = std::env::temp_dir().join("percival_bench_json_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_test.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        write_bench_json(
+            path,
+            &[
+                JsonRow { bench: "a".into(), mean_s: 1.0, ns_per_op: 10.0, speedup_x: Some(2.5) },
+                JsonRow { bench: "b".into(), mean_s: 2.0, ns_per_op: 20.0, speedup_x: None },
+            ],
+        )
+        .unwrap();
+        // Rewriting `b` keeps `a` (with its annotation) and replaces `b`.
+        write_bench_json(
+            path,
+            &[JsonRow { bench: "b".into(), mean_s: 3.0, ns_per_op: 30.0, speedup_x: None }],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("[\n"), "{text}");
+        assert!(text.contains("\"bench\": \"a\""), "{text}");
+        assert!(text.contains("\"speedup_x\": 2.500"), "{text}");
+        assert!(text.contains("\"ns_per_op\": 30.000"), "{text}");
+        assert!(!text.contains("\"ns_per_op\": 20.000"), "{text}");
+        // And it parses with the in-tree JSON reader.
+        let v = crate::coordinator::json::parse(&text).expect("valid json");
+        assert_eq!(v.arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! and the native path makes the 256×256 sweep fast enough to regenerate
 //! the full table in seconds.
 
-use crate::posit::{ops, Posit32, Quire32};
+use crate::kernels;
+use crate::posit::Posit32;
 use crate::testing::Rng;
 
 /// Native GEMM arithmetic kinds (mirror of [`super::gemm::GemmVariant`]).
@@ -99,35 +100,43 @@ pub fn gemm_native(kind: NativeKind, n: usize, af: &[f64], bf: &[f64]) -> Vec<f6
             }
         }
         NativeKind::P32Quire => {
+            // Batched kernel path: decode-once, windowed quire, row-parallel
+            // (bit-identical to the scalar oracle — see
+            // `kernel_path_matches_scalar_oracle` and tests/kernel_equiv.rs).
             let a: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
             let b: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
-            let mut q = Quire32::new();
-            for i in 0..n {
-                for j in 0..n {
-                    q.clear();
-                    for k in 0..n {
-                        q.madd(a[i * n + k], b[k * n + j]);
-                    }
-                    c[i * n + j] = Posit32(q.round()).to_f64();
-                }
+            let bits = kernels::gemm::gemm_p32_quire(n, &a, &b);
+            for (ci, v) in c.iter_mut().zip(&bits) {
+                *ci = Posit32(*v).to_f64();
             }
         }
         NativeKind::P32NoQuire => {
             let a: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
             let b: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
-            for i in 0..n {
-                for j in 0..n {
-                    let mut acc = 0u32; // posit zero
-                    for k in 0..n {
-                        let p = ops::mul::<32>(a[i * n + k], b[k * n + j]);
-                        acc = ops::add::<32>(acc, p);
-                    }
-                    c[i * n + j] = Posit32(acc).to_f64();
-                }
+            let bits = kernels::gemm::gemm_p32_noquire(n, &a, &b);
+            for (ci, v) in c.iter_mut().zip(&bits) {
+                *ci = Posit32(*v).to_f64();
             }
         }
     }
     c
+}
+
+/// The pre-kernel scalar GEMM, kept as the bit-exactness oracle for the
+/// posit kinds (the float kinds have no kernel/scalar split and delegate
+/// to [`gemm_native`]). The scalar loops themselves live once, in
+/// [`kernels::gemm`].
+pub fn gemm_native_scalar(kind: NativeKind, n: usize, af: &[f64], bf: &[f64]) -> Vec<f64> {
+    let scalar = |f: fn(usize, &[u32], &[u32]) -> Vec<u32>| {
+        let a: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+        let b: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+        f(n, &a, &b).iter().map(|v| Posit32(*v).to_f64()).collect()
+    };
+    match kind {
+        NativeKind::P32Quire => scalar(kernels::gemm::gemm_p32_quire_scalar),
+        NativeKind::P32NoQuire => scalar(kernels::gemm::gemm_p32_noquire_scalar),
+        _ => gemm_native(kind, n, af, bf),
+    }
 }
 
 /// Mean squared error against a golden vector.
@@ -157,6 +166,24 @@ pub fn table6_cell(kind: NativeKind, n: usize, exp10: i32, seed: u64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kernel_path_matches_scalar_oracle() {
+        // gemm_native's posit kinds route through the batched kernels;
+        // they must reproduce the pre-kernel scalar loops bit-for-bit
+        // (f64 widening is exact, so f64 equality pins the bits).
+        let n = 24;
+        let mut rng = Rng::new(0x04AC1E);
+        let a = super::super::gemm::gen_matrix(&mut rng, n, 1);
+        let b = super::super::gemm::gen_matrix(&mut rng, n, 1);
+        for kind in [NativeKind::P32Quire, NativeKind::P32NoQuire] {
+            assert_eq!(
+                gemm_native(kind, n, &a, &b),
+                gemm_native_scalar(kind, n, &a, &b),
+                "{kind:?}"
+            );
+        }
+    }
 
     #[test]
     fn golden_is_zero_error_against_itself() {

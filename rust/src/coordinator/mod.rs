@@ -16,7 +16,8 @@ pub mod json;
 
 use crate::bench::gemm::{run_gemm_sim, GemmVariant};
 use crate::core::CoreConfig;
-use crate::posit::{ops, Posit32, Quire32};
+use crate::error::Result;
+use crate::posit::Posit32;
 use crate::runtime::Runtime;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -76,7 +77,7 @@ impl Metrics {
 }
 
 enum Msg {
-    Run(Job, Backend, Sender<anyhow::Result<JobResult>>),
+    Run(Job, Backend, Sender<Result<JobResult>>),
     Stop,
 }
 
@@ -135,7 +136,7 @@ impl Coordinator {
     }
 
     /// Submit a job; returns a receiver for the result.
-    pub fn submit(&self, job: Job, backend: Backend) -> Receiver<anyhow::Result<JobResult>> {
+    pub fn submit(&self, job: Job, backend: Backend) -> Receiver<Result<JobResult>> {
         let (rtx, rrx) = channel();
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.tx.send(Msg::Run(job, backend, rtx)).expect("coordinator alive");
@@ -143,20 +144,20 @@ impl Coordinator {
     }
 
     /// Submit and wait.
-    pub fn run(&self, job: Job, backend: Backend) -> anyhow::Result<JobResult> {
+    pub fn run(&self, job: Job, backend: Backend) -> Result<JobResult> {
         self.submit(job, backend).recv().expect("worker alive")
     }
 
     /// Run the same job on several backends and require bit-identical
     /// results (the end-to-end cross-check).
-    pub fn cross_check(&self, job: Job, backends: &[Backend]) -> anyhow::Result<Vec<JobResult>> {
+    pub fn cross_check(&self, job: Job, backends: &[Backend]) -> Result<Vec<JobResult>> {
         let rxs: Vec<_> =
             backends.iter().map(|b| self.submit(job.clone(), *b)).collect();
-        let results: anyhow::Result<Vec<JobResult>> =
+        let results: Result<Vec<JobResult>> =
             rxs.into_iter().map(|rx| rx.recv().expect("worker alive")).collect();
         let results = results?;
         for w in results.windows(2) {
-            anyhow::ensure!(
+            crate::ensure!(
                 w[0].bits == w[1].bits,
                 "backend disagreement: {:?} vs {:?}",
                 w[0].backend,
@@ -182,7 +183,28 @@ fn execute(
     backend: Backend,
     artifacts: &Option<String>,
     rt: &mut Option<Runtime>,
-) -> anyhow::Result<JobResult> {
+) -> Result<JobResult> {
+    // Validate shapes up front, for every backend: a malformed job must be
+    // an Err to the client, not an out-of-bounds / assert panic inside a
+    // worker thread (which would also stop that worker draining the queue).
+    match job {
+        Job::GemmP32 { n, a, b, .. } => {
+            crate::ensure!(
+                a.len() == n * n && b.len() == n * n,
+                "GemmP32 shape mismatch: n={n}, a.len()={}, b.len()={}",
+                a.len(),
+                b.len()
+            );
+        }
+        Job::DotP32 { a, b } => {
+            crate::ensure!(
+                a.len() == b.len(),
+                "DotP32 length mismatch: {} vs {}",
+                a.len(),
+                b.len()
+            );
+        }
+    }
     match (job, backend) {
         (Job::GemmP32 { n, a, b, quire }, Backend::Native) => {
             let bits = native_gemm(*n, a, b, *quire);
@@ -204,7 +226,7 @@ fn execute(
         (Job::GemmP32 { n, a, b, quire }, Backend::Pjrt) => {
             let dir = artifacts
                 .clone()
-                .ok_or_else(|| anyhow::anyhow!("no artifacts dir configured"))?;
+                .ok_or_else(|| crate::err!("no artifacts dir configured"))?;
             if rt.is_none() {
                 *rt = Some(Runtime::cpu(dir)?);
             }
@@ -213,12 +235,9 @@ fn execute(
             Ok(JobResult { bits, backend, elapsed_s: 0.0, sim_seconds: None })
         }
         (Job::DotP32 { a, b }, _) => {
-            let mut q = Quire32::new();
-            for (x, y) in a.iter().zip(b) {
-                q.madd(*x, *y);
-            }
+            // Decode-once kernel path (bit-identical to the scalar loop).
             Ok(JobResult {
-                bits: vec![q.round()],
+                bits: vec![crate::kernels::gemm::dot_p32_quire(a, b)],
                 backend: Backend::Native,
                 elapsed_s: 0.0,
                 sim_seconds: None,
@@ -227,23 +246,13 @@ fn execute(
     }
 }
 
-/// Native GEMM used by the `Native` backend.
+/// Native GEMM used by the `Native` backend — the batched kernel layer
+/// (decode-once, windowed quire, row-parallel).
 pub fn native_gemm(n: usize, a: &[u32], b: &[u32], quire: bool) -> Vec<u32> {
     if quire {
-        crate::runtime::native_gemm_quire(n, a, b)
+        crate::kernels::gemm::gemm_p32_quire(n, a, b)
     } else {
-        let mut out = vec![0u32; n * n];
-        for i in 0..n {
-            for j in 0..n {
-                let mut acc = 0u32;
-                for k in 0..n {
-                    let p = ops::mul::<32>(a[i * n + k], b[k * n + j]);
-                    acc = ops::add::<32>(acc, p);
-                }
-                out[i * n + j] = acc;
-            }
-        }
-        out
+        crate::kernels::gemm::gemm_p32_noquire(n, a, b)
     }
 }
 

@@ -1,0 +1,95 @@
+//! Minimal string-message error type — the crate-wide `Result` used by the
+//! coordinator and runtime layers.
+//!
+//! `anyhow` is not in the offline crate set; this covers the subset the
+//! codebase needs: a `Display`-able message error, `?`-friendly `Result`
+//! alias, and `err!` / `ensure!` macros mirroring `anyhow!` / `ensure!`.
+
+use std::fmt;
+
+/// An opaque error carrying a human-readable message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Self { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!`-style formatted message error.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => { $crate::error::Error::msg(format!($($arg)*)) };
+}
+
+/// `anyhow::ensure!` replacement: early-return an [`Error`] when the
+/// condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::err!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+
+    #[test]
+    fn ensure_macro_early_returns() {
+        fn check(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(12).unwrap_err().to_string(), "x too big: 12");
+    }
+}

@@ -1,0 +1,267 @@
+//! Decode-once GEMM and dot-product drivers.
+//!
+//! Strategy (all of it semantics-preserving, pinned by
+//! `rust/tests/kernel_equiv.rs`):
+//!
+//! 1. **Pre-decode** both operand matrices into [`Decoded`] form — O(n²)
+//!    decodes instead of the scalar path's O(n³).
+//! 2. **Transpose B during decode** so the k-loop walks both operands
+//!    contiguously (the scalar path strides B by a full row per MAC).
+//! 3. **Windowed quire accumulation** via
+//!    [`madd_unpacked`](crate::posit::Quire32::madd_unpacked): the quire
+//!    tracks its dirty limb range, so clear/round pay for the limbs a dot
+//!    product actually touched, not the full 512-bit register.
+//! 4. **Row-parallel tiling**: output rows are split into per-thread
+//!    blocks driven by `std::thread::scope`. Each output element is an
+//!    independent exact accumulation, so threading cannot change a single
+//!    rounding.
+//!
+//! The pre-existing scalar loops are kept verbatim as `*_scalar` oracles.
+
+use crate::posit::unpacked::{decode, Decoded};
+use crate::posit::{ops, Quire32};
+
+/// Decode a slice of `N`-bit posit patterns (row-major matrix or vector)
+/// into unpacked form, once.
+pub fn decode_matrix<const N: u32>(bits: &[u32]) -> Vec<Decoded> {
+    bits.iter().map(|&x| decode::<N>(x)).collect()
+}
+
+/// Decode a row-major n×n matrix directly into its transpose, so GEMM's
+/// inner k-loop reads both operands contiguously.
+pub fn decode_transposed<const N: u32>(bits: &[u32], n: usize) -> Vec<Decoded> {
+    assert_eq!(bits.len(), n * n);
+    let mut out = vec![Decoded::Zero; n * n];
+    for k in 0..n {
+        for j in 0..n {
+            out[j * n + k] = decode::<N>(bits[k * n + j]);
+        }
+    }
+    out
+}
+
+/// Minimum number of output elements before the driver spawns threads
+/// (below this the spawn overhead dominates).
+const PAR_MIN_ELEMS: usize = 4096;
+
+/// Worker count: `PERCIVAL_THREADS` if set, else the machine's available
+/// parallelism.
+fn worker_threads() -> usize {
+    if let Ok(v) = std::env::var("PERCIVAL_THREADS") {
+        if let Ok(t) = v.trim().parse::<usize>() {
+            return t.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+/// Row-parallel driver: split `out` (a `rows × cols` row-major buffer)
+/// into contiguous row blocks, one scoped thread per block, and call
+/// `f(row_index, row_slice)` for every row. Falls back to a sequential
+/// loop for small outputs or single-core machines. Because each row is
+/// written by exactly one thread and `f` is deterministic per row, the
+/// result is identical to the sequential loop.
+pub fn par_rows<F>(rows: usize, cols: usize, out: &mut [u32], f: F)
+where
+    F: Fn(usize, &mut [u32]) + Sync,
+{
+    assert_eq!(out.len(), rows * cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let threads = worker_threads().min(rows);
+    if threads <= 1 || rows * cols < PAR_MIN_ELEMS {
+        for (i, row) in out.chunks_mut(cols).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    // Ceil-divide so every thread gets a whole number of rows and the
+    // last block absorbs the remainder.
+    let rows_per = (rows + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (t, block) in out.chunks_mut(rows_per * cols).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (r, row) in block.chunks_mut(cols).enumerate() {
+                    f(t * rows_per + r, row);
+                }
+            });
+        }
+    });
+}
+
+/// Posit32 + quire GEMM, batched: C = A·B on bit patterns (row-major
+/// n×n). Bit-identical to [`gemm_p32_quire_scalar`] — the quire is exact,
+/// so neither pre-decoding nor row scheduling can change any rounding.
+pub fn gemm_p32_quire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let da = decode_matrix::<32>(a);
+    let dbt = decode_transposed::<32>(b, n);
+    let mut c = vec![0u32; n * n];
+    par_rows(n, n, &mut c, |i, row| {
+        let ar = &da[i * n..(i + 1) * n];
+        let mut q = Quire32::new();
+        for (j, out) in row.iter_mut().enumerate() {
+            q.clear();
+            let bc = &dbt[j * n..(j + 1) * n];
+            for k in 0..n {
+                q.madd_unpacked(ar[k], bc[k]);
+            }
+            *out = q.round();
+        }
+    });
+    c
+}
+
+/// Posit32 GEMM without the quire (pmul + padd per MAC), batched: the
+/// multiplies run on pre-decoded operands; the running posit addition is
+/// inherently scalar (each step rounds), and the k-order is preserved so
+/// every intermediate rounding matches [`gemm_p32_noquire_scalar`].
+pub fn gemm_p32_noquire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let da = decode_matrix::<32>(a);
+    let dbt = decode_transposed::<32>(b, n);
+    let mut c = vec![0u32; n * n];
+    par_rows(n, n, &mut c, |i, row| {
+        let ar = &da[i * n..(i + 1) * n];
+        for (j, out) in row.iter_mut().enumerate() {
+            let bc = &dbt[j * n..(j + 1) * n];
+            let mut acc = 0u32; // posit zero
+            for k in 0..n {
+                acc = ops::add::<32>(acc, ops::mul_unpacked::<32>(ar[k], bc[k]));
+            }
+            *out = acc;
+        }
+    });
+    c
+}
+
+/// Quire dot product on bit patterns, decode-once (the coordinator's
+/// `DotP32` job and the dot-product examples).
+pub fn dot_p32_quire(a: &[u32], b: &[u32]) -> u32 {
+    assert_eq!(a.len(), b.len());
+    let mut q = Quire32::new();
+    for (&x, &y) in a.iter().zip(b) {
+        q.madd_unpacked(decode::<32>(x), decode::<32>(y));
+    }
+    q.round()
+}
+
+/// The pre-PR scalar quire GEMM, kept verbatim as the bit-exactness
+/// oracle (re-decodes both operands on every MAC).
+pub fn gemm_p32_quire_scalar(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut q = Quire32::new();
+    let mut out = vec![0u32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            q.clear();
+            for k in 0..n {
+                q.madd(a[i * n + k], b[k * n + j]);
+            }
+            out[i * n + j] = q.round();
+        }
+    }
+    out
+}
+
+/// The pre-PR scalar no-quire GEMM (oracle for [`gemm_p32_noquire`]).
+pub fn gemm_p32_noquire_scalar(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut out = vec![0u32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0u32;
+            for k in 0..n {
+                let p = ops::mul::<32>(a[i * n + k], b[k * n + j]);
+                acc = ops::add::<32>(acc, p);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::Rng;
+
+    fn mat(rng: &mut Rng, n: usize) -> Vec<u32> {
+        (0..n * n).map(|_| rng.posit_bits::<32>()).collect()
+    }
+
+    #[test]
+    fn kernel_matches_scalar_small() {
+        let mut rng = Rng::new(0xBA7C);
+        for n in [1usize, 2, 3, 7, 12] {
+            let a = mat(&mut rng, n);
+            let b = mat(&mut rng, n);
+            assert_eq!(gemm_p32_quire(n, &a, &b), gemm_p32_quire_scalar(n, &a, &b), "n={n}");
+            assert_eq!(
+                gemm_p32_noquire(n, &a, &b),
+                gemm_p32_noquire_scalar(n, &a, &b),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_matches_scalar_threaded() {
+        // 72×72 = 5184 > PAR_MIN_ELEMS: the scoped-thread driver engages.
+        let n = 72;
+        let mut rng = Rng::new(0x7EAD);
+        let a = mat(&mut rng, n);
+        let b = mat(&mut rng, n);
+        assert_eq!(gemm_p32_quire(n, &a, &b), gemm_p32_quire_scalar(n, &a, &b));
+    }
+
+    #[test]
+    fn dot_matches_scalar_loop() {
+        let mut rng = Rng::new(0xD07);
+        let a: Vec<u32> = (0..257).map(|_| rng.posit_bits::<32>()).collect();
+        let b: Vec<u32> = (0..257).map(|_| rng.posit_bits::<32>()).collect();
+        let mut q = Quire32::new();
+        for (&x, &y) in a.iter().zip(&b) {
+            q.madd(x, y);
+        }
+        assert_eq!(dot_p32_quire(&a, &b), q.round());
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_once() {
+        // Row index must reach f exactly right, including the ragged tail
+        // when rows % threads != 0.
+        for rows in [1usize, 5, 64, 65, 127] {
+            let cols = 64;
+            let mut out = vec![u32::MAX; rows * cols];
+            par_rows(rows, cols, &mut out, |i, row| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (i * cols + j) as u32;
+                }
+            });
+            for (idx, v) in out.iter().enumerate() {
+                assert_eq!(*v, idx as u32, "rows={rows} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_transposed_is_transpose_of_decode() {
+        let mut rng = Rng::new(3);
+        let n = 9;
+        let bits = mat(&mut rng, n);
+        let d = decode_matrix::<32>(&bits);
+        let dt = decode_transposed::<32>(&bits, n);
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(d[i * n + j], dt[j * n + i]);
+            }
+        }
+    }
+}

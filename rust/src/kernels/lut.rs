@@ -1,0 +1,104 @@
+//! Lookup-table backends for the narrow posit formats.
+//!
+//! Posit8 has only 2¹⁶ operand pairs per binary op, so the entire
+//! function fits in a 64 KiB table — one L2-resident load replaces the
+//! decode → align/multiply → normalize → round pipeline. Posit16 has 2¹⁶
+//! *patterns*, so its win is a decode table (512 KiB of unpacked entries):
+//! batched Posit16 kernels skip the regime scan entirely.
+//!
+//! Tables are built lazily on first use from the scalar ops (so they are
+//! bit-identical by construction) and cached for the process lifetime in
+//! `OnceLock`s. Build cost is one exhaustive sweep (~65k scalar ops per
+//! table), amortised across everything that follows.
+
+use crate::posit::unpacked::{decode, negate, Decoded};
+use crate::posit::ops;
+use std::sync::OnceLock;
+
+static P8_ADD: OnceLock<Vec<u8>> = OnceLock::new();
+static P8_MUL: OnceLock<Vec<u8>> = OnceLock::new();
+static P16_DECODE: OnceLock<Vec<Decoded>> = OnceLock::new();
+
+fn build_p8(f: fn(u32, u32) -> u32) -> Vec<u8> {
+    let mut t = vec![0u8; 1 << 16];
+    for a in 0..256u32 {
+        for b in 0..256u32 {
+            t[((a << 8) | b) as usize] = f(a, b) as u8;
+        }
+    }
+    t
+}
+
+/// The exhaustive Posit8 addition table (64 KiB, index `a·256 + b`).
+pub fn p8_add_table() -> &'static [u8] {
+    P8_ADD.get_or_init(|| build_p8(ops::add::<8>)).as_slice()
+}
+
+/// The exhaustive Posit8 multiplication table (64 KiB).
+pub fn p8_mul_table() -> &'static [u8] {
+    P8_MUL.get_or_init(|| build_p8(ops::mul::<8>)).as_slice()
+}
+
+/// Posit8 addition by table lookup (bit-identical to `ops::add::<8>`).
+#[inline]
+pub fn p8_add(a: u32, b: u32) -> u32 {
+    p8_add_table()[(((a & 0xFF) << 8) | (b & 0xFF)) as usize] as u32
+}
+
+/// Posit8 multiplication by table lookup (bit-identical to
+/// `ops::mul::<8>`).
+#[inline]
+pub fn p8_mul(a: u32, b: u32) -> u32 {
+    p8_mul_table()[(((a & 0xFF) << 8) | (b & 0xFF)) as usize] as u32
+}
+
+/// Posit8 subtraction via the addition table: posit negation is exact, so
+/// `a − b = a + (−b)` holds bitwise (no separate 64 KiB table needed).
+#[inline]
+pub fn p8_sub(a: u32, b: u32) -> u32 {
+    p8_add(a, negate::<8>(b))
+}
+
+/// The exhaustive Posit16 decode table (2¹⁶ unpacked entries).
+pub fn p16_decode_table() -> &'static [Decoded] {
+    P16_DECODE
+        .get_or_init(|| (0..=0xFFFFu32).map(|bits| decode::<16>(bits)).collect())
+        .as_slice()
+}
+
+/// Posit16 decode by table lookup (bit-identical to `decode::<16>`).
+#[inline]
+pub fn decode16(bits: u32) -> Decoded {
+    p16_decode_table()[(bits & 0xFFFF) as usize]
+}
+
+/// Decode a Posit16 matrix/vector through the LUT (the Posit16 analogue
+/// of [`super::gemm::decode_matrix`]).
+pub fn decode_matrix_p16(bits: &[u32]) -> Vec<Decoded> {
+    let t = p16_decode_table();
+    bits.iter().map(|&x| t[(x & 0xFFFF) as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p8_tables_spot_checks() {
+        // ONE = 0x40; 1+1 = 2 = 0x48, 1×1 = 1.
+        assert_eq!(p8_add(0x40, 0x40), 0x48);
+        assert_eq!(p8_mul(0x40, 0x40), 0x40);
+        // NaR propagates through the table.
+        assert_eq!(p8_add(0x80, 0x40), 0x80);
+        assert_eq!(p8_mul(0x80, 0x00), 0x80);
+        // Sub via negation: 2 − 1 = 1.
+        assert_eq!(p8_sub(0x48, 0x40), 0x40);
+    }
+
+    #[test]
+    fn p16_decode_lut_specials() {
+        assert_eq!(decode16(0), Decoded::Zero);
+        assert_eq!(decode16(0x8000), Decoded::NaR);
+        assert_eq!(decode16(0x4000), decode::<16>(0x4000));
+    }
+}

@@ -1,0 +1,37 @@
+//! Batched posit kernel engine — the native hot path.
+//!
+//! The scalar layer in [`crate::posit`] re-decodes every operand from its
+//! bit pattern on every operation; fine for the bit-exactness oracle, but
+//! an n×n GEMM pays O(n³) decodes where O(n²) suffice. This module is the
+//! decode-once batch layer the paper's throughput story maps onto
+//! (posits "as fast as floats" §7.2; the quire dominating cost as widths
+//! scale, Big-PERCIVAL; pipelined/batched posit datapaths, FPPU):
+//!
+//! - [`gemm`] — matrix pre-decode ([`gemm::decode_matrix`] /
+//!   [`gemm::decode_transposed`]), the row-parallel tiled drivers
+//!   [`gemm::gemm_p32_quire`] / [`gemm::gemm_p32_noquire`]
+//!   (`std::thread::scope` over row blocks), quire dot products, and the
+//!   scalar oracles every kernel is pinned against bit-for-bit.
+//! - [`lut`] — exhaustive Posit8 operation tables (64 KiB per op: every
+//!   `a ∘ b` precomputed) and the Posit16 decode table, for narrow-format
+//!   workloads where a load beats the decode/normalize/round pipeline.
+//!
+//! Invariants, enforced by `rust/tests/kernel_equiv.rs`:
+//! - every kernel result is **bit-identical** to the scalar path
+//!   (exhaustively for Posit8, ≥1M randomized cases for Posit16/32, and
+//!   whole-GEMM comparisons against the pre-existing scalar loops);
+//! - parallelism never changes results: work is split by output row and
+//!   the quire accumulation itself is exact, so scheduling cannot reorder
+//!   any rounding.
+//!
+//! Performance numbers for this layer are tracked across PRs in
+//! `BENCH_posit_kernels.json` (emitted by `cargo bench --bench posit_ops`).
+
+pub mod gemm;
+pub mod lut;
+
+pub use gemm::{
+    decode_matrix, decode_transposed, dot_p32_quire, gemm_p32_noquire, gemm_p32_noquire_scalar,
+    gemm_p32_quire, gemm_p32_quire_scalar, par_rows,
+};
+pub use lut::{decode16, p8_add, p8_mul, p8_sub};

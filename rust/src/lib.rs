@@ -16,11 +16,17 @@
 //!   kernels (`artifacts/*.hlo.txt`) from Rust.
 //! - [`coordinator`] — the L3 driver: job queue, backend routing
 //!   (simulator / PJRT / native), metrics.
+//! - [`kernels`] — batched posit engine: decode-once GEMM drivers,
+//!   windowed-quire accumulation, exhaustive Posit8 op LUTs and the
+//!   Posit16 decode LUT (the native hot path).
+//! - [`error`] — minimal crate-wide error/Result (anyhow replacement).
 
 pub mod bench;
 pub mod coordinator;
 pub mod core;
+pub mod error;
 pub mod isa;
+pub mod kernels;
 pub mod posit;
 pub mod runtime;
 pub mod synth;

@@ -64,8 +64,15 @@ pub fn sub<const N: u32>(a: u32, b: u32) -> u32 {
 }
 
 /// Posit multiplication.
+#[inline]
 pub fn mul<const N: u32>(a: u32, b: u32) -> u32 {
-    let (ua, ub) = match (decode::<N>(a), decode::<N>(b)) {
+    mul_unpacked::<N>(decode::<N>(a), decode::<N>(b))
+}
+
+/// Posit multiplication on pre-decoded operands (bit-identical to [`mul`];
+/// the kernel layer hoists the decode out of its loops).
+pub fn mul_unpacked<const N: u32>(a: Decoded, b: Decoded) -> u32 {
+    let (ua, ub) = match (a, b) {
         (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
         (Decoded::Zero, _) | (_, Decoded::Zero) => return 0,
         (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
@@ -89,8 +96,18 @@ pub enum Product {
 
 /// Decode both operands and form the exact (unrounded) product — the input
 /// to QMADD / QMSUB.
+#[inline]
 pub fn exact_product<const N: u32>(a: u32, b: u32) -> Product {
-    match (decode::<N>(a), decode::<N>(b)) {
+    exact_product_unpacked(decode::<N>(a), decode::<N>(b))
+}
+
+/// Exact (unrounded) product of two pre-decoded operands — the kernel
+/// layer's MAC input; decode cost is paid once per matrix, not per MAC.
+/// Width-independent: the decoded form already carries scale and
+/// significand.
+#[inline]
+pub fn exact_product_unpacked(a: Decoded, b: Decoded) -> Product {
+    match (a, b) {
         (Decoded::NaR, _) | (_, Decoded::NaR) => Product::NaR,
         (Decoded::Zero, _) | (_, Decoded::Zero) => Product::Zero,
         (Decoded::Num(ua), Decoded::Num(ub)) => Product::Num {

@@ -12,9 +12,26 @@
 //! The format is sized by the standard so that every bit of every posit
 //! product lands inside the register; the implementation `debug_assert`s
 //! that invariant rather than silently dropping bits.
+//!
+//! ## Windowed accumulation
+//!
+//! A software quire pays for its width on every operation if it always
+//! walks all limbs. This implementation tracks the **dirty limb range**
+//! `[lo_dirty, hi_dirty)` — the limbs that may be nonzero since the last
+//! `QCLR` (every limb outside the window is guaranteed zero). A typical
+//! MAC touches two of `Quire32`'s eight limbs, so clear/round/negate scan
+//! the window instead of the full register. Carry/borrow ripples extend
+//! the window as they go, which keeps the invariant exact; the tracking
+//! never changes results, only the work done to produce them (pinned by
+//! `dirty_window_invariant` below and the kernel-equivalence tests).
+//!
+//! The decode-once entry points [`Quire32::madd_unpacked`] /
+//! [`Quire32::msub_unpacked`] accept pre-decoded operands so batched
+//! kernels (see [`crate::kernels`]) pay the posit decode once per matrix
+//! rather than once per MAC.
 
-use super::ops::{exact_product, Product};
-use super::unpacked::{encode_round, nar, TOP};
+use super::ops::{exact_product_unpacked, Product};
+use super::unpacked::{decode, encode_round, nar, Decoded, TOP};
 
 macro_rules! quire_impl {
     ($(#[$doc:meta])* $name:ident, $n:expr, $limbs:expr) => {
@@ -26,6 +43,12 @@ macro_rules! quire_impl {
             /// NaR state: set when any contributing operand was NaR; sticky
             /// until cleared, like the hardware register.
             nar: bool,
+            /// Lowest limb index that may be nonzero (= `LIMBS` when the
+            /// accumulator is all-zero). Limbs below are exactly zero.
+            lo_dirty: usize,
+            /// One past the highest limb index that may be nonzero (= 0
+            /// when all-zero). Limbs at or above are exactly zero.
+            hi_dirty: usize,
         }
 
         impl Default for $name {
@@ -39,12 +62,14 @@ macro_rules! quire_impl {
             pub const N: u32 = $n;
             /// Total quire width in bits (16n).
             pub const BITS: u32 = 16 * $n;
+            /// Number of 64-bit limbs.
+            pub const LIMBS: usize = $limbs;
             /// Weight of the least-significant quire bit: 2^(16 − 8n).
             pub const LSB_EXP: i32 = 16 - 8 * ($n as i32);
 
             /// `QCLR.S` — a cleared quire (value 0).
             pub fn new() -> Self {
-                Self { limbs: [0; $limbs], nar: false }
+                Self { limbs: [0; $limbs], nar: false, lo_dirty: $limbs, hi_dirty: 0 }
             }
 
             /// True when the quire holds NaR.
@@ -52,43 +77,88 @@ macro_rules! quire_impl {
                 self.nar
             }
 
-            /// `QCLR.S`.
+            /// `QCLR.S` — zeroes only the dirty window.
             pub fn clear(&mut self) {
-                self.limbs = [0; $limbs];
+                if self.hi_dirty > self.lo_dirty {
+                    for l in &mut self.limbs[self.lo_dirty..self.hi_dirty] {
+                        *l = 0;
+                    }
+                }
+                self.lo_dirty = $limbs;
+                self.hi_dirty = 0;
                 self.nar = false;
             }
 
+            /// Mark limb `i` as possibly nonzero.
+            #[inline(always)]
+            fn mark(&mut self, i: usize) {
+                if i < self.lo_dirty {
+                    self.lo_dirty = i;
+                }
+                if i + 1 > self.hi_dirty {
+                    self.hi_dirty = i + 1;
+                }
+            }
+
+            /// Dirty limb window `(lo, hi)`: limbs outside `lo..hi` are
+            /// guaranteed zero (introspection for tests and tuning).
+            pub fn dirty_range(&self) -> (usize, usize) {
+                (self.lo_dirty, self.hi_dirty)
+            }
+
             /// `QNEG.S` — two's-complement negation of the accumulator.
+            ///
+            /// Limbs below the dirty window are zero; negating them leaves
+            /// them zero with the incoming carry still 1, so the walk can
+            /// start at `lo_dirty`. Everything from there to the top is
+            /// written (a nonzero value flips sign, so the high limbs
+            /// become part of the sign extension).
             pub fn neg(&mut self) {
-                if self.nar {
+                if self.nar || self.hi_dirty == 0 {
                     return;
                 }
                 let mut carry = 1u64;
-                for l in self.limbs.iter_mut() {
-                    let (v, c) = (!*l).overflowing_add(carry);
-                    *l = v;
+                for i in self.lo_dirty..$limbs {
+                    let (v, c) = (!self.limbs[i]).overflowing_add(carry);
+                    self.limbs[i] = v;
                     carry = c as u64;
                 }
+                self.hi_dirty = $limbs;
             }
 
             /// `QMADD.S rs1, rs2` — quire += rs1 × rs2, exactly.
             pub fn madd(&mut self, a: u32, b: u32) {
-                self.fused(a, b, false)
+                self.fused_unpacked(decode::<$n>(a), decode::<$n>(b), false)
             }
 
             /// `QMSUB.S rs1, rs2` — quire −= rs1 × rs2, exactly.
             pub fn msub(&mut self, a: u32, b: u32) {
-                self.fused(a, b, true)
+                self.fused_unpacked(decode::<$n>(a), decode::<$n>(b), true)
+            }
+
+            /// `QMADD.S` on pre-decoded operands — bit-identical to
+            /// [`Self::madd`]; the kernel layer decodes each matrix once
+            /// and calls this in its inner loops.
+            #[inline]
+            pub fn madd_unpacked(&mut self, a: Decoded, b: Decoded) {
+                self.fused_unpacked(a, b, false)
+            }
+
+            /// `QMSUB.S` on pre-decoded operands (see
+            /// [`Self::madd_unpacked`]).
+            #[inline]
+            pub fn msub_unpacked(&mut self, a: Decoded, b: Decoded) {
+                self.fused_unpacked(a, b, true)
             }
 
             /// Accumulate a single posit (quire += a), via a × 1.
             pub fn add_posit(&mut self, a: u32) {
                 const ONE: u32 = 1 << ($n - 2);
-                self.fused(a, ONE, false)
+                self.fused_unpacked(decode::<$n>(a), decode::<$n>(ONE), false)
             }
 
-            fn fused(&mut self, a: u32, b: u32, sub: bool) {
-                match exact_product::<$n>(a, b) {
+            fn fused_unpacked(&mut self, a: Decoded, b: Decoded, sub: bool) {
+                match exact_product_unpacked(a, b) {
                     Product::NaR => self.nar = true,
                     Product::Zero => {}
                     Product::Num { sign, scale, sig } => {
@@ -112,18 +182,22 @@ macro_rules! quire_impl {
                 }
             }
 
-            /// Add (or subtract) `val << pos` into the limb array.
+            /// Add (or subtract) `val << pos` into the limb array, marking
+            /// every limb written so the dirty window stays an
+            /// over-approximation of the nonzero limbs.
             fn add_shifted(&mut self, val: u64, pos: usize, negative: bool) {
                 let li = pos / 64;
                 let sh = pos % 64;
                 let lo = val << sh;
                 let hi = if sh == 0 { 0 } else { val >> (64 - sh) };
                 debug_assert!(li < $limbs && (hi == 0 || li + 1 < $limbs));
+                self.mark(li);
                 if negative {
                     let (v, b0) = self.limbs[li].overflowing_sub(lo);
                     self.limbs[li] = v;
                     let mut borrow = b0 as u64;
                     if li + 1 < $limbs {
+                        self.mark(li + 1);
                         let (v, b1) = self.limbs[li + 1].overflowing_sub(hi);
                         let (v, b2) = v.overflowing_sub(borrow);
                         self.limbs[li + 1] = v;
@@ -132,6 +206,7 @@ macro_rules! quire_impl {
                         while borrow != 0 && i < $limbs {
                             let (v, b) = self.limbs[i].overflowing_sub(1);
                             self.limbs[i] = v;
+                            self.mark(i);
                             borrow = b as u64;
                             i += 1;
                         }
@@ -141,6 +216,7 @@ macro_rules! quire_impl {
                     self.limbs[li] = v;
                     let mut carry = c0 as u64;
                     if li + 1 < $limbs {
+                        self.mark(li + 1);
                         let (v, c1) = self.limbs[li + 1].overflowing_add(hi);
                         let (v, c2) = v.overflowing_add(carry);
                         self.limbs[li + 1] = v;
@@ -149,6 +225,7 @@ macro_rules! quire_impl {
                         while carry != 0 && i < $limbs {
                             let (v, c) = self.limbs[i].overflowing_add(1);
                             self.limbs[i] = v;
+                            self.mark(i);
                             carry = c as u64;
                             i += 1;
                         }
@@ -157,25 +234,30 @@ macro_rules! quire_impl {
             }
 
             /// `QROUND.S` — round the accumulator to the nearest posit
-            /// (single rounding of the whole fused expression).
+            /// (single rounding of the whole fused expression). Scans only
+            /// the dirty window: a negative accumulator necessarily has a
+            /// dirty top limb (the sign bit is only reachable once a carry
+            /// or borrow has rippled there), so the window always covers
+            /// the magnitude.
             pub fn round(&self) -> u32 {
                 if self.nar {
                     return nar::<$n>();
                 }
                 let negative = self.limbs[$limbs - 1] >> 63 == 1;
+                debug_assert!(!negative || self.hi_dirty == $limbs);
                 // Magnitude in a scratch copy.
                 let mut mag = self.limbs;
                 if negative {
                     let mut carry = 1u64;
-                    for l in mag.iter_mut() {
+                    for l in mag.iter_mut().skip(self.lo_dirty) {
                         let (v, c) = (!*l).overflowing_add(carry);
                         *l = v;
                         carry = c as u64;
                     }
                 }
-                // Locate the most significant set bit.
+                // Locate the most significant set bit (window-bounded).
                 let mut msb: Option<usize> = None;
-                for i in (0..$limbs).rev() {
+                for i in (0..self.hi_dirty).rev() {
                     if mag[i] != 0 {
                         msb = Some(i * 64 + 63 - mag[i].leading_zeros() as usize);
                         break;
@@ -456,5 +538,83 @@ mod tests {
         assert_eq!(q.round(), from_f64::<16>(100.0));
         q.msub(one, negate::<16>(one));
         assert_eq!(q.round(), from_f64::<16>(101.0));
+    }
+
+    #[test]
+    fn unpacked_entry_points_match_packed() {
+        use crate::posit::unpacked::decode;
+        let mut x = 0xC0FF_EE00u32;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            x
+        };
+        let mut q1 = Quire32::new();
+        let mut q2 = Quire32::new();
+        for i in 0..5_000 {
+            let a = next();
+            let b = next();
+            if i % 3 == 0 {
+                q1.msub(a, b);
+                q2.msub_unpacked(decode::<32>(a), decode::<32>(b));
+            } else {
+                q1.madd(a, b);
+                q2.madd_unpacked(decode::<32>(a), decode::<32>(b));
+            }
+            assert_eq!(q1.limbs(), q2.limbs(), "iter {i}");
+            assert_eq!(q1.is_nar(), q2.is_nar(), "iter {i}");
+        }
+        assert_eq!(q1.round(), q2.round());
+    }
+
+    #[test]
+    fn dirty_window_invariant() {
+        // Limbs outside the dirty window must be exactly zero at every
+        // step, across adds, subs, negations and clears.
+        let mut x = 0xDA7Au32;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 17;
+            x ^= x << 5;
+            x
+        };
+        let check = |q: &Quire32| {
+            let (lo, hi) = q.dirty_range();
+            for (i, l) in q.limbs().iter().enumerate() {
+                if i < lo || i >= hi {
+                    assert_eq!(*l, 0, "limb {i} outside window [{lo},{hi}) is nonzero");
+                }
+            }
+        };
+        let mut q = Quire32::new();
+        check(&q);
+        for i in 0..20_000 {
+            match i % 7 {
+                0 => q.msub(next(), next()),
+                1 => q.neg(),
+                5 if i % 35 == 5 => q.clear(),
+                _ => q.madd(next(), next()),
+            }
+            check(&q);
+        }
+    }
+
+    #[test]
+    fn typical_mac_touches_few_limbs() {
+        // The windowed-accumulate claim: a single moderate-magnitude MAC
+        // dirties at most 2 of Quire32's 8 limbs.
+        let mut q = Quire32::new();
+        q.madd(from_f64::<32>(1.5), from_f64::<32>(-2.25));
+        let (lo, hi) = q.dirty_range();
+        assert!(hi == Quire32::LIMBS || hi - lo <= 2, "window [{lo},{hi})");
+        // Negative results ripple the borrow to the top (sign extension),
+        // so the window covers the high limbs — but a positive re-add
+        // shrinks nothing (the window only grows until cleared).
+        q.clear();
+        assert_eq!(q.dirty_range(), (Quire32::LIMBS, 0));
+        q.madd(from_f64::<32>(2.0), from_f64::<32>(3.0));
+        let (lo, hi) = q.dirty_range();
+        assert!(hi - lo <= 2, "positive MAC window [{lo},{hi})");
     }
 }

@@ -1,139 +1,39 @@
 //! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
 //! (`artifacts/*.hlo.txt`) and execute them from Rust.
 //!
-//! HLO *text* is the interchange format (jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids). Pattern follows
-//! `/opt/xla-example/src/bin/load_hlo.rs`.
+//! The real implementation needs the `xla` crate, which is not in the
+//! offline crate set, so it is gated behind the `pjrt` cargo feature
+//! (enabling it additionally requires adding the dependency by hand —
+//! see Cargo.toml). Default builds get [`Runtime`] as a stub with the
+//! same surface: artifact discovery works, execution fails cleanly with
+//! a descriptive error, and the coordinator's `Pjrt` backend degrades to
+//! an error instead of a crash.
 //!
 //! Python never runs on this path: once `make artifacts` has produced the
 //! HLO, the binary is self-contained.
 
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt_impl;
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
 
-/// A loaded PJRT CPU runtime with an executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifacts directory.
-    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf(), exes: HashMap::new() })
-    }
-
-    /// Platform string (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Does the artifact exist on disk?
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.dir.join(format!("{name}.hlo.txt")).exists()
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact on literal inputs; returns the elements of the
-    /// output tuple (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.load(name)?;
-        let exe = self.exes.get(name).expect("just loaded");
-        let out = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        let tuple = out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        Ok(tuple)
-    }
-
-    /// Run a posit32 GEMM artifact: `a`, `b` are n×n bit patterns.
-    pub fn gemm_p32(&mut self, variant: &str, n: usize, a: &[u32], b: &[u32]) -> Result<Vec<u32>> {
-        let name = format!("gemm_p32_{variant}_{n}");
-        let la = lit_i32_matrix(a, n)?;
-        let lb = lit_i32_matrix(b, n)?;
-        let out = self.execute(&name, &[la, lb])?;
-        let v: Vec<i32> = out[0]
-            .to_vec()
-            .map_err(|e| anyhow!("output of {name}: {e:?}"))?;
-        Ok(v.into_iter().map(|x| x as u32).collect())
-    }
-
-    /// Run the f32 GEMM artifact.
-    pub fn gemm_f32(&mut self, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        let name = format!("gemm_f32_{n}");
-        let la = xla::Literal::vec1(a)
-            .reshape(&[n as i64, n as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let lb = xla::Literal::vec1(b)
-            .reshape(&[n as i64, n as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let out = self.execute(&name, &[la, lb])?;
-        out[0].to_vec().map_err(|e| anyhow!("output of {name}: {e:?}"))
-    }
-
-    /// Run the LeNet max-pool artifact on posit bits (6×28×28 → 6×14×14).
-    pub fn maxpool_p32_lenet(&mut self, x: &[u32]) -> Result<Vec<u32>> {
-        anyhow::ensure!(x.len() == 6 * 28 * 28, "input must be 6x28x28");
-        let xs: Vec<i32> = x.iter().map(|v| *v as i32).collect();
-        let lx = xla::Literal::vec1(&xs)
-            .reshape(&[6, 28, 28])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
-        let out = self.execute("maxpool_p32_lenet", &[lx])?;
-        let v: Vec<i32> = out[0].to_vec().map_err(|e| anyhow!("output: {e:?}"))?;
-        Ok(v.into_iter().map(|x| x as u32).collect())
-    }
-}
-
-fn lit_i32_matrix(bits: &[u32], n: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(bits.len() == n * n, "matrix must be {n}x{n}");
-    let v: Vec<i32> = bits.iter().map(|b| *b as i32).collect();
-    xla::Literal::vec1(&v)
-        .reshape(&[n as i64, n as i64])
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
 /// Native quire GEMM (shared reference used by tests and the coordinator's
-/// `native` backend).
+/// `native` backend). Routes through the batched kernel layer; the scalar
+/// oracle it is pinned against lives in
+/// [`crate::kernels::gemm::gemm_p32_quire_scalar`].
 pub fn native_gemm_quire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
-    let mut q = crate::posit::Quire32::new();
-    let mut out = vec![0u32; n * n];
-    for i in 0..n {
-        for j in 0..n {
-            q.clear();
-            for k in 0..n {
-                q.madd(a[i * n + k], b[k * n + j]);
-            }
-            out[i * n + j] = q.round();
-        }
-    }
-    out
+    crate::kernels::gemm::gemm_p32_quire(n, a, b)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -151,13 +51,21 @@ mod tests {
 
     #[test]
     fn pjrt_gemm_matches_native_library() {
-        // Needs `make artifacts`; skip silently when not built.
+        // Needs `make artifacts` + the pjrt feature; skip silently when
+        // either is missing.
         let dir = artifacts_dir();
         if !dir.join("gemm_p32_quire_8.hlo.txt").exists() {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let mut rt = Runtime::cpu(&dir).expect("client");
+        let mut rt = match Runtime::cpu(&dir) {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in odd environments
+        };
+        if !rt.can_execute() {
+            eprintln!("skipping: built without the pjrt feature");
+            return;
+        }
         let mut rng = crate::testing::Rng::new(42);
         let n = 8;
         let a: Vec<u32> = (0..n * n)
@@ -166,6 +74,8 @@ mod tests {
         let b: Vec<u32> = (0..n * n)
             .map(|_| crate::posit::convert::from_f64::<32>(rng.range_f64(-2.0, 2.0)))
             .collect();
+        // Real runtime + artifacts present: execution failures are test
+        // failures, not skips.
         let got = rt.gemm_p32("quire", n, &a, &b).expect("pjrt run");
         let want = native_gemm_quire(n, &a, &b);
         assert_eq!(got, want, "PJRT artifact and native library must agree bit-for-bit");

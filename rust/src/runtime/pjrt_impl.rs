@@ -1,0 +1,114 @@
+//! Real PJRT runtime (requires the `pjrt` feature AND the `xla` crate,
+//! which must be added to Cargo.toml by hand — it is not in the offline
+//! crate set).
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids).
+
+use crate::err;
+use crate::error::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf(), exes: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether this runtime can actually execute artifacts (always true
+    /// for the real PJRT client; the stub returns false).
+    pub fn can_execute(&self) -> bool {
+        true
+    }
+
+    /// Does the artifact exist on disk?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| err!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| err!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on literal inputs; returns the elements of the
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = self.exes.get(name).expect("just loaded");
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| err!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetch {name}: {e:?}"))?;
+        let tuple = out.to_tuple().map_err(|e| err!("untuple {name}: {e:?}"))?;
+        Ok(tuple)
+    }
+
+    /// Run a posit32 GEMM artifact: `a`, `b` are n×n bit patterns.
+    pub fn gemm_p32(&mut self, variant: &str, n: usize, a: &[u32], b: &[u32]) -> Result<Vec<u32>> {
+        let name = format!("gemm_p32_{variant}_{n}");
+        let la = lit_i32_matrix(a, n)?;
+        let lb = lit_i32_matrix(b, n)?;
+        let out = self.execute(&name, &[la, lb])?;
+        let v: Vec<i32> = out[0].to_vec().map_err(|e| err!("output of {name}: {e:?}"))?;
+        Ok(v.into_iter().map(|x| x as u32).collect())
+    }
+
+    /// Run the f32 GEMM artifact.
+    pub fn gemm_f32(&mut self, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let name = format!("gemm_f32_{n}");
+        let la = xla::Literal::vec1(a)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| err!("reshape: {e:?}"))?;
+        let lb = xla::Literal::vec1(b)
+            .reshape(&[n as i64, n as i64])
+            .map_err(|e| err!("reshape: {e:?}"))?;
+        let out = self.execute(&name, &[la, lb])?;
+        out[0].to_vec().map_err(|e| err!("output of {name}: {e:?}"))
+    }
+
+    /// Run the LeNet max-pool artifact on posit bits (6×28×28 → 6×14×14).
+    pub fn maxpool_p32_lenet(&mut self, x: &[u32]) -> Result<Vec<u32>> {
+        crate::ensure!(x.len() == 6 * 28 * 28, "input must be 6x28x28");
+        let xs: Vec<i32> = x.iter().map(|v| *v as i32).collect();
+        let lx = xla::Literal::vec1(&xs)
+            .reshape(&[6, 28, 28])
+            .map_err(|e| err!("reshape: {e:?}"))?;
+        let out = self.execute("maxpool_p32_lenet", &[lx])?;
+        let v: Vec<i32> = out[0].to_vec().map_err(|e| err!("output: {e:?}"))?;
+        Ok(v.into_iter().map(|x| x as u32).collect())
+    }
+}
+
+fn lit_i32_matrix(bits: &[u32], n: usize) -> Result<xla::Literal> {
+    crate::ensure!(bits.len() == n * n, "matrix must be {n}x{n}");
+    let v: Vec<i32> = bits.iter().map(|b| *b as i32).collect();
+    xla::Literal::vec1(&v)
+        .reshape(&[n as i64, n as i64])
+        .map_err(|e| err!("reshape: {e:?}"))
+}

@@ -1,0 +1,65 @@
+//! Stub PJRT runtime for builds without the `pjrt` feature (the default).
+//!
+//! Keeps the full [`Runtime`] surface so the coordinator and examples
+//! compile unchanged: construction and artifact discovery succeed,
+//! anything that would actually need XLA returns a descriptive error.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Stand-in for the XLA-backed runtime.
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at an artifacts directory. Always succeeds;
+    /// execution reports the missing feature instead.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self { dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Whether this runtime can actually execute artifacts. The stub can
+    /// discover them on disk but never run them — callers that want to
+    /// *skip* (rather than fail) the PJRT leg should gate on this.
+    pub fn can_execute(&self) -> bool {
+        false
+    }
+
+    /// Does the artifact exist on disk?
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    fn unavailable(&self, what: &str) -> Error {
+        Error::msg(format!(
+            "PJRT backend unavailable for `{what}`: built without the `pjrt` \
+             feature (requires the xla crate, not in the offline set)"
+        ))
+    }
+
+    /// Load + compile an artifact.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        Err(self.unavailable(name))
+    }
+
+    /// Run a posit32 GEMM artifact: `a`, `b` are n×n bit patterns.
+    pub fn gemm_p32(&mut self, variant: &str, n: usize, _a: &[u32], _b: &[u32]) -> Result<Vec<u32>> {
+        Err(self.unavailable(&format!("gemm_p32_{variant}_{n}")))
+    }
+
+    /// Run the f32 GEMM artifact.
+    pub fn gemm_f32(&mut self, n: usize, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        Err(self.unavailable(&format!("gemm_f32_{n}")))
+    }
+
+    /// Run the LeNet max-pool artifact on posit bits (6×28×28 → 6×14×14).
+    pub fn maxpool_p32_lenet(&mut self, _x: &[u32]) -> Result<Vec<u32>> {
+        Err(self.unavailable("maxpool_p32_lenet"))
+    }
+}

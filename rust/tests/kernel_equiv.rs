@@ -1,0 +1,162 @@
+//! Kernel-vs-scalar bit-identity: the batched engine in
+//! `percival::kernels` (decode-once GEMM, windowed-quire MACs, LUT ops)
+//! must reproduce the scalar `percival::posit` paths bit-for-bit —
+//! exhaustively for Posit8, with ≥1M randomized cases each for
+//! Posit16/Posit32, and at whole-GEMM granularity against the pre-kernel
+//! scalar loops.
+
+use percival::bench::mse::{gemm_native, gemm_native_scalar, NativeKind};
+use percival::kernels::{gemm, lut};
+use percival::posit::unpacked::decode;
+use percival::posit::{ops, Quire8};
+use percival::testing::Rng;
+
+#[test]
+fn p8_lut_matches_scalar_exhaustive() {
+    // All 256×256 operand pairs, every LUT-backed op.
+    for a in 0..=0xFFu32 {
+        for b in 0..=0xFFu32 {
+            assert_eq!(lut::p8_add(a, b), ops::add::<8>(a, b), "add a={a:#04x} b={b:#04x}");
+            assert_eq!(lut::p8_mul(a, b), ops::mul::<8>(a, b), "mul a={a:#04x} b={b:#04x}");
+            assert_eq!(lut::p8_sub(a, b), ops::sub::<8>(a, b), "sub a={a:#04x} b={b:#04x}");
+        }
+    }
+}
+
+#[test]
+fn p8_unpacked_quire_matches_packed_exhaustive() {
+    // All 256×256 pairs through both QMADD entry points: identical limbs
+    // and identical rounding.
+    for a in 0..=0xFFu32 {
+        for b in 0..=0xFFu32 {
+            let mut packed = Quire8::new();
+            packed.madd(a, b);
+            let mut unpacked = Quire8::new();
+            unpacked.madd_unpacked(decode::<8>(a), decode::<8>(b));
+            assert_eq!(packed.limbs(), unpacked.limbs(), "a={a:#04x} b={b:#04x}");
+            assert_eq!(packed.is_nar(), unpacked.is_nar(), "a={a:#04x} b={b:#04x}");
+            assert_eq!(packed.round(), unpacked.round(), "a={a:#04x} b={b:#04x}");
+        }
+    }
+}
+
+#[test]
+fn p16_decode_lut_matches_scalar_exhaustive() {
+    for bits in 0..=0xFFFFu32 {
+        assert_eq!(lut::decode16(bits), decode::<16>(bits), "bits={bits:#06x}");
+    }
+}
+
+#[test]
+fn p16_unpacked_ops_randomized_1m() {
+    let mut rng = Rng::new(0x16_16);
+    for i in 0..1_000_000u32 {
+        let a = rng.posit_bits::<16>();
+        let b = rng.posit_bits::<16>();
+        assert_eq!(
+            ops::mul_unpacked::<16>(lut::decode16(a), lut::decode16(b)),
+            ops::mul::<16>(a, b),
+            "iter {i}: a={a:#06x} b={b:#06x}"
+        );
+        assert_eq!(
+            ops::exact_product_unpacked(decode::<16>(a), decode::<16>(b)),
+            ops::exact_product::<16>(a, b),
+            "iter {i}: a={a:#06x} b={b:#06x}"
+        );
+    }
+}
+
+#[test]
+fn p32_unpacked_ops_randomized_1m() {
+    use percival::Quire32;
+    let mut rng = Rng::new(0x32_32);
+    let mut packed = Quire32::new();
+    let mut unpacked = Quire32::new();
+    for i in 0..1_000_000u32 {
+        let a = rng.posit_bits::<32>();
+        let b = rng.posit_bits::<32>();
+        let (da, db) = (decode::<32>(a), decode::<32>(b));
+        assert_eq!(
+            ops::mul_unpacked::<32>(da, db),
+            ops::mul::<32>(a, b),
+            "iter {i}: a={a:#010x} b={b:#010x}"
+        );
+        assert_eq!(
+            ops::exact_product_unpacked(da, db),
+            ops::exact_product::<32>(a, b),
+            "iter {i}: a={a:#010x} b={b:#010x}"
+        );
+        // Running quire comparison on a sample (the full 1M would spend
+        // most of its time in limb asserts, not in finding divergence).
+        if i % 16 == 0 {
+            if i % 4096 == 0 {
+                packed.clear();
+                unpacked.clear();
+            }
+            if i % 32 == 0 {
+                packed.madd(a, b);
+                unpacked.madd_unpacked(da, db);
+            } else {
+                packed.msub(a, b);
+                unpacked.msub_unpacked(da, db);
+            }
+            assert_eq!(packed.limbs(), unpacked.limbs(), "iter {i}");
+            assert_eq!(packed.round(), unpacked.round(), "iter {i}");
+        }
+    }
+}
+
+#[test]
+fn gemm_kernel_bit_identical_to_scalar() {
+    // Raw random patterns (including zero/NaR) across sizes that cover
+    // the sequential path, the threaded path, and ragged row splits.
+    let mut rng = Rng::new(0x6E88);
+    for n in [1usize, 4, 17, 33, 72] {
+        let a: Vec<u32> = (0..n * n).map(|_| rng.posit_bits::<32>()).collect();
+        let b: Vec<u32> = (0..n * n).map(|_| rng.posit_bits::<32>()).collect();
+        assert_eq!(
+            gemm::gemm_p32_quire(n, &a, &b),
+            gemm::gemm_p32_quire_scalar(n, &a, &b),
+            "quire n={n}"
+        );
+        assert_eq!(
+            gemm::gemm_p32_noquire(n, &a, &b),
+            gemm::gemm_p32_noquire_scalar(n, &a, &b),
+            "no-quire n={n}"
+        );
+    }
+}
+
+#[test]
+fn gemm_native_path_is_kernel_and_matches_oracle() {
+    // The Table-6 path (`bench::mse::gemm_native`) routes its posit kinds
+    // through `kernels::gemm`; it must equal the preserved pre-kernel
+    // scalar loops exactly (f64 widening of posit bits is exact, so f64
+    // equality pins bit-identity).
+    let mut rng = Rng::new(0x7AB6);
+    let n = 48;
+    let af: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+    let bf: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+    for kind in [NativeKind::P32Quire, NativeKind::P32NoQuire] {
+        assert_eq!(
+            gemm_native(kind, n, &af, &bf),
+            gemm_native_scalar(kind, n, &af, &bf),
+            "{kind:?}"
+        );
+    }
+}
+
+#[test]
+fn dot_kernel_matches_quire_loop() {
+    use percival::Quire32;
+    let mut rng = Rng::new(0xD0);
+    for len in [0usize, 1, 100, 4097] {
+        let a: Vec<u32> = (0..len).map(|_| rng.posit_bits::<32>()).collect();
+        let b: Vec<u32> = (0..len).map(|_| rng.posit_bits::<32>()).collect();
+        let mut q = Quire32::new();
+        for (&x, &y) in a.iter().zip(&b) {
+            q.madd(x, y);
+        }
+        assert_eq!(gemm::dot_p32_quire(&a, &b), q.round(), "len={len}");
+    }
+}

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): build + full test suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+cargo build --release
+cargo test -q
