@@ -1,7 +1,9 @@
 //! Microbenchmarks of the native posit operations (the hot path of the
 //! Native backend and the simulator's PAU), the approximate-vs-exact
 //! div/sqrt ablation, and the batched kernel layer: decode-once quire
-//! MACs, Posit8 LUT ops, the Posit16 decode LUT, and the headline
+//! MACs, Posit8 LUT ops, the Posit16 decode LUT, the format-generic core
+//! at 64 bits (`p64_*`, `q64_*` and the `gemm128_p64_quire_*` rows — the
+//! 1024-bit-quire Big-PERCIVAL configuration), and the headline
 //! kernel-vs-scalar 256×256 quire GEMM.
 //!
 //! Emits machine-readable rows to `BENCH_posit_kernels.json` (merged with
@@ -11,7 +13,7 @@
 use percival::bench::harness::{bench, write_bench_json, JsonRow, Report};
 use percival::kernels::{gemm, lut};
 use percival::posit::unpacked::{decode, Decoded};
-use percival::posit::{divsqrt, ops, unpacked, Quire32};
+use percival::posit::{divsqrt, ops, unpacked, PositFormat, Quire32, Quire64, P64};
 use percival::testing::Rng;
 use std::hint::black_box;
 
@@ -179,6 +181,50 @@ fn main() {
     });
     record("p16_decode_lut", &r, N);
 
+    // ── Posit64 (format-generic core at 64 bits) ───────────────────────
+    let mut rng64 = Rng::new(0xBE7C_64);
+    let gen64 = |rng: &mut Rng| {
+        (0..N)
+            .map(|_| {
+                let b = rng.next_u64();
+                if b == 0 || b == 1 << 63 {
+                    1u64 << 62
+                } else {
+                    b
+                }
+            })
+            .collect::<Vec<u64>>()
+    };
+    let a64 = gen64(&mut rng64);
+    let b64 = gen64(&mut rng64);
+    let r = bench("posit64 add (64k ops)", 2, 10, || {
+        let mut acc = 0u64;
+        for i in 0..N {
+            acc ^= ops::add_n(64, black_box(a64[i]), black_box(b64[i]));
+        }
+        black_box(acc);
+    });
+    record("p64_add", &r, N);
+    let r = bench("posit64 mul (64k ops)", 2, 10, || {
+        let mut acc = 0u64;
+        for i in 0..N {
+            acc ^= ops::mul_n(64, black_box(a64[i]), black_box(b64[i]));
+        }
+        black_box(acc);
+    });
+    record("p64_mul", &r, N);
+
+    let da64: Vec<_> = a64.iter().map(|&x| P64::decode(x)).collect();
+    let db64: Vec<_> = b64.iter().map(|&x| P64::decode(x)).collect();
+    let r = bench("quire64 qmadd unpacked (64k MACs, 1024-bit quire)", 2, 10, || {
+        let mut q = Quire64::new();
+        for i in 0..N {
+            q.madd_unpacked(black_box(da64[i]), black_box(db64[i]));
+        }
+        black_box(q.round());
+    });
+    record("q64_madd_unpacked", &r, N);
+
     // ── Headline: 256×256 Posit32+quire GEMM, kernel vs pre-PR scalar ──
     let n = 256usize;
     let mut rng = Rng::new(0x6E33);
@@ -209,6 +255,36 @@ fn main() {
     let mut kernel_row = JsonRow::from_report("gemm256_p32_quire_kernel", &rk, macs);
     kernel_row.speedup_x = Some(speedup);
     rows.push(kernel_row);
+
+    // ── Posit64+quire GEMM: generic kernel vs decode-per-MAC scalar ────
+    let n64 = 128usize;
+    let mut rngg = Rng::new(0x6E64);
+    let ga64: Vec<u64> = (0..n64 * n64)
+        .map(|_| percival::posit::convert::from_f64_n(64, rngg.range_f64(-1.0, 1.0)))
+        .collect();
+    let gb64: Vec<u64> = (0..n64 * n64)
+        .map(|_| percival::posit::convert::from_f64_n(64, rngg.range_f64(-1.0, 1.0)))
+        .collect();
+    let macs64 = n64 * n64 * n64;
+    let rs64 = bench("gemm128 p64+quire scalar", 1, 3, || {
+        black_box(gemm::gemm_quire_scalar_gen::<P64>(n64, black_box(&ga64), black_box(&gb64)));
+    });
+    println!("  → {:.1} ns/op", rs64.ns_per_op(macs64));
+    rows.push(JsonRow::from_report("gemm128_p64_quire_scalar", &rs64, macs64));
+    let rk64 = bench("gemm128 p64+quire kernel", 1, 3, || {
+        black_box(gemm::gemm_quire::<P64>(n64, black_box(&ga64), black_box(&gb64)));
+    });
+    println!("  → {:.1} ns/op", rk64.ns_per_op(macs64));
+    assert_eq!(
+        gemm::gemm_quire::<P64>(n64, &ga64, &gb64),
+        gemm::gemm_quire_scalar_gen::<P64>(n64, &ga64, &gb64),
+        "p64 kernel and scalar GEMM must agree bit-for-bit"
+    );
+    let speedup64 = rs64.mean_s / rk64.mean_s;
+    println!("  → p64 kernel speedup over scalar: {speedup64:.2}×  (bit-identical ✓)");
+    let mut p64_row = JsonRow::from_report("gemm128_p64_quire_kernel", &rk64, macs64);
+    p64_row.speedup_x = Some(speedup64);
+    rows.push(p64_row);
 
     let path = "BENCH_posit_kernels.json";
     match write_bench_json(path, &rows) {

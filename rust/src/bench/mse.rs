@@ -8,10 +8,13 @@
 //! the full table in seconds.
 
 use crate::kernels;
-use crate::posit::Posit32;
+use crate::kernels::gemm::gemm_quire_scalar_gen;
+use crate::posit::convert::{from_f64_n, to_f64_n};
+use crate::posit::{Posit32, P64};
 use crate::testing::Rng;
 
-/// Native GEMM arithmetic kinds (mirror of [`super::gemm::GemmVariant`]).
+/// Native GEMM arithmetic kinds (mirror of [`super::gemm::GemmVariant`],
+/// plus the 64-bit posit row the `PositFormat` refactor enables).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NativeKind {
     F32Fused,
@@ -20,15 +23,22 @@ pub enum NativeKind {
     F64Unfused,
     P32Quire,
     P32NoQuire,
+    /// Posit⟨64,2⟩ with its 1024-bit quire (Big-PERCIVAL configuration):
+    /// extends the paper's Table-6/9-style accuracy comparison to 64 bits,
+    /// where the posit matches the f64 golden at the golden's own noise
+    /// floor.
+    P64Quire,
 }
 
 impl NativeKind {
-    /// Table 6 row order and labels.
-    pub const TABLE6: [NativeKind; 4] = [
+    /// Table 6 row order and labels (the Posit64 row extends the paper's
+    /// table; the original four kinds keep their order).
+    pub const TABLE6: [NativeKind; 5] = [
         NativeKind::F32Fused,
         NativeKind::P32Quire,
         NativeKind::F32Unfused,
         NativeKind::P32NoQuire,
+        NativeKind::P64Quire,
     ];
 
     pub fn label(&self) -> &'static str {
@@ -39,6 +49,7 @@ impl NativeKind {
             NativeKind::P32NoQuire => "Posit32 no quire",
             NativeKind::F64Fused => "IEEE 754 f64",
             NativeKind::F64Unfused => "IEEE 754 f64 no FMADD",
+            NativeKind::P64Quire => "Posit64",
         }
     }
 }
@@ -118,6 +129,16 @@ pub fn gemm_native(kind: NativeKind, n: usize, af: &[f64], bf: &[f64]) -> Vec<f6
                 *ci = Posit32(*v).to_f64();
             }
         }
+        NativeKind::P64Quire => {
+            // The format-generic kernel driver instantiated at 64 bits:
+            // decode-once, 1024-bit windowed quire, row-parallel.
+            let a: Vec<u64> = af.iter().map(|v| from_f64_n(64, *v)).collect();
+            let b: Vec<u64> = bf.iter().map(|v| from_f64_n(64, *v)).collect();
+            let bits = kernels::gemm::gemm_quire::<P64>(n, &a, &b);
+            for (ci, v) in c.iter_mut().zip(&bits) {
+                *ci = to_f64_n(64, *v);
+            }
+        }
     }
     c
 }
@@ -135,6 +156,11 @@ pub fn gemm_native_scalar(kind: NativeKind, n: usize, af: &[f64], bf: &[f64]) ->
     match kind {
         NativeKind::P32Quire => scalar(kernels::gemm::gemm_p32_quire_scalar),
         NativeKind::P32NoQuire => scalar(kernels::gemm::gemm_p32_noquire_scalar),
+        NativeKind::P64Quire => {
+            let a: Vec<u64> = af.iter().map(|v| from_f64_n(64, *v)).collect();
+            let b: Vec<u64> = bf.iter().map(|v| from_f64_n(64, *v)).collect();
+            gemm_quire_scalar_gen::<P64>(n, &a, &b).iter().map(|v| to_f64_n(64, *v)).collect()
+        }
         _ => gemm_native(kind, n, af, bf),
     }
 }
@@ -176,13 +202,30 @@ mod tests {
         let mut rng = Rng::new(0x04AC1E);
         let a = super::super::gemm::gen_matrix(&mut rng, n, 1);
         let b = super::super::gemm::gen_matrix(&mut rng, n, 1);
-        for kind in [NativeKind::P32Quire, NativeKind::P32NoQuire] {
+        for kind in [NativeKind::P32Quire, NativeKind::P32NoQuire, NativeKind::P64Quire] {
             assert_eq!(
                 gemm_native(kind, n, &a, &b),
                 gemm_native_scalar(kind, n, &a, &b),
                 "{kind:?}"
             );
         }
+    }
+
+    #[test]
+    fn p64_quire_tracks_the_golden_closest() {
+        // The 64-bit posit + 1024-bit quire row: its disagreement with the
+        // f64-FMA golden is the golden's own rounding noise, orders of
+        // magnitude below every 32-bit kind.
+        let n = 32;
+        let mut rng = Rng::new(0x64AC);
+        let a = super::super::gemm::gen_matrix(&mut rng, n, 0);
+        let b = super::super::gemm::gen_matrix(&mut rng, n, 0);
+        let golden = gemm_native(NativeKind::F64Fused, n, &a, &b);
+        let m64 = mse(&gemm_native(NativeKind::P64Quire, n, &a, &b), &golden);
+        let m32 = mse(&gemm_native(NativeKind::P32Quire, n, &a, &b), &golden);
+        let mf = mse(&gemm_native(NativeKind::F32Fused, n, &a, &b), &golden);
+        assert!(m64 < m32, "p64 {m64} !< p32 {m32}");
+        assert!(m64 < mf / 1e6, "p64 {m64} not ≪ f32 {mf}");
     }
 
     #[test]

@@ -137,14 +137,15 @@ mod tests {
     #[test]
     fn table6_small_has_expected_shape() {
         let rows = table6(&[16], None);
-        // 5 ranges × 4 kinds.
-        assert_eq!(rows.len(), 20);
-        // In the [-1,1] block, Posit32 (row idx 5: range 0 → rows 4..8,
-        // kind order: IEEE, Posit32, IEEE-noF, Posit-noQ) must have the
-        // smallest MSE.
-        let block = &rows[4..8];
+        // 5 ranges × 5 kinds (the four paper kinds + the Posit64 row).
+        assert_eq!(rows.len(), 25);
+        // In the [-1,1] block (range 0 → rows 5..10, kind order: IEEE,
+        // Posit32, IEEE-noF, Posit-noQ, Posit64), Posit32 must beat every
+        // 32-bit kind and Posit64 must beat everything.
+        let block = &rows[5..10];
         let vals: Vec<f64> = block.iter().map(|r| r[2].parse().unwrap()).collect();
         assert!(vals[1] < vals[0] && vals[1] < vals[2] && vals[1] < vals[3]);
+        assert!(vals[4] < vals[1], "Posit64 {} !< Posit32 {}", vals[4], vals[1]);
     }
 
     #[test]

@@ -11,13 +11,27 @@
 //! collects latency/throughput metrics, and cross-checks backends on
 //! demand. tokio is not in the offline crate set, so the pool is
 //! std::thread + mpsc (documented deviation, DESIGN.md §6).
+//!
+//! Since the `PositFormat` refactor the job surface is format-tagged:
+//! [`Job::Gemm`] / [`Job::Dot`] carry a [`Format`] and route to the
+//! generic kernel drivers — Posit8 through its operation LUTs, Posit16
+//! through its decode LUT, Posit32 and the 1024-bit-quire Posit64
+//! natively. Bit patterns travel as `u64` (lossless for every width); the
+//! legacy Posit32-only [`Job::GemmP32`] / [`Job::DotP32`] variants remain.
+//! Malformed jobs — shape mismatches, patterns outside the format's bit
+//! width, a backend that cannot run the format — come back as
+//! [`crate::error::Error`], never as worker panics.
 
 pub mod json;
 
 use crate::bench::gemm::{run_gemm_sim, GemmVariant};
 use crate::core::CoreConfig;
 use crate::error::Result;
-use crate::posit::Posit32;
+use crate::kernels::gemm::{
+    dot_quire, gemm_noquire, gemm_p8_noquire_lut, gemm_quire, KernelFormat,
+};
+use crate::posit::unpacked::mask_n;
+use crate::posit::{Posit32, PositBits, PositFormat, P16, P32, P64, P8};
 use crate::runtime::Runtime;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -35,24 +49,82 @@ pub enum Backend {
     Pjrt,
 }
 
+/// Posit format tag carried by the generic jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    P8,
+    P16,
+    P32,
+    P64,
+}
+
+impl Format {
+    /// Format width in bits.
+    pub fn width(self) -> u32 {
+        match self {
+            Format::P8 => 8,
+            Format::P16 => 16,
+            Format::P32 => 32,
+            Format::P64 => 64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::P8 => "Posit8",
+            Format::P16 => "Posit16",
+            Format::P32 => "Posit32",
+            Format::P64 => "Posit64",
+        }
+    }
+
+    pub const ALL: [Format; 4] = [Format::P8, Format::P16, Format::P32, Format::P64];
+}
+
 /// A numeric job.
 #[derive(Debug, Clone)]
 pub enum Job {
-    /// Posit32 GEMM (bit patterns, row-major n×n).
+    /// Posit32 GEMM (bit patterns, row-major n×n) — legacy fixed-format
+    /// variant, equivalent to `Gemm { fmt: Format::P32, … }`.
     GemmP32 { n: usize, a: Vec<u32>, b: Vec<u32>, quire: bool },
-    /// Dot product through the quire.
+    /// Dot product through the quire (Posit32, legacy variant).
     DotP32 { a: Vec<u32>, b: Vec<u32> },
+    /// Format-tagged GEMM on bit patterns carried as `u64` (lossless for
+    /// every width; patterns must fit the format's low bits).
+    Gemm { fmt: Format, n: usize, a: Vec<u64>, b: Vec<u64>, quire: bool },
+    /// Format-tagged quire dot product.
+    Dot { fmt: Format, a: Vec<u64>, b: Vec<u64> },
 }
 
 /// Result of a completed job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
+    /// Result bit patterns, `u32` view — filled for every format except
+    /// Posit64 (whose patterns do not fit; see [`Self::bits64`]).
     pub bits: Vec<u32>,
+    /// Result bit patterns, width-independent `u64` view (always filled).
+    pub bits64: Vec<u64>,
     pub backend: Backend,
     /// Host wall-clock for the execution.
     pub elapsed_s: f64,
     /// Simulated target seconds (Sim backend only).
     pub sim_seconds: Option<f64>,
+}
+
+impl JobResult {
+    fn from_u32(bits: Vec<u32>, backend: Backend, sim_seconds: Option<f64>) -> Self {
+        let bits64 = bits.iter().map(|&x| x as u64).collect();
+        Self { bits, bits64, backend, elapsed_s: 0.0, sim_seconds }
+    }
+
+    fn from_u64(fmt: Format, bits64: Vec<u64>, backend: Backend) -> Self {
+        let bits = if fmt.width() <= 32 {
+            bits64.iter().map(|&x| x as u32).collect()
+        } else {
+            Vec::new()
+        };
+        Self { bits, bits64, backend, elapsed_s: 0.0, sim_seconds: None }
+    }
 }
 
 /// Aggregated coordinator metrics.
@@ -148,6 +220,14 @@ impl Coordinator {
         self.submit(job, backend).recv().expect("worker alive")
     }
 
+    /// The batch API: submit every job up front (they pipeline through the
+    /// worker pool), then collect results in submission order. One bad job
+    /// yields its own `Err` without poisoning the rest of the batch.
+    pub fn run_batch(&self, jobs: Vec<(Job, Backend)>) -> Vec<Result<JobResult>> {
+        let rxs: Vec<_> = jobs.into_iter().map(|(job, be)| self.submit(job, be)).collect();
+        rxs.into_iter().map(|rx| rx.recv().expect("worker alive")).collect()
+    }
+
     /// Run the same job on several backends and require bit-identical
     /// results (the end-to-end cross-check).
     pub fn cross_check(&self, job: Job, backends: &[Backend]) -> Result<Vec<JobResult>> {
@@ -158,7 +238,7 @@ impl Coordinator {
         let results = results?;
         for w in results.windows(2) {
             crate::ensure!(
-                w[0].bits == w[1].bits,
+                w[0].bits == w[1].bits && w[0].bits64 == w[1].bits64,
                 "backend disagreement: {:?} vs {:?}",
                 w[0].backend,
                 w[1].backend
@@ -176,6 +256,40 @@ impl Coordinator {
             let _ = w.join();
         }
     }
+}
+
+/// Reject patterns that do not fit the format's bit width.
+fn check_patterns<F: PositFormat>(which: &str, bits: &[u64]) -> Result<()> {
+    let mask = mask_n(F::N);
+    crate::ensure!(
+        bits.iter().all(|&x| x & !mask == 0),
+        "{which}: pattern outside the {}-bit {} format",
+        F::N,
+        F::NAME
+    );
+    Ok(())
+}
+
+fn to_format<F: PositFormat>(bits: &[u64]) -> Vec<F::Bits> {
+    bits.iter().map(|&x| F::Bits::from_u64(x)).collect()
+}
+
+/// Format-generic GEMM dispatch onto the kernel drivers.
+fn gemm_any<F: KernelFormat>(n: usize, a: &[u64], b: &[u64], quire: bool) -> Result<Vec<u64>> {
+    check_patterns::<F>("a", a)?;
+    check_patterns::<F>("b", b)?;
+    let av = to_format::<F>(a);
+    let bv = to_format::<F>(b);
+    let c = if quire { gemm_quire::<F>(n, &av, &bv) } else { gemm_noquire::<F>(n, &av, &bv) };
+    Ok(c.into_iter().map(|x| x.to_u64()).collect())
+}
+
+fn dot_any<F: KernelFormat>(a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
+    check_patterns::<F>("a", a)?;
+    check_patterns::<F>("b", b)?;
+    let av = to_format::<F>(a);
+    let bv = to_format::<F>(b);
+    Ok(vec![dot_quire::<F>(&av, &bv).to_u64()])
 }
 
 fn execute(
@@ -204,24 +318,33 @@ fn execute(
                 b.len()
             );
         }
+        Job::Gemm { fmt, n, a, b, .. } => {
+            crate::ensure!(
+                a.len() == n * n && b.len() == n * n,
+                "Gemm({}) shape mismatch: n={n}, a.len()={}, b.len()={}",
+                fmt.name(),
+                a.len(),
+                b.len()
+            );
+        }
+        Job::Dot { fmt, a, b } => {
+            crate::ensure!(
+                a.len() == b.len(),
+                "Dot({}) length mismatch: {} vs {}",
+                fmt.name(),
+                a.len(),
+                b.len()
+            );
+        }
     }
     match (job, backend) {
         (Job::GemmP32 { n, a, b, quire }, Backend::Native) => {
             let bits = native_gemm(*n, a, b, *quire);
-            Ok(JobResult { bits, backend, elapsed_s: 0.0, sim_seconds: None })
+            Ok(JobResult::from_u32(bits, backend, None))
         }
         (Job::GemmP32 { n, a, b, quire }, Backend::Sim) => {
-            let variant = if *quire { GemmVariant::P32Quire } else { GemmVariant::P32NoQuire };
-            let af: Vec<f64> = a.iter().map(|x| Posit32(*x).to_f64()).collect();
-            let bf: Vec<f64> = b.iter().map(|x| Posit32(*x).to_f64()).collect();
-            let run = run_gemm_sim(CoreConfig::default(), variant, *n, &af, &bf, false);
-            let bits = run.result.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
-            Ok(JobResult {
-                bits,
-                backend,
-                elapsed_s: 0.0,
-                sim_seconds: Some(run.seconds),
-            })
+            let run = sim_gemm_p32(*n, a, b, *quire);
+            Ok(run)
         }
         (Job::GemmP32 { n, a, b, quire }, Backend::Pjrt) => {
             let dir = artifacts
@@ -232,18 +355,87 @@ fn execute(
             }
             let variant = if *quire { "quire" } else { "noquire" };
             let bits = rt.as_mut().unwrap().gemm_p32(variant, *n, a, b)?;
-            Ok(JobResult { bits, backend, elapsed_s: 0.0, sim_seconds: None })
+            Ok(JobResult::from_u32(bits, backend, None))
         }
         (Job::DotP32 { a, b }, _) => {
             // Decode-once kernel path (bit-identical to the scalar loop).
-            Ok(JobResult {
-                bits: vec![crate::kernels::gemm::dot_p32_quire(a, b)],
-                backend: Backend::Native,
-                elapsed_s: 0.0,
-                sim_seconds: None,
-            })
+            Ok(JobResult::from_u32(
+                vec![crate::kernels::gemm::dot_p32_quire(a, b)],
+                Backend::Native,
+                None,
+            ))
+        }
+        (Job::Gemm { fmt, n, a, b, quire }, Backend::Native) => {
+            let bits64 = match fmt {
+                // Posit8 without the quire runs entirely on its op LUTs.
+                Format::P8 if !*quire => {
+                    check_patterns::<P8>("a", a)?;
+                    check_patterns::<P8>("b", b)?;
+                    let av: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+                    let bv: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+                    gemm_p8_noquire_lut(*n, &av, &bv).into_iter().map(|x| x as u64).collect()
+                }
+                Format::P8 => gemm_any::<P8>(*n, a, b, *quire)?,
+                // Posit16 pre-decodes through its 2¹⁶-entry LUT inside the
+                // generic driver's decode hook.
+                Format::P16 => gemm_any::<P16>(*n, a, b, *quire)?,
+                Format::P32 => gemm_any::<P32>(*n, a, b, *quire)?,
+                Format::P64 => gemm_any::<P64>(*n, a, b, *quire)?,
+            };
+            Ok(JobResult::from_u64(*fmt, bits64, backend))
+        }
+        (Job::Gemm { fmt: Format::P32, n, a, b, quire }, Backend::Sim) => {
+            check_patterns::<P32>("a", a)?;
+            check_patterns::<P32>("b", b)?;
+            let av: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+            let bv: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+            let run = sim_gemm_p32(*n, &av, &bv, *quire);
+            Ok(run)
+        }
+        // The tagged P32 job is equivalent to the legacy `GemmP32` on every
+        // backend, including PJRT.
+        (Job::Gemm { fmt: Format::P32, n, a, b, quire }, Backend::Pjrt) => {
+            check_patterns::<P32>("a", a)?;
+            check_patterns::<P32>("b", b)?;
+            let av: Vec<u32> = a.iter().map(|&x| x as u32).collect();
+            let bv: Vec<u32> = b.iter().map(|&x| x as u32).collect();
+            let dir = artifacts
+                .clone()
+                .ok_or_else(|| crate::err!("no artifacts dir configured"))?;
+            if rt.is_none() {
+                *rt = Some(Runtime::cpu(dir)?);
+            }
+            let variant = if *quire { "quire" } else { "noquire" };
+            let bits = rt.as_mut().unwrap().gemm_p32(variant, *n, &av, &bv)?;
+            Ok(JobResult::from_u32(bits, backend, None))
+        }
+        (Job::Gemm { fmt, .. }, be @ (Backend::Sim | Backend::Pjrt)) => {
+            Err(crate::err!("backend {be:?} does not support {} jobs", fmt.name()))
+        }
+        (Job::Dot { fmt, a, b }, Backend::Native) => {
+            let bits64 = match fmt {
+                Format::P8 => dot_any::<P8>(a, b)?,
+                Format::P16 => dot_any::<P16>(a, b)?,
+                Format::P32 => dot_any::<P32>(a, b)?,
+                Format::P64 => dot_any::<P64>(a, b)?,
+            };
+            Ok(JobResult::from_u64(*fmt, bits64, Backend::Native))
+        }
+        (Job::Dot { fmt, .. }, be @ (Backend::Sim | Backend::Pjrt)) => {
+            Err(crate::err!("backend {be:?} does not support {} dot jobs", fmt.name()))
         }
     }
+}
+
+/// Posit32 GEMM on the cycle-accurate simulator (shared by the legacy and
+/// format-tagged job paths).
+fn sim_gemm_p32(n: usize, a: &[u32], b: &[u32], quire: bool) -> JobResult {
+    let variant = if quire { GemmVariant::P32Quire } else { GemmVariant::P32NoQuire };
+    let af: Vec<f64> = a.iter().map(|x| Posit32(*x).to_f64()).collect();
+    let bf: Vec<f64> = b.iter().map(|x| Posit32(*x).to_f64()).collect();
+    let run = run_gemm_sim(CoreConfig::default(), variant, n, &af, &bf, false);
+    let bits: Vec<u32> = run.result.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+    JobResult::from_u32(bits, Backend::Sim, Some(run.seconds))
 }
 
 /// Native GEMM used by the `Native` backend — the batched kernel layer
@@ -259,6 +451,7 @@ pub fn native_gemm(n: usize, a: &[u32], b: &[u32], quire: bool) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::gemm::{gemm_noquire_scalar_gen, gemm_quire_scalar_gen};
     use crate::posit::convert::from_f64;
     use crate::testing::Rng;
 
@@ -276,6 +469,148 @@ mod tests {
         let results = co.cross_check(job, &[Backend::Native, Backend::Sim]).expect("agree");
         assert_eq!(results.len(), 2);
         assert!(results[1].sim_seconds.unwrap() > 0.0);
+        co.shutdown();
+    }
+
+    #[test]
+    fn tagged_p32_matches_legacy_job() {
+        let mut rng = Rng::new(15);
+        let n = 5;
+        let (a, b) = (mat(&mut rng, n), mat(&mut rng, n));
+        let co = Coordinator::new(1, None);
+        let legacy = co
+            .run(Job::GemmP32 { n, a: a.clone(), b: b.clone(), quire: true }, Backend::Native)
+            .unwrap();
+        let tagged = co
+            .run(
+                Job::Gemm {
+                    fmt: Format::P32,
+                    n,
+                    a: a.iter().map(|&x| x as u64).collect(),
+                    b: b.iter().map(|&x| x as u64).collect(),
+                    quire: true,
+                },
+                Backend::Native,
+            )
+            .unwrap();
+        assert_eq!(legacy.bits, tagged.bits);
+        assert_eq!(legacy.bits64, tagged.bits64);
+        co.shutdown();
+    }
+
+    #[test]
+    fn batch_api_routes_narrow_formats_through_luts() {
+        // P16 quire GEMM (decode LUT) and P8 no-quire GEMM (op LUTs)
+        // through the batch API, pinned against the decode-per-MAC
+        // oracles.
+        let mut rng = Rng::new(0xBA7);
+        let n = 6;
+        let a8: Vec<u64> = (0..n * n).map(|_| (rng.posit_bits::<8>()) as u64).collect();
+        let b8: Vec<u64> = (0..n * n).map(|_| (rng.posit_bits::<8>()) as u64).collect();
+        let a16: Vec<u64> = (0..n * n).map(|_| (rng.posit_bits::<16>()) as u64).collect();
+        let b16: Vec<u64> = (0..n * n).map(|_| (rng.posit_bits::<16>()) as u64).collect();
+        let co = Coordinator::new(2, None);
+        let results = co.run_batch(vec![
+            (
+                Job::Gemm {
+                    fmt: Format::P8,
+                    n,
+                    a: a8.clone(),
+                    b: b8.clone(),
+                    quire: false,
+                },
+                Backend::Native,
+            ),
+            (
+                Job::Gemm {
+                    fmt: Format::P16,
+                    n,
+                    a: a16.clone(),
+                    b: b16.clone(),
+                    quire: true,
+                },
+                Backend::Native,
+            ),
+        ]);
+        let a8n: Vec<u32> = a8.iter().map(|&x| x as u32).collect();
+        let b8n: Vec<u32> = b8.iter().map(|&x| x as u32).collect();
+        let a16n: Vec<u32> = a16.iter().map(|&x| x as u32).collect();
+        let b16n: Vec<u32> = b16.iter().map(|&x| x as u32).collect();
+        assert_eq!(
+            results[0].as_ref().unwrap().bits,
+            gemm_noquire_scalar_gen::<P8>(n, &a8n, &b8n)
+        );
+        assert_eq!(
+            results[1].as_ref().unwrap().bits,
+            gemm_quire_scalar_gen::<P16>(n, &a16n, &b16n)
+        );
+        assert_eq!(co.metrics.completed.load(Ordering::Relaxed), 2);
+        co.shutdown();
+    }
+
+    #[test]
+    fn p64_gemm_end_to_end() {
+        use crate::posit::convert::from_f64_n;
+        let mut rng = Rng::new(0x64);
+        let n = 5;
+        let a: Vec<u64> = (0..n * n).map(|_| from_f64_n(64, rng.range_f64(-2.0, 2.0))).collect();
+        let b: Vec<u64> = (0..n * n).map(|_| from_f64_n(64, rng.range_f64(-2.0, 2.0))).collect();
+        let co = Coordinator::new(1, None);
+        let r = co
+            .run(
+                Job::Gemm { fmt: Format::P64, n, a: a.clone(), b: b.clone(), quire: true },
+                Backend::Native,
+            )
+            .unwrap();
+        assert!(r.bits.is_empty(), "u32 view must be absent for Posit64");
+        assert_eq!(r.bits64, gemm_quire_scalar_gen::<P64>(n, &a, &b));
+        // Dot as well.
+        let d = co.run(Job::Dot { fmt: Format::P64, a, b }, Backend::Native).unwrap();
+        assert_eq!(d.bits64.len(), 1);
+        co.shutdown();
+    }
+
+    #[test]
+    fn malformed_jobs_are_errors_not_panics() {
+        let co = Coordinator::new(1, None);
+        // Shape mismatch.
+        let res = co.run(
+            Job::Gemm { fmt: Format::P16, n: 3, a: vec![0; 9], b: vec![0; 8], quire: true },
+            Backend::Native,
+        );
+        assert!(res.is_err());
+        // Pattern outside the format width.
+        let res = co.run(
+            Job::Gemm { fmt: Format::P8, n: 1, a: vec![0x100], b: vec![0], quire: true },
+            Backend::Native,
+        );
+        assert!(res.is_err());
+        // Backend without support for the format.
+        let res = co.run(
+            Job::Gemm { fmt: Format::P64, n: 1, a: vec![0], b: vec![0], quire: true },
+            Backend::Sim,
+        );
+        assert!(res.is_err());
+        // Dot jobs honour the requested backend the same way.
+        let res = co.run(
+            Job::Dot { fmt: Format::P16, a: vec![0x4000], b: vec![0x4000] },
+            Backend::Sim,
+        );
+        assert!(res.is_err());
+        // Tagged P32 on PJRT matches the legacy job: clean error when no
+        // artifacts dir was configured.
+        let res = co.run(
+            Job::Gemm { fmt: Format::P32, n: 1, a: vec![0], b: vec![0], quire: true },
+            Backend::Pjrt,
+        );
+        assert!(res.is_err());
+        assert_eq!(co.metrics.errors.load(Ordering::Relaxed), 5);
+        // The pool is still alive and draining.
+        let ok = co.run(
+            Job::Gemm { fmt: Format::P8, n: 1, a: vec![0x40], b: vec![0x40], quire: true },
+            Backend::Native,
+        );
+        assert_eq!(ok.unwrap().bits, vec![0x40]);
         co.shutdown();
     }
 

@@ -1,40 +1,85 @@
-//! Decode-once GEMM and dot-product drivers.
+//! Decode-once GEMM and dot-product drivers, format-generic.
 //!
 //! Strategy (all of it semantics-preserving, pinned by
-//! `rust/tests/kernel_equiv.rs`):
+//! `rust/tests/kernel_equiv.rs` and `rust/tests/format_generic.rs`):
 //!
 //! 1. **Pre-decode** both operand matrices into [`Decoded`] form — O(n²)
-//!    decodes instead of the scalar path's O(n³).
+//!    decodes instead of the scalar path's O(n³). The decode itself is a
+//!    [`KernelFormat`] hook: Posit16 routes through its exhaustive decode
+//!    LUT, Posit8 additionally has an all-LUT no-quire driver, Posit32 and
+//!    Posit64 decode natively.
 //! 2. **Transpose B during decode** so the k-loop walks both operands
 //!    contiguously (the scalar path strides B by a full row per MAC).
 //! 3. **Windowed quire accumulation** via
-//!    [`madd_unpacked`](crate::posit::Quire32::madd_unpacked): the quire
+//!    [`madd_unpacked`](crate::posit::Quire::madd_unpacked): the quire
 //!    tracks its dirty limb range, so clear/round pay for the limbs a dot
-//!    product actually touched, not the full 512-bit register.
+//!    product actually touched, not the full 512- (or 1024-) bit register.
 //! 4. **Row-parallel tiling**: output rows are split into per-thread
 //!    blocks driven by `std::thread::scope`. Each output element is an
 //!    independent exact accumulation, so threading cannot change a single
 //!    rounding.
 //!
-//! The pre-existing scalar loops are kept verbatim as `*_scalar` oracles.
+//! The pre-existing Posit32 scalar loops are kept verbatim as `*_scalar`
+//! oracles; the other formats pin against the generic
+//! [`gemm_quire_scalar_gen`] / [`gemm_noquire_scalar_gen`] decode-per-MAC
+//! loops.
 
 use crate::posit::unpacked::{decode, Decoded};
-use crate::posit::{ops, Quire32};
+use crate::posit::{ops, PositFormat, Quire, Quire32, P16, P32, P64, P8};
 
-/// Decode a slice of `N`-bit posit patterns (row-major matrix or vector)
-/// into unpacked form, once.
+/// A [`PositFormat`] the batched kernel layer can drive. The only hook is
+/// the batch decode, so narrow formats can substitute their LUTs; every
+/// driver below is written once against this trait.
+pub trait KernelFormat: PositFormat {
+    /// Decode a slice of `Self`-format patterns (row-major matrix or
+    /// vector) into unpacked form, once.
+    fn decode_slice(bits: &[Self::Bits]) -> Vec<Decoded<Self::Sig>> {
+        bits.iter().map(|&x| Self::decode(x)).collect()
+    }
+}
+
+impl KernelFormat for P8 {}
+
+impl KernelFormat for P16 {
+    /// Posit16 has only 2¹⁶ patterns: batch decode is a table walk.
+    fn decode_slice(bits: &[u32]) -> Vec<Decoded<u32>> {
+        super::lut::decode_matrix_p16(bits)
+    }
+}
+
+impl KernelFormat for P32 {}
+
+impl KernelFormat for P64 {}
+
+/// Decode a slice of `N`-bit posit patterns into unpacked form, once
+/// (narrow const-generic entry point, kept for the benches and oracles).
 pub fn decode_matrix<const N: u32>(bits: &[u32]) -> Vec<Decoded> {
     bits.iter().map(|&x| decode::<N>(x)).collect()
 }
 
 /// Decode a row-major n×n matrix directly into its transpose, so GEMM's
-/// inner k-loop reads both operands contiguously.
+/// inner k-loop reads both operands contiguously (narrow const-generic
+/// entry point).
 pub fn decode_transposed<const N: u32>(bits: &[u32], n: usize) -> Vec<Decoded> {
     assert_eq!(bits.len(), n * n);
     let mut out = vec![Decoded::Zero; n * n];
     for k in 0..n {
         for j in 0..n {
             out[j * n + k] = decode::<N>(bits[k * n + j]);
+        }
+    }
+    out
+}
+
+/// Format-generic transposed batch decode (uses the format's
+/// [`KernelFormat::decode_slice`] hook, then permutes).
+pub fn decode_transposed_gen<F: KernelFormat>(bits: &[F::Bits], n: usize) -> Vec<Decoded<F::Sig>> {
+    assert_eq!(bits.len(), n * n);
+    let d = F::decode_slice(bits);
+    let mut out = vec![Decoded::Zero; n * n];
+    for k in 0..n {
+        for j in 0..n {
+            out[j * n + k] = d[k * n + j];
         }
     }
     out
@@ -61,9 +106,10 @@ fn worker_threads() -> usize {
 /// loop for small outputs or single-core machines. Because each row is
 /// written by exactly one thread and `f` is deterministic per row, the
 /// result is identical to the sequential loop.
-pub fn par_rows<F>(rows: usize, cols: usize, out: &mut [u32], f: F)
+pub fn par_rows<T, F>(rows: usize, cols: usize, out: &mut [T], f: F)
 where
-    F: Fn(usize, &mut [u32]) + Sync,
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
 {
     assert_eq!(out.len(), rows * cols);
     if rows == 0 || cols == 0 {
@@ -91,18 +137,19 @@ where
     });
 }
 
-/// Posit32 + quire GEMM, batched: C = A·B on bit patterns (row-major
-/// n×n). Bit-identical to [`gemm_p32_quire_scalar`] — the quire is exact,
-/// so neither pre-decoding nor row scheduling can change any rounding.
-pub fn gemm_p32_quire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+/// Format-generic quire GEMM, batched: C = A·B on bit patterns (row-major
+/// n×n), decode-once, windowed-quire, row-parallel. Bit-identical to the
+/// decode-per-MAC scalar loop — the quire is exact, so neither
+/// pre-decoding nor row scheduling can change any rounding.
+pub fn gemm_quire<F: KernelFormat>(n: usize, a: &[F::Bits], b: &[F::Bits]) -> Vec<F::Bits> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);
-    let da = decode_matrix::<32>(a);
-    let dbt = decode_transposed::<32>(b, n);
-    let mut c = vec![0u32; n * n];
+    let da = F::decode_slice(a);
+    let dbt = decode_transposed_gen::<F>(b, n);
+    let mut c = vec![F::ZERO_BITS; n * n];
     par_rows(n, n, &mut c, |i, row| {
         let ar = &da[i * n..(i + 1) * n];
-        let mut q = Quire32::new();
+        let mut q = Quire::<F>::new();
         for (j, out) in row.iter_mut().enumerate() {
             q.clear();
             let bc = &dbt[j * n..(j + 1) * n];
@@ -115,23 +162,23 @@ pub fn gemm_p32_quire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
     c
 }
 
-/// Posit32 GEMM without the quire (pmul + padd per MAC), batched: the
-/// multiplies run on pre-decoded operands; the running posit addition is
-/// inherently scalar (each step rounds), and the k-order is preserved so
-/// every intermediate rounding matches [`gemm_p32_noquire_scalar`].
-pub fn gemm_p32_noquire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+/// Format-generic no-quire GEMM (pmul + padd per MAC), batched: multiplies
+/// run on pre-decoded operands; the running posit addition is inherently
+/// scalar (each step rounds), and the k-order is preserved so every
+/// intermediate rounding matches the scalar loop.
+pub fn gemm_noquire<F: KernelFormat>(n: usize, a: &[F::Bits], b: &[F::Bits]) -> Vec<F::Bits> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);
-    let da = decode_matrix::<32>(a);
-    let dbt = decode_transposed::<32>(b, n);
-    let mut c = vec![0u32; n * n];
+    let da = F::decode_slice(a);
+    let dbt = decode_transposed_gen::<F>(b, n);
+    let mut c = vec![F::ZERO_BITS; n * n];
     par_rows(n, n, &mut c, |i, row| {
         let ar = &da[i * n..(i + 1) * n];
         for (j, out) in row.iter_mut().enumerate() {
             let bc = &dbt[j * n..(j + 1) * n];
-            let mut acc = 0u32; // posit zero
+            let mut acc = F::ZERO_BITS;
             for k in 0..n {
-                acc = ops::add::<32>(acc, ops::mul_unpacked::<32>(ar[k], bc[k]));
+                acc = F::add(acc, F::mul_unpacked(ar[k], bc[k]));
             }
             *out = acc;
         }
@@ -139,19 +186,71 @@ pub fn gemm_p32_noquire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
     c
 }
 
-/// Quire dot product on bit patterns, decode-once (the coordinator's
-/// `DotP32` job and the dot-product examples).
-pub fn dot_p32_quire(a: &[u32], b: &[u32]) -> u32 {
+/// Posit8 no-quire GEMM entirely through the exhaustive operation LUTs:
+/// each MAC is two table loads, no decode/normalize/round pipeline at all.
+/// Bit-identical to [`gemm_noquire::<P8>`] because the tables are built
+/// from the scalar ops.
+pub fn gemm_p8_noquire_lut(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let add_t = super::lut::p8_add_table();
+    let mul_t = super::lut::p8_mul_table();
+    // Transposed u8 copy of B for a contiguous k-loop.
+    let mut bt = vec![0u8; n * n];
+    for k in 0..n {
+        for j in 0..n {
+            bt[j * n + k] = (b[k * n + j] & 0xFF) as u8;
+        }
+    }
+    let mut c = vec![0u32; n * n];
+    par_rows(n, n, &mut c, |i, row| {
+        for (j, out) in row.iter_mut().enumerate() {
+            let bc = &bt[j * n..(j + 1) * n];
+            let mut acc = 0u32;
+            for k in 0..n {
+                let p = mul_t[(((a[i * n + k] & 0xFF) << 8) | bc[k] as u32) as usize] as u32;
+                acc = add_t[((acc << 8) | p) as usize] as u32;
+            }
+            *out = acc;
+        }
+    });
+    c
+}
+
+/// Format-generic quire dot product on bit patterns.
+pub fn dot_quire<F: KernelFormat>(a: &[F::Bits], b: &[F::Bits]) -> F::Bits {
     assert_eq!(a.len(), b.len());
-    let mut q = Quire32::new();
+    let mut q = Quire::<F>::new();
     for (&x, &y) in a.iter().zip(b) {
-        q.madd_unpacked(decode::<32>(x), decode::<32>(y));
+        q.madd_unpacked(F::decode(x), F::decode(y));
     }
     q.round()
 }
 
-/// The pre-PR scalar quire GEMM, kept verbatim as the bit-exactness
-/// oracle (re-decodes both operands on every MAC).
+// ── Posit32 entry points (the paper's format), kept by name ────────────
+
+/// Posit32 + quire GEMM, batched (see [`gemm_quire`]). Bit-identical to
+/// [`gemm_p32_quire_scalar`].
+pub fn gemm_p32_quire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    gemm_quire::<P32>(n, a, b)
+}
+
+/// Posit32 GEMM without the quire (see [`gemm_noquire`]). Bit-identical to
+/// [`gemm_p32_noquire_scalar`].
+pub fn gemm_p32_noquire(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
+    gemm_noquire::<P32>(n, a, b)
+}
+
+/// Quire dot product on Posit32 bit patterns (the coordinator's dot job
+/// and the dot-product examples).
+pub fn dot_p32_quire(a: &[u32], b: &[u32]) -> u32 {
+    dot_quire::<P32>(a, b)
+}
+
+// ── Scalar oracles ─────────────────────────────────────────────────────
+
+/// The pre-kernel scalar quire GEMM, kept verbatim as the Posit32
+/// bit-exactness oracle (re-decodes both operands on every MAC).
 pub fn gemm_p32_quire_scalar(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);
@@ -169,7 +268,7 @@ pub fn gemm_p32_quire_scalar(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
     out
 }
 
-/// The pre-PR scalar no-quire GEMM (oracle for [`gemm_p32_noquire`]).
+/// The pre-kernel scalar no-quire GEMM (oracle for [`gemm_p32_noquire`]).
 pub fn gemm_p32_noquire_scalar(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);
@@ -180,6 +279,46 @@ pub fn gemm_p32_noquire_scalar(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
             for k in 0..n {
                 let p = ops::mul::<32>(a[i * n + k], b[k * n + j]);
                 acc = ops::add::<32>(acc, p);
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Format-generic decode-per-MAC quire GEMM — the scalar oracle for the
+/// non-Posit32 formats (sequential, no pre-decode, no threading).
+pub fn gemm_quire_scalar_gen<F: KernelFormat>(n: usize, a: &[F::Bits], b: &[F::Bits]) -> Vec<F::Bits> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut q = Quire::<F>::new();
+    let mut out = vec![F::ZERO_BITS; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            q.clear();
+            for k in 0..n {
+                q.madd(a[i * n + k], b[k * n + j]);
+            }
+            out[i * n + j] = q.round();
+        }
+    }
+    out
+}
+
+/// Format-generic decode-per-MAC no-quire GEMM oracle.
+pub fn gemm_noquire_scalar_gen<F: KernelFormat>(
+    n: usize,
+    a: &[F::Bits],
+    b: &[F::Bits],
+) -> Vec<F::Bits> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    let mut out = vec![F::ZERO_BITS; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = F::ZERO_BITS;
+            for k in 0..n {
+                acc = F::add(acc, F::mul(a[i * n + k], b[k * n + j]));
             }
             out[i * n + j] = acc;
         }
@@ -222,6 +361,62 @@ mod tests {
     }
 
     #[test]
+    fn generic_drivers_match_scalar_oracles_p8_p16() {
+        let mut rng = Rng::new(0x0816);
+        for n in [1usize, 5, 13] {
+            let a8: Vec<u32> = (0..n * n).map(|_| rng.posit_bits::<8>()).collect();
+            let b8: Vec<u32> = (0..n * n).map(|_| rng.posit_bits::<8>()).collect();
+            assert_eq!(
+                gemm_quire::<P8>(n, &a8, &b8),
+                gemm_quire_scalar_gen::<P8>(n, &a8, &b8),
+                "p8 quire n={n}"
+            );
+            assert_eq!(
+                gemm_noquire::<P8>(n, &a8, &b8),
+                gemm_noquire_scalar_gen::<P8>(n, &a8, &b8),
+                "p8 noquire n={n}"
+            );
+            // The all-LUT Posit8 driver is bit-identical to the generic one.
+            assert_eq!(
+                gemm_p8_noquire_lut(n, &a8, &b8),
+                gemm_noquire::<P8>(n, &a8, &b8),
+                "p8 lut n={n}"
+            );
+            let a16: Vec<u32> = (0..n * n).map(|_| rng.posit_bits::<16>()).collect();
+            let b16: Vec<u32> = (0..n * n).map(|_| rng.posit_bits::<16>()).collect();
+            assert_eq!(
+                gemm_quire::<P16>(n, &a16, &b16),
+                gemm_quire_scalar_gen::<P16>(n, &a16, &b16),
+                "p16 quire n={n} (LUT decode path)"
+            );
+            assert_eq!(
+                gemm_noquire::<P16>(n, &a16, &b16),
+                gemm_noquire_scalar_gen::<P16>(n, &a16, &b16),
+                "p16 noquire n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn generic_drivers_match_scalar_oracles_p64() {
+        let mut rng = Rng::new(0x64_64);
+        for n in [1usize, 4, 9] {
+            let a: Vec<u64> = (0..n * n).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..n * n).map(|_| rng.next_u64()).collect();
+            assert_eq!(
+                gemm_quire::<P64>(n, &a, &b),
+                gemm_quire_scalar_gen::<P64>(n, &a, &b),
+                "p64 quire n={n}"
+            );
+            assert_eq!(
+                gemm_noquire::<P64>(n, &a, &b),
+                gemm_noquire_scalar_gen::<P64>(n, &a, &b),
+                "p64 noquire n={n}"
+            );
+        }
+    }
+
+    #[test]
     fn dot_matches_scalar_loop() {
         let mut rng = Rng::new(0xD07);
         let a: Vec<u32> = (0..257).map(|_| rng.posit_bits::<32>()).collect();
@@ -231,6 +426,19 @@ mod tests {
             q.madd(x, y);
         }
         assert_eq!(dot_p32_quire(&a, &b), q.round());
+    }
+
+    #[test]
+    fn dot_quire_p64() {
+        use crate::posit::Quire64;
+        let mut rng = Rng::new(0xD64);
+        let a: Vec<u64> = (0..257).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..257).map(|_| rng.next_u64()).collect();
+        let mut q = Quire64::new();
+        for (&x, &y) in a.iter().zip(&b) {
+            q.madd(x, y);
+        }
+        assert_eq!(dot_quire::<P64>(&a, &b), q.round());
     }
 
     #[test]
@@ -258,9 +466,11 @@ mod tests {
         let bits = mat(&mut rng, n);
         let d = decode_matrix::<32>(&bits);
         let dt = decode_transposed::<32>(&bits, n);
+        let dtg = decode_transposed_gen::<P32>(&bits, n);
         for i in 0..n {
             for j in 0..n {
                 assert_eq!(d[i * n + j], dt[j * n + i]);
+                assert_eq!(d[i * n + j], dtg[j * n + i]);
             }
         }
     }

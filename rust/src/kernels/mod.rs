@@ -1,4 +1,4 @@
-//! Batched posit kernel engine — the native hot path.
+//! Batched posit kernel engine — the native hot path, format-generic.
 //!
 //! The scalar layer in [`crate::posit`] re-decodes every operand from its
 //! bit pattern on every operation; fine for the bit-exactness oracle, but
@@ -7,19 +7,25 @@
 //! (posits "as fast as floats" §7.2; the quire dominating cost as widths
 //! scale, Big-PERCIVAL; pipelined/batched posit datapaths, FPPU):
 //!
-//! - [`gemm`] — matrix pre-decode ([`gemm::decode_matrix`] /
-//!   [`gemm::decode_transposed`]), the row-parallel tiled drivers
-//!   [`gemm::gemm_p32_quire`] / [`gemm::gemm_p32_noquire`]
-//!   (`std::thread::scope` over row blocks), quire dot products, and the
-//!   scalar oracles every kernel is pinned against bit-for-bit.
+//! - [`gemm`] — the [`gemm::KernelFormat`] trait (batch decode as the only
+//!   per-format hook) and the format-generic drivers
+//!   [`gemm::gemm_quire`] / [`gemm::gemm_noquire`] / [`gemm::dot_quire`]
+//!   (`std::thread::scope` over row blocks), instantiable for every
+//!   `PositFormat`: Posit8 through its op LUTs
+//!   ([`gemm::gemm_p8_noquire_lut`]), Posit16 through its decode LUT,
+//!   Posit32 and Posit64 natively. The Posit32 names
+//!   ([`gemm::gemm_p32_quire`] / [`gemm::gemm_p32_noquire`]) remain, and
+//!   every kernel is pinned against a scalar oracle bit-for-bit.
 //! - [`lut`] — exhaustive Posit8 operation tables (64 KiB per op: every
 //!   `a ∘ b` precomputed) and the Posit16 decode table, for narrow-format
 //!   workloads where a load beats the decode/normalize/round pipeline.
 //!
-//! Invariants, enforced by `rust/tests/kernel_equiv.rs`:
+//! Invariants, enforced by `rust/tests/kernel_equiv.rs` and
+//! `rust/tests/format_generic.rs`:
 //! - every kernel result is **bit-identical** to the scalar path
-//!   (exhaustively for Posit8, ≥1M randomized cases for Posit16/32, and
-//!   whole-GEMM comparisons against the pre-existing scalar loops);
+//!   (exhaustively for Posit8, ≥1M randomized cases for Posit16/32,
+//!   randomized + structured cases for Posit64, and whole-GEMM
+//!   comparisons against the scalar loops);
 //! - parallelism never changes results: work is split by output row and
 //!   the quire accumulation itself is exact, so scheduling cannot reorder
 //!   any rounding.
@@ -31,7 +37,9 @@ pub mod gemm;
 pub mod lut;
 
 pub use gemm::{
-    decode_matrix, decode_transposed, dot_p32_quire, gemm_p32_noquire, gemm_p32_noquire_scalar,
-    gemm_p32_quire, gemm_p32_quire_scalar, par_rows,
+    decode_matrix, decode_transposed, decode_transposed_gen, dot_p32_quire, dot_quire,
+    gemm_noquire, gemm_noquire_scalar_gen, gemm_p32_noquire, gemm_p32_noquire_scalar,
+    gemm_p32_quire, gemm_p32_quire_scalar, gemm_p8_noquire_lut, gemm_quire,
+    gemm_quire_scalar_gen, par_rows, KernelFormat,
 };
 pub use lut::{decode16, p8_add, p8_mul, p8_sub};

@@ -32,4 +32,7 @@ pub mod runtime;
 pub mod synth;
 pub mod testing;
 
-pub use posit::{Posit16, Posit32, Posit8, Quire16, Quire32, Quire8};
+pub use posit::{
+    Posit, Posit16, Posit32, Posit64, Posit8, PositFormat, Quire, Quire16, Quire32, Quire64,
+    Quire8, P16, P32, P64, P8,
+};

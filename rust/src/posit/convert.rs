@@ -1,12 +1,22 @@
 //! Conversions: posit ↔ IEEE 754 double, posit ↔ {i32, u32, i64, u64}
 //! (the Xposit `PCVT.*` instructions) and posit ↔ posit width changes.
 //!
-//! `posit → f64` is exact for every format here (a Posit32 has ≤ 28
+//! Width-independent engine (`*_n` functions, runtime width — what the
+//! [`super::format::PositFormat`] defaults call) with the pre-trait
+//! const-generic `u32` wrappers preserved.
+//!
+//! `posit → f64` is exact for every narrow format (a Posit32 has ≤ 28
 //! significand bits and |scale| ≤ 120, comfortably inside binary64), which
 //! is what makes f64 a usable golden reference in the benchmarks, exactly
-//! as the paper uses 64-bit IEEE as the golden solution (§7.1).
+//! as the paper uses 64-bit IEEE as the golden solution (§7.1). Posit64
+//! carries up to 60 significand bits, so its `to_f64` correctly *rounds*
+//! (RNE) instead — which is precisely why the accuracy harness gains a
+//! Posit64 row: at 64 bits the posit beats the f64 golden's own format.
 
-use super::unpacked::{decode, encode_norm, mask, nar, negate, Decoded, HID, TOP};
+use super::unpacked::{
+    decode, decode_n, encode_norm_n, mask, mask_n, nar, nar_n, negate, negate_n, Decoded, HID_W,
+    TOP,
+};
 
 /// Construct the exact f64 value `2^k` for `|k| ≤ 1023` via bit assembly.
 #[inline]
@@ -15,15 +25,18 @@ fn exp2i(k: i32) -> f64 {
     f64::from_bits(((k + 1023) as u64) << 52)
 }
 
-/// Posit bits → f64 (exact).
-pub fn to_f64<const N: u32>(bits: u32) -> f64 {
-    match decode::<N>(bits) {
+// ── The engine: runtime-width conversions ──────────────────────────────
+
+/// Posit bits → f64 (exact for `n ≤ 32`; correctly rounded for wider
+/// formats, whose significands exceed binary64's 53 bits).
+pub fn to_f64_n(n: u32, bits: u64) -> f64 {
+    match decode_n(n, bits) {
         Decoded::Zero => 0.0,
         Decoded::NaR => f64::NAN,
         Decoded::Num(u) => {
-            // sig × 2^(scale − HID); split the power so each factor is in
-            // exact range (scale−HID ∈ [−150, 90]).
-            let m = u.sig as f64 * exp2i(u.scale - HID as i32);
+            // sig × 2^(scale − HID_W); `sig as f64` is the (single) RNE
+            // rounding, the power-of-two scaling is exact.
+            let m = u.sig as f64 * exp2i(u.scale - HID_W as i32);
             if u.sign {
                 -m
             } else {
@@ -35,12 +48,12 @@ pub fn to_f64<const N: u32>(bits: u32) -> f64 {
 
 /// f64 → posit bits (round-to-nearest-even in posit pattern space; NaN and
 /// ±∞ map to NaR, ±0 to zero — posits have a single zero).
-pub fn from_f64<const N: u32>(x: f64) -> u32 {
+pub fn from_f64_n(n: u32, x: f64) -> u64 {
     if x == 0.0 {
         return 0;
     }
     if !x.is_finite() {
-        return nar::<N>();
+        return nar_n(n);
     }
     let b = x.to_bits();
     let sign = b >> 63 == 1;
@@ -53,7 +66,134 @@ pub fn from_f64<const N: u32>(x: f64) -> u32 {
     } else {
         (biased - 1023, ((1u64 << 52) | frac) << (TOP - 52))
     };
-    encode_norm::<N>(sign, scale, sig, TOP, false)
+    encode_norm_n(n, sign, scale, sig as u128, TOP, false)
+}
+
+/// Round the magnitude `sig × 2^(scale − HID_W)` to an integer (RNE) and
+/// saturate to `limit_bits` bits.
+fn mag_to_u64_n(scale: i32, sig: u64, limit_bits: u32) -> u64 {
+    let sh = scale - HID_W as i32;
+    if sh >= 0 {
+        if scale >= limit_bits as i32 {
+            // 2^scale already exceeds the target range.
+            return u64::MAX >> (64 - limit_bits);
+        }
+        // scale < limit_bits ≤ 64 ⇒ the value fits u64; the shift itself
+        // can pass through bit 63, so go via u128.
+        ((sig as u128) << sh) as u64
+    } else {
+        let sh = (-sh) as u32; // ∈ [1, …]
+        if sh >= 128 {
+            return 0;
+        }
+        let q = ((sig as u128) >> sh) as u64;
+        let rem = (sig as u128) << (128 - sh);
+        let guard = rem >> 127 == 1;
+        let sticky = rem << 1 != 0;
+        q + (guard && (sticky || q & 1 == 1)) as u64
+    }
+}
+
+/// Posit → signed 64-bit integer, round-to-nearest-even, saturating.
+/// NaR maps to `i64::MIN` (the standard's integer NaR surrogate).
+pub fn to_i64_n(n: u32, bits: u64) -> i64 {
+    match decode_n(n, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => i64::MIN,
+        Decoded::Num(u) => {
+            let m = mag_to_u64_n(u.scale, u.sig, 63);
+            let m = m.min(i64::MAX as u64 + u.sign as u64);
+            if u.sign {
+                (m as i64).wrapping_neg()
+            } else {
+                m as i64
+            }
+        }
+    }
+}
+
+/// Posit → unsigned 64-bit integer; negative posits clamp to 0, NaR →
+/// u64::MAX (matching RISC-V FCVT.LU semantics of returning the all-ones
+/// pattern for out-of-range/NaN inputs, which Xposit mirrors).
+pub fn to_u64_n(n: u32, bits: u64) -> u64 {
+    match decode_n(n, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => u64::MAX,
+        Decoded::Num(u) => {
+            if u.sign {
+                // Values in (−0.5, 0) round to 0; anything ≤ −0.5 clamps
+                // to 0 as well under unsigned semantics.
+                0
+            } else {
+                mag_to_u64_n(u.scale, u.sig, 64)
+            }
+        }
+    }
+}
+
+/// Signed 64-bit integer → posit (RNE).
+pub fn from_i64_n(n: u32, x: i64) -> u64 {
+    if x == 0 {
+        return 0;
+    }
+    let sign = x < 0;
+    from_mag_n(n, sign, x.unsigned_abs())
+}
+
+/// Unsigned 64-bit integer → posit (RNE).
+pub fn from_u64_n(n: u32, x: u64) -> u64 {
+    if x == 0 {
+        return 0;
+    }
+    from_mag_n(n, false, x)
+}
+
+fn from_mag_n(n: u32, sign: bool, m: u64) -> u64 {
+    let msb = 63 - m.leading_zeros();
+    // encode expects the exponent of bit `at`; bit `msb` has weight 2^msb.
+    encode_norm_n(n, sign, msb as i32, m as u128, msb, false)
+}
+
+/// Width conversion posit⟨from⟩ → posit⟨to⟩ (exact when widening, rounded
+/// when narrowing). With es fixed at 2 this is the standard's trivial
+/// inter-format conversion.
+pub fn resize_n(from: u32, to: u32, bits: u64) -> u64 {
+    match decode_n(from, bits) {
+        Decoded::Zero => 0,
+        Decoded::NaR => nar_n(to),
+        Decoded::Num(u) => encode_norm_n(to, u.sign, u.scale, u.sig as u128, HID_W, false),
+    }
+}
+
+/// Negate helper at the conversion layer (runtime width).
+#[inline]
+pub fn neg_n(n: u32, bits: u64) -> u64 {
+    negate_n(n, bits)
+}
+
+/// Absolute value: two's-complement negate when the sign bit is set
+/// (|NaR| = NaR, as negating NaR yields NaR). Runtime width.
+pub fn abs_n(n: u32, bits: u64) -> u64 {
+    let bits = bits & mask_n(n);
+    if bits >> (n - 1) == 1 && bits != nar_n(n) {
+        negate_n(n, bits)
+    } else {
+        bits
+    }
+}
+
+// ── Narrow (u32) compatibility wrappers ────────────────────────────────
+
+/// Posit bits → f64 (exact; `N ≤ 32`).
+#[inline]
+pub fn to_f64<const N: u32>(bits: u32) -> f64 {
+    to_f64_n(N, bits as u64)
+}
+
+/// f64 → posit bits (`N ≤ 32`).
+#[inline]
+pub fn from_f64<const N: u32>(x: f64) -> u32 {
+    from_f64_n(N, x) as u32
 }
 
 /// f32 convenience wrappers (the benchmarks compare against both widths).
@@ -67,41 +207,16 @@ pub fn from_f32<const N: u32>(x: f32) -> u32 {
     from_f64::<N>(x as f64)
 }
 
-/// Posit → signed 64-bit integer, round-to-nearest-even, saturating.
-/// NaR maps to `i64::MIN` (the standard's integer NaR surrogate).
+/// Posit → signed 64-bit integer, RNE, saturating (`N ≤ 32`).
+#[inline]
 pub fn to_i64<const N: u32>(bits: u32) -> i64 {
-    match decode::<N>(bits) {
-        Decoded::Zero => 0,
-        Decoded::NaR => i64::MIN,
-        Decoded::Num(u) => {
-            let m = mag_to_u64(u.scale, u.sig, 63);
-            let m = m.min(i64::MAX as u64 + u.sign as u64);
-            if u.sign {
-                (m as i64).wrapping_neg()
-            } else {
-                m as i64
-            }
-        }
-    }
+    to_i64_n(N, bits as u64)
 }
 
-/// Posit → unsigned 64-bit integer; negative posits clamp to 0, NaR → u64::MAX
-/// (matching RISC-V FCVT.LU semantics of returning the all-ones pattern for
-/// out-of-range/NaN inputs, which Xposit mirrors).
+/// Posit → unsigned 64-bit integer (`N ≤ 32`).
+#[inline]
 pub fn to_u64<const N: u32>(bits: u32) -> u64 {
-    match decode::<N>(bits) {
-        Decoded::Zero => 0,
-        Decoded::NaR => u64::MAX,
-        Decoded::Num(u) => {
-            if u.sign {
-                // Values in (−0.5, 0) round to 0; anything ≤ −0.5 clamps to 0
-                // as well under unsigned semantics.
-                0
-            } else {
-                mag_to_u64(u.scale, u.sig, 64)
-            }
-        }
-    }
+    to_u64_n(N, bits as u64)
 }
 
 /// Posit → i32 / u32 with saturation.
@@ -119,46 +234,16 @@ pub fn to_u32<const N: u32>(bits: u32) -> u32 {
     }
 }
 
-/// Round the magnitude `sig × 2^(scale − HID)` to an integer (RNE) and
-/// saturate to `limit_bits` bits.
-fn mag_to_u64(scale: i32, sig: u32, limit_bits: u32) -> u64 {
-    // Integer value = sig × 2^(scale − 30).
-    let sh = scale - HID as i32;
-    if sh >= 0 {
-        if scale >= limit_bits as i32 {
-            // 2^scale already exceeds the target range.
-            return u64::MAX >> (64 - limit_bits);
-        }
-        (sig as u64) << sh
-    } else {
-        let sh = (-sh) as u32;
-        if sh >= 64 {
-            return 0;
-        }
-        let q = (sig as u64) >> sh;
-        let rem = (sig as u64) << (64 - sh);
-        let guard = rem >> 63 == 1;
-        let sticky = rem << 1 != 0;
-        q + (guard && (sticky || q & 1 == 1)) as u64
-    }
-}
-
-/// Signed 64-bit integer → posit (RNE).
+/// Signed 64-bit integer → posit (RNE; `N ≤ 32`).
+#[inline]
 pub fn from_i64<const N: u32>(x: i64) -> u32 {
-    if x == 0 {
-        return 0;
-    }
-    let sign = x < 0;
-    let m = x.unsigned_abs();
-    from_mag::<N>(sign, m)
+    from_i64_n(N, x) as u32
 }
 
-/// Unsigned 64-bit integer → posit (RNE).
+/// Unsigned 64-bit integer → posit (RNE; `N ≤ 32`).
+#[inline]
 pub fn from_u64<const N: u32>(x: u64) -> u32 {
-    if x == 0 {
-        return 0;
-    }
-    from_mag::<N>(false, x)
+    from_u64_n(N, x) as u32
 }
 
 pub fn from_i32<const N: u32>(x: i32) -> u32 {
@@ -169,24 +254,10 @@ pub fn from_u32<const N: u32>(x: u32) -> u32 {
     from_u64::<N>(x as u64)
 }
 
-fn from_mag<const N: u32>(sign: bool, m: u64) -> u32 {
-    let msb = 63 - m.leading_zeros();
-    // encode_norm expects the exponent of bit `at`; bit `msb` has weight
-    // 2^msb, so pass at = msb.
-    encode_norm::<N>(sign, msb as i32, m, msb, false)
-}
-
-/// Width conversion posit<FROM> → posit<TO> (exact when widening, rounded
-/// when narrowing). With es fixed at 2 this is the standard's trivial
-/// inter-format conversion.
+/// Width conversion posit<FROM> → posit<TO> (narrow formats).
+#[inline]
 pub fn resize<const FROM: u32, const TO: u32>(bits: u32) -> u32 {
-    match decode::<FROM>(bits) {
-        Decoded::Zero => 0,
-        Decoded::NaR => nar::<TO>(),
-        Decoded::Num(u) => {
-            encode_norm::<TO>(u.sign, u.scale, (u.sig as u64) << (TOP - HID), TOP, false)
-        }
-    }
+    resize_n(FROM, TO, bits as u64) as u32
 }
 
 /// Negate helper re-exported at the conversion layer for symmetry.
@@ -194,8 +265,7 @@ pub fn neg<const N: u32>(bits: u32) -> u32 {
     negate::<N>(bits)
 }
 
-/// Absolute value: two's-complement negate when the sign bit is set
-/// (|NaR| = NaR, as negating NaR yields NaR).
+/// Absolute value (`N ≤ 32`).
 pub fn abs<const N: u32>(bits: u32) -> u32 {
     let bits = bits & mask::<N>();
     if bits >> (N - 1) == 1 && bits != nar::<N>() {
@@ -208,7 +278,7 @@ pub fn abs<const N: u32>(bits: u32) -> u32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posit::unpacked::maxpos;
+    use crate::posit::unpacked::{maxpos, maxpos_n};
 
     #[test]
     fn f64_roundtrip_exhaustive_p8_p16() {
@@ -255,6 +325,24 @@ mod tests {
     }
 
     #[test]
+    fn known_values_p64() {
+        const ONE64: u64 = 1 << 62;
+        assert_eq!(to_f64_n(64, ONE64), 1.0);
+        assert_eq!(from_f64_n(64, 1.0), ONE64);
+        assert_eq!(from_f64_n(64, -1.0), negate_n(64, ONE64));
+        assert!(to_f64_n(64, nar_n(64)).is_nan());
+        assert_eq!(from_f64_n(64, f64::NAN), nar_n(64));
+        // maxpos64 = 2^248, minpos64 = 2^-248.
+        assert_eq!(to_f64_n(64, maxpos_n(64)), exp2i(248));
+        assert_eq!(to_f64_n(64, 1), exp2i(-248));
+        // f64 → posit64 → f64 is lossless inside posit64's wide-fraction
+        // zone (|scale| small enough that ≥ 53 fraction bits remain).
+        for x in [1.5f64, -2.25, 0.1, 3.14159265358979, 12345.678, -1.23e-4] {
+            assert_eq!(to_f64_n(64, from_f64_n(64, x)), x, "{x}");
+        }
+    }
+
+    #[test]
     fn f64_saturation() {
         assert_eq!(from_f64::<32>(1e40), maxpos::<32>());
         assert_eq!(from_f64::<32>(-1e40), negate::<32>(maxpos::<32>()));
@@ -262,6 +350,9 @@ mod tests {
         assert_eq!(from_f64::<8>(1e9), maxpos::<8>());
         // Subnormal doubles saturate at minpos, not zero.
         assert_eq!(from_f64::<32>(f64::from_bits(1)), 1);
+        // 2^-1074 is below minpos64 = 2^-248: saturates at minpos, never 0.
+        assert_eq!(from_f64_n(64, f64::from_bits(1)), 1);
+        assert_eq!(from_f64_n(64, f64::MAX), maxpos_n(64));
     }
 
     #[test]
@@ -269,16 +360,21 @@ mod tests {
         for v in [0i64, 1, -1, 2, 7, -100, 123_456, 65_536, -1_048_576] {
             let p = from_i64::<32>(v);
             assert_eq!(to_i64::<32>(p), v, "v={v}");
+            let p64 = from_i64_n(64, v);
+            assert_eq!(to_i64_n(64, p64), v, "p64 v={v}");
         }
         // Large magnitudes round to within half a posit ulp (at scale 29
         // a posit32 keeps 20 fraction bits → ulp = 512).
         let p = from_i64::<32>(1_000_000_007);
         let back = to_i64::<32>(p);
         assert!((back - 1_000_000_007).abs() <= 256, "{back}");
+        // …while posit64 holds it exactly.
+        assert_eq!(to_i64_n(64, from_i64_n(64, 1_000_000_007)), 1_000_000_007);
         // NaR surrogates.
         assert_eq!(to_i64::<32>(0x8000_0000), i64::MIN);
         assert_eq!(to_u64::<32>(0x8000_0000), u64::MAX);
         assert_eq!(to_i32::<32>(0x8000_0000), i32::MIN);
+        assert_eq!(to_i64_n(64, nar_n(64)), i64::MIN);
         // Negative → unsigned clamps to 0.
         assert_eq!(to_u64::<32>(from_i64::<32>(-5)), 0);
     }
@@ -290,6 +386,10 @@ mod tests {
         assert_eq!(to_i64::<32>(from_f64::<32>(1.5)), 2);
         assert_eq!(to_i64::<32>(from_f64::<32>(2.5)), 2);
         assert_eq!(to_i64::<32>(from_f64::<32>(-1.5)), -2);
+        assert_eq!(to_i64_n(64, from_f64_n(64, 0.5)), 0);
+        assert_eq!(to_i64_n(64, from_f64_n(64, 1.5)), 2);
+        assert_eq!(to_i64_n(64, from_f64_n(64, 2.5)), 2);
+        assert_eq!(to_i64_n(64, from_f64_n(64, -1.5)), -2);
     }
 
     #[test]
@@ -301,6 +401,14 @@ mod tests {
                 assert_eq!(to_f64::<32>(wide), to_f64::<8>(bits));
             }
         }
+        // p32 → p64 is exact, and narrowing back is the identity.
+        for bits in [0u32, 1, 0x8000_0000, 0x4000_0000, 0x1234_5678, 0xDEAD_BEEF] {
+            let wide = resize_n(32, 64, bits as u64);
+            assert_eq!(resize_n(64, 32, wide) as u32, bits, "{bits:#x}");
+            if bits != 0 && bits != 0x8000_0000 {
+                assert_eq!(to_f64_n(64, wide), to_f64::<32>(bits));
+            }
+        }
     }
 
     #[test]
@@ -310,5 +418,8 @@ mod tests {
         assert_eq!(abs::<32>(0x8000_0000), 0x8000_0000); // |NaR| = NaR
         assert_eq!(neg::<32>(0), 0);
         assert_eq!(neg::<32>(0x8000_0000), 0x8000_0000);
+        assert_eq!(abs_n(64, negate_n(64, 1 << 62)), 1 << 62);
+        assert_eq!(abs_n(64, nar_n(64)), nar_n(64));
+        assert_eq!(neg_n(64, 0), 0);
     }
 }

@@ -12,104 +12,118 @@
 //! leveraging the MAC unit"; for ablations and for the benchmarks' golden
 //! paths we also provide bit-exact `div_exact` / `sqrt_exact` with correct
 //! rounding.
+//!
+//! Like the rest of the core, each algorithm exists once, width-generically
+//! (`*_n`, runtime width, `u128` workspace — the
+//! [`super::format::PositFormat`] defaults); the const-generic `u32` entry
+//! points are retained wrappers.
 
-use super::unpacked::{decode, encode_norm, nar, Decoded, HID, TOP};
+use super::unpacked::{decode_n, encode_norm_n, nar_n, Decoded, HID_W};
 
-/// Fixed-point log-domain word: scale in the high bits, the 30 fraction
-/// bits of the significand below (Mitchell: log2(1+f) ≈ f).
+/// Fixed-point log-domain word: scale in the high bits, the 62 fraction
+/// bits of the wide significand below (Mitchell: log2(1+f) ≈ f).
 #[inline]
-fn mitchell_log(scale: i32, sig: u32) -> i64 {
-    ((scale as i64) << HID) + (sig & ((1 << HID) - 1)) as i64
+fn mitchell_log(scale: i32, sig: u64) -> i128 {
+    ((scale as i128) << HID_W) + (sig & ((1u64 << HID_W) - 1)) as i128
 }
 
 /// Inverse: split a log-domain word back into (scale, significand).
 #[inline]
-fn mitchell_exp(l: i64) -> (i32, u32) {
-    let scale = (l >> HID) as i32; // arithmetic shift = floor
-    let frac = (l & ((1 << HID) - 1)) as u32;
-    (scale, (1 << HID) | frac)
+fn mitchell_exp(l: i128) -> (i32, u64) {
+    let scale = (l >> HID_W) as i32; // arithmetic shift = floor
+    let frac = (l & ((1i128 << HID_W) - 1)) as u64;
+    (scale, (1u64 << HID_W) | frac)
 }
 
 /// `PDIV.S` — logarithm-approximate posit division (the hardware unit).
-pub fn div_approx<const N: u32>(a: u32, b: u32) -> u32 {
-    let (ua, ub) = match (decode::<N>(a), decode::<N>(b)) {
-        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
+pub fn div_approx_n(n: u32, a: u64, b: u64) -> u64 {
+    let (ua, ub) = match (decode_n(n, a), decode_n(n, b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar_n(n),
         // x/0 = NaR (paper: no division-by-zero flag, the result is NaR).
-        (_, Decoded::Zero) => return nar::<N>(),
+        (_, Decoded::Zero) => return nar_n(n),
         (Decoded::Zero, _) => return 0,
         (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
     };
     let l = mitchell_log(ua.scale, ua.sig) - mitchell_log(ub.scale, ub.sig);
     let (scale, sig) = mitchell_exp(l);
-    encode_norm::<N>(ua.sign ^ ub.sign, scale, (sig as u64) << (TOP - HID), TOP, false)
+    encode_norm_n(n, ua.sign ^ ub.sign, scale, (sig as u128) << 64, HID_W + 64, false)
 }
 
-/// `PSQRT.S` — logarithm-approximate posit square root (the hardware unit).
-/// Square roots of negative posits (and of NaR) are NaR.
-pub fn sqrt_approx<const N: u32>(a: u32) -> u32 {
-    let ua = match decode::<N>(a) {
-        Decoded::NaR => return nar::<N>(),
+/// `PSQRT.S` — logarithm-approximate posit square root (the hardware
+/// unit). Square roots of negative posits (and of NaR) are NaR.
+pub fn sqrt_approx_n(n: u32, a: u64) -> u64 {
+    let ua = match decode_n(n, a) {
+        Decoded::NaR => return nar_n(n),
         Decoded::Zero => return 0,
-        Decoded::Num(u) if u.sign => return nar::<N>(),
+        Decoded::Num(u) if u.sign => return nar_n(n),
         Decoded::Num(u) => u,
     };
-    let l = mitchell_log(ua.scale, ua.sig) >> 1; // ÷2 in the log domain
+    let mut l = mitchell_log(ua.scale, ua.sig) >> 1; // ÷2 in the log domain
+    if n <= 32 {
+        // The pre-trait PLAM word carried 30 fraction bits; floor the
+        // halved log word to that grid so narrow-format results stay
+        // bit-identical to the legacy unit (`&` with an all-ones low mask
+        // cleared = floor, matching the old arithmetic shift).
+        l &= !((1i128 << (HID_W - super::unpacked::HID)) - 1);
+    }
     let (scale, sig) = mitchell_exp(l);
-    encode_norm::<N>(false, scale, (sig as u64) << (TOP - HID), TOP, false)
+    encode_norm_n(n, false, scale, (sig as u128) << 64, HID_W + 64, false)
 }
 
 /// Bit-exact, correctly rounded division (the "software via MAC" path the
 /// paper sketches; used for ablations).
-pub fn div_exact<const N: u32>(a: u32, b: u32) -> u32 {
-    let (ua, ub) = match (decode::<N>(a), decode::<N>(b)) {
-        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
-        (_, Decoded::Zero) => return nar::<N>(),
+pub fn div_exact_n(n: u32, a: u64, b: u64) -> u64 {
+    let (ua, ub) = match (decode_n(n, a), decode_n(n, b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar_n(n),
+        (_, Decoded::Zero) => return nar_n(n),
         (Decoded::Zero, _) => return 0,
         (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
     };
-    // q = (sig_a << 32) / sig_b ∈ (2^31, 2^33); bit 32 of q would carry
-    // weight 2^(scale_a − scale_b). Remainder → sticky.
-    let num = (ua.sig as u64) << 32;
-    let den = ub.sig as u64;
+    // q = (sig_a << 64) / sig_b ∈ (2^63, 2^65); bit 64 of q carries weight
+    // 2^(scale_a − scale_b). Remainder → sticky.
+    let num = (ua.sig as u128) << 64;
+    let den = ub.sig as u128;
     let q = num / den;
     let sticky = num % den != 0;
-    encode_norm::<N>(ua.sign ^ ub.sign, ua.scale - ub.scale, q, 32, sticky)
+    encode_norm_n(n, ua.sign ^ ub.sign, ua.scale - ub.scale, q, 64, sticky)
 }
 
 /// Bit-exact, correctly rounded square root.
-pub fn sqrt_exact<const N: u32>(a: u32) -> u32 {
-    let ua = match decode::<N>(a) {
-        Decoded::NaR => return nar::<N>(),
+pub fn sqrt_exact_n(n: u32, a: u64) -> u64 {
+    let ua = match decode_n(n, a) {
+        Decoded::NaR => return nar_n(n),
         Decoded::Zero => return 0,
-        Decoded::Num(u) if u.sign => return nar::<N>(),
+        Decoded::Num(u) if u.sign => return nar_n(n),
         Decoded::Num(u) => u,
     };
     // Make the scale even so sqrt(2^scale) is a power of two, then take the
-    // integer square root of sig × 2^32 (or 2^33), which yields ≥ 31
+    // integer square root of sig × 2^64 (or 2^65), which yields ≥ 63
     // significant bits.
     let (scale, sig) = if ua.scale & 1 == 0 {
-        (ua.scale, (ua.sig as u64) << 32)
+        (ua.scale, (ua.sig as u128) << 64)
     } else {
-        (ua.scale - 1, (ua.sig as u64) << 33)
+        (ua.scale - 1, (ua.sig as u128) << 65)
     };
-    let r = isqrt_u64(sig);
+    let r = isqrt_u128(sig);
     let sticky = r * r != sig;
-    // r = sqrt(sig·2^32) = sqrt(sig)·2^16 → bit 31 of r carries weight
-    // 2^(scale/2) when sig's bit 30 carries 2^scale:
-    // sqrt(sig × 2^(scale−30) ) = (r / 2^31) × 2^(scale/2) × 2^(31−16−15)…
-    // Derivation: value = sig₃₀ × 2^(scale−30), with sig = sig₃₀ × 2^32
-    // (even case): value = sig × 2^(scale−62); sqrt = √sig × 2^((scale−62)/2)
-    // = r × 2^(scale/2 − 31). So bit 31 of r has weight 2^(scale/2).
-    encode_norm::<N>(false, scale / 2, r, 31, sticky)
+    // Even case: value = m·2^scale with sig = m·2^126, so
+    // r = √sig = √m·2^63 and bit 63 of r carries weight 2^(scale/2).
+    // Odd case: value = (2m)·2^(scale−1), sig = (2m)·2^126 — same anchor.
+    encode_norm_n(n, false, scale / 2, r, 63, sticky)
 }
 
-/// Integer square root of a u64 (floor).
-fn isqrt_u64(x: u64) -> u64 {
+/// Integer square root of a u128 (floor).
+fn isqrt_u128(x: u128) -> u128 {
     if x == 0 {
         return 0;
     }
-    // f64 seed (53-bit mantissa ⇒ within ±1 after one fixup pass).
-    let mut r = (x as f64).sqrt() as u64;
+    // f64 seed (53-bit mantissa), then two Newton steps to bring the error
+    // within ±1 even at 127-bit magnitudes, then an exact fixup.
+    let mut r = (x as f64).sqrt() as u128;
+    r = r.max(1);
+    r = (r + x / r) >> 1;
+    r = (r + x / r) >> 1;
+    r = r.max(1);
     while r.checked_mul(r).map_or(true, |rr| rr > x) {
         r -= 1;
     }
@@ -119,23 +133,66 @@ fn isqrt_u64(x: u64) -> u64 {
     r
 }
 
+// ── Narrow (u32) compatibility wrappers ────────────────────────────────
+
+/// `PDIV.S` (`N ≤ 32`).
+#[inline]
+pub fn div_approx<const N: u32>(a: u32, b: u32) -> u32 {
+    div_approx_n(N, a as u64, b as u64) as u32
+}
+
+/// `PSQRT.S` (`N ≤ 32`).
+#[inline]
+pub fn sqrt_approx<const N: u32>(a: u32) -> u32 {
+    sqrt_approx_n(N, a as u64) as u32
+}
+
+/// Bit-exact division (`N ≤ 32`).
+#[inline]
+pub fn div_exact<const N: u32>(a: u32, b: u32) -> u32 {
+    div_exact_n(N, a as u64, b as u64) as u32
+}
+
+/// Bit-exact square root (`N ≤ 32`).
+#[inline]
+pub fn sqrt_exact<const N: u32>(a: u32) -> u32 {
+    sqrt_exact_n(N, a as u64) as u32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posit::convert::{from_f64, to_f64};
+    use crate::posit::convert::{from_f64, from_f64_n, to_f64, to_f64_n};
 
     const ONE32: u32 = 0x4000_0000;
 
     #[test]
     fn isqrt_edges() {
-        assert_eq!(isqrt_u64(0), 0);
-        assert_eq!(isqrt_u64(1), 1);
-        assert_eq!(isqrt_u64(3), 1);
-        assert_eq!(isqrt_u64(4), 2);
-        assert_eq!(isqrt_u64(u64::MAX), (1 << 32) - 1);
-        for x in [15u64, 16, 17, 255, 256, 257, 1 << 62, (1 << 62) + 1] {
-            let r = isqrt_u64(x);
-            assert!(r * r <= x && (r + 1).checked_mul(r + 1).map_or(true, |v| v > x));
+        assert_eq!(isqrt_u128(0), 0);
+        assert_eq!(isqrt_u128(1), 1);
+        assert_eq!(isqrt_u128(3), 1);
+        assert_eq!(isqrt_u128(4), 2);
+        assert_eq!(isqrt_u128(u64::MAX as u128), (1u128 << 32) - 1);
+        assert_eq!(isqrt_u128(u128::MAX), (1u128 << 64) - 1);
+        for x in [
+            15u128,
+            16,
+            17,
+            255,
+            256,
+            257,
+            1 << 62,
+            (1 << 62) + 1,
+            (1 << 126) - 1,
+            1 << 126,
+            (1 << 126) + 1,
+            u128::MAX - 1,
+        ] {
+            let r = isqrt_u128(x);
+            assert!(
+                r * r <= x && (r + 1).checked_mul(r + 1).map_or(true, |v| v > x),
+                "x={x}"
+            );
         }
     }
 
@@ -148,6 +205,21 @@ mod tests {
         assert_eq!(div_exact::<32>(0, six), 0);
         assert_eq!(div_exact::<32>(six, 0), 0x8000_0000);
         assert_eq!(div_exact::<32>(0x8000_0000, six), 0x8000_0000);
+    }
+
+    #[test]
+    fn exact_div_known_p64() {
+        let one = 1u64 << 62;
+        assert_eq!(div_exact_n(64, one, one), one);
+        let six = from_f64_n(64, 6.0);
+        let two = from_f64_n(64, 2.0);
+        assert_eq!(div_exact_n(64, six, two), from_f64_n(64, 3.0));
+        assert_eq!(div_exact_n(64, six, 0), nar_n(64));
+        assert_eq!(div_exact_n(64, 0, six), 0);
+        // 1/3 is inexact at every width; ×3 comes back within one ulp.
+        let third = div_exact_n(64, one, from_f64_n(64, 3.0));
+        let back = to_f64_n(64, third) * 3.0;
+        assert!((back - 1.0).abs() < 1e-15, "{back}");
     }
 
     #[test]
@@ -167,10 +239,9 @@ mod tests {
     fn exact_div_exhaustive_p8_vs_rational_rounding() {
         // Cross-check every posit8 quotient against rounding the exact
         // rational via f64 (all posit8 values and their quotients are far
-        // from f64 precision limits, and from_f64 rounds pattern-space RNE
-        // — but double rounding could still bite on ties, so compare with a
-        // tolerance of equality-or-neighbour and require exactness when the
-        // f64 quotient is exactly representable).
+        // from f64 precision limits; division of two ≤6-bit significands
+        // cannot tie at posit8 precision unless it terminates, so the f64
+        // quotient is authoritative).
         for a in 1..=0xFFu32 {
             for b in 1..=0xFFu32 {
                 if a == 0x80 || b == 0x80 {
@@ -179,15 +250,7 @@ mod tests {
                 let q = div_exact::<8>(a, b);
                 let fa = to_f64::<8>(a);
                 let fb = to_f64::<8>(b);
-                let fq = fa / fb;
-                let via_f64 = from_f64::<8>(fq);
-                // f64 has 53 bits; posit8 needs ≤ 6 significant bits and a
-                // tie decision at bit ≤ 7 — the f64 quotient determines the
-                // rounding unless it is exactly a tie that f64 rounded.
-                // Division of two ≤6-bit significands cannot produce a value
-                // whose infinite expansion ties at posit8 precision unless
-                // it terminates (power-of-two denominator), so via_f64 is
-                // authoritative.
+                let via_f64 = from_f64::<8>(fa / fb);
                 assert_eq!(q, via_f64, "a={a:#x}({fa}) b={b:#x}({fb})");
             }
         }
@@ -202,6 +265,12 @@ mod tests {
         assert_eq!(sqrt_exact::<32>(0), 0);
         assert_eq!(sqrt_exact::<32>(from_f64::<32>(-1.0)), 0x8000_0000);
         assert_eq!(sqrt_exact::<32>(0x8000_0000), 0x8000_0000);
+        // Width 64.
+        let one = 1u64 << 62;
+        assert_eq!(sqrt_exact_n(64, from_f64_n(64, 4.0)), from_f64_n(64, 2.0));
+        assert_eq!(sqrt_exact_n(64, from_f64_n(64, 2.25)), from_f64_n(64, 1.5));
+        assert_eq!(sqrt_exact_n(64, one), one);
+        assert_eq!(sqrt_exact_n(64, from_f64_n(64, -1.0)), nar_n(64));
     }
 
     #[test]
@@ -260,13 +329,12 @@ mod tests {
         // Powers of two are exact in the log domain.
         for k in [-4i32, -1, 0, 1, 2, 8] {
             let x = from_f64::<32>((k as f64).exp2());
-            let half = from_f64::<32>(((k as f64) / 2.0).floor().exp2());
-            let _ = half;
-            assert_eq!(
-                div_approx::<32>(x, x),
-                ONE32,
-                "x/x must be 1 in log domain"
-            );
+            assert_eq!(div_approx::<32>(x, x), ONE32, "x/x must be 1 in log domain");
         }
+        // Same identities at width 64.
+        let one = 1u64 << 62;
+        assert_eq!(div_approx_n(64, one, 0), nar_n(64));
+        assert_eq!(div_approx_n(64, one, one), one);
+        assert_eq!(sqrt_approx_n(64, from_f64_n(64, 4.0)), from_f64_n(64, 2.0));
     }
 }

@@ -1,0 +1,436 @@
+//! The [`PositFormat`] trait — one format-generic posit core.
+//!
+//! Every width `Posit⟨N, 2⟩` is described by a zero-sized format marker
+//! ([`P8`], [`P16`], [`P32`], [`P64`]) that picks three associated types:
+//!
+//! - [`PositFormat::Bits`] — the public bit-pattern storage (`u32` for the
+//!   narrow formats, `u64` for Posit64),
+//! - [`PositFormat::Sig`] — the decoded-significand word (hidden bit at
+//!   [`SigWord::HID`]: bit 30 in a `u32`, bit 62 in a `u64`),
+//! - [`PositFormat::QuireLimbs`] — the `[u64; 16n/64]` limb array of the
+//!   format's 16n-bit quire.
+//!
+//! All arithmetic is *defaulted* on the trait and implemented exactly once,
+//! in the width-independent engine of [`super::unpacked`] / [`super::ops`] /
+//! [`super::convert`] / [`super::divsqrt`] (u64 patterns, u128 workspace).
+//! Adding a width is therefore a handful of constant definitions — see the
+//! `P64` impl below, which is the whole of Posit64.
+//!
+//! The legacy const-generic `fn f::<N>(u32, …)` entry points remain as thin
+//! wrappers over the same engine, so every pre-trait call site (and the
+//! bit-exactness oracles in `tests/kernel_equiv.rs`) keeps compiling and
+//! keeps producing identical bits.
+
+use super::unpacked::{self, Decoded};
+use super::{convert, divsqrt, ops};
+use std::cmp::Ordering;
+use std::fmt::Debug;
+use std::hash::Hash;
+
+/// Bit-pattern storage word of a posit format (`u32` or `u64`). The engine
+/// works in `u64`; this trait is the lossless bridge to the public API
+/// width.
+pub trait PositBits:
+    Copy
+    + Clone
+    + PartialEq
+    + Eq
+    + Hash
+    + Default
+    + Debug
+    + std::fmt::LowerHex
+    + Send
+    + Sync
+    + 'static
+{
+    /// Storage width in bits (32 or 64) — used only for formatting.
+    const WIDTH: u32;
+    fn to_u64(self) -> u64;
+    fn from_u64(v: u64) -> Self;
+}
+
+impl PositBits for u32 {
+    const WIDTH: u32 = 32;
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self as u64
+    }
+    #[inline(always)]
+    fn from_u64(v: u64) -> Self {
+        v as u32
+    }
+}
+
+impl PositBits for u64 {
+    const WIDTH: u32 = 64;
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self
+    }
+    #[inline(always)]
+    fn from_u64(v: u64) -> Self {
+        v
+    }
+}
+
+/// Decoded-significand word: the hidden bit sits at [`Self::HID`] and the
+/// engine's wide form keeps it at bit 62 (`unpacked::HID_W`).
+pub trait SigWord: Copy + Clone + PartialEq + Eq + Debug + Send + Sync + 'static {
+    /// Hidden-bit position (30 for `u32` sigs, 62 for `u64` sigs).
+    const HID: u32;
+    /// Narrow a wide (hidden-at-62) significand to this word. Exact for
+    /// every format: the discarded low bits are zero by construction.
+    fn from_wide(sig: u64) -> Self;
+    /// Widen back to the engine's hidden-at-62 form.
+    fn widen(self) -> u64;
+    /// Exact full product of two significands; the double hidden bit lands
+    /// at `2 * Self::HID`.
+    fn mul_full(self, rhs: Self) -> u128;
+}
+
+impl SigWord for u32 {
+    const HID: u32 = 30;
+    #[inline(always)]
+    fn from_wide(sig: u64) -> Self {
+        debug_assert_eq!(sig & 0xFFFF_FFFF, 0, "narrow sig must have zero low bits");
+        (sig >> 32) as u32
+    }
+    #[inline(always)]
+    fn widen(self) -> u64 {
+        (self as u64) << 32
+    }
+    #[inline(always)]
+    fn mul_full(self, rhs: Self) -> u128 {
+        (self as u64 * rhs as u64) as u128
+    }
+}
+
+impl SigWord for u64 {
+    const HID: u32 = 62;
+    #[inline(always)]
+    fn from_wide(sig: u64) -> Self {
+        sig
+    }
+    #[inline(always)]
+    fn widen(self) -> u64 {
+        self
+    }
+    #[inline(always)]
+    fn mul_full(self, rhs: Self) -> u128 {
+        self as u128 * rhs as u128
+    }
+}
+
+/// Fixed-size little-endian limb array backing a quire (`[u64; L]`).
+/// Implemented blanket-wise over every array length so a format picks its
+/// quire size with a single associated type.
+pub trait Limbs: Copy + Clone + PartialEq + Eq + Debug + Send + Sync + 'static {
+    const LEN: usize;
+    fn zeroed() -> Self;
+    fn as_slice(&self) -> &[u64];
+    fn as_mut_slice(&mut self) -> &mut [u64];
+}
+
+impl<const L: usize> Limbs for [u64; L] {
+    const LEN: usize = L;
+    #[inline(always)]
+    fn zeroed() -> Self {
+        [0; L]
+    }
+    #[inline(always)]
+    fn as_slice(&self) -> &[u64] {
+        self
+    }
+    #[inline(always)]
+    fn as_mut_slice(&mut self) -> &mut [u64] {
+        self
+    }
+}
+
+/// A posit format: width + storage choices. Every operation has a default
+/// implementation over the shared wide engine — an impl only supplies
+/// constants and types (see [`P64`]).
+pub trait PositFormat:
+    Copy + Clone + PartialEq + Eq + Hash + Default + Debug + Send + Sync + 'static
+{
+    /// Format width in bits (8 ≤ N ≤ 64).
+    const N: u32;
+    /// Exponent field width — fixed at 2 by the 4.12 draft standard.
+    const ES: u32 = 2;
+    /// Human-readable name (`"Posit32"`).
+    const NAME: &'static str;
+
+    type Bits: PositBits;
+    type Sig: SigWord;
+    type QuireLimbs: Limbs;
+
+    /// Const bit patterns (needed in `const` contexts, where the trait
+    /// methods below cannot run).
+    const ZERO_BITS: Self::Bits;
+    /// `+1.0` = `01 0…0`.
+    const ONE_BITS: Self::Bits;
+    /// NaR = `10…0`.
+    const NAR_BITS: Self::Bits;
+    /// `01…1`.
+    const MAXPOS_BITS: Self::Bits;
+    /// `0…01`.
+    const MINPOS_BITS: Self::Bits;
+
+    /// Quire width in bits (16n, per the standard).
+    const QUIRE_BITS: u32 = 16 * Self::N;
+    /// Weight of the quire LSB: `2^(16 − 8n)`.
+    const QUIRE_LSB_EXP: i32 = 16 - 8 * (Self::N as i32);
+
+    // ── Decode / encode ────────────────────────────────────────────────
+
+    #[inline]
+    fn decode(bits: Self::Bits) -> Decoded<Self::Sig> {
+        match unpacked::decode_n(Self::N, bits.to_u64()) {
+            Decoded::Zero => Decoded::Zero,
+            Decoded::NaR => Decoded::NaR,
+            Decoded::Num(u) => Decoded::Num(unpacked::Unpacked {
+                sign: u.sign,
+                scale: u.scale,
+                sig: Self::Sig::from_wide(u.sig),
+            }),
+        }
+    }
+
+    /// Round-to-nearest-even encode of `(-1)^sign × sig × 2^(scale − at)`
+    /// (`sig` an arbitrary nonzero u128, bit `at` carrying weight
+    /// `2^scale`), saturating at minpos/maxpos.
+    #[inline]
+    fn encode(sign: bool, scale: i32, sig: u128, at: u32, sticky: bool) -> Self::Bits {
+        Self::Bits::from_u64(unpacked::encode_norm_n(Self::N, sign, scale, sig, at, sticky))
+    }
+
+    // ── COMP ───────────────────────────────────────────────────────────
+
+    #[inline]
+    fn add(a: Self::Bits, b: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(ops::add_n(Self::N, a.to_u64(), b.to_u64()))
+    }
+
+    #[inline]
+    fn sub(a: Self::Bits, b: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(ops::sub_n(Self::N, a.to_u64(), b.to_u64()))
+    }
+
+    #[inline]
+    fn mul(a: Self::Bits, b: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(ops::mul_n(Self::N, a.to_u64(), b.to_u64()))
+    }
+
+    /// Multiply pre-decoded operands — bit-identical to [`Self::mul`]; the
+    /// kernel layer hoists decodes out of its loops.
+    #[inline]
+    fn mul_unpacked(a: Decoded<Self::Sig>, b: Decoded<Self::Sig>) -> Self::Bits {
+        let (ua, ub) = match (a, b) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => return Self::NAR_BITS,
+            (Decoded::Zero, _) | (_, Decoded::Zero) => return Self::ZERO_BITS,
+            (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
+        };
+        let p = ua.sig.mul_full(ub.sig);
+        Self::encode(
+            ua.sign ^ ub.sign,
+            ua.scale + ub.scale,
+            p,
+            2 * <Self::Sig as SigWord>::HID,
+            false,
+        )
+    }
+
+    #[inline]
+    fn div_approx(a: Self::Bits, b: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(divsqrt::div_approx_n(Self::N, a.to_u64(), b.to_u64()))
+    }
+
+    #[inline]
+    fn sqrt_approx(a: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(divsqrt::sqrt_approx_n(Self::N, a.to_u64()))
+    }
+
+    #[inline]
+    fn div_exact(a: Self::Bits, b: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(divsqrt::div_exact_n(Self::N, a.to_u64(), b.to_u64()))
+    }
+
+    #[inline]
+    fn sqrt_exact(a: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(divsqrt::sqrt_exact_n(Self::N, a.to_u64()))
+    }
+
+    // ── CONV ───────────────────────────────────────────────────────────
+
+    #[inline]
+    fn from_f64(x: f64) -> Self::Bits {
+        Self::Bits::from_u64(convert::from_f64_n(Self::N, x))
+    }
+
+    #[inline]
+    fn to_f64(bits: Self::Bits) -> f64 {
+        convert::to_f64_n(Self::N, bits.to_u64())
+    }
+
+    #[inline]
+    fn from_i64(x: i64) -> Self::Bits {
+        Self::Bits::from_u64(convert::from_i64_n(Self::N, x))
+    }
+
+    #[inline]
+    fn to_i64(bits: Self::Bits) -> i64 {
+        convert::to_i64_n(Self::N, bits.to_u64())
+    }
+
+    // ── Pattern-space helpers ──────────────────────────────────────────
+
+    #[inline]
+    fn mask(bits: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(bits.to_u64() & unpacked::mask_n(Self::N))
+    }
+
+    /// Two's-complement negation (exact; zero and NaR are fixed points).
+    #[inline]
+    fn negate(bits: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(unpacked::negate_n(Self::N, bits.to_u64()))
+    }
+
+    #[inline]
+    fn abs(bits: Self::Bits) -> Self::Bits {
+        Self::Bits::from_u64(convert::abs_n(Self::N, bits.to_u64()))
+    }
+
+    /// Posit comparison = signed integer comparison on the pattern (NaR
+    /// least; routed to the ALU in hardware).
+    #[inline]
+    fn cmp(a: Self::Bits, b: Self::Bits) -> Ordering {
+        unpacked::to_signed_n(Self::N, a.to_u64()).cmp(&unpacked::to_signed_n(Self::N, b.to_u64()))
+    }
+}
+
+/// 8-bit posit, es = 2 (`Posit⟨8,2⟩`), 128-bit quire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct P8;
+
+impl PositFormat for P8 {
+    const N: u32 = 8;
+    const NAME: &'static str = "Posit8";
+    type Bits = u32;
+    type Sig = u32;
+    type QuireLimbs = [u64; 2];
+    const ZERO_BITS: u32 = 0;
+    const ONE_BITS: u32 = 1 << 6;
+    const NAR_BITS: u32 = 1 << 7;
+    const MAXPOS_BITS: u32 = 0x7F;
+    const MINPOS_BITS: u32 = 1;
+}
+
+/// 16-bit posit, es = 2 (`Posit⟨16,2⟩`), 256-bit quire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct P16;
+
+impl PositFormat for P16 {
+    const N: u32 = 16;
+    const NAME: &'static str = "Posit16";
+    type Bits = u32;
+    type Sig = u32;
+    type QuireLimbs = [u64; 4];
+    const ZERO_BITS: u32 = 0;
+    const ONE_BITS: u32 = 1 << 14;
+    const NAR_BITS: u32 = 1 << 15;
+    const MAXPOS_BITS: u32 = 0x7FFF;
+    const MINPOS_BITS: u32 = 1;
+}
+
+/// 32-bit posit, es = 2 (`Posit⟨32,2⟩`) — the paper's format; 512-bit
+/// quire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct P32;
+
+impl PositFormat for P32 {
+    const N: u32 = 32;
+    const NAME: &'static str = "Posit32";
+    type Bits = u32;
+    type Sig = u32;
+    type QuireLimbs = [u64; 8];
+    const ZERO_BITS: u32 = 0;
+    const ONE_BITS: u32 = 1 << 30;
+    const NAR_BITS: u32 = 1 << 31;
+    const MAXPOS_BITS: u32 = 0x7FFF_FFFF;
+    const MINPOS_BITS: u32 = 1;
+}
+
+/// 64-bit posit, es = 2 (`Posit⟨64,2⟩`) with the standard's 1024-bit quire
+/// — the width Big-PERCIVAL (Mallasén et al., 2023) explores, where the
+/// quire dominates hardware cost. This impl *is* the whole format: storage
+/// choices plus five constants; decode, arithmetic, conversions and the
+/// quire all come from the shared engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct P64;
+
+impl PositFormat for P64 {
+    const N: u32 = 64;
+    const NAME: &'static str = "Posit64";
+    type Bits = u64;
+    type Sig = u64;
+    type QuireLimbs = [u64; 16];
+    const ZERO_BITS: u64 = 0;
+    const ONE_BITS: u64 = 1 << 62;
+    const NAR_BITS: u64 = 1 << 63;
+    const MAXPOS_BITS: u64 = 0x7FFF_FFFF_FFFF_FFFF;
+    const MINPOS_BITS: u64 = 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_constants_are_consistent() {
+        fn check<F: PositFormat>() {
+            assert_eq!(F::NAR_BITS.to_u64(), 1u64 << (F::N - 1), "{}", F::NAME);
+            assert_eq!(F::ONE_BITS.to_u64(), 1u64 << (F::N - 2), "{}", F::NAME);
+            assert_eq!(
+                F::MAXPOS_BITS.to_u64(),
+                unpacked::mask_n(F::N) >> 1,
+                "{}",
+                F::NAME
+            );
+            assert_eq!(F::MINPOS_BITS.to_u64(), 1, "{}", F::NAME);
+            assert_eq!(
+                F::QUIRE_BITS as usize,
+                64 * <F::QuireLimbs as Limbs>::LEN,
+                "{}",
+                F::NAME
+            );
+        }
+        check::<P8>();
+        check::<P16>();
+        check::<P32>();
+        check::<P64>();
+    }
+
+    #[test]
+    fn trait_ops_match_legacy_paths_p32() {
+        // The defaulted trait methods and the const-generic wrappers are
+        // the same engine; spot-check the plumbing.
+        let a = P32::from_f64(2.5);
+        let b = P32::from_f64(-1.25);
+        assert_eq!(P32::add(a, b), ops::add::<32>(a, b));
+        assert_eq!(P32::mul(a, b), ops::mul::<32>(a, b));
+        assert_eq!(P32::to_f64(a), 2.5);
+        assert_eq!(P32::cmp(b, a), Ordering::Less);
+    }
+
+    #[test]
+    fn p64_basics() {
+        let one = P64::ONE_BITS;
+        assert_eq!(P64::to_f64(one), 1.0);
+        assert_eq!(P64::add(one, one), P64::from_f64(2.0));
+        assert_eq!(P64::mul(one, one), one);
+        // maxpos64 = 2^(4·62) = 2^248.
+        assert_eq!(P64::to_f64(P64::MAXPOS_BITS), (248.0f64).exp2());
+        assert_eq!(P64::to_f64(P64::MINPOS_BITS), (-248.0f64).exp2());
+        assert!(P64::to_f64(P64::NAR_BITS).is_nan());
+    }
+}

@@ -1,14 +1,43 @@
 //! Posit arithmetic (Posit Standard 4.12 draft, `es = 2`) — the numeric
 //! substrate of PERCIVAL's PAU.
 //!
-//! Three formats are provided, mirroring the standard and the paper:
-//! [`Posit8`], [`Posit16`] and the paper's primary [`Posit32`], each with a
-//! matching quire ([`Quire8`]/[`Quire16`]/[`Quire32`]).
+//! ## One format-generic core
 //!
-//! Layering mirrors the hardware (paper Fig. 2):
-//! - **COMP**: [`ops`] add/sub/mul, [`divsqrt`] approximate (the PAU units)
-//!   and exact (software-over-MAC) division/square-root.
-//! - **CONV**: [`convert`] posit ↔ int ↔ IEEE 754.
+//! Since the `PositFormat` refactor the module is built around a single
+//! width-independent engine and a trait that instantiates it:
+//!
+//! - [`format::PositFormat`] — a format is a zero-sized marker type
+//!   ([`P8`], [`P16`], [`P32`], [`P64`]) choosing the storage word
+//!   (`Bits`), the decoded-significand word (`Sig`) and the quire limb
+//!   array (`QuireLimbs`). Every operation — decode, encode, add, mul,
+//!   div/sqrt (approximate and exact), conversions — is a *defaulted*
+//!   trait method over the shared engine in [`unpacked`] / [`ops`] /
+//!   [`convert`] / [`divsqrt`] (u64 patterns, u128 workspace, runtime
+//!   width).
+//! - [`Posit<F>`] — the value wrapper (`Posit32` = `Posit<P32>`, …) with
+//!   operators, ordering and conversions.
+//! - [`quire::Quire<F>`] — the generic 16n-bit quire with dirty-limb-range
+//!   windowing (`Quire32` = `Quire<P32>`, …, including the 1024-bit
+//!   [`Quire64`]).
+//!
+//! **Adding a width** is a ~10-line `PositFormat` impl: pick `N`, the
+//! three storage types, and write the five constant bit patterns. The
+//! [`format::P64`] impl (Posit⟨64,2⟩ with its 1024-bit quire, the
+//! Big-PERCIVAL configuration) is exactly that, and flows unchanged
+//! through the kernel GEMM drivers, the coordinator job queue, the
+//! benches and the MSE accuracy harness.
+//!
+//! The pre-trait const-generic entry points (`ops::add::<N>`,
+//! `convert::from_f64::<N>`, `unpacked::decode::<N>`, …, `N ≤ 32`) are
+//! retained as thin wrappers over the same engine, so every existing call
+//! site, test vector and bit-exactness oracle keeps compiling and keeps
+//! its bits.
+//!
+//! ## Layering (mirrors the hardware, paper Fig. 2)
+//!
+//! - **COMP**: [`ops`] add/sub/mul, [`divsqrt`] approximate (the PAU
+//!   units) and exact (software-over-MAC) division/square-root.
+//! - **CONV**: [`convert`] posit ↔ int ↔ IEEE 754 ↔ other posit widths.
 //! - **FUSED**: [`quire`] QCLR/QNEG/QMADD/QMSUB/QROUND.
 //! - Comparisons are *integer* comparisons on the bit patterns and live in
 //!   the ALU, not the PAU (`§2.1`, `§4.2`) — see [`cmp_signed`] and the
@@ -16,11 +45,13 @@
 
 pub mod convert;
 pub mod divsqrt;
+pub mod format;
 pub mod ops;
 pub mod quire;
 pub mod unpacked;
 
-pub use quire::{Quire16, Quire32, Quire8};
+pub use format::{Limbs, PositBits, PositFormat, SigWord, P16, P32, P64, P8};
+pub use quire::{Quire, Quire16, Quire32, Quire64, Quire8};
 pub use unpacked::{Decoded, Unpacked};
 
 use std::cmp::Ordering;
@@ -90,221 +121,219 @@ fn apply_sign<const N: u32>(a: u32, negative: bool) -> u32 {
     }
 }
 
-macro_rules! posit_type {
-    ($(#[$doc:meta])* $name:ident, $quire:ident, $n:expr) => {
-        $(#[$doc])*
-        #[derive(Clone, Copy, PartialEq, Eq, Default, Hash)]
-        pub struct $name(pub u32);
+/// A posit value of format `F` — a thin newtype over the format's bit
+/// pattern. `Posit8`/`Posit16`/`Posit32`/`Posit64` are aliases of this.
+#[derive(Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub struct Posit<F: PositFormat>(pub F::Bits);
 
-        impl $name {
-            /// Format width.
-            pub const N: u32 = $n;
-            /// Exponent field width (fixed by the 4.12 draft standard).
-            pub const ES: u32 = 2;
-            pub const ZERO: Self = Self(0);
-            pub const ONE: Self = Self(1 << ($n - 2));
-            pub const NAR: Self = Self(1 << ($n - 1));
-            pub const MAXPOS: Self = Self(unpacked::maxpos::<$n>());
-            pub const MINPOS: Self = Self(unpacked::minpos::<$n>());
+/// 8-bit posit, es = 2 (`Posit⟨8,2⟩`).
+pub type Posit8 = Posit<P8>;
+/// 16-bit posit, es = 2 (`Posit⟨16,2⟩`).
+pub type Posit16 = Posit<P16>;
+/// 32-bit posit, es = 2 (`Posit⟨32,2⟩`) — the paper's format.
+pub type Posit32 = Posit<P32>;
+/// 64-bit posit, es = 2 (`Posit⟨64,2⟩`) — the Big-PERCIVAL width.
+pub type Posit64 = Posit<P64>;
 
-            /// Wrap a raw bit pattern (masked to N bits).
-            #[inline]
-            pub fn from_bits(bits: u32) -> Self {
-                Self(bits & unpacked::mask::<$n>())
-            }
+impl<F: PositFormat> Posit<F> {
+    /// Format width.
+    pub const N: u32 = F::N;
+    /// Exponent field width (fixed by the 4.12 draft standard).
+    pub const ES: u32 = F::ES;
+    pub const ZERO: Self = Self(F::ZERO_BITS);
+    pub const ONE: Self = Self(F::ONE_BITS);
+    pub const NAR: Self = Self(F::NAR_BITS);
+    pub const MAXPOS: Self = Self(F::MAXPOS_BITS);
+    pub const MINPOS: Self = Self(F::MINPOS_BITS);
 
-            #[inline]
-            pub fn bits(self) -> u32 {
-                self.0
-            }
+    /// Wrap a raw bit pattern (masked to N bits).
+    #[inline]
+    pub fn from_bits(bits: F::Bits) -> Self {
+        Self(F::mask(bits))
+    }
 
-            #[inline]
-            pub fn is_nar(self) -> bool {
-                self.0 == Self::NAR.0
-            }
+    #[inline]
+    pub fn bits(self) -> F::Bits {
+        self.0
+    }
 
-            #[inline]
-            pub fn is_zero(self) -> bool {
-                self.0 == 0
-            }
+    #[inline]
+    pub fn is_nar(self) -> bool {
+        self.0 == F::NAR_BITS
+    }
 
-            #[inline]
-            pub fn from_f64(x: f64) -> Self {
-                Self(convert::from_f64::<$n>(x))
-            }
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == F::ZERO_BITS
+    }
 
-            #[inline]
-            pub fn to_f64(self) -> f64 {
-                convert::to_f64::<$n>(self.0)
-            }
+    #[inline]
+    pub fn from_f64(x: f64) -> Self {
+        Self(F::from_f64(x))
+    }
 
-            #[inline]
-            pub fn from_f32(x: f32) -> Self {
-                Self(convert::from_f32::<$n>(x))
-            }
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        F::to_f64(self.0)
+    }
 
-            #[inline]
-            pub fn to_f32(self) -> f32 {
-                convert::to_f32::<$n>(self.0)
-            }
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        // f32 → f64 is exact, so this rounds once.
+        Self(F::from_f64(x as f64))
+    }
 
-            #[inline]
-            pub fn from_i64(x: i64) -> Self {
-                Self(convert::from_i64::<$n>(x))
-            }
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        F::to_f64(self.0) as f32
+    }
 
-            #[inline]
-            pub fn to_i64(self) -> i64 {
-                convert::to_i64::<$n>(self.0)
-            }
+    #[inline]
+    pub fn from_i64(x: i64) -> Self {
+        Self(F::from_i64(x))
+    }
 
-            /// Approximate hardware division (the PAU's PDIV unit).
-            #[inline]
-            pub fn div_approx(self, rhs: Self) -> Self {
-                Self(divsqrt::div_approx::<$n>(self.0, rhs.0))
-            }
+    #[inline]
+    pub fn to_i64(self) -> i64 {
+        F::to_i64(self.0)
+    }
 
-            /// Approximate hardware square root (the PAU's PSQRT unit).
-            #[inline]
-            pub fn sqrt_approx(self) -> Self {
-                Self(divsqrt::sqrt_approx::<$n>(self.0))
-            }
+    /// Approximate hardware division (the PAU's PDIV unit).
+    #[inline]
+    pub fn div_approx(self, rhs: Self) -> Self {
+        Self(F::div_approx(self.0, rhs.0))
+    }
 
-            /// Correctly rounded division (software path).
-            #[inline]
-            pub fn div_exact(self, rhs: Self) -> Self {
-                Self(divsqrt::div_exact::<$n>(self.0, rhs.0))
-            }
+    /// Approximate hardware square root (the PAU's PSQRT unit).
+    #[inline]
+    pub fn sqrt_approx(self) -> Self {
+        Self(F::sqrt_approx(self.0))
+    }
 
-            /// Correctly rounded square root (software path).
-            #[inline]
-            pub fn sqrt_exact(self) -> Self {
-                Self(divsqrt::sqrt_exact::<$n>(self.0))
-            }
+    /// Correctly rounded division (software path).
+    #[inline]
+    pub fn div_exact(self, rhs: Self) -> Self {
+        Self(F::div_exact(self.0, rhs.0))
+    }
 
-            #[inline]
-            pub fn abs(self) -> Self {
-                Self(convert::abs::<$n>(self.0))
-            }
+    /// Correctly rounded square root (software path).
+    #[inline]
+    pub fn sqrt_exact(self) -> Self {
+        Self(F::sqrt_exact(self.0))
+    }
 
-            #[inline]
-            pub fn min(self, rhs: Self) -> Self {
-                Self(min_bits::<$n>(self.0, rhs.0))
-            }
+    #[inline]
+    pub fn abs(self) -> Self {
+        Self(F::abs(self.0))
+    }
 
-            #[inline]
-            pub fn max(self, rhs: Self) -> Self {
-                Self(max_bits::<$n>(self.0, rhs.0))
-            }
-
-            /// Total order (integer order on patterns; NaR first).
-            #[inline]
-            pub fn total_cmp(self, rhs: Self) -> Ordering {
-                cmp_signed::<$n>(self.0, rhs.0)
-            }
+    #[inline]
+    pub fn min(self, rhs: Self) -> Self {
+        if F::cmp(self.0, rhs.0) == Ordering::Greater {
+            Self(F::mask(rhs.0))
+        } else {
+            Self(F::mask(self.0))
         }
+    }
 
-        impl std::ops::Add for $name {
-            type Output = Self;
-            #[inline]
-            fn add(self, rhs: Self) -> Self {
-                Self(ops::add::<$n>(self.0, rhs.0))
-            }
+    #[inline]
+    pub fn max(self, rhs: Self) -> Self {
+        if F::cmp(self.0, rhs.0) == Ordering::Less {
+            Self(F::mask(rhs.0))
+        } else {
+            Self(F::mask(self.0))
         }
+    }
 
-        impl std::ops::Sub for $name {
-            type Output = Self;
-            #[inline]
-            fn sub(self, rhs: Self) -> Self {
-                Self(ops::sub::<$n>(self.0, rhs.0))
-            }
-        }
-
-        impl std::ops::Mul for $name {
-            type Output = Self;
-            #[inline]
-            fn mul(self, rhs: Self) -> Self {
-                Self(ops::mul::<$n>(self.0, rhs.0))
-            }
-        }
-
-        impl std::ops::Neg for $name {
-            type Output = Self;
-            #[inline]
-            fn neg(self) -> Self {
-                Self(unpacked::negate::<$n>(self.0))
-            }
-        }
-
-        /// `Div` uses the *exact* division: operator use in host code wants
-        /// value semantics; the approximate unit is an explicit method call,
-        /// mirroring the deliberate hardware design choice.
-        impl std::ops::Div for $name {
-            type Output = Self;
-            #[inline]
-            fn div(self, rhs: Self) -> Self {
-                self.div_exact(rhs)
-            }
-        }
-
-        impl PartialOrd for $name {
-            #[inline]
-            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-                Some(self.total_cmp(*other))
-            }
-        }
-
-        impl Ord for $name {
-            #[inline]
-            fn cmp(&self, other: &Self) -> Ordering {
-                self.total_cmp(*other)
-            }
-        }
-
-        impl std::fmt::Debug for $name {
-            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-                write!(f, "{}({:#010x} = {})", stringify!($name), self.0, self.to_f64())
-            }
-        }
-
-        impl std::fmt::Display for $name {
-            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-                write!(f, "{}", self.to_f64())
-            }
-        }
-
-        impl From<f64> for $name {
-            fn from(x: f64) -> Self {
-                Self::from_f64(x)
-            }
-        }
-
-        impl From<$name> for f64 {
-            fn from(p: $name) -> f64 {
-                p.to_f64()
-            }
-        }
-    };
+    /// Total order (integer order on patterns; NaR first).
+    #[inline]
+    pub fn total_cmp(self, rhs: Self) -> Ordering {
+        F::cmp(self.0, rhs.0)
+    }
 }
 
-posit_type!(
-    /// 8-bit posit, es = 2 (`Posit⟨8,2⟩`).
-    Posit8,
-    Quire8,
-    8
-);
-posit_type!(
-    /// 16-bit posit, es = 2 (`Posit⟨16,2⟩`).
-    Posit16,
-    Quire16,
-    16
-);
-posit_type!(
-    /// 32-bit posit, es = 2 (`Posit⟨32,2⟩`) — the paper's format.
-    Posit32,
-    Quire32,
-    32
-);
+impl<F: PositFormat> std::ops::Add for Posit<F> {
+    type Output = Self;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        Self(F::add(self.0, rhs.0))
+    }
+}
+
+impl<F: PositFormat> std::ops::Sub for Posit<F> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        Self(F::sub(self.0, rhs.0))
+    }
+}
+
+impl<F: PositFormat> std::ops::Mul for Posit<F> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        Self(F::mul(self.0, rhs.0))
+    }
+}
+
+impl<F: PositFormat> std::ops::Neg for Posit<F> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Self(F::negate(self.0))
+    }
+}
+
+/// `Div` uses the *exact* division: operator use in host code wants
+/// value semantics; the approximate unit is an explicit method call,
+/// mirroring the deliberate hardware design choice.
+impl<F: PositFormat> std::ops::Div for Posit<F> {
+    type Output = Self;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        self.div_exact(rhs)
+    }
+}
+
+impl<F: PositFormat> PartialOrd for Posit<F> {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.total_cmp(*other))
+    }
+}
+
+impl<F: PositFormat> Ord for Posit<F> {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.total_cmp(*other)
+    }
+}
+
+impl<F: PositFormat> std::fmt::Debug for Posit<F> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // `{:#0w$x}` with w = 2 (for "0x") + hex digits of the storage.
+        let w = (<F::Bits as PositBits>::WIDTH / 4 + 2) as usize;
+        write!(f, "{}({:#0w$x} = {})", F::NAME, self.0, self.to_f64(), w = w)
+    }
+}
+
+impl<F: PositFormat> std::fmt::Display for Posit<F> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+impl<F: PositFormat> From<f64> for Posit<F> {
+    fn from(x: f64) -> Self {
+        Self::from_f64(x)
+    }
+}
+
+impl<F: PositFormat> From<Posit<F>> for f64 {
+    fn from(p: Posit<F>) -> f64 {
+        p.to_f64()
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -346,6 +375,11 @@ mod tests {
         assert_eq!(a.max(b), a);
         assert_eq!(Posit32::NAR.min(a), Posit32::NAR);
         assert_eq!(Posit32::NAR.max(a), a);
+        // Same ALU semantics at 64 bits.
+        let a = Posit64::from_f64(2.0);
+        let b = Posit64::from_f64(-3.0);
+        assert_eq!(a.min(b), b);
+        assert_eq!(Posit64::NAR.min(a), Posit64::NAR);
     }
 
     #[test]
@@ -379,12 +413,38 @@ mod tests {
     }
 
     #[test]
+    fn operator_sugar_p64() {
+        let two = Posit64::from_f64(2.0);
+        let three = Posit64::from_f64(3.0);
+        assert_eq!((two + three).to_f64(), 5.0);
+        assert_eq!((two - three).to_f64(), -1.0);
+        assert_eq!((two * three).to_f64(), 6.0);
+        assert_eq!((three / two).to_f64(), 1.5);
+        assert_eq!((-two).to_f64(), -2.0);
+        assert!(two < three);
+        assert!(Posit64::NAR < Posit64::ZERO);
+        assert_eq!(Posit64::from_i64(123_456_789).to_i64(), 123_456_789);
+    }
+
+    #[test]
     fn constants() {
         assert_eq!(Posit32::ONE.to_f64(), 1.0);
         assert_eq!(Posit8::ONE.to_f64(), 1.0);
         assert_eq!(Posit16::ONE.to_f64(), 1.0);
+        assert_eq!(Posit64::ONE.to_f64(), 1.0);
         assert!(Posit32::NAR.is_nar());
+        assert!(Posit64::NAR.is_nar());
         assert_eq!(Posit32::MAXPOS.to_f64(), (120.0f64).exp2());
         assert_eq!(Posit32::MINPOS.to_f64(), (-120.0f64).exp2());
+        assert_eq!(Posit64::MAXPOS.to_f64(), (248.0f64).exp2());
+        assert_eq!(Posit64::MINPOS.to_f64(), (-248.0f64).exp2());
+    }
+
+    #[test]
+    fn debug_format_names_the_format() {
+        let s = format!("{:?}", Posit32::ONE);
+        assert!(s.starts_with("Posit32(0x40000000"), "{s}");
+        let s = format!("{:?}", Posit64::ONE);
+        assert!(s.starts_with("Posit64(0x4000000000000000"), "{s}");
     }
 }

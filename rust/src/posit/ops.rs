@@ -1,24 +1,35 @@
 //! Posit add / sub / mul (the PAU's COMP block, minus div/sqrt which live
 //! in [`super::divsqrt`]).
 //!
+//! Implemented once, width-independently, in the wide engine
+//! ([`add_n`] / [`sub_n`] / [`mul_n`]: `u64` patterns, `u128` workspace,
+//! runtime width) — this is what the [`super::format::PositFormat`]
+//! defaulted methods call for every format including Posit64. The
+//! const-generic `u32` entry points ([`add`], [`sub`], [`mul`],
+//! [`mul_unpacked`], [`exact_product`]) are thin wrappers kept so the
+//! pre-trait call sites and bit-exactness oracles compile unchanged.
+//!
 //! Semantics follow the Posit Standard 4.12 draft: a single rounding
 //! (round-to-nearest, ties-to-even in pattern space) at the end of each
 //! operation, NaR propagates, there is exactly one zero and no
 //! overflow/underflow (saturation at `maxpos` / `minpos`).
 
-use super::unpacked::{decode, encode_norm, nar, negate, Decoded, HID, TOP};
+use super::unpacked::{
+    decode, decode_n, encode_norm, encode_norm_n, mask_n, nar, nar_n, negate, negate_n, Decoded,
+    HID, HID_W, TOP_W,
+};
 
-/// Workspace position of the hidden bit during add/sub: decoded significands
-/// are widened from bit [`HID`] to bit [`TOP`] so alignment shifts have 32
-/// guard bits below them.
-const W: u32 = TOP - HID; // 32
+/// Workspace position of the hidden bit during wide add/sub: decoded
+/// significands are widened from bit [`HID_W`] to bit [`TOP_W`] so
+/// alignment shifts have 64 guard bits below them.
+const W: u32 = TOP_W - HID_W; // 64
 
-/// Posit addition.
-pub fn add<const N: u32>(a: u32, b: u32) -> u32 {
-    let (ua, ub) = match (decode::<N>(a), decode::<N>(b)) {
-        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
-        (Decoded::Zero, _) => return b & super::unpacked::mask::<N>(),
-        (_, Decoded::Zero) => return a & super::unpacked::mask::<N>(),
+/// Posit addition, any width `8 ≤ n ≤ 64`.
+pub fn add_n(n: u32, a: u64, b: u64) -> u64 {
+    let (ua, ub) = match (decode_n(n, a), decode_n(n, b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar_n(n),
+        (Decoded::Zero, _) => return b & mask_n(n),
+        (_, Decoded::Zero) => return a & mask_n(n),
         (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
     };
     // Order by magnitude so the result inherits the larger operand's sign
@@ -28,49 +39,76 @@ pub fn add<const N: u32>(a: u32, b: u32) -> u32 {
     } else {
         (ua, ub)
     };
-    let wa = (hi.sig as u64) << W;
-    let wb = (lo.sig as u64) << W;
+    let wa = (hi.sig as u128) << W;
+    let wb = (lo.sig as u128) << W;
     let d = (hi.scale - lo.scale) as u32;
     let (bsh, sticky) = if d == 0 {
         (wb, false)
-    } else if d >= 64 {
+    } else if d >= 128 {
         (0, true) // wb != 0 always
     } else {
-        (wb >> d, wb << (64 - d) != 0)
+        (wb >> d, wb << (128 - d) != 0)
     };
     if hi.sign == lo.sign {
-        // Same sign: plain magnitude add; the carry (bit 63) is handled by
+        // Same sign: plain magnitude add; the carry (bit 127) is handled by
         // the normalising encode.
         let sum = wa + bsh;
-        encode_norm::<N>(hi.sign, hi.scale, sum, TOP, sticky)
+        encode_norm_n(n, hi.sign, hi.scale, sum, TOP_W, sticky)
     } else {
-        // Opposite signs: subtract magnitudes. When sticky bits were lost in
-        // the alignment shift the true subtrahend is `bsh + ε`, 0 < ε < 1
-        // workspace ulp, so `wa − bsh − 1` with sticky set brackets the true
-        // value exactly for round-to-nearest purposes.
-        let diff = wa - bsh - sticky as u64;
+        // Opposite signs: subtract magnitudes. When sticky bits were lost
+        // in the alignment shift the true subtrahend is `bsh + ε`,
+        // 0 < ε < 1 workspace ulp, so `wa − bsh − 1` with sticky set
+        // brackets the true value exactly for round-to-nearest purposes.
+        let diff = wa - bsh - sticky as u128;
         if diff == 0 {
             debug_assert!(!sticky);
             return 0;
         }
-        encode_norm::<N>(hi.sign, hi.scale, diff, TOP, sticky)
+        encode_norm_n(n, hi.sign, hi.scale, diff, TOP_W, sticky)
     }
 }
 
 /// Posit subtraction: `a − b = a + (−b)`; posit negation is exact.
 #[inline]
+pub fn sub_n(n: u32, a: u64, b: u64) -> u64 {
+    add_n(n, a, negate_n(n, b))
+}
+
+/// Posit multiplication, any width.
+pub fn mul_n(n: u32, a: u64, b: u64) -> u64 {
+    let (ua, ub) = match (decode_n(n, a), decode_n(n, b)) {
+        (Decoded::NaR, _) | (_, Decoded::NaR) => return nar_n(n),
+        (Decoded::Zero, _) | (_, Decoded::Zero) => return 0,
+        (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
+    };
+    // Exact 126-bit product of the two 63-bit significands; bit 124 of the
+    // product carries the weight 2^(scale_a + scale_b).
+    let p = (ua.sig as u128) * (ub.sig as u128);
+    encode_norm_n(n, ua.sign ^ ub.sign, ua.scale + ub.scale, p, 2 * HID_W, false)
+}
+
+// ── Narrow (u32) compatibility wrappers ────────────────────────────────
+
+/// Posit addition (`N ≤ 32`).
+#[inline]
+pub fn add<const N: u32>(a: u32, b: u32) -> u32 {
+    add_n(N, a as u64, b as u64) as u32
+}
+
+/// Posit subtraction (`N ≤ 32`).
+#[inline]
 pub fn sub<const N: u32>(a: u32, b: u32) -> u32 {
     add::<N>(a, negate::<N>(b))
 }
 
-/// Posit multiplication.
+/// Posit multiplication (`N ≤ 32`).
 #[inline]
 pub fn mul<const N: u32>(a: u32, b: u32) -> u32 {
-    mul_unpacked::<N>(decode::<N>(a), decode::<N>(b))
+    mul_n(N, a as u64, b as u64) as u32
 }
 
-/// Posit multiplication on pre-decoded operands (bit-identical to [`mul`];
-/// the kernel layer hoists the decode out of its loops).
+/// Posit multiplication on pre-decoded narrow operands (bit-identical to
+/// [`mul`]; the kernel layer hoists the decode out of its loops).
 pub fn mul_unpacked<const N: u32>(a: Decoded, b: Decoded) -> u32 {
     let (ua, ub) = match (a, b) {
         (Decoded::NaR, _) | (_, Decoded::NaR) => return nar::<N>(),
@@ -121,10 +159,11 @@ pub fn exact_product_unpacked(a: Decoded, b: Decoded) -> Product {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posit::unpacked::{mask, maxpos};
+    use crate::posit::unpacked::{mask, maxpos, maxpos_n};
 
     const ONE8: u32 = 0x40;
     const ONE32: u32 = 0x4000_0000;
+    const ONE64: u64 = 1 << 62;
 
     #[test]
     fn add_identities() {
@@ -136,17 +175,24 @@ mod tests {
         for bits in [ONE32, 0x1234_5678, 0x7FFF_FFFF, 3] {
             assert_eq!(add::<32>(bits, negate::<32>(bits)), 0);
         }
+        // Same identities at width 64.
+        assert_eq!(add_n(64, 0, ONE64), ONE64);
+        assert_eq!(add_n(64, nar_n(64), ONE64), nar_n(64));
+        for bits in [ONE64, 0x1234_5678_9ABC_DEF0u64, maxpos_n(64), 3] {
+            assert_eq!(add_n(64, bits, negate_n(64, bits)), 0, "{bits:#x}");
+        }
     }
 
     #[test]
     fn add_small_integers() {
-        // 1 + 1 = 2 → posit32 pattern 0x48000000 (regime 10, e=01? no:
-        // 2 = 1.0 × 2^1 → r=0,e=1 → 0b0_10_01_frac0 = 0x48000000).
+        // 1 + 1 = 2 → posit32 pattern 0x48000000 (regime 10, e=01).
         assert_eq!(add::<32>(ONE32, ONE32), 0x4800_0000);
         // posit8: 1+1=2 → 0b0_10_01_000 = 0x48.
         assert_eq!(add::<8>(ONE8, ONE8), 0x48);
         // 2+2=4: 4 = r0,e=2 → 0b0_10_10_000 = 0x50.
         assert_eq!(add::<8>(0x48, 0x48), 0x50);
+        // posit64: 1+1=2 → 0b0_10_01_0…0 = 0x4800… (same leading structure).
+        assert_eq!(add_n(64, ONE64, ONE64), 0x4800_0000_0000_0000);
     }
 
     #[test]
@@ -158,6 +204,10 @@ mod tests {
         // (−1) × (−1) = 1.
         let neg1 = negate::<32>(ONE32);
         assert_eq!(mul::<32>(neg1, neg1), ONE32);
+        // Width 64: x × 1 = x for arbitrary patterns.
+        assert_eq!(mul_n(64, 0x1234_5678_9ABC_DEF0, ONE64), 0x1234_5678_9ABC_DEF0);
+        let neg1w = negate_n(64, ONE64);
+        assert_eq!(mul_n(64, neg1w, neg1w), ONE64);
     }
 
     #[test]
@@ -166,6 +216,8 @@ mod tests {
         assert_eq!(mul::<8>(mp, mp), mp);
         // minpos × minpos saturates at minpos (never underflows to zero).
         assert_eq!(mul::<8>(1, 1), 1);
+        assert_eq!(mul_n(64, maxpos_n(64), maxpos_n(64)), maxpos_n(64));
+        assert_eq!(mul_n(64, 1, 1), 1);
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! The quire: a 16n-bit two's-complement fixed-point accumulator
 //! (Posit Standard 4.12 draft §quire; paper §2.1/§4.1).
 //!
-//! `Quire32` is the 512-bit register inside the paper's PAU. Its value is
+//! One generic [`Quire<F>`] serves every format: the limb array is the
+//! format's [`PositFormat::QuireLimbs`] associated type, so
+//! [`Quire32`] is the paper's 512-bit PAU register and [`Quire64`] is the
+//! 1024-bit accumulator Big-PERCIVAL studies. Its value is
 //! `2^(16 − 8n) × I` where `I` is the 16n-bit signed integer held in the
 //! limbs. Fused multiply-accumulate (`QMADD`/`QMSUB`) adds the *exact*
-//! 62-bit product of two posits into the accumulator with no intermediate
+//! product of two posits into the accumulator with no intermediate
 //! rounding; `QROUND` performs the single final rounding back to a posit.
 //! `QCLR`/`QNEG` complete the instruction set (no loads/stores — the paper
 //! deliberately omits quire spills, §4.1/§8).
 //!
 //! The format is sized by the standard so that every bit of every posit
 //! product lands inside the register; the implementation `debug_assert`s
-//! that invariant rather than silently dropping bits.
+//! that invariant rather than silently dropping bits. The raw pattern
+//! `10…0` (the integer −2^(16n−1)) is the standard's quire-NaR encoding
+//! and rounds to posit NaR.
 //!
 //! ## Windowed accumulation
 //!
@@ -19,365 +24,444 @@
 //! walks all limbs. This implementation tracks the **dirty limb range**
 //! `[lo_dirty, hi_dirty)` — the limbs that may be nonzero since the last
 //! `QCLR` (every limb outside the window is guaranteed zero). A typical
-//! MAC touches two of `Quire32`'s eight limbs, so clear/round/negate scan
-//! the window instead of the full register. Carry/borrow ripples extend
-//! the window as they go, which keeps the invariant exact; the tracking
-//! never changes results, only the work done to produce them (pinned by
-//! `dirty_window_invariant` below and the kernel-equivalence tests).
+//! MAC touches two of `Quire32`'s eight limbs (three of `Quire64`'s
+//! sixteen), so clear/round/negate scan the window instead of the full
+//! register. Carry/borrow ripples extend the window as they go, which
+//! keeps the invariant exact; the tracking never changes results, only the
+//! work done to produce them (pinned by `dirty_window_invariant` below,
+//! the kernel-equivalence tests, and `tests/format_generic.rs`).
 //!
-//! The decode-once entry points [`Quire32::madd_unpacked`] /
-//! [`Quire32::msub_unpacked`] accept pre-decoded operands so batched
+//! The decode-once entry points [`Quire::madd_unpacked`] /
+//! [`Quire::msub_unpacked`] accept pre-decoded operands so batched
 //! kernels (see [`crate::kernels`]) pay the posit decode once per matrix
-//! rather than once per MAC.
+//! rather than once per MAC. Narrow-format products fit a single `u64` and
+//! take the historical two-limb write path; Posit64 products span up to
+//! 126 bits and go through the three-chunk wide path.
 
-use super::ops::{exact_product_unpacked, Product};
-use super::unpacked::{decode, encode_round, nar, Decoded, TOP};
+use super::format::{Limbs, PositFormat, SigWord, P16, P32, P64, P8};
+use super::unpacked::{encode_round_n, Decoded, TOP_W};
 
-macro_rules! quire_impl {
-    ($(#[$doc:meta])* $name:ident, $n:expr, $limbs:expr) => {
-        $(#[$doc])*
-        #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-        pub struct $name {
-            /// Little-endian limbs of the 16n-bit two's-complement integer.
-            limbs: [u64; $limbs],
-            /// NaR state: set when any contributing operand was NaR; sticky
-            /// until cleared, like the hardware register.
-            nar: bool,
-            /// Lowest limb index that may be nonzero (= `LIMBS` when the
-            /// accumulator is all-zero). Limbs below are exactly zero.
-            lo_dirty: usize,
-            /// One past the highest limb index that may be nonzero (= 0
-            /// when all-zero). Limbs at or above are exactly zero.
-            hi_dirty: usize,
-        }
-
-        impl Default for $name {
-            fn default() -> Self {
-                Self::new()
-            }
-        }
-
-        impl $name {
-            /// Posit format width `n`.
-            pub const N: u32 = $n;
-            /// Total quire width in bits (16n).
-            pub const BITS: u32 = 16 * $n;
-            /// Number of 64-bit limbs.
-            pub const LIMBS: usize = $limbs;
-            /// Weight of the least-significant quire bit: 2^(16 − 8n).
-            pub const LSB_EXP: i32 = 16 - 8 * ($n as i32);
-
-            /// `QCLR.S` — a cleared quire (value 0).
-            pub fn new() -> Self {
-                Self { limbs: [0; $limbs], nar: false, lo_dirty: $limbs, hi_dirty: 0 }
-            }
-
-            /// True when the quire holds NaR.
-            pub fn is_nar(&self) -> bool {
-                self.nar
-            }
-
-            /// `QCLR.S` — zeroes only the dirty window.
-            pub fn clear(&mut self) {
-                if self.hi_dirty > self.lo_dirty {
-                    for l in &mut self.limbs[self.lo_dirty..self.hi_dirty] {
-                        *l = 0;
-                    }
-                }
-                self.lo_dirty = $limbs;
-                self.hi_dirty = 0;
-                self.nar = false;
-            }
-
-            /// Mark limb `i` as possibly nonzero.
-            #[inline(always)]
-            fn mark(&mut self, i: usize) {
-                if i < self.lo_dirty {
-                    self.lo_dirty = i;
-                }
-                if i + 1 > self.hi_dirty {
-                    self.hi_dirty = i + 1;
-                }
-            }
-
-            /// Dirty limb window `(lo, hi)`: limbs outside `lo..hi` are
-            /// guaranteed zero (introspection for tests and tuning).
-            pub fn dirty_range(&self) -> (usize, usize) {
-                (self.lo_dirty, self.hi_dirty)
-            }
-
-            /// `QNEG.S` — two's-complement negation of the accumulator.
-            ///
-            /// Limbs below the dirty window are zero; negating them leaves
-            /// them zero with the incoming carry still 1, so the walk can
-            /// start at `lo_dirty`. Everything from there to the top is
-            /// written (a nonzero value flips sign, so the high limbs
-            /// become part of the sign extension).
-            pub fn neg(&mut self) {
-                if self.nar || self.hi_dirty == 0 {
-                    return;
-                }
-                let mut carry = 1u64;
-                for i in self.lo_dirty..$limbs {
-                    let (v, c) = (!self.limbs[i]).overflowing_add(carry);
-                    self.limbs[i] = v;
-                    carry = c as u64;
-                }
-                self.hi_dirty = $limbs;
-            }
-
-            /// `QMADD.S rs1, rs2` — quire += rs1 × rs2, exactly.
-            pub fn madd(&mut self, a: u32, b: u32) {
-                self.fused_unpacked(decode::<$n>(a), decode::<$n>(b), false)
-            }
-
-            /// `QMSUB.S rs1, rs2` — quire −= rs1 × rs2, exactly.
-            pub fn msub(&mut self, a: u32, b: u32) {
-                self.fused_unpacked(decode::<$n>(a), decode::<$n>(b), true)
-            }
-
-            /// `QMADD.S` on pre-decoded operands — bit-identical to
-            /// [`Self::madd`]; the kernel layer decodes each matrix once
-            /// and calls this in its inner loops.
-            #[inline]
-            pub fn madd_unpacked(&mut self, a: Decoded, b: Decoded) {
-                self.fused_unpacked(a, b, false)
-            }
-
-            /// `QMSUB.S` on pre-decoded operands (see
-            /// [`Self::madd_unpacked`]).
-            #[inline]
-            pub fn msub_unpacked(&mut self, a: Decoded, b: Decoded) {
-                self.fused_unpacked(a, b, true)
-            }
-
-            /// Accumulate a single posit (quire += a), via a × 1.
-            pub fn add_posit(&mut self, a: u32) {
-                const ONE: u32 = 1 << ($n - 2);
-                self.fused_unpacked(decode::<$n>(a), decode::<$n>(ONE), false)
-            }
-
-            fn fused_unpacked(&mut self, a: Decoded, b: Decoded, sub: bool) {
-                match exact_product_unpacked(a, b) {
-                    Product::NaR => self.nar = true,
-                    Product::Zero => {}
-                    Product::Num { sign, scale, sig } => {
-                        if self.nar {
-                            return;
-                        }
-                        // Bit 0 of `sig` has weight 2^(scale − 60); the quire
-                        // bit with that weight is at index
-                        // (scale − 60) − LSB_EXP.
-                        let pos = scale - 60 - Self::LSB_EXP;
-                        let (sig, pos) = if pos < 0 {
-                            // The standard sizes the quire so no real product
-                            // has bits below the LSB.
-                            debug_assert_eq!(sig & ((1u64 << (-pos)) - 1), 0);
-                            (sig >> (-pos), 0usize)
-                        } else {
-                            (sig, pos as usize)
-                        };
-                        self.add_shifted(sig, pos, sign ^ sub);
-                    }
-                }
-            }
-
-            /// Add (or subtract) `val << pos` into the limb array, marking
-            /// every limb written so the dirty window stays an
-            /// over-approximation of the nonzero limbs.
-            fn add_shifted(&mut self, val: u64, pos: usize, negative: bool) {
-                let li = pos / 64;
-                let sh = pos % 64;
-                let lo = val << sh;
-                let hi = if sh == 0 { 0 } else { val >> (64 - sh) };
-                debug_assert!(li < $limbs && (hi == 0 || li + 1 < $limbs));
-                self.mark(li);
-                if negative {
-                    let (v, b0) = self.limbs[li].overflowing_sub(lo);
-                    self.limbs[li] = v;
-                    let mut borrow = b0 as u64;
-                    if li + 1 < $limbs {
-                        self.mark(li + 1);
-                        let (v, b1) = self.limbs[li + 1].overflowing_sub(hi);
-                        let (v, b2) = v.overflowing_sub(borrow);
-                        self.limbs[li + 1] = v;
-                        borrow = (b1 | b2) as u64;
-                        let mut i = li + 2;
-                        while borrow != 0 && i < $limbs {
-                            let (v, b) = self.limbs[i].overflowing_sub(1);
-                            self.limbs[i] = v;
-                            self.mark(i);
-                            borrow = b as u64;
-                            i += 1;
-                        }
-                    }
-                } else {
-                    let (v, c0) = self.limbs[li].overflowing_add(lo);
-                    self.limbs[li] = v;
-                    let mut carry = c0 as u64;
-                    if li + 1 < $limbs {
-                        self.mark(li + 1);
-                        let (v, c1) = self.limbs[li + 1].overflowing_add(hi);
-                        let (v, c2) = v.overflowing_add(carry);
-                        self.limbs[li + 1] = v;
-                        carry = (c1 | c2) as u64;
-                        let mut i = li + 2;
-                        while carry != 0 && i < $limbs {
-                            let (v, c) = self.limbs[i].overflowing_add(1);
-                            self.limbs[i] = v;
-                            self.mark(i);
-                            carry = c as u64;
-                            i += 1;
-                        }
-                    }
-                }
-            }
-
-            /// `QROUND.S` — round the accumulator to the nearest posit
-            /// (single rounding of the whole fused expression). Scans only
-            /// the dirty window: a negative accumulator necessarily has a
-            /// dirty top limb (the sign bit is only reachable once a carry
-            /// or borrow has rippled there), so the window always covers
-            /// the magnitude.
-            pub fn round(&self) -> u32 {
-                if self.nar {
-                    return nar::<$n>();
-                }
-                let negative = self.limbs[$limbs - 1] >> 63 == 1;
-                debug_assert!(!negative || self.hi_dirty == $limbs);
-                // Magnitude in a scratch copy.
-                let mut mag = self.limbs;
-                if negative {
-                    let mut carry = 1u64;
-                    for l in mag.iter_mut().skip(self.lo_dirty) {
-                        let (v, c) = (!*l).overflowing_add(carry);
-                        *l = v;
-                        carry = c as u64;
-                    }
-                }
-                // Locate the most significant set bit (window-bounded).
-                let mut msb: Option<usize> = None;
-                for i in (0..self.hi_dirty).rev() {
-                    if mag[i] != 0 {
-                        msb = Some(i * 64 + 63 - mag[i].leading_zeros() as usize);
-                        break;
-                    }
-                }
-                let m = match msb {
-                    // All-zero magnitude: either true zero, or the pattern
-                    // 10…0, which is quire-NaR by the standard encoding.
-                    None => return if negative { nar::<$n>() } else { 0 },
-                    Some(m) => m,
-                };
-                // Extract a 63-bit window with the MSB at TOP (= bit 62) and
-                // fold everything below into sticky.
-                let (sig, sticky) = if m <= TOP as usize {
-                    (self.window(&mag, 0, m) << (TOP as usize - m), false)
-                } else {
-                    let lo = m - TOP as usize;
-                    let mut sticky = false;
-                    // Bits strictly below `lo`.
-                    let full = lo / 64;
-                    for l in mag.iter().take(full) {
-                        sticky |= *l != 0;
-                    }
-                    if lo % 64 != 0 {
-                        sticky |= mag[full] << (64 - lo % 64) != 0;
-                    }
-                    (self.window(&mag, lo, m), sticky)
-                };
-                let scale = m as i32 + Self::LSB_EXP;
-                encode_round::<$n>(negative, scale, sig, sticky)
-            }
-
-            /// Read bits [lo, hi] (inclusive, hi − lo ≤ 63) as a u64.
-            fn window(&self, mag: &[u64; $limbs], lo: usize, hi: usize) -> u64 {
-                debug_assert!(hi - lo <= 63);
-                let li = lo / 64;
-                let sh = lo % 64;
-                let mut v = mag[li] >> sh;
-                if sh != 0 && li + 1 < $limbs {
-                    v |= mag[li + 1] << (64 - sh);
-                }
-                // Mask to the window width.
-                let w = hi - lo + 1;
-                if w < 64 {
-                    v &= (1u64 << w) - 1;
-                }
-                v
-            }
-
-            /// Raw limbs (for tests and for the synth model's width
-            /// accounting).
-            pub fn limbs(&self) -> &[u64; $limbs] {
-                &self.limbs
-            }
-
-            /// Approximate f64 view of the accumulator (debug / display; the
-            /// conversion rounds, the quire itself never does).
-            pub fn to_f64(&self) -> f64 {
-                if self.nar {
-                    return f64::NAN;
-                }
-                let negative = self.limbs[$limbs - 1] >> 63 == 1;
-                let mut mag = self.limbs;
-                if negative {
-                    let mut carry = 1u64;
-                    for l in mag.iter_mut() {
-                        let (v, c) = (!*l).overflowing_add(carry);
-                        *l = v;
-                        carry = c as u64;
-                    }
-                }
-                let mut acc = 0.0f64;
-                for (i, l) in mag.iter().enumerate() {
-                    if *l != 0 {
-                        let w = (Self::LSB_EXP + (i as i32) * 64) as f64;
-                        acc += (*l as f64) * w.exp2();
-                    }
-                }
-                if negative {
-                    -acc
-                } else {
-                    acc
-                }
-            }
-        }
-    };
+/// Format-generic quire. The aliases [`Quire8`] … [`Quire64`] pick the
+/// width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Quire<F: PositFormat> {
+    /// Little-endian limbs of the 16n-bit two's-complement integer.
+    limbs: F::QuireLimbs,
+    /// NaR state: set when any contributing operand was NaR; sticky
+    /// until cleared, like the hardware register.
+    nar: bool,
+    /// Lowest limb index that may be nonzero (= `LIMBS` when the
+    /// accumulator is all-zero). Limbs below are exactly zero.
+    lo_dirty: usize,
+    /// One past the highest limb index that may be nonzero (= 0
+    /// when all-zero). Limbs at or above are exactly zero.
+    hi_dirty: usize,
 }
 
-quire_impl!(
-    /// 128-bit quire for Posit8 (LSB weight 2^-48).
-    Quire8,
-    8,
-    2
-);
-quire_impl!(
-    /// 256-bit quire for Posit16 (LSB weight 2^-112).
-    Quire16,
-    16,
-    4
-);
-quire_impl!(
-    /// 512-bit quire for Posit32 (LSB weight 2^-240) — the paper's PAU
-    /// accumulator whose hardware cost §6 quantifies.
-    Quire32,
-    32,
-    8
-);
+/// 128-bit quire for Posit8 (LSB weight 2^-48).
+pub type Quire8 = Quire<P8>;
+/// 256-bit quire for Posit16 (LSB weight 2^-112).
+pub type Quire16 = Quire<P16>;
+/// 512-bit quire for Posit32 (LSB weight 2^-240) — the paper's PAU
+/// accumulator whose hardware cost §6 quantifies.
+pub type Quire32 = Quire<P32>;
+/// 1024-bit quire for Posit64 (LSB weight 2^-496) — the width at which
+/// Big-PERCIVAL shows the quire dominating the datapath.
+pub type Quire64 = Quire<P64>;
+
+impl<F: PositFormat> Default for Quire<F> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<F: PositFormat> Quire<F> {
+    /// Posit format width `n`.
+    pub const N: u32 = F::N;
+    /// Total quire width in bits (16n).
+    pub const BITS: u32 = 16 * F::N;
+    /// Number of 64-bit limbs.
+    pub const LIMBS: usize = <F::QuireLimbs as Limbs>::LEN;
+    /// Weight of the least-significant quire bit: 2^(16 − 8n).
+    pub const LSB_EXP: i32 = 16 - 8 * (F::N as i32);
+
+    /// `QCLR.S` — a cleared quire (value 0).
+    pub fn new() -> Self {
+        Self {
+            limbs: F::QuireLimbs::zeroed(),
+            nar: false,
+            lo_dirty: Self::LIMBS,
+            hi_dirty: 0,
+        }
+    }
+
+    /// True when the quire holds NaR.
+    pub fn is_nar(&self) -> bool {
+        self.nar
+    }
+
+    /// `QCLR.S` — zeroes only the dirty window.
+    pub fn clear(&mut self) {
+        if self.hi_dirty > self.lo_dirty {
+            for l in &mut self.limbs.as_mut_slice()[self.lo_dirty..self.hi_dirty] {
+                *l = 0;
+            }
+        }
+        self.lo_dirty = Self::LIMBS;
+        self.hi_dirty = 0;
+        self.nar = false;
+    }
+
+    /// Dirty limb window `(lo, hi)`: limbs outside `lo..hi` are
+    /// guaranteed zero (introspection for tests and tuning).
+    pub fn dirty_range(&self) -> (usize, usize) {
+        (self.lo_dirty, self.hi_dirty)
+    }
+
+    /// `QNEG.S` — two's-complement negation of the accumulator.
+    ///
+    /// Limbs below the dirty window are zero; negating them leaves
+    /// them zero with the incoming carry still 1, so the walk can
+    /// start at `lo_dirty`. Everything from there to the top is
+    /// written (a nonzero value flips sign, so the high limbs
+    /// become part of the sign extension).
+    pub fn neg(&mut self) {
+        if self.nar || self.hi_dirty == 0 {
+            return;
+        }
+        let mut carry = 1u64;
+        for l in &mut self.limbs.as_mut_slice()[self.lo_dirty..] {
+            let (v, c) = (!*l).overflowing_add(carry);
+            *l = v;
+            carry = c as u64;
+        }
+        self.hi_dirty = Self::LIMBS;
+    }
+
+    /// `QMADD.S rs1, rs2` — quire += rs1 × rs2, exactly.
+    pub fn madd(&mut self, a: F::Bits, b: F::Bits) {
+        self.fused_unpacked(F::decode(a), F::decode(b), false)
+    }
+
+    /// `QMSUB.S rs1, rs2` — quire −= rs1 × rs2, exactly.
+    pub fn msub(&mut self, a: F::Bits, b: F::Bits) {
+        self.fused_unpacked(F::decode(a), F::decode(b), true)
+    }
+
+    /// `QMADD.S` on pre-decoded operands — bit-identical to
+    /// [`Self::madd`]; the kernel layer decodes each matrix once
+    /// and calls this in its inner loops.
+    #[inline]
+    pub fn madd_unpacked(&mut self, a: Decoded<F::Sig>, b: Decoded<F::Sig>) {
+        self.fused_unpacked(a, b, false)
+    }
+
+    /// `QMSUB.S` on pre-decoded operands (see [`Self::madd_unpacked`]).
+    #[inline]
+    pub fn msub_unpacked(&mut self, a: Decoded<F::Sig>, b: Decoded<F::Sig>) {
+        self.fused_unpacked(a, b, true)
+    }
+
+    /// Accumulate a single posit (quire += a), via a × 1.
+    pub fn add_posit(&mut self, a: F::Bits) {
+        self.fused_unpacked(F::decode(a), F::decode(F::ONE_BITS), false)
+    }
+
+    fn fused_unpacked(&mut self, a: Decoded<F::Sig>, b: Decoded<F::Sig>, sub: bool) {
+        let (ua, ub) = match (a, b) {
+            (Decoded::NaR, _) | (_, Decoded::NaR) => {
+                self.nar = true;
+                return;
+            }
+            (Decoded::Zero, _) | (_, Decoded::Zero) => return,
+            (Decoded::Num(ua), Decoded::Num(ub)) => (ua, ub),
+        };
+        if self.nar {
+            return;
+        }
+        let sign = ua.sign ^ ub.sign;
+        let scale = ua.scale + ub.scale;
+        let sig = ua.sig.mul_full(ub.sig);
+        // Bit 0 of `sig` has weight 2^(scale − 2·HID); the quire bit with
+        // that weight is at index (scale − 2·HID) − LSB_EXP.
+        let prod_hid = 2 * <F::Sig as SigWord>::HID as i32;
+        let pos = scale - prod_hid - Self::LSB_EXP;
+        let (sig, pos) = if pos < 0 {
+            // The standard sizes the quire so no real product has bits
+            // below the LSB.
+            debug_assert_eq!(sig & ((1u128 << (-pos)) - 1), 0);
+            (sig >> (-pos), 0usize)
+        } else {
+            (sig, pos as usize)
+        };
+        if sig >> 64 == 0 {
+            // Narrow-format products (and shifted-down wide ones) take the
+            // historical two-limb path.
+            self.add_shifted(sig as u64, pos, sign ^ sub);
+        } else {
+            self.add_shifted_wide(sig, pos, sign ^ sub);
+        }
+    }
+
+    /// Add (or subtract) `val << pos` into the limb array, extending the
+    /// dirty window over every limb written so it stays an
+    /// over-approximation of the nonzero limbs.
+    fn add_shifted(&mut self, val: u64, pos: usize, negative: bool) {
+        let li = pos / 64;
+        let sh = pos % 64;
+        let lo = val << sh;
+        let hi = if sh == 0 { 0 } else { val >> (64 - sh) };
+        let l = Self::LIMBS;
+        debug_assert!(li < l && (hi == 0 || li + 1 < l));
+        let lo_d = self.lo_dirty.min(li);
+        let mut hi_d = self.hi_dirty.max(li + 1);
+        let limbs = self.limbs.as_mut_slice();
+        if negative {
+            let (v, b0) = limbs[li].overflowing_sub(lo);
+            limbs[li] = v;
+            let mut borrow = b0 as u64;
+            if li + 1 < l {
+                hi_d = hi_d.max(li + 2);
+                let (v, b1) = limbs[li + 1].overflowing_sub(hi);
+                let (v, b2) = v.overflowing_sub(borrow);
+                limbs[li + 1] = v;
+                borrow = (b1 | b2) as u64;
+                let mut i = li + 2;
+                while borrow != 0 && i < l {
+                    let (v, b) = limbs[i].overflowing_sub(1);
+                    limbs[i] = v;
+                    hi_d = hi_d.max(i + 1);
+                    borrow = b as u64;
+                    i += 1;
+                }
+            }
+        } else {
+            let (v, c0) = limbs[li].overflowing_add(lo);
+            limbs[li] = v;
+            let mut carry = c0 as u64;
+            if li + 1 < l {
+                hi_d = hi_d.max(li + 2);
+                let (v, c1) = limbs[li + 1].overflowing_add(hi);
+                let (v, c2) = v.overflowing_add(carry);
+                limbs[li + 1] = v;
+                carry = (c1 | c2) as u64;
+                let mut i = li + 2;
+                while carry != 0 && i < l {
+                    let (v, c) = limbs[i].overflowing_add(1);
+                    limbs[i] = v;
+                    hi_d = hi_d.max(i + 1);
+                    carry = c as u64;
+                    i += 1;
+                }
+            }
+        }
+        self.lo_dirty = lo_d;
+        self.hi_dirty = hi_d;
+    }
+
+    /// Wide-product variant of [`Self::add_shifted`]: a Posit64 exact
+    /// product spans up to 126 bits, i.e. three 64-bit chunks once
+    /// shifted into limb alignment.
+    fn add_shifted_wide(&mut self, val: u128, pos: usize, negative: bool) {
+        let li = pos / 64;
+        let sh = pos % 64;
+        let c0 = (val << sh) as u64;
+        let c1 = if sh == 0 { (val >> 64) as u64 } else { (val >> (64 - sh)) as u64 };
+        let c2 = if sh == 0 { 0 } else { (val >> (128 - sh)) as u64 };
+        let l = Self::LIMBS;
+        debug_assert!(li + 1 < l && (c2 == 0 || li + 2 < l));
+        let lo_d = self.lo_dirty.min(li);
+        let mut hi_d = self.hi_dirty.max(li + 2);
+        let limbs = self.limbs.as_mut_slice();
+        if negative {
+            let (v, b0) = limbs[li].overflowing_sub(c0);
+            limbs[li] = v;
+            let (v, b1a) = limbs[li + 1].overflowing_sub(c1);
+            let (v, b1b) = v.overflowing_sub(b0 as u64);
+            limbs[li + 1] = v;
+            let mut borrow = (b1a | b1b) as u64;
+            let mut i = li + 2;
+            if i < l && (c2 != 0 || borrow != 0) {
+                let (v, b2a) = limbs[i].overflowing_sub(c2);
+                let (v, b2b) = v.overflowing_sub(borrow);
+                limbs[i] = v;
+                borrow = (b2a | b2b) as u64;
+                hi_d = hi_d.max(i + 1);
+                i += 1;
+                while borrow != 0 && i < l {
+                    let (v, b) = limbs[i].overflowing_sub(1);
+                    limbs[i] = v;
+                    hi_d = hi_d.max(i + 1);
+                    borrow = b as u64;
+                    i += 1;
+                }
+            }
+        } else {
+            let (v, a0) = limbs[li].overflowing_add(c0);
+            limbs[li] = v;
+            let (v, a1a) = limbs[li + 1].overflowing_add(c1);
+            let (v, a1b) = v.overflowing_add(a0 as u64);
+            limbs[li + 1] = v;
+            let mut carry = (a1a | a1b) as u64;
+            let mut i = li + 2;
+            if i < l && (c2 != 0 || carry != 0) {
+                let (v, a2a) = limbs[i].overflowing_add(c2);
+                let (v, a2b) = v.overflowing_add(carry);
+                limbs[i] = v;
+                carry = (a2a | a2b) as u64;
+                hi_d = hi_d.max(i + 1);
+                i += 1;
+                while carry != 0 && i < l {
+                    let (v, c) = limbs[i].overflowing_add(1);
+                    limbs[i] = v;
+                    hi_d = hi_d.max(i + 1);
+                    carry = c as u64;
+                    i += 1;
+                }
+            }
+        }
+        self.lo_dirty = lo_d;
+        self.hi_dirty = hi_d;
+    }
+
+    /// `QROUND.S` — round the accumulator to the nearest posit (single
+    /// rounding of the whole fused expression). Scans only the dirty
+    /// window: a negative accumulator necessarily has a dirty top limb
+    /// (the sign bit is only reachable once a carry or borrow has rippled
+    /// there), so the window always covers the magnitude. A cleared or
+    /// untouched quire rounds to posit zero for every format.
+    pub fn round(&self) -> F::Bits {
+        if self.nar {
+            return F::NAR_BITS;
+        }
+        let l = Self::LIMBS;
+        let negative = self.limbs.as_slice()[l - 1] >> 63 == 1;
+        debug_assert!(!negative || self.hi_dirty == l);
+        // Magnitude in a scratch copy.
+        let mut mag = self.limbs;
+        if negative {
+            let mut carry = 1u64;
+            for limb in mag.as_mut_slice().iter_mut().skip(self.lo_dirty) {
+                let (v, c) = (!*limb).overflowing_add(carry);
+                *limb = v;
+                carry = c as u64;
+            }
+        }
+        let mag = mag.as_slice();
+        // Locate the most significant set bit (window-bounded).
+        let mut msb: Option<usize> = None;
+        for i in (0..self.hi_dirty).rev() {
+            if mag[i] != 0 {
+                msb = Some(i * 64 + 63 - mag[i].leading_zeros() as usize);
+                break;
+            }
+        }
+        let m = match msb {
+            // All-zero magnitude: the accumulator holds exactly zero
+            // (fresh, cleared, or fully cancelled).
+            None => return F::ZERO_BITS,
+            Some(m) => m,
+        };
+        // A negative value's magnitude is ≤ 2^(BITS−1), with equality only
+        // for the raw pattern 10…0 — the standard's quire-NaR encoding.
+        if negative && m == Self::BITS as usize - 1 {
+            return F::NAR_BITS;
+        }
+        // Extract a 127-bit window with the MSB at TOP_W (= bit 126) and
+        // fold everything below into sticky.
+        let top = TOP_W as usize;
+        let (sig, sticky) = if m <= top {
+            (window_wide(mag, 0, m) << (top - m), false)
+        } else {
+            let lo = m - top;
+            let mut sticky = false;
+            // Bits strictly below `lo`.
+            let full = lo / 64;
+            for limb in mag.iter().take(full) {
+                sticky |= *limb != 0;
+            }
+            if lo % 64 != 0 {
+                sticky |= mag[full] << (64 - lo % 64) != 0;
+            }
+            (window_wide(mag, lo, m), sticky)
+        };
+        let scale = m as i32 + Self::LSB_EXP;
+        F::Bits::from_u64(encode_round_n(F::N, negative, scale, sig, sticky))
+    }
+
+    /// Raw limbs (for tests and for the synth model's width accounting).
+    pub fn limbs(&self) -> &F::QuireLimbs {
+        &self.limbs
+    }
+
+    /// Approximate f64 view of the accumulator (debug / display; the
+    /// conversion rounds, the quire itself never does).
+    pub fn to_f64(&self) -> f64 {
+        if self.nar {
+            return f64::NAN;
+        }
+        let l = Self::LIMBS;
+        let negative = self.limbs.as_slice()[l - 1] >> 63 == 1;
+        let mut mag = self.limbs;
+        if negative {
+            let mut carry = 1u64;
+            for limb in mag.as_mut_slice().iter_mut() {
+                let (v, c) = (!*limb).overflowing_add(carry);
+                *limb = v;
+                carry = c as u64;
+            }
+        }
+        let mut acc = 0.0f64;
+        for (i, limb) in mag.as_slice().iter().enumerate() {
+            if *limb != 0 {
+                let w = (Self::LSB_EXP + (i as i32) * 64) as f64;
+                acc += (*limb as f64) * w.exp2();
+            }
+        }
+        if negative {
+            -acc
+        } else {
+            acc
+        }
+    }
+}
+
+/// Read bits `[lo, hi]` (inclusive, `hi − lo ≤ 127`) of a little-endian
+/// limb slice as a `u128`.
+fn window_wide(mag: &[u64], lo: usize, hi: usize) -> u128 {
+    debug_assert!(hi - lo <= 127 && hi / 64 < mag.len());
+    let li = lo / 64;
+    let sh = lo % 64;
+    let mut v = (mag[li] >> sh) as u128;
+    let mut have = 64 - sh;
+    let mut i = li + 1;
+    while have < 128 && i < mag.len() {
+        v |= (mag[i] as u128) << have;
+        have += 64;
+        i += 1;
+    }
+    let w = hi - lo + 1;
+    if w < 128 {
+        v &= (1u128 << w) - 1;
+    }
+    v
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::posit::convert::{from_f64, to_f64};
-    use crate::posit::ops::mul;
-    use crate::posit::unpacked::negate;
+    use crate::posit::convert::{from_f64, from_f64_n, to_f64, to_f64_n};
+    use crate::posit::ops::{mul, mul_n};
+    use crate::posit::unpacked::{negate, negate_n};
 
     const ONE32: u32 = 0x4000_0000;
+    const ONE64: u64 = 1 << 62;
 
     #[test]
     fn clear_round_is_zero() {
         let q = Quire32::new();
+        assert_eq!(q.round(), 0);
+        let q = Quire64::new();
         assert_eq!(q.round(), 0);
     }
 
@@ -413,6 +497,24 @@ mod tests {
     }
 
     #[test]
+    fn single_product_rounds_like_mul_p64_sampled() {
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for i in 0..20_000 {
+            let a = next();
+            let b = next();
+            let mut q = Quire64::new();
+            q.madd(a, b);
+            assert_eq!(q.round(), mul_n(64, a, b), "iter {i}: a={a:#x} b={b:#x}");
+        }
+    }
+
+    #[test]
     fn madd_msub_cancel() {
         let a = from_f64::<32>(3.25);
         let b = from_f64::<32>(-7.5);
@@ -421,6 +523,14 @@ mod tests {
         q.msub(a, b);
         assert_eq!(q.round(), 0);
         assert_eq!(*q.limbs(), [0u64; 8]);
+        // Same exact cancellation at width 64 (wide three-chunk path).
+        let a = from_f64_n(64, 3.25e100);
+        let b = from_f64_n(64, -7.5e-100);
+        let mut q = Quire64::new();
+        q.madd(a, b);
+        q.msub(a, b);
+        assert_eq!(q.round(), 0);
+        assert_eq!(*q.limbs(), [0u64; 16]);
     }
 
     #[test]
@@ -432,6 +542,13 @@ mod tests {
         assert_eq!(q.round(), from_f64::<32>(-1.5));
         q.neg();
         assert_eq!(q.round(), from_f64::<32>(1.5));
+        let a = from_f64_n(64, 1.5);
+        let mut q = Quire64::new();
+        q.madd(a, ONE64);
+        q.neg();
+        assert_eq!(q.round(), from_f64_n(64, -1.5));
+        q.neg();
+        assert_eq!(q.round(), from_f64_n(64, 1.5));
     }
 
     #[test]
@@ -478,19 +595,50 @@ mod tests {
         q.clear();
         assert!(!q.is_nar());
         assert_eq!(q.round(), 0);
+        let mut q = Quire64::new();
+        q.madd(1u64 << 63, ONE64);
+        assert!(q.is_nar());
+        q.clear();
+        assert_eq!(q.round(), 0);
     }
 
     #[test]
-    fn quire_nar_bit_pattern_rounds_to_nar() {
-        // The raw pattern 10…0 (sign bit only) is quire-NaR.
+    fn negative_accumulations_round_with_sign() {
         let mut q = Quire32::new();
-        // Build it manually: subtract nothing, set top bit via neg of ... use
-        // madd of minpos² = LSB, then shift… simplest: construct via neg of
-        // zero won't work; accumulate -2^271 · … Instead test via limbs:
-        // madd minpos,minpos gives LSB=1; negate; then … skip raw pattern;
-        // assert instead that negative magnitudes round with correct sign.
         q.madd(from_f64::<32>(-2.0), ONE32);
         assert_eq!(q.round(), from_f64::<32>(-2.0));
+    }
+
+    #[test]
+    fn quire_nar_pattern_rounds_to_nar() {
+        // The raw pattern 10…0 (the integer −2^(BITS−1)) is the standard's
+        // quire-NaR encoding. Reaching it through the public API needs
+        // ~2^31 MACs (the carry-guard bits are sized to make legitimate
+        // overflow that remote), so construct the register state directly —
+        // this test lives in the module and can touch the private fields.
+        let mut q = Quire8::new();
+        q.limbs.as_mut_slice()[Quire8::LIMBS - 1] = 1 << 63;
+        q.lo_dirty = 0;
+        q.hi_dirty = Quire8::LIMBS;
+        assert_eq!(q.round(), 0x80, "10…0 must round to NaR");
+        // One quire-LSB above the NaR pattern is a legitimate (huge)
+        // negative value: saturates to −maxpos, not NaR.
+        q.limbs.as_mut_slice()[0] = 1;
+        assert_eq!(q.round(), negate::<8>(0x7F), "−2^127+1 saturates");
+        // Same rule at the 1024-bit Quire64.
+        let mut q = Quire64::new();
+        q.limbs.as_mut_slice()[Quire64::LIMBS - 1] = 1 << 63;
+        q.lo_dirty = 0;
+        q.hi_dirty = Quire64::LIMBS;
+        assert_eq!(q.round(), 1u64 << 63, "10…0 must round to NaR (p64)");
+        // And moderate negative accumulations through the API are
+        // untouched by the rule.
+        let mp = 0x7Fu32; // maxpos8 = 2^24
+        let mut q = Quire8::new();
+        for _ in 0..64 {
+            q.msub(mp, mp);
+        }
+        assert_eq!(q.round(), negate::<8>(mp), "saturates, not NaR");
     }
 
     #[test]
@@ -514,18 +662,38 @@ mod tests {
     }
 
     #[test]
+    fn fused_beats_unfused_dot_product_p64() {
+        // Same shape at 64 bits, with magnitudes beyond posit64's ~60-bit
+        // precision: 1e18² = 1e36 ≫ 2^60.
+        let big = from_f64_n(64, 1.0e18);
+        let mut q = Quire64::new();
+        q.madd(big, big);
+        q.madd(ONE64, ONE64);
+        q.msub(big, big);
+        assert_eq!(q.round(), ONE64);
+        use crate::posit::ops::add_n;
+        let t = add_n(64, mul_n(64, big, big), ONE64);
+        let r = add_n(64, t, negate_n(64, mul_n(64, big, big)));
+        assert_ne!(r, ONE64);
+    }
+
+    #[test]
     fn long_accumulation_matches_f64_when_exact() {
         // Accumulate 1000 small integer products; everything is exactly
         // representable so quire-rounding must equal the f64 sum.
         let mut q = Quire32::new();
+        let mut q64 = Quire64::new();
         let mut expect = 0.0f64;
         for i in 1..=1000i64 {
             let a = from_f64::<32>(i as f64);
             let b = from_f64::<32>(((i % 7) - 3) as f64);
             q.madd(a, b);
+            q64.madd(from_f64_n(64, i as f64), from_f64_n(64, ((i % 7) - 3) as f64));
             expect += (i as f64) * (((i % 7) - 3) as f64);
         }
         assert_eq!(q.round(), from_f64::<32>(expect));
+        assert_eq!(q64.round(), from_f64_n(64, expect));
+        assert_eq!(to_f64_n(64, q64.round()), expect);
     }
 
     #[test]
@@ -571,33 +739,38 @@ mod tests {
     #[test]
     fn dirty_window_invariant() {
         // Limbs outside the dirty window must be exactly zero at every
-        // step, across adds, subs, negations and clears.
-        let mut x = 0xDA7Au32;
-        let mut next = move || {
-            x ^= x << 13;
-            x ^= x >> 17;
-            x ^= x << 5;
-            x
-        };
-        let check = |q: &Quire32| {
-            let (lo, hi) = q.dirty_range();
-            for (i, l) in q.limbs().iter().enumerate() {
-                if i < lo || i >= hi {
-                    assert_eq!(*l, 0, "limb {i} outside window [{lo},{hi}) is nonzero");
+        // step, across adds, subs, negations and clears — for the narrow
+        // two-limb path and the wide three-chunk path alike.
+        fn run<F: PositFormat>(seed: u64, bits_of: fn(u64) -> <F as PositFormat>::Bits) {
+            let mut x = seed;
+            let mut next = move || {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x
+            };
+            let check = |q: &Quire<F>| {
+                let (lo, hi) = q.dirty_range();
+                for (i, l) in q.limbs().as_slice().iter().enumerate() {
+                    if i < lo || i >= hi {
+                        assert_eq!(*l, 0, "limb {i} outside window [{lo},{hi}) is nonzero");
+                    }
                 }
-            }
-        };
-        let mut q = Quire32::new();
-        check(&q);
-        for i in 0..20_000 {
-            match i % 7 {
-                0 => q.msub(next(), next()),
-                1 => q.neg(),
-                5 if i % 35 == 5 => q.clear(),
-                _ => q.madd(next(), next()),
-            }
+            };
+            let mut q = Quire::<F>::new();
             check(&q);
+            for i in 0..20_000u32 {
+                match i % 7 {
+                    0 => q.msub(bits_of(next()), bits_of(next())),
+                    1 => q.neg(),
+                    5 if i % 35 == 5 => q.clear(),
+                    _ => q.madd(bits_of(next()), bits_of(next())),
+                }
+                check(&q);
+            }
         }
+        run::<P32>(0xDA7A, |v| v as u32);
+        run::<P64>(0xDA7A_64, |v| v);
     }
 
     #[test]
@@ -616,5 +789,10 @@ mod tests {
         q.madd(from_f64::<32>(2.0), from_f64::<32>(3.0));
         let (lo, hi) = q.dirty_range();
         assert!(hi - lo <= 2, "positive MAC window [{lo},{hi})");
+        // …and at most 3 of Quire64's 16 limbs.
+        let mut q = Quire64::new();
+        q.madd(from_f64_n(64, 2.0), from_f64_n(64, 3.0));
+        let (lo, hi) = q.dirty_range();
+        assert!(hi - lo <= 3, "Quire64 positive MAC window [{lo},{hi})");
     }
 }

@@ -1,49 +1,119 @@
 //! Core posit decode / encode (Posit Standard 4.12 draft, `es = 2`).
 //!
-//! All formats (`Posit<N,2>` for `N ∈ {8, 16, 32}`) share the same generic
-//! machinery, parameterised by the const bit-width `N`. Bit patterns are
-//! carried in the low `N` bits of a `u32`.
+//! One width-independent engine serves every format `Posit<N,2>` for
+//! `8 ≤ N ≤ 64`: bit patterns are carried in the low `n` bits of a `u64`
+//! and the rounding workspace is `u128` (`decode_n` / `encode_round_n` /
+//! `encode_norm_n`, with the width as a *runtime* parameter so the
+//! [`super::format::PositFormat`] trait can provide defaulted methods).
 //!
-//! The *unpacked* representation used between decode and encode is
-//! `(sign, scale, sig)` where `sig` is the significand with the hidden bit
-//! at [`HID`] (bit 30), i.e. `sig ∈ [2^30, 2^31)`, and the represented
-//! magnitude is `sig × 2^(scale - 30)`.
+//! The *wide unpacked* representation between decode and encode is
+//! `(sign, scale, sig)` with the hidden bit at [`HID_W`] (bit 62), i.e.
+//! `sig ∈ [2^62, 2^63)`, magnitude `sig × 2^(scale − 62)`. Significands
+//! handed to `encode_round_n` are normalised to [`TOP_W`] (bit 126 of a
+//! `u128`).
+//!
+//! The pre-trait const-generic `u32` entry points ([`decode`],
+//! [`encode_round`], [`encode_norm`], …) remain as thin wrappers over this
+//! engine — with the *narrow* hidden-bit positions [`HID`] (30) and
+//! [`TOP`] (62) — so every existing call site and test keeps compiling and
+//! produces identical bits. (For `N ≤ 32` a wide significand always has
+//! zero low 32 bits, so narrowing is exact.)
 //!
 //! Rounding follows the standard (and SoftPosit): the exact value's
 //! unbounded encoding (regime ‖ exponent ‖ fraction) is rounded to `N - 1`
 //! bits with round-to-nearest, ties-to-even *in pattern space*; results
 //! never round to zero or NaR (saturation at `minpos` / `maxpos`).
 
-/// Bit position of the hidden bit in a decoded significand.
+/// Bit position of the hidden bit in a *narrow* (`u32`) decoded
+/// significand.
 pub const HID: u32 = 30;
-/// Bit position of the MSB of a normalised significand handed to
+/// Bit position of the MSB of a narrow normalised significand handed to
 /// [`encode_round`]: `sig ∈ [2^62, 2^63)`.
 pub const TOP: u32 = 62;
+/// Hidden-bit position of the engine's wide (`u64`) significands.
+pub const HID_W: u32 = 62;
+/// MSB position of a wide normalised `u128` significand handed to
+/// [`encode_round_n`].
+pub const TOP_W: u32 = 126;
 /// Exponent field width fixed by the standard.
 pub const ES: u32 = 2;
 
-/// Decoded posit.
+/// Decoded posit, generic over the significand word (`u32` for the narrow
+/// formats — the historical default — or `u64` for Posit64).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Decoded {
+pub enum Decoded<S = u32> {
     /// Exact zero (pattern `0…0`).
     Zero,
     /// Not-a-Real (pattern `10…0`).
     NaR,
-    /// Finite non-zero: magnitude `sig × 2^(scale - HID)`, negative iff `sign`.
-    Num(Unpacked),
+    /// Finite non-zero: magnitude `sig × 2^(scale - hid)`, negative iff
+    /// `sign` (`hid` = [`HID`] for `u32` sigs, [`HID_W`] for `u64`).
+    Num(Unpacked<S>),
 }
 
 /// Finite non-zero posit in sign / scale / significand form.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Unpacked {
+pub struct Unpacked<S = u32> {
     pub sign: bool,
     /// Power-of-two exponent of the hidden bit: `4·r + e`.
     pub scale: i32,
-    /// Significand, hidden bit at bit [`HID`]: `sig ∈ [2^30, 2^31)`.
-    pub sig: u32,
+    /// Significand with the hidden bit at the word's HID position.
+    pub sig: S,
 }
 
-/// Low-`N`-bit mask.
+// ── Pattern-space constants, width as a runtime parameter ──────────────
+
+/// Low-`n`-bit mask.
+#[inline(always)]
+pub const fn mask_n(n: u32) -> u64 {
+    if n == 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// NaR bit pattern (`10…0`).
+#[inline(always)]
+pub const fn nar_n(n: u32) -> u64 {
+    1u64 << (n - 1)
+}
+
+/// Largest finite posit (`01…1`).
+#[inline(always)]
+pub const fn maxpos_n(n: u32) -> u64 {
+    mask_n(n) >> 1
+}
+
+/// Smallest positive posit (`0…01`).
+#[inline(always)]
+pub const fn minpos_n(_n: u32) -> u64 {
+    1
+}
+
+/// Maximum magnitude of `scale`: `maxpos = 2^(4(n-2))`.
+#[inline(always)]
+pub const fn max_scale_n(n: u32) -> i32 {
+    4 * (n as i32 - 2)
+}
+
+/// Two's-complement negation inside `n` bits. Negating zero gives zero and
+/// negating NaR gives NaR, exactly as the standard requires.
+#[inline(always)]
+pub const fn negate_n(n: u32, bits: u64) -> u64 {
+    bits.wrapping_neg() & mask_n(n)
+}
+
+/// Sign-extend an `n`-bit pattern to `i64` (posit comparisons are integer
+/// comparisons on this).
+#[inline(always)]
+pub const fn to_signed_n(n: u32, bits: u64) -> i64 {
+    ((bits << (64 - n)) as i64) >> (64 - n)
+}
+
+// ── Narrow (u32) compatibility constants ───────────────────────────────
+
+/// Low-`N`-bit mask (narrow formats).
 #[inline(always)]
 pub const fn mask<const N: u32>() -> u32 {
     if N == 32 {
@@ -74,39 +144,41 @@ pub const fn minpos<const N: u32>() -> u32 {
 /// Maximum magnitude of `scale`: `maxpos = 2^(4(N-2))`.
 #[inline(always)]
 pub const fn max_scale<const N: u32>() -> i32 {
-    4 * (N as i32 - 2)
+    max_scale_n(N)
 }
 
-/// Two's-complement negation inside `N` bits. Negating zero gives zero and
-/// negating NaR gives NaR, exactly as the standard requires.
+/// Two's-complement negation inside `N` bits.
 #[inline(always)]
 pub const fn negate<const N: u32>(bits: u32) -> u32 {
     bits.wrapping_neg() & mask::<N>()
 }
 
-/// Sign-extend an `N`-bit pattern to `i32` (posit comparisons are integer
-/// comparisons on this).
+/// Sign-extend an `N`-bit pattern to `i32`.
 #[inline(always)]
 pub const fn to_signed<const N: u32>(bits: u32) -> i32 {
     ((bits << (32 - N)) as i32) >> (32 - N)
 }
 
-/// Decode an `N`-bit posit pattern.
+// ── The engine: decode ─────────────────────────────────────────────────
+
+/// Decode an `n`-bit posit pattern (any `8 ≤ n ≤ 64`) into wide unpacked
+/// form (hidden bit at [`HID_W`]).
 #[inline]
-pub fn decode<const N: u32>(bits: u32) -> Decoded {
-    let bits = bits & mask::<N>();
+pub fn decode_n(n: u32, bits: u64) -> Decoded<u64> {
+    debug_assert!((2..=64).contains(&n));
+    let bits = bits & mask_n(n);
     if bits == 0 {
         return Decoded::Zero;
     }
-    if bits == nar::<N>() {
+    if bits == nar_n(n) {
         return Decoded::NaR;
     }
-    let sign = (bits >> (N - 1)) & 1 == 1;
-    let abs = if sign { negate::<N>(bits) } else { bits };
-    // Left-align the N-1 magnitude bits (everything after the sign) at bit 31.
-    // Bits below are zero, which terminates the regime scans correctly.
-    let x = abs << (33 - N);
-    let r0 = x >> 31;
+    let sign = (bits >> (n - 1)) & 1 == 1;
+    let abs = if sign { negate_n(n, bits) } else { bits };
+    // Left-align the n-1 magnitude bits (everything after the sign) at bit
+    // 63. Bits below are zero, which terminates the regime scans correctly.
+    let x = abs << (65 - n);
+    let r0 = x >> 63;
     let (k, r) = if r0 == 1 {
         let k = (!x).leading_zeros();
         (k, k as i32 - 1)
@@ -114,70 +186,135 @@ pub fn decode<const N: u32>(bits: u32) -> Decoded {
         let k = x.leading_zeros();
         (k, -(k as i32))
     };
-    // Skip the regime run plus its terminating bit; anything shifted past the
-    // end of the posit reads as zero (standard: missing exponent bits are 0).
+    // Skip the regime run plus its terminating bit; anything shifted past
+    // the end of the posit reads as zero (standard: missing exponent bits
+    // are 0).
     let used = k + 1;
-    let rem = if used >= 32 { 0 } else { x << used };
-    let e = rem >> (32 - ES);
-    let frac_top = rem << ES; // fraction left-aligned at bit 31
+    let rem = if used >= 64 { 0 } else { x << used };
+    let e = rem >> (64 - ES);
+    let frac_top = rem << ES; // fraction left-aligned at bit 63
     let scale = 4 * r + e as i32;
-    let sig = (1u32 << HID) | (frac_top >> (31 - HID + 1));
+    let sig = (1u64 << HID_W) | (frac_top >> (63 - HID_W + 1));
     Decoded::Num(Unpacked { sign, scale, sig })
 }
 
-/// Encode `(-1)^sign × sig × 2^(scale - 62)` (with `sig ∈ [2^62, 2^63)` and
-/// `sticky` = OR of all value bits below `sig`'s LSB) to the nearest `N`-bit
-/// posit. Never produces zero or NaR: saturates at `minpos` / `maxpos`.
-pub fn encode_round<const N: u32>(sign: bool, scale: i32, sig: u64, sticky: bool) -> u32 {
-    debug_assert!(sig >> TOP == 1, "significand must be normalised to bit 62");
-    let ms = max_scale::<N>();
+/// Decode an `N`-bit pattern (`N ≤ 32`) into the narrow (`u32`-sig)
+/// unpacked form — the pre-trait entry point, now a wrapper over
+/// [`decode_n`]. Exact: a narrow format's wide significand always has zero
+/// low 32 bits.
+#[inline]
+pub fn decode<const N: u32>(bits: u32) -> Decoded {
+    debug_assert!(N <= 32);
+    match decode_n(N, bits as u64) {
+        Decoded::Zero => Decoded::Zero,
+        Decoded::NaR => Decoded::NaR,
+        Decoded::Num(u) => {
+            debug_assert_eq!(u.sig & 0xFFFF_FFFF, 0);
+            Decoded::Num(Unpacked { sign: u.sign, scale: u.scale, sig: (u.sig >> 32) as u32 })
+        }
+    }
+}
+
+// ── The engine: encode ─────────────────────────────────────────────────
+
+/// Encode `(-1)^sign × sig × 2^(scale - 126)` (with `sig ∈ [2^126, 2^127)`
+/// and `sticky` = OR of all value bits below `sig`'s LSB) to the nearest
+/// `n`-bit posit. Never produces zero or NaR: saturates at `minpos` /
+/// `maxpos`.
+pub fn encode_round_n(n: u32, sign: bool, scale: i32, sig: u128, sticky: bool) -> u64 {
+    debug_assert!(sig >> TOP_W == 1, "significand must be normalised to bit 126");
+    let ms = max_scale_n(n);
     let abs = if scale > ms {
-        maxpos::<N>()
+        maxpos_n(n)
     } else if scale < -ms {
-        minpos::<N>()
+        minpos_n(n)
     } else {
         let r = scale >> 2; // floor division by 4
-        let e = (scale & 3) as u64;
-        // Regime pattern in the low `rlen` bits: r ≥ 0 → (r+1) ones then a 0;
-        // r < 0 → (−r) zeros then a 1.
+        let e = (scale & 3) as u128;
+        // Regime pattern in the low `rlen` bits: r ≥ 0 → (r+1) ones then a
+        // 0; r < 0 → (−r) zeros then a 1. |r| ≤ n−2 ⇒ rlen ≤ n ≤ 64.
         let (rpat, rlen) = if r >= 0 {
-            ((((1u64 << (r + 1)) - 1) << 1) as u128, (r + 2) as u32)
+            ((((1u128 << (r + 1)) - 1) << 1), (r + 2) as u32)
         } else {
             (1u128, (-r + 1) as u32)
         };
-        // Unbounded body: regime ‖ exponent (2 bits) ‖ fraction (62 bits).
-        let frac = (sig & ((1u64 << TOP) - 1)) as u128;
-        let body: u128 = (rpat << (TOP + ES)) | ((e as u128) << TOP) | frac;
-        let total = rlen + ES + TOP; // number of bits in `body`
-        let keep = N - 1;
-        let cut = total - keep; // ≥ 33, so guard/rest shifts are in range
-        let kept = (body >> cut) as u32;
-        let guard = (body >> (cut - 1)) & 1 == 1;
-        let rest = sticky || (body & ((1u128 << (cut - 1)) - 1)) != 0;
+        // Conceptual unbounded body: regime ‖ exponent (2 bits) ‖ fraction
+        // (126 bits), total = rlen + 128 bits. Materialised as its top
+        // 128-bit word `body_hi` (regime ‖ e ‖ fraction[125:64]) plus the
+        // fraction's low 64 bits: the cut point is ≥ 65 bits above the
+        // bottom (keep = n−1 ≤ 63), so those low bits only ever feed
+        // sticky.
+        let frac = sig & ((1u128 << TOP_W) - 1);
+        let frac_lo = frac as u64;
+        let body_hi: u128 = (rpat << 64) | (e << HID_W) | (frac >> 64);
+        let total = rlen + ES + TOP_W; // = rlen + 128
+        let keep = n - 1;
+        let cut = total - keep; // ≥ rlen + 65
+        let cut_hi = cut - 64; // cut position inside body_hi, ≥ 3
+        let kept = (body_hi >> cut_hi) as u64;
+        let guard = (body_hi >> (cut_hi - 1)) & 1 == 1;
+        let rest =
+            sticky || frac_lo != 0 || (body_hi & ((1u128 << (cut_hi - 1)) - 1)) != 0;
         let round_up = guard && (rest || kept & 1 == 1);
         // `kept` can only be all-ones when the regime itself saturates, and
         // there the guard bit is the regime terminator 0 — so `kept + 1`
         // never reaches the NaR pattern.
-        let out = kept + round_up as u32;
-        debug_assert!(out <= maxpos::<N>());
+        let out = kept + round_up as u64;
+        debug_assert!(out <= maxpos_n(n));
         // A finite non-zero value never rounds to zero.
         if out == 0 {
-            minpos::<N>()
+            minpos_n(n)
         } else {
             out
         }
     };
     if sign {
-        negate::<N>(abs)
+        negate_n(n, abs)
     } else {
         abs
     }
 }
 
+/// Normalise an arbitrary non-zero `u128` significand so its MSB sits at
+/// [`TOP_W`], returning the adjusted scale. `scale` on input is the
+/// exponent of bit `at` of `sig`; left shifts are exact, right shifts
+/// (only when the MSB is above `TOP_W`) fold the lost bit into the
+/// returned sticky.
+#[inline]
+pub fn normalize_wide(sig: u128, at: u32, scale: i32, sticky: bool) -> (u128, i32, bool) {
+    debug_assert!(sig != 0);
+    let msb = 127 - sig.leading_zeros();
+    let scale = scale + msb as i32 - at as i32;
+    if msb <= TOP_W {
+        (sig << (TOP_W - msb), scale, sticky)
+    } else {
+        let sh = msb - TOP_W;
+        let lost = sig & ((1u128 << sh) - 1);
+        (sig >> sh, scale, sticky || lost != 0)
+    }
+}
+
+/// Encode from a `u128` significand whose MSB-reference position is `at`
+/// (exponent of that bit = `scale`), normalising first.
+#[inline]
+pub fn encode_norm_n(n: u32, sign: bool, scale: i32, sig: u128, at: u32, sticky: bool) -> u64 {
+    let (sig, scale, sticky) = normalize_wide(sig, at, scale, sticky);
+    encode_round_n(n, sign, scale, sig, sticky)
+}
+
+// ── Narrow (u32) compatibility wrappers ────────────────────────────────
+
+/// Encode `(-1)^sign × sig × 2^(scale - 62)` (with `sig ∈ [2^62, 2^63)`)
+/// to the nearest `N`-bit posit (`N ≤ 32`) — wrapper over the wide engine.
+#[inline]
+pub fn encode_round<const N: u32>(sign: bool, scale: i32, sig: u64, sticky: bool) -> u32 {
+    debug_assert!(sig >> TOP == 1, "significand must be normalised to bit 62");
+    encode_round_n(N, sign, scale, (sig as u128) << (TOP_W - TOP), sticky) as u32
+}
+
 /// Normalise an arbitrary non-zero `u64` significand so its MSB sits at
-/// [`TOP`], returning the adjusted scale. `scale` on input is the exponent
-/// of bit `at` of `sig`; left shifts are exact, right shifts (only when the
-/// MSB is above TOP) fold the lost bits into the returned sticky.
+/// [`TOP`], returning the adjusted scale (narrow-workspace helper, kept
+/// for the pre-trait call sites and tests).
 #[inline]
 pub fn normalize(sig: u64, at: u32, scale: i32, sticky: bool) -> (u64, i32, bool) {
     debug_assert!(sig != 0);
@@ -192,12 +329,11 @@ pub fn normalize(sig: u64, at: u32, scale: i32, sticky: bool) -> (u64, i32, bool
     }
 }
 
-/// Encode from a significand whose hidden/MSB position is `at` (exponent of
-/// that bit = `scale`), normalising first.
+/// Encode from a `u64` significand whose hidden/MSB position is `at`
+/// (exponent of that bit = `scale`), normalising first (`N ≤ 32`).
 #[inline]
 pub fn encode_norm<const N: u32>(sign: bool, scale: i32, sig: u64, at: u32, sticky: bool) -> u32 {
-    let (sig, scale, sticky) = normalize(sig, at, scale, sticky);
-    encode_round::<N>(sign, scale, sig, sticky)
+    encode_norm_n(N, sign, scale, sig as u128, at, sticky) as u32
 }
 
 #[cfg(test)]
@@ -214,15 +350,19 @@ mod tests {
         }
     }
 
+    fn roundtrip_n(n: u32, bits: u64) -> u64 {
+        match decode_n(n, bits) {
+            Decoded::Zero => 0,
+            Decoded::NaR => nar_n(n),
+            Decoded::Num(u) => {
+                encode_round_n(n, u.sign, u.scale, (u.sig as u128) << (TOP_W - HID_W), false)
+            }
+        }
+    }
+
     #[test]
     fn paper_example_posit8() {
         // §2.1: 11101010 ≡ -0.01171875 = -(2 - 0.5)·2^-7.
-        // Decode: sign 1, abs = 00010110 → regime 0 0 (k=2? no: bits after
-        // sign: 0010110 → k=2 zeros, r=-2), e=11 (3), frac=10 → f=0.5.
-        // scale = 4·(-2)+3 = -5, magnitude = 1.5 × 2^-5 = 0.046875?  No —
-        // the paper decodes via the negative-hidden-bit form; both forms
-        // agree on the value: (1.5)·2^-5 … let us just check against the
-        // paper's stated value using the 2's-complement decode.
         match decode::<8>(0b1110_1010) {
             Decoded::Num(u) => {
                 assert!(u.sign);
@@ -239,6 +379,8 @@ mod tests {
         assert_eq!(decode::<32>(0x8000_0000), Decoded::NaR);
         assert_eq!(decode::<8>(0x80), Decoded::NaR);
         assert_eq!(decode::<16>(0x8000), Decoded::NaR);
+        assert_eq!(decode_n(64, 0), Decoded::Zero);
+        assert_eq!(decode_n(64, 1u64 << 63), Decoded::NaR);
     }
 
     #[test]
@@ -258,6 +400,14 @@ mod tests {
                 d => panic!("{d:?}"),
             }
         }
+        match decode_n(64, 1u64 << 62) {
+            Decoded::Num(u) => {
+                assert!(!u.sign);
+                assert_eq!(u.scale, 0);
+                assert_eq!(u.sig, 1u64 << HID_W);
+            }
+            d => panic!("{d:?}"),
+        }
     }
 
     #[test]
@@ -272,6 +422,14 @@ mod tests {
         }
         match decode::<8>(maxpos::<8>()) {
             Decoded::Num(u) => assert_eq!((u.scale, u.sig), (24, 1 << HID)),
+            d => panic!("{d:?}"),
+        }
+        match decode_n(64, maxpos_n(64)) {
+            Decoded::Num(u) => assert_eq!((u.scale, u.sig), (248, 1u64 << HID_W)),
+            d => panic!("{d:?}"),
+        }
+        match decode_n(64, minpos_n(64)) {
+            Decoded::Num(u) => assert_eq!((u.scale, u.sig), (-248, 1u64 << HID_W)),
             d => panic!("{d:?}"),
         }
     }
@@ -304,6 +462,34 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_sampled_posit64() {
+        // Structured sample over the 64-bit pattern space: top-16-bit sweep
+        // crossed with low-bit patterns that exercise long regimes and full
+        // fractions.
+        for hi in 0..=0xFFFFu64 {
+            for lo in [0u64, 1, 0x5555_5555_5555, 0x8000_0000_0000, 0xFFFF_FFFF_FFFF] {
+                let bits = (hi << 48) | lo;
+                assert_eq!(roundtrip_n(64, bits), bits, "bits={bits:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_and_narrow_wrappers_agree_exhaustive_p8() {
+        for bits in 0..=0xFFu32 {
+            match (decode::<8>(bits), decode_n(8, bits as u64)) {
+                (Decoded::Zero, Decoded::Zero) | (Decoded::NaR, Decoded::NaR) => {}
+                (Decoded::Num(n8), Decoded::Num(w8)) => {
+                    assert_eq!(n8.sign, w8.sign);
+                    assert_eq!(n8.scale, w8.scale);
+                    assert_eq!((n8.sig as u64) << 32, w8.sig, "bits={bits:#x}");
+                }
+                (a, b) => panic!("mismatch at {bits:#x}: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn saturation_never_wraps() {
         // Way-too-large scale saturates at maxpos, not NaR.
         assert_eq!(encode_round::<32>(false, 10_000, 1 << TOP, false), maxpos::<32>());
@@ -312,6 +498,8 @@ mod tests {
             encode_round::<32>(true, 10_000, 1 << TOP, false),
             negate::<32>(maxpos::<32>())
         );
+        assert_eq!(encode_round_n(64, false, 10_000, 1 << TOP_W, false), maxpos_n(64));
+        assert_eq!(encode_round_n(64, false, -10_000, 1 << TOP_W, false), 1);
     }
 
     #[test]
@@ -343,6 +531,26 @@ mod tests {
     }
 
     #[test]
+    fn rounding_to_nearest_even_wide_p64() {
+        // Posit64 with r=0 has 64−1−2−2 = 59 fraction bits: the same tie
+        // battery as posit8, scaled to the wide workspace.
+        let one64 = 1u64 << 62;
+        let b = |sig: u128, sticky| encode_round_n(64, false, 0, sig, sticky);
+        assert_eq!(b(1u128 << TOP_W, false), one64);
+        // 1 + 2^-59 is the last exact value: pattern one64 | 1.
+        assert_eq!(b((1u128 << TOP_W) | (1u128 << (TOP_W - 59)), false), one64 | 1);
+        // Tie at 1 + 2^-60 → even (1.0).
+        assert_eq!(b((1u128 << TOP_W) | (1u128 << (TOP_W - 60)), false), one64);
+        // Tie with sticky → up.
+        assert_eq!(b((1u128 << TOP_W) | (1u128 << (TOP_W - 60)), true), one64 | 1);
+        // Tie above odd → away.
+        assert_eq!(
+            b((1u128 << TOP_W) | (1u128 << (TOP_W - 59)) | (1u128 << (TOP_W - 60)), false),
+            one64 | 2
+        );
+    }
+
+    #[test]
     fn negative_encode_matches_negated_positive() {
         for bits in 1..=0x7Fu32 {
             if let Decoded::Num(u) = decode::<8>(bits) {
@@ -363,5 +571,19 @@ mod tests {
         // MSB above TOP: right shift collects sticky.
         let (_, _, sticky) = normalize((1u64 << 63) | 1, TOP, 0, false);
         assert!(sticky);
+        // Wide variant.
+        let (sig, scale, sticky) = normalize_wide(1, 0, 0, false);
+        assert_eq!((sig, scale, sticky), (1u128 << TOP_W, 0, false));
+        let (_, _, sticky) = normalize_wide((1u128 << 127) | 1, TOP_W, 0, false);
+        assert!(sticky);
+    }
+
+    #[test]
+    fn signed_view_matches_narrow() {
+        for bits in [0u32, 1, 0x7F, 0x80, 0xFF] {
+            assert_eq!(to_signed::<8>(bits) as i64, to_signed_n(8, bits as u64));
+        }
+        assert_eq!(to_signed_n(64, u64::MAX), -1);
+        assert_eq!(to_signed_n(64, 1u64 << 63), i64::MIN);
     }
 }

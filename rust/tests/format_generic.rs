@@ -1,0 +1,230 @@
+//! Format-generic property suite over the `PositFormat` trait: the same
+//! laws, checked for every instantiated width — exhaustively for Posit8,
+//! with ≥100k seeded-RNG cases each for Posit16/Posit32/Posit64 (in-repo
+//! SplitMix64; the offline crate set has no proptest).
+//!
+//! Covers the refactor's contract:
+//! - encode/decode round-trip through the trait engine,
+//! - `neg`/`abs` involutions in pattern space,
+//! - quire-vs-f64 dot-product agreement on exactly representable inputs,
+//! - trait methods bit-identical to the retained const-generic wrappers
+//!   (the pre-refactor entry points) for the narrow formats,
+//! - the quire clear/round regression: clearing then rounding an
+//!   untouched quire returns posit zero for every format, including the
+//!   1024-bit Quire64.
+
+use percival::posit::format::SigWord;
+use percival::posit::unpacked::{decode, mask_n, HID_W};
+use percival::posit::{ops, Decoded, PositBits, PositFormat, Quire, P16, P32, P64, P8};
+use percival::testing::Rng;
+
+const CASES: u64 = 120_000;
+
+fn random_bits<F: PositFormat>(rng: &mut Rng) -> F::Bits {
+    F::Bits::from_u64(rng.next_u64() & mask_n(F::N))
+}
+
+/// Decode → encode must be the identity on every pattern.
+fn roundtrip_once<F: PositFormat>(bits: F::Bits) {
+    let back = match F::decode(bits) {
+        Decoded::Zero => F::ZERO_BITS,
+        Decoded::NaR => F::NAR_BITS,
+        Decoded::Num(u) => F::encode(u.sign, u.scale, u.sig.widen() as u128, HID_W, false),
+    };
+    assert_eq!(back, bits, "{} roundtrip of {:#x}", F::NAME, bits.to_u64());
+}
+
+fn involutions_once<F: PositFormat>(bits: F::Bits) {
+    let b = F::mask(bits);
+    assert_eq!(F::negate(F::negate(b)), b, "{} double negation", F::NAME);
+    let a = F::abs(b);
+    assert_eq!(F::abs(a), a, "{} abs idempotent", F::NAME);
+    assert_eq!(F::abs(F::negate(b)), a, "{} abs of negation", F::NAME);
+    // Negation is value-exact: to_f64(−b) = −to_f64(b) (NaN-safe skip).
+    let f = F::to_f64(b);
+    if f.is_finite() {
+        assert_eq!(F::to_f64(F::negate(b)), -f, "{} negate value", F::NAME);
+    }
+}
+
+fn seeded_suite<F: PositFormat>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..CASES {
+        let bits = random_bits::<F>(&mut rng);
+        roundtrip_once::<F>(bits);
+        involutions_once::<F>(bits);
+    }
+}
+
+#[test]
+fn roundtrip_and_involutions_exhaustive_p8() {
+    for raw in 0..=0xFFu32 {
+        roundtrip_once::<P8>(raw);
+        involutions_once::<P8>(raw);
+    }
+}
+
+#[test]
+fn roundtrip_and_involutions_seeded_p16() {
+    seeded_suite::<P16>(0x16);
+}
+
+#[test]
+fn roundtrip_and_involutions_seeded_p32() {
+    seeded_suite::<P32>(0x32);
+}
+
+#[test]
+fn roundtrip_and_involutions_seeded_p64() {
+    seeded_suite::<P64>(0x64);
+}
+
+#[test]
+fn trait_matches_legacy_wrappers_exhaustive_p8() {
+    // The defaulted trait methods and the retained const-generic entry
+    // points must be bit-identical — exhaustively over all operand pairs.
+    for a in 0..=0xFFu32 {
+        assert_eq!(P8::decode(a), decode::<8>(a), "decode {a:#x}");
+        for b in 0..=0xFFu32 {
+            assert_eq!(P8::add(a, b), ops::add::<8>(a, b), "add {a:#x} {b:#x}");
+            assert_eq!(P8::sub(a, b), ops::sub::<8>(a, b), "sub {a:#x} {b:#x}");
+            assert_eq!(P8::mul(a, b), ops::mul::<8>(a, b), "mul {a:#x} {b:#x}");
+        }
+    }
+}
+
+#[test]
+fn trait_matches_legacy_wrappers_seeded_p16_p32() {
+    let mut rng = Rng::new(0x1632);
+    for _ in 0..CASES {
+        let a16 = rng.posit_bits::<16>();
+        let b16 = rng.posit_bits::<16>();
+        assert_eq!(P16::add(a16, b16), ops::add::<16>(a16, b16));
+        assert_eq!(P16::mul(a16, b16), ops::mul::<16>(a16, b16));
+        assert_eq!(P16::decode(a16), decode::<16>(a16));
+        let a32 = rng.posit_bits::<32>();
+        let b32 = rng.posit_bits::<32>();
+        assert_eq!(P32::add(a32, b32), ops::add::<32>(a32, b32));
+        assert_eq!(P32::mul(a32, b32), ops::mul::<32>(a32, b32));
+        assert_eq!(P32::decode(a32), decode::<32>(a32));
+        assert_eq!(
+            P32::mul_unpacked(P32::decode(a32), P32::decode(b32)),
+            ops::mul_unpacked::<32>(decode::<32>(a32), decode::<32>(b32)),
+        );
+    }
+}
+
+/// Quire dot product vs f64 on exactly representable inputs: small
+/// integers are exact in every format and their dot products are exact in
+/// f64, so `QROUND(Σ aᵢ·bᵢ)` must equal rounding the f64 sum.
+fn quire_vs_f64_dot<F: PositFormat>(seed: u64, rounds: u32) {
+    let mut rng = Rng::new(seed);
+    for round in 0..rounds {
+        let mut q = Quire::<F>::new();
+        let mut exact = 0.0f64;
+        for _ in 0..64 {
+            let x = (rng.below(17) as i64 - 8) as f64; // −8 … 8
+            let y = (rng.below(17) as i64 - 8) as f64;
+            let (px, py) = (F::from_f64(x), F::from_f64(y));
+            debug_assert_eq!(F::to_f64(px), x);
+            q.madd(px, py);
+            exact += x * y;
+        }
+        assert_eq!(
+            q.round(),
+            F::from_f64(exact),
+            "{} round {round}: Σ = {exact}",
+            F::NAME
+        );
+    }
+}
+
+#[test]
+fn quire_dot_agrees_with_f64_all_formats() {
+    quire_vs_f64_dot::<P8>(0xD8, 300);
+    quire_vs_f64_dot::<P16>(0xD16, 300);
+    quire_vs_f64_dot::<P32>(0xD32, 300);
+    quire_vs_f64_dot::<P64>(0xD64, 300);
+}
+
+/// Regression (dirty-window edge case): clearing then rounding an
+/// untouched quire must return posit zero for every format — fresh,
+/// after use, after negation, and after a NaR poisoning.
+fn clear_round_zero<F: PositFormat>() {
+    // Fresh quire.
+    let q = Quire::<F>::new();
+    assert_eq!(q.round(), F::ZERO_BITS, "{} fresh", F::NAME);
+    // Clear an untouched quire, then round.
+    let mut q = Quire::<F>::new();
+    q.clear();
+    assert_eq!(q.round(), F::ZERO_BITS, "{} cleared untouched", F::NAME);
+    // Use, clear, round.
+    let mut q = Quire::<F>::new();
+    q.madd(F::ONE_BITS, F::ONE_BITS);
+    q.msub(F::MAXPOS_BITS, F::MAXPOS_BITS);
+    q.clear();
+    assert_eq!(q.round(), F::ZERO_BITS, "{} cleared after use", F::NAME);
+    assert_eq!(q.dirty_range(), (Quire::<F>::LIMBS, 0), "{} window reset", F::NAME);
+    // Negate (sign-extends the window to the top), clear, round.
+    let mut q = Quire::<F>::new();
+    q.madd(F::ONE_BITS, F::ONE_BITS);
+    q.neg();
+    q.clear();
+    assert_eq!(q.round(), F::ZERO_BITS, "{} cleared after neg", F::NAME);
+    // Negating the cleared quire is still zero.
+    q.neg();
+    assert_eq!(q.round(), F::ZERO_BITS, "{} neg of cleared", F::NAME);
+    // NaR state resets on clear.
+    let mut q = Quire::<F>::new();
+    q.madd(F::NAR_BITS, F::ONE_BITS);
+    assert_eq!(q.round(), F::NAR_BITS, "{} NaR round", F::NAME);
+    q.clear();
+    assert_eq!(q.round(), F::ZERO_BITS, "{} cleared after NaR", F::NAME);
+}
+
+#[test]
+fn quire_clear_then_round_is_zero_every_format() {
+    clear_round_zero::<P8>();
+    clear_round_zero::<P16>();
+    clear_round_zero::<P32>();
+    clear_round_zero::<P64>();
+}
+
+#[test]
+fn p64_exactness_beyond_f64() {
+    // A value binary64 cannot hold exactly: 1 + 2^-55 needs 55 fraction
+    // bits (f64 has 52; posit64 at scale 0 has 59). Build it exactly in
+    // the quire from two exact posits and check the rounded pattern: the
+    // 2^-55 bit sits at fraction position 58 − 54 = 4.
+    let tiny = P64::from_f64((-55.0f64).exp2());
+    assert_eq!(P64::to_f64(tiny), (-55.0f64).exp2());
+    let one = P64::ONE_BITS;
+    let mut q = Quire::<P64>::new();
+    q.madd(one, one);
+    q.madd(tiny, one);
+    assert_eq!(q.round(), one | (1u64 << 4));
+    // And the quire keeps 2^60 + 1 − 2^60 exact through the accumulator
+    // even though 2^60 + 1 itself is not a posit64.
+    let two60 = P64::from_i64(1i64 << 60);
+    assert_eq!(P64::to_i64(two60), 1i64 << 60);
+    let mut q = Quire::<P64>::new();
+    q.madd(two60, one);
+    q.madd(one, one);
+    q.msub(two60, one);
+    assert_eq!(q.round(), one);
+}
+
+#[test]
+fn width_resize_chain_is_exact_widening() {
+    // p8 → p16 → p32 → p64 widening is exact; narrowing back returns the
+    // original pattern.
+    use percival::posit::convert::resize_n;
+    for bits in 0..=0xFFu64 {
+        let w16 = resize_n(8, 16, bits);
+        let w32 = resize_n(16, 32, w16);
+        let w64 = resize_n(32, 64, w32);
+        assert_eq!(resize_n(16, 8, w16), bits, "{bits:#x}");
+        assert_eq!(resize_n(32, 16, w32), w16, "{bits:#x}");
+        assert_eq!(resize_n(64, 32, w64), w32, "{bits:#x}");
+    }
+}

@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
-# Tier-1 verification (see ROADMAP.md): build + full test suite.
+# Tier-1 verification (see ROADMAP.md): warning-free build + full test suite.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-cargo build --release
+# Warnings are promoted to errors so trait-refactor dead code (unused
+# wrappers, stale imports) cannot land silently.
+RUSTFLAGS="${RUSTFLAGS:-} -D warnings" cargo build --release
 cargo test -q
