@@ -46,6 +46,34 @@ fn main() {
             });
         }
     }
+    // Multi-width posit rows (the `gemm_sim_p{8,16,64}_*` trajectory; P32
+    // is already covered by the paper variants above).
+    for v in GemmVariant::POSIT_EXT {
+        let fmt = v.posit_fmt().expect("posit variant");
+        let quire = if v.label().ends_with("no quire") { "noquire" } else { "quire" };
+        for &n in sizes {
+            let a = gen_matrix(&mut rng, n, 0);
+            let b = gen_matrix(&mut rng, n, 0);
+            let t0 = std::time::Instant::now();
+            let run = run_gemm_sim(cfg, v, n, &a, &b, true);
+            let host = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<24} {:>8} {:>14} {:>14} {:>12.1}",
+                v.label(),
+                n,
+                fmt_time(run.seconds),
+                fmt_time(host),
+                run.stats.instret as f64 / host / 1e6
+            );
+            rows.push(JsonRow {
+                bench: format!("gemm_sim_p{}_{}_n{n}", fmt.width(), quire),
+                mean_s: host,
+                ns_per_op: host / (n * n * n) as f64 * 1e9,
+                speedup_x: None,
+            });
+        }
+    }
+
     let racer = RacerModel::fit();
     for &n in sizes {
         println!(

@@ -10,11 +10,14 @@
 
 use crate::core::{Core, CoreConfig, Stats};
 use crate::isa::asm::{assemble, Program};
-use crate::posit::Posit32;
+use crate::isa::PositFmt;
+use crate::posit::convert::{from_f64_n, to_f64_n};
 use crate::testing::Rng;
 
 /// The six arithmetic variants of Table 6/7 (plus RacEr handled in
-/// [`super::racer`]).
+/// [`super::racer`]), extended with the multi-width posit rows
+/// (8/16/64-bit, quire and non-quire) since the Xposit `fmt` field became
+/// format-generic.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum GemmVariant {
     /// 32-bit float with FMADD (Fig. 5).
@@ -29,9 +32,22 @@ pub enum GemmVariant {
     P32Quire,
     /// Posit32, pmul + padd.
     P32NoQuire,
+    /// Posit8 with its 128-bit quire.
+    P8Quire,
+    /// Posit8, pmul.b + padd.b.
+    P8NoQuire,
+    /// Posit16 with its 256-bit quire.
+    P16Quire,
+    /// Posit16, pmul.h + padd.h.
+    P16NoQuire,
+    /// Posit64 with the 1024-bit Big-PERCIVAL quire.
+    P64Quire,
+    /// Posit64, pmul.d + padd.d.
+    P64NoQuire,
 }
 
 impl GemmVariant {
+    /// The paper's Table 7 rows (32-bit posit vs IEEE).
     pub const ALL: [GemmVariant; 6] = [
         GemmVariant::F32Fused,
         GemmVariant::F64Fused,
@@ -40,6 +56,42 @@ impl GemmVariant {
         GemmVariant::F64Unfused,
         GemmVariant::P32NoQuire,
     ];
+
+    /// The multi-width extension rows (everything posit except the
+    /// paper's 32-bit pair, which [`Self::ALL`] already carries).
+    pub const POSIT_EXT: [GemmVariant; 6] = [
+        GemmVariant::P8Quire,
+        GemmVariant::P8NoQuire,
+        GemmVariant::P16Quire,
+        GemmVariant::P16NoQuire,
+        GemmVariant::P64Quire,
+        GemmVariant::P64NoQuire,
+    ];
+
+    /// The posit variant for `(fmt, quire)`.
+    pub fn posit(fmt: PositFmt, quire: bool) -> GemmVariant {
+        match (fmt, quire) {
+            (PositFmt::P8, true) => GemmVariant::P8Quire,
+            (PositFmt::P8, false) => GemmVariant::P8NoQuire,
+            (PositFmt::P16, true) => GemmVariant::P16Quire,
+            (PositFmt::P16, false) => GemmVariant::P16NoQuire,
+            (PositFmt::P32, true) => GemmVariant::P32Quire,
+            (PositFmt::P32, false) => GemmVariant::P32NoQuire,
+            (PositFmt::P64, true) => GemmVariant::P64Quire,
+            (PositFmt::P64, false) => GemmVariant::P64NoQuire,
+        }
+    }
+
+    /// Posit width of a posit variant (`None` for the IEEE ones).
+    pub fn posit_fmt(&self) -> Option<PositFmt> {
+        match self {
+            GemmVariant::P8Quire | GemmVariant::P8NoQuire => Some(PositFmt::P8),
+            GemmVariant::P16Quire | GemmVariant::P16NoQuire => Some(PositFmt::P16),
+            GemmVariant::P32Quire | GemmVariant::P32NoQuire => Some(PositFmt::P32),
+            GemmVariant::P64Quire | GemmVariant::P64NoQuire => Some(PositFmt::P64),
+            _ => None,
+        }
+    }
 
     /// Paper row label (Table 7).
     pub fn label(&self) -> &'static str {
@@ -50,6 +102,12 @@ impl GemmVariant {
             GemmVariant::F32Unfused => "32-bit float no FMADD",
             GemmVariant::F64Unfused => "64-bit float no FMADD",
             GemmVariant::P32NoQuire => "Posit32 no quire",
+            GemmVariant::P8Quire => "Posit8",
+            GemmVariant::P8NoQuire => "Posit8 no quire",
+            GemmVariant::P16Quire => "Posit16",
+            GemmVariant::P16NoQuire => "Posit16 no quire",
+            GemmVariant::P64Quire => "Posit64",
+            GemmVariant::P64NoQuire => "Posit64 no quire",
         }
     }
 
@@ -57,8 +115,22 @@ impl GemmVariant {
     pub fn elem_bytes(&self) -> u64 {
         match self {
             GemmVariant::F64Fused | GemmVariant::F64Unfused => 8,
-            _ => 4,
+            _ => match self.posit_fmt() {
+                Some(fmt) => fmt.bytes() as u64,
+                None => 4,
+            },
         }
+    }
+}
+
+/// Assembly fragments for one posit width: (load, store, arith suffix,
+/// pmv width letter).
+fn posit_frags(fmt: PositFmt) -> (&'static str, &'static str, &'static str, &'static str) {
+    match fmt {
+        PositFmt::P8 => ("plb", "psb", "b", "b"),
+        PositFmt::P16 => ("plh", "psh", "h", "h"),
+        PositFmt::P32 => ("plw", "psw", "s", "w"),
+        PositFmt::P64 => ("pld", "psd", "d", "d"),
     }
 }
 
@@ -72,47 +144,63 @@ pub fn gemm_program(variant: GemmVariant, n: usize) -> Program {
     // Per-variant fragments.
     let (init_acc, load_a, load_b, mac, store) = match variant {
         GemmVariant::F32Fused => (
-            "fmv.w.x ft0, zero",
-            "flw ft1, 0(t2)",
-            "flw ft2, 0(t3)",
+            "fmv.w.x ft0, zero".to_string(),
+            "flw ft1, 0(t2)".to_string(),
+            "flw ft2, 0(t3)".to_string(),
             "fmadd.s ft0, ft1, ft2, ft0".to_string(),
-            "fsw ft0, 0(t4)",
+            "fsw ft0, 0(t4)".to_string(),
         ),
         GemmVariant::F32Unfused => (
-            "fmv.w.x ft0, zero",
-            "flw ft1, 0(t2)",
-            "flw ft2, 0(t3)",
+            "fmv.w.x ft0, zero".to_string(),
+            "flw ft1, 0(t2)".to_string(),
+            "flw ft2, 0(t3)".to_string(),
             "fmul.s ft3, ft1, ft2\n    fadd.s ft0, ft0, ft3".to_string(),
-            "fsw ft0, 0(t4)",
+            "fsw ft0, 0(t4)".to_string(),
         ),
         GemmVariant::F64Fused => (
-            "fmv.d.x ft0, zero",
-            "fld ft1, 0(t2)",
-            "fld ft2, 0(t3)",
+            "fmv.d.x ft0, zero".to_string(),
+            "fld ft1, 0(t2)".to_string(),
+            "fld ft2, 0(t3)".to_string(),
             "fmadd.d ft0, ft1, ft2, ft0".to_string(),
-            "fsd ft0, 0(t4)",
+            "fsd ft0, 0(t4)".to_string(),
         ),
         GemmVariant::F64Unfused => (
-            "fmv.d.x ft0, zero",
-            "fld ft1, 0(t2)",
-            "fld ft2, 0(t3)",
+            "fmv.d.x ft0, zero".to_string(),
+            "fld ft1, 0(t2)".to_string(),
+            "fld ft2, 0(t3)".to_string(),
             "fmul.d ft3, ft1, ft2\n    fadd.d ft0, ft0, ft3".to_string(),
-            "fsd ft0, 0(t4)",
+            "fsd ft0, 0(t4)".to_string(),
         ),
-        GemmVariant::P32Quire => (
-            "qclr.s",
-            "plw p0, 0(t2)",
-            "plw p1, 0(t3)",
-            "qmadd.s p0, p1".to_string(),
-            "qround.s p2\n    psw p2, 0(t4)",
-        ),
-        GemmVariant::P32NoQuire => (
-            "pmv.w.x p2, zero",
-            "plw p0, 0(t2)",
-            "plw p1, 0(t3)",
-            "pmul.s p3, p0, p1\n    padd.s p2, p2, p3".to_string(),
-            "psw p2, 0(t4)",
-        ),
+        // The posit variants share one Fig. 6 kernel shape; the width only
+        // picks the load/store opcode and the mnemonic suffix.
+        _ => {
+            let fmt = variant.posit_fmt().expect("posit variant");
+            let (load, store, sfx, mv) = posit_frags(fmt);
+            let quire = matches!(
+                variant,
+                GemmVariant::P8Quire
+                    | GemmVariant::P16Quire
+                    | GemmVariant::P32Quire
+                    | GemmVariant::P64Quire
+            );
+            if quire {
+                (
+                    format!("qclr.{sfx}"),
+                    format!("{load} p0, 0(t2)"),
+                    format!("{load} p1, 0(t3)"),
+                    format!("qmadd.{sfx} p0, p1"),
+                    format!("qround.{sfx} p2\n    {store} p2, 0(t4)"),
+                )
+            } else {
+                (
+                    format!("pmv.{mv}.x p2, zero"),
+                    format!("{load} p0, 0(t2)"),
+                    format!("{load} p1, 0(t3)"),
+                    format!("pmul.{sfx} p3, p0, p1\n    padd.{sfx} p2, p2, p3"),
+                    format!("{store} p2, 0(t4)"),
+                )
+            }
+        }
     };
     let src = format!(
         r#"
@@ -183,16 +271,20 @@ pub fn load_inputs(core: &mut Core, variant: GemmVariant, n: usize, af: &[f64], 
             core.mem.write_f32_slice(lo.a, &a32);
             core.mem.write_f32_slice(lo.b, &b32);
         }
-        GemmVariant::P32Quire | GemmVariant::P32NoQuire => {
-            let ap: Vec<u32> = af.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
-            let bp: Vec<u32> = bf.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
-            core.mem.write_u32_slice(lo.a, &ap);
-            core.mem.write_u32_slice(lo.b, &bp);
+        _ => {
+            let fmt = variant.posit_fmt().expect("posit variant");
+            let (w, eb) = (fmt.width(), fmt.bytes());
+            let ap: Vec<u64> = af.iter().map(|v| from_f64_n(w, *v)).collect();
+            let bp: Vec<u64> = bf.iter().map(|v| from_f64_n(w, *v)).collect();
+            core.mem.write_posit_slice(lo.a, eb, &ap);
+            core.mem.write_posit_slice(lo.b, eb, &bp);
         }
     }
 }
 
-/// Read back C as f64 (exact for all formats).
+/// Read back C as f64 (exact for every format except Posit64, whose
+/// ~59-bit significand exceeds f64 — use [`run_gemm_sim_bits`] for
+/// bit-level access at any width).
 pub fn read_result(core: &Core, variant: GemmVariant, n: usize) -> Vec<f64> {
     let lo = layout(variant, n);
     match variant {
@@ -200,12 +292,14 @@ pub fn read_result(core: &Core, variant: GemmVariant, n: usize) -> Vec<f64> {
         GemmVariant::F32Fused | GemmVariant::F32Unfused => {
             core.mem.read_f32_slice(lo.c, n * n).iter().map(|v| *v as f64).collect()
         }
-        GemmVariant::P32Quire | GemmVariant::P32NoQuire => core
-            .mem
-            .read_u32_slice(lo.c, n * n)
-            .iter()
-            .map(|v| Posit32(*v).to_f64())
-            .collect(),
+        _ => {
+            let fmt = variant.posit_fmt().expect("posit variant");
+            core.mem
+                .read_posit_slice(lo.c, fmt.bytes(), n * n)
+                .iter()
+                .map(|v| to_f64_n(fmt.width(), *v))
+                .collect()
+        }
     }
 }
 
@@ -247,6 +341,103 @@ pub fn run_gemm_sim(
     GemmRun { stats, result: read_result(&core, variant, n), seconds }
 }
 
+/// Outcome of a simulated posit workload run on raw bit patterns.
+pub struct SimBitsRun {
+    /// Result bit patterns (`u64`, lossless for every width).
+    pub bits: Vec<u64>,
+    pub stats: Stats,
+    /// Simulated target seconds at the configured clock.
+    pub seconds: f64,
+}
+
+/// Simulated GEMM on raw posit bit patterns at any width — the
+/// coordinator's `Backend::Sim` route for format-tagged jobs. Unlike
+/// [`run_gemm_sim`] (which converts from f64 masters) this writes and
+/// reads the patterns verbatim, so it is lossless even for Posit64.
+pub fn run_gemm_sim_bits(
+    cfg: CoreConfig,
+    fmt: PositFmt,
+    n: usize,
+    a: &[u64],
+    b: &[u64],
+    quire: bool,
+    warm: bool,
+) -> SimBitsRun {
+    assert_eq!(a.len(), n * n, "A must be n×n");
+    assert_eq!(b.len(), n * n, "B must be n×n");
+    let variant = GemmVariant::posit(fmt, quire);
+    let prog = gemm_program(variant, n);
+    let mut core = Core::new(cfg);
+    core.load_program(&prog);
+    let lo = layout(variant, n);
+    let eb = fmt.bytes();
+    core.mem.write_posit_slice(lo.a, eb, a);
+    core.mem.write_posit_slice(lo.b, eb, b);
+    let set_args = |core: &mut Core| {
+        core.x[10] = lo.a;
+        core.x[11] = lo.b;
+        core.x[12] = lo.c;
+    };
+    if warm {
+        set_args(&mut core);
+        core.run();
+        core.reset_timing();
+    }
+    set_args(&mut core);
+    let stats = core.run();
+    let seconds = stats.seconds(&core.cfg);
+    SimBitsRun { bits: core.mem.read_posit_slice(lo.c, eb, n * n), stats, seconds }
+}
+
+/// Generate the quire dot-product kernel at one posit width (the Fig. 6
+/// inner loop on its own). Calling convention: `a0 = &A`, `a1 = &B`,
+/// `a2 = len`, `a3 = &out`.
+pub fn dot_program(fmt: PositFmt, len: usize) -> Program {
+    let (load, store, sfx, _) = posit_frags(fmt);
+    let eb = fmt.bytes();
+    let src = format!(
+        r#"
+    # quire dot product {fmt:?} len={len}
+    qclr.{sfx}
+    beqz a2, done
+loop:
+    {load} p0, 0(a0)
+    {load} p1, 0(a1)
+    qmadd.{sfx} p0, p1
+    addi a0, a0, {eb}
+    addi a1, a1, {eb}
+    addi a2, a2, -1
+    bnez a2, loop
+done:
+    qround.{sfx} p2
+    {store} p2, 0(a3)
+    ecall
+"#
+    );
+    assemble(&src).expect("generated dot kernel must assemble")
+}
+
+/// Simulated quire dot product on raw posit bit patterns at any width.
+pub fn run_dot_sim_bits(cfg: CoreConfig, fmt: PositFmt, a: &[u64], b: &[u64]) -> SimBitsRun {
+    assert_eq!(a.len(), b.len());
+    let prog = dot_program(fmt, a.len());
+    let mut core = Core::new(cfg);
+    core.load_program(&prog);
+    let eb = fmt.bytes();
+    let base_a = 0x1_0000u64;
+    let base_b = base_a + ((a.len() * eb + 0xFFF) & !0xFFF) as u64;
+    let out = base_b + ((b.len() * eb + 0xFFF) & !0xFFF) as u64;
+    core.mem.write_posit_slice(base_a, eb, a);
+    core.mem.write_posit_slice(base_b, eb, b);
+    core.x[10] = base_a;
+    core.x[11] = base_b;
+    core.x[12] = a.len() as u64;
+    core.x[13] = out;
+    let stats = core.run();
+    let seconds = stats.seconds(&core.cfg);
+    SimBitsRun { bits: core.mem.read_posit_slice(out, eb, 1), stats, seconds }
+}
+
 /// Deterministic uniform matrix in `[-10^i, 10^i]` (paper §7.1's input
 /// generator), as f64 "master" values that each variant converts from.
 pub fn gen_matrix(rng: &mut Rng, n: usize, exp10: i32) -> Vec<f64> {
@@ -261,10 +452,73 @@ mod tests {
 
     #[test]
     fn all_variants_assemble() {
-        for v in GemmVariant::ALL {
+        for v in GemmVariant::ALL.into_iter().chain(GemmVariant::POSIT_EXT) {
             let p = gemm_program(v, 8);
-            assert!(p.words.len() > 15);
+            assert!(p.words.len() > 15, "{v:?}");
         }
+        for fmt in PositFmt::ALL {
+            let p = dot_program(fmt, 8);
+            assert!(p.words.len() > 8, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn sim_bits_matches_generic_kernels_every_width() {
+        // The simulated multi-width kernels and the native generic kernel
+        // drivers are two engines over the same arithmetic: bit-identical.
+        use crate::posit::{P16, P32, P64, P8};
+        fn check<F: crate::kernels::gemm::KernelFormat>(fmt: PositFmt, seed: u64) {
+            use crate::kernels::gemm::{gemm_noquire, gemm_quire};
+            use crate::posit::PositBits;
+            let mut rng = Rng::new(seed);
+            let n = 5;
+            let a: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(F::N, rng.range_f64(-2.0, 2.0))).collect();
+            let b: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(F::N, rng.range_f64(-2.0, 2.0))).collect();
+            let af: Vec<F::Bits> = a.iter().map(|&x| F::Bits::from_u64(x)).collect();
+            let bf: Vec<F::Bits> = b.iter().map(|&x| F::Bits::from_u64(x)).collect();
+            let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+            for quire in [true, false] {
+                let sim = run_gemm_sim_bits(cfg, fmt, n, &a, &b, quire, false);
+                assert!(sim.seconds > 0.0);
+                let native = if quire {
+                    gemm_quire::<F>(n, &af, &bf)
+                } else {
+                    gemm_noquire::<F>(n, &af, &bf)
+                };
+                let native: Vec<u64> = native.into_iter().map(|x| x.to_u64()).collect();
+                assert_eq!(sim.bits, native, "{fmt:?} quire={quire}");
+            }
+        }
+        check::<P8>(PositFmt::P8, 81);
+        check::<P16>(PositFmt::P16, 161);
+        check::<P32>(PositFmt::P32, 321);
+        check::<P64>(PositFmt::P64, 641);
+    }
+
+    #[test]
+    fn sim_dot_matches_native_every_width() {
+        use crate::kernels::gemm::dot_quire;
+        use crate::posit::{PositBits, P16, P64};
+        let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
+        // Empty dot rounds the cleared quire: exactly zero at any width.
+        assert_eq!(run_dot_sim_bits(cfg, PositFmt::P16, &[], &[]).bits, vec![0]);
+        let mut rng = Rng::new(0xD07);
+        let a16: Vec<u64> = (0..33).map(|_| from_f64_n(16, rng.range_f64(-4.0, 4.0))).collect();
+        let b16: Vec<u64> = (0..33).map(|_| from_f64_n(16, rng.range_f64(-4.0, 4.0))).collect();
+        let a16n: Vec<u32> = a16.iter().map(|&x| x as u32).collect();
+        let b16n: Vec<u32> = b16.iter().map(|&x| x as u32).collect();
+        assert_eq!(
+            run_dot_sim_bits(cfg, PositFmt::P16, &a16, &b16).bits,
+            vec![dot_quire::<P16>(&a16n, &b16n) as u64]
+        );
+        let a64: Vec<u64> = (0..17).map(|_| from_f64_n(64, rng.range_f64(-4.0, 4.0))).collect();
+        let b64: Vec<u64> = (0..17).map(|_| from_f64_n(64, rng.range_f64(-4.0, 4.0))).collect();
+        assert_eq!(
+            run_dot_sim_bits(cfg, PositFmt::P64, &a64, &b64).bits,
+            vec![dot_quire::<P64>(&a64, &b64).to_u64()]
+        );
     }
 
     #[test]
@@ -291,6 +545,7 @@ mod tests {
             GemmVariant::F64Unfused => NativeKind::F64Unfused,
             GemmVariant::P32Quire => NativeKind::P32Quire,
             GemmVariant::P32NoQuire => NativeKind::P32NoQuire,
+            _ => unreachable!("no Table-6 native kind for {v:?}"),
         }
     }
 

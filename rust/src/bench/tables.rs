@@ -77,11 +77,14 @@ pub fn fig7(sizes: &[usize], out_csv: Option<&str>) -> Vec<Vec<String>> {
 /// Table 7: simulated GEMM wall-clock per variant and size + RacEr model.
 /// Timing is input-independent in the model, so one measured run per cell
 /// (after a warm-up run, matching the paper's no-cold-miss protocol).
+/// Beyond the paper's six rows, the multi-width extension appends one row
+/// per posit width (8/16/64-bit, quire and non-quire) so the simulated
+/// timing story spans the same four formats the kernels do.
 pub fn table7(cfg: CoreConfig, sizes: &[usize], out_csv: Option<&str>) -> Vec<Vec<String>> {
     let mut rng = Rng::new(SEED);
     let mut rows = Vec::new();
     let mut secs: Vec<Vec<f64>> = Vec::new();
-    for v in GemmVariant::ALL {
+    for v in GemmVariant::ALL.into_iter().chain(GemmVariant::POSIT_EXT) {
         let mut row = vec![v.label().to_string()];
         let mut srow = Vec::new();
         for &n in sizes {
@@ -152,7 +155,8 @@ mod tests {
     fn table7_quick_shape() {
         let cfg = CoreConfig { mem_size: 1 << 22, ..Default::default() };
         let rows = table7(cfg, &[16], None);
-        assert_eq!(rows.len(), 7); // 6 variants + RacEr
+        // 6 paper variants + 6 multi-width posit rows + RacEr.
+        assert_eq!(rows.len(), 13);
         // Fused beats unfused for every format (paper §7.2).
         let parse = |s: &str| -> f64 {
             let (v, unit) = s.split_once(' ').unwrap();
@@ -169,5 +173,14 @@ mod tests {
         let quire = parse(&rows[2][1]);
         let noquire = parse(&rows[5][1]);
         assert!(quire < noquire);
+        // The multi-width rows follow in POSIT_EXT order; the quire wins
+        // over mul+add at every width, and the Posit64 quire row is slower
+        // than the Posit32 one (width-scaled PAU + 8-byte traffic).
+        assert_eq!(rows[6][0], "Posit8");
+        assert_eq!(rows[11][0], "Posit64 no quire");
+        for w in [6, 8, 10] {
+            assert!(parse(&rows[w][1]) < parse(&rows[w + 1][1]), "row {w}");
+        }
+        assert!(parse(&rows[10][1]) > parse(&rows[2][1]), "p64 quire !> p32 quire");
     }
 }

@@ -13,25 +13,29 @@
 //! std::thread + mpsc (documented deviation, DESIGN.md §6).
 //!
 //! Since the `PositFormat` refactor the job surface is format-tagged:
-//! [`Job::Gemm`] / [`Job::Dot`] carry a [`Format`] and route to the
-//! generic kernel drivers — Posit8 through its operation LUTs, Posit16
-//! through its decode LUT, Posit32 and the 1024-bit-quire Posit64
-//! natively. Bit patterns travel as `u64` (lossless for every width); the
-//! legacy Posit32-only [`Job::GemmP32`] / [`Job::DotP32`] variants remain.
-//! Malformed jobs — shape mismatches, patterns outside the format's bit
-//! width, a backend that cannot run the format — come back as
+//! [`Job::Gemm`] / [`Job::Dot`] carry a [`Format`] (the same enum that
+//! tags the Xposit `fmt` instruction field) and route to the generic
+//! kernel drivers — Posit8 through its operation LUTs, Posit16 through
+//! its decode LUT, Posit32 and the 1024-bit-quire Posit64 natively. The
+//! Sim backend runs every width too, through the multi-width Xposit ISA
+//! and the format-tagged PAU quire, bit-identical to Native and reporting
+//! simulated target seconds per format. Bit patterns travel as `u64`
+//! (lossless for every width); the legacy Posit32-only [`Job::GemmP32`] /
+//! [`Job::DotP32`] variants remain. Malformed jobs — shape mismatches,
+//! patterns outside the format's bit width, a backend that cannot run the
+//! format (PJRT compiles Posit32 kernels only) — come back as
 //! [`crate::error::Error`], never as worker panics.
 
 pub mod json;
 
-use crate::bench::gemm::{run_gemm_sim, GemmVariant};
+use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};
 use crate::core::CoreConfig;
 use crate::error::Result;
 use crate::kernels::gemm::{
     dot_quire, gemm_noquire, gemm_p8_noquire_lut, gemm_quire, KernelFormat,
 };
 use crate::posit::unpacked::mask_n;
-use crate::posit::{Posit32, PositBits, PositFormat, P16, P32, P64, P8};
+use crate::posit::{PositBits, PositFormat, P16, P32, P64, P8};
 use crate::runtime::Runtime;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -49,37 +53,10 @@ pub enum Backend {
     Pjrt,
 }
 
-/// Posit format tag carried by the generic jobs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Format {
-    P8,
-    P16,
-    P32,
-    P64,
-}
-
-impl Format {
-    /// Format width in bits.
-    pub fn width(self) -> u32 {
-        match self {
-            Format::P8 => 8,
-            Format::P16 => 16,
-            Format::P32 => 32,
-            Format::P64 => 64,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Format::P8 => "Posit8",
-            Format::P16 => "Posit16",
-            Format::P32 => "Posit32",
-            Format::P64 => "Posit64",
-        }
-    }
-
-    pub const ALL: [Format; 4] = [Format::P8, Format::P16, Format::P32, Format::P64];
-}
+/// Posit format tag carried by the generic jobs — the same enum that tags
+/// the Xposit `fmt` instruction field, so one `Format` flows from the job
+/// queue down to the simulated instruction encoding.
+pub use crate::isa::PositFmt as Format;
 
 /// A numeric job.
 #[derive(Debug, Clone)]
@@ -118,12 +95,21 @@ impl JobResult {
     }
 
     fn from_u64(fmt: Format, bits64: Vec<u64>, backend: Backend) -> Self {
+        Self::from_u64_sim(fmt, bits64, backend, None)
+    }
+
+    fn from_u64_sim(
+        fmt: Format,
+        bits64: Vec<u64>,
+        backend: Backend,
+        sim_seconds: Option<f64>,
+    ) -> Self {
         let bits = if fmt.width() <= 32 {
             bits64.iter().map(|&x| x as u32).collect()
         } else {
             Vec::new()
         };
-        Self { bits, bits64, backend, elapsed_s: 0.0, sim_seconds: None }
+        Self { bits, bits64, backend, elapsed_s: 0.0, sim_seconds }
     }
 }
 
@@ -260,12 +246,16 @@ impl Coordinator {
 
 /// Reject patterns that do not fit the format's bit width.
 fn check_patterns<F: PositFormat>(which: &str, bits: &[u64]) -> Result<()> {
-    let mask = mask_n(F::N);
+    check_patterns_n(F::N, F::NAME, which, bits)
+}
+
+/// Runtime-width [`check_patterns`] (the Sim route dispatches on a
+/// [`Format`] value, not a type).
+fn check_patterns_n(width: u32, name: &str, which: &str, bits: &[u64]) -> Result<()> {
+    let mask = mask_n(width);
     crate::ensure!(
         bits.iter().all(|&x| x & !mask == 0),
-        "{which}: pattern outside the {}-bit {} format",
-        F::N,
-        F::NAME
+        "{which}: pattern outside the {width}-bit {name} format"
     );
     Ok(())
 }
@@ -384,13 +374,14 @@ fn execute(
             };
             Ok(JobResult::from_u64(*fmt, bits64, backend))
         }
-        (Job::Gemm { fmt: Format::P32, n, a, b, quire }, Backend::Sim) => {
-            check_patterns::<P32>("a", a)?;
-            check_patterns::<P32>("b", b)?;
-            let av: Vec<u32> = a.iter().map(|&x| x as u32).collect();
-            let bv: Vec<u32> = b.iter().map(|&x| x as u32).collect();
-            let run = sim_gemm_p32(*n, &av, &bv, *quire);
-            Ok(run)
+        // The Sim backend runs every format: the multi-width Xposit ISA
+        // and the format-tagged PAU quire time 8/16/32/64-bit kernels
+        // alike, bit-identical to the Native route.
+        (Job::Gemm { fmt, n, a, b, quire }, Backend::Sim) => {
+            check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
+            check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
+            let run = run_gemm_sim_bits(CoreConfig::default(), *fmt, *n, a, b, *quire, false);
+            Ok(JobResult::from_u64_sim(*fmt, run.bits, backend, Some(run.seconds)))
         }
         // The tagged P32 job is equivalent to the legacy `GemmP32` on every
         // backend, including PJRT.
@@ -409,8 +400,8 @@ fn execute(
             let bits = rt.as_mut().unwrap().gemm_p32(variant, *n, &av, &bv)?;
             Ok(JobResult::from_u32(bits, backend, None))
         }
-        (Job::Gemm { fmt, .. }, be @ (Backend::Sim | Backend::Pjrt)) => {
-            Err(crate::err!("backend {be:?} does not support {} jobs", fmt.name()))
+        (Job::Gemm { fmt, .. }, Backend::Pjrt) => {
+            Err(crate::err!("backend Pjrt does not support {} jobs", fmt.name()))
         }
         (Job::Dot { fmt, a, b }, Backend::Native) => {
             let bits64 = match fmt {
@@ -421,20 +412,25 @@ fn execute(
             };
             Ok(JobResult::from_u64(*fmt, bits64, Backend::Native))
         }
-        (Job::Dot { fmt, .. }, be @ (Backend::Sim | Backend::Pjrt)) => {
-            Err(crate::err!("backend {be:?} does not support {} dot jobs", fmt.name()))
+        (Job::Dot { fmt, a, b }, Backend::Sim) => {
+            check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
+            check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
+            let run = run_dot_sim_bits(CoreConfig::default(), *fmt, a, b);
+            Ok(JobResult::from_u64_sim(*fmt, run.bits, backend, Some(run.seconds)))
+        }
+        (Job::Dot { fmt, .. }, Backend::Pjrt) => {
+            Err(crate::err!("backend Pjrt does not support {} dot jobs", fmt.name()))
         }
     }
 }
 
-/// Posit32 GEMM on the cycle-accurate simulator (shared by the legacy and
-/// format-tagged job paths).
+/// Posit32 GEMM on the cycle-accurate simulator (the legacy fixed-format
+/// job path; bit patterns travel verbatim through the core's memory).
 fn sim_gemm_p32(n: usize, a: &[u32], b: &[u32], quire: bool) -> JobResult {
-    let variant = if quire { GemmVariant::P32Quire } else { GemmVariant::P32NoQuire };
-    let af: Vec<f64> = a.iter().map(|x| Posit32(*x).to_f64()).collect();
-    let bf: Vec<f64> = b.iter().map(|x| Posit32(*x).to_f64()).collect();
-    let run = run_gemm_sim(CoreConfig::default(), variant, n, &af, &bf, false);
-    let bits: Vec<u32> = run.result.iter().map(|v| Posit32::from_f64(*v).bits()).collect();
+    let a64: Vec<u64> = a.iter().map(|&x| x as u64).collect();
+    let b64: Vec<u64> = b.iter().map(|&x| x as u64).collect();
+    let run = run_gemm_sim_bits(CoreConfig::default(), Format::P32, n, &a64, &b64, quire, false);
+    let bits: Vec<u32> = run.bits.iter().map(|&x| x as u32).collect();
     JobResult::from_u32(bits, Backend::Sim, Some(run.seconds))
 }
 
@@ -453,6 +449,7 @@ mod tests {
     use super::*;
     use crate::kernels::gemm::{gemm_noquire_scalar_gen, gemm_quire_scalar_gen};
     use crate::posit::convert::from_f64;
+    use crate::posit::Posit32;
     use crate::testing::Rng;
 
     fn mat(rng: &mut Rng, n: usize) -> Vec<u32> {
@@ -549,6 +546,59 @@ mod tests {
     }
 
     #[test]
+    fn sim_backend_accepts_every_format() {
+        // The acceptance pin: `Coordinator::run` with `Backend::Sim` takes
+        // all four formats for Gemm and Dot, returns bit-identical results
+        // to `Backend::Native`, and reports simulated target seconds.
+        use crate::posit::convert::from_f64_n;
+        let mut rng = Rng::new(0x51A1);
+        let co = Coordinator::new(2, None);
+        let n = 4;
+        for fmt in Format::ALL {
+            let w = fmt.width();
+            let a: Vec<u64> = (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-2.0, 2.0))).collect();
+            let b: Vec<u64> = (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-2.0, 2.0))).collect();
+            for quire in [true, false] {
+                let job = Job::Gemm { fmt, n, a: a.clone(), b: b.clone(), quire };
+                let results = co
+                    .cross_check(job, &[Backend::Native, Backend::Sim])
+                    .unwrap_or_else(|e| panic!("{fmt:?} quire={quire}: {e}"));
+                assert!(results[1].sim_seconds.unwrap() > 0.0, "{fmt:?}");
+            }
+            let dot = Job::Dot { fmt, a: a.clone(), b: b.clone() };
+            let results = co
+                .cross_check(dot, &[Backend::Native, Backend::Sim])
+                .unwrap_or_else(|e| panic!("dot {fmt:?}: {e}"));
+            assert!(results[1].sim_seconds.unwrap() > 0.0, "dot {fmt:?}");
+        }
+        co.shutdown();
+    }
+
+    #[test]
+    fn sim_seconds_scale_with_width() {
+        // The width-scaled PAU/quire latencies must surface in the
+        // simulated timing: a P64 quire GEMM takes longer than the same
+        // shape at P32 (more PAU cycles and 8-byte element traffic).
+        use crate::posit::convert::from_f64_n;
+        let mut rng = Rng::new(0x77);
+        let co = Coordinator::new(1, None);
+        let n = 6;
+        let masters: Vec<f64> = (0..2 * n * n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        let mut secs = Vec::new();
+        for fmt in [Format::P32, Format::P64] {
+            let w = fmt.width();
+            let a: Vec<u64> = masters[..n * n].iter().map(|&v| from_f64_n(w, v)).collect();
+            let b: Vec<u64> = masters[n * n..].iter().map(|&v| from_f64_n(w, v)).collect();
+            let r = co
+                .run(Job::Gemm { fmt, n, a, b, quire: true }, Backend::Sim)
+                .unwrap();
+            secs.push(r.sim_seconds.unwrap());
+        }
+        assert!(secs[1] > secs[0], "p64 {} !> p32 {}", secs[1], secs[0]);
+        co.shutdown();
+    }
+
+    #[test]
     fn p64_gemm_end_to_end() {
         use crate::posit::convert::from_f64_n;
         let mut rng = Rng::new(0x64);
@@ -585,16 +635,17 @@ mod tests {
             Backend::Native,
         );
         assert!(res.is_err());
-        // Backend without support for the format.
+        // Backend without support for the format (Sim now takes every
+        // format; PJRT still only compiles Posit32 kernels).
         let res = co.run(
             Job::Gemm { fmt: Format::P64, n: 1, a: vec![0], b: vec![0], quire: true },
-            Backend::Sim,
+            Backend::Pjrt,
         );
         assert!(res.is_err());
         // Dot jobs honour the requested backend the same way.
         let res = co.run(
             Job::Dot { fmt: Format::P16, a: vec![0x4000], b: vec![0x4000] },
-            Backend::Sim,
+            Backend::Pjrt,
         );
         assert!(res.is_err());
         // Tagged P32 on PJRT matches the legacy job: clean error when no

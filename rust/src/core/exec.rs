@@ -355,50 +355,75 @@ impl Core {
             Op::FeqD => wx!((f64_of(self.f[rs1]) == f64_of(self.f[rs2])) as u64),
             Op::FltD => wx!((f64_of(self.f[rs1]) < f64_of(self.f[rs2])) as u64),
             Op::FleD => wx!((f64_of(self.f[rs1]) <= f64_of(self.f[rs2])) as u64),
-            // ── Xposit (the PAU + posit ALU paths) ──────────────────────
-            Op::Plw => {
+            // ── Xposit loads/stores (8/16/32/64-bit D$ widths) ──────────
+            Op::Plb | Op::Plh | Op::Plw | Op::Pld => {
                 let a = self.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
-                self.p[rd] = self.mem.read_u32(a);
+                self.p[rd] = match ins.op {
+                    Op::Plb => self.mem.read_u8(a) as u64,
+                    Op::Plh => self.mem.read_u16(a) as u64,
+                    Op::Plw => self.mem.read_u32(a) as u64,
+                    _ => self.mem.read_u64(a),
+                };
             }
-            Op::Psw => {
+            Op::Psb | Op::Psh | Op::Psw | Op::Psd => {
                 let a = self.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u32(a, self.p[rs2]);
+                match ins.op {
+                    Op::Psb => self.mem.write_u8(a, self.p[rs2] as u8),
+                    Op::Psh => self.mem.write_u16(a, self.p[rs2] as u16),
+                    Op::Psw => self.mem.write_u32(a, self.p[rs2] as u32),
+                    _ => self.mem.write_u64(a, self.p[rs2]),
+                }
             }
-            Op::PaddS => self.p[rd] = ops::add::<32>(self.p[rs1], self.p[rs2]),
-            Op::PsubS => self.p[rd] = ops::sub::<32>(self.p[rs1], self.p[rs2]),
-            Op::PmulS => self.p[rd] = ops::mul::<32>(self.p[rs1], self.p[rs2]),
-            Op::PdivS => self.p[rd] = divsqrt::div_approx::<32>(self.p[rs1], self.p[rs2]),
-            Op::PminS => self.p[rd] = posit::min_bits::<32>(self.p[rs1], self.p[rs2]),
-            Op::PmaxS => self.p[rd] = posit::max_bits::<32>(self.p[rs1], self.p[rs2]),
-            Op::PsqrtS => self.p[rd] = divsqrt::sqrt_approx::<32>(self.p[rs1]),
-            Op::QmaddS => self.quire.madd(self.p[rs1], self.p[rs2]),
-            Op::QmsubS => self.quire.msub(self.p[rs1], self.p[rs2]),
-            Op::QclrS => self.quire.clear(),
-            Op::QnegS => self.quire.neg(),
-            Op::QroundS => self.p[rd] = self.quire.round(),
-            Op::PcvtWS => wx!(convert::to_i32::<32>(self.p[rs1]) as i64 as u64),
-            Op::PcvtWuS => wx!(convert::to_u32::<32>(self.p[rs1]) as i32 as i64 as u64),
-            Op::PcvtLS => wx!(convert::to_i64::<32>(self.p[rs1]) as u64),
-            Op::PcvtLuS => wx!(convert::to_u64::<32>(self.p[rs1])),
-            Op::PcvtSW => self.p[rd] = convert::from_i32::<32>(self.x[rs1] as i32),
-            Op::PcvtSWu => self.p[rd] = convert::from_u32::<32>(self.x[rs1] as u32),
-            Op::PcvtSL => self.p[rd] = convert::from_i64::<32>(self.x[rs1] as i64),
-            Op::PcvtSLu => self.p[rd] = convert::from_u64::<32>(self.x[rs1]),
-            Op::PsgnjS => self.p[rd] = posit::sgnj::<32>(self.p[rs1], self.p[rs2]),
-            Op::PsgnjnS => self.p[rd] = posit::sgnjn::<32>(self.p[rs1], self.p[rs2]),
-            Op::PsgnjxS => self.p[rd] = posit::sgnjx::<32>(self.p[rs1], self.p[rs2]),
-            Op::PmvXW => wx!(unpacked::to_signed::<32>(self.p[rs1]) as i64 as u64),
-            Op::PmvWX => self.p[rd] = self.x[rs1] as u32,
-            Op::PeqS => wx!((self.p[rs1] == self.p[rs2]) as u64),
-            Op::PltS => {
-                wx!((unpacked::to_signed::<32>(self.p[rs1]) < unpacked::to_signed::<32>(self.p[rs2]))
-                    as u64)
-            }
-            Op::PleS => {
-                wx!((unpacked::to_signed::<32>(self.p[rs1])
-                    <= unpacked::to_signed::<32>(self.p[rs2])) as u64)
+            // ── Xposit computational (the PAU + posit ALU paths). The
+            // instruction's `fmt` field picks the width; operands are
+            // masked to it, like hardware reading the low N register bits.
+            // All ops are listed so the outer match stays exhaustive over
+            // `Op` (a new opcode without exec semantics must not compile).
+            Op::PaddS | Op::PsubS | Op::PmulS | Op::PdivS | Op::PminS | Op::PmaxS
+            | Op::PsqrtS | Op::QmaddS | Op::QmsubS | Op::QclrS | Op::QnegS | Op::QroundS
+            | Op::PcvtWS | Op::PcvtWuS | Op::PcvtLS | Op::PcvtLuS | Op::PcvtSW
+            | Op::PcvtSWu | Op::PcvtSL | Op::PcvtSLu | Op::PsgnjS | Op::PsgnjnS
+            | Op::PsgnjxS | Op::PmvXW | Op::PmvWX | Op::PeqS | Op::PltS | Op::PleS => {
+                let w = ins.fmt.width();
+                let m = unpacked::mask_n(w);
+                let (x, y) = (self.p[rs1] & m, self.p[rs2] & m);
+                match ins.op {
+                    Op::PaddS => self.p[rd] = ops::add_n(w, x, y),
+                    Op::PsubS => self.p[rd] = ops::sub_n(w, x, y),
+                    Op::PmulS => self.p[rd] = ops::mul_n(w, x, y),
+                    Op::PdivS => self.p[rd] = divsqrt::div_approx_n(w, x, y),
+                    Op::PminS => self.p[rd] = posit::min_bits_n(w, x, y),
+                    Op::PmaxS => self.p[rd] = posit::max_bits_n(w, x, y),
+                    Op::PsqrtS => self.p[rd] = divsqrt::sqrt_approx_n(w, x),
+                    Op::QmaddS => self.quire.madd(ins.fmt, x, y),
+                    Op::QmsubS => self.quire.msub(ins.fmt, x, y),
+                    Op::QclrS => self.quire.clear(ins.fmt),
+                    Op::QnegS => self.quire.neg(ins.fmt),
+                    Op::QroundS => self.p[rd] = self.quire.round(ins.fmt),
+                    Op::PcvtWS => wx!(convert::to_i32_n(w, x) as i64 as u64),
+                    Op::PcvtWuS => wx!(convert::to_u32_n(w, x) as i32 as i64 as u64),
+                    Op::PcvtLS => wx!(convert::to_i64_n(w, x) as u64),
+                    Op::PcvtLuS => wx!(convert::to_u64_n(w, x)),
+                    Op::PcvtSW => self.p[rd] = convert::from_i64_n(w, self.x[rs1] as i32 as i64),
+                    Op::PcvtSWu => self.p[rd] = convert::from_u64_n(w, self.x[rs1] as u32 as u64),
+                    Op::PcvtSL => self.p[rd] = convert::from_i64_n(w, self.x[rs1] as i64),
+                    Op::PcvtSLu => self.p[rd] = convert::from_u64_n(w, self.x[rs1]),
+                    Op::PsgnjS => self.p[rd] = posit::sgnj_n(w, x, y),
+                    Op::PsgnjnS => self.p[rd] = posit::sgnjn_n(w, x, y),
+                    Op::PsgnjxS => self.p[rd] = posit::sgnjx_n(w, x, y),
+                    Op::PmvXW => wx!(unpacked::to_signed_n(w, x) as u64),
+                    Op::PmvWX => self.p[rd] = self.x[rs1] & m,
+                    Op::PeqS => wx!((x == y) as u64),
+                    Op::PltS => {
+                        wx!((unpacked::to_signed_n(w, x) < unpacked::to_signed_n(w, y)) as u64)
+                    }
+                    Op::PleS => {
+                        wx!((unpacked::to_signed_n(w, x) <= unpacked::to_signed_n(w, y)) as u64)
+                    }
+                    _ => unreachable!("non-posit op in posit arm"),
+                }
             }
         }
         eff

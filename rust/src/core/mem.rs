@@ -233,6 +233,38 @@ impl Memory {
     pub fn read_u32_slice(&self, addr: u64, n: usize) -> Vec<u32> {
         (0..n).map(|i| self.read_u32(addr + 4 * i as u64)).collect()
     }
+
+    /// Write posit bit patterns (`u64`, lossless for every width) as
+    /// packed `elem_bytes`-wide elements — the layout the multi-width
+    /// posit loads/stores (`plb`/`plh`/`plw`/`pld`) address.
+    pub fn write_posit_slice(&mut self, addr: u64, elem_bytes: usize, xs: &[u64]) {
+        for (i, x) in xs.iter().enumerate() {
+            let a = addr + (elem_bytes * i) as u64;
+            match elem_bytes {
+                1 => self.write_u8(a, *x as u8),
+                2 => self.write_u16(a, *x as u16),
+                4 => self.write_u32(a, *x as u32),
+                8 => self.write_u64(a, *x),
+                _ => panic!("unsupported posit element size {elem_bytes}"),
+            }
+        }
+    }
+
+    /// Read back packed posit bit patterns (see [`Self::write_posit_slice`]).
+    pub fn read_posit_slice(&self, addr: u64, elem_bytes: usize, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|i| {
+                let a = addr + (elem_bytes * i) as u64;
+                match elem_bytes {
+                    1 => self.read_u8(a) as u64,
+                    2 => self.read_u16(a) as u64,
+                    4 => self.read_u32(a) as u64,
+                    8 => self.read_u64(a),
+                    _ => panic!("unsupported posit element size {elem_bytes}"),
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +282,22 @@ mod tests {
         assert_eq!(m.read_u8(15), 0x11);
         m.write_u32(100, 0xDEAD_BEEF);
         assert_eq!(m.read_u32(100), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn posit_slice_roundtrip_every_width() {
+        let mut m = Memory::new(1024);
+        let xs = [0xA5u64, 0x7F, 0x01, 0xFE];
+        for eb in [1usize, 2, 4, 8] {
+            let masked: Vec<u64> =
+                xs.iter().map(|x| x & (u64::MAX >> (64 - 8 * eb as u32))).collect();
+            m.write_posit_slice(64, eb, &masked);
+            assert_eq!(m.read_posit_slice(64, eb, xs.len()), masked, "eb={eb}");
+        }
+        // 64-bit patterns survive verbatim.
+        let wide = [0x0123_4567_89AB_CDEFu64, u64::MAX];
+        m.write_posit_slice(256, 8, &wide);
+        assert_eq!(m.read_posit_slice(256, 8, 2), wide);
     }
 
     #[test]

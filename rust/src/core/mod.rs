@@ -14,6 +14,11 @@
 //!   penalty — the term that makes GEMM scale the way Table 7 shows.
 //! - **Branch prediction**: backward-taken/forward-not-taken with a
 //!   mispredict flush penalty (CVA6's front end resteer).
+//! - **Multi-width Xposit** (PERI / Big-PERCIVAL direction): the posit
+//!   register file is 64 bits wide, the PAU accumulator is a
+//!   format-tagged [`PauQuire`], loads/stores exist at 1/2/4/8-byte D$
+//!   widths, and PAU latencies scale with the format via
+//!   [`crate::isa::OpInfo::latency_for`].
 //!
 //! What is not modelled: TLBs (benchmarks run bare), instruction cache
 //! (kernels fit I$), store-buffer stalls, page walks. DESIGN.md discusses
@@ -25,8 +30,107 @@ pub mod mem;
 pub use mem::{CacheConfig, DCache, Memory};
 
 use crate::isa::asm::Program;
-use crate::isa::{info, Instr, RegClass, Unit};
-use crate::posit::Quire32;
+use crate::isa::{info, Instr, PositFmt, RegClass, Unit};
+use crate::posit::{Quire16, Quire32, Quire64, Quire8};
+
+/// The PAU's accumulator, tagged with the posit width it currently holds —
+/// one physical register reused across formats (Big-PERCIVAL's multi-width
+/// PAU: a 16·N-bit quire per supported width, of which one is live).
+/// Executing a quire instruction at a different width re-purposes the
+/// register, clearing it first — as real multi-width hardware requires
+/// software to `QCLR` when switching formats.
+#[derive(Debug, Clone)]
+pub enum PauQuire {
+    Q8(Quire8),
+    Q16(Quire16),
+    Q32(Quire32),
+    Q64(Quire64),
+}
+
+impl PauQuire {
+    pub fn new(fmt: PositFmt) -> Self {
+        match fmt {
+            PositFmt::P8 => PauQuire::Q8(Quire8::new()),
+            PositFmt::P16 => PauQuire::Q16(Quire16::new()),
+            PositFmt::P32 => PauQuire::Q32(Quire32::new()),
+            PositFmt::P64 => PauQuire::Q64(Quire64::new()),
+        }
+    }
+
+    /// Width of the accumulator's current format.
+    pub fn fmt(&self) -> PositFmt {
+        match self {
+            PauQuire::Q8(_) => PositFmt::P8,
+            PauQuire::Q16(_) => PositFmt::P16,
+            PauQuire::Q32(_) => PositFmt::P32,
+            PauQuire::Q64(_) => PositFmt::P64,
+        }
+    }
+
+    /// Re-tag to `fmt`, clearing if the width changes.
+    #[inline]
+    fn retag(&mut self, fmt: PositFmt) {
+        if self.fmt() != fmt {
+            *self = Self::new(fmt);
+        }
+    }
+
+    /// `QCLR` at `fmt` (re-tags the register to the new width).
+    pub fn clear(&mut self, fmt: PositFmt) {
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => q.clear(),
+            PauQuire::Q16(q) => q.clear(),
+            PauQuire::Q32(q) => q.clear(),
+            PauQuire::Q64(q) => q.clear(),
+        }
+    }
+
+    /// `QNEG` at `fmt`.
+    pub fn neg(&mut self, fmt: PositFmt) {
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => q.neg(),
+            PauQuire::Q16(q) => q.neg(),
+            PauQuire::Q32(q) => q.neg(),
+            PauQuire::Q64(q) => q.neg(),
+        }
+    }
+
+    /// `QMADD` at `fmt` (bit patterns travel as `u64`, lossless for every
+    /// width).
+    pub fn madd(&mut self, fmt: PositFmt, a: u64, b: u64) {
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => q.madd(a as u32, b as u32),
+            PauQuire::Q16(q) => q.madd(a as u32, b as u32),
+            PauQuire::Q32(q) => q.madd(a as u32, b as u32),
+            PauQuire::Q64(q) => q.madd(a, b),
+        }
+    }
+
+    /// `QMSUB` at `fmt`.
+    pub fn msub(&mut self, fmt: PositFmt, a: u64, b: u64) {
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => q.msub(a as u32, b as u32),
+            PauQuire::Q16(q) => q.msub(a as u32, b as u32),
+            PauQuire::Q32(q) => q.msub(a as u32, b as u32),
+            PauQuire::Q64(q) => q.msub(a, b),
+        }
+    }
+
+    /// `QROUND` at `fmt`.
+    pub fn round(&mut self, fmt: PositFmt) -> u64 {
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => q.round() as u64,
+            PauQuire::Q16(q) => q.round() as u64,
+            PauQuire::Q32(q) => q.round() as u64,
+            PauQuire::Q64(q) => q.round(),
+        }
+    }
+}
 
 /// Timing configuration (defaults = Genesys II CVA6 at 50 MHz).
 #[derive(Debug, Clone, Copy)]
@@ -84,8 +188,12 @@ pub struct Core {
     pub pc: u64,
     pub x: [u64; 32],
     pub f: [u64; 32],
-    pub p: [u32; 32],
-    pub quire: Quire32,
+    /// Posit register file. 64 bits wide since the multi-width extension
+    /// (the Big-PERCIVAL configuration); narrower formats use the low
+    /// bits, like the F registers hold both F and D values.
+    pub p: [u64; 32],
+    /// The PAU accumulator, tagged with its current posit width.
+    pub quire: PauQuire,
     pub mem: Memory,
     pub dcache: DCache,
     /// Pre-decoded text segment (PC 0 = index 0).
@@ -112,7 +220,7 @@ impl Core {
             x: [0; 32],
             f: [0; 32],
             p: [0; 32],
-            quire: Quire32::new(),
+            quire: PauQuire::new(PositFmt::P32),
             mem: Memory::new(cfg.mem_size),
             dcache: DCache::new(cfg.cache),
             program: Vec::new(),
@@ -224,7 +332,7 @@ impl Core {
         let eff = self.exec(&ins);
 
         // ── Write-back timing. ──────────────────────────────────────────
-        let lat = pi.latency as u64 + eff.mem_extra;
+        let lat = pi.latency_for(ins.fmt) + eff.mem_extra;
         self.set_ready(pi.rd, ins.rd, t + lat);
         // Non-pipelined units block until the result is produced (§4.1);
         // ALU/LSU/Branch/CSR accept one op per cycle (the LSU blocks for
@@ -506,6 +614,147 @@ mod tests {
         "#,
         );
         assert!(core.x[12] > core.x[10]);
+    }
+
+    #[test]
+    fn multiwidth_loads_stores_roundtrip() {
+        // plb/plh/plw/pld and psb/psh/psw/psd move 1/2/4/8-byte posit
+        // patterns through the D$ model without mangling bits.
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+        let prog = assemble(
+            r#"
+            li a0, 0x100
+            plb p0, 0(a0)
+            psb p0, 64(a0)
+            plh p1, 2(a0)
+            psh p1, 66(a0)
+            plw p2, 4(a0)
+            psw p2, 68(a0)
+            pld p3, 8(a0)
+            psd p3, 72(a0)
+            ecall
+        "#,
+        )
+        .unwrap();
+        core.load_program(&prog);
+        core.mem.write_u8(0x100, 0xA5);
+        core.mem.write_u16(0x102, 0xBEEF);
+        core.mem.write_u32(0x104, 0xDEAD_BEEF);
+        core.mem.write_u64(0x108, 0x0123_4567_89AB_CDEF);
+        core.run();
+        assert_eq!(core.p[0], 0xA5);
+        assert_eq!(core.p[1], 0xBEEF);
+        assert_eq!(core.p[2], 0xDEAD_BEEF);
+        assert_eq!(core.p[3], 0x0123_4567_89AB_CDEF);
+        assert_eq!(core.mem.read_u8(0x140), 0xA5);
+        assert_eq!(core.mem.read_u16(0x142), 0xBEEF);
+        assert_eq!(core.mem.read_u32(0x144), 0xDEAD_BEEF);
+        assert_eq!(core.mem.read_u64(0x148), 0x0123_4567_89AB_CDEF);
+    }
+
+    #[test]
+    fn posit16_quire_dot_product() {
+        // The Fig. 6 dot loop at 16 bits: [1,2,3]·[4,5,6] = 32.
+        use crate::posit::Posit16;
+        let a: Vec<u64> =
+            [1.0, 2.0, 3.0].iter().map(|v| Posit16::from_f64(*v).bits() as u64).collect();
+        let b: Vec<u64> =
+            [4.0, 5.0, 6.0].iter().map(|v| Posit16::from_f64(*v).bits() as u64).collect();
+        let prog = assemble(
+            r#"
+            li a0, 0x100
+            li a1, 0x200
+            li a2, 3
+            qclr.h
+        loop:
+            plh p0, 0(a0)
+            plh p1, 0(a1)
+            qmadd.h p0, p1
+            addi a0, a0, 2
+            addi a1, a1, 2
+            addi a2, a2, -1
+            bnez a2, loop
+            qround.h p2
+            psh p2, 0(a3)
+            ecall
+        "#,
+        )
+        .unwrap();
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+        core.load_program(&prog);
+        core.mem.write_posit_slice(0x100, 2, &a);
+        core.mem.write_posit_slice(0x200, 2, &b);
+        core.x[13] = 0x300;
+        core.run();
+        assert_eq!(Posit16::from_bits(core.mem.read_u16(0x300) as u32).to_f64(), 32.0);
+    }
+
+    #[test]
+    fn posit64_quire_dot_product() {
+        // The same loop at 64 bits through the 1024-bit PauQuire::Q64.
+        use crate::posit::Posit64;
+        let a: Vec<u64> = [1.5, -2.0, 3.25].iter().map(|v| Posit64::from_f64(*v).bits()).collect();
+        let b: Vec<u64> = [4.0, 0.5, -6.0].iter().map(|v| Posit64::from_f64(*v).bits()).collect();
+        let expect = 1.5 * 4.0 + -2.0 * 0.5 + 3.25 * -6.0;
+        let prog = assemble(
+            r#"
+            li a0, 0x100
+            li a1, 0x200
+            li a2, 3
+            qclr.d
+        loop:
+            pld p0, 0(a0)
+            pld p1, 0(a1)
+            qmadd.d p0, p1
+            addi a0, a0, 8
+            addi a1, a1, 8
+            addi a2, a2, -1
+            bnez a2, loop
+            qround.d p2
+            psd p2, 0(a3)
+            ecall
+        "#,
+        )
+        .unwrap();
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+        core.load_program(&prog);
+        core.mem.write_posit_slice(0x100, 8, &a);
+        core.mem.write_posit_slice(0x200, 8, &b);
+        core.x[13] = 0x300;
+        core.run();
+        assert!(matches!(core.quire, PauQuire::Q64(_)));
+        assert_eq!(Posit64::from_bits(core.mem.read_u64(0x300)).to_f64(), expect);
+    }
+
+    #[test]
+    fn quire_retags_on_width_switch() {
+        // Switching quire width re-purposes the accumulator: the stale
+        // 32-bit contents must not leak into the 8-bit round.
+        let core = run_src(
+            r#"
+            qclr.s
+            pcvt.s.w p0, zero
+            pcvt.b.w p1, zero
+            qclr.b
+            qround.b p3
+            ecall
+        "#,
+        );
+        assert!(matches!(core.quire, PauQuire::Q8(_)));
+        assert_eq!(core.p[3], 0, "cleared 8-bit quire rounds to zero");
+    }
+
+    #[test]
+    fn p64_quire_ops_are_slower_than_p32() {
+        // Width-scaled latencies: the same dependent qmadd chain takes
+        // longer at 64 bits (+2 cycles per quire op through the PAU).
+        let p32 = "qclr.s\n".to_string() + &"qmadd.s p0, p1\n".repeat(8) + "ecall";
+        let p64 = "qclr.d\n".to_string() + &"qmadd.d p0, p1\n".repeat(8) + "ecall";
+        let t32 = run_src(&p32).cycle;
+        let t64 = run_src(&p64).cycle;
+        assert!(t64 > t32, "p64 {t64} !> p32 {t32}");
+        // 8 qmadds × (3 + 2) = 40 cycles minimum through the PAU.
+        assert!(t64 >= 40, "cycle = {t64}");
     }
 
     #[test]

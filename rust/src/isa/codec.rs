@@ -5,7 +5,7 @@
 //! RTL — the encoder/decoder pair is the contract the paper's LLVM Xposit
 //! backend implements.
 
-use super::{info, Enc, Instr, Op, OP_TABLE, OPC_POSIT, POSIT_FMT};
+use super::{info, Enc, Instr, Op, PositFmt, OP_TABLE, OPC_POSIT};
 
 /// Encoding/decoding error.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -130,7 +130,7 @@ pub fn encode(ins: &Instr) -> Result<u32, CodecError> {
                 | 0b1101111
         }
         Enc::PositR { f5, .. } => {
-            (f5 << 27) | (POSIT_FMT << 25) | rs2w | rs1w | rdw | OPC_POSIT
+            (f5 << 27) | (ins.fmt.bits() << 25) | rs2w | rs1w | rdw | OPC_POSIT
         }
         Enc::Sys { imm12 } => (imm12 << 20) | 0b1110011,
         Enc::Csr { f3 } => {
@@ -217,6 +217,7 @@ pub fn decode(w: u32) -> Result<Instr, CodecError> {
                 _ => 0,
             },
             imm,
+            fmt: PositFmt::P32,
         });
     }
     Err(CodecError::Illegal(w))
@@ -224,21 +225,11 @@ pub fn decode(w: u32) -> Result<Instr, CodecError> {
 
 fn decode_posit(w: u32) -> Result<Instr, CodecError> {
     match f3(w) {
-        0b001 => Ok(Instr { op: Op::Plw, rd: rd(w), rs1: rs1(w), rs2: 0, rs3: 0, imm: sext(w >> 20, 12) }),
-        0b011 => Ok(Instr {
-            op: Op::Psw,
-            rd: 0,
-            rs1: rs1(w),
-            rs2: rs2(w),
-            rs3: 0,
-            imm: sext((f7(w) << 5) | (w >> 7 & 0x1F), 12),
-        }),
+        0b001 => Ok(Instr::i(Op::Plw, rd(w), rs1(w), sext(w >> 20, 12))),
+        0b011 => Ok(Instr::s(Op::Psw, rs1(w), rs2(w), sext((f7(w) << 5) | (w >> 7 & 0x1F), 12))),
         0b000 => {
             let f5 = w >> 27;
-            let fmt = w >> 25 & 0x3;
-            if fmt != POSIT_FMT {
-                return Err(CodecError::Illegal(w));
-            }
+            let fmt = PositFmt::from_bits(w >> 25);
             for e in OP_TABLE {
                 if let Enc::PositR { f5: ef5, rs2_zero, rs1_zero, rd_zero } = e.enc {
                     if ef5 == f5 {
@@ -256,6 +247,7 @@ fn decode_posit(w: u32) -> Result<Instr, CodecError> {
                             rs2: rs2(w),
                             rs3: 0,
                             imm: 0,
+                            fmt,
                         });
                     }
                 }
@@ -269,7 +261,7 @@ fn decode_posit(w: u32) -> Result<Instr, CodecError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::RegClass;
+    use crate::isa::{RegClass, OPC_POSIT_LS};
 
     /// Exhaustive encode→decode round-trip over every op with varied
     /// operand/immediate patterns.
@@ -294,6 +286,7 @@ mod tests {
                             Enc::R { .. } | Enc::R2 { .. } | Enc::R4 { .. } | Enc::PositR { .. } => 0,
                             _ => imm,
                         },
+                        fmt: PositFmt::P32,
                     };
                     let w = encode(&ins).unwrap_or_else(|err| panic!("{}: {err}", e.mnemonic));
                     let back = decode(w).unwrap_or_else(|err| panic!("{}: {err}", e.mnemonic));
@@ -361,10 +354,84 @@ mod tests {
         assert!(decode(0xFFFF_FFFF).is_err());
         // POSIT opcode with unsupported funct3.
         assert!(decode((0b111 << 12) | OPC_POSIT).is_err());
-        // POSIT comp with wrong fmt (01 instead of 10).
-        assert!(decode((0b00000 << 27) | (0b01 << 25) | OPC_POSIT).is_err());
-        // QCLR with a non-zero rd is illegal per Table 2.
+        // QCLR with a non-zero rd is illegal per Table 2, at every width.
         assert!(decode((0b01001 << 27) | (0b10 << 25) | (3 << 7) | OPC_POSIT).is_err());
+        assert!(decode((0b01001 << 27) | (0b01 << 25) | (3 << 7) | OPC_POSIT).is_err());
+        // POSIT-LS with a store funct3 used as a load shape is still a
+        // store; funct3 010/110 are unassigned on custom-1.
+        assert!(decode((0b010 << 12) | OPC_POSIT_LS).is_err());
+        assert!(decode((0b110 << 12) | OPC_POSIT_LS).is_err());
+    }
+
+    #[test]
+    fn fmt_field_decodes_every_width() {
+        // Since the multi-width extension the `fmt` field (bits 26:25) is
+        // total: fmt 01 is a 16-bit padd, not an illegal instruction.
+        let w = (0b00000 << 27) | (0b01 << 25) | (2 << 20) | (1 << 15) | (3 << 7) | OPC_POSIT;
+        let ins = decode(w).unwrap();
+        assert_eq!(ins.op, Op::PaddS);
+        assert_eq!(ins.fmt, PositFmt::P16);
+        assert_eq!(encode(&ins).unwrap(), w);
+    }
+
+    /// Every Xposit computational op × every `fmt` encodes → decodes back
+    /// identically (the multi-width tentpole's codec contract).
+    #[test]
+    fn posit_roundtrip_every_op_every_fmt() {
+        for e in OP_TABLE {
+            let Enc::PositR { rs2_zero, rs1_zero, rd_zero, .. } = e.enc else {
+                continue;
+            };
+            for fmt in PositFmt::ALL {
+                for (r1, r2, rdv) in [(1u8, 2u8, 3u8), (31, 30, 29), (0, 0, 0)] {
+                    let ins = Instr {
+                        op: e.op,
+                        rd: if rd_zero || e.rd == RegClass::None { 0 } else { rdv },
+                        rs1: if rs1_zero || e.rs1 == RegClass::None { 0 } else { r1 },
+                        rs2: if rs2_zero || e.rs2 == RegClass::None { 0 } else { r2 },
+                        rs3: 0,
+                        imm: 0,
+                        fmt,
+                    };
+                    let w = encode(&ins).unwrap();
+                    assert_eq!((w >> 25) & 0b11, fmt.bits(), "{} {fmt:?}", e.mnemonic);
+                    let back = decode(w).unwrap();
+                    assert_eq!(back, ins, "{} {fmt:?} word={w:#010x}", e.mnemonic);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiwidth_loadstore_golden_words() {
+        // plb p5, 8(x10): imm | rs1 | 000 | rd | custom-1.
+        let w = encode(&Instr::i(Op::Plb, 5, 10, 8)).unwrap();
+        assert_eq!(w, (8 << 20) | (10 << 15) | (5 << 7) | OPC_POSIT_LS);
+        // pld p5, 16(x10) uses the integer `ld` width code 011.
+        let w = encode(&Instr::i(Op::Pld, 5, 10, 16)).unwrap();
+        assert_eq!(
+            w,
+            (16 << 20) | (10 << 15) | (0b011 << 12) | (5 << 7) | OPC_POSIT_LS
+        );
+        // psh p5, -4(x10): S-type split of -4 = 0xFFC, funct3 101.
+        let w = encode(&Instr::s(Op::Psh, 10, 5, -4)).unwrap();
+        assert_eq!(
+            w,
+            (0x7F << 25)
+                | (5 << 20)
+                | (10 << 15)
+                | (0b101 << 12)
+                | (0x1C << 7)
+                | OPC_POSIT_LS
+        );
+        for op in [Op::Plb, Op::Plh, Op::Pld] {
+            let ins = Instr::i(op, 7, 3, 12);
+            assert_eq!(decode(encode(&ins).unwrap()).unwrap(), ins);
+        }
+        for op in [Op::Psb, Op::Psh, Op::Psd] {
+            let ins = Instr::s(op, 3, 7, -8);
+            assert_eq!(decode(encode(&ins).unwrap()).unwrap(), ins);
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Disassembler: [`Instr`] → assembly text (the inverse of [`super::asm`]).
 
-use super::{info, Enc, Instr, Op, RegClass};
+use super::{fmt_mnemonic, info, Enc, Instr, Op, RegClass};
 
 /// ABI names for the integer register file.
 pub const X_NAMES: [&str; 32] = [
@@ -47,7 +47,7 @@ pub fn disasm(ins: &Instr) -> String {
         Enc::I { .. } => match ins.op {
             // Loads (and jalr) use the base+offset form.
             Op::Lb | Op::Lh | Op::Lw | Op::Ld | Op::Lbu | Op::Lhu | Op::Lwu | Op::Flw
-            | Op::Fld | Op::Plw => {
+            | Op::Fld | Op::Plw | Op::Plb | Op::Plh | Op::Pld => {
                 format!("{mn} {}, {}({})", rd(), ins.imm, rs1())
             }
             Op::Jalr => format!("{mn} {}, {}({})", rd(), ins.imm, rs1()),
@@ -61,6 +61,8 @@ pub fn disasm(ins: &Instr) -> String {
         Enc::U { .. } => format!("{mn} {}, {:#x}", rd(), ins.imm),
         Enc::J => format!("{mn} {}, {}", rd(), ins.imm),
         Enc::PositR { rs2_zero, rs1_zero, rd_zero, .. } => {
+            // The mnemonic carries the posit width (padd.b/h/s/d).
+            let mn = fmt_mnemonic(mn, ins.fmt);
             let mut parts: Vec<String> = Vec::new();
             if !rd_zero && inf.rd != RegClass::None {
                 parts.push(rd());
@@ -72,7 +74,7 @@ pub fn disasm(ins: &Instr) -> String {
                 parts.push(rs2());
             }
             if parts.is_empty() {
-                mn.to_string()
+                mn
             } else {
                 format!("{mn} {}", parts.join(", "))
             }
@@ -100,5 +102,19 @@ mod tests {
         assert_eq!(disasm(&Instr::r(Op::QroundS, 7, 0, 0)), "qround.s p7");
         assert_eq!(disasm(&Instr::r4(Op::FmaddS, 0, 1, 2, 0)), "fmadd.s ft0, ft1, ft2, ft0");
         assert_eq!(disasm(&Instr::r(Op::Ecall, 0, 0, 0)), "ecall");
+    }
+
+    #[test]
+    fn multiwidth_formats() {
+        use crate::isa::PositFmt;
+        let padd8 = Instr::r(Op::PaddS, 1, 2, 3).with_fmt(PositFmt::P8);
+        assert_eq!(disasm(&padd8), "padd.b p1, p2, p3");
+        let qmadd16 = Instr::s(Op::QmaddS, 4, 5, 0).with_fmt(PositFmt::P16);
+        assert_eq!(disasm(&qmadd16), "qmadd.h p4, p5");
+        assert_eq!(disasm(&Instr::r(Op::QclrS, 0, 0, 0).with_fmt(PositFmt::P64)), "qclr.d");
+        assert_eq!(disasm(&Instr::r(Op::PmvWX, 2, 9, 0).with_fmt(PositFmt::P8)), "pmv.b.x p2, s1");
+        assert_eq!(disasm(&Instr::i(Op::Plb, 3, 10, 0)), "plb p3, 0(a0)");
+        assert_eq!(disasm(&Instr::i(Op::Pld, 3, 10, 8)), "pld p3, 8(a0)");
+        assert_eq!(disasm(&Instr::s(Op::Psh, 10, 3, 2)), "psh p3, 2(a0)");
     }
 }

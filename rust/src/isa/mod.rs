@@ -3,10 +3,14 @@
 //!
 //! Xposit occupies major opcode `0001011` (*custom-0*, named POSIT in the
 //! paper's Table 1). Computational instructions put a 5-bit `funct5` in
-//! bits 31:27 with `fmt = 10` in bits 26:25 (Table 2 — the running text
-//! says `01`, the table and Fig. 4 say `10`; we follow the table) and
-//! `funct3 = 000`; posit loads/stores use `funct3 = 001/011` with the
-//! F-extension's base+offset addressing.
+//! bits 31:27 with a 2-bit `fmt` in bits 26:25 and `funct3 = 000`; posit
+//! loads/stores use `funct3 = 001/011` with the F-extension's base+offset
+//! addressing. Table 2 fixes `fmt = 10` (32-bit posits — the running text
+//! says `01`, the table and Fig. 4 say `10`; we follow the table); the
+//! multi-width extension makes the field total ([`PositFmt`]: P8 = `00`,
+//! P16 = `01`, P32 = `10`, P64 = `11`, following PERI and Big-PERCIVAL)
+//! and adds 8/16/64-bit posit loads/stores on *custom-1*
+//! ([`OPC_POSIT_LS`]).
 //!
 //! Everything is table-driven: [`Op`] is the mnemonic-level opcode,
 //! [`OpInfo`] carries the encoding recipe, operand register classes, the
@@ -21,8 +25,102 @@ use std::fmt;
 
 /// POSIT major opcode (custom-0).
 pub const OPC_POSIT: u32 = 0b0001011;
-/// Posit `fmt` field for 32-bit posits (Table 2 / Fig. 4).
-pub const POSIT_FMT: u32 = 0b10;
+/// POSIT-LS major opcode (custom-1): the multi-width posit load/store
+/// extension. Table 2 only defines the 32-bit `plw`/`psw` on custom-0;
+/// the 8/16/64-bit widths (PERI-style multi-width support) live here so
+/// the Table 2 encodings stay bit-exact.
+pub const OPC_POSIT_LS: u32 = 0b0101011;
+
+/// Posit width tag carried in the Xposit `fmt` field (bits 26:25) of every
+/// computational instruction: P8 = `00`, P16 = `01`, P32 = `10`, P64 =
+/// `11`. Table 2 defines only `10` (the paper's 32-bit core); the other
+/// codes follow PERI's multi-width numbering and Big-PERCIVAL's 64-bit
+/// configuration. The same enum tags coordinator jobs ([`crate::coordinator::Format`]
+/// re-exports it), so one `Format` flows from the job queue down to the
+/// instruction encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PositFmt {
+    P8,
+    P16,
+    P32,
+    P64,
+}
+
+impl PositFmt {
+    pub const ALL: [PositFmt; 4] = [PositFmt::P8, PositFmt::P16, PositFmt::P32, PositFmt::P64];
+
+    /// The 2-bit `fmt` field encoding (bits 26:25).
+    #[inline]
+    pub fn bits(self) -> u32 {
+        match self {
+            PositFmt::P8 => 0b00,
+            PositFmt::P16 => 0b01,
+            PositFmt::P32 => 0b10,
+            PositFmt::P64 => 0b11,
+        }
+    }
+
+    /// Decode the 2-bit `fmt` field (total: every code is a width).
+    #[inline]
+    pub fn from_bits(bits: u32) -> Self {
+        match bits & 0b11 {
+            0b00 => PositFmt::P8,
+            0b01 => PositFmt::P16,
+            0b10 => PositFmt::P32,
+            _ => PositFmt::P64,
+        }
+    }
+
+    /// Format width in bits.
+    #[inline]
+    pub fn width(self) -> u32 {
+        match self {
+            PositFmt::P8 => 8,
+            PositFmt::P16 => 16,
+            PositFmt::P32 => 32,
+            PositFmt::P64 => 64,
+        }
+    }
+
+    /// Element size in data memory.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        self.width() as usize / 8
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PositFmt::P8 => "Posit8",
+            PositFmt::P16 => "Posit16",
+            PositFmt::P32 => "Posit32",
+            PositFmt::P64 => "Posit64",
+        }
+    }
+}
+
+/// Width-variant mnemonic of an Xposit computational instruction: the
+/// posit-width component of the base (P32) mnemonic — the `s` in
+/// `padd.s`/`pcvt.s.w`, the `w` in `pmv.x.w`/`pmv.w.x` — is replaced by
+/// `b`/`h`/`d` for 8/16/64-bit posits, mirroring the F/D-extension naming
+/// (`padd.b`, `qmadd.h`, `pcvt.w.d`, `pmv.b.x`, …).
+pub fn fmt_mnemonic(base: &str, fmt: PositFmt) -> String {
+    if fmt == PositFmt::P32 {
+        return base.to_string();
+    }
+    let letter = match fmt {
+        PositFmt::P8 => "b",
+        PositFmt::P16 => "h",
+        PositFmt::P64 => "d",
+        PositFmt::P32 => unreachable!(),
+    };
+    let mut comps: Vec<&str> = base.split('.').collect();
+    if let Some(i) = comps.iter().position(|c| *c == "s") {
+        comps[i] = letter;
+    } else if let Some(i) = comps.iter().position(|c| *c == "w") {
+        comps[i] = letter;
+    }
+    comps.join(".")
+}
 
 /// Register file a register operand belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,9 +203,35 @@ pub struct OpInfo {
     pub rs3: RegClass,
 }
 
+impl OpInfo {
+    /// Width-scaled result latency in cycles. The static [`OpInfo::latency`]
+    /// field is the paper's 32-bit baseline; PAU latencies grow with the
+    /// posit width, following Big-PERCIVAL's observation that the 16·N-bit
+    /// quire dominates the datapath as widths scale: 64-bit posits pay one
+    /// extra cycle through the widened PAU arithmetic path and a second on
+    /// quire ops for the 1024-bit accumulator walk. Narrow formats keep the
+    /// paper's latencies (a multi-width PAU shares the 32-bit critical
+    /// path).
+    #[inline]
+    pub fn latency_for(&self, fmt: PositFmt) -> u64 {
+        let base = self.latency as u64;
+        if self.unit != Unit::Pau || fmt != PositFmt::P64 {
+            return base;
+        }
+        let quire = matches!(
+            self.op,
+            Op::QmaddS | Op::QmsubS | Op::QclrS | Op::QnegS | Op::QroundS
+        ) as u64;
+        base + 1 + quire
+    }
+}
+
 /// A decoded instruction: opcode + operand fields. `imm` is the
 /// sign-extended immediate where applicable (shift amount for shifts,
-/// CSR number for CSR ops).
+/// CSR number for CSR ops). `fmt` is the posit width of an Xposit
+/// computational instruction (bits 26:25 of its encoding); it is fixed at
+/// `P32` for everything else, including the posit loads/stores, whose
+/// width is implied by the opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Instr {
     pub op: Op,
@@ -116,6 +240,7 @@ pub struct Instr {
     pub rs2: u8,
     pub rs3: u8,
     pub imm: i64,
+    pub fmt: PositFmt,
 }
 
 impl Instr {
@@ -125,22 +250,28 @@ impl Instr {
 
     /// Build a register-register instruction.
     pub fn r(op: Op, rd: u8, rs1: u8, rs2: u8) -> Self {
-        Self { op, rd, rs1, rs2, rs3: 0, imm: 0 }
+        Self { op, rd, rs1, rs2, rs3: 0, imm: 0, fmt: PositFmt::P32 }
     }
 
     /// Build an immediate-type instruction.
     pub fn i(op: Op, rd: u8, rs1: u8, imm: i64) -> Self {
-        Self { op, rd, rs1, rs2: 0, rs3: 0, imm }
+        Self { op, rd, rs1, rs2: 0, rs3: 0, imm, fmt: PositFmt::P32 }
     }
 
     /// Build a store / branch (two sources + immediate).
     pub fn s(op: Op, rs1: u8, rs2: u8, imm: i64) -> Self {
-        Self { op, rd: 0, rs1, rs2, rs3: 0, imm }
+        Self { op, rd: 0, rs1, rs2, rs3: 0, imm, fmt: PositFmt::P32 }
     }
 
     /// Build an R4 fused op.
     pub fn r4(op: Op, rd: u8, rs1: u8, rs2: u8, rs3: u8) -> Self {
-        Self { op, rd, rs1, rs2, rs3, imm: 0 }
+        Self { op, rd, rs1, rs2, rs3, imm: 0, fmt: PositFmt::P32 }
+    }
+
+    /// Re-tag with a posit width (Xposit computational instructions).
+    pub fn with_fmt(mut self, fmt: PositFmt) -> Self {
+        self.fmt = fmt;
+        self
     }
 }
 
@@ -325,6 +456,15 @@ ops! {
     // ─── Xposit (paper Table 2, complete) ────────────────────────────────
     Plw => "plw", Enc::I { opcode: OPC_POSIT, f3: 0b001 }, Lsu, 3, (P, X, None);
     Psw => "psw", Enc::S { opcode: OPC_POSIT, f3: 0b011 }, Lsu, 1, (None, X, P);
+    // Multi-width posit loads/stores (custom-1; beyond Table 2 — see
+    // OPC_POSIT_LS). funct3 mirrors the integer load width codes for the
+    // loads and sets bit 2 for the stores so both live on one opcode.
+    Plb => "plb", Enc::I { opcode: OPC_POSIT_LS, f3: 0b000 }, Lsu, 3, (P, X, None);
+    Plh => "plh", Enc::I { opcode: OPC_POSIT_LS, f3: 0b001 }, Lsu, 3, (P, X, None);
+    Pld => "pld", Enc::I { opcode: OPC_POSIT_LS, f3: 0b011 }, Lsu, 3, (P, X, None);
+    Psb => "psb", Enc::S { opcode: OPC_POSIT_LS, f3: 0b100 }, Lsu, 1, (None, X, P);
+    Psh => "psh", Enc::S { opcode: OPC_POSIT_LS, f3: 0b101 }, Lsu, 1, (None, X, P);
+    Psd => "psd", Enc::S { opcode: OPC_POSIT_LS, f3: 0b111 }, Lsu, 1, (None, X, P);
     PaddS => "padd.s", Enc::PositR { f5: 0b00000, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 3, (P, P, P);
     PsubS => "psub.s", Enc::PositR { f5: 0b00001, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 3, (P, P, P);
     PmulS => "pmul.s", Enc::PositR { f5: 0b00010, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 2, (P, P, P);
@@ -416,6 +556,65 @@ mod tests {
         assert_eq!(info(Op::PltS).unit, Unit::Alu);
         assert_eq!(info(Op::Plw).unit, Unit::Lsu);
         assert_eq!(info(Op::Psw).unit, Unit::Lsu);
+        assert_eq!(info(Op::Pld).unit, Unit::Lsu);
+        assert_eq!(info(Op::Psb).unit, Unit::Lsu);
         assert_eq!(info(Op::FmaddS).unit, Unit::Fpu);
+    }
+
+    #[test]
+    fn fmt_field_encoding_table() {
+        assert_eq!(PositFmt::P8.bits(), 0b00);
+        assert_eq!(PositFmt::P16.bits(), 0b01);
+        assert_eq!(PositFmt::P32.bits(), 0b10);
+        assert_eq!(PositFmt::P64.bits(), 0b11);
+        for fmt in PositFmt::ALL {
+            assert_eq!(PositFmt::from_bits(fmt.bits()), fmt);
+            assert_eq!(fmt.width() as usize, fmt.bytes() * 8);
+        }
+    }
+
+    #[test]
+    fn width_scaled_latencies() {
+        // Narrow formats keep the paper's P32 latencies…
+        for fmt in [PositFmt::P8, PositFmt::P16, PositFmt::P32] {
+            for e in OP_TABLE {
+                assert_eq!(e.latency_for(fmt), e.latency as u64, "{}", e.mnemonic);
+            }
+        }
+        // …while Posit64 pays +1 through the PAU and +2 on quire ops
+        // (the Big-PERCIVAL 1024-bit accumulator).
+        let lat = |op: Op, fmt| info(op).latency_for(fmt);
+        assert_eq!(lat(Op::PaddS, PositFmt::P64), lat(Op::PaddS, PositFmt::P32) + 1);
+        assert_eq!(lat(Op::QmaddS, PositFmt::P64), lat(Op::QmaddS, PositFmt::P32) + 2);
+        assert_eq!(lat(Op::QroundS, PositFmt::P64), lat(Op::QroundS, PositFmt::P32) + 2);
+        // ALU-routed posit ops and non-posit units never scale.
+        assert_eq!(lat(Op::PminS, PositFmt::P64), 1);
+        assert_eq!(lat(Op::FmaddD, PositFmt::P64), lat(Op::FmaddD, PositFmt::P32));
+    }
+
+    #[test]
+    fn fmt_mnemonics_are_unique_and_follow_fd_naming() {
+        assert_eq!(fmt_mnemonic("padd.s", PositFmt::P8), "padd.b");
+        assert_eq!(fmt_mnemonic("qmadd.s", PositFmt::P16), "qmadd.h");
+        assert_eq!(fmt_mnemonic("qclr.s", PositFmt::P64), "qclr.d");
+        // The int-width component is untouched; the posit one moves.
+        assert_eq!(fmt_mnemonic("pcvt.w.s", PositFmt::P8), "pcvt.w.b");
+        assert_eq!(fmt_mnemonic("pcvt.s.wu", PositFmt::P64), "pcvt.d.wu");
+        assert_eq!(fmt_mnemonic("pmv.x.w", PositFmt::P16), "pmv.x.h");
+        assert_eq!(fmt_mnemonic("pmv.w.x", PositFmt::P8), "pmv.b.x");
+        assert_eq!(fmt_mnemonic("padd.s", PositFmt::P32), "padd.s");
+        // No two (op, fmt) pairs may collide in mnemonic space.
+        let mut seen = std::collections::HashSet::new();
+        for e in OP_TABLE {
+            if let Enc::PositR { .. } = e.enc {
+                for fmt in PositFmt::ALL {
+                    assert!(
+                        seen.insert(fmt_mnemonic(e.mnemonic, fmt)),
+                        "duplicate width mnemonic for {} × {fmt:?}",
+                        e.mnemonic
+                    );
+                }
+            }
+        }
     }
 }

@@ -4,12 +4,14 @@
 //! Quire Capability* (Mallasén et al., IEEE TETC 2022) as a three-layer
 //! Rust + JAX + Pallas stack:
 //!
-//! - [`posit`] — bit-exact Posit⟨8/16/32, 2⟩ arithmetic with 16n-bit quires
-//!   (the PAU's numeric behaviour).
-//! - [`isa`] — the Xposit RISC-V extension (paper Table 2) plus the RV64
-//!   subset the benchmarks need: encodings, assembler, disassembler.
+//! - [`posit`] — bit-exact Posit⟨8/16/32/64, 2⟩ arithmetic with 16n-bit
+//!   quires (the PAU's numeric behaviour).
+//! - [`isa`] — the Xposit RISC-V extension (paper Table 2, made
+//!   format-generic over all four widths via the `fmt` field) plus the
+//!   RV64 subset the benchmarks need: encodings, assembler, disassembler.
 //! - [`core`] — a CVA6-like in-order core timing simulator with the paper's
-//!   per-unit latencies (PAU, FPU, ALU, LSU) and scoreboard.
+//!   per-unit latencies (PAU, FPU, ALU, LSU, width-scaled for the
+//!   multi-width PAU/quire) and scoreboard.
 //! - [`synth`] — structural FPGA/ASIC cost model regenerating Tables 3–5.
 //! - [`bench`] — workload generators and harnesses for Tables 6–8 / Fig. 7.
 //! - [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas posit

@@ -14,7 +14,7 @@
 //! Posit64 row: at 64 bits the posit beats the f64 golden's own format.
 
 use super::unpacked::{
-    decode, decode_n, encode_norm_n, mask, mask_n, nar, nar_n, negate, negate_n, Decoded, HID_W,
+    decode_n, encode_norm_n, mask, mask_n, nar, nar_n, negate, negate_n, Decoded, HID_W,
     TOP,
 };
 
@@ -131,6 +131,22 @@ pub fn to_u64_n(n: u32, bits: u64) -> u64 {
     }
 }
 
+/// Posit → i32 with saturation, NaR → i32::MIN (runtime width).
+pub fn to_i32_n(n: u32, bits: u64) -> i32 {
+    match decode_n(n, bits) {
+        Decoded::NaR => i32::MIN,
+        _ => to_i64_n(n, bits).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+    }
+}
+
+/// Posit → u32 with saturation, NaR → u32::MAX (runtime width).
+pub fn to_u32_n(n: u32, bits: u64) -> u32 {
+    match decode_n(n, bits) {
+        Decoded::NaR => u32::MAX,
+        _ => to_u64_n(n, bits).min(u32::MAX as u64) as u32,
+    }
+}
+
 /// Signed 64-bit integer → posit (RNE).
 pub fn from_i64_n(n: u32, x: i64) -> u64 {
     if x == 0 {
@@ -221,17 +237,11 @@ pub fn to_u64<const N: u32>(bits: u32) -> u64 {
 
 /// Posit → i32 / u32 with saturation.
 pub fn to_i32<const N: u32>(bits: u32) -> i32 {
-    match decode::<N>(bits) {
-        Decoded::NaR => i32::MIN,
-        _ => to_i64::<N>(bits).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
-    }
+    to_i32_n(N, bits as u64)
 }
 
 pub fn to_u32<const N: u32>(bits: u32) -> u32 {
-    match decode::<N>(bits) {
-        Decoded::NaR => u32::MAX,
-        _ => to_u64::<N>(bits).min(u32::MAX as u64) as u32,
-    }
+    to_u32_n(N, bits as u64)
 }
 
 /// Signed 64-bit integer → posit (RNE; `N ≤ 32`).

@@ -65,23 +65,42 @@ pub fn cmp_signed<const N: u32>(a: u32, b: u32) -> Ordering {
     unpacked::to_signed::<N>(a).cmp(&unpacked::to_signed::<N>(b))
 }
 
+/// Runtime-width [`cmp_signed`] (8 ≤ n ≤ 64) — the multi-width core
+/// simulator's ALU compare path.
+#[inline]
+pub fn cmp_signed_n(n: u32, a: u64, b: u64) -> Ordering {
+    unpacked::to_signed_n(n, a).cmp(&unpacked::to_signed_n(n, b))
+}
+
 /// `PMIN.S` (ALU): integer min on patterns; NaR is smallest.
 #[inline]
 pub fn min_bits<const N: u32>(a: u32, b: u32) -> u32 {
-    if cmp_signed::<N>(a, b) == Ordering::Greater {
-        b & unpacked::mask::<N>()
-    } else {
-        a & unpacked::mask::<N>()
-    }
+    min_bits_n(N, a as u64, b as u64) as u32
 }
 
 /// `PMAX.S` (ALU): integer max on patterns.
 #[inline]
 pub fn max_bits<const N: u32>(a: u32, b: u32) -> u32 {
-    if cmp_signed::<N>(a, b) == Ordering::Less {
-        b & unpacked::mask::<N>()
+    max_bits_n(N, a as u64, b as u64) as u32
+}
+
+/// Runtime-width [`min_bits`].
+#[inline]
+pub fn min_bits_n(n: u32, a: u64, b: u64) -> u64 {
+    if cmp_signed_n(n, a, b) == Ordering::Greater {
+        b & unpacked::mask_n(n)
     } else {
-        a & unpacked::mask::<N>()
+        a & unpacked::mask_n(n)
+    }
+}
+
+/// Runtime-width [`max_bits`].
+#[inline]
+pub fn max_bits_n(n: u32, a: u64, b: u64) -> u64 {
+    if cmp_signed_n(n, a, b) == Ordering::Less {
+        b & unpacked::mask_n(n)
+    } else {
+        a & unpacked::mask_n(n)
     }
 }
 
@@ -91,31 +110,49 @@ pub fn max_bits<const N: u32>(a: u32, b: u32) -> u32 {
 /// negates, exactly like FSGNJ idioms).
 #[inline]
 pub fn sgnj<const N: u32>(a: u32, b: u32) -> u32 {
-    apply_sign::<N>(a, b >> (N - 1) & 1 == 1)
+    sgnj_n(N, a as u64, b as u64) as u32
 }
 
 /// `PSGNJN.S` — sign-inject negated.
 #[inline]
 pub fn sgnjn<const N: u32>(a: u32, b: u32) -> u32 {
-    apply_sign::<N>(a, b >> (N - 1) & 1 == 0)
+    sgnjn_n(N, a as u64, b as u64) as u32
 }
 
 /// `PSGNJX.S` — sign-inject xor.
 #[inline]
 pub fn sgnjx<const N: u32>(a: u32, b: u32) -> u32 {
-    let sa = a >> (N - 1) & 1 == 1;
-    let sb = b >> (N - 1) & 1 == 1;
-    apply_sign::<N>(a, sa ^ sb)
+    sgnjx_n(N, a as u64, b as u64) as u32
+}
+
+/// Runtime-width [`sgnj`].
+#[inline]
+pub fn sgnj_n(n: u32, a: u64, b: u64) -> u64 {
+    apply_sign_n(n, a, b >> (n - 1) & 1 == 1)
+}
+
+/// Runtime-width [`sgnjn`].
+#[inline]
+pub fn sgnjn_n(n: u32, a: u64, b: u64) -> u64 {
+    apply_sign_n(n, a, b >> (n - 1) & 1 == 0)
+}
+
+/// Runtime-width [`sgnjx`].
+#[inline]
+pub fn sgnjx_n(n: u32, a: u64, b: u64) -> u64 {
+    let sa = a >> (n - 1) & 1 == 1;
+    let sb = b >> (n - 1) & 1 == 1;
+    apply_sign_n(n, a, sa ^ sb)
 }
 
 /// Give `a` the requested sign via posit negation (value-correct, unlike a
 /// raw sign-bit overwrite, which is not a posit negation in two's
 /// complement — see DESIGN.md; zero and NaR are unaffected).
 #[inline]
-fn apply_sign<const N: u32>(a: u32, negative: bool) -> u32 {
-    let abs = convert::abs::<N>(a);
+fn apply_sign_n(n: u32, a: u64, negative: bool) -> u64 {
+    let abs = convert::abs_n(n, a);
     if negative {
-        unpacked::negate::<N>(abs)
+        unpacked::negate_n(n, abs)
     } else {
         abs
     }

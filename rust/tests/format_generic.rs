@@ -228,3 +228,28 @@ fn width_resize_chain_is_exact_widening() {
         assert_eq!(resize_n(64, 32, w64), w32, "{bits:#x}");
     }
 }
+
+/// Sim-vs-Native bit-exactness pin for the multi-width Sim backend: a
+/// small P16 and P64 quire GEMM must come back bit-identical from the
+/// cycle-accurate core model and the native kernel drivers, with the Sim
+/// route reporting simulated target seconds.
+#[test]
+fn sim_backend_bit_exact_p16_p64_quire_gemm() {
+    use percival::coordinator::{Backend, Coordinator, Format, Job};
+    use percival::posit::convert::from_f64_n;
+    let mut rng = Rng::new(0x516D);
+    let co = Coordinator::new(2, None);
+    let n = 6;
+    for fmt in [Format::P16, Format::P64] {
+        let w = fmt.width();
+        let a: Vec<u64> = (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-3.0, 3.0))).collect();
+        let b: Vec<u64> = (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-3.0, 3.0))).collect();
+        let job = Job::Gemm { fmt, n, a, b, quire: true };
+        let results = co
+            .cross_check(job, &[Backend::Native, Backend::Sim])
+            .unwrap_or_else(|e| panic!("{fmt:?}: {e}"));
+        assert_eq!(results.len(), 2);
+        assert!(results[1].sim_seconds.unwrap() > 0.0, "{fmt:?}");
+    }
+    co.shutdown();
+}

@@ -29,6 +29,7 @@ fn every_variant_simulates_and_matches_native() {
             GemmVariant::F64Unfused => NativeKind::F64Unfused,
             GemmVariant::P32Quire => NativeKind::P32Quire,
             GemmVariant::P32NoQuire => NativeKind::P32NoQuire,
+            _ => unreachable!("no Table-6 native kind for {v:?}"),
         };
         let native = gemm_native(kind, n, &a, &b);
         assert_eq!(sim.result, native, "{v:?}");

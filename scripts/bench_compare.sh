@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Perf-regression gate over BENCH_posit_kernels.json (see ROADMAP.md).
+#
+# Compares the freshly generated bench JSON against a baseline and fails
+# (exit 1) when the headline row's ns_per_op regressed by more than the
+# threshold. A missing baseline — or a baseline without the row — passes
+# trivially, so the gate can be wired into CI (non-blocking) before any
+# baseline numbers land in the repo.
+#
+# Usage: bench_compare.sh [fresh.json] [baseline.json] [bench-row] [threshold-%]
+set -euo pipefail
+
+fresh="${1:-BENCH_posit_kernels.json}"
+baseline="${2:-}"
+row="${3:-gemm256_p32_quire_kernel}"
+threshold="${4:-25}"
+
+if [ ! -f "$fresh" ]; then
+    echo "bench_compare: fresh bench file '$fresh' not found" >&2
+    exit 1
+fi
+if [ -z "$baseline" ] || [ ! -f "$baseline" ]; then
+    echo "bench_compare: no baseline ('${baseline:-<unset>}') — skipping gate (PASS)"
+    exit 0
+fi
+
+# Rows are one JSON object per line: {"bench": "...", ..., "ns_per_op": X}.
+# The `|| true` keeps a missing row from tripping errexit/pipefail — the
+# callers below handle the empty-string case explicitly.
+ns_per_op() {
+    { grep -o "{\"bench\": \"$2\"[^}]*}" "$1" || true; } \
+        | sed -n 's/.*"ns_per_op": *\([0-9.eE+-]*\).*/\1/p' \
+        | head -n 1
+}
+
+new=$(ns_per_op "$fresh" "$row")
+old=$(ns_per_op "$baseline" "$row")
+
+if [ -z "$old" ]; then
+    echo "bench_compare: baseline has no '$row' row — skipping gate (PASS)"
+    exit 0
+fi
+if [ -z "$new" ]; then
+    echo "bench_compare: fresh run is missing the '$row' row" >&2
+    exit 1
+fi
+
+echo "bench_compare: $row ns_per_op baseline=$old fresh=$new (threshold +$threshold%)"
+awk -v old="$old" -v new="$new" -v pct="$threshold" 'BEGIN {
+    limit = old * (1 + pct / 100.0);
+    if (new > limit) {
+        printf("bench_compare: FAIL — %.3f ns/op exceeds %.3f (baseline %.3f +%s%%)\n",
+               new, limit, old, pct);
+        exit 1;
+    }
+    printf("bench_compare: PASS — %.3f ns/op within %.3f (baseline %.3f +%s%%)\n",
+           new, limit, old, pct);
+}'
