@@ -1,8 +1,14 @@
 //! Bench: regenerate paper Table 7 (GEMM timing on the simulated core) and
 //! report host-side simulation throughput.
 //!
-//! Sizes 16–64 by default (CI-fast); set `BENCH_FULL=1` for the paper's
-//! full 16–256 sweep. Host-side timings are merged into
+//! Sizes 16–64 by default for the IEEE sweep and 16–128 for the posit
+//! rows (CI-fast); set `BENCH_FULL=1` for the paper's full 16–256 sweep.
+//! Every posit row at n ≤ 64 is emitted twice: once on the superblock
+//! engine (`gemm_sim_*`) and once on the per-instruction oracle
+//! (`gemm_sim_*_ref`), with the host-time ratio recorded as `speedup_x`
+//! on the superblock row and the two engines hard-asserted stats- and
+//! bit-identical. The `gemm_sim_p32_quire_n64` row is the superblock
+//! PR's ≥3× acceptance gate. Host-side timings are merged into
 //! `BENCH_posit_kernels.json` alongside the native-kernel rows from
 //! `posit_ops` so the perf trajectory is tracked across PRs.
 
@@ -10,18 +16,35 @@ use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
 use percival::bench::harness::{fmt_time, write_bench_json, JsonRow};
 use percival::bench::racer::RacerModel;
 use percival::bench::tables;
-use percival::core::CoreConfig;
+use percival::core::{CoreConfig, Engine};
 use percival::testing::Rng;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
-    let sizes: &[usize] = if full { &tables::SIZES } else { &[16, 32, 64] };
+    let sizes: &[usize] = if full { &tables::SIZES } else { &tables::QUICK_SIZES };
+    let posit_sizes: &[usize] =
+        if full { &tables::SIZES } else { &tables::QUICK_POSIT_SIZES };
     let cfg = CoreConfig::default();
+    let oracle_cfg = CoreConfig { engine: Engine::Oracle, ..CoreConfig::default() };
     let mut rng = Rng::new(tables::SEED);
     let mut rows: Vec<JsonRow> = Vec::new();
 
     println!("Table 7 — GEMM timing (simulated @ 50 MHz) + host sim throughput");
-    println!("{:<24} {:>8} {:>14} {:>14} {:>12}", "variant", "n", "sim time", "host time", "Msim-instr/s");
+    println!(
+        "{:<28} {:>8} {:>14} {:>14} {:>12}",
+        "variant", "n", "sim time", "host time", "Msim-instr/s"
+    );
+    let report = |label: &str, n: usize, sim_s: f64, host: f64, instret: u64| {
+        println!(
+            "{:<28} {:>8} {:>14} {:>14} {:>12.1}",
+            label,
+            n,
+            fmt_time(sim_s),
+            fmt_time(host),
+            // Two runs (warm + timed) happened; count the timed one.
+            instret as f64 / host / 1e6
+        );
+    };
     for v in GemmVariant::ALL {
         for &n in sizes {
             let a = gen_matrix(&mut rng, n, 0);
@@ -29,15 +52,7 @@ fn main() {
             let t0 = std::time::Instant::now();
             let run = run_gemm_sim(cfg, v, n, &a, &b, true);
             let host = t0.elapsed().as_secs_f64();
-            println!(
-                "{:<24} {:>8} {:>14} {:>14} {:>12.1}",
-                v.label(),
-                n,
-                fmt_time(run.seconds),
-                fmt_time(host),
-                // Two runs (warm + timed) happened; count the timed one.
-                run.stats.instret as f64 / host / 1e6
-            );
+            report(v.label(), n, run.seconds, host, run.stats.instret);
             rows.push(JsonRow {
                 bench: format!("table7_sim_{v:?}_n{n}"),
                 mean_s: host,
@@ -46,38 +61,54 @@ fn main() {
             });
         }
     }
-    // Multi-width posit rows (the `gemm_sim_p{8,16,64}_*` trajectory; P32
-    // is already covered by the paper variants above).
-    for v in GemmVariant::POSIT_EXT {
+    // Multi-width posit rows (the `gemm_sim_p{8,16,32,64}_*` trajectory;
+    // P32 joins under the same uniform naming), paired with their oracle
+    // `*_ref` rows at the sizes CI can afford to run twice.
+    let posit_variants = GemmVariant::POSIT_EXT
+        .into_iter()
+        .chain([GemmVariant::P32Quire, GemmVariant::P32NoQuire]);
+    for v in posit_variants {
         let fmt = v.posit_fmt().expect("posit variant");
         let quire = if v.label().ends_with("no quire") { "noquire" } else { "quire" };
-        for &n in sizes {
+        for &n in posit_sizes {
             let a = gen_matrix(&mut rng, n, 0);
             let b = gen_matrix(&mut rng, n, 0);
             let t0 = std::time::Instant::now();
             let run = run_gemm_sim(cfg, v, n, &a, &b, true);
             let host = t0.elapsed().as_secs_f64();
-            println!(
-                "{:<24} {:>8} {:>14} {:>14} {:>12.1}",
-                v.label(),
-                n,
-                fmt_time(run.seconds),
-                fmt_time(host),
-                run.stats.instret as f64 / host / 1e6
-            );
-            rows.push(JsonRow {
-                bench: format!("gemm_sim_p{}_{}_n{n}", fmt.width(), quire),
+            report(v.label(), n, run.seconds, host, run.stats.instret);
+            let name = format!("gemm_sim_p{}_{}_n{n}", fmt.width(), quire);
+            let mut row = JsonRow {
+                bench: name.clone(),
                 mean_s: host,
                 ns_per_op: host / (n * n * n) as f64 * 1e9,
                 speedup_x: None,
-            });
+            };
+            if n <= 64 {
+                // Oracle pair: hard-assert the two engines identical and
+                // record the host-time ratio as the superblock speedup.
+                let t0 = std::time::Instant::now();
+                let oref = run_gemm_sim(oracle_cfg, v, n, &a, &b, true);
+                let host_ref = t0.elapsed().as_secs_f64();
+                assert_eq!(run.stats, oref.stats, "{name}: engine stats diverge");
+                assert_eq!(run.result, oref.result, "{name}: engine results diverge");
+                row.speedup_x = Some(host_ref / host);
+                report(&format!("{} (oracle ref)", v.label()), n, oref.seconds, host_ref, oref.stats.instret);
+                rows.push(JsonRow {
+                    bench: format!("{name}_ref"),
+                    mean_s: host_ref,
+                    ns_per_op: host_ref / (n * n * n) as f64 * 1e9,
+                    speedup_x: None,
+                });
+            }
+            rows.push(row);
         }
     }
 
     let racer = RacerModel::fit();
     for &n in sizes {
         println!(
-            "{:<24} {:>8} {:>14} {:>14} {:>12}",
+            "{:<28} {:>8} {:>14} {:>14} {:>12}",
             "RacEr (fitted model)",
             n,
             fmt_time(racer.predict(n)),

@@ -13,6 +13,8 @@ use crate::isa::asm::{assemble, Program};
 use crate::isa::PositFmt;
 use crate::posit::convert::{from_f64_n, to_f64_n};
 use crate::testing::Rng;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
 
 /// The six arithmetic variants of Table 6/7 (plus RacEr handled in
 /// [`super::racer`]), extended with the multi-width posit rows
@@ -239,6 +241,18 @@ loop_k:
     assemble(&src).expect("generated GEMM kernel must assemble")
 }
 
+/// [`gemm_program`] through a process-wide cache keyed by
+/// `(variant, n)`: coordinator batch runs submit thousands of jobs over
+/// the same few kernels, and with `Program.instrs` in shared `Arc`
+/// storage a cache hit means no re-assembly and no text-segment copy —
+/// every simulated core in the batch holds the same `Arc<[Instr]>`.
+pub fn gemm_program_cached(variant: GemmVariant, n: usize) -> Program {
+    static CACHE: OnceLock<Mutex<HashMap<(GemmVariant, usize), Program>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().expect("gemm program cache lock");
+    map.entry((variant, n)).or_insert_with(|| gemm_program(variant, n)).clone()
+}
+
 /// Memory layout used by the GEMM runs.
 pub struct GemmLayout {
     pub a: u64,
@@ -320,7 +334,7 @@ pub fn run_gemm_sim(
     bf: &[f64],
     warm: bool,
 ) -> GemmRun {
-    let prog = gemm_program(variant, n);
+    let prog = gemm_program_cached(variant, n);
     let mut core = Core::new(cfg);
     core.load_program(&prog);
     load_inputs(&mut core, variant, n, af, bf);
@@ -366,7 +380,7 @@ pub fn run_gemm_sim_bits(
     assert_eq!(a.len(), n * n, "A must be n×n");
     assert_eq!(b.len(), n * n, "B must be n×n");
     let variant = GemmVariant::posit(fmt, quire);
-    let prog = gemm_program(variant, n);
+    let prog = gemm_program_cached(variant, n);
     let mut core = Core::new(cfg);
     core.load_program(&prog);
     let lo = layout(variant, n);
@@ -449,6 +463,19 @@ pub fn gen_matrix(rng: &mut Rng, n: usize, exp10: i32) -> Vec<f64> {
 mod tests {
     use super::*;
     use crate::bench::mse::{gemm_native, NativeKind};
+
+    #[test]
+    fn gemm_programs_are_cached_for_batch_runs() {
+        // Two requests for the same kernel must share one text segment
+        // (the Arc-backed batch-run invariant), and distinct kernels
+        // must not collide.
+        let p1 = gemm_program_cached(GemmVariant::P32Quire, 5);
+        let p2 = gemm_program_cached(GemmVariant::P32Quire, 5);
+        assert!(std::sync::Arc::ptr_eq(&p1.instrs, &p2.instrs));
+        let p3 = gemm_program_cached(GemmVariant::P32NoQuire, 5);
+        assert!(!std::sync::Arc::ptr_eq(&p1.instrs, &p3.instrs));
+        assert_eq!(p1.words, gemm_program(GemmVariant::P32Quire, 5).words);
+    }
 
     #[test]
     fn all_variants_assemble() {
@@ -546,6 +573,38 @@ mod tests {
             GemmVariant::P32Quire => NativeKind::P32Quire,
             GemmVariant::P32NoQuire => NativeKind::P32NoQuire,
             _ => unreachable!("no Table-6 native kind for {v:?}"),
+        }
+    }
+
+    #[test]
+    fn superblock_matches_oracle_all_variants() {
+        // Every Table 7 variant, both engines: Stats and result bits must
+        // be identical (the superblock acceptance pin at GEMM scale).
+        use crate::core::Engine;
+        let n = 6;
+        let mut rng = Rng::new(0xB10C);
+        let a = gen_matrix(&mut rng, n, 0);
+        let b = gen_matrix(&mut rng, n, 0);
+        for v in GemmVariant::ALL.into_iter().chain(GemmVariant::POSIT_EXT) {
+            let sb = run_gemm_sim(
+                CoreConfig { mem_size: 1 << 22, ..Default::default() },
+                v,
+                n,
+                &a,
+                &b,
+                true,
+            );
+            let or = run_gemm_sim(
+                CoreConfig { mem_size: 1 << 22, engine: Engine::Oracle, ..Default::default() },
+                v,
+                n,
+                &a,
+                &b,
+                true,
+            );
+            assert_eq!(sb.stats, or.stats, "{v:?}");
+            assert_eq!(sb.result, or.result, "{v:?}");
+            assert_eq!(sb.seconds, or.seconds, "{v:?}");
         }
     }
 

@@ -15,6 +15,12 @@ use crate::testing::Rng;
 
 /// Default matrix sizes (paper: 16..256).
 pub const SIZES: [usize; 5] = [16, 32, 64, 128, 256];
+/// Quick-mode (CI) sizes for the paper's IEEE-vs-posit Table 7 sweep.
+pub const QUICK_SIZES: [usize; 3] = [16, 32, 64];
+/// Quick-mode sizes for the posit sim rows: n=128 became affordable in
+/// CI once the superblock engine landed, so the multi-width posit rows
+/// (quire + no-quire) extend one size further than the IEEE sweep.
+pub const QUICK_POSIT_SIZES: [usize; 4] = [16, 32, 64, 128];
 /// Input ranges [-10^i, 10^i], i ∈ {-1, 0, 1, 2, 3} (paper §7.1).
 pub const RANGES: [i32; 5] = [-1, 0, 1, 2, 3];
 /// Seed used across all published runs.

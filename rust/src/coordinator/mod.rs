@@ -30,6 +30,9 @@ pub mod json;
 
 use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};
 use crate::core::CoreConfig;
+/// Core execution engine selection for `Backend::Sim` jobs (re-exported
+/// so clients can pin the per-instruction oracle for differentials).
+pub use crate::core::Engine;
 use crate::error::Result;
 use crate::kernels::gemm::{
     dot_quire, gemm_noquire, gemm_p8_noquire_lut, gemm_quire, KernelFormat,
@@ -149,7 +152,21 @@ pub struct Coordinator {
 impl Coordinator {
     /// Spawn `n_workers` workers. `artifacts_dir` enables the PJRT backend
     /// (jobs routed there fail cleanly if artifacts are missing).
+    /// `Backend::Sim` jobs run on the default superblock engine; use
+    /// [`Coordinator::with_sim_engine`] to pin the oracle instead.
     pub fn new(n_workers: usize, artifacts_dir: Option<String>) -> Self {
+        Self::with_sim_engine(n_workers, artifacts_dir, Engine::default())
+    }
+
+    /// [`Coordinator::new`] with an explicit core engine for the Sim
+    /// backend — `Engine::Oracle` runs every Sim job on the
+    /// per-instruction reference interpreter (identical results and
+    /// `sim_seconds`, slower host time).
+    pub fn with_sim_engine(
+        n_workers: usize,
+        artifacts_dir: Option<String>,
+        engine: Engine,
+    ) -> Self {
         let (tx, rx) = channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
@@ -169,7 +186,7 @@ impl Coordinator {
                     match msg {
                         Ok(Msg::Run(job, backend, reply)) => {
                             let t0 = Instant::now();
-                            let res = execute(&job, backend, &dir, &mut rt);
+                            let res = execute(&job, backend, &dir, &mut rt, engine);
                             let dt = t0.elapsed();
                             metrics.busy_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
                             match &res {
@@ -282,11 +299,17 @@ fn dot_any<F: KernelFormat>(a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
     Ok(vec![dot_quire::<F>(&av, &bv).to_u64()])
 }
 
+/// Sim-backend core configuration: default timing on the chosen engine.
+fn sim_cfg(engine: Engine) -> CoreConfig {
+    CoreConfig { engine, ..CoreConfig::default() }
+}
+
 fn execute(
     job: &Job,
     backend: Backend,
     artifacts: &Option<String>,
     rt: &mut Option<Runtime>,
+    engine: Engine,
 ) -> Result<JobResult> {
     // Validate shapes up front, for every backend: a malformed job must be
     // an Err to the client, not an out-of-bounds / assert panic inside a
@@ -333,7 +356,7 @@ fn execute(
             Ok(JobResult::from_u32(bits, backend, None))
         }
         (Job::GemmP32 { n, a, b, quire }, Backend::Sim) => {
-            let run = sim_gemm_p32(*n, a, b, *quire);
+            let run = sim_gemm_p32(*n, a, b, *quire, engine);
             Ok(run)
         }
         (Job::GemmP32 { n, a, b, quire }, Backend::Pjrt) => {
@@ -380,7 +403,7 @@ fn execute(
         (Job::Gemm { fmt, n, a, b, quire }, Backend::Sim) => {
             check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
             check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
-            let run = run_gemm_sim_bits(CoreConfig::default(), *fmt, *n, a, b, *quire, false);
+            let run = run_gemm_sim_bits(sim_cfg(engine), *fmt, *n, a, b, *quire, false);
             Ok(JobResult::from_u64_sim(*fmt, run.bits, backend, Some(run.seconds)))
         }
         // The tagged P32 job is equivalent to the legacy `GemmP32` on every
@@ -415,7 +438,7 @@ fn execute(
         (Job::Dot { fmt, a, b }, Backend::Sim) => {
             check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
             check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
-            let run = run_dot_sim_bits(CoreConfig::default(), *fmt, a, b);
+            let run = run_dot_sim_bits(sim_cfg(engine), *fmt, a, b);
             Ok(JobResult::from_u64_sim(*fmt, run.bits, backend, Some(run.seconds)))
         }
         (Job::Dot { fmt, .. }, Backend::Pjrt) => {
@@ -426,10 +449,10 @@ fn execute(
 
 /// Posit32 GEMM on the cycle-accurate simulator (the legacy fixed-format
 /// job path; bit patterns travel verbatim through the core's memory).
-fn sim_gemm_p32(n: usize, a: &[u32], b: &[u32], quire: bool) -> JobResult {
+fn sim_gemm_p32(n: usize, a: &[u32], b: &[u32], quire: bool, engine: Engine) -> JobResult {
     let a64: Vec<u64> = a.iter().map(|&x| x as u64).collect();
     let b64: Vec<u64> = b.iter().map(|&x| x as u64).collect();
-    let run = run_gemm_sim_bits(CoreConfig::default(), Format::P32, n, &a64, &b64, quire, false);
+    let run = run_gemm_sim_bits(sim_cfg(engine), Format::P32, n, &a64, &b64, quire, false);
     let bits: Vec<u32> = run.bits.iter().map(|&x| x as u32).collect();
     JobResult::from_u32(bits, Backend::Sim, Some(run.seconds))
 }
@@ -572,6 +595,36 @@ mod tests {
             assert!(results[1].sim_seconds.unwrap() > 0.0, "dot {fmt:?}");
         }
         co.shutdown();
+    }
+
+    #[test]
+    fn sim_engine_selection_is_timing_identical() {
+        // `with_sim_engine(Oracle)` and the default superblock
+        // coordinator must return bit-identical results *and* identical
+        // simulated seconds — the engines differ only in host speed.
+        use crate::posit::convert::from_f64_n;
+        let mut rng = Rng::new(0x5B);
+        let n = 6;
+        let a: Vec<u64> =
+            (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
+        let b: Vec<u64> =
+            (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
+        let mut outs = Vec::new();
+        for engine in [Engine::Superblock, Engine::Oracle] {
+            let co = Coordinator::with_sim_engine(1, None, engine);
+            let gemm = Job::Gemm {
+                fmt: Format::P32,
+                n,
+                a: a.clone(),
+                b: b.clone(),
+                quire: true,
+            };
+            let r = co.run(gemm, Backend::Sim).unwrap();
+            let d = co.run(Job::Dot { fmt: Format::P32, a: a.clone(), b: b.clone() }, Backend::Sim).unwrap();
+            outs.push((r.bits64.clone(), r.sim_seconds, d.bits64.clone(), d.sim_seconds));
+            co.shutdown();
+        }
+        assert_eq!(outs[0], outs[1]);
     }
 
     #[test]

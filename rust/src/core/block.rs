@@ -1,0 +1,662 @@
+//! Superblock execution engine — basic-block pre-decode and
+//! block-amortized timing over the per-instruction oracle.
+//!
+//! ## Why blocks, not per-instruction caching
+//!
+//! The interpreter in [`Core::step`] pays, for every dynamic instruction:
+//! a text-segment bounds check, an [`crate::isa::info`] table lookup, a
+//! three-way operand-readiness `max` dispatched over register classes,
+//! the full functional `exec` match, and the branch-prediction arm. An
+//! earlier attempt to shave this cached pre-resolved metadata *per
+//! instruction* and was measured ~8% **slower** than the plain
+//! interpreter: the fatter per-step footprint (a wider struct fetched per
+//! instruction) cost more in cache traffic than the `info()` lookup it
+//! replaced, because the static `OP_TABLE` is already cache-resident in
+//! hot loops. The lesson is that the win is not in caching metadata per
+//! instruction but in **amortizing dispatch per block**: fetch, bounds
+//! check, and block classification happen once per basic block, and the
+//! dominant inner-loop idiom collapses to a single specialized loop with
+//! no dispatch at all.
+//!
+//! ## The plan
+//!
+//! [`build_plan`] runs classic leader analysis over the pre-decoded text
+//! segment at `load_program` time: instruction 0, every static
+//! branch/jump target ([`Instr::branch_target`]), and every instruction
+//! after a block terminator ([`crate::isa::OpInfo::ends_block`]) starts a
+//! basic block. Each block carries its instructions with the static part
+//! of the issue logic pre-resolved ([`PreInstr`]: functional unit, reg
+//! classes, and the width-resolved `latency_for(fmt)`), plus a
+//! classification:
+//!
+//! - [`BlockKind::Straight`] — straight-line code, optionally ending in a
+//!   static-target branch or ECALL: executed by [`Core::run_block`] with
+//!   one dispatch per block.
+//! - [`BlockKind::FusedMac`] — the GEMM/dot inner-loop idiom of the
+//!   paper's Fig. 5/6 kernels (posit load ×2 → `qmadd`/`qmsub` → pointer
+//!   bumps → counter decrement → back-branch to the block's own head):
+//!   whole loop *iterations* run inside [`Core::run_fused_mac`] without
+//!   returning to the dispatcher. This is the n³ term of every Table 7
+//!   row.
+//! - [`BlockKind::Irregular`] — JALR anywhere in the block (dynamic
+//!   target): falls back to the oracle [`Core::step`].
+//!
+//! ## Invariants
+//!
+//! 1. **Timing identity.** Every executor replicates the oracle's issue
+//!    arithmetic in the oracle's order: operand-readiness stall first,
+//!    then unit stall, then execute, then write-back/unit-free/cycle
+//!    updates, then control flow, then `instret`/`max_instrs`. `Stats`
+//!    and final architectural state are bit-and-count identical to
+//!    running the same program through `step()` — pinned by the
+//!    differential fuzz suite (`tests/engine_diff.rs`) and the bench
+//!    pairs in `benches/table7_gemm_timing.rs`.
+//! 2. **Leaders own entries.** A branch can only land on a block start
+//!    (its target was made a leader), so block-at-a-time dispatch never
+//!    enters a block mid-way; the only mid-block entries come from JALR,
+//!    which the dispatcher routes through `step()` until the PC is back
+//!    on a leader.
+//! 3. **Live state.** The executors read and write `Core` architectural
+//!    and scoreboard state directly (no values cached across
+//!    instructions), so register aliasing inside a fused loop (`rb ==
+//!    rs`, `pa == pb`, …) behaves exactly as it does in the oracle.
+
+use super::Core;
+use crate::isa::{info, Instr, Op, OpInfo, PositFmt, RegClass, Unit};
+use crate::posit::unpacked::mask_n;
+
+/// Which execution engine [`Core::run`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// Block-at-a-time superblock engine (the fast path; default).
+    #[default]
+    Superblock,
+    /// The per-instruction interpreter, kept verbatim as the
+    /// timing/semantics oracle.
+    Oracle,
+}
+
+/// One instruction with the static part of its issue logic pre-resolved.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct PreInstr {
+    pub ins: Instr,
+    pub unit: Unit,
+    /// Width-resolved result latency (`OpInfo::latency_for(ins.fmt)`).
+    pub lat: u64,
+    pub rd: RegClass,
+    pub rs1: RegClass,
+    pub rs2: RegClass,
+    pub rs3: RegClass,
+}
+
+impl PreInstr {
+    fn new(ins: Instr) -> Self {
+        let pi: &OpInfo = info(ins.op);
+        Self {
+            ins,
+            unit: pi.unit,
+            lat: pi.latency_for(ins.fmt),
+            rd: pi.rd,
+            rs1: pi.rs1,
+            rs2: pi.rs2,
+            rs3: pi.rs3,
+        }
+    }
+}
+
+/// The register/immediate skeleton of a fused MAC loop (see module doc):
+///
+/// ```text
+/// head:  pl{b,h,w,d} pa, imm_a(ra)
+///        pl{b,h,w,d} pb, imm_b(rb)
+///        qmadd/qmsub.{b,h,s,d} pa, pb
+///        addi ra, ra, step_a
+///        add  rb, rb, rs_b        (or: addi rb, rb, step_b)
+///        addi rc, rc, step_c
+///        bnez rc, head
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) struct FusedMac {
+    pub fmt: PositFmt,
+    pub pa: u8,
+    pub ra: u8,
+    pub imm_a: i64,
+    pub step_a: i64,
+    pub pb: u8,
+    pub rb: u8,
+    pub imm_b: i64,
+    /// `Some(rs)` for the `add rb, rb, rs` stride form, `None` for the
+    /// `addi rb, rb, step_b` form (the dot kernel).
+    pub rs_b: Option<u8>,
+    pub step_b: i64,
+    pub rc: u8,
+    pub step_c: i64,
+    /// QMSUB instead of QMADD.
+    pub sub: bool,
+    /// Static load latency (D$-hit cycles; the miss penalty is dynamic).
+    pub load_lat: u64,
+    /// Width-resolved QMADD/QMSUB latency.
+    pub mac_lat: u64,
+}
+
+/// How a block executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum BlockKind {
+    Straight,
+    FusedMac(FusedMac),
+    Irregular,
+}
+
+/// One basic block: `start..start + pre.len()` instruction indices.
+#[derive(Debug, Clone)]
+pub(super) struct Block {
+    pub start: usize,
+    pub pre: Vec<PreInstr>,
+    pub kind: BlockKind,
+}
+
+/// The whole program's superblock pre-decode.
+#[derive(Debug, Clone, Default)]
+pub(super) struct Plan {
+    pub blocks: Vec<Block>,
+    /// Instruction index → owning block id.
+    pub block_of: Vec<u32>,
+}
+
+/// Partition a pre-decoded text segment into basic blocks (leader
+/// analysis over static branch targets) and classify each one.
+pub(super) fn build_plan(prog: &[Instr]) -> Plan {
+    let n = prog.len();
+    let mut leader = vec![false; n];
+    if n > 0 {
+        leader[0] = true;
+    }
+    for (i, ins) in prog.iter().enumerate() {
+        if !info(ins.op).ends_block() {
+            continue;
+        }
+        if i + 1 < n {
+            leader[i + 1] = true;
+        }
+        if let Some(t) = ins.branch_target(i as u64 * 4) {
+            let ti = (t / 4) as usize;
+            if t % 4 == 0 && ti < n {
+                leader[ti] = true;
+            }
+        }
+    }
+    let mut blocks = Vec::new();
+    let mut block_of = vec![0u32; n];
+    let mut s = 0;
+    while s < n {
+        let mut e = s + 1;
+        while e < n && !leader[e] {
+            e += 1;
+        }
+        let id = blocks.len() as u32;
+        for slot in &mut block_of[s..e] {
+            *slot = id;
+        }
+        let pre: Vec<PreInstr> = prog[s..e].iter().map(|ins| PreInstr::new(*ins)).collect();
+        let kind = classify(&pre);
+        blocks.push(Block { start: s, pre, kind });
+        s = e;
+    }
+    Plan { blocks, block_of }
+}
+
+fn classify(pre: &[PreInstr]) -> BlockKind {
+    // Dynamic-target control flow cannot be block-dispatched: the target
+    // is invisible to the leader analysis, so the landing PC may be
+    // mid-block. Route through the oracle step path instead.
+    if pre.iter().any(|p| p.ins.op == Op::Jalr) {
+        return BlockKind::Irregular;
+    }
+    match detect_fused_mac(pre) {
+        Some(f) => BlockKind::FusedMac(f),
+        None => BlockKind::Straight,
+    }
+}
+
+/// Recognize the Fig. 5/6 inner-loop idiom (see [`FusedMac`]). The match
+/// is purely structural — register aliasing is allowed because the fused
+/// executor works on live core state — except that the written integer
+/// registers must not be `x0` (whose writes the oracle discards).
+fn detect_fused_mac(pre: &[PreInstr]) -> Option<FusedMac> {
+    if pre.len() != 7 {
+        return None;
+    }
+    let ins: Vec<Instr> = pre.iter().map(|p| p.ins).collect();
+    let fmt = match ins[0].op {
+        Op::Plb => PositFmt::P8,
+        Op::Plh => PositFmt::P16,
+        Op::Plw => PositFmt::P32,
+        Op::Pld => PositFmt::P64,
+        _ => return None,
+    };
+    if ins[1].op != ins[0].op {
+        return None;
+    }
+    let (pa, ra, imm_a) = (ins[0].rd, ins[0].rs1, ins[0].imm);
+    let (pb, rb, imm_b) = (ins[1].rd, ins[1].rs1, ins[1].imm);
+    let sub = match ins[2].op {
+        Op::QmaddS => false,
+        Op::QmsubS => true,
+        _ => return None,
+    };
+    if ins[2].fmt != fmt || ins[2].rs1 != pa || ins[2].rs2 != pb {
+        return None;
+    }
+    if ins[3].op != Op::Addi || ins[3].rd != ra || ins[3].rs1 != ra {
+        return None;
+    }
+    let step_a = ins[3].imm;
+    let (rs_b, step_b) = match ins[4].op {
+        Op::Add if ins[4].rd == rb && ins[4].rs1 == rb => (Some(ins[4].rs2), 0),
+        Op::Addi if ins[4].rd == rb && ins[4].rs1 == rb => (None, ins[4].imm),
+        _ => return None,
+    };
+    if ins[5].op != Op::Addi || ins[5].rd != ins[5].rs1 {
+        return None;
+    }
+    let (rc, step_c) = (ins[5].rd, ins[5].imm);
+    // `bnez rc` looping back to this block's own head (the only target a
+    // 7-instruction block with this shape can have kept in one piece).
+    if ins[6].op != Op::Bne || ins[6].rs1 != rc || ins[6].rs2 != 0 || ins[6].imm != -24 {
+        return None;
+    }
+    if ra == 0 || rb == 0 || rc == 0 {
+        return None;
+    }
+    Some(FusedMac {
+        fmt,
+        pa,
+        ra,
+        imm_a,
+        step_a,
+        pb,
+        rb,
+        imm_b,
+        rs_b,
+        step_b,
+        rc,
+        step_c,
+        sub,
+        load_lat: info(ins[0].op).latency as u64,
+        mac_lat: info(ins[2].op).latency_for(fmt),
+    })
+}
+
+impl Core {
+    /// Issue an instruction: charge the RAW stall against `t_ops`, then
+    /// the functional-unit stall, exactly as [`Core::step`] does, and
+    /// return the issue cycle.
+    #[inline]
+    fn issue(&mut self, t_ops: u64, unit: Unit) -> u64 {
+        let mut t = self.cycle;
+        if t_ops > t {
+            self.raw_stalls += t_ops - t;
+            t = t_ops;
+        }
+        let uf = self.unit_free[unit as usize];
+        if uf > t {
+            self.unit_stalls += uf - t;
+            t = uf;
+        }
+        t
+    }
+
+    /// Retire bookkeeping shared by the block executors: mirrors the tail
+    /// of [`Core::step`]. Returns `true` when the core halted.
+    #[inline]
+    fn retire(&mut self) -> bool {
+        self.instret += 1;
+        if self.cfg.max_instrs != 0 && self.instret >= self.cfg.max_instrs {
+            self.halted = true;
+        }
+        self.halted
+    }
+
+    /// Run the whole program block-at-a-time. The loop re-checks the plan
+    /// on every transfer: branch targets are always leaders (invariant 2),
+    /// and anything else — JALR landings, unaligned PCs — drops to the
+    /// oracle `step()` until the PC is a leader again.
+    pub(super) fn run_superblock(&mut self) {
+        let plan = std::sync::Arc::clone(&self.plan);
+        while !self.halted {
+            let idx = (self.pc / 4) as usize;
+            if self.pc % 4 != 0 || idx >= plan.block_of.len() {
+                // Off the end of the text segment (or an unaligned JALR
+                // landing): take the oracle path, which halts identically.
+                if !self.step() {
+                    break;
+                }
+                continue;
+            }
+            let block = &plan.blocks[plan.block_of[idx] as usize];
+            if block.start != idx {
+                // Mid-block entry (only reachable via JALR): step until
+                // the PC lands on a leader.
+                if !self.step() {
+                    break;
+                }
+                continue;
+            }
+            match block.kind {
+                BlockKind::Irregular => {
+                    if !self.step() {
+                        break;
+                    }
+                }
+                BlockKind::FusedMac(f) => self.run_fused_mac(&f),
+                BlockKind::Straight => self.run_block(&block.pre),
+            }
+        }
+    }
+
+    /// Execute one straight-line block: a single dispatch, then the
+    /// pre-resolved issue skeleton per instruction. Timing logic is a
+    /// line-for-line mirror of [`Core::step`] minus the fetch, the
+    /// `info()` lookup and the latency resolution.
+    fn run_block(&mut self, pre: &[PreInstr]) {
+        for pi in pre {
+            let ins = pi.ins;
+            let t_ops = self
+                .ready_of(pi.rs1, ins.rs1)
+                .max(self.ready_of(pi.rs2, ins.rs2))
+                .max(self.ready_of(pi.rs3, ins.rs3));
+            let t = self.issue(t_ops, pi.unit);
+            let eff = self.exec(&ins);
+            let lat = pi.lat + eff.mem_extra;
+            self.set_ready(pi.rd, ins.rd, t + lat);
+            self.unit_free[pi.unit as usize] = match pi.unit {
+                Unit::Pau | Unit::Fpu | Unit::Mul => t + lat,
+                Unit::Lsu => t + 1 + eff.mem_extra,
+                _ => t + 1,
+            };
+            self.cycle = t + 1;
+            let next_seq = self.pc.wrapping_add(4);
+            if pi.unit == Unit::Branch {
+                let taken = eff.taken;
+                let target = eff.next_pc.unwrap_or(next_seq);
+                let predicted_target = match ins.op {
+                    Op::Jal => target,
+                    Op::Jalr => next_seq,
+                    _ => {
+                        if ins.imm < 0 {
+                            self.pc.wrapping_add(ins.imm as u64)
+                        } else {
+                            next_seq
+                        }
+                    }
+                };
+                let actual = if taken { target } else { next_seq };
+                if actual != predicted_target {
+                    self.mispredicts += 1;
+                    self.cycle += self.cfg.mispredict_penalty;
+                }
+                self.pc = actual;
+            } else {
+                self.pc = eff.next_pc.unwrap_or(next_seq);
+            }
+            if eff.halt {
+                self.halted = true;
+            }
+            if self.retire() {
+                return;
+            }
+        }
+    }
+
+    /// Execute fused MAC-loop iterations until the back-branch falls
+    /// through (or `max_instrs` trips). Instruction-for-instruction the
+    /// timing and state updates are the oracle's; what is gone is every
+    /// per-instruction fetch, table lookup and match dispatch.
+    fn run_fused_mac(&mut self, f: &FusedMac) {
+        let w = f.fmt.width();
+        let mask = mask_n(w);
+        let penalty = self.cfg.mispredict_penalty;
+        loop {
+            // ── load a: pl* pa, imm_a(ra) ─────────────────────────────
+            let t = self.issue(self.ready_of(RegClass::X, f.ra), Unit::Lsu);
+            let addr = self.x[f.ra as usize].wrapping_add(f.imm_a as u64);
+            let me = self.dcache.access(addr);
+            self.p[f.pa as usize] = self.read_posit_elem(addr, f.fmt);
+            self.ready_p[f.pa as usize] = t + f.load_lat + me;
+            self.unit_free[Unit::Lsu as usize] = t + 1 + me;
+            self.cycle = t + 1;
+            self.pc = self.pc.wrapping_add(4);
+            if self.retire() {
+                return;
+            }
+
+            // ── load b: pl* pb, imm_b(rb) ─────────────────────────────
+            let t = self.issue(self.ready_of(RegClass::X, f.rb), Unit::Lsu);
+            let addr = self.x[f.rb as usize].wrapping_add(f.imm_b as u64);
+            let me = self.dcache.access(addr);
+            self.p[f.pb as usize] = self.read_posit_elem(addr, f.fmt);
+            self.ready_p[f.pb as usize] = t + f.load_lat + me;
+            self.unit_free[Unit::Lsu as usize] = t + 1 + me;
+            self.cycle = t + 1;
+            self.pc = self.pc.wrapping_add(4);
+            if self.retire() {
+                return;
+            }
+
+            // ── qmadd/qmsub pa, pb ────────────────────────────────────
+            let t_ops = self.ready_p[f.pa as usize].max(self.ready_p[f.pb as usize]);
+            let t = self.issue(t_ops, Unit::Pau);
+            let (a, b) = (self.p[f.pa as usize] & mask, self.p[f.pb as usize] & mask);
+            if f.sub {
+                self.quire.msub(f.fmt, a, b);
+            } else {
+                self.quire.madd(f.fmt, a, b);
+            }
+            self.unit_free[Unit::Pau as usize] = t + f.mac_lat;
+            self.cycle = t + 1;
+            self.pc = self.pc.wrapping_add(4);
+            if self.retire() {
+                return;
+            }
+
+            // ── addi ra, ra, step_a ───────────────────────────────────
+            let t = self.issue(self.ready_of(RegClass::X, f.ra), Unit::Alu);
+            self.x[f.ra as usize] = self.x[f.ra as usize].wrapping_add(f.step_a as u64);
+            self.set_ready(RegClass::X, f.ra, t + 1);
+            self.unit_free[Unit::Alu as usize] = t + 1;
+            self.cycle = t + 1;
+            self.pc = self.pc.wrapping_add(4);
+            if self.retire() {
+                return;
+            }
+
+            // ── add rb, rb, rs_b  /  addi rb, rb, step_b ──────────────
+            let (t_ops, add) = match f.rs_b {
+                Some(rs) => (
+                    self.ready_of(RegClass::X, f.rb).max(self.ready_of(RegClass::X, rs)),
+                    self.x[rs as usize],
+                ),
+                None => (self.ready_of(RegClass::X, f.rb), f.step_b as u64),
+            };
+            let t = self.issue(t_ops, Unit::Alu);
+            self.x[f.rb as usize] = self.x[f.rb as usize].wrapping_add(add);
+            self.set_ready(RegClass::X, f.rb, t + 1);
+            self.unit_free[Unit::Alu as usize] = t + 1;
+            self.cycle = t + 1;
+            self.pc = self.pc.wrapping_add(4);
+            if self.retire() {
+                return;
+            }
+
+            // ── addi rc, rc, step_c ───────────────────────────────────
+            let t = self.issue(self.ready_of(RegClass::X, f.rc), Unit::Alu);
+            self.x[f.rc as usize] = self.x[f.rc as usize].wrapping_add(f.step_c as u64);
+            self.set_ready(RegClass::X, f.rc, t + 1);
+            self.unit_free[Unit::Alu as usize] = t + 1;
+            self.cycle = t + 1;
+            self.pc = self.pc.wrapping_add(4);
+            if self.retire() {
+                return;
+            }
+
+            // ── bnez rc, head (backward → predicted taken) ────────────
+            let t = self.issue(self.ready_of(RegClass::X, f.rc), Unit::Branch);
+            self.unit_free[Unit::Branch as usize] = t + 1;
+            self.cycle = t + 1;
+            let taken = self.x[f.rc as usize] != 0;
+            if taken {
+                self.pc = self.pc.wrapping_add(-24i64 as u64);
+            } else {
+                // Loop exit: the only mispredict of the whole loop.
+                self.mispredicts += 1;
+                self.cycle += penalty;
+                self.pc = self.pc.wrapping_add(4);
+            }
+            if self.retire() || !taken {
+                return;
+            }
+        }
+    }
+
+    /// Posit-element load at the format's memory width (the `pl*` data
+    /// path of [`Core::exec`], inlined for the fused loop).
+    #[inline]
+    fn read_posit_elem(&self, addr: u64, fmt: PositFmt) -> u64 {
+        match fmt {
+            PositFmt::P8 => self.mem.read_u8(addr) as u64,
+            PositFmt::P16 => self.mem.read_u16(addr) as u64,
+            PositFmt::P32 => self.mem.read_u32(addr) as u64,
+            PositFmt::P64 => self.mem.read_u64(addr),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::assemble;
+
+    fn plan_of(src: &str) -> Plan {
+        build_plan(&assemble(src).expect("assembles").instrs)
+    }
+
+    #[test]
+    fn leaders_split_at_branches_and_targets() {
+        let p = plan_of(
+            r#"
+            li a0, 0
+            li a1, 10
+        loop:
+            add a0, a0, a1
+            addi a1, a1, -1
+            bnez a1, loop
+            ecall
+        "#,
+        );
+        // Blocks: [li, li][add, addi, bnez][ecall].
+        assert_eq!(p.blocks.len(), 3);
+        assert_eq!(p.blocks[0].start, 0);
+        assert_eq!(p.blocks[1].start, 2);
+        assert_eq!(p.blocks[1].pre.len(), 3);
+        assert_eq!(p.blocks[2].start, 5);
+        assert_eq!(p.block_of, vec![0, 0, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn jalr_blocks_are_irregular() {
+        let p = plan_of("jalr ra, 0(a0)\necall");
+        assert_eq!(p.blocks[0].kind, BlockKind::Irregular);
+        assert_eq!(p.blocks[1].kind, BlockKind::Straight);
+    }
+
+    #[test]
+    fn gemm_inner_loop_detected_every_width() {
+        for (load, sfx, eb) in
+            [("plb", "b", 1), ("plh", "h", 2), ("plw", "s", 4), ("pld", "d", 8)]
+        {
+            let src = format!(
+                r#"
+                li t5, 64
+            loop_k:
+                {load} p0, 0(t2)
+                {load} p1, 0(t3)
+                qmadd.{sfx} p0, p1
+                addi t2, t2, {eb}
+                add  t3, t3, t5
+                addi s2, s2, -1
+                bnez s2, loop_k
+                ecall
+            "#
+            );
+            let p = plan_of(&src);
+            let loop_block =
+                p.blocks.iter().find(|b| b.pre.len() == 7).expect("loop block");
+            let BlockKind::FusedMac(f) = loop_block.kind else {
+                panic!("{load}: inner loop not fused: {:?}", loop_block.kind);
+            };
+            assert_eq!(f.fmt.bytes() as i64, eb);
+            assert_eq!(f.step_a, eb);
+            assert_eq!(f.rs_b, Some(30)); // t5
+            assert_eq!(f.step_c, -1);
+            assert!(!f.sub);
+        }
+    }
+
+    #[test]
+    fn dot_inner_loop_detected_addi_form() {
+        // The dot kernel bumps both pointers with addi (no stride reg).
+        let p = plan_of(
+            r#"
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.s p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            ecall
+        "#,
+        );
+        let BlockKind::FusedMac(f) = p.blocks[0].kind else {
+            panic!("not fused: {:?}", p.blocks[0].kind);
+        };
+        assert_eq!(f.rs_b, None);
+        assert_eq!(f.step_b, 4);
+    }
+
+    #[test]
+    fn near_miss_idioms_stay_straight() {
+        // Mismatched widths (plw feeding qmadd.h) must not fuse.
+        let p = plan_of(
+            r#"
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.h p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            ecall
+        "#,
+        );
+        assert_eq!(p.blocks[0].kind, BlockKind::Straight);
+        // Counter written to x0 must not fuse (the write is discarded and
+        // the loop never advances by that register).
+        let p = plan_of(
+            r#"
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.s p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi zero, zero, -1
+            bnez zero, loop
+            ecall
+        "#,
+        );
+        assert_eq!(p.blocks[0].kind, BlockKind::Straight);
+    }
+}

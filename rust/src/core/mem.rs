@@ -145,6 +145,12 @@ impl Memory {
         self.bytes.is_empty()
     }
 
+    /// The whole backing store — the differential harness compares final
+    /// memory images byte-for-byte across execution engines.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
     #[inline]
     fn check(&self, addr: u64, n: usize) -> usize {
         let a = addr as usize;

@@ -224,6 +224,21 @@ impl OpInfo {
         ) as u64;
         base + 1 + quire
     }
+
+    /// True for the ops that dispatch to the branch unit (conditional
+    /// branches, JAL, JALR) — exactly the ops that terminate a basic
+    /// block in the superblock pre-decode's leader analysis.
+    #[inline]
+    pub fn is_branch(&self) -> bool {
+        self.unit == Unit::Branch
+    }
+
+    /// True for the ops that end a basic block: control flow plus
+    /// ECALL/EBREAK (which halt the simulated core).
+    #[inline]
+    pub fn ends_block(&self) -> bool {
+        self.unit == Unit::Branch || matches!(self.op, Op::Ecall | Op::Ebreak)
+    }
 }
 
 /// A decoded instruction: opcode + operand fields. `imm` is the
@@ -272,6 +287,20 @@ impl Instr {
     pub fn with_fmt(mut self, fmt: PositFmt) -> Self {
         self.fmt = fmt;
         self
+    }
+
+    /// Static control-flow target of this instruction when it sits at
+    /// address `pc`: `Some(target)` for conditional branches and JAL
+    /// (PC-relative immediates), `None` for everything else — including
+    /// JALR, whose target is register-dynamic and therefore invisible to
+    /// the superblock pre-decode's leader analysis.
+    pub fn branch_target(&self, pc: u64) -> Option<u64> {
+        match self.op {
+            Op::Jal | Op::Beq | Op::Bne | Op::Blt | Op::Bge | Op::Bltu | Op::Bgeu => {
+                Some(pc.wrapping_add(self.imm as u64))
+            }
+            _ => None,
+        }
     }
 }
 
@@ -559,6 +588,23 @@ mod tests {
         assert_eq!(info(Op::Pld).unit, Unit::Lsu);
         assert_eq!(info(Op::Psb).unit, Unit::Lsu);
         assert_eq!(info(Op::FmaddS).unit, Unit::Fpu);
+    }
+
+    #[test]
+    fn branch_target_metadata() {
+        // Leader analysis relies on: static targets for B-type and JAL,
+        // no target for JALR (dynamic) or straight-line ops.
+        let b = Instr::s(Op::Bne, 5, 0, -24);
+        assert_eq!(b.branch_target(0x40), Some(0x28));
+        let j = Instr::i(Op::Jal, 1, 0, 16);
+        assert_eq!(j.branch_target(0x10), Some(0x20));
+        assert_eq!(Instr::i(Op::Jalr, 1, 2, 8).branch_target(0x10), None);
+        assert_eq!(Instr::i(Op::Addi, 1, 1, 1).branch_target(0x10), None);
+        // Block terminators: every branch-unit op plus ECALL/EBREAK.
+        assert!(info(Op::Jalr).is_branch() && info(Op::Jalr).ends_block());
+        assert!(info(Op::Beq).ends_block());
+        assert!(info(Op::Ecall).ends_block() && !info(Op::Ecall).is_branch());
+        assert!(!info(Op::Addi).ends_block());
     }
 
     #[test]

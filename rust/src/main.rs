@@ -115,7 +115,7 @@ fn main() {
             });
             match assemble(&src) {
                 Ok(p) => {
-                    for (i, (w, ins)) in p.words.iter().zip(&p.instrs).enumerate() {
+                    for (i, (w, ins)) in p.words.iter().zip(p.instrs.iter()).enumerate() {
                         println!("{:4}: {w:08x}  {}", i * 4, disasm(ins));
                     }
                 }

@@ -389,6 +389,57 @@ impl<F: PositFormat> Quire<F> {
         F::Bits::from_u64(encode_round_n(F::N, negative, scale, sig, sticky))
     }
 
+    /// Serialize the accumulator to its `16n/8`-byte little-endian memory
+    /// image — the width-independent quire spill format (groundwork for
+    /// the paper's §8 quire save/restore future work). The sticky NaR
+    /// state is stored as the standard's canonical quire-NaR pattern
+    /// `10…0`, which no legitimate accumulation can reach (the
+    /// carry-guard bits put real overflow ~2³¹ MACs away), so the
+    /// encoding is unambiguous.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let len = Self::BITS as usize / 8;
+        if self.nar {
+            let mut out = vec![0u8; len];
+            out[len - 1] = 0x80;
+            return out;
+        }
+        let mut out = Vec::with_capacity(len);
+        for limb in self.limbs.as_slice() {
+            out.extend_from_slice(&limb.to_le_bytes());
+        }
+        out
+    }
+
+    /// Restore an accumulator from a [`Self::to_bytes`] image. Errors on
+    /// a length mismatch (the image length *is* the format width, so a
+    /// spilled Quire32 cannot be restored into a Quire64 by accident).
+    /// The dirty window is recomputed tight from the nonzero limbs, which
+    /// preserves the windowed-accumulation invariant.
+    pub fn from_bytes(bytes: &[u8]) -> crate::error::Result<Self> {
+        let len = Self::BITS as usize / 8;
+        crate::ensure!(
+            bytes.len() == len,
+            "quire{}: expected a {len}-byte image, got {}",
+            F::N,
+            bytes.len()
+        );
+        let mut limbs = F::QuireLimbs::zeroed();
+        for (limb, chunk) in limbs.as_mut_slice().iter_mut().zip(bytes.chunks_exact(8)) {
+            *limb = u64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+        }
+        let slice = limbs.as_slice();
+        // The canonical 10…0 pattern restores the sticky NaR state.
+        if slice[Self::LIMBS - 1] == 1 << 63 && slice[..Self::LIMBS - 1].iter().all(|&l| l == 0)
+        {
+            let mut q = Self::new();
+            q.nar = true;
+            return Ok(q);
+        }
+        let lo_dirty = slice.iter().position(|&l| l != 0).unwrap_or(Self::LIMBS);
+        let hi_dirty = slice.iter().rposition(|&l| l != 0).map_or(0, |i| i + 1);
+        Ok(Self { limbs, nar: false, lo_dirty, hi_dirty })
+    }
+
     /// Raw limbs (for tests and for the synth model's width accounting).
     pub fn limbs(&self) -> &F::QuireLimbs {
         &self.limbs
@@ -771,6 +822,79 @@ mod tests {
         }
         run::<P32>(0xDA7A, |v| v as u32);
         run::<P64>(0xDA7A_64, |v| v);
+    }
+
+    #[test]
+    fn serialization_round_trips_every_width() {
+        use crate::posit::unpacked::mask_n;
+        use crate::posit::PositBits;
+        fn run<F: PositFormat>(seed: u64) {
+            let mask = mask_n(F::N);
+            let mut x = seed;
+            let mut next = move || {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x
+            };
+            let mut q = Quire::<F>::new();
+            for i in 0..300u32 {
+                let bytes = q.to_bytes();
+                assert_eq!(bytes.len(), 2 * F::N as usize, "image is 16n bits");
+                let r = Quire::<F>::from_bytes(&bytes).expect("round-trip");
+                assert_eq!(r.is_nar(), q.is_nar(), "iter {i}");
+                assert_eq!(r.round(), q.round(), "iter {i}");
+                if q.is_nar() {
+                    // NaR spills as the canonical 10…0 image; stale
+                    // pre-NaR limbs are deliberately not preserved.
+                    q.clear();
+                    continue;
+                }
+                assert_eq!(r.limbs(), q.limbs(), "iter {i}");
+                // A restored quire must keep accumulating identically.
+                let (a, b) =
+                    (F::Bits::from_u64(next() & mask), F::Bits::from_u64(next() & mask));
+                let mut q2 = r;
+                q2.madd(a, b);
+                q.madd(a, b);
+                assert_eq!(q2.limbs(), q.limbs(), "iter {i}");
+                assert_eq!(q2.is_nar(), q.is_nar(), "iter {i}");
+                if i % 7 == 3 {
+                    q.neg();
+                }
+            }
+        }
+        run::<P8>(0x5E8);
+        run::<P16>(0x5E16);
+        run::<P32>(0x5E32);
+        run::<P64>(0x5E64);
+    }
+
+    #[test]
+    fn serialization_width_and_nar_rules() {
+        // Wrong-length images are rejected (a Quire32 spill cannot be
+        // restored into a Quire64).
+        let bytes = Quire32::new().to_bytes();
+        assert_eq!(bytes.len(), 64);
+        assert!(Quire64::from_bytes(&bytes).is_err());
+        assert!(Quire32::from_bytes(&bytes[..63]).is_err());
+        // NaR round-trips through the canonical 10…0 image.
+        let mut q = Quire8::new();
+        q.madd(0x80, 0x40);
+        assert!(q.is_nar());
+        let img = q.to_bytes();
+        assert_eq!(img[15], 0x80);
+        assert!(img[..15].iter().all(|&b| b == 0));
+        let r = Quire8::from_bytes(&img).unwrap();
+        assert!(r.is_nar());
+        assert_eq!(r.round(), 0x80);
+        // Negative accumulations keep sign and window through the image.
+        let mut q = Quire32::new();
+        q.msub(ONE32, ONE32);
+        let r = Quire32::from_bytes(&q.to_bytes()).unwrap();
+        assert_eq!(r.limbs(), q.limbs());
+        assert_eq!(r.round(), q.round());
+        assert_eq!(r.round(), from_f64::<32>(-1.0));
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Differential fuzz: the superblock engine vs the per-instruction
+//! oracle on randomly generated, well-formed programs.
+//!
+//! The superblock engine's contract is *bit-and-count identity*: for any
+//! program, `Stats` (cycles, instret, stall/mispredict/D$ counters) and
+//! the final architectural state (PC, x/f/p register files, the PAU
+//! quire, data memory) must equal a pure `step()` run. The generator
+//! mixes RV64I/M, F/D, Xposit at all four widths, loads/stores through a
+//! pinned base register, forward and backward branches, JAL and JALR;
+//! `max_instrs` bounds runaway loops, and both engines must trip it on
+//! the same instruction.
+
+use percival::core::{Core, CoreConfig, Engine, Stats};
+use percival::isa::asm::assemble;
+use percival::isa::{Instr, Op, PositFmt};
+use percival::testing::Rng;
+use std::sync::Arc;
+
+/// Data window every generated memory op addresses: `x5 = 0x1000`,
+/// offsets 8-aligned in `[0, 2048)`.
+const DATA_BASE: u64 = 0x1000;
+const DATA_WORDS: usize = 256;
+
+/// Random X destination register, never the pinned base `x5` (and
+/// sometimes `x0`, whose writes the core discards).
+fn xrd(rng: &mut Rng) -> u8 {
+    let r = rng.below(31) as u8;
+    if r >= 5 {
+        r + 1
+    } else {
+        r
+    }
+}
+
+fn xr(rng: &mut Rng) -> u8 {
+    rng.below(32) as u8
+}
+
+fn imm12(rng: &mut Rng) -> i64 {
+    rng.below(4096) as i64 - 2048
+}
+
+/// 8-aligned offset into the data window (valid for every access width).
+fn mem_off(rng: &mut Rng) -> i64 {
+    (rng.below(DATA_WORDS as u64) * 8) as i64
+}
+
+fn fmt_of(rng: &mut Rng) -> PositFmt {
+    PositFmt::ALL[rng.below(4) as usize]
+}
+
+fn pick<T: Copy>(rng: &mut Rng, xs: &[T]) -> T {
+    xs[rng.below(xs.len() as u64) as usize]
+}
+
+/// One random instruction for slot `idx` of a `total`-instruction
+/// program (branch targets stay inside `[0, total]`).
+fn gen_instr(rng: &mut Rng, idx: usize, total: usize) -> Instr {
+    let target_imm = |rng: &mut Rng, idx: usize| {
+        let target = rng.below(total as u64 + 1) as i64;
+        (target - idx as i64) * 4
+    };
+    match rng.below(100) {
+        // ── integer register-register (incl. M) ─────────────────────────
+        0..=17 => {
+            let op = pick(
+                rng,
+                &[
+                    Op::Add,
+                    Op::Sub,
+                    Op::Sll,
+                    Op::Slt,
+                    Op::Sltu,
+                    Op::Xor,
+                    Op::Srl,
+                    Op::Sra,
+                    Op::Or,
+                    Op::And,
+                    Op::Addw,
+                    Op::Subw,
+                    Op::Sllw,
+                    Op::Srlw,
+                    Op::Sraw,
+                    Op::Mul,
+                    Op::Mulh,
+                    Op::Mulhu,
+                    Op::Div,
+                    Op::Divu,
+                    Op::Rem,
+                    Op::Remu,
+                    Op::Mulw,
+                ],
+            );
+            Instr::r(op, xrd(rng), xr(rng), xr(rng))
+        }
+        // ── integer register-immediate ──────────────────────────────────
+        18..=32 => {
+            let op = pick(
+                rng,
+                &[Op::Addi, Op::Slti, Op::Sltiu, Op::Xori, Op::Ori, Op::Andi, Op::Addiw],
+            );
+            Instr::i(op, xrd(rng), xr(rng), imm12(rng))
+        }
+        33..=36 => {
+            let op = pick(rng, &[Op::Slli, Op::Srli, Op::Srai]);
+            Instr::i(op, xrd(rng), xr(rng), rng.below(64) as i64)
+        }
+        37..=39 => {
+            let op = pick(rng, &[Op::Slliw, Op::Srliw, Op::Sraiw]);
+            Instr::i(op, xrd(rng), xr(rng), rng.below(32) as i64)
+        }
+        40..=41 => Instr::i(pick(rng, &[Op::Lui, Op::Auipc]), xrd(rng), 0, rng.below(0x100000) as i64),
+        // ── integer + float + posit loads/stores (base x5) ──────────────
+        42..=51 => {
+            let op = pick(
+                rng,
+                &[Op::Lb, Op::Lh, Op::Lw, Op::Ld, Op::Lbu, Op::Lhu, Op::Lwu, Op::Flw, Op::Fld,
+                  Op::Plb, Op::Plh, Op::Plw, Op::Pld],
+            );
+            Instr::i(op, xrd(rng), 5, mem_off(rng))
+        }
+        52..=58 => {
+            let op = pick(
+                rng,
+                &[Op::Sb, Op::Sh, Op::Sw, Op::Sd, Op::Fsw, Op::Fsd, Op::Psb, Op::Psh, Op::Psw,
+                  Op::Psd],
+            );
+            Instr::s(op, 5, xr(rng), mem_off(rng))
+        }
+        // ── F/D arithmetic, compares, moves, conversions ────────────────
+        59..=68 => {
+            let op = pick(
+                rng,
+                &[
+                    Op::FaddS,
+                    Op::FsubS,
+                    Op::FmulS,
+                    Op::FdivS,
+                    Op::FminS,
+                    Op::FmaxS,
+                    Op::FsgnjS,
+                    Op::FsgnjnS,
+                    Op::FsgnjxS,
+                    Op::FaddD,
+                    Op::FsubD,
+                    Op::FmulD,
+                    Op::FdivD,
+                    Op::FminD,
+                    Op::FmaxD,
+                    Op::FsgnjD,
+                    Op::FsgnjnD,
+                ],
+            );
+            Instr::r(op, xr(rng), xr(rng), xr(rng))
+        }
+        69..=70 => {
+            let op = pick(rng, &[Op::FmaddS, Op::FmsubS, Op::FnmsubS, Op::FnmaddS, Op::FmaddD, Op::FmsubD]);
+            Instr::r4(op, xr(rng), xr(rng), xr(rng), xr(rng))
+        }
+        71..=74 => {
+            let op = pick(
+                rng,
+                &[
+                    Op::FsqrtS,
+                    Op::FcvtWS,
+                    Op::FcvtLS,
+                    Op::FcvtSW,
+                    Op::FcvtSL,
+                    Op::FmvXW,
+                    Op::FmvWX,
+                    Op::FmvXD,
+                    Op::FmvDX,
+                    Op::FcvtDS,
+                    Op::FcvtSD,
+                    Op::FcvtDW,
+                    Op::FcvtDL,
+                    Op::FcvtWD,
+                    Op::FcvtLD,
+                ],
+            );
+            Instr::r(op, xrd(rng), xr(rng), 0)
+        }
+        75..=76 => {
+            let op = pick(rng, &[Op::FeqS, Op::FltS, Op::FleS, Op::FeqD, Op::FltD, Op::FleD]);
+            Instr::r(op, xrd(rng), xr(rng), xr(rng))
+        }
+        // ── Xposit computational at every width ─────────────────────────
+        77..=85 => {
+            let op = pick(
+                rng,
+                &[
+                    Op::PaddS,
+                    Op::PsubS,
+                    Op::PmulS,
+                    Op::PdivS,
+                    Op::PminS,
+                    Op::PmaxS,
+                    Op::PsgnjS,
+                    Op::PsgnjnS,
+                    Op::PsgnjxS,
+                ],
+            );
+            Instr::r(op, xr(rng), xr(rng), xr(rng)).with_fmt(fmt_of(rng))
+        }
+        86..=89 => {
+            let op = pick(rng, &[Op::QmaddS, Op::QmsubS, Op::QclrS, Op::QnegS, Op::QroundS]);
+            Instr::r(op, xr(rng), xr(rng), xr(rng)).with_fmt(fmt_of(rng))
+        }
+        90..=92 => {
+            let op = pick(
+                rng,
+                &[
+                    Op::PsqrtS,
+                    Op::PcvtWS,
+                    Op::PcvtWuS,
+                    Op::PcvtLS,
+                    Op::PcvtLuS,
+                    Op::PcvtSW,
+                    Op::PcvtSWu,
+                    Op::PcvtSL,
+                    Op::PcvtSLu,
+                    Op::PmvXW,
+                    Op::PmvWX,
+                    Op::PeqS,
+                    Op::PltS,
+                    Op::PleS,
+                ],
+            );
+            Instr::r(op, xrd(rng), xr(rng), xr(rng)).with_fmt(fmt_of(rng))
+        }
+        // ── control flow ────────────────────────────────────────────────
+        93..=96 => {
+            let op = pick(rng, &[Op::Beq, Op::Bne, Op::Blt, Op::Bge, Op::Bltu, Op::Bgeu]);
+            let imm = target_imm(rng, idx);
+            Instr::s(op, xr(rng), xr(rng), imm)
+        }
+        97 => Instr::i(Op::Jal, if rng.below(2) == 0 { 0 } else { 1 }, 0, target_imm(rng, idx)),
+        98 => {
+            // JALR through x0: a constant but leader-invisible target —
+            // exercises the Irregular-block step() fallback.
+            let target = rng.below(total as u64 + 1) as i64;
+            Instr::i(Op::Jalr, 1, 0, target * 4)
+        }
+        _ => Instr::i(Op::Csrrs, xrd(rng), 0, if rng.below(2) == 0 { 0xC00 } else { 0xC02 }),
+    }
+}
+
+fn random_program(rng: &mut Rng, body: usize) -> Vec<Instr> {
+    let mut prog = Vec::new();
+    // x5 = 0x1000: the pinned data-window base.
+    prog.push(Instr::i(Op::Lui, 5, 0, (DATA_BASE >> 12) as i64));
+    // Seed integer registers with small values.
+    for r in [10u8, 11, 12, 28, 29] {
+        prog.push(Instr::i(Op::Addi, r, 0, imm12(rng)));
+    }
+    // Seed posit and float registers from the integers.
+    for r in [1u8, 2, 3, 4] {
+        prog.push(Instr::r(Op::PcvtSW, r, 10, 0).with_fmt(fmt_of(rng)));
+        prog.push(Instr::r(Op::FcvtSW, r, 11, 0));
+        prog.push(Instr::r(Op::FcvtDW, r + 4, 12, 0));
+    }
+    let total = prog.len() + body + 1;
+    for _ in 0..body {
+        let idx = prog.len();
+        prog.push(gen_instr(rng, idx, total));
+    }
+    prog.push(Instr::i(Op::Ecall, 0, 0, 0));
+    prog
+}
+
+/// Run `instrs` on one engine over a seeded memory image.
+fn run_engine(instrs: &Arc<[Instr]>, data: &[u64], engine: Engine) -> (Stats, Core) {
+    let mut core = Core::new(CoreConfig {
+        mem_size: 1 << 16,
+        max_instrs: 20_000,
+        engine,
+        ..Default::default()
+    });
+    core.load_instrs(Arc::clone(instrs));
+    for (i, w) in data.iter().enumerate() {
+        core.mem.write_u64(DATA_BASE + 8 * i as u64, *w);
+    }
+    let stats = core.run();
+    (stats, core)
+}
+
+fn assert_identical(case: u64, instrs: &Arc<[Instr]>, data: &[u64]) {
+    let (s_sb, c_sb) = run_engine(instrs, data, Engine::Superblock);
+    let (s_or, c_or) = run_engine(instrs, data, Engine::Oracle);
+    assert_eq!(s_sb, s_or, "case {case}: stats diverge");
+    assert_eq!(c_sb.pc, c_or.pc, "case {case}: pc diverges");
+    assert_eq!(c_sb.halted(), c_or.halted(), "case {case}");
+    assert_eq!(c_sb.x, c_or.x, "case {case}: x regs diverge");
+    assert_eq!(c_sb.f, c_or.f, "case {case}: f regs diverge");
+    assert_eq!(c_sb.p, c_or.p, "case {case}: p regs diverge");
+    assert_eq!(c_sb.quire, c_or.quire, "case {case}: quire diverges");
+    assert_eq!(c_sb.mem.bytes(), c_or.mem.bytes(), "case {case}: memory diverges");
+}
+
+#[test]
+fn fuzz_differential_superblock_vs_oracle() {
+    let mut rng = Rng::new(0xD1FF_2024);
+    for case in 0..80u64 {
+        let body = 40 + rng.below(260) as usize;
+        let prog: Arc<[Instr]> = random_program(&mut rng, body).into();
+        let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
+        assert_identical(case, &prog, &data);
+    }
+}
+
+#[test]
+fn fused_loop_alias_cases_match_oracle() {
+    // Register aliasing inside the fused-MAC idiom (pa == pb, stride
+    // register == pointer) must not diverge: the fused executor works on
+    // live core state, exactly like the oracle.
+    let aliased = r#"
+        li t2, 0x1000
+        li t3, 0x1100
+        li s2, 4
+        qclr.s
+    loop_k:
+        plw p0, 0(t2)
+        plw p0, 0(t3)
+        qmadd.s p0, p0
+        addi t2, t2, 4
+        add  t3, t3, t3
+        addi s2, s2, -1
+        bnez s2, loop_k
+        qround.s p2
+        ecall
+    "#;
+    // A qmsub loop at 16 bits with a +2 counter step counting up from
+    // a negative start.
+    let msub = r#"
+        li t2, 0x1000
+        li t3, 0x1200
+        li t4, 8
+        li s2, -6
+        qclr.h
+    loop_k:
+        plh p0, 0(t2)
+        plh p1, 0(t3)
+        qmsub.h p0, p1
+        addi t2, t2, 2
+        add  t3, t3, t4
+        addi s2, s2, 2
+        bnez s2, loop_k
+        qround.h p2
+        ecall
+    "#;
+    let mut rng = Rng::new(0xA11A5);
+    for src in [aliased, msub] {
+        let prog = assemble(src).expect("assembles");
+        let instrs = Arc::clone(&prog.instrs);
+        let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
+        assert_identical(999, &instrs, &data);
+    }
+}

@@ -2,17 +2,21 @@
 # Perf-regression gate over BENCH_posit_kernels.json (see ROADMAP.md).
 #
 # Compares the freshly generated bench JSON against a baseline and fails
-# (exit 1) when the headline row's ns_per_op regressed by more than the
-# threshold. A missing baseline — or a baseline without the row — passes
-# trivially, so the gate can be wired into CI (non-blocking) before any
-# baseline numbers land in the repo.
+# (exit 1) when any gated row's ns_per_op regressed by more than the
+# threshold. A missing baseline — or a baseline without a given row —
+# passes that row trivially, so the gate can be wired into CI
+# (non-blocking) before any baseline numbers land in the repo.
 #
-# Usage: bench_compare.sh [fresh.json] [baseline.json] [bench-row] [threshold-%]
+# Gated rows (comma-separated, overridable via $3):
+#   gemm256_p32_quire_kernel  — the native decode-once kernel headline
+#   gemm_sim_p32_quire_n64    — the superblock simulator host-time row
+#
+# Usage: bench_compare.sh [fresh.json] [baseline.json] [rows] [threshold-%]
 set -euo pipefail
 
 fresh="${1:-BENCH_posit_kernels.json}"
 baseline="${2:-}"
-row="${3:-gemm256_p32_quire_kernel}"
+rows="${3:-gemm256_p32_quire_kernel,gemm_sim_p32_quire_n64}"
 threshold="${4:-25}"
 
 if [ ! -f "$fresh" ]; then
@@ -33,26 +37,31 @@ ns_per_op() {
         | head -n 1
 }
 
-new=$(ns_per_op "$fresh" "$row")
-old=$(ns_per_op "$baseline" "$row")
+fail=0
+for row in ${rows//,/ }; do
+    new=$(ns_per_op "$fresh" "$row")
+    old=$(ns_per_op "$baseline" "$row")
 
-if [ -z "$old" ]; then
-    echo "bench_compare: baseline has no '$row' row — skipping gate (PASS)"
-    exit 0
-fi
-if [ -z "$new" ]; then
-    echo "bench_compare: fresh run is missing the '$row' row" >&2
-    exit 1
-fi
+    if [ -z "$old" ]; then
+        echo "bench_compare: baseline has no '$row' row — skipping (PASS)"
+        continue
+    fi
+    if [ -z "$new" ]; then
+        echo "bench_compare: fresh run is missing the '$row' row" >&2
+        fail=1
+        continue
+    fi
 
-echo "bench_compare: $row ns_per_op baseline=$old fresh=$new (threshold +$threshold%)"
-awk -v old="$old" -v new="$new" -v pct="$threshold" 'BEGIN {
-    limit = old * (1 + pct / 100.0);
-    if (new > limit) {
-        printf("bench_compare: FAIL — %.3f ns/op exceeds %.3f (baseline %.3f +%s%%)\n",
-               new, limit, old, pct);
-        exit 1;
-    }
-    printf("bench_compare: PASS — %.3f ns/op within %.3f (baseline %.3f +%s%%)\n",
-           new, limit, old, pct);
-}'
+    echo "bench_compare: $row ns_per_op baseline=$old fresh=$new (threshold +$threshold%)"
+    awk -v old="$old" -v new="$new" -v pct="$threshold" -v row="$row" 'BEGIN {
+        limit = old * (1 + pct / 100.0);
+        if (new > limit) {
+            printf("bench_compare: FAIL %s — %.3f ns/op exceeds %.3f (baseline %.3f +%s%%)\n",
+                   row, new, limit, old, pct);
+            exit 1;
+        }
+        printf("bench_compare: PASS %s — %.3f ns/op within %.3f (baseline %.3f +%s%%)\n",
+               row, new, limit, old, pct);
+    }' || fail=1
+done
+exit "$fail"
