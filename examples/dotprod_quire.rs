@@ -74,10 +74,10 @@ fn main() {
     core.load_program(&prog);
     core.mem.write_u32_slice(0x1_0000, &a);
     core.mem.write_u32_slice(0x2_0000, &b);
-    core.x[10] = 0x1_0000;
-    core.x[11] = 0x2_0000;
-    core.x[12] = n as u64;
-    core.x[13] = 0x3_0000;
+    core.ctx.x[10] = 0x1_0000;
+    core.ctx.x[11] = 0x2_0000;
+    core.ctx.x[12] = n as u64;
+    core.ctx.x[13] = 0x3_0000;
     let stats = core.run();
     let sim = Posit32(core.mem.read_u32(0x3_0000)).to_f64();
     println!(

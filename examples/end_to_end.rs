@@ -17,8 +17,9 @@
 use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
 use percival::bench::harness::fmt_time;
 use percival::bench::mse::{gemm_native, mse, NativeKind};
-use percival::coordinator::{Backend, Coordinator, Job};
+use percival::coordinator::{Backend, Coordinator, Format, Job, SimPoolConfig};
 use percival::core::CoreConfig;
+use percival::posit::convert::from_f64_n;
 use percival::posit::Posit32;
 use percival::runtime::Runtime;
 use percival::testing::Rng;
@@ -117,6 +118,56 @@ fn main() -> percival::error::Result<()> {
         );
     }
     println!("metrics: {}", co.metrics.summary());
+
+    // Multi-hart Sim scheduler: a mixed-format batch time-sliced over a
+    // pool of simulated harts, with qsq/qlq quire spills at every
+    // context switch (the paper-§8 OS scenario). The bits must still
+    // match the Native backend exactly — contention moves time, not
+    // arithmetic.
+    println!("\n=== multi-hart Sim scheduler (mixed-format batch, quantum preemption) ===");
+    let mut jobs = Vec::new();
+    for fmt in Format::ALL {
+        let w = fmt.width();
+        let jn = 6;
+        let a: Vec<u64> =
+            (0..jn * jn).map(|_| from_f64_n(w, rng.range_f64(-1.0, 1.0))).collect();
+        let b: Vec<u64> =
+            (0..jn * jn).map(|_| from_f64_n(w, rng.range_f64(-1.0, 1.0))).collect();
+        jobs.push(Job::Gemm { fmt, n: jn, a: a.clone(), b: b.clone(), quire: true });
+        jobs.push(Job::Dot { fmt, a, b });
+    }
+    let pool = SimPoolConfig { harts: 2, quantum: 400, ..Default::default() };
+    let report = co.run_batch_sim(&jobs, &pool)?;
+    for (i, (job, out)) in jobs.iter().zip(&report.jobs).enumerate() {
+        let native = co.run(job.clone(), Backend::Native)?;
+        assert_eq!(out.bits64, native.bits64, "job {i} diverges from Native under preemption");
+        println!(
+            "  job {i:<2} {:<8} hart {}  completed at {}",
+            out.fmt.name(),
+            out.hart,
+            fmt_time(out.completion_s)
+        );
+    }
+    println!(
+        "  makespan {} over {} harts ({} jobs, quantum {} instrs)",
+        fmt_time(report.makespan_s),
+        pool.harts,
+        jobs.len(),
+        pool.quantum
+    );
+    for (h, (hart, util)) in report.harts.iter().zip(report.utilization()).enumerate() {
+        println!(
+            "  hart {h}: {:>5.1}% utilized, {} jobs, {} ctx switches, {} spill cycles \
+             ({:.2}% of its {} cycles)",
+            100.0 * util,
+            hart.jobs,
+            hart.stats.ctx_switches,
+            hart.stats.spill_cycles,
+            100.0 * hart.stats.spill_cycles as f64 / hart.stats.cycles.max(1) as f64,
+            hart.stats.cycles,
+        );
+    }
+
     co.shutdown();
     println!("\nEND-TO-END: all legs agree bit-for-bit ✓");
     Ok(())

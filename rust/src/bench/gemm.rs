@@ -8,7 +8,7 @@
 //!   [`crate::posit`] / host IEEE for the accuracy study → Table 6 (the
 //!   simulator is bit-identical; an integration test pins that).
 
-use crate::core::{Core, CoreConfig, Stats};
+use crate::core::{Core, CoreConfig, HartContext, Stats};
 use crate::isa::asm::{assemble, Program};
 use crate::isa::PositFmt;
 use crate::posit::convert::{from_f64_n, to_f64_n};
@@ -253,6 +253,25 @@ pub fn gemm_program_cached(variant: GemmVariant, n: usize) -> Program {
     map.entry((variant, n)).or_insert_with(|| gemm_program(variant, n)).clone()
 }
 
+/// Install the generated GEMM kernels' calling convention (`a0 = &A`,
+/// `a1 = &B`, `a2 = &C`) into a hart context — the single source of the
+/// argument-register assignment for the bench runners and the multi-hart
+/// scheduler alike.
+pub fn set_gemm_args(ctx: &mut HartContext, a: u64, b: u64, c: u64) {
+    ctx.x[10] = a;
+    ctx.x[11] = b;
+    ctx.x[12] = c;
+}
+
+/// Install the generated dot kernel's calling convention (`a0 = &A`,
+/// `a1 = &B`, `a2 = len`, `a3 = &out`); see [`set_gemm_args`].
+pub fn set_dot_args(ctx: &mut HartContext, a: u64, b: u64, len: u64, out: u64) {
+    ctx.x[10] = a;
+    ctx.x[11] = b;
+    ctx.x[12] = len;
+    ctx.x[13] = out;
+}
+
 /// Memory layout used by the GEMM runs.
 pub struct GemmLayout {
     pub a: u64,
@@ -339,11 +358,7 @@ pub fn run_gemm_sim(
     core.load_program(&prog);
     load_inputs(&mut core, variant, n, af, bf);
     let lo = layout(variant, n);
-    let set_args = |core: &mut Core| {
-        core.x[10] = lo.a;
-        core.x[11] = lo.b;
-        core.x[12] = lo.c;
-    };
+    let set_args = |core: &mut Core| set_gemm_args(&mut core.ctx, lo.a, lo.b, lo.c);
     if warm {
         set_args(&mut core);
         core.run();
@@ -387,11 +402,7 @@ pub fn run_gemm_sim_bits(
     let eb = fmt.bytes();
     core.mem.write_posit_slice(lo.a, eb, a);
     core.mem.write_posit_slice(lo.b, eb, b);
-    let set_args = |core: &mut Core| {
-        core.x[10] = lo.a;
-        core.x[11] = lo.b;
-        core.x[12] = lo.c;
-    };
+    let set_args = |core: &mut Core| set_gemm_args(&mut core.ctx, lo.a, lo.b, lo.c);
     if warm {
         set_args(&mut core);
         core.run();
@@ -443,10 +454,7 @@ pub fn run_dot_sim_bits(cfg: CoreConfig, fmt: PositFmt, a: &[u64], b: &[u64]) ->
     let out = base_b + ((b.len() * eb + 0xFFF) & !0xFFF) as u64;
     core.mem.write_posit_slice(base_a, eb, a);
     core.mem.write_posit_slice(base_b, eb, b);
-    core.x[10] = base_a;
-    core.x[11] = base_b;
-    core.x[12] = a.len() as u64;
-    core.x[13] = out;
+    set_dot_args(&mut core.ctx, base_a, base_b, a.len() as u64, out);
     let stats = core.run();
     let seconds = stats.seconds(&core.cfg);
     SimBitsRun { bits: core.mem.read_posit_slice(out, eb, 1), stats, seconds }

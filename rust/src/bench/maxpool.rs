@@ -176,8 +176,8 @@ pub fn run_pool_sim(core_cfg: CoreConfig, fmt: PoolFormat, cfg: &PoolConfig, war
         }
     }
     let set_args = |core: &mut Core| {
-        core.x[10] = inp;
-        core.x[11] = out;
+        core.ctx.x[10] = inp;
+        core.ctx.x[11] = out;
     };
     if warm {
         set_args(&mut core);

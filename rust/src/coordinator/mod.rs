@@ -25,8 +25,19 @@
 //! patterns outside the format's bit width, a backend that cannot run the
 //! format (PJRT compiles Posit32 kernels only) — come back as
 //! [`crate::error::Error`], never as worker panics.
+//!
+//! Since the hart-context refactor the Sim backend also exists in a
+//! **multi-hart** form: [`Coordinator::run_batch_sim`] time-slices a
+//! whole batch over a pool of simulated harts ([`sched`]), with
+//! quantum-based preemption whose context switches execute the
+//! `qsq`/`qlq` quire spill instructions — the paper-§8 OS scenario,
+//! reported as per-job completion latency under contention plus per-hart
+//! utilization and spill-cycle counters.
 
 pub mod json;
+pub mod sched;
+
+pub use sched::{HartReport, SimBatchReport, SimJobReport, SimPoolConfig};
 
 use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};
 use crate::core::CoreConfig;
@@ -146,6 +157,9 @@ enum Msg {
 pub struct Coordinator {
     tx: Sender<Msg>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Engine every Sim-backend job runs on (see
+    /// [`Coordinator::with_sim_engine`]) — including multi-hart batches.
+    sim_engine: Engine,
     pub metrics: Arc<Metrics>,
 }
 
@@ -207,7 +221,7 @@ impl Coordinator {
                 }
             }));
         }
-        Self { tx, workers, metrics }
+        Self { tx, workers, sim_engine: engine, metrics }
     }
 
     /// Submit a job; returns a receiver for the result.
@@ -229,6 +243,44 @@ impl Coordinator {
     pub fn run_batch(&self, jobs: Vec<(Job, Backend)>) -> Vec<Result<JobResult>> {
         let rxs: Vec<_> = jobs.into_iter().map(|(job, be)| self.submit(job, be)).collect();
         rxs.into_iter().map(|rx| rx.recv().expect("worker alive")).collect()
+    }
+
+    /// The multi-hart Sim batch API: time-slice `jobs` over a pool of
+    /// simulated harts with quantum preemption and `qsq`/`qlq` quire
+    /// context switches (see [`sched`]). Results are bit-identical to
+    /// running each job alone (`Backend::Native` or single-job Sim);
+    /// what contention changes is the reported timing — per-job
+    /// completion latency and the pool's makespan — plus the context
+    /// switch and spill-cycle counters in each hart's [`Stats`]. Unlike
+    /// [`Coordinator::run_batch`], a malformed job rejects the whole
+    /// batch up front, before any simulation.
+    ///
+    /// The coordinator's pinned Sim engine ([`Coordinator::with_sim_engine`])
+    /// applies here exactly as it does to single Sim jobs: the pool's
+    /// `core.engine` is overridden, so pinning the oracle affects every
+    /// Sim path. (Call [`sched::run_batch_sim`] directly to control the
+    /// engine per batch.)
+    ///
+    /// [`Stats`]: crate::core::Stats
+    pub fn run_batch_sim(&self, jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+        self.metrics.submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let mut pool = *pool;
+        pool.core.engine = self.sim_engine;
+        let res = sched::run_batch_sim(jobs, &pool);
+        self.metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match &res {
+            Ok(_) => {
+                self.metrics.completed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // A rejected batch rejects every job in it, so the error
+                // count matches the submitted count (submitted always
+                // equals completed + errors once a batch settles).
+                self.metrics.errors.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            }
+        }
+        res
     }
 
     /// Run the same job on several backends and require bit-identical
@@ -304,16 +356,12 @@ fn sim_cfg(engine: Engine) -> CoreConfig {
     CoreConfig { engine, ..CoreConfig::default() }
 }
 
-fn execute(
-    job: &Job,
-    backend: Backend,
-    artifacts: &Option<String>,
-    rt: &mut Option<Runtime>,
-    engine: Engine,
-) -> Result<JobResult> {
-    // Validate shapes up front, for every backend: a malformed job must be
-    // an Err to the client, not an out-of-bounds / assert panic inside a
-    // worker thread (which would also stop that worker draining the queue).
+/// Validate a job's shape (matrix lengths vs `n`, dot operand lengths).
+/// Shared by the worker [`execute`] path and the multi-hart scheduler so
+/// a malformed job is an `Err` to the client everywhere — never an
+/// out-of-bounds / assert panic inside a worker thread (which would also
+/// stop that worker draining the queue).
+fn check_shape(job: &Job) -> Result<()> {
     match job {
         Job::GemmP32 { n, a, b, .. } => {
             crate::ensure!(
@@ -350,6 +398,17 @@ fn execute(
             );
         }
     }
+    Ok(())
+}
+
+fn execute(
+    job: &Job,
+    backend: Backend,
+    artifacts: &Option<String>,
+    rt: &mut Option<Runtime>,
+    engine: Engine,
+) -> Result<JobResult> {
+    check_shape(job)?;
     match (job, backend) {
         (Job::GemmP32 { n, a, b, quire }, Backend::Native) => {
             let bits = native_gemm(*n, a, b, *quire);
@@ -715,6 +774,40 @@ mod tests {
             Backend::Native,
         );
         assert_eq!(ok.unwrap().bits, vec![0x40]);
+        co.shutdown();
+    }
+
+    #[test]
+    fn multi_hart_sim_batch_end_to_end() {
+        // run_batch_sim through the coordinator: bits identical both to
+        // Backend::Native and to the one-at-a-time Sim backend; metrics
+        // accounted; spill cycles visible once jobs outnumber harts.
+        use crate::posit::convert::from_f64_n;
+        let mut rng = Rng::new(0x4A27);
+        let n = 5;
+        let mut jobs = Vec::new();
+        for fmt in [Format::P16, Format::P32, Format::P64] {
+            let w = fmt.width();
+            let a: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-2.0, 2.0))).collect();
+            let b: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-2.0, 2.0))).collect();
+            jobs.push(Job::Gemm { fmt, n, a, b, quire: true });
+        }
+        let co = Coordinator::new(2, None);
+        let pool = SimPoolConfig { harts: 1, quantum: 120, ..Default::default() };
+        let report = co.run_batch_sim(&jobs, &pool).expect("batch schedules");
+        for (i, job) in jobs.iter().enumerate() {
+            let native = co.run(job.clone(), Backend::Native).unwrap();
+            let solo_sim = co.run(job.clone(), Backend::Sim).unwrap();
+            assert_eq!(report.jobs[i].bits64, native.bits64, "job {i} vs Native");
+            assert_eq!(report.jobs[i].bits64, solo_sim.bits64, "job {i} vs solo Sim");
+        }
+        assert_eq!(report.harts.len(), 1);
+        assert!(report.harts[0].stats.ctx_switches > 0);
+        assert!(report.harts[0].stats.spill_cycles > 0);
+        assert!(report.makespan_s > 0.0);
+        assert!(co.metrics.completed.load(Ordering::Relaxed) >= 3);
         co.shutdown();
     }
 

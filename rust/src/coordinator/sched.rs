@@ -1,0 +1,543 @@
+//! Preemptive multi-hart Sim scheduler — time-slicing a batch of jobs
+//! over a pool of simulated PERCIVAL harts.
+//!
+//! This is the paper-§8 scenario the `qsq`/`qlq` quire spill ISA exists
+//! for: more jobs than harts, quantum-based preemption, and a context
+//! switch that must save and restore the one piece of architectural
+//! state PERCIVAL could not originally context-switch — the 16·n-bit
+//! quire. The register files and PC travel as a [`HartContext`] (the
+//! abstracted trap-handler stores); the quire goes through the *actual
+//! instructions* on the simulated core, so every switch pays the
+//! width-scaled multi-beat D$ walk and the cost lands in the hart's
+//! cycle count ([`Stats::spill_cycles`] / [`Stats::ctx_switches`]).
+//!
+//! ## Model
+//!
+//! - Each hart is one [`Core`]: its own memory, D$ and timeline. Jobs
+//!   are assigned round-robin at submission; each job gets a private
+//!   page-aligned region of its hart's memory (inputs, outputs, and a
+//!   quire spill slot), like processes under an OS.
+//! - A quantum is `quantum` retired instructions, enforced through the
+//!   core's `max_instrs` valve; [`Core::halted_on_exit`] distinguishes a
+//!   job's own ECALL from a quantum expiry.
+//! - On preemption the scheduler clones the context out, then runs the
+//!   two-instruction spill kernel `qsq.{fmt} (t6); ecall` on the core
+//!   (clobbering only state already saved); resume runs `qlq.{fmt}
+//!   (t6); ecall` and grafts the instruction-restored quire into the
+//!   re-installed context — the memory image is authoritative for the
+//!   quire, exactly as it would be under a real OS.
+//! - Harts are independent and deterministic: the same batch on the same
+//!   pool always yields the same per-job bits *and* the same cycle
+//!   counts, on either execution engine ([`Engine`] identity holds
+//!   through the scheduler because preemption is driven by `max_instrs`,
+//!   which both engines trip on the same instruction).
+//!
+//! Results are bit-identical to running each job alone on
+//! `Backend::Native` (pinned by the tests below): preemption changes
+//! *when* cycles happen, never *what* the arithmetic produces.
+
+use super::{check_patterns_n, check_shape, Format, Job};
+use crate::bench::gemm::{
+    dot_program, gemm_program_cached, set_dot_args, set_gemm_args, GemmVariant,
+};
+use crate::core::{Core, CoreConfig, HartContext, Stats};
+use crate::error::Result;
+use crate::isa::asm::{assemble, Program};
+use crate::isa::PositFmt;
+use std::sync::{Arc, OnceLock};
+
+/// Configuration of the simulated hart pool.
+#[derive(Debug, Clone, Copy)]
+pub struct SimPoolConfig {
+    /// Number of simulated harts the batch is scheduled over.
+    pub harts: usize,
+    /// Quantum in retired instructions per time slice.
+    pub quantum: u64,
+    /// Per-hart core configuration (engine, clock, cache; the memory
+    /// size is grown automatically to fit the hart's job regions).
+    pub core: CoreConfig,
+}
+
+impl Default for SimPoolConfig {
+    fn default() -> Self {
+        Self { harts: 2, quantum: 10_000, core: CoreConfig::default() }
+    }
+}
+
+/// One job's outcome under contention.
+#[derive(Debug, Clone)]
+pub struct SimJobReport {
+    /// Result bit patterns (`u64` view, lossless for every width).
+    pub bits64: Vec<u64>,
+    pub fmt: Format,
+    /// Hart the job ran on.
+    pub hart: usize,
+    /// Simulated seconds from batch start until this job completed —
+    /// its latency under contention, context switches included.
+    pub completion_s: f64,
+}
+
+/// One hart's aggregate outcome.
+#[derive(Debug, Clone)]
+pub struct HartReport {
+    /// The hart's final counters; `ctx_switches` and `spill_cycles` are
+    /// filled in by the scheduler.
+    pub stats: Stats,
+    /// Jobs that ran to completion on this hart.
+    pub jobs: usize,
+}
+
+/// The whole batch's outcome.
+#[derive(Debug, Clone)]
+pub struct SimBatchReport {
+    /// Per-job outcomes, in submission order.
+    pub jobs: Vec<SimJobReport>,
+    /// Per-hart outcomes.
+    pub harts: Vec<HartReport>,
+    /// Simulated makespan: the slowest hart's total time.
+    pub makespan_s: f64,
+}
+
+impl SimBatchReport {
+    /// Makespan in cycles (the slowest hart's timeline).
+    pub fn makespan_cycles(&self) -> u64 {
+        self.harts.iter().map(|h| h.stats.cycles).max().unwrap_or(0)
+    }
+
+    /// Per-hart utilization: the fraction of the makespan each hart
+    /// spent executing (its own timeline length over the longest one).
+    pub fn utilization(&self) -> Vec<f64> {
+        let m = self.makespan_cycles().max(1) as f64;
+        self.harts.iter().map(|h| h.stats.cycles as f64 / m).collect()
+    }
+}
+
+/// The two-instruction context-switch kernels, one per (direction,
+/// width): `qsq.{b,h,s,d} (t6); ecall` and the `qlq` counterparts.
+/// Cached so every switch reloads the same shared text segment.
+fn switch_prog(restore: bool, fmt: PositFmt) -> &'static Program {
+    static CACHE: OnceLock<Vec<Program>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| {
+        let mut v = Vec::with_capacity(8);
+        for base in ["qsq.s", "qlq.s"] {
+            for fmt in PositFmt::ALL {
+                let mn = crate::isa::fmt_mnemonic(base, fmt);
+                v.push(assemble(&format!("{mn} (t6)\necall")).expect("switch kernel assembles"));
+            }
+        }
+        v
+    });
+    &cache[(restore as usize) * 4 + fmt as usize]
+}
+
+/// A job staged onto a hart: program, region addresses, saved context.
+struct Slot {
+    /// Index in the submitted batch.
+    idx: usize,
+    fmt: PositFmt,
+    program: Program,
+    /// Input bit patterns and where they go.
+    a: Vec<u64>,
+    b: Vec<u64>,
+    a_addr: u64,
+    b_addr: u64,
+    out_addr: u64,
+    out_len: usize,
+    /// The job's quire save area.
+    spill_addr: u64,
+    /// Saved architectural state (initial register arguments before the
+    /// first dispatch, the preemption snapshot afterwards).
+    ctx: HartContext,
+    /// Whether the job has executed at least one quantum (and therefore
+    /// owns a live quire image to restore).
+    started: bool,
+    done: bool,
+    completion_cycle: u64,
+    bits: Vec<u64>,
+}
+
+/// Validate one job and stage it (addresses are assigned later, once
+/// jobs are assigned to harts).
+fn stage(idx: usize, job: &Job) -> Result<Slot> {
+    // Same shape/pattern validation as the worker path, with the batch
+    // index prefixed so a rejected batch names the offending job.
+    check_shape(job).map_err(|e| crate::err!("job {idx}: {e}"))?;
+    // The legacy fixed-format jobs are equivalent to their tagged forms.
+    let (fmt, n, a, b, quire, dot) = match job {
+        Job::GemmP32 { n, a, b, quire } => (
+            Format::P32,
+            *n,
+            a.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
+            b.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
+            *quire,
+            false,
+        ),
+        Job::DotP32 { a, b } => (
+            Format::P32,
+            0,
+            a.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
+            b.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
+            true,
+            true,
+        ),
+        Job::Gemm { fmt, n, a, b, quire } => (*fmt, *n, a.clone(), b.clone(), *quire, false),
+        Job::Dot { fmt, a, b } => (*fmt, 0, a.clone(), b.clone(), true, true),
+    };
+    check_patterns_n(fmt.width(), fmt.name(), "a", &a)
+        .and_then(|()| check_patterns_n(fmt.width(), fmt.name(), "b", &b))
+        .map_err(|e| crate::err!("job {idx}: {e}"))?;
+    let (program, out_len) = if dot {
+        (dot_program(fmt, a.len()), 1)
+    } else {
+        (gemm_program_cached(GemmVariant::posit(fmt, quire), n), n * n)
+    };
+    Ok(Slot {
+        idx,
+        fmt,
+        program,
+        a,
+        b,
+        a_addr: 0,
+        b_addr: 0,
+        out_addr: 0,
+        out_len,
+        spill_addr: 0,
+        ctx: HartContext::new(),
+        started: false,
+        done: false,
+        completion_cycle: 0,
+        bits: Vec::new(),
+    })
+}
+
+/// Assign the slot's region addresses starting at `base` and install the
+/// kernel's argument registers (through the shared `bench::gemm` calling
+/// convention helpers); returns one past the region's end (page-aligned).
+fn place(slot: &mut Slot, base: u64, dot: bool) -> u64 {
+    let page = |x: u64| (x + 0xFFF) & !0xFFF;
+    let eb = slot.fmt.bytes() as u64;
+    slot.a_addr = base;
+    slot.b_addr = page(slot.a_addr + slot.a.len() as u64 * eb);
+    slot.out_addr = page(slot.b_addr + slot.b.len() as u64 * eb);
+    slot.spill_addr = page(slot.out_addr + slot.out_len as u64 * eb);
+    if dot {
+        set_dot_args(
+            &mut slot.ctx,
+            slot.a_addr,
+            slot.b_addr,
+            slot.a.len() as u64,
+            slot.out_addr,
+        );
+    } else {
+        set_gemm_args(&mut slot.ctx, slot.a_addr, slot.b_addr, slot.out_addr);
+    }
+    page(slot.spill_addr + slot.fmt.quire_bytes() as u64)
+}
+
+fn is_dot(job: &Job) -> bool {
+    matches!(job, Job::Dot { .. } | Job::DotP32 { .. })
+}
+
+/// Run one hart's job queue to completion: round-robin time slices with
+/// `qsq`/`qlq` context switches. Returns the hart's stats (spill
+/// counters filled).
+fn run_hart(mut cfg: CoreConfig, quantum: u64, slots: &mut [Slot], mem_end: u64) -> Stats {
+    // Grow the hart's memory to fit its regions: `mem_end` is the last
+    // `place` return value (page-aligned high-water mark).
+    cfg.mem_size = cfg.mem_size.max(mem_end as usize);
+    cfg.max_instrs = 0;
+    let mut core = Core::new(cfg);
+    for s in slots.iter() {
+        let eb = s.fmt.bytes();
+        core.mem.write_posit_slice(s.a_addr, eb, &s.a);
+        core.mem.write_posit_slice(s.b_addr, eb, &s.b);
+    }
+    let mut switches = 0u64;
+    let mut spill_cycles = 0u64;
+    // `active`: the job whose state is live on the core and must be
+    // spilled before another runs (None right after a job completes).
+    // `last`: the rotation pointer — the slot most recently dispatched,
+    // which keeps the round-robin order fair even across completions
+    // (a finished job clears `active` but must not reset the rotation).
+    let mut active: Option<usize> = None;
+    let mut last: Option<usize> = None;
+    loop {
+        // Round-robin: the next pending slot strictly after the last
+        // dispatched one (cyclically); the same job again when it is the
+        // only one pending.
+        let n = slots.len();
+        let start = last.map_or(0, |a| (a + 1) % n);
+        let mut next = None;
+        for k in 0..n {
+            let i = (start + k) % n;
+            if !slots[i].done {
+                next = Some(i);
+                break;
+            }
+        }
+        let Some(cur) = next else { break };
+        last = Some(cur);
+        if active == Some(cur) {
+            // Sole remaining job: resume in place, no switch.
+            core.clear_halt();
+        } else {
+            let t0 = core.cycle;
+            core.cfg.max_instrs = 0;
+            if let Some(prev) = active {
+                // Preempt: snapshot the context, then spill the quire
+                // through the real instruction (t6 and the PC are
+                // clobbered, but the snapshot already holds them).
+                slots[prev].ctx = core.save_context();
+                core.ctx.x[31] = slots[prev].spill_addr;
+                core.load_program(switch_prog(false, slots[prev].fmt));
+                core.run();
+            }
+            if slots[cur].started {
+                // Resume: restore the quire through qlq first, then
+                // install the saved context with the instruction-restored
+                // quire grafted in (the memory image is authoritative).
+                core.ctx.x[31] = slots[cur].spill_addr;
+                core.load_program(switch_prog(true, slots[cur].fmt));
+                core.run();
+                let quire = core.ctx.quire.clone();
+                core.load_instrs(Arc::clone(&slots[cur].program.instrs));
+                core.restore_context(slots[cur].ctx.clone());
+                core.ctx.quire = quire;
+            } else {
+                // First dispatch: a fresh context, no quire image yet.
+                core.load_instrs(Arc::clone(&slots[cur].program.instrs));
+                core.restore_context(slots[cur].ctx.clone());
+            }
+            switches += 1;
+            spill_cycles += core.cycle - t0;
+            active = Some(cur);
+        }
+        core.cfg.max_instrs = core.instret.saturating_add(quantum);
+        core.run();
+        if core.halted_on_exit() {
+            let s = &mut slots[cur];
+            s.done = true;
+            s.completion_cycle = core.cycle;
+            s.bits = core.mem.read_posit_slice(s.out_addr, s.fmt.bytes(), s.out_len);
+            // A finished job needs no save on the next dispatch.
+            active = None;
+        } else {
+            slots[cur].started = true;
+        }
+    }
+    let mut stats = core.stats();
+    stats.ctx_switches = switches;
+    stats.spill_cycles = spill_cycles;
+    stats
+}
+
+/// Schedule `jobs` over a pool of simulated harts. Jobs are validated up
+/// front (a malformed job rejects the batch before any simulation), then
+/// assigned round-robin and time-sliced per hart. See the module doc for
+/// the model.
+pub fn run_batch_sim(jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+    crate::ensure!(pool.harts >= 1, "hart pool must have at least one hart");
+    crate::ensure!(pool.quantum >= 1, "quantum must be at least one instruction");
+    let mut staged = Vec::with_capacity(jobs.len());
+    for (idx, job) in jobs.iter().enumerate() {
+        staged.push((stage(idx, job)?, is_dot(job)));
+    }
+    // Round-robin assignment, then per-hart placement: `place` returns
+    // each region's end, which is the next slot's base on that hart.
+    let mut per_hart: Vec<Vec<Slot>> = (0..pool.harts).map(|_| Vec::new()).collect();
+    let mut next_base = vec![0x1000u64; pool.harts];
+    for (i, (mut slot, dot)) in staged.into_iter().enumerate() {
+        let hart = i % pool.harts;
+        next_base[hart] = place(&mut slot, next_base[hart], dot);
+        per_hart[hart].push(slot);
+    }
+    let freq = pool.core.freq_hz as f64;
+    let mut harts = Vec::with_capacity(pool.harts);
+    let mut outcomes: Vec<Option<SimJobReport>> = (0..jobs.len()).map(|_| None).collect();
+    for (h, slots) in per_hart.iter_mut().enumerate() {
+        let stats = if slots.is_empty() {
+            Stats::default()
+        } else {
+            run_hart(pool.core, pool.quantum, slots, next_base[h])
+        };
+        for s in slots.iter_mut() {
+            debug_assert!(s.done, "scheduler left job {} unfinished", s.idx);
+            outcomes[s.idx] = Some(SimJobReport {
+                bits64: std::mem::take(&mut s.bits),
+                fmt: s.fmt,
+                hart: h,
+                completion_s: s.completion_cycle as f64 / freq,
+            });
+        }
+        harts.push(HartReport { stats, jobs: slots.len() });
+    }
+    let jobs_out: Vec<SimJobReport> =
+        outcomes.into_iter().map(|o| o.expect("every job scheduled")).collect();
+    let makespan_s =
+        harts.iter().map(|h| h.stats.cycles).max().unwrap_or(0) as f64 / freq;
+    Ok(SimBatchReport { jobs: jobs_out, harts, makespan_s })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, Coordinator, Engine};
+    use crate::posit::convert::from_f64_n;
+    use crate::testing::Rng;
+
+    /// A mixed-format batch: quire and no-quire GEMMs plus dots at every
+    /// width — more jobs than harts, tiny quantum, so every job is
+    /// preempted mid-kernel many times.
+    fn mixed_batch(seed: u64) -> Vec<Job> {
+        let mut rng = Rng::new(seed);
+        let mut jobs = Vec::new();
+        for fmt in Format::ALL {
+            let w = fmt.width();
+            let n = 4;
+            let a: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-2.0, 2.0))).collect();
+            let b: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(w, rng.range_f64(-2.0, 2.0))).collect();
+            jobs.push(Job::Gemm { fmt, n, a: a.clone(), b: b.clone(), quire: true });
+            jobs.push(Job::Gemm { fmt, n, a: a.clone(), b: b.clone(), quire: false });
+            jobs.push(Job::Dot { fmt, a, b });
+        }
+        jobs
+    }
+
+    #[test]
+    fn multi_hart_batch_matches_native_bitwise() {
+        // The acceptance pin: a preempted, time-sliced batch returns the
+        // same bits as each job alone on Backend::Native, and the
+        // context-switch spill cycles are visible in the hart stats.
+        let jobs = mixed_batch(0x5C4ED);
+        let pool = SimPoolConfig { harts: 3, quantum: 60, ..Default::default() };
+        let report = run_batch_sim(&jobs, &pool).expect("batch schedules");
+        assert_eq!(report.jobs.len(), jobs.len());
+        let co = Coordinator::new(2, None);
+        for (i, job) in jobs.iter().enumerate() {
+            let native = co.run(job.clone(), Backend::Native).expect("native runs");
+            assert_eq!(
+                report.jobs[i].bits64, native.bits64,
+                "job {i} diverges from Native under preemption"
+            );
+            assert!(report.jobs[i].completion_s > 0.0);
+            assert!(report.jobs[i].completion_s <= report.makespan_s + 1e-12);
+        }
+        co.shutdown();
+        // With 12 jobs on 3 harts at quantum 60, every hart context
+        // switches and pays quire spill cycles.
+        for h in &report.harts {
+            assert!(h.stats.ctx_switches > 0, "hart never switched");
+            assert!(h.stats.spill_cycles > 0, "hart never paid spill cycles");
+            assert!(h.stats.cycles > 0);
+        }
+        let util = report.utilization();
+        assert!(util.iter().any(|&u| (u - 1.0).abs() < 1e-12), "some hart defines makespan");
+    }
+
+    #[test]
+    fn scheduler_is_engine_identical() {
+        // Superblock vs oracle through the whole scheduler: per-job bits,
+        // per-hart stats (incl. spill counters) and makespan all equal —
+        // quantum preemption trips both engines on the same instruction.
+        let jobs = mixed_batch(0xE2A1);
+        let mut reports = Vec::new();
+        for engine in [Engine::Superblock, Engine::Oracle] {
+            let pool = SimPoolConfig {
+                harts: 2,
+                quantum: 45,
+                core: CoreConfig { engine, ..CoreConfig::default() },
+            };
+            reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
+        }
+        let (a, b) = (&reports[0], &reports[1]);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.bits64, y.bits64);
+            assert_eq!(x.completion_s, y.completion_s);
+            assert_eq!(x.hart, y.hart);
+        }
+        for (x, y) in a.harts.iter().zip(&b.harts) {
+            assert_eq!(x.stats, y.stats);
+        }
+    }
+
+    #[test]
+    fn uncontended_jobs_pay_no_spills() {
+        // One hart per job and a huge quantum: every job runs to
+        // completion on first dispatch, so no qsq/qlq ever executes.
+        let jobs = mixed_batch(0x0).into_iter().take(2).collect::<Vec<_>>();
+        let pool = SimPoolConfig { harts: 2, quantum: u64::MAX / 2, ..Default::default() };
+        let report = run_batch_sim(&jobs, &pool).expect("batch schedules");
+        for h in &report.harts {
+            assert_eq!(h.stats.spill_cycles, 0, "uncontended hart paid spill cycles");
+            assert_eq!(h.stats.ctx_switches, 1, "one dispatch per hart");
+        }
+    }
+
+    #[test]
+    fn contention_slows_completion_but_not_bits() {
+        // The same job completes later under contention than alone, and
+        // the spill overhead is visible in the makespan.
+        let mut rng = Rng::new(0xC0);
+        let n = 6;
+        let a: Vec<u64> = (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
+        let b: Vec<u64> = (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
+        let job = Job::Gemm { fmt: Format::P32, n, a, b, quire: true };
+        let solo = run_batch_sim(
+            std::slice::from_ref(&job),
+            &SimPoolConfig { harts: 1, quantum: u64::MAX / 2, ..Default::default() },
+        )
+        .unwrap();
+        let contended = run_batch_sim(
+            &[job.clone(), job.clone(), job],
+            &SimPoolConfig { harts: 1, quantum: 100, ..Default::default() },
+        )
+        .unwrap();
+        for j in &contended.jobs {
+            assert_eq!(j.bits64, solo.jobs[0].bits64, "contention changed the bits");
+            assert!(
+                j.completion_s > solo.jobs[0].completion_s,
+                "contended job cannot finish faster than solo"
+            );
+        }
+        assert!(contended.harts[0].stats.spill_cycles > 0);
+        // Time-slicing three identical jobs costs at least three solo
+        // runs' worth of cycles plus the switches.
+        assert!(contended.makespan_s > 3.0 * solo.makespan_s);
+    }
+
+    #[test]
+    fn malformed_jobs_reject_the_batch() {
+        let bad_shape =
+            Job::Gemm { fmt: Format::P16, n: 3, a: vec![0; 9], b: vec![0; 8], quire: true };
+        assert!(run_batch_sim(&[bad_shape], &SimPoolConfig::default()).is_err());
+        let bad_bits =
+            Job::Gemm { fmt: Format::P8, n: 1, a: vec![0x100], b: vec![0], quire: true };
+        assert!(run_batch_sim(&[bad_bits], &SimPoolConfig::default()).is_err());
+        let bad_pool = SimPoolConfig { harts: 0, ..Default::default() };
+        assert!(run_batch_sim(&[], &bad_pool).is_err());
+    }
+
+    #[test]
+    fn legacy_jobs_schedule_like_tagged_ones() {
+        let mut rng = Rng::new(0x7E6);
+        let n = 4;
+        let a: Vec<u32> =
+            (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0)) as u32).collect();
+        let b: Vec<u32> =
+            (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0)) as u32).collect();
+        let legacy = Job::GemmP32 { n, a: a.clone(), b: b.clone(), quire: true };
+        let tagged = Job::Gemm {
+            fmt: Format::P32,
+            n,
+            a: a.iter().map(|&x| x as u64).collect(),
+            b: b.iter().map(|&x| x as u64).collect(),
+            quire: true,
+        };
+        let pool = SimPoolConfig { harts: 1, quantum: 80, ..Default::default() };
+        let r = run_batch_sim(&[legacy, tagged], &pool).unwrap();
+        assert_eq!(r.jobs[0].bits64, r.jobs[1].bits64);
+    }
+}

@@ -324,8 +324,8 @@ impl Core {
     pub(super) fn run_superblock(&mut self) {
         let plan = std::sync::Arc::clone(&self.plan);
         while !self.halted {
-            let idx = (self.pc / 4) as usize;
-            if self.pc % 4 != 0 || idx >= plan.block_of.len() {
+            let idx = (self.ctx.pc / 4) as usize;
+            if self.ctx.pc % 4 != 0 || idx >= plan.block_of.len() {
                 // Off the end of the text segment (or an unaligned JALR
                 // landing): take the oracle path, which halts identically.
                 if !self.step() {
@@ -371,11 +371,15 @@ impl Core {
             self.set_ready(pi.rd, ins.rd, t + lat);
             self.unit_free[pi.unit as usize] = match pi.unit {
                 Unit::Pau | Unit::Fpu | Unit::Mul => t + lat,
+                // Quire spills hold the D$ port for the whole multi-beat
+                // walk (`lat` = pre-resolved latency_for + miss penalties),
+                // mirroring the oracle's arm line for line.
+                Unit::Lsu if matches!(ins.op, Op::Qlq | Op::Qsq) => t + lat,
                 Unit::Lsu => t + 1 + eff.mem_extra,
                 _ => t + 1,
             };
             self.cycle = t + 1;
-            let next_seq = self.pc.wrapping_add(4);
+            let next_seq = self.ctx.pc.wrapping_add(4);
             if pi.unit == Unit::Branch {
                 let taken = eff.taken;
                 let target = eff.next_pc.unwrap_or(next_seq);
@@ -384,7 +388,7 @@ impl Core {
                     Op::Jalr => next_seq,
                     _ => {
                         if ins.imm < 0 {
-                            self.pc.wrapping_add(ins.imm as u64)
+                            self.ctx.pc.wrapping_add(ins.imm as u64)
                         } else {
                             next_seq
                         }
@@ -395,12 +399,13 @@ impl Core {
                     self.mispredicts += 1;
                     self.cycle += self.cfg.mispredict_penalty;
                 }
-                self.pc = actual;
+                self.ctx.pc = actual;
             } else {
-                self.pc = eff.next_pc.unwrap_or(next_seq);
+                self.ctx.pc = eff.next_pc.unwrap_or(next_seq);
             }
             if eff.halt {
                 self.halted = true;
+                self.halt_exit = true;
             }
             if self.retire() {
                 return;
@@ -419,26 +424,26 @@ impl Core {
         loop {
             // ── load a: pl* pa, imm_a(ra) ─────────────────────────────
             let t = self.issue(self.ready_of(RegClass::X, f.ra), Unit::Lsu);
-            let addr = self.x[f.ra as usize].wrapping_add(f.imm_a as u64);
+            let addr = self.ctx.x[f.ra as usize].wrapping_add(f.imm_a as u64);
             let me = self.dcache.access(addr);
-            self.p[f.pa as usize] = self.read_posit_elem(addr, f.fmt);
+            self.ctx.p[f.pa as usize] = self.read_posit_elem(addr, f.fmt);
             self.ready_p[f.pa as usize] = t + f.load_lat + me;
             self.unit_free[Unit::Lsu as usize] = t + 1 + me;
             self.cycle = t + 1;
-            self.pc = self.pc.wrapping_add(4);
+            self.ctx.pc = self.ctx.pc.wrapping_add(4);
             if self.retire() {
                 return;
             }
 
             // ── load b: pl* pb, imm_b(rb) ─────────────────────────────
             let t = self.issue(self.ready_of(RegClass::X, f.rb), Unit::Lsu);
-            let addr = self.x[f.rb as usize].wrapping_add(f.imm_b as u64);
+            let addr = self.ctx.x[f.rb as usize].wrapping_add(f.imm_b as u64);
             let me = self.dcache.access(addr);
-            self.p[f.pb as usize] = self.read_posit_elem(addr, f.fmt);
+            self.ctx.p[f.pb as usize] = self.read_posit_elem(addr, f.fmt);
             self.ready_p[f.pb as usize] = t + f.load_lat + me;
             self.unit_free[Unit::Lsu as usize] = t + 1 + me;
             self.cycle = t + 1;
-            self.pc = self.pc.wrapping_add(4);
+            self.ctx.pc = self.ctx.pc.wrapping_add(4);
             if self.retire() {
                 return;
             }
@@ -446,26 +451,26 @@ impl Core {
             // ── qmadd/qmsub pa, pb ────────────────────────────────────
             let t_ops = self.ready_p[f.pa as usize].max(self.ready_p[f.pb as usize]);
             let t = self.issue(t_ops, Unit::Pau);
-            let (a, b) = (self.p[f.pa as usize] & mask, self.p[f.pb as usize] & mask);
+            let (a, b) = (self.ctx.p[f.pa as usize] & mask, self.ctx.p[f.pb as usize] & mask);
             if f.sub {
-                self.quire.msub(f.fmt, a, b);
+                self.ctx.quire.msub(f.fmt, a, b);
             } else {
-                self.quire.madd(f.fmt, a, b);
+                self.ctx.quire.madd(f.fmt, a, b);
             }
             self.unit_free[Unit::Pau as usize] = t + f.mac_lat;
             self.cycle = t + 1;
-            self.pc = self.pc.wrapping_add(4);
+            self.ctx.pc = self.ctx.pc.wrapping_add(4);
             if self.retire() {
                 return;
             }
 
             // ── addi ra, ra, step_a ───────────────────────────────────
             let t = self.issue(self.ready_of(RegClass::X, f.ra), Unit::Alu);
-            self.x[f.ra as usize] = self.x[f.ra as usize].wrapping_add(f.step_a as u64);
+            self.ctx.x[f.ra as usize] = self.ctx.x[f.ra as usize].wrapping_add(f.step_a as u64);
             self.set_ready(RegClass::X, f.ra, t + 1);
             self.unit_free[Unit::Alu as usize] = t + 1;
             self.cycle = t + 1;
-            self.pc = self.pc.wrapping_add(4);
+            self.ctx.pc = self.ctx.pc.wrapping_add(4);
             if self.retire() {
                 return;
             }
@@ -474,27 +479,27 @@ impl Core {
             let (t_ops, add) = match f.rs_b {
                 Some(rs) => (
                     self.ready_of(RegClass::X, f.rb).max(self.ready_of(RegClass::X, rs)),
-                    self.x[rs as usize],
+                    self.ctx.x[rs as usize],
                 ),
                 None => (self.ready_of(RegClass::X, f.rb), f.step_b as u64),
             };
             let t = self.issue(t_ops, Unit::Alu);
-            self.x[f.rb as usize] = self.x[f.rb as usize].wrapping_add(add);
+            self.ctx.x[f.rb as usize] = self.ctx.x[f.rb as usize].wrapping_add(add);
             self.set_ready(RegClass::X, f.rb, t + 1);
             self.unit_free[Unit::Alu as usize] = t + 1;
             self.cycle = t + 1;
-            self.pc = self.pc.wrapping_add(4);
+            self.ctx.pc = self.ctx.pc.wrapping_add(4);
             if self.retire() {
                 return;
             }
 
             // ── addi rc, rc, step_c ───────────────────────────────────
             let t = self.issue(self.ready_of(RegClass::X, f.rc), Unit::Alu);
-            self.x[f.rc as usize] = self.x[f.rc as usize].wrapping_add(f.step_c as u64);
+            self.ctx.x[f.rc as usize] = self.ctx.x[f.rc as usize].wrapping_add(f.step_c as u64);
             self.set_ready(RegClass::X, f.rc, t + 1);
             self.unit_free[Unit::Alu as usize] = t + 1;
             self.cycle = t + 1;
-            self.pc = self.pc.wrapping_add(4);
+            self.ctx.pc = self.ctx.pc.wrapping_add(4);
             if self.retire() {
                 return;
             }
@@ -503,14 +508,14 @@ impl Core {
             let t = self.issue(self.ready_of(RegClass::X, f.rc), Unit::Branch);
             self.unit_free[Unit::Branch as usize] = t + 1;
             self.cycle = t + 1;
-            let taken = self.x[f.rc as usize] != 0;
+            let taken = self.ctx.x[f.rc as usize] != 0;
             if taken {
-                self.pc = self.pc.wrapping_add(-24i64 as u64);
+                self.ctx.pc = self.ctx.pc.wrapping_add(-24i64 as u64);
             } else {
                 // Loop exit: the only mispredict of the whole loop.
                 self.mispredicts += 1;
                 self.cycle += penalty;
-                self.pc = self.pc.wrapping_add(4);
+                self.ctx.pc = self.ctx.pc.wrapping_add(4);
             }
             if self.retire() || !taken {
                 return;
@@ -567,6 +572,33 @@ mod tests {
         let p = plan_of("jalr ra, 0(a0)\necall");
         assert_eq!(p.blocks[0].kind, BlockKind::Irregular);
         assert_eq!(p.blocks[1].kind, BlockKind::Straight);
+    }
+
+    #[test]
+    fn quire_spills_terminate_blocks() {
+        // qsq/qlq are block terminators (context-switch boundaries), so
+        // straight-line code around them splits into separate blocks and
+        // the instruction after a spill is a leader.
+        let p = plan_of(
+            r#"
+            li a0, 0x400
+            qsq.s (a0)
+            addi a1, a1, 1
+            qlq.d (a0)
+            ecall
+        "#,
+        );
+        // Blocks: [li, qsq][addi, qlq][ecall].
+        assert_eq!(p.blocks.len(), 3);
+        assert_eq!(p.blocks[0].pre.len(), 2);
+        assert_eq!(p.blocks[1].start, 2);
+        assert_eq!(p.blocks[2].start, 4);
+        for b in &p.blocks {
+            assert_eq!(b.kind, BlockKind::Straight);
+        }
+        // The pre-resolved latency carries the width-scaled beat count.
+        assert_eq!(p.blocks[0].pre[1].lat, PositFmt::P32.quire_beats());
+        assert_eq!(p.blocks[1].pre[1].lat, PositFmt::P64.quire_beats() + 2);
     }
 
     #[test]

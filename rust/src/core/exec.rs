@@ -87,14 +87,14 @@ impl Core {
         macro_rules! wx {
             ($v:expr) => {{
                 if rd != 0 {
-                    self.x[rd] = $v;
+                    self.ctx.x[rd] = $v;
                 }
             }};
         }
         macro_rules! branch {
             ($cond:expr) => {{
                 if $cond {
-                    eff.next_pc = Some(self.pc.wrapping_add(imm as u64));
+                    eff.next_pc = Some(self.ctx.pc.wrapping_add(imm as u64));
                     eff.taken = true;
                 }
             }};
@@ -102,135 +102,135 @@ impl Core {
         match ins.op {
             // ── RV64I ───────────────────────────────────────────────────
             Op::Lui => wx!((imm << 12) as u64),
-            Op::Auipc => wx!(self.pc.wrapping_add((imm << 12) as u64)),
+            Op::Auipc => wx!(self.ctx.pc.wrapping_add((imm << 12) as u64)),
             Op::Jal => {
-                wx!(self.pc.wrapping_add(4));
-                eff.next_pc = Some(self.pc.wrapping_add(imm as u64));
+                wx!(self.ctx.pc.wrapping_add(4));
+                eff.next_pc = Some(self.ctx.pc.wrapping_add(imm as u64));
                 eff.taken = true;
             }
             Op::Jalr => {
-                let target = self.x[rs1].wrapping_add(imm as u64) & !1;
-                wx!(self.pc.wrapping_add(4));
+                let target = self.ctx.x[rs1].wrapping_add(imm as u64) & !1;
+                wx!(self.ctx.pc.wrapping_add(4));
                 eff.next_pc = Some(target);
                 eff.taken = true;
             }
-            Op::Beq => branch!(self.x[rs1] == self.x[rs2]),
-            Op::Bne => branch!(self.x[rs1] != self.x[rs2]),
-            Op::Blt => branch!((self.x[rs1] as i64) < (self.x[rs2] as i64)),
-            Op::Bge => branch!((self.x[rs1] as i64) >= (self.x[rs2] as i64)),
-            Op::Bltu => branch!(self.x[rs1] < self.x[rs2]),
-            Op::Bgeu => branch!(self.x[rs1] >= self.x[rs2]),
+            Op::Beq => branch!(self.ctx.x[rs1] == self.ctx.x[rs2]),
+            Op::Bne => branch!(self.ctx.x[rs1] != self.ctx.x[rs2]),
+            Op::Blt => branch!((self.ctx.x[rs1] as i64) < (self.ctx.x[rs2] as i64)),
+            Op::Bge => branch!((self.ctx.x[rs1] as i64) >= (self.ctx.x[rs2] as i64)),
+            Op::Bltu => branch!(self.ctx.x[rs1] < self.ctx.x[rs2]),
+            Op::Bgeu => branch!(self.ctx.x[rs1] >= self.ctx.x[rs2]),
             Op::Lb => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u8(a) as i8 as i64 as u64);
             }
             Op::Lh => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u16(a) as i16 as i64 as u64);
             }
             Op::Lw => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u32(a) as i32 as i64 as u64);
             }
             Op::Ld => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u64(a));
             }
             Op::Lbu => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u8(a) as u64);
             }
             Op::Lhu => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u16(a) as u64);
             }
             Op::Lwu => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u32(a) as u64);
             }
             Op::Sb => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u8(a, self.x[rs2] as u8);
+                self.mem.write_u8(a, self.ctx.x[rs2] as u8);
             }
             Op::Sh => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u16(a, self.x[rs2] as u16);
+                self.mem.write_u16(a, self.ctx.x[rs2] as u16);
             }
             Op::Sw => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u32(a, self.x[rs2] as u32);
+                self.mem.write_u32(a, self.ctx.x[rs2] as u32);
             }
             Op::Sd => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u64(a, self.x[rs2]);
+                self.mem.write_u64(a, self.ctx.x[rs2]);
             }
-            Op::Addi => wx!(self.x[rs1].wrapping_add(imm as u64)),
-            Op::Slti => wx!(((self.x[rs1] as i64) < imm) as u64),
-            Op::Sltiu => wx!((self.x[rs1] < imm as u64) as u64),
-            Op::Xori => wx!(self.x[rs1] ^ imm as u64),
-            Op::Ori => wx!(self.x[rs1] | imm as u64),
-            Op::Andi => wx!(self.x[rs1] & imm as u64),
-            Op::Slli => wx!(self.x[rs1] << imm),
-            Op::Srli => wx!(self.x[rs1] >> imm),
-            Op::Srai => wx!(((self.x[rs1] as i64) >> imm) as u64),
-            Op::Addiw => wx!((self.x[rs1].wrapping_add(imm as u64) as i32) as i64 as u64),
-            Op::Slliw => wx!((((self.x[rs1] as u32) << imm) as i32) as i64 as u64),
-            Op::Srliw => wx!((((self.x[rs1] as u32) >> imm) as i32) as i64 as u64),
-            Op::Sraiw => wx!(((self.x[rs1] as i32) >> imm) as i64 as u64),
-            Op::Add => wx!(self.x[rs1].wrapping_add(self.x[rs2])),
-            Op::Sub => wx!(self.x[rs1].wrapping_sub(self.x[rs2])),
-            Op::Sll => wx!(self.x[rs1] << (self.x[rs2] & 63)),
-            Op::Slt => wx!(((self.x[rs1] as i64) < (self.x[rs2] as i64)) as u64),
-            Op::Sltu => wx!((self.x[rs1] < self.x[rs2]) as u64),
-            Op::Xor => wx!(self.x[rs1] ^ self.x[rs2]),
-            Op::Srl => wx!(self.x[rs1] >> (self.x[rs2] & 63)),
-            Op::Sra => wx!(((self.x[rs1] as i64) >> (self.x[rs2] & 63)) as u64),
-            Op::Or => wx!(self.x[rs1] | self.x[rs2]),
-            Op::And => wx!(self.x[rs1] & self.x[rs2]),
-            Op::Addw => wx!((self.x[rs1].wrapping_add(self.x[rs2]) as i32) as i64 as u64),
-            Op::Subw => wx!((self.x[rs1].wrapping_sub(self.x[rs2]) as i32) as i64 as u64),
-            Op::Sllw => wx!((((self.x[rs1] as u32) << (self.x[rs2] & 31)) as i32) as i64 as u64),
-            Op::Srlw => wx!((((self.x[rs1] as u32) >> (self.x[rs2] & 31)) as i32) as i64 as u64),
-            Op::Sraw => wx!(((self.x[rs1] as i32) >> (self.x[rs2] & 31)) as i64 as u64),
+            Op::Addi => wx!(self.ctx.x[rs1].wrapping_add(imm as u64)),
+            Op::Slti => wx!(((self.ctx.x[rs1] as i64) < imm) as u64),
+            Op::Sltiu => wx!((self.ctx.x[rs1] < imm as u64) as u64),
+            Op::Xori => wx!(self.ctx.x[rs1] ^ imm as u64),
+            Op::Ori => wx!(self.ctx.x[rs1] | imm as u64),
+            Op::Andi => wx!(self.ctx.x[rs1] & imm as u64),
+            Op::Slli => wx!(self.ctx.x[rs1] << imm),
+            Op::Srli => wx!(self.ctx.x[rs1] >> imm),
+            Op::Srai => wx!(((self.ctx.x[rs1] as i64) >> imm) as u64),
+            Op::Addiw => wx!((self.ctx.x[rs1].wrapping_add(imm as u64) as i32) as i64 as u64),
+            Op::Slliw => wx!((((self.ctx.x[rs1] as u32) << imm) as i32) as i64 as u64),
+            Op::Srliw => wx!((((self.ctx.x[rs1] as u32) >> imm) as i32) as i64 as u64),
+            Op::Sraiw => wx!(((self.ctx.x[rs1] as i32) >> imm) as i64 as u64),
+            Op::Add => wx!(self.ctx.x[rs1].wrapping_add(self.ctx.x[rs2])),
+            Op::Sub => wx!(self.ctx.x[rs1].wrapping_sub(self.ctx.x[rs2])),
+            Op::Sll => wx!(self.ctx.x[rs1] << (self.ctx.x[rs2] & 63)),
+            Op::Slt => wx!(((self.ctx.x[rs1] as i64) < (self.ctx.x[rs2] as i64)) as u64),
+            Op::Sltu => wx!((self.ctx.x[rs1] < self.ctx.x[rs2]) as u64),
+            Op::Xor => wx!(self.ctx.x[rs1] ^ self.ctx.x[rs2]),
+            Op::Srl => wx!(self.ctx.x[rs1] >> (self.ctx.x[rs2] & 63)),
+            Op::Sra => wx!(((self.ctx.x[rs1] as i64) >> (self.ctx.x[rs2] & 63)) as u64),
+            Op::Or => wx!(self.ctx.x[rs1] | self.ctx.x[rs2]),
+            Op::And => wx!(self.ctx.x[rs1] & self.ctx.x[rs2]),
+            Op::Addw => wx!((self.ctx.x[rs1].wrapping_add(self.ctx.x[rs2]) as i32) as i64 as u64),
+            Op::Subw => wx!((self.ctx.x[rs1].wrapping_sub(self.ctx.x[rs2]) as i32) as i64 as u64),
+            Op::Sllw => wx!((((self.ctx.x[rs1] as u32) << (self.ctx.x[rs2] & 31)) as i32) as i64 as u64),
+            Op::Srlw => wx!((((self.ctx.x[rs1] as u32) >> (self.ctx.x[rs2] & 31)) as i32) as i64 as u64),
+            Op::Sraw => wx!(((self.ctx.x[rs1] as i32) >> (self.ctx.x[rs2] & 31)) as i64 as u64),
             // ── M ───────────────────────────────────────────────────────
-            Op::Mul => wx!(self.x[rs1].wrapping_mul(self.x[rs2])),
+            Op::Mul => wx!(self.ctx.x[rs1].wrapping_mul(self.ctx.x[rs2])),
             Op::Mulh => {
-                let p = (self.x[rs1] as i64 as i128) * (self.x[rs2] as i64 as i128);
+                let p = (self.ctx.x[rs1] as i64 as i128) * (self.ctx.x[rs2] as i64 as i128);
                 wx!((p >> 64) as u64);
             }
             Op::Mulhu => {
-                let p = (self.x[rs1] as u128) * (self.x[rs2] as u128);
+                let p = (self.ctx.x[rs1] as u128) * (self.ctx.x[rs2] as u128);
                 wx!((p >> 64) as u64);
             }
             Op::Div => {
-                let (a, b) = (self.x[rs1] as i64, self.x[rs2] as i64);
+                let (a, b) = (self.ctx.x[rs1] as i64, self.ctx.x[rs2] as i64);
                 wx!(if b == 0 { u64::MAX } else { a.wrapping_div(b) as u64 });
             }
             Op::Divu => {
-                let (a, b) = (self.x[rs1], self.x[rs2]);
+                let (a, b) = (self.ctx.x[rs1], self.ctx.x[rs2]);
                 wx!(if b == 0 { u64::MAX } else { a / b });
             }
             Op::Rem => {
-                let (a, b) = (self.x[rs1] as i64, self.x[rs2] as i64);
+                let (a, b) = (self.ctx.x[rs1] as i64, self.ctx.x[rs2] as i64);
                 wx!(if b == 0 { a as u64 } else { a.wrapping_rem(b) as u64 });
             }
             Op::Remu => {
-                let (a, b) = (self.x[rs1], self.x[rs2]);
+                let (a, b) = (self.ctx.x[rs1], self.ctx.x[rs2]);
                 wx!(if b == 0 { a } else { a % b });
             }
             Op::Mulw => {
-                wx!((self.x[rs1].wrapping_mul(self.x[rs2]) as i32) as i64 as u64)
+                wx!((self.ctx.x[rs1].wrapping_mul(self.ctx.x[rs2]) as i32) as i64 as u64)
             }
             // ── System ──────────────────────────────────────────────────
             Op::Ecall | Op::Ebreak => eff.halt = true,
@@ -245,121 +245,121 @@ impl Core {
             }
             // ── F (32-bit IEEE) ─────────────────────────────────────────
             Op::Flw => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
-                self.f[rd] = 0xFFFF_FFFF_0000_0000 | self.mem.read_u32(a) as u64;
+                self.ctx.f[rd] = 0xFFFF_FFFF_0000_0000 | self.mem.read_u32(a) as u64;
             }
             Op::Fsw => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u32(a, self.f[rs2] as u32);
+                self.mem.write_u32(a, self.ctx.f[rs2] as u32);
             }
             Op::FmaddS => {
-                self.f[rd] =
-                    box32(f32_of(self.f[rs1]).mul_add(f32_of(self.f[rs2]), f32_of(self.f[rs3])))
+                self.ctx.f[rd] =
+                    box32(f32_of(self.ctx.f[rs1]).mul_add(f32_of(self.ctx.f[rs2]), f32_of(self.ctx.f[rs3])))
             }
             Op::FmsubS => {
-                self.f[rd] =
-                    box32(f32_of(self.f[rs1]).mul_add(f32_of(self.f[rs2]), -f32_of(self.f[rs3])))
+                self.ctx.f[rd] =
+                    box32(f32_of(self.ctx.f[rs1]).mul_add(f32_of(self.ctx.f[rs2]), -f32_of(self.ctx.f[rs3])))
             }
             Op::FnmsubS => {
-                self.f[rd] =
-                    box32((-f32_of(self.f[rs1])).mul_add(f32_of(self.f[rs2]), f32_of(self.f[rs3])))
+                self.ctx.f[rd] =
+                    box32((-f32_of(self.ctx.f[rs1])).mul_add(f32_of(self.ctx.f[rs2]), f32_of(self.ctx.f[rs3])))
             }
             Op::FnmaddS => {
-                self.f[rd] = box32(
-                    (-f32_of(self.f[rs1])).mul_add(f32_of(self.f[rs2]), -f32_of(self.f[rs3])),
+                self.ctx.f[rd] = box32(
+                    (-f32_of(self.ctx.f[rs1])).mul_add(f32_of(self.ctx.f[rs2]), -f32_of(self.ctx.f[rs3])),
                 )
             }
-            Op::FaddS => self.f[rd] = box32(f32_of(self.f[rs1]) + f32_of(self.f[rs2])),
-            Op::FsubS => self.f[rd] = box32(f32_of(self.f[rs1]) - f32_of(self.f[rs2])),
-            Op::FmulS => self.f[rd] = box32(f32_of(self.f[rs1]) * f32_of(self.f[rs2])),
-            Op::FdivS => self.f[rd] = box32(f32_of(self.f[rs1]) / f32_of(self.f[rs2])),
-            Op::FsqrtS => self.f[rd] = box32(f32_of(self.f[rs1]).sqrt()),
+            Op::FaddS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]) + f32_of(self.ctx.f[rs2])),
+            Op::FsubS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]) - f32_of(self.ctx.f[rs2])),
+            Op::FmulS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]) * f32_of(self.ctx.f[rs2])),
+            Op::FdivS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]) / f32_of(self.ctx.f[rs2])),
+            Op::FsqrtS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]).sqrt()),
             Op::FsgnjS => {
                 let m = 0x8000_0000u32;
-                self.f[rd] = box32(f32::from_bits(
-                    (self.f[rs1] as u32 & !m) | (self.f[rs2] as u32 & m),
+                self.ctx.f[rd] = box32(f32::from_bits(
+                    (self.ctx.f[rs1] as u32 & !m) | (self.ctx.f[rs2] as u32 & m),
                 ));
             }
             Op::FsgnjnS => {
                 let m = 0x8000_0000u32;
-                self.f[rd] = box32(f32::from_bits(
-                    (self.f[rs1] as u32 & !m) | (!(self.f[rs2] as u32) & m),
+                self.ctx.f[rd] = box32(f32::from_bits(
+                    (self.ctx.f[rs1] as u32 & !m) | (!(self.ctx.f[rs2] as u32) & m),
                 ));
             }
             Op::FsgnjxS => {
                 let m = 0x8000_0000u32;
-                self.f[rd] = box32(f32::from_bits(
-                    (self.f[rs1] as u32) ^ (self.f[rs2] as u32 & m),
+                self.ctx.f[rd] = box32(f32::from_bits(
+                    (self.ctx.f[rs1] as u32) ^ (self.ctx.f[rs2] as u32 & m),
                 ));
             }
-            Op::FminS => self.f[rd] = box32(f32_of(self.f[rs1]).min(f32_of(self.f[rs2]))),
-            Op::FmaxS => self.f[rd] = box32(f32_of(self.f[rs1]).max(f32_of(self.f[rs2]))),
-            Op::FcvtWS => wx!(fcvt_i32(f32_of(self.f[rs1]) as f64) as u64),
-            Op::FcvtWuS => wx!((fcvt_u64(f32_of(self.f[rs1]) as f64) as u32) as i32 as i64 as u64),
-            Op::FcvtLS => wx!(fcvt_i64(f32_of(self.f[rs1]) as f64) as u64),
-            Op::FcvtLuS => wx!(fcvt_u64(f32_of(self.f[rs1]) as f64)),
-            Op::FcvtSW => self.f[rd] = box32(self.x[rs1] as i32 as f32),
-            Op::FcvtSWu => self.f[rd] = box32(self.x[rs1] as u32 as f32),
-            Op::FcvtSL => self.f[rd] = box32(self.x[rs1] as i64 as f32),
-            Op::FcvtSLu => self.f[rd] = box32(self.x[rs1] as f32),
-            Op::FmvXW => wx!((self.f[rs1] as u32) as i32 as i64 as u64),
-            Op::FmvWX => self.f[rd] = 0xFFFF_FFFF_0000_0000 | (self.x[rs1] & 0xFFFF_FFFF),
-            Op::FeqS => wx!((f32_of(self.f[rs1]) == f32_of(self.f[rs2])) as u64),
-            Op::FltS => wx!((f32_of(self.f[rs1]) < f32_of(self.f[rs2])) as u64),
-            Op::FleS => wx!((f32_of(self.f[rs1]) <= f32_of(self.f[rs2])) as u64),
+            Op::FminS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]).min(f32_of(self.ctx.f[rs2]))),
+            Op::FmaxS => self.ctx.f[rd] = box32(f32_of(self.ctx.f[rs1]).max(f32_of(self.ctx.f[rs2]))),
+            Op::FcvtWS => wx!(fcvt_i32(f32_of(self.ctx.f[rs1]) as f64) as u64),
+            Op::FcvtWuS => wx!((fcvt_u64(f32_of(self.ctx.f[rs1]) as f64) as u32) as i32 as i64 as u64),
+            Op::FcvtLS => wx!(fcvt_i64(f32_of(self.ctx.f[rs1]) as f64) as u64),
+            Op::FcvtLuS => wx!(fcvt_u64(f32_of(self.ctx.f[rs1]) as f64)),
+            Op::FcvtSW => self.ctx.f[rd] = box32(self.ctx.x[rs1] as i32 as f32),
+            Op::FcvtSWu => self.ctx.f[rd] = box32(self.ctx.x[rs1] as u32 as f32),
+            Op::FcvtSL => self.ctx.f[rd] = box32(self.ctx.x[rs1] as i64 as f32),
+            Op::FcvtSLu => self.ctx.f[rd] = box32(self.ctx.x[rs1] as f32),
+            Op::FmvXW => wx!((self.ctx.f[rs1] as u32) as i32 as i64 as u64),
+            Op::FmvWX => self.ctx.f[rd] = 0xFFFF_FFFF_0000_0000 | (self.ctx.x[rs1] & 0xFFFF_FFFF),
+            Op::FeqS => wx!((f32_of(self.ctx.f[rs1]) == f32_of(self.ctx.f[rs2])) as u64),
+            Op::FltS => wx!((f32_of(self.ctx.f[rs1]) < f32_of(self.ctx.f[rs2])) as u64),
+            Op::FleS => wx!((f32_of(self.ctx.f[rs1]) <= f32_of(self.ctx.f[rs2])) as u64),
             // ── D (64-bit IEEE) ─────────────────────────────────────────
             Op::Fld => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
-                self.f[rd] = self.mem.read_u64(a);
+                self.ctx.f[rd] = self.mem.read_u64(a);
             }
             Op::Fsd => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
-                self.mem.write_u64(a, self.f[rs2]);
+                self.mem.write_u64(a, self.ctx.f[rs2]);
             }
             Op::FmaddD => {
-                self.f[rd] = f64_of(self.f[rs1])
-                    .mul_add(f64_of(self.f[rs2]), f64_of(self.f[rs3]))
+                self.ctx.f[rd] = f64_of(self.ctx.f[rs1])
+                    .mul_add(f64_of(self.ctx.f[rs2]), f64_of(self.ctx.f[rs3]))
                     .to_bits()
             }
             Op::FmsubD => {
-                self.f[rd] = f64_of(self.f[rs1])
-                    .mul_add(f64_of(self.f[rs2]), -f64_of(self.f[rs3]))
+                self.ctx.f[rd] = f64_of(self.ctx.f[rs1])
+                    .mul_add(f64_of(self.ctx.f[rs2]), -f64_of(self.ctx.f[rs3]))
                     .to_bits()
             }
-            Op::FaddD => self.f[rd] = (f64_of(self.f[rs1]) + f64_of(self.f[rs2])).to_bits(),
-            Op::FsubD => self.f[rd] = (f64_of(self.f[rs1]) - f64_of(self.f[rs2])).to_bits(),
-            Op::FmulD => self.f[rd] = (f64_of(self.f[rs1]) * f64_of(self.f[rs2])).to_bits(),
-            Op::FdivD => self.f[rd] = (f64_of(self.f[rs1]) / f64_of(self.f[rs2])).to_bits(),
+            Op::FaddD => self.ctx.f[rd] = (f64_of(self.ctx.f[rs1]) + f64_of(self.ctx.f[rs2])).to_bits(),
+            Op::FsubD => self.ctx.f[rd] = (f64_of(self.ctx.f[rs1]) - f64_of(self.ctx.f[rs2])).to_bits(),
+            Op::FmulD => self.ctx.f[rd] = (f64_of(self.ctx.f[rs1]) * f64_of(self.ctx.f[rs2])).to_bits(),
+            Op::FdivD => self.ctx.f[rd] = (f64_of(self.ctx.f[rs1]) / f64_of(self.ctx.f[rs2])).to_bits(),
             Op::FsgnjD => {
                 let m = 1u64 << 63;
-                self.f[rd] = (self.f[rs1] & !m) | (self.f[rs2] & m);
+                self.ctx.f[rd] = (self.ctx.f[rs1] & !m) | (self.ctx.f[rs2] & m);
             }
             Op::FsgnjnD => {
                 let m = 1u64 << 63;
-                self.f[rd] = (self.f[rs1] & !m) | (!self.f[rs2] & m);
+                self.ctx.f[rd] = (self.ctx.f[rs1] & !m) | (!self.ctx.f[rs2] & m);
             }
-            Op::FminD => self.f[rd] = f64_of(self.f[rs1]).min(f64_of(self.f[rs2])).to_bits(),
-            Op::FmaxD => self.f[rd] = f64_of(self.f[rs1]).max(f64_of(self.f[rs2])).to_bits(),
-            Op::FcvtDS => self.f[rd] = (f32_of(self.f[rs1]) as f64).to_bits(),
-            Op::FcvtSD => self.f[rd] = box32(f64_of(self.f[rs1]) as f32),
-            Op::FcvtDW => self.f[rd] = (self.x[rs1] as i32 as f64).to_bits(),
-            Op::FcvtDL => self.f[rd] = (self.x[rs1] as i64 as f64).to_bits(),
-            Op::FcvtWD => wx!(fcvt_i32(f64_of(self.f[rs1])) as u64),
-            Op::FcvtLD => wx!(fcvt_i64(f64_of(self.f[rs1])) as u64),
-            Op::FmvXD => wx!(self.f[rs1]),
-            Op::FmvDX => self.f[rd] = self.x[rs1],
-            Op::FeqD => wx!((f64_of(self.f[rs1]) == f64_of(self.f[rs2])) as u64),
-            Op::FltD => wx!((f64_of(self.f[rs1]) < f64_of(self.f[rs2])) as u64),
-            Op::FleD => wx!((f64_of(self.f[rs1]) <= f64_of(self.f[rs2])) as u64),
+            Op::FminD => self.ctx.f[rd] = f64_of(self.ctx.f[rs1]).min(f64_of(self.ctx.f[rs2])).to_bits(),
+            Op::FmaxD => self.ctx.f[rd] = f64_of(self.ctx.f[rs1]).max(f64_of(self.ctx.f[rs2])).to_bits(),
+            Op::FcvtDS => self.ctx.f[rd] = (f32_of(self.ctx.f[rs1]) as f64).to_bits(),
+            Op::FcvtSD => self.ctx.f[rd] = box32(f64_of(self.ctx.f[rs1]) as f32),
+            Op::FcvtDW => self.ctx.f[rd] = (self.ctx.x[rs1] as i32 as f64).to_bits(),
+            Op::FcvtDL => self.ctx.f[rd] = (self.ctx.x[rs1] as i64 as f64).to_bits(),
+            Op::FcvtWD => wx!(fcvt_i32(f64_of(self.ctx.f[rs1])) as u64),
+            Op::FcvtLD => wx!(fcvt_i64(f64_of(self.ctx.f[rs1])) as u64),
+            Op::FmvXD => wx!(self.ctx.f[rs1]),
+            Op::FmvDX => self.ctx.f[rd] = self.ctx.x[rs1],
+            Op::FeqD => wx!((f64_of(self.ctx.f[rs1]) == f64_of(self.ctx.f[rs2])) as u64),
+            Op::FltD => wx!((f64_of(self.ctx.f[rs1]) < f64_of(self.ctx.f[rs2])) as u64),
+            Op::FleD => wx!((f64_of(self.ctx.f[rs1]) <= f64_of(self.ctx.f[rs2])) as u64),
             // ── Xposit loads/stores (8/16/32/64-bit D$ widths) ──────────
             Op::Plb | Op::Plh | Op::Plw | Op::Pld => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 eff.mem_extra = self.dcache.access(a);
-                self.p[rd] = match ins.op {
+                self.ctx.p[rd] = match ins.op {
                     Op::Plb => self.mem.read_u8(a) as u64,
                     Op::Plh => self.mem.read_u16(a) as u64,
                     Op::Plw => self.mem.read_u32(a) as u64,
@@ -367,13 +367,37 @@ impl Core {
                 };
             }
             Op::Psb | Op::Psh | Op::Psw | Op::Psd => {
-                let a = self.x[rs1].wrapping_add(imm as u64);
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 self.dcache.access(a);
                 match ins.op {
-                    Op::Psb => self.mem.write_u8(a, self.p[rs2] as u8),
-                    Op::Psh => self.mem.write_u16(a, self.p[rs2] as u16),
-                    Op::Psw => self.mem.write_u32(a, self.p[rs2] as u32),
-                    _ => self.mem.write_u64(a, self.p[rs2]),
+                    Op::Psb => self.mem.write_u8(a, self.ctx.p[rs2] as u8),
+                    Op::Psh => self.mem.write_u16(a, self.ctx.p[rs2] as u16),
+                    Op::Psw => self.mem.write_u32(a, self.ctx.p[rs2] as u32),
+                    _ => self.mem.write_u64(a, self.ctx.p[rs2]),
+                }
+            }
+            // ── Quire spill/restore: the whole 16·n-bit accumulator moves
+            // through the D$ as one multi-beat walk (64-bit beats; the
+            // static beat cost is in `latency_for`, the dynamic miss
+            // penalties accumulate here). The decoder always produces
+            // imm = 0 (the encoding has no immediate field); synthetic
+            // instruction streams (the differential fuzzer) may carry an
+            // offset, which the address computation honours like the
+            // element loads/stores do.
+            Op::Qsq | Op::Qlq => {
+                let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                let len = ins.fmt.quire_bytes();
+                let mut extra = 0;
+                for beat in (0..len as u64).step_by(8) {
+                    extra += self.dcache.access(a.wrapping_add(beat));
+                }
+                eff.mem_extra = extra;
+                if ins.op == Op::Qsq {
+                    let img = self.ctx.quire.spill(ins.fmt);
+                    self.mem.write_bytes(a, &img);
+                } else {
+                    let img = self.mem.read_bytes(a, len).to_vec();
+                    self.ctx.quire = crate::core::PauQuire::restore(ins.fmt, &img);
                 }
             }
             // ── Xposit computational (the PAU + posit ALU paths). The
@@ -388,33 +412,33 @@ impl Core {
             | Op::PsgnjxS | Op::PmvXW | Op::PmvWX | Op::PeqS | Op::PltS | Op::PleS => {
                 let w = ins.fmt.width();
                 let m = unpacked::mask_n(w);
-                let (x, y) = (self.p[rs1] & m, self.p[rs2] & m);
+                let (x, y) = (self.ctx.p[rs1] & m, self.ctx.p[rs2] & m);
                 match ins.op {
-                    Op::PaddS => self.p[rd] = ops::add_n(w, x, y),
-                    Op::PsubS => self.p[rd] = ops::sub_n(w, x, y),
-                    Op::PmulS => self.p[rd] = ops::mul_n(w, x, y),
-                    Op::PdivS => self.p[rd] = divsqrt::div_approx_n(w, x, y),
-                    Op::PminS => self.p[rd] = posit::min_bits_n(w, x, y),
-                    Op::PmaxS => self.p[rd] = posit::max_bits_n(w, x, y),
-                    Op::PsqrtS => self.p[rd] = divsqrt::sqrt_approx_n(w, x),
-                    Op::QmaddS => self.quire.madd(ins.fmt, x, y),
-                    Op::QmsubS => self.quire.msub(ins.fmt, x, y),
-                    Op::QclrS => self.quire.clear(ins.fmt),
-                    Op::QnegS => self.quire.neg(ins.fmt),
-                    Op::QroundS => self.p[rd] = self.quire.round(ins.fmt),
+                    Op::PaddS => self.ctx.p[rd] = ops::add_n(w, x, y),
+                    Op::PsubS => self.ctx.p[rd] = ops::sub_n(w, x, y),
+                    Op::PmulS => self.ctx.p[rd] = ops::mul_n(w, x, y),
+                    Op::PdivS => self.ctx.p[rd] = divsqrt::div_approx_n(w, x, y),
+                    Op::PminS => self.ctx.p[rd] = posit::min_bits_n(w, x, y),
+                    Op::PmaxS => self.ctx.p[rd] = posit::max_bits_n(w, x, y),
+                    Op::PsqrtS => self.ctx.p[rd] = divsqrt::sqrt_approx_n(w, x),
+                    Op::QmaddS => self.ctx.quire.madd(ins.fmt, x, y),
+                    Op::QmsubS => self.ctx.quire.msub(ins.fmt, x, y),
+                    Op::QclrS => self.ctx.quire.clear(ins.fmt),
+                    Op::QnegS => self.ctx.quire.neg(ins.fmt),
+                    Op::QroundS => self.ctx.p[rd] = self.ctx.quire.round(ins.fmt),
                     Op::PcvtWS => wx!(convert::to_i32_n(w, x) as i64 as u64),
                     Op::PcvtWuS => wx!(convert::to_u32_n(w, x) as i32 as i64 as u64),
                     Op::PcvtLS => wx!(convert::to_i64_n(w, x) as u64),
                     Op::PcvtLuS => wx!(convert::to_u64_n(w, x)),
-                    Op::PcvtSW => self.p[rd] = convert::from_i64_n(w, self.x[rs1] as i32 as i64),
-                    Op::PcvtSWu => self.p[rd] = convert::from_u64_n(w, self.x[rs1] as u32 as u64),
-                    Op::PcvtSL => self.p[rd] = convert::from_i64_n(w, self.x[rs1] as i64),
-                    Op::PcvtSLu => self.p[rd] = convert::from_u64_n(w, self.x[rs1]),
-                    Op::PsgnjS => self.p[rd] = posit::sgnj_n(w, x, y),
-                    Op::PsgnjnS => self.p[rd] = posit::sgnjn_n(w, x, y),
-                    Op::PsgnjxS => self.p[rd] = posit::sgnjx_n(w, x, y),
+                    Op::PcvtSW => self.ctx.p[rd] = convert::from_i64_n(w, self.ctx.x[rs1] as i32 as i64),
+                    Op::PcvtSWu => self.ctx.p[rd] = convert::from_u64_n(w, self.ctx.x[rs1] as u32 as u64),
+                    Op::PcvtSL => self.ctx.p[rd] = convert::from_i64_n(w, self.ctx.x[rs1] as i64),
+                    Op::PcvtSLu => self.ctx.p[rd] = convert::from_u64_n(w, self.ctx.x[rs1]),
+                    Op::PsgnjS => self.ctx.p[rd] = posit::sgnj_n(w, x, y),
+                    Op::PsgnjnS => self.ctx.p[rd] = posit::sgnjn_n(w, x, y),
+                    Op::PsgnjxS => self.ctx.p[rd] = posit::sgnjx_n(w, x, y),
                     Op::PmvXW => wx!(unpacked::to_signed_n(w, x) as u64),
-                    Op::PmvWX => self.p[rd] = self.x[rs1] & m,
+                    Op::PmvWX => self.ctx.p[rd] = self.ctx.x[rs1] & m,
                     Op::PeqS => wx!((x == y) as u64),
                     Op::PltS => {
                         wx!((unpacked::to_signed_n(w, x) < unpacked::to_signed_n(w, y)) as u64)

@@ -209,6 +209,21 @@ impl Memory {
         self.bytes[a..a + 8].copy_from_slice(&v.to_le_bytes());
     }
 
+    /// Raw byte-slice view — the quire spill/restore data path (`qsq`
+    /// reads the image back with [`Self::read_bytes`]).
+    #[inline]
+    pub fn read_bytes(&self, addr: u64, n: usize) -> &[u8] {
+        let a = self.check(addr, n);
+        &self.bytes[a..a + n]
+    }
+
+    /// Raw byte-slice store (see [`Self::read_bytes`]).
+    #[inline]
+    pub fn write_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        let a = self.check(addr, bytes.len());
+        self.bytes[a..a + bytes.len()].copy_from_slice(bytes);
+    }
+
     /// Bulk helpers used by the workload generators.
     pub fn write_f32_slice(&mut self, addr: u64, xs: &[f32]) {
         for (i, x) in xs.iter().enumerate() {

@@ -19,6 +19,13 @@
 //!   format-tagged [`PauQuire`], loads/stores exist at 1/2/4/8-byte D$
 //!   widths, and PAU latencies scale with the format via
 //!   [`crate::isa::OpInfo::latency_for`].
+//! - **Hart contexts** (paper §8's save/restore direction): the
+//!   architectural state lives in a save/restorable [`HartContext`] the
+//!   core executes, and the quire — the one piece PERCIVAL could not
+//!   context-switch — spills through the `qsq`/`qlq` instructions as a
+//!   multi-beat D$ walk, so the multi-hart scheduler
+//!   ([`crate::coordinator::sched`]) can time-slice many jobs over one
+//!   simulated core with the switch cost cycle-accounted.
 //!
 //! What is not modelled: TLBs (benchmarks run bare), instruction cache
 //! (kernels fit I$), store-buffer stalls, page walks. DESIGN.md discusses
@@ -39,7 +46,7 @@ pub use block::Engine;
 pub use mem::{CacheConfig, DCache, Memory};
 
 use crate::isa::asm::Program;
-use crate::isa::{info, Instr, PositFmt, RegClass, Unit};
+use crate::isa::{info, Instr, Op, PositFmt, RegClass, Unit};
 use crate::posit::{Quire16, Quire32, Quire64, Quire8};
 use std::sync::Arc;
 
@@ -140,6 +147,81 @@ impl PauQuire {
             PauQuire::Q64(q) => q.round(),
         }
     }
+
+    /// `QSQ` at `fmt` — serialize the accumulator to its 16·n-bit
+    /// little-endian memory image ([`crate::posit::Quire::to_bytes`]).
+    /// Like every quire instruction this re-tags the register first, so
+    /// spilling at a width other than the live one spills the cleared
+    /// re-tagged accumulator — software must spill at the format it
+    /// accumulated at, exactly as multi-width hardware requires.
+    pub fn spill(&mut self, fmt: PositFmt) -> Vec<u8> {
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => q.to_bytes(),
+            PauQuire::Q16(q) => q.to_bytes(),
+            PauQuire::Q32(q) => q.to_bytes(),
+            PauQuire::Q64(q) => q.to_bytes(),
+        }
+    }
+
+    /// `QLQ` at `fmt` — restore an accumulator from a spill image,
+    /// re-tagging the register to the instruction's width. The image
+    /// length is fixed by `fmt` ([`PositFmt::quire_bytes`]); the caller
+    /// (the core's exec path) always reads exactly that many bytes, so a
+    /// length mismatch is a programming error, not a runtime one.
+    pub fn restore(fmt: PositFmt, bytes: &[u8]) -> Self {
+        match fmt {
+            PositFmt::P8 => PauQuire::Q8(Quire8::from_bytes(bytes).expect("quire8 image")),
+            PositFmt::P16 => PauQuire::Q16(Quire16::from_bytes(bytes).expect("quire16 image")),
+            PositFmt::P32 => PauQuire::Q32(Quire32::from_bytes(bytes).expect("quire32 image")),
+            PositFmt::P64 => PauQuire::Q64(Quire64::from_bytes(bytes).expect("quire64 image")),
+        }
+    }
+}
+
+/// The complete per-hart architectural state — everything a context
+/// switch must save and restore: the three register files, the PC, and
+/// the PAU's format-tagged quire accumulator (the piece the paper's §8
+/// names as PERCIVAL's missing OS-support feature, and the one `qsq`/
+/// `qlq` spill through the D$). [`Core`] *executes* a context rather
+/// than owning its own: swapping `Core::ctx` is how the multi-hart
+/// scheduler time-slices many jobs over one simulated core. The cycle
+/// and instret counters stay on the core — they are per-hart hardware
+/// counters (the `rdcycle`/`rdinstret` CSRs), not per-process state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HartContext {
+    /// Program counter.
+    pub pc: u64,
+    /// Integer register file `x0–x31` (`x0` reads as zero; the core
+    /// discards writes to it).
+    pub x: [u64; 32],
+    /// Float register file `f0–f31` (F and D values, NaN-boxed).
+    pub f: [u64; 32],
+    /// Posit register file `p0–p31`. 64 bits wide since the multi-width
+    /// extension (the Big-PERCIVAL configuration); narrower formats use
+    /// the low bits, like the F registers hold both F and D values.
+    pub p: [u64; 32],
+    /// The PAU accumulator, tagged with its current posit width.
+    pub quire: PauQuire,
+}
+
+impl HartContext {
+    /// A fresh context: PC 0, zeroed register files, cleared P32 quire.
+    pub fn new() -> Self {
+        Self {
+            pc: 0,
+            x: [0; 32],
+            f: [0; 32],
+            p: [0; 32],
+            quire: PauQuire::new(PositFmt::P32),
+        }
+    }
+}
+
+impl Default for HartContext {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Timing configuration (defaults = Genesys II CVA6 at 50 MHz).
@@ -183,6 +265,12 @@ pub struct Stats {
     pub mispredicts: u64,
     pub dcache_hits: u64,
     pub dcache_misses: u64,
+    /// Context switches dispatched on this hart (filled in by the
+    /// multi-hart scheduler; a bare [`Core`] run reports 0).
+    pub ctx_switches: u64,
+    /// Cycles the hart spent in `qsq`/`qlq` context-switch save/restore
+    /// sequences (scheduler-filled, like [`Self::ctx_switches`]).
+    pub spill_cycles: u64,
 }
 
 impl Stats {
@@ -196,28 +284,28 @@ impl Stats {
     }
 }
 
-/// The simulated core.
+/// The simulated core — an execution engine over *a* [`HartContext`]
+/// rather than the owner of *the* architectural state: `ctx` is the
+/// save/restorable per-hart state, everything else is the machine
+/// (memory, D$, scoreboard, counters).
 pub struct Core {
     pub cfg: CoreConfig,
-    /// Architectural state.
-    pub pc: u64,
-    pub x: [u64; 32],
-    pub f: [u64; 32],
-    /// Posit register file. 64 bits wide since the multi-width extension
-    /// (the Big-PERCIVAL configuration); narrower formats use the low
-    /// bits, like the F registers hold both F and D values.
-    pub p: [u64; 32],
-    /// The PAU accumulator, tagged with its current posit width.
-    pub quire: PauQuire,
+    /// The architectural context the core is currently executing.
+    pub ctx: HartContext,
     pub mem: Memory,
     pub dcache: DCache,
     /// Pre-decoded text segment (PC 0 = index 0), shared with the
     /// [`Program`] it was loaded from — loading is an `Arc` bump.
     program: Arc<[Instr]>,
-    /// Superblock pre-decode of `program` (see [`block`]), rebuilt on
-    /// every load. Shared so the dispatch loop can hold it while
-    /// executing against `&mut self`.
+    /// Superblock pre-decode of `program` (see [`block`]), shared so the
+    /// dispatch loop can hold it while executing against `&mut self`.
     plan: Arc<block::Plan>,
+    /// Recently loaded plans keyed by text-segment identity (holding the
+    /// `Arc` keeps each pointer stable, so `ptr_eq` is a sound key). The
+    /// multi-hart scheduler alternates job kernels with the tiny
+    /// `qsq`/`qlq` switch kernels on every context switch; without this
+    /// cache each swap back would rebuild the job kernel's plan.
+    plan_cache: Vec<(Arc<[Instr]>, Arc<block::Plan>)>,
     /// Timing state.
     pub cycle: u64,
     pub instret: u64,
@@ -230,21 +318,23 @@ pub struct Core {
     unit_stalls: u64,
     mispredicts: u64,
     halted: bool,
+    /// Whether the halt came from the program itself (ECALL/EBREAK or
+    /// running off the text segment) rather than the `max_instrs` valve —
+    /// the distinction the multi-hart scheduler needs between "job
+    /// finished" and "quantum expired".
+    halt_exit: bool,
 }
 
 impl Core {
     pub fn new(cfg: CoreConfig) -> Self {
         Self {
             cfg,
-            pc: 0,
-            x: [0; 32],
-            f: [0; 32],
-            p: [0; 32],
-            quire: PauQuire::new(PositFmt::P32),
+            ctx: HartContext::new(),
             mem: Memory::new(cfg.mem_size),
             dcache: DCache::new(cfg.cache),
             program: Vec::new().into(),
             plan: Arc::new(block::Plan::default()),
+            plan_cache: Vec::new(),
             cycle: 0,
             instret: 0,
             ready_x: [0; 32],
@@ -255,6 +345,7 @@ impl Core {
             unit_stalls: 0,
             mispredicts: 0,
             halted: false,
+            halt_exit: false,
         }
     }
 
@@ -272,11 +363,57 @@ impl Core {
     /// instructions.
     pub fn load_instrs(&mut self, instrs: Arc<[Instr]>) {
         if !Arc::ptr_eq(&self.program, &instrs) {
-            self.plan = Arc::new(block::build_plan(&instrs));
+            if let Some(pos) =
+                self.plan_cache.iter().position(|(seg, _)| Arc::ptr_eq(seg, &instrs))
+            {
+                // LRU: move the hit to the back so cyclic reloads (the
+                // scheduler's round-robin over its job kernels) keep
+                // hitting even at the capacity edge.
+                let entry = self.plan_cache.remove(pos);
+                self.plan = Arc::clone(&entry.1);
+                self.plan_cache.push(entry);
+            } else {
+                self.plan = Arc::new(block::build_plan(&instrs));
+                // Small bound: a hart cycles between a handful of job
+                // kernels plus the eight 2-instruction switch kernels.
+                if self.plan_cache.len() >= 16 {
+                    self.plan_cache.remove(0);
+                }
+                self.plan_cache.push((Arc::clone(&instrs), Arc::clone(&self.plan)));
+            }
             self.program = instrs;
         }
-        self.pc = 0;
+        self.ctx.pc = 0;
         self.halted = false;
+        self.halt_exit = false;
+    }
+
+    /// Clone out the architectural context — the save half of a context
+    /// switch (the quire travels as part of the context; the scheduler
+    /// additionally spills it through the `qsq` instruction so the save
+    /// path is cycle-accounted and D$-visible).
+    pub fn save_context(&self) -> HartContext {
+        self.ctx.clone()
+    }
+
+    /// Install an architectural context and clear the halt latch — the
+    /// restore half of a context switch. Timing state (cycle counter,
+    /// scoreboard, D$) deliberately stays: the hart's timeline continues
+    /// across the switch, which is the whole point of time-slicing on one
+    /// simulated core.
+    pub fn restore_context(&mut self, ctx: HartContext) {
+        self.ctx = ctx;
+        self.halted = false;
+        self.halt_exit = false;
+    }
+
+    /// Clear the halt latch without touching any other state — how the
+    /// scheduler resumes the *same* job after a `max_instrs` quantum
+    /// expiry (program-exit halts should not be resumed; check
+    /// [`Core::halted_on_exit`] first).
+    pub fn clear_halt(&mut self) {
+        self.halted = false;
+        self.halt_exit = false;
     }
 
     /// Reset timing state (cycle counters, scoreboard, stats) but keep
@@ -293,12 +430,19 @@ impl Core {
         self.unit_stalls = 0;
         self.mispredicts = 0;
         self.dcache.reset_stats();
-        self.pc = 0;
+        self.ctx.pc = 0;
         self.halted = false;
+        self.halt_exit = false;
     }
 
     pub fn halted(&self) -> bool {
         self.halted
+    }
+
+    /// True when the last halt was a program exit (ECALL/EBREAK or PC off
+    /// the text segment) rather than a `max_instrs` quantum expiry.
+    pub fn halted_on_exit(&self) -> bool {
+        self.halt_exit
     }
 
     #[inline]
@@ -342,9 +486,10 @@ impl Core {
         if self.halted {
             return false;
         }
-        let idx = (self.pc / 4) as usize;
+        let idx = (self.ctx.pc / 4) as usize;
         let Some(&ins) = self.program.get(idx) else {
             self.halted = true;
+            self.halt_exit = true;
             return false;
         };
         // NOTE (§Perf): a pre-resolved per-instruction metadata variant was
@@ -379,16 +524,20 @@ impl Core {
         // Non-pipelined units block until the result is produced (§4.1);
         // ALU/LSU/Branch/CSR accept one op per cycle (the LSU blocks for
         // the duration of a miss — single outstanding miss, as in CVA6's
-        // blocking D$ port).
+        // blocking D$ port). The quire spill/restore pair holds the port
+        // for its whole width-scaled multi-beat walk: exactly the
+        // `latency_for` value (`lat` already folds in the miss penalties),
+        // so the op-table latency is the one tuning knob for switch cost.
         self.unit_free[pi.unit as usize] = match pi.unit {
             Unit::Pau | Unit::Fpu | Unit::Mul => t + lat,
+            Unit::Lsu if matches!(ins.op, Op::Qlq | Op::Qsq) => t + lat,
             Unit::Lsu => t + 1 + eff.mem_extra,
             _ => t + 1,
         };
 
         // ── Control flow + next cycle. ──────────────────────────────────
         self.cycle = t + 1;
-        let next_seq = self.pc.wrapping_add(4);
+        let next_seq = self.ctx.pc.wrapping_add(4);
         if pi.unit == Unit::Branch {
             // Static BTFN prediction; JAL is always predicted (direct,
             // BTB hit); JALR is modelled as always mispredicted (no RAS).
@@ -399,7 +548,7 @@ impl Core {
                 crate::isa::Op::Jalr => next_seq,
                 _ => {
                     if ins.imm < 0 {
-                        self.pc.wrapping_add(ins.imm as u64)
+                        self.ctx.pc.wrapping_add(ins.imm as u64)
                     } else {
                         next_seq
                     }
@@ -410,14 +559,15 @@ impl Core {
                 self.mispredicts += 1;
                 self.cycle += self.cfg.mispredict_penalty;
             }
-            self.pc = actual;
+            self.ctx.pc = actual;
         } else {
-            self.pc = eff.next_pc.unwrap_or(next_seq);
+            self.ctx.pc = eff.next_pc.unwrap_or(next_seq);
         }
 
         self.instret += 1;
         if eff.halt {
             self.halted = true;
+            self.halt_exit = true;
         }
         if self.cfg.max_instrs != 0 && self.instret >= self.cfg.max_instrs {
             self.halted = true;
@@ -465,6 +615,10 @@ impl Core {
             mispredicts: self.mispredicts,
             dcache_hits: self.dcache.hits,
             dcache_misses: self.dcache.misses,
+            // Scheduler-level counters: a bare core run has none; the
+            // multi-hart scheduler fills them on its per-hart reports.
+            ctx_switches: 0,
+            spill_cycles: 0,
         }
     }
 }
@@ -497,7 +651,7 @@ mod tests {
             ecall
         "#,
         );
-        assert_eq!(core.x[10], 55);
+        assert_eq!(core.ctx.x[10], 55);
         assert!(core.halted());
     }
 
@@ -515,9 +669,9 @@ mod tests {
             ecall
         "#,
         );
-        assert_eq!(core.x[6] as i64, -7);
-        assert_eq!(core.x[7] as i64, -7); // lw sign-extends
-        assert_eq!(core.x[28], 0xFFFF_FFF9); // lwu zero-extends
+        assert_eq!(core.ctx.x[6] as i64, -7);
+        assert_eq!(core.ctx.x[7] as i64, -7); // lw sign-extends
+        assert_eq!(core.ctx.x[28], 0xFFFF_FFF9); // lwu zero-extends
     }
 
     #[test]
@@ -567,7 +721,7 @@ mod tests {
         core.load_program(&prog);
         core.mem.write_u32_slice(0x100, &a);
         core.mem.write_u32_slice(0x200, &b);
-        core.x[13] = 0x300;
+        core.ctx.x[13] = 0x300;
         core.run();
         assert_eq!(Posit32(core.mem.read_u32(0x300)).to_f64(), 32.0);
     }
@@ -669,7 +823,7 @@ mod tests {
             ecall
         "#,
         );
-        assert!(core.x[12] > core.x[10]);
+        assert!(core.ctx.x[12] > core.ctx.x[10]);
     }
 
     #[test]
@@ -698,10 +852,10 @@ mod tests {
         core.mem.write_u32(0x104, 0xDEAD_BEEF);
         core.mem.write_u64(0x108, 0x0123_4567_89AB_CDEF);
         core.run();
-        assert_eq!(core.p[0], 0xA5);
-        assert_eq!(core.p[1], 0xBEEF);
-        assert_eq!(core.p[2], 0xDEAD_BEEF);
-        assert_eq!(core.p[3], 0x0123_4567_89AB_CDEF);
+        assert_eq!(core.ctx.p[0], 0xA5);
+        assert_eq!(core.ctx.p[1], 0xBEEF);
+        assert_eq!(core.ctx.p[2], 0xDEAD_BEEF);
+        assert_eq!(core.ctx.p[3], 0x0123_4567_89AB_CDEF);
         assert_eq!(core.mem.read_u8(0x140), 0xA5);
         assert_eq!(core.mem.read_u16(0x142), 0xBEEF);
         assert_eq!(core.mem.read_u32(0x144), 0xDEAD_BEEF);
@@ -740,7 +894,7 @@ mod tests {
         core.load_program(&prog);
         core.mem.write_posit_slice(0x100, 2, &a);
         core.mem.write_posit_slice(0x200, 2, &b);
-        core.x[13] = 0x300;
+        core.ctx.x[13] = 0x300;
         core.run();
         assert_eq!(Posit16::from_bits(core.mem.read_u16(0x300) as u32).to_f64(), 32.0);
     }
@@ -776,9 +930,9 @@ mod tests {
         core.load_program(&prog);
         core.mem.write_posit_slice(0x100, 8, &a);
         core.mem.write_posit_slice(0x200, 8, &b);
-        core.x[13] = 0x300;
+        core.ctx.x[13] = 0x300;
         core.run();
-        assert!(matches!(core.quire, PauQuire::Q64(_)));
+        assert!(matches!(core.ctx.quire, PauQuire::Q64(_)));
         assert_eq!(Posit64::from_bits(core.mem.read_u64(0x300)).to_f64(), expect);
     }
 
@@ -796,8 +950,8 @@ mod tests {
             ecall
         "#,
         );
-        assert!(matches!(core.quire, PauQuire::Q8(_)));
-        assert_eq!(core.p[3], 0, "cleared 8-bit quire rounds to zero");
+        assert!(matches!(core.ctx.quire, PauQuire::Q8(_)));
+        assert_eq!(core.ctx.p[3], 0, "cleared 8-bit quire rounds to zero");
     }
 
     #[test]
@@ -824,6 +978,195 @@ mod tests {
     }
 
     #[test]
+    fn quire_spill_roundtrips_bit_identically_every_width() {
+        // qsq writes exactly `Quire::to_bytes` through the simulated D$,
+        // and qlq restores it bit-identically: accumulate, spill, wipe,
+        // restore, keep accumulating — the result must match a native
+        // PauQuire driven the same way.
+        use crate::posit::convert::from_f64_n;
+        for fmt in PositFmt::ALL {
+            let w = fmt.width();
+            let (sfx, load) = match fmt {
+                PositFmt::P8 => ("b", "plb"),
+                PositFmt::P16 => ("h", "plh"),
+                PositFmt::P32 => ("s", "plw"),
+                PositFmt::P64 => ("d", "pld"),
+            };
+            let eb = fmt.bytes();
+            let a = from_f64_n(w, -2.75);
+            let b = from_f64_n(w, 1.5);
+            let src = format!(
+                r#"
+                li a0, 0x100
+                li a1, 0x400
+                {load} p0, 0(a0)
+                {load} p1, {eb}(a0)
+                qclr.{sfx}
+                qmadd.{sfx} p0, p1
+                qsq.{sfx} (a1)
+                qclr.{sfx}
+                qlq.{sfx} (a1)
+                qmsub.{sfx} p0, p1
+                qround.{sfx} p2
+                ecall
+            "#
+            );
+            let prog = assemble(&src).unwrap();
+            let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+            core.load_program(&prog);
+            core.mem.write_posit_slice(0x100, eb, &[a, b]);
+            core.run();
+            // Native reference: the same sequence on a PauQuire.
+            let mut q = PauQuire::new(fmt);
+            q.clear(fmt);
+            q.madd(fmt, a, b);
+            let img = q.spill(fmt);
+            assert_eq!(
+                core.mem.read_bytes(0x400, fmt.quire_bytes()),
+                &img[..],
+                "{fmt:?}: spilled image != Quire::to_bytes"
+            );
+            let mut r = PauQuire::restore(fmt, &img);
+            r.msub(fmt, a, b);
+            assert_eq!(core.ctx.quire, r, "{fmt:?}: restored quire diverges");
+            // madd then msub of the same product cancels exactly.
+            assert_eq!(core.ctx.p[2], 0, "{fmt:?}: round after cancel");
+        }
+    }
+
+    #[test]
+    fn quire_spill_nar_image_is_canonical() {
+        // A NaR quire spills as the standard's canonical 10…0 image and
+        // restores sticky-NaR: qround after the restore must give NaR.
+        let prog = assemble(
+            r#"
+            li a0, 0x400
+            qclr.h
+            pmv.h.x p0, zero
+            qmadd.h p0, p1
+            qsq.h (a0)
+            qclr.h
+            qlq.h (a0)
+            qround.h p3
+            ecall
+        "#,
+        )
+        .unwrap();
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+        core.load_program(&prog);
+        core.ctx.p[1] = 0x8000; // Posit16 NaR operand
+        core.run();
+        let img = core.mem.read_bytes(0x400, PositFmt::P16.quire_bytes());
+        assert_eq!(img[31], 0x80, "NaR image top byte");
+        assert!(img[..31].iter().all(|&b| b == 0), "NaR image is 10…0");
+        assert_eq!(core.ctx.p[3], 0x8000, "restored NaR rounds to NaR");
+    }
+
+    #[test]
+    fn quire_spill_retags_like_other_quire_ops() {
+        // Spilling at a width other than the live accumulation re-tags
+        // (and therefore clears) first, like hardware re-purposing the
+        // one physical register; restoring at the instruction width tags
+        // the accumulator to it.
+        let core = run_src(
+            r#"
+            li a0, 0x400
+            qclr.s
+            pcvt.s.w p0, zero
+            qsq.b (a0)
+            qlq.b (a0)
+            ecall
+        "#,
+        );
+        assert!(matches!(core.ctx.quire, PauQuire::Q8(_)));
+        let img = core.mem.read_bytes(0x400, PositFmt::P8.quire_bytes());
+        assert!(img.iter().all(|&b| b == 0), "cross-width spill is the cleared image");
+    }
+
+    #[test]
+    fn quire_spill_costs_scale_with_width() {
+        // The 1024-bit Posit64 image takes 8× the beats of the 128-bit
+        // Posit8 one; back-to-back spills serialize on the LSU, so the
+        // wide loop must be measurably slower per iteration.
+        let run = |sfx: &str| {
+            run_src(&format!("li a0, 0x400\n{}ecall", "qsq.SFX (a0)\n".repeat(8).replace("SFX", sfx)))
+        };
+        let t8 = run("b").cycle;
+        let t64 = run("d").cycle;
+        // 8 spills × 16 beats = 128 cycles minimum through the LSU at 64
+        // bits vs 8 × 2 = 16 at 8 bits.
+        assert!(t64 >= 128, "cycle = {t64}");
+        assert!(t64 > t8 + 96, "p64 {t64} !≫ p8 {t8}");
+    }
+
+    #[test]
+    fn clear_halt_resumes_after_quantum_expiry() {
+        // max_instrs is the scheduler's quantum: the halt it causes is
+        // not a program exit, and clear_halt resumes mid-program (even
+        // mid-fused-loop) to the identical final state.
+        let src = r#"
+            li a0, 0x100
+            li a1, 0x200
+            li a2, 100
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.s p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            ecall
+        "#;
+        let prog = assemble(src).unwrap();
+        let run_chunked = |chunk: u64| {
+            let mut core =
+                Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+            core.load_program(&prog);
+            loop {
+                core.cfg.max_instrs = core.instret + chunk;
+                core.run();
+                if core.halted_on_exit() {
+                    break;
+                }
+                assert!(core.halted(), "run returned without halting");
+                core.clear_halt();
+            }
+            (core.stats().instret, core.ctx.clone())
+        };
+        let (i1, ctx1) = run_chunked(7);
+        let (i2, ctx2) = run_chunked(1_000_000);
+        assert_eq!(i1, i2, "instruction count diverges across quanta");
+        assert_eq!(ctx1, ctx2, "architectural state diverges across quanta");
+    }
+
+    #[test]
+    fn context_save_restore_swaps_jobs() {
+        // Two programs time-sliced on one core through save/restore:
+        // each must end exactly as if it ran alone.
+        let p1 = assemble("li a0, 1\nli a1, 2\nadd a0, a0, a1\necall").unwrap();
+        let p2 = assemble("li a0, 40\nli a1, 2\nadd a0, a0, a1\necall").unwrap();
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+        // Run p1 for one instruction, park it, run p2 fully, resume p1.
+        core.load_program(&p1);
+        core.cfg.max_instrs = 1;
+        core.run();
+        assert!(!core.halted_on_exit());
+        let parked = core.save_context();
+        core.cfg.max_instrs = 0;
+        core.load_program(&p2);
+        core.restore_context(HartContext::new());
+        core.run();
+        assert!(core.halted_on_exit());
+        assert_eq!(core.ctx.x[10], 42);
+        core.load_program(&p1);
+        core.restore_context(parked);
+        core.run();
+        assert!(core.halted_on_exit());
+        assert_eq!(core.ctx.x[10], 3);
+    }
+
+    #[test]
     fn load_program_shares_text_segment() {
         // The Arc-backed program store: loading must not copy the text
         // segment (coordinator batch runs re-load kernels per job).
@@ -831,6 +1174,20 @@ mod tests {
         let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
         core.load_program(&prog);
         assert!(Arc::ptr_eq(&core.program, &prog.instrs));
+    }
+
+    #[test]
+    fn plan_cache_survives_alternating_loads() {
+        // The context-switch pattern: job kernel ↔ 2-instruction switch
+        // kernel. Swapping back must reuse the cached plan, not rebuild.
+        let p1 = assemble("addi a0, a0, 1\necall").unwrap();
+        let p2 = assemble("qsq.s (a0)\necall").unwrap();
+        let mut core = Core::new(CoreConfig { mem_size: 1 << 20, ..Default::default() });
+        core.load_program(&p1);
+        let plan1 = Arc::as_ptr(&core.plan);
+        core.load_program(&p2);
+        core.load_program(&p1);
+        assert_eq!(Arc::as_ptr(&core.plan), plan1, "plan rebuilt despite the cache");
     }
 
     #[test]
@@ -891,18 +1248,14 @@ mod tests {
                         .collect();
                     c.mem.write_u32_slice(0x100, &vals);
                     c.mem.write_u32_slice(0x200, &vals);
-                    c.x[13] = 0x300;
+                    c.ctx.x[13] = 0x300;
                     c
                 })
                 .collect();
             let s_sb = cores[0].run();
             let s_or = cores[1].run();
             assert_eq!(s_sb, s_or, "stats diverge");
-            assert_eq!(cores[0].x, cores[1].x);
-            assert_eq!(cores[0].f, cores[1].f);
-            assert_eq!(cores[0].p, cores[1].p);
-            assert_eq!(cores[0].quire, cores[1].quire);
-            assert_eq!(cores[0].pc, cores[1].pc);
+            assert_eq!(cores[0].ctx, cores[1].ctx);
             assert_eq!(cores[0].mem.bytes(), cores[1].mem.bytes());
         }
     }
@@ -937,7 +1290,7 @@ mod tests {
                 c.load_program(&prog);
                 let s = c.run();
                 assert!(c.halted());
-                (s, c.pc, c.x)
+                (s, c.ctx.clone())
             };
             assert_eq!(run(Engine::Superblock), run(Engine::Oracle), "cap {cap}");
         }

@@ -132,6 +132,16 @@ pub fn encode(ins: &Instr) -> Result<u32, CodecError> {
         Enc::PositR { f5, .. } => {
             (f5 << 27) | (ins.fmt.bits() << 25) | rs2w | rs1w | rdw | OPC_POSIT
         }
+        Enc::QuireLS { f3 } => {
+            // Bits 31:27, rs2 and rd hardwired zero; no immediate field —
+            // the spill address is [rs1] and the quire is architectural.
+            // A nonzero imm (synthetic instruction streams can carry one)
+            // is unencodable, not silently droppable.
+            if ins.imm != 0 {
+                return Err(CodecError::ImmRange { op: ins.op, imm: ins.imm });
+            }
+            (ins.fmt.bits() << 25) | rs1w | (f3 << 12) | super::OPC_POSIT_LS
+        }
         Enc::Sys { imm12 } => (imm12 << 20) | 0b1110011,
         Enc::Csr { f3 } => {
             // imm = CSR number (unsigned 12-bit).
@@ -176,6 +186,15 @@ pub fn decode(w: u32) -> Result<Instr, CodecError> {
             Enc::U { opcode: o } => o == opcode,
             Enc::J => opcode == 0b1101111,
             Enc::PositR { .. } => false, // handled above
+            Enc::QuireLS { f3: a } => {
+                // Hardwired-zero fields must be zero (like Table 2's
+                // PositR encodings); anything else is illegal.
+                opcode == super::OPC_POSIT_LS
+                    && f3(w) == a
+                    && (w >> 27) == 0
+                    && rs2(w) == 0
+                    && rd(w) == 0
+            }
             Enc::Sys { imm12 } => {
                 opcode == 0b1110011 && f3(w) == 0 && (w >> 20) == imm12 && rd(w) == 0 && rs1(w) == 0
             }
@@ -217,7 +236,12 @@ pub fn decode(w: u32) -> Result<Instr, CodecError> {
                 _ => 0,
             },
             imm,
-            fmt: PositFmt::P32,
+            fmt: match e.enc {
+                // Quire spill/restore carries the posit width in bits
+                // 26:25, like the Xposit computational encodings.
+                Enc::QuireLS { .. } => PositFmt::from_bits(w >> 25),
+                _ => PositFmt::P32,
+            },
         });
     }
     Err(CodecError::Illegal(w))
@@ -283,7 +307,8 @@ mod tests {
                             Enc::Csr { .. } => imm.rem_euclid(4096),
                             Enc::B { .. } | Enc::J => imm & !1,
                             Enc::Sys { .. } => 0,
-                            Enc::R { .. } | Enc::R2 { .. } | Enc::R4 { .. } | Enc::PositR { .. } => 0,
+                            Enc::R { .. } | Enc::R2 { .. } | Enc::R4 { .. } | Enc::PositR { .. }
+                            | Enc::QuireLS { .. } => 0,
                             _ => imm,
                         },
                         fmt: PositFmt::P32,
@@ -357,10 +382,12 @@ mod tests {
         // QCLR with a non-zero rd is illegal per Table 2, at every width.
         assert!(decode((0b01001 << 27) | (0b10 << 25) | (3 << 7) | OPC_POSIT).is_err());
         assert!(decode((0b01001 << 27) | (0b01 << 25) | (3 << 7) | OPC_POSIT).is_err());
-        // POSIT-LS with a store funct3 used as a load shape is still a
-        // store; funct3 010/110 are unassigned on custom-1.
-        assert!(decode((0b010 << 12) | OPC_POSIT_LS).is_err());
-        assert!(decode((0b110 << 12) | OPC_POSIT_LS).is_err());
+        // POSIT-LS funct3 010/110 are the quire spill pair since the
+        // hart-context extension; their hardwired-zero fields (bits
+        // 31:27, rs2, rd) make everything else on those codes illegal.
+        assert!(decode((0b010 << 12) | (3 << 7) | OPC_POSIT_LS).is_err()); // rd != 0
+        assert!(decode((0b110 << 12) | (7 << 20) | OPC_POSIT_LS).is_err()); // rs2 != 0
+        assert!(decode((1 << 27) | (0b010 << 12) | OPC_POSIT_LS).is_err()); // f5 != 0
     }
 
     #[test]
@@ -434,8 +461,36 @@ mod tests {
         }
     }
 
+    /// `qsq`/`qlq` golden words plus the full encode→decode round trip at
+    /// every width — including the NaR-relevant fact that the `fmt` field
+    /// sits in bits 26:25 exactly like the Xposit computational ops.
+    #[test]
+    fn quire_spill_golden_words_and_roundtrip() {
+        // qlq.s (x10): 00000 | fmt 10 | 00000 | rs1=10 | 010 | 00000 | custom-1.
+        let w = encode(&Instr::i(Op::Qlq, 0, 10, 0)).unwrap();
+        assert_eq!(w, (0b10 << 25) | (10 << 15) | (0b010 << 12) | OPC_POSIT_LS);
+        // qsq.d (x7): fmt 11, funct3 110.
+        let ins = Instr::i(Op::Qsq, 0, 7, 0).with_fmt(PositFmt::P64);
+        let w = encode(&ins).unwrap();
+        assert_eq!(w, (0b11 << 25) | (7 << 15) | (0b110 << 12) | OPC_POSIT_LS);
+        for op in [Op::Qlq, Op::Qsq] {
+            for fmt in PositFmt::ALL {
+                for rs1 in [0u8, 1, 17, 31] {
+                    let ins = Instr::i(op, 0, rs1, 0).with_fmt(fmt);
+                    let w = encode(&ins).unwrap();
+                    assert_eq!((w >> 25) & 0b11, fmt.bits());
+                    assert_eq!(decode(w).unwrap(), ins, "{op:?} {fmt:?} word={w:#010x}");
+                }
+            }
+        }
+    }
+
     #[test]
     fn imm_range_checks() {
+        // Quire spills have no immediate field: nonzero offsets must be
+        // rejected, not silently dropped (exec honours imm).
+        assert!(encode(&Instr::i(Op::Qsq, 0, 5, 8)).is_err());
+        assert!(encode(&Instr::i(Op::Qlq, 0, 5, -8)).is_err());
         assert!(encode(&Instr::i(Op::Addi, 1, 0, 2048)).is_err());
         assert!(encode(&Instr::i(Op::Addi, 1, 0, -2049)).is_err());
         assert!(encode(&Instr::i(Op::Addi, 1, 0, 2047)).is_ok());

@@ -79,6 +79,11 @@ pub fn disasm(ins: &Instr) -> String {
                 format!("{mn} {}", parts.join(", "))
             }
         }
+        Enc::QuireLS { .. } => {
+            // Width-suffixed like the computational ops; base-register
+            // addressing with no offset field.
+            format!("{} ({})", fmt_mnemonic(mn, ins.fmt), reg_name(RegClass::X, ins.rs1))
+        }
         Enc::Sys { .. } => mn.to_string(),
         Enc::Csr { .. } => format!("{mn} {}, {:#x}, {}", rd(), ins.imm, rs1()),
     }
@@ -116,5 +121,15 @@ mod tests {
         assert_eq!(disasm(&Instr::i(Op::Plb, 3, 10, 0)), "plb p3, 0(a0)");
         assert_eq!(disasm(&Instr::i(Op::Pld, 3, 10, 8)), "pld p3, 8(a0)");
         assert_eq!(disasm(&Instr::s(Op::Psh, 10, 3, 2)), "psh p3, 2(a0)");
+        // Quire spill/restore: width-suffixed, base-register addressing.
+        assert_eq!(disasm(&Instr::i(Op::Qsq, 0, 10, 0)), "qsq.s (a0)");
+        assert_eq!(
+            disasm(&Instr::i(Op::Qlq, 0, 6, 0).with_fmt(PositFmt::P64)),
+            "qlq.d (t1)"
+        );
+        assert_eq!(
+            disasm(&Instr::i(Op::Qsq, 0, 31, 0).with_fmt(PositFmt::P8)),
+            "qsq.b (t6)"
+        );
     }
 }

@@ -12,6 +12,34 @@
 //! and adds 8/16/64-bit posit loads/stores on *custom-1*
 //! ([`OPC_POSIT_LS`]).
 //!
+//! ## custom-1 (POSIT-LS) encoding table
+//!
+//! Major opcode `0101011`. The loads mirror the integer load width codes;
+//! the stores set funct3 bit 2 so both live on one opcode; the two
+//! remaining codes hold the quire spill/restore pair (paper §8's missing
+//! piece — the one bit of architectural state PERCIVAL could not
+//! context-switch):
+//!
+//! | funct3 | instr | shape |
+//! |--------|-------|-------|
+//! | `000`  | `plb` | I-type posit load, 1 byte |
+//! | `001`  | `plh` | I-type posit load, 2 bytes |
+//! | `010`  | `qlq.{b,h,s,d}` | quire restore: base in `rs1`, `fmt` in bits 26:25, bits 31:27 / `rs2` / `rd` hardwired 0, no immediate |
+//! | `011`  | `pld` | I-type posit load, 8 bytes |
+//! | `100`  | `psb` | S-type posit store, 1 byte |
+//! | `101`  | `psh` | S-type posit store, 2 bytes |
+//! | `110`  | `qsq.{b,h,s,d}` | quire spill: same shape as `qlq` |
+//! | `111`  | `psd` | S-type posit store, 8 bytes |
+//!
+//! `qsq` stores the live 16·n-bit accumulator as its little-endian
+//! [`crate::posit::Quire::to_bytes`] memory image at `[rs1]` (NaR spills
+//! as the standard's canonical `10…0` pattern); `qlq` restores it,
+//! re-tagging the PAU accumulator to the instruction's width. Both walk
+//! the image through the D$ in 64-bit beats
+//! ([`PositFmt::quire_beats`]: 2/4/8/16 for P8…P64), which is what
+//! [`OpInfo::latency_for`] charges — Big-PERCIVAL's wide-quire-state
+//! cost, now visible on the spill path itself.
+//!
 //! Everything is table-driven: [`Op`] is the mnemonic-level opcode,
 //! [`OpInfo`] carries the encoding recipe, operand register classes, the
 //! functional unit, and the result latency (paper §4.1) used by the core
@@ -86,6 +114,20 @@ impl PositFmt {
     #[inline]
     pub fn bytes(self) -> usize {
         self.width() as usize / 8
+    }
+
+    /// Size in bytes of the format's 16·n-bit quire memory image (the
+    /// `qsq`/`qlq` spill format): 16 B for Posit8 up to 128 B for Posit64.
+    #[inline]
+    pub fn quire_bytes(self) -> usize {
+        2 * self.width() as usize
+    }
+
+    /// D$ beats a quire spill/restore takes over the core's 64-bit
+    /// memory port: `quire_bytes / 8` = 2/4/8/16 for P8…P64.
+    #[inline]
+    pub fn quire_beats(self) -> u64 {
+        self.quire_bytes() as u64 / 8
     }
 
     pub fn name(self) -> &'static str {
@@ -180,6 +222,11 @@ pub enum Enc {
     /// Xposit computational: `funct5 | 10 | rs2 | rs1 | 000 | rd | 0001011`.
     /// The `*_zero` flags mark fields hardwired to 00000 in Table 2.
     PositR { f5: u32, rs2_zero: bool, rs1_zero: bool, rd_zero: bool },
+    /// Quire spill/restore on custom-1: `00000 | fmt | 00000 | rs1 | f3 |
+    /// 00000 | 0101011`. Base address in `rs1`, posit width in bits 26:25
+    /// (like every Xposit computational encoding), no immediate — the
+    /// quire itself is architectural, not a register operand.
+    QuireLS { f3: u32 },
     /// SYSTEM with a fixed 12-bit immediate (ECALL/EBREAK).
     Sys { imm12: u32 },
     /// CSR access: `csr | rs1 | f3 | rd | 1110011`.
@@ -215,6 +262,13 @@ impl OpInfo {
     #[inline]
     pub fn latency_for(&self, fmt: PositFmt) -> u64 {
         let base = self.latency as u64;
+        // Quire spills/restores move the whole 16·n-bit image through the
+        // D$ in 64-bit beats: the first beat is covered by the base
+        // load/store latency, every further beat adds a cycle (the
+        // 128-bit image takes 2 beats, the 1024-bit one 16).
+        if matches!(self.op, Op::Qlq | Op::Qsq) {
+            return base + fmt.quire_beats() - 1;
+        }
         if self.unit != Unit::Pau || fmt != PositFmt::P64 {
             return base;
         }
@@ -233,20 +287,26 @@ impl OpInfo {
         self.unit == Unit::Branch
     }
 
-    /// True for the ops that end a basic block: control flow plus
-    /// ECALL/EBREAK (which halt the simulated core).
+    /// True for the ops that end a basic block: control flow,
+    /// ECALL/EBREAK (which halt the simulated core), and the quire
+    /// spill/restore pair — `qsq`/`qlq` are multi-beat LSU walks *and*
+    /// the scheduler's context-switch boundaries, so keeping them block
+    /// terminators gives the superblock engine a clean single-instruction
+    /// dispatch for them and keeps the fused-MAC detector's block shapes
+    /// untouched.
     #[inline]
     pub fn ends_block(&self) -> bool {
-        self.unit == Unit::Branch || matches!(self.op, Op::Ecall | Op::Ebreak)
+        self.unit == Unit::Branch
+            || matches!(self.op, Op::Ecall | Op::Ebreak | Op::Qlq | Op::Qsq)
     }
 }
 
 /// A decoded instruction: opcode + operand fields. `imm` is the
 /// sign-extended immediate where applicable (shift amount for shifts,
 /// CSR number for CSR ops). `fmt` is the posit width of an Xposit
-/// computational instruction (bits 26:25 of its encoding); it is fixed at
-/// `P32` for everything else, including the posit loads/stores, whose
-/// width is implied by the opcode.
+/// computational or quire spill/restore instruction (bits 26:25 of its
+/// encoding); it is fixed at `P32` for everything else, including the
+/// posit element loads/stores, whose width is implied by the opcode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Instr {
     pub op: Op,
@@ -494,6 +554,12 @@ ops! {
     Psb => "psb", Enc::S { opcode: OPC_POSIT_LS, f3: 0b100 }, Lsu, 1, (None, X, P);
     Psh => "psh", Enc::S { opcode: OPC_POSIT_LS, f3: 0b101 }, Lsu, 1, (None, X, P);
     Psd => "psd", Enc::S { opcode: OPC_POSIT_LS, f3: 0b111 }, Lsu, 1, (None, X, P);
+    // Quire spill/restore (custom-1 funct3 010/110): save/restore the
+    // whole 16·n-bit PAU accumulator at [rs1] — the paper-§8 context
+    // switch path. The static latency is the single-beat base; the
+    // width-scaled beat count is added by `latency_for`.
+    Qlq => "qlq.s", Enc::QuireLS { f3: 0b010 }, Lsu, 3, (None, X, None);
+    Qsq => "qsq.s", Enc::QuireLS { f3: 0b110 }, Lsu, 1, (None, X, None);
     PaddS => "padd.s", Enc::PositR { f5: 0b00000, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 3, (P, P, P);
     PsubS => "psub.s", Enc::PositR { f5: 0b00001, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 3, (P, P, P);
     PmulS => "pmul.s", Enc::PositR { f5: 0b00010, rs2_zero: false, rs1_zero: false, rd_zero: false }, Pau, 2, (P, P, P);
@@ -621,9 +687,13 @@ mod tests {
 
     #[test]
     fn width_scaled_latencies() {
-        // Narrow formats keep the paper's P32 latencies…
+        // Narrow formats keep the paper's P32 latencies (the quire
+        // spill/restore pair scales at every width and is checked below)…
         for fmt in [PositFmt::P8, PositFmt::P16, PositFmt::P32] {
             for e in OP_TABLE {
+                if matches!(e.op, Op::Qlq | Op::Qsq) {
+                    continue;
+                }
                 assert_eq!(e.latency_for(fmt), e.latency as u64, "{}", e.mnemonic);
             }
         }
@@ -639,6 +709,29 @@ mod tests {
     }
 
     #[test]
+    fn quire_spill_latency_scales_with_image_beats() {
+        // One beat per 64 bits of image: 16 B (P8) … 128 B (P64).
+        for fmt in PositFmt::ALL {
+            assert_eq!(fmt.quire_bytes(), 2 * fmt.width() as usize);
+            assert_eq!(fmt.quire_beats(), fmt.quire_bytes() as u64 / 8);
+            // Store: base 1 + extra beats; load: base 3 + extra beats.
+            assert_eq!(info(Op::Qsq).latency_for(fmt), fmt.quire_beats());
+            assert_eq!(info(Op::Qlq).latency_for(fmt), fmt.quire_beats() + 2);
+        }
+        // The 1024-bit Posit64 image costs 8× the 128-bit Posit8 one.
+        assert_eq!(
+            info(Op::Qsq).latency_for(PositFmt::P64),
+            8 * info(Op::Qsq).latency_for(PositFmt::P8)
+        );
+        // Spills terminate basic blocks (context-switch boundaries) but
+        // are not branches.
+        assert!(info(Op::Qsq).ends_block() && !info(Op::Qsq).is_branch());
+        assert!(info(Op::Qlq).ends_block() && !info(Op::Qlq).is_branch());
+        assert_eq!(info(Op::Qlq).unit, Unit::Lsu);
+        assert_eq!(info(Op::Qsq).unit, Unit::Lsu);
+    }
+
+    #[test]
     fn fmt_mnemonics_are_unique_and_follow_fd_naming() {
         assert_eq!(fmt_mnemonic("padd.s", PositFmt::P8), "padd.b");
         assert_eq!(fmt_mnemonic("qmadd.s", PositFmt::P16), "qmadd.h");
@@ -649,10 +742,13 @@ mod tests {
         assert_eq!(fmt_mnemonic("pmv.x.w", PositFmt::P16), "pmv.x.h");
         assert_eq!(fmt_mnemonic("pmv.w.x", PositFmt::P8), "pmv.b.x");
         assert_eq!(fmt_mnemonic("padd.s", PositFmt::P32), "padd.s");
+        // The quire spill pair follows the same naming rule.
+        assert_eq!(fmt_mnemonic("qsq.s", PositFmt::P8), "qsq.b");
+        assert_eq!(fmt_mnemonic("qlq.s", PositFmt::P64), "qlq.d");
         // No two (op, fmt) pairs may collide in mnemonic space.
         let mut seen = std::collections::HashSet::new();
         for e in OP_TABLE {
-            if let Enc::PositR { .. } = e.enc {
+            if matches!(e.enc, Enc::PositR { .. } | Enc::QuireLS { .. }) {
                 for fmt in PositFmt::ALL {
                     assert!(
                         seen.insert(fmt_mnemonic(e.mnemonic, fmt)),

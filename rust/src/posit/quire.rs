@@ -9,8 +9,13 @@
 //! limbs. Fused multiply-accumulate (`QMADD`/`QMSUB`) adds the *exact*
 //! product of two posits into the accumulator with no intermediate
 //! rounding; `QROUND` performs the single final rounding back to a posit.
-//! `QCLR`/`QNEG` complete the instruction set (no loads/stores — the paper
-//! deliberately omits quire spills, §4.1/§8).
+//! `QCLR`/`QNEG` complete the paper's instruction set; the paper
+//! deliberately omits quire loads/stores (§4.1) and names save/restore as
+//! future work (§8) — this reproduction closes that gap with the
+//! `qsq`/`qlq` spill instructions on custom-1, whose memory image is
+//! exactly [`Quire::to_bytes`] / [`Quire::from_bytes`] below (the restore
+//! side re-tags the PAU's format-tagged accumulator to the instruction's
+//! width; see [`crate::core::PauQuire::restore`]).
 //!
 //! The format is sized by the standard so that every bit of every posit
 //! product lands inside the register; the implementation `debug_assert`s

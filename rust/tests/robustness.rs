@@ -76,7 +76,7 @@ fn simulator_halts_at_text_end_without_ecall() {
     let stats = core.run();
     assert!(core.halted());
     assert_eq!(stats.instret, 1);
-    assert_eq!(core.x[10], 7);
+    assert_eq!(core.ctx.x[10], 7);
 }
 
 #[test]

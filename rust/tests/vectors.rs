@@ -88,9 +88,9 @@ fn gemm4_matches_oracle_native_and_simulated() {
     let lo = percival::bench::gemm::layout(percival::bench::gemm::GemmVariant::P32Quire, n);
     core.mem.write_u32_slice(lo.a, &a);
     core.mem.write_u32_slice(lo.b, &b);
-    core.x[10] = lo.a;
-    core.x[11] = lo.b;
-    core.x[12] = lo.c;
+    core.ctx.x[10] = lo.a;
+    core.ctx.x[11] = lo.b;
+    core.ctx.x[12] = lo.c;
     core.run();
     assert_eq!(core.mem.read_u32_slice(lo.c, n * n), want_q);
 
@@ -104,9 +104,9 @@ fn gemm4_matches_oracle_native_and_simulated() {
     core.load_program(&prog);
     core.mem.write_u32_slice(lo.a, &a);
     core.mem.write_u32_slice(lo.b, &b);
-    core.x[10] = lo.a;
-    core.x[11] = lo.b;
-    core.x[12] = lo.c;
+    core.ctx.x[10] = lo.a;
+    core.ctx.x[11] = lo.b;
+    core.ctx.x[12] = lo.c;
     core.run();
     assert_eq!(core.mem.read_u32_slice(lo.c, n * n), want_nq);
 }
@@ -142,10 +142,10 @@ fn hand_assembled_quire_program_matches_oracle_vectors() {
     core.load_program(&prog);
     core.mem.write_u32_slice(0x100, &a);
     core.mem.write_u32_slice(0x800, &b);
-    core.x[10] = 0x100;
-    core.x[11] = 0x800;
-    core.x[12] = a.len() as u64;
-    core.x[13] = 0x1000;
+    core.ctx.x[10] = 0x100;
+    core.ctx.x[11] = 0x800;
+    core.ctx.x[12] = a.len() as u64;
+    core.ctx.x[13] = 0x1000;
     core.run();
     assert_eq!(core.mem.read_u32(0x1000), want);
 }
