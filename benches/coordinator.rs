@@ -1,8 +1,10 @@
 //! Coordinator throughput bench: GEMM jobs/s across worker counts and
 //! backends (the L3 request path).
 
-use percival::bench::harness::bench;
-use percival::coordinator::{Backend, Coordinator, Job};
+use percival::bench::harness::{bench, write_bench_json, JsonRow};
+use percival::coordinator::sched::run_batch_sim;
+use percival::coordinator::{Backend, Coordinator, Format, Job, SimPoolConfig};
+use percival::posit::convert::from_f64_n;
 use percival::posit::Posit32;
 use percival::testing::Rng;
 
@@ -44,4 +46,49 @@ fn main() {
         println!("pjrt backend skipped (artifacts not built)");
     }
     co.shutdown();
+
+    // Checkpoint overhead on the multi-hart Sim scheduler: the same
+    // batch with periodic checkpointing on vs off. The makespans are
+    // simulated cycles (deterministic), so the tracked row regresses
+    // only if the checkpoint path itself gets more expensive.
+    let mut rng = Rng::new(0xC2);
+    let n = 16;
+    let sched_jobs: Vec<Job> = (0..4)
+        .map(|_| {
+            let a: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+            let b: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+            Job::Gemm { fmt: Format::P32, n, a, b, quire: true }
+        })
+        .collect();
+    let base_pool = SimPoolConfig { harts: 2, quantum: 1_000, ..Default::default() };
+    let ckpt_pool =
+        SimPoolConfig { harts: 2, quantum: 1_000, checkpoint_quanta: 4, ..Default::default() };
+    let base = run_batch_sim(&sched_jobs, &base_pool).expect("base batch");
+    bench("sim sched gemm16 x4, ckpt every 4 quanta", 1, 3, || {
+        run_batch_sim(&sched_jobs, &ckpt_pool).expect("ckpt batch");
+    });
+    let ckpt = run_batch_sim(&sched_jobs, &ckpt_pool).expect("ckpt batch");
+    let overhead =
+        ckpt.makespan_cycles() as f64 / base.makespan_cycles().max(1) as f64 - 1.0;
+    println!(
+        "  → makespan {} vs {} cycles without checkpoints ({:+.2}% overhead)",
+        ckpt.makespan_cycles(),
+        base.makespan_cycles(),
+        100.0 * overhead
+    );
+    // Tracked row: simulated (deterministic) makespan with checkpoints
+    // on; `speedup_x` carries the no-checkpoint/checkpoint ratio, so a
+    // drop below ~0.9 means the overhead gate is in danger.
+    let row = JsonRow {
+        bench: "gemm_sim_sched_ckpt_n16x4".into(),
+        mean_s: ckpt.makespan_s,
+        ns_per_op: ckpt.makespan_s * 1e9 / sched_jobs.len() as f64,
+        speedup_x: Some(base.makespan_s / ckpt.makespan_s),
+    };
+    match write_bench_json("BENCH_posit_kernels.json", &[row]) {
+        Ok(()) => println!("  wrote 1 row to BENCH_posit_kernels.json"),
+        Err(e) => eprintln!("  could not write BENCH_posit_kernels.json: {e}"),
+    }
 }

@@ -33,11 +33,21 @@
 //! `qsq`/`qlq` quire spill instructions — the paper-§8 OS scenario,
 //! reported as per-job completion latency under contention plus per-hart
 //! utilization and spill-cycle counters.
+//!
+//! The multi-hart scheduler is also **fault tolerant**: cores latch
+//! architectural traps instead of panicking, in-flight jobs checkpoint
+//! to versioned+checksummed context images, hart failures migrate jobs
+//! to survivors, and per-job deadline/retry policies turn every failure
+//! mode into a typed [`sched::SimJobReport::error`] — see the [`sched`]
+//! module doc and [`FaultPlan`].
 
 pub mod json;
 pub mod sched;
 
-pub use sched::{HartReport, SimBatchReport, SimJobReport, SimPoolConfig};
+pub use sched::{
+    FaultPlan, HartKill, HartReport, JobSpec, SimBatchReport, SimJobReport, SimPoolConfig,
+    TrapInject,
+};
 
 use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};
 use crate::core::CoreConfig;
@@ -265,13 +275,17 @@ impl Coordinator {
     pub fn run_batch_sim(&self, jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
         self.metrics.submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         let t0 = Instant::now();
-        let mut pool = *pool;
+        let mut pool = pool.clone();
         pool.core.engine = self.sim_engine;
         let res = sched::run_batch_sim(jobs, &pool);
         self.metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         match &res {
-            Ok(_) => {
-                self.metrics.completed.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            Ok(report) => {
+                // Per-job typed failures (retries exhausted, deadline
+                // missed, hart pool lost) count as errors, not completions.
+                let failed = report.failures() as u64;
+                self.metrics.completed.fetch_add(jobs.len() as u64 - failed, Ordering::Relaxed);
+                self.metrics.errors.fetch_add(failed, Ordering::Relaxed);
             }
             Err(_) => {
                 // A rejected batch rejects every job in it, so the error

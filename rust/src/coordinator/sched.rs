@@ -15,11 +15,12 @@
 //!
 //! - Each hart is one [`Core`]: its own memory, D$ and timeline. Jobs
 //!   are assigned round-robin at submission; each job gets a private
-//!   page-aligned region of its hart's memory (inputs, outputs, and a
-//!   quire spill slot), like processes under an OS.
+//!   page-aligned region (inputs, outputs, and a quire spill slot) in a
+//!   *global* address layout shared by every hart, so a saved context's
+//!   absolute pointers stay valid on whichever hart the job lands on.
 //! - A quantum is `quantum` retired instructions, enforced through the
 //!   core's `max_instrs` valve; [`Core::halted_on_exit`] distinguishes a
-//!   job's own ECALL from a quantum expiry.
+//!   job's own ECALL from a quantum expiry, and [`Core::trap`] from both.
 //! - On preemption the scheduler clones the context out, then runs the
 //!   two-instruction spill kernel `qsq.{fmt} (t6); ecall` on the core
 //!   (clobbering only state already saved); resume runs `qlq.{fmt}
@@ -32,59 +33,228 @@
 //!   through the scheduler because preemption is driven by `max_instrs`,
 //!   which both engines trip on the same instruction).
 //!
+//! ## Fault tolerance
+//!
+//! The serving layer survives three injected failure classes
+//! ([`FaultPlan`], checked only at quantum boundaries so determinism and
+//! engine identity are preserved):
+//!
+//! - **Hart kills** (`kill hart N at cycle C`): the victim's unfinished
+//!   jobs — including the one whose state died with the core — migrate
+//!   to the least-loaded surviving hart and restart from their last
+//!   checkpoint (or from scratch). With no survivor left the remaining
+//!   jobs fail with a typed [`Error`]; nothing panics.
+//! - **Injected traps** (`trap job J at instruction K`): the quantum is
+//!   shortened so the core halts exactly at the job's K-th retired
+//!   instruction and the scheduler synthesizes a one-shot
+//!   [`Trap::Injected`]; real traps latched by the core (out-of-bounds,
+//!   misalignment, illegal opcodes) take the same path. A faulted
+//!   attempt retries from its last checkpoint with exponential backoff
+//!   ([`RETRY_BACKOFF_CYCLES`]` << retries`) until
+//!   [`JobSpec::max_retries`] is spent, then fails typed.
+//! - **Checkpoint corruption**: a flipped byte in a stored image. The
+//!   versioned, checksummed [`HartContext::to_image`] format rejects it
+//!   at restore time and the job falls back to a from-scratch restart.
+//!
+//! Checkpoints ([`SimPoolConfig::checkpoint_quanta`], default off) are
+//! taken in place every N quanta of a job: the context image plus the
+//! job's writable memory (output region and quire spill slot), with the
+//! quire additionally spilled through the real `qsq` kernel so the
+//! checkpoint cost is cycle-accounted on the hart's timeline. The
+//! kernels are register-only outside those regions, so image + regions
+//! is a complete resume state — recovered jobs finish bit-identical to
+//! an uninterrupted run (pinned by `tests/fault_injection.rs`).
+//!
+//! Per-job deadlines ([`JobSpec::deadline_cycles`]) fail a job typed —
+//! whether it is still running past the deadline or completed late —
+//! and count [`Stats::deadline_misses`]. [`SimPoolConfig::max_queue_depth`]
+//! rejects an oversized batch at admission, before any simulation.
+//!
 //! Results are bit-identical to running each job alone on
-//! `Backend::Native` (pinned by the tests below): preemption changes
-//! *when* cycles happen, never *what* the arithmetic produces.
+//! `Backend::Native` (pinned by the tests below): preemption, migration
+//! and checkpoint-recovery change *when* cycles happen, never *what*
+//! the arithmetic produces.
+//!
+//! [`Error`]: crate::error::Error
 
 use super::{check_patterns_n, check_shape, Format, Job};
 use crate::bench::gemm::{
     dot_program, gemm_program_cached, set_dot_args, set_gemm_args, GemmVariant,
 };
-use crate::core::{Core, CoreConfig, HartContext, Stats};
+use crate::core::{Core, CoreConfig, HartContext, Stats, Trap};
 use crate::error::Result;
 use crate::isa::asm::{assemble, Program};
 use crate::isa::PositFmt;
+use crate::testing::Rng;
 use std::sync::{Arc, OnceLock};
 
+/// Default retry budget for jobs submitted without an explicit
+/// [`JobSpec`].
+pub const DEFAULT_MAX_RETRIES: u32 = 3;
+
+/// Base of the exponential retry backoff: after its `r`-th failure a job
+/// is ineligible for dispatch for `RETRY_BACKOFF_CYCLES << r` cycles of
+/// its hart's timeline.
+pub const RETRY_BACKOFF_CYCLES: u64 = 256;
+
+/// Kill hart `hart` at the first quantum boundary at or after `at_cycle`
+/// of its own timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HartKill {
+    pub hart: usize,
+    pub at_cycle: u64,
+}
+
+/// Synthesize a [`Trap::Injected`] in job `job` once it has retired
+/// `at_instr` of its own instructions (one-shot: the retry runs clean).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrapInject {
+    pub job: usize,
+    pub at_instr: u64,
+}
+
+/// A deterministic fault-injection plan, checked at quantum boundaries.
+/// Entries naming harts or jobs outside the batch are ignored.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Hart failures (fail-stop: core state and memory are lost).
+    pub kill_harts: Vec<HartKill>,
+    /// Synthetic traps at exact per-job instruction counts.
+    pub inject_traps: Vec<TrapInject>,
+    /// Job indices whose *next* checkpoint image gets a byte flipped
+    /// (one-shot storage fault; the checksum rejects it at restore).
+    pub corrupt_checkpoints: Vec<usize>,
+}
+
+impl FaultPlan {
+    /// No faults planned.
+    pub fn is_empty(&self) -> bool {
+        self.kill_harts.is_empty()
+            && self.inject_traps.is_empty()
+            && self.corrupt_checkpoints.is_empty()
+    }
+
+    /// A deterministic plan derived from `seed` for a pool of `harts`
+    /// harts running `jobs` jobs: one hart kill (only when a survivor
+    /// would remain), one injected trap, one corrupted checkpoint. The
+    /// same seed always produces the same plan — the property-test
+    /// harness sweeps seeds and pins recovered bits against Native.
+    pub fn seeded(seed: u64, harts: usize, jobs: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17);
+        let mut plan = FaultPlan::default();
+        if harts > 1 {
+            plan.kill_harts.push(HartKill {
+                hart: (rng.next_u64() as usize) % harts,
+                at_cycle: 5_000 + rng.next_u64() % 120_000,
+            });
+        }
+        if jobs > 0 {
+            plan.inject_traps.push(TrapInject {
+                job: (rng.next_u64() as usize) % jobs,
+                at_instr: rng.next_u64() % 4_000,
+            });
+            plan.corrupt_checkpoints.push((rng.next_u64() as usize) % jobs);
+        }
+        plan
+    }
+}
+
 /// Configuration of the simulated hart pool.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SimPoolConfig {
     /// Number of simulated harts the batch is scheduled over.
     pub harts: usize,
     /// Quantum in retired instructions per time slice.
     pub quantum: u64,
     /// Per-hart core configuration (engine, clock, cache; the memory
-    /// size is grown automatically to fit the hart's job regions).
+    /// size is grown automatically to fit the global job regions).
     pub core: CoreConfig,
+    /// Checkpoint a running job every this many of its quanta (`0`
+    /// disables checkpointing — the default, which keeps the scheduler
+    /// exactly as cheap as the pre-fault-tolerance one).
+    pub checkpoint_quanta: u64,
+    /// Admission control: reject batches larger than this many jobs
+    /// (`0` = unlimited).
+    pub max_queue_depth: usize,
+    /// Faults to inject (default: none).
+    pub faults: FaultPlan,
 }
 
 impl Default for SimPoolConfig {
     fn default() -> Self {
-        Self { harts: 2, quantum: 10_000, core: CoreConfig::default() }
+        Self {
+            harts: 2,
+            quantum: 10_000,
+            core: CoreConfig::default(),
+            checkpoint_quanta: 0,
+            max_queue_depth: 0,
+            faults: FaultPlan::default(),
+        }
+    }
+}
+
+/// A job plus its serving policy: optional completion deadline (in
+/// cycles of the hart timeline it runs on) and retry budget.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub job: Job,
+    /// Fail the job (typed, counted in [`Stats::deadline_misses`]) if it
+    /// has not completed by this cycle.
+    pub deadline_cycles: Option<u64>,
+    /// Faulted attempts allowed before the job fails for good.
+    pub max_retries: u32,
+}
+
+impl JobSpec {
+    /// Default policy: no deadline, [`DEFAULT_MAX_RETRIES`] retries.
+    pub fn new(job: Job) -> Self {
+        Self { job, deadline_cycles: None, max_retries: DEFAULT_MAX_RETRIES }
+    }
+}
+
+impl From<Job> for JobSpec {
+    fn from(job: Job) -> Self {
+        Self::new(job)
     }
 }
 
 /// One job's outcome under contention.
 #[derive(Debug, Clone)]
 pub struct SimJobReport {
-    /// Result bit patterns (`u64` view, lossless for every width).
+    /// Result bit patterns (`u64` view, lossless for every width; empty
+    /// when the job failed — see [`Self::error`]).
     pub bits64: Vec<u64>,
     pub fmt: Format,
-    /// Hart the job ran on.
+    /// Hart the job last ran on (its final home after any migrations).
     pub hart: usize,
     /// Simulated seconds from batch start until this job completed —
-    /// its latency under contention, context switches included.
+    /// its latency under contention, context switches included (`0.0`
+    /// for failed jobs).
     pub completion_s: f64,
+    /// Faulted attempts this job burned (injected/real traps, corrupted
+    /// checkpoint restores).
+    pub retries: u64,
+    /// Times this job was migrated off a failed hart.
+    pub migrations: u64,
+    /// Checkpoints captured of this job.
+    pub checkpoints: u64,
+    /// Why the job failed; `None` means [`Self::bits64`] is valid. A
+    /// failed job never fails the batch — and never panics a worker.
+    pub error: Option<crate::error::Error>,
 }
 
 /// One hart's aggregate outcome.
 #[derive(Debug, Clone)]
 pub struct HartReport {
-    /// The hart's final counters; `ctx_switches` and `spill_cycles` are
-    /// filled in by the scheduler.
+    /// The hart's final counters; the scheduler-level fields
+    /// (`ctx_switches`, `spill_cycles`, `checkpoints`, `migrations`,
+    /// `retries`, `deadline_misses`, plus injected `traps`) are filled
+    /// in by the scheduler.
     pub stats: Stats,
     /// Jobs that ran to completion on this hart.
     pub jobs: usize,
+    /// False when a [`FaultPlan`] kill took this hart down.
+    pub alive: bool,
 }
 
 /// The whole batch's outcome.
@@ -110,6 +280,11 @@ impl SimBatchReport {
         let m = self.makespan_cycles().max(1) as f64;
         self.harts.iter().map(|h| h.stats.cycles as f64 / m).collect()
     }
+
+    /// Jobs that ended in a typed failure.
+    pub fn failures(&self) -> usize {
+        self.jobs.iter().filter(|j| j.error.is_some()).count()
+    }
 }
 
 /// The two-instruction context-switch kernels, one per (direction,
@@ -130,12 +305,25 @@ fn switch_prog(restore: bool, fmt: PositFmt) -> &'static Program {
     &cache[(restore as usize) * 4 + fmt as usize]
 }
 
-/// A job staged onto a hart: program, region addresses, saved context.
+/// A resumable snapshot of an in-flight job: the versioned, checksummed
+/// context image plus the job's writable memory (everything its kernel
+/// can have written — the output region and the quire spill slot) and
+/// its instruction-count progress.
+struct Checkpoint {
+    image: Vec<u8>,
+    out_bytes: Vec<u8>,
+    spill_bytes: Vec<u8>,
+    instret: u64,
+}
+
+/// A job staged onto a hart: program, region addresses, saved context,
+/// and its fault-tolerance state.
 struct Slot {
     /// Index in the submitted batch.
     idx: usize,
     fmt: PositFmt,
     program: Program,
+    dot: bool,
     /// Input bit patterns and where they go.
     a: Vec<u64>,
     b: Vec<u64>,
@@ -145,19 +333,44 @@ struct Slot {
     out_len: usize,
     /// The job's quire save area.
     spill_addr: u64,
-    /// Saved architectural state (initial register arguments before the
-    /// first dispatch, the preemption snapshot afterwards).
+    /// Pristine initial state (argument registers installed) — the
+    /// from-scratch restart image.
+    init_ctx: HartContext,
+    /// Saved architectural state (the preemption snapshot once running).
     ctx: HartContext,
     /// Whether the job has executed at least one quantum (and therefore
     /// owns a live quire image to restore).
     started: bool,
     done: bool,
+    failed: Option<crate::error::Error>,
     completion_cycle: u64,
     bits: Vec<u64>,
+    /// Current home hart.
+    hart: usize,
+    deadline: Option<u64>,
+    max_retries: u32,
+    retries: u64,
+    migrations: u64,
+    checkpoints: u64,
+    /// Retired instructions of this job's current lineage (survives
+    /// checkpoint restore, resets on a from-scratch restart).
+    progress: u64,
+    /// Quanta executed since the last checkpoint/restart.
+    quanta_run: u64,
+    ckpt: Option<Checkpoint>,
+    /// Backoff: not dispatchable before this cycle of its hart.
+    next_eligible: u64,
+    /// Machine state must be rebuilt before the next dispatch (set after
+    /// a faulted attempt or a migration).
+    needs_reset: bool,
+    /// Pending injected trap at this job-local instruction count.
+    trap_at: Option<u64>,
+    /// The next checkpoint image of this job gets corrupted (one-shot).
+    corrupt_ckpt: bool,
 }
 
-/// Validate one job and stage it (addresses are assigned later, once
-/// jobs are assigned to harts).
+/// Validate one job and stage it (addresses are assigned later, by the
+/// global placement pass).
 fn stage(idx: usize, job: &Job) -> Result<Slot> {
     // Same shape/pattern validation as the worker path, with the batch
     // index prefixed so a rejected batch names the offending job.
@@ -195,6 +408,7 @@ fn stage(idx: usize, job: &Job) -> Result<Slot> {
         idx,
         fmt,
         program,
+        dot,
         a,
         b,
         a_addr: 0,
@@ -202,25 +416,40 @@ fn stage(idx: usize, job: &Job) -> Result<Slot> {
         out_addr: 0,
         out_len,
         spill_addr: 0,
+        init_ctx: HartContext::new(),
         ctx: HartContext::new(),
         started: false,
         done: false,
+        failed: None,
         completion_cycle: 0,
         bits: Vec::new(),
+        hart: 0,
+        deadline: None,
+        max_retries: DEFAULT_MAX_RETRIES,
+        retries: 0,
+        migrations: 0,
+        checkpoints: 0,
+        progress: 0,
+        quanta_run: 0,
+        ckpt: None,
+        next_eligible: 0,
+        needs_reset: false,
+        trap_at: None,
+        corrupt_ckpt: false,
     })
 }
 
 /// Assign the slot's region addresses starting at `base` and install the
 /// kernel's argument registers (through the shared `bench::gemm` calling
 /// convention helpers); returns one past the region's end (page-aligned).
-fn place(slot: &mut Slot, base: u64, dot: bool) -> u64 {
+fn place(slot: &mut Slot, base: u64) -> u64 {
     let page = |x: u64| (x + 0xFFF) & !0xFFF;
     let eb = slot.fmt.bytes() as u64;
     slot.a_addr = base;
     slot.b_addr = page(slot.a_addr + slot.a.len() as u64 * eb);
     slot.out_addr = page(slot.b_addr + slot.b.len() as u64 * eb);
     slot.spill_addr = page(slot.out_addr + slot.out_len as u64 * eb);
-    if dot {
+    if slot.dot {
         set_dot_args(
             &mut slot.ctx,
             slot.a_addr,
@@ -231,151 +460,494 @@ fn place(slot: &mut Slot, base: u64, dot: bool) -> u64 {
     } else {
         set_gemm_args(&mut slot.ctx, slot.a_addr, slot.b_addr, slot.out_addr);
     }
+    slot.init_ctx = slot.ctx.clone();
     page(slot.spill_addr + slot.fmt.quire_bytes() as u64)
 }
 
-fn is_dot(job: &Job) -> bool {
-    matches!(job, Job::Dot { .. } | Job::DotP32 { .. })
+/// One simulated hart: its core plus the scheduler's bookkeeping.
+struct Hart {
+    core: Core,
+    /// Slot indices assigned here; order defines the dispatch rotation.
+    queue: Vec<usize>,
+    /// The job whose state is live on the core and must be spilled
+    /// before another runs (None right after a completion or fault).
+    active: Option<usize>,
+    /// Rotation pointer: position in `queue` most recently dispatched,
+    /// which keeps the round-robin order fair even across completions.
+    last_pos: Option<usize>,
+    switches: u64,
+    spill_cycles: u64,
+    alive: bool,
+    kill_at: Option<u64>,
+    checkpoints: u64,
+    migrations_in: u64,
+    retries: u64,
+    deadline_misses: u64,
+    injected: u64,
+    jobs_done: usize,
 }
 
-/// Run one hart's job queue to completion: round-robin time slices with
-/// `qsq`/`qlq` context switches. Returns the hart's stats (spill
-/// counters filled).
-fn run_hart(mut cfg: CoreConfig, quantum: u64, slots: &mut [Slot], mem_end: u64) -> Stats {
-    // Grow the hart's memory to fit its regions: `mem_end` is the last
-    // `place` return value (page-aligned high-water mark).
-    cfg.mem_size = cfg.mem_size.max(mem_end as usize);
-    cfg.max_instrs = 0;
-    let mut core = Core::new(cfg);
-    for s in slots.iter() {
-        let eb = s.fmt.bytes();
-        core.mem.write_posit_slice(s.a_addr, eb, &s.a);
-        core.mem.write_posit_slice(s.b_addr, eb, &s.b);
+/// Rebuild a slot's machine state on this hart before (re)dispatch:
+/// inputs rewritten, output and spill regions restored from the last
+/// checkpoint or zeroed, context set to the checkpoint image or the
+/// pristine initial one. Checkpoint corruption is detected *here* — a
+/// bad image is dropped, costs one retry, and the job starts clean.
+fn reset_slot(hart: &mut Hart, s: &mut Slot) {
+    let core = &mut hart.core;
+    let eb = s.fmt.bytes();
+    core.mem.write_posit_slice(s.a_addr, eb, &s.a);
+    core.mem.write_posit_slice(s.b_addr, eb, &s.b);
+    let restored = s.ckpt.as_ref().and_then(|ck| {
+        HartContext::from_image(&ck.image).ok().map(|ctx| {
+            (ctx, ck.out_bytes.clone(), ck.spill_bytes.clone(), ck.instret)
+        })
+    });
+    match restored {
+        Some((ctx, out_bytes, spill_bytes, instret)) => {
+            core.mem.write_bytes(s.out_addr, &out_bytes);
+            core.mem.write_bytes(s.spill_addr, &spill_bytes);
+            s.ctx = ctx;
+            s.started = true;
+            s.progress = instret;
+        }
+        None => {
+            if s.ckpt.take().is_some() {
+                // The stored image failed validation (corruption fault):
+                // count the wasted restore and fall back to scratch.
+                s.retries += 1;
+                hart.retries += 1;
+            }
+            core.mem.write_bytes(s.out_addr, &vec![0u8; s.out_len * eb]);
+            core.mem.write_bytes(s.spill_addr, &vec![0u8; s.fmt.quire_bytes()]);
+            s.ctx = s.init_ctx.clone();
+            s.started = false;
+            s.progress = 0;
+        }
     }
-    let mut switches = 0u64;
-    let mut spill_cycles = 0u64;
-    // `active`: the job whose state is live on the core and must be
-    // spilled before another runs (None right after a job completes).
-    // `last`: the rotation pointer — the slot most recently dispatched,
-    // which keeps the round-robin order fair even across completions
-    // (a finished job clears `active` but must not reset the rotation).
-    let mut active: Option<usize> = None;
-    let mut last: Option<usize> = None;
-    loop {
-        // Round-robin: the next pending slot strictly after the last
-        // dispatched one (cyclically); the same job again when it is the
-        // only one pending.
-        let n = slots.len();
-        let start = last.map_or(0, |a| (a + 1) % n);
-        let mut next = None;
-        for k in 0..n {
-            let i = (start + k) % n;
-            if !slots[i].done {
-                next = Some(i);
-                break;
-            }
+    s.quanta_run = 0;
+    s.needs_reset = false;
+}
+
+/// Context-switch the hart to slot `cur`: spill the preempted job's
+/// quire through `qsq`, then either `qlq`-restore `cur`'s quire and
+/// re-install its snapshot, or install its fresh context.
+fn dispatch(hart: &mut Hart, slots: &mut [Slot], cur: usize) {
+    let core = &mut hart.core;
+    let t0 = core.cycle;
+    core.cfg.max_instrs = 0;
+    if let Some(prev) = hart.active {
+        if prev != cur {
+            // Preempt: snapshot the context, then spill the quire
+            // through the real instruction (t6 and the PC are
+            // clobbered, but the snapshot already holds them).
+            slots[prev].ctx = core.save_context();
+            core.ctx.x[31] = slots[prev].spill_addr;
+            core.load_program(switch_prog(false, slots[prev].fmt));
+            core.run();
         }
-        let Some(cur) = next else { break };
-        last = Some(cur);
-        if active == Some(cur) {
-            // Sole remaining job: resume in place, no switch.
-            core.clear_halt();
-        } else {
-            let t0 = core.cycle;
-            core.cfg.max_instrs = 0;
-            if let Some(prev) = active {
-                // Preempt: snapshot the context, then spill the quire
-                // through the real instruction (t6 and the PC are
-                // clobbered, but the snapshot already holds them).
-                slots[prev].ctx = core.save_context();
-                core.ctx.x[31] = slots[prev].spill_addr;
-                core.load_program(switch_prog(false, slots[prev].fmt));
-                core.run();
-            }
-            if slots[cur].started {
-                // Resume: restore the quire through qlq first, then
-                // install the saved context with the instruction-restored
-                // quire grafted in (the memory image is authoritative).
-                core.ctx.x[31] = slots[cur].spill_addr;
-                core.load_program(switch_prog(true, slots[cur].fmt));
-                core.run();
-                let quire = core.ctx.quire.clone();
-                core.load_instrs(Arc::clone(&slots[cur].program.instrs));
-                core.restore_context(slots[cur].ctx.clone());
-                core.ctx.quire = quire;
-            } else {
-                // First dispatch: a fresh context, no quire image yet.
-                core.load_instrs(Arc::clone(&slots[cur].program.instrs));
-                core.restore_context(slots[cur].ctx.clone());
-            }
-            switches += 1;
-            spill_cycles += core.cycle - t0;
-            active = Some(cur);
-        }
-        core.cfg.max_instrs = core.instret.saturating_add(quantum);
+    }
+    if slots[cur].started {
+        // Resume: restore the quire through qlq first, then install the
+        // saved context with the instruction-restored quire grafted in
+        // (the memory image is authoritative).
+        core.ctx.x[31] = slots[cur].spill_addr;
+        core.load_program(switch_prog(true, slots[cur].fmt));
         core.run();
-        if core.halted_on_exit() {
-            let s = &mut slots[cur];
-            s.done = true;
-            s.completion_cycle = core.cycle;
-            s.bits = core.mem.read_posit_slice(s.out_addr, s.fmt.bytes(), s.out_len);
-            // A finished job needs no save on the next dispatch.
-            active = None;
-        } else {
-            slots[cur].started = true;
-        }
+        let quire = core.ctx.quire.clone();
+        core.load_instrs(Arc::clone(&slots[cur].program.instrs));
+        core.restore_context(slots[cur].ctx.clone());
+        core.ctx.quire = quire;
+    } else {
+        // First dispatch: a fresh context, no quire image yet.
+        core.load_instrs(Arc::clone(&slots[cur].program.instrs));
+        core.restore_context(slots[cur].ctx.clone());
     }
-    let mut stats = core.stats();
-    stats.ctx_switches = switches;
-    stats.spill_cycles = spill_cycles;
-    stats
+    hart.switches += 1;
+    hart.spill_cycles += core.cycle - t0;
+    hart.active = Some(cur);
 }
 
-/// Schedule `jobs` over a pool of simulated harts. Jobs are validated up
-/// front (a malformed job rejects the batch before any simulation), then
-/// assigned round-robin and time-sliced per hart. See the module doc for
-/// the model.
+/// Checkpoint the active job in place: snapshot the context, run the
+/// real `qsq` spill kernel (the cost lands on this hart's timeline),
+/// capture the context image plus the job's writable memory, then
+/// reinstall the snapshot and keep going.
+fn checkpoint(hart: &mut Hart, s: &mut Slot) {
+    let core = &mut hart.core;
+    let t0 = core.cycle;
+    s.ctx = core.save_context();
+    core.cfg.max_instrs = 0;
+    core.ctx.x[31] = s.spill_addr;
+    core.load_program(switch_prog(false, s.fmt));
+    core.run();
+    let mut image = s.ctx.to_image();
+    if s.corrupt_ckpt {
+        // The injected storage fault: flip a byte inside the register
+        // file so the checksum rejects the image at restore time.
+        image[24] ^= 0xFF;
+        s.corrupt_ckpt = false;
+    }
+    let out_bytes = core.mem.read_bytes(s.out_addr, s.out_len * s.fmt.bytes()).to_vec();
+    let spill_bytes = core.mem.read_bytes(s.spill_addr, s.fmt.quire_bytes()).to_vec();
+    s.ckpt = Some(Checkpoint { image, out_bytes, spill_bytes, instret: s.progress });
+    s.checkpoints += 1;
+    hart.checkpoints += 1;
+    core.load_instrs(Arc::clone(&s.program.instrs));
+    core.restore_context(s.ctx.clone());
+    hart.spill_cycles += core.cycle - t0;
+}
+
+/// The job completed (its own ECALL). Reads the result bits out — unless
+/// it finished past its deadline, which is a typed miss.
+fn complete(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
+    hart.active = None;
+    let cycle = hart.core.cycle;
+    let s = &mut slots[idx];
+    if let Some(d) = s.deadline {
+        if cycle > d {
+            hart.deadline_misses += 1;
+            s.failed = Some(crate::err!(
+                "job {}: missed deadline (finished at cycle {cycle}, deadline {d})",
+                s.idx
+            ));
+            return;
+        }
+    }
+    s.done = true;
+    s.completion_cycle = cycle;
+    s.bits = hart.core.mem.read_posit_slice(s.out_addr, s.fmt.bytes(), s.out_len);
+    hart.jobs_done += 1;
+}
+
+/// The running job blew its deadline at a quantum boundary: typed
+/// failure, no retry (time only moves forward).
+fn miss_deadline(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
+    hart.active = None;
+    hart.deadline_misses += 1;
+    let cycle = hart.core.cycle;
+    let s = &mut slots[idx];
+    s.failed = Some(crate::err!(
+        "job {}: missed deadline (still running at cycle {cycle}, deadline {})",
+        s.idx,
+        s.deadline.unwrap_or(0)
+    ));
+}
+
+/// One attempt of a job faulted. Retry from the last checkpoint (or
+/// scratch) with exponential backoff, or fail the job for good once the
+/// retry budget is spent. Only this job is affected — the hart and its
+/// other jobs keep running.
+fn fail_attempt(hart: &mut Hart, slots: &mut [Slot], idx: usize, trap: Trap) {
+    hart.active = None;
+    let cycle = hart.core.cycle;
+    let s = &mut slots[idx];
+    s.retries += 1;
+    hart.retries += 1;
+    if s.retries > s.max_retries as u64 {
+        s.failed = Some(crate::err!(
+            "job {}: {trap:?} (retry budget of {} exhausted)",
+            s.idx,
+            s.max_retries
+        ));
+        return;
+    }
+    s.needs_reset = true;
+    s.next_eligible = cycle + (RETRY_BACKOFF_CYCLES << s.retries.min(16));
+}
+
+/// Run one quantum of slot `idx` (already dispatched) and classify the
+/// halt: completion, real trap, injected trap, deadline miss, or plain
+/// quantum expiry (with periodic checkpointing).
+fn run_quantum(hart: &mut Hart, slots: &mut [Slot], idx: usize, pool: &SimPoolConfig) {
+    // Injected-trap arming: shorten the quantum so the core halts
+    // exactly at the job-local instruction the plan names.
+    let (limit, armed) = match slots[idx].trap_at {
+        Some(k) => {
+            let remaining = k.saturating_sub(slots[idx].progress);
+            if remaining == 0 {
+                // Already at the injection point: fault without running.
+                let pc = hart.core.ctx.pc;
+                slots[idx].trap_at = None;
+                hart.injected += 1;
+                fail_attempt(hart, slots, idx, Trap::Injected { pc });
+                return;
+            }
+            if remaining < pool.quantum { (remaining, true) } else { (pool.quantum, false) }
+        }
+        None => (pool.quantum, false),
+    };
+    let instret0 = hart.core.instret;
+    hart.core.cfg.max_instrs = hart.core.instret.saturating_add(limit);
+    hart.core.run();
+    slots[idx].progress += hart.core.instret - instret0;
+    if hart.core.halted_on_exit() {
+        complete(hart, slots, idx);
+    } else if let Some(t) = hart.core.trap() {
+        // A real architectural fault latched by the core.
+        fail_attempt(hart, slots, idx, t);
+    } else if armed && slots[idx].trap_at.is_some_and(|k| slots[idx].progress >= k) {
+        let pc = hart.core.ctx.pc;
+        slots[idx].trap_at = None;
+        hart.injected += 1;
+        fail_attempt(hart, slots, idx, Trap::Injected { pc });
+    } else {
+        // Quantum expiry: the job keeps running.
+        slots[idx].started = true;
+        if slots[idx].deadline.is_some_and(|d| hart.core.cycle >= d) {
+            miss_deadline(hart, slots, idx);
+            return;
+        }
+        slots[idx].quanta_run += 1;
+        if pool.checkpoint_quanta > 0 && slots[idx].quanta_run % pool.checkpoint_quanta == 0 {
+            checkpoint(hart, &mut slots[idx]);
+        }
+    }
+}
+
+/// One scheduling round on one hart: pick the next runnable slot
+/// (round-robin, skipping jobs in backoff), context-switch to it, run
+/// one quantum and classify the halt. Returns false when the hart has
+/// nothing left to do.
+fn hart_step(hart: &mut Hart, slots: &mut [Slot], pool: &SimPoolConfig) -> bool {
+    let n = hart.queue.len();
+    if n == 0 {
+        return false;
+    }
+    // Round-robin: the next pending slot strictly after the last
+    // dispatched one (cyclically); the same job again when it is the
+    // only one pending.
+    let start = hart.last_pos.map_or(0, |p| (p + 1) % n);
+    let mut chosen = None;
+    let mut soonest: Option<u64> = None;
+    for k in 0..n {
+        let pos = (start + k) % n;
+        let s = &slots[hart.queue[pos]];
+        if s.done || s.failed.is_some() {
+            continue;
+        }
+        if s.next_eligible > hart.core.cycle {
+            soonest = Some(soonest.map_or(s.next_eligible, |m| m.min(s.next_eligible)));
+            continue;
+        }
+        chosen = Some(pos);
+        break;
+    }
+    let Some(pos) = chosen else {
+        // Every pending job is backing off: idle the hart forward to
+        // the earliest eligibility instead of spinning.
+        if let Some(t) = soonest {
+            hart.core.cycle = hart.core.cycle.max(t);
+            return true;
+        }
+        return false;
+    };
+    hart.last_pos = Some(pos);
+    let idx = hart.queue[pos];
+    let was_reset = slots[idx].needs_reset;
+    if was_reset {
+        reset_slot(hart, &mut slots[idx]);
+    }
+    if hart.active == Some(idx) && !was_reset {
+        // Sole remaining job: resume in place, no switch.
+        hart.core.clear_halt();
+    } else {
+        dispatch(hart, slots, idx);
+    }
+    run_quantum(hart, slots, idx, pool);
+    true
+}
+
+/// Fire a pending kill once the hart's timeline reaches it (quantum
+/// boundaries only, so both engines observe it on the same cycle). The
+/// victim's unfinished jobs migrate to the least-loaded surviving hart;
+/// with no survivor they fail typed.
+fn check_kill(harts: &mut [Hart], slots: &mut [Slot], h: usize) {
+    let Some(at) = harts[h].kill_at else { return };
+    if !harts[h].alive || harts[h].core.cycle < at {
+        return;
+    }
+    let orphans: Vec<usize> = harts[h]
+        .queue
+        .iter()
+        .copied()
+        .filter(|&i| !slots[i].done && slots[i].failed.is_none())
+        .collect();
+    harts[h].alive = false;
+    harts[h].kill_at = None;
+    harts[h].active = None;
+    harts[h].queue.clear();
+    let dest = harts
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| x.alive)
+        .min_by_key(|(i, x)| {
+            let load =
+                x.queue.iter().filter(|&&j| !slots[j].done && slots[j].failed.is_none()).count();
+            (load, *i)
+        })
+        .map(|(i, _)| i);
+    match dest {
+        Some(d) => {
+            for i in orphans {
+                let s = &mut slots[i];
+                s.migrations += 1;
+                s.needs_reset = true;
+                s.next_eligible = 0;
+                s.hart = d;
+                harts[d].queue.push(i);
+                harts[d].migrations_in += 1;
+            }
+        }
+        None => {
+            for i in orphans {
+                slots[i].failed = Some(crate::err!(
+                    "job {}: hart {h} failed with no surviving hart left",
+                    slots[i].idx
+                ));
+            }
+        }
+    }
+}
+
+/// Schedule `jobs` over a pool of simulated harts with the default
+/// serving policy (no deadlines, [`DEFAULT_MAX_RETRIES`] retries). Jobs
+/// are validated up front (a malformed job rejects the batch before any
+/// simulation), then assigned round-robin and time-sliced per hart. See
+/// the module doc for the model.
 pub fn run_batch_sim(jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+    let specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
+    run_batch_sim_specs(&specs, pool)
+}
+
+/// [`run_batch_sim`] with per-job serving policies (deadline, retry
+/// budget). A job that fails — retries exhausted, deadline missed, hart
+/// pool exhausted — comes back with [`SimJobReport::error`] set and does
+/// *not* fail the batch; only admission/validation problems reject the
+/// whole call.
+pub fn run_batch_sim_specs(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<SimBatchReport> {
     crate::ensure!(pool.harts >= 1, "hart pool must have at least one hart");
     crate::ensure!(pool.quantum >= 1, "quantum must be at least one instruction");
-    let mut staged = Vec::with_capacity(jobs.len());
-    for (idx, job) in jobs.iter().enumerate() {
-        staged.push((stage(idx, job)?, is_dot(job)));
+    crate::ensure!(
+        pool.max_queue_depth == 0 || specs.len() <= pool.max_queue_depth,
+        "admission rejected: batch of {} jobs exceeds the queue depth limit of {}",
+        specs.len(),
+        pool.max_queue_depth
+    );
+    let mut slots = Vec::with_capacity(specs.len());
+    for (idx, spec) in specs.iter().enumerate() {
+        let mut slot = stage(idx, &spec.job)?;
+        slot.deadline = spec.deadline_cycles;
+        slot.max_retries = spec.max_retries;
+        slots.push(slot);
     }
-    // Round-robin assignment, then per-hart placement: `place` returns
-    // each region's end, which is the next slot's base on that hart.
-    let mut per_hart: Vec<Vec<Slot>> = (0..pool.harts).map(|_| Vec::new()).collect();
-    let mut next_base = vec![0x1000u64; pool.harts];
-    for (i, (mut slot, dot)) in staged.into_iter().enumerate() {
-        let hart = i % pool.harts;
-        next_base[hart] = place(&mut slot, next_base[hart], dot);
-        per_hart[hart].push(slot);
+    // Global placement: one address-space layout shared by every hart,
+    // so a checkpointed context's absolute pointers stay valid wherever
+    // the job migrates. Each hart's memory is grown to fit all of it.
+    let mut next_base = 0x1000u64;
+    for slot in slots.iter_mut() {
+        next_base = place(slot, next_base);
+    }
+    // Arm the fault plan (entries naming jobs/harts outside the batch
+    // are ignored; the first trap entry per job wins).
+    for t in &pool.faults.inject_traps {
+        if let Some(s) = slots.get_mut(t.job) {
+            if s.trap_at.is_none() {
+                s.trap_at = Some(t.at_instr);
+            }
+        }
+    }
+    for &j in &pool.faults.corrupt_checkpoints {
+        if let Some(s) = slots.get_mut(j) {
+            s.corrupt_ckpt = true;
+        }
+    }
+    let mut cfg = pool.core;
+    cfg.mem_size = cfg.mem_size.max(next_base as usize);
+    cfg.max_instrs = 0;
+    let mut harts: Vec<Hart> = (0..pool.harts)
+        .map(|h| Hart {
+            core: Core::new(cfg),
+            queue: Vec::new(),
+            active: None,
+            last_pos: None,
+            switches: 0,
+            spill_cycles: 0,
+            alive: true,
+            kill_at: pool
+                .faults
+                .kill_harts
+                .iter()
+                .filter(|k| k.hart == h)
+                .map(|k| k.at_cycle)
+                .min(),
+            checkpoints: 0,
+            migrations_in: 0,
+            retries: 0,
+            deadline_misses: 0,
+            injected: 0,
+            jobs_done: 0,
+        })
+        .collect();
+    for (i, s) in slots.iter_mut().enumerate() {
+        let h = i % pool.harts;
+        s.hart = h;
+        harts[h].queue.push(i);
+        let eb = s.fmt.bytes();
+        harts[h].core.mem.write_posit_slice(s.a_addr, eb, &s.a);
+        harts[h].core.mem.write_posit_slice(s.b_addr, eb, &s.b);
+    }
+    // Interleaved rounds: each alive hart gets one dispatch + quantum
+    // per round (harts are independent cores, so this is equivalent to
+    // running each hart serially — but it lets kill events interleave
+    // with the surviving harts' progress deterministically).
+    loop {
+        let mut progressed = false;
+        for h in 0..harts.len() {
+            if !harts[h].alive {
+                continue;
+            }
+            if hart_step(&mut harts[h], &mut slots, pool) {
+                progressed = true;
+            }
+            check_kill(&mut harts, &mut slots, h);
+        }
+        if !progressed {
+            break;
+        }
     }
     let freq = pool.core.freq_hz as f64;
-    let mut harts = Vec::with_capacity(pool.harts);
-    let mut outcomes: Vec<Option<SimJobReport>> = (0..jobs.len()).map(|_| None).collect();
-    for (h, slots) in per_hart.iter_mut().enumerate() {
-        let stats = if slots.is_empty() {
-            Stats::default()
-        } else {
-            run_hart(pool.core, pool.quantum, slots, next_base[h])
-        };
-        for s in slots.iter_mut() {
-            debug_assert!(s.done, "scheduler left job {} unfinished", s.idx);
-            outcomes[s.idx] = Some(SimJobReport {
-                bits64: std::mem::take(&mut s.bits),
-                fmt: s.fmt,
-                hart: h,
-                completion_s: s.completion_cycle as f64 / freq,
-            });
-        }
-        harts.push(HartReport { stats, jobs: slots.len() });
+    let mut harts_out = Vec::with_capacity(harts.len());
+    for h in &harts {
+        let mut stats = h.core.stats();
+        stats.ctx_switches = h.switches;
+        stats.spill_cycles = h.spill_cycles;
+        stats.traps += h.injected;
+        stats.checkpoints = h.checkpoints;
+        stats.migrations = h.migrations_in;
+        stats.retries = h.retries;
+        stats.deadline_misses = h.deadline_misses;
+        harts_out.push(HartReport { stats, jobs: h.jobs_done, alive: h.alive });
     }
-    let jobs_out: Vec<SimJobReport> =
-        outcomes.into_iter().map(|o| o.expect("every job scheduled")).collect();
+    let mut jobs_out = Vec::with_capacity(slots.len());
+    for s in slots.iter_mut() {
+        debug_assert!(
+            s.done || s.failed.is_some(),
+            "scheduler left job {} unresolved",
+            s.idx
+        );
+        jobs_out.push(SimJobReport {
+            bits64: std::mem::take(&mut s.bits),
+            fmt: s.fmt,
+            hart: s.hart,
+            completion_s: if s.done { s.completion_cycle as f64 / freq } else { 0.0 },
+            retries: s.retries,
+            migrations: s.migrations,
+            checkpoints: s.checkpoints,
+            error: s.failed.clone(),
+        });
+    }
     let makespan_s =
-        harts.iter().map(|h| h.stats.cycles).max().unwrap_or(0) as f64 / freq;
-    Ok(SimBatchReport { jobs: jobs_out, harts, makespan_s })
+        harts_out.iter().map(|h| h.stats.cycles).max().unwrap_or(0) as f64 / freq;
+    Ok(SimBatchReport { jobs: jobs_out, harts: harts_out, makespan_s })
 }
 
 #[cfg(test)]
@@ -414,6 +986,7 @@ mod tests {
         let pool = SimPoolConfig { harts: 3, quantum: 60, ..Default::default() };
         let report = run_batch_sim(&jobs, &pool).expect("batch schedules");
         assert_eq!(report.jobs.len(), jobs.len());
+        assert_eq!(report.failures(), 0);
         let co = Coordinator::new(2, None);
         for (i, job) in jobs.iter().enumerate() {
             let native = co.run(job.clone(), Backend::Native).expect("native runs");
@@ -448,6 +1021,7 @@ mod tests {
                 harts: 2,
                 quantum: 45,
                 core: CoreConfig { engine, ..CoreConfig::default() },
+                ..Default::default()
             };
             reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
         }
@@ -539,5 +1113,38 @@ mod tests {
         let pool = SimPoolConfig { harts: 1, quantum: 80, ..Default::default() };
         let r = run_batch_sim(&[legacy, tagged], &pool).unwrap();
         assert_eq!(r.jobs[0].bits64, r.jobs[1].bits64);
+    }
+
+    #[test]
+    fn robustness_machinery_is_inert_by_default() {
+        // The default pool has checkpointing off and no faults: every
+        // robustness counter must stay zero and every hart alive, so
+        // the fault-tolerant scheduler costs nothing when unused.
+        let jobs = mixed_batch(0xF0).into_iter().take(4).collect::<Vec<_>>();
+        let pool = SimPoolConfig { harts: 2, quantum: 100, ..Default::default() };
+        let r = run_batch_sim(&jobs, &pool).unwrap();
+        assert_eq!(r.failures(), 0);
+        for j in &r.jobs {
+            assert!(j.error.is_none());
+            assert_eq!((j.retries, j.migrations, j.checkpoints), (0, 0, 0));
+        }
+        for h in &r.harts {
+            assert!(h.alive);
+            assert_eq!(h.stats.traps, 0);
+            assert_eq!(h.stats.checkpoints, 0);
+            assert_eq!(h.stats.migrations, 0);
+            assert_eq!(h.stats.retries, 0);
+            assert_eq!(h.stats.deadline_misses, 0);
+        }
+    }
+
+    #[test]
+    fn admission_control_rejects_oversized_batches() {
+        let jobs = mixed_batch(0xAD).into_iter().take(3).collect::<Vec<_>>();
+        let pool = SimPoolConfig { max_queue_depth: 2, ..Default::default() };
+        let err = run_batch_sim(&jobs, &pool).unwrap_err();
+        assert!(err.to_string().contains("admission rejected"), "{err}");
+        let pool = SimPoolConfig { max_queue_depth: 3, ..Default::default() };
+        assert!(run_batch_sim(&jobs, &pool).is_ok());
     }
 }

@@ -367,6 +367,16 @@ impl Core {
                 .max(self.ready_of(pi.rs3, ins.rs3));
             let t = self.issue(t_ops, pi.unit);
             let eff = self.exec(&ins);
+            // Trap latch — the oracle's arm, line for line: the faulting
+            // instruction issued but does not retire.
+            if let Some(trap) = eff.trap {
+                self.cycle = t + 1;
+                self.halted = true;
+                self.halt_exit = false;
+                self.trap = Some(trap);
+                self.traps += 1;
+                return;
+            }
             let lat = pi.lat + eff.mem_extra;
             self.set_ready(pi.rd, ins.rd, t + lat);
             self.unit_free[pi.unit as usize] = match pi.unit {
@@ -425,6 +435,14 @@ impl Core {
             // ── load a: pl* pa, imm_a(ra) ─────────────────────────────
             let t = self.issue(self.ready_of(RegClass::X, f.ra), Unit::Lsu);
             let addr = self.ctx.x[f.ra as usize].wrapping_add(f.imm_a as u64);
+            if let Some(trap) = self.mem_trap(addr, f.fmt.bytes()) {
+                self.cycle = t + 1;
+                self.halted = true;
+                self.halt_exit = false;
+                self.trap = Some(trap);
+                self.traps += 1;
+                return;
+            }
             let me = self.dcache.access(addr);
             self.ctx.p[f.pa as usize] = self.read_posit_elem(addr, f.fmt);
             self.ready_p[f.pa as usize] = t + f.load_lat + me;
@@ -438,6 +456,14 @@ impl Core {
             // ── load b: pl* pb, imm_b(rb) ─────────────────────────────
             let t = self.issue(self.ready_of(RegClass::X, f.rb), Unit::Lsu);
             let addr = self.ctx.x[f.rb as usize].wrapping_add(f.imm_b as u64);
+            if let Some(trap) = self.mem_trap(addr, f.fmt.bytes()) {
+                self.cycle = t + 1;
+                self.halted = true;
+                self.halt_exit = false;
+                self.trap = Some(trap);
+                self.traps += 1;
+                return;
+            }
             let me = self.dcache.access(addr);
             self.ctx.p[f.pb as usize] = self.read_posit_elem(addr, f.fmt);
             self.ready_p[f.pb as usize] = t + f.load_lat + me;

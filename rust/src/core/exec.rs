@@ -20,6 +20,10 @@ pub struct Effect {
     pub taken: bool,
     /// ECALL/EBREAK → stop simulation.
     pub halt: bool,
+    /// The instruction faulted: no architectural effect happened (probed
+    /// before any register/memory/D$ write), and the engine latches the
+    /// trap instead of retiring — see [`super::Trap`].
+    pub trap: Option<super::Trap>,
 }
 
 #[inline]
@@ -99,6 +103,17 @@ impl Core {
                 }
             }};
         }
+        // Probe a data access before it reaches memory or the D$; a
+        // misaligned/out-of-bounds address aborts the instruction with a
+        // trap and zero architectural effect.
+        macro_rules! guard {
+            ($a:expr, $len:expr) => {{
+                if let Some(t) = self.mem_trap($a, $len) {
+                    eff.trap = Some(t);
+                    return eff;
+                }
+            }};
+        }
         match ins.op {
             // ── RV64I ───────────────────────────────────────────────────
             Op::Lui => wx!((imm << 12) as u64),
@@ -122,56 +137,67 @@ impl Core {
             Op::Bgeu => branch!(self.ctx.x[rs1] >= self.ctx.x[rs2]),
             Op::Lb => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 1);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u8(a) as i8 as i64 as u64);
             }
             Op::Lh => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 2);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u16(a) as i16 as i64 as u64);
             }
             Op::Lw => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 4);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u32(a) as i32 as i64 as u64);
             }
             Op::Ld => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 8);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u64(a));
             }
             Op::Lbu => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 1);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u8(a) as u64);
             }
             Op::Lhu => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 2);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u16(a) as u64);
             }
             Op::Lwu => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 4);
                 eff.mem_extra = self.dcache.access(a);
                 wx!(self.mem.read_u32(a) as u64);
             }
             Op::Sb => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 1);
                 self.dcache.access(a);
                 self.mem.write_u8(a, self.ctx.x[rs2] as u8);
             }
             Op::Sh => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 2);
                 self.dcache.access(a);
                 self.mem.write_u16(a, self.ctx.x[rs2] as u16);
             }
             Op::Sw => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 4);
                 self.dcache.access(a);
                 self.mem.write_u32(a, self.ctx.x[rs2] as u32);
             }
             Op::Sd => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 8);
                 self.dcache.access(a);
                 self.mem.write_u64(a, self.ctx.x[rs2]);
             }
@@ -246,11 +272,13 @@ impl Core {
             // ── F (32-bit IEEE) ─────────────────────────────────────────
             Op::Flw => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 4);
                 eff.mem_extra = self.dcache.access(a);
                 self.ctx.f[rd] = 0xFFFF_FFFF_0000_0000 | self.mem.read_u32(a) as u64;
             }
             Op::Fsw => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 4);
                 self.dcache.access(a);
                 self.mem.write_u32(a, self.ctx.f[rs2] as u32);
             }
@@ -312,11 +340,13 @@ impl Core {
             // ── D (64-bit IEEE) ─────────────────────────────────────────
             Op::Fld => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 8);
                 eff.mem_extra = self.dcache.access(a);
                 self.ctx.f[rd] = self.mem.read_u64(a);
             }
             Op::Fsd => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                guard!(a, 8);
                 self.dcache.access(a);
                 self.mem.write_u64(a, self.ctx.f[rs2]);
             }
@@ -358,6 +388,13 @@ impl Core {
             // ── Xposit loads/stores (8/16/32/64-bit D$ widths) ──────────
             Op::Plb | Op::Plh | Op::Plw | Op::Pld => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                let len = match ins.op {
+                    Op::Plb => 1,
+                    Op::Plh => 2,
+                    Op::Plw => 4,
+                    _ => 8,
+                };
+                guard!(a, len);
                 eff.mem_extra = self.dcache.access(a);
                 self.ctx.p[rd] = match ins.op {
                     Op::Plb => self.mem.read_u8(a) as u64,
@@ -368,6 +405,13 @@ impl Core {
             }
             Op::Psb | Op::Psh | Op::Psw | Op::Psd => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
+                let len = match ins.op {
+                    Op::Psb => 1,
+                    Op::Psh => 2,
+                    Op::Psw => 4,
+                    _ => 8,
+                };
+                guard!(a, len);
                 self.dcache.access(a);
                 match ins.op {
                     Op::Psb => self.mem.write_u8(a, self.ctx.p[rs2] as u8),
@@ -387,6 +431,18 @@ impl Core {
             Op::Qsq | Op::Qlq => {
                 let a = self.ctx.x[rs1].wrapping_add(imm as u64);
                 let len = ins.fmt.quire_bytes();
+                // The walk moves 64-bit beats, so the base must be 8-byte
+                // aligned (not `len`-aligned — a 128-byte natural
+                // alignment would be absurd for a register spill) and the
+                // whole image must fit.
+                if a % 8 != 0 {
+                    eff.trap = Some(super::Trap::Misaligned { pc: self.ctx.pc, addr: a, len: 8 });
+                    return eff;
+                }
+                if !self.mem.in_bounds(a, len) {
+                    eff.trap = Some(super::Trap::OutOfBounds { pc: self.ctx.pc, addr: a, len });
+                    return eff;
+                }
                 let mut extra = 0;
                 for beat in (0..len as u64).step_by(8) {
                     extra += self.dcache.access(a.wrapping_add(beat));
@@ -399,6 +455,10 @@ impl Core {
                     let img = self.mem.read_bytes(a, len).to_vec();
                     self.ctx.quire = crate::core::PauQuire::restore(ins.fmt, &img);
                 }
+            }
+            // ── The synthetic trapping opcode (undecodable word). ───────
+            Op::Illegal => {
+                eff.trap = Some(super::Trap::IllegalInstruction { pc: self.ctx.pc });
             }
             // ── Xposit computational (the PAU + posit ALU paths). The
             // instruction's `fmt` field picks the width; operands are

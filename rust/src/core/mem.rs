@@ -151,6 +151,15 @@ impl Memory {
         &self.bytes
     }
 
+    /// Whether `[addr, addr + n)` lies inside the backing store. The core
+    /// probes this *before* touching memory or the D$ so a wild access
+    /// becomes a recoverable [`crate::core::Trap::OutOfBounds`] instead of
+    /// the host-API panic in [`Self::check`].
+    #[inline]
+    pub fn in_bounds(&self, addr: u64, n: usize) -> bool {
+        (addr as usize).checked_add(n).is_some_and(|end| end <= self.bytes.len())
+    }
+
     #[inline]
     fn check(&self, addr: u64, n: usize) -> usize {
         let a = addr as usize;

@@ -50,6 +50,53 @@ use crate::isa::{info, Instr, Op, PositFmt, RegClass, Unit};
 use crate::posit::{Quire16, Quire32, Quire64, Quire8};
 use std::sync::Arc;
 
+/// A recoverable fault latched by the core — the simulator's analogue of
+/// paper Fig. 3's `illegal_instr` trap arm, generalized to the memory
+/// system. A trap halts the core (`Core::halted()` turns true) without
+/// retiring the faulting instruction; the scheduler inspects
+/// [`Core::halt_cause`] and restarts or fails the job, so a misbehaving
+/// program never panics the host. Both execution engines latch the
+/// identical trap at the identical instruction count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    /// Data access past the end of the configured memory.
+    OutOfBounds { pc: u64, addr: u64, len: usize },
+    /// Data access breaking the operand's natural alignment (CVA6 has no
+    /// hardware misaligned support; the `qsq`/`qlq` quire walk requires
+    /// 8-byte beat alignment).
+    Misaligned { pc: u64, addr: u64, len: usize },
+    /// PC not 4-byte aligned (a jump to a torn target).
+    MisalignedPc { pc: u64 },
+    /// Undecodable or unimplemented opcode ([`crate::isa::Op::Illegal`]).
+    IllegalInstruction { pc: u64 },
+    /// Synthetic fault injected by the scheduler's fault plan
+    /// ([`crate::coordinator::FaultPlan`]).
+    Injected { pc: u64 },
+}
+
+/// Why the core is halted — the three-way distinction the scheduler
+/// dispatches on: job finished, quantum expired, or job faulted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HaltCause {
+    /// Program exit: ECALL/EBREAK or running off the text segment.
+    Exit,
+    /// The `max_instrs` quantum valve fired.
+    Quantum,
+    /// A recoverable fault (see [`Trap`]).
+    Trap(Trap),
+}
+
+/// FNV-1a over a byte stream — the checkpoint image checksum (no crates,
+/// stable across hosts, good-enough corruption detection for a trailer).
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut hash: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        hash ^= b as u32;
+        hash = hash.wrapping_mul(0x0100_0193);
+    }
+    hash
+}
+
 /// The PAU's accumulator, tagged with the posit width it currently holds —
 /// one physical register reused across formats (Big-PERCIVAL's multi-width
 /// PAU: a 16·N-bit quire per supported width, of which one is live).
@@ -170,11 +217,32 @@ impl PauQuire {
     /// (the core's exec path) always reads exactly that many bytes, so a
     /// length mismatch is a programming error, not a runtime one.
     pub fn restore(fmt: PositFmt, bytes: &[u8]) -> Self {
-        match fmt {
-            PositFmt::P8 => PauQuire::Q8(Quire8::from_bytes(bytes).expect("quire8 image")),
-            PositFmt::P16 => PauQuire::Q16(Quire16::from_bytes(bytes).expect("quire16 image")),
-            PositFmt::P32 => PauQuire::Q32(Quire32::from_bytes(bytes).expect("quire32 image")),
-            PositFmt::P64 => PauQuire::Q64(Quire64::from_bytes(bytes).expect("quire64 image")),
+        Self::try_restore(fmt, bytes).expect("quire image length fixed by fmt")
+    }
+
+    /// Fallible [`Self::restore`] — the checkpoint-deserialisation path,
+    /// where the image comes from an untrusted byte stream rather than
+    /// the exec path's exact-length D$ read.
+    pub fn try_restore(fmt: PositFmt, bytes: &[u8]) -> crate::error::Result<Self> {
+        Ok(match fmt {
+            PositFmt::P8 => PauQuire::Q8(Quire8::from_bytes(bytes)?),
+            PositFmt::P16 => PauQuire::Q16(Quire16::from_bytes(bytes)?),
+            PositFmt::P32 => PauQuire::Q32(Quire32::from_bytes(bytes)?),
+            PositFmt::P64 => PauQuire::Q64(Quire64::from_bytes(bytes)?),
+        })
+    }
+
+    /// The accumulator's 16·n-bit little-endian memory image at its
+    /// *current* format, without re-tagging — the checkpoint
+    /// serialisation path ([`HartContext::to_image`]), which must capture
+    /// the live state verbatim rather than model a width-switching
+    /// instruction like [`Self::spill`] does.
+    pub fn image(&self) -> Vec<u8> {
+        match self {
+            PauQuire::Q8(q) => q.to_bytes(),
+            PauQuire::Q16(q) => q.to_bytes(),
+            PauQuire::Q32(q) => q.to_bytes(),
+            PauQuire::Q64(q) => q.to_bytes(),
         }
     }
 }
@@ -215,6 +283,97 @@ impl HartContext {
             p: [0; 32],
             quire: PauQuire::new(PositFmt::P32),
         }
+    }
+
+    /// Checkpoint image magic (`PCKP`).
+    pub const IMAGE_MAGIC: [u8; 4] = *b"PCKP";
+    /// Checkpoint image format version.
+    pub const IMAGE_VERSION: u16 = 1;
+    /// Header bytes before the register files: magic (4) + version (2) +
+    /// quire format code (1) + flags (1) + pc (8).
+    const IMAGE_HEADER: usize = 16;
+    /// The three 32×u64 register files.
+    const IMAGE_REGS: usize = 3 * 32 * 8;
+
+    /// Serialize the full architectural state to a self-describing byte
+    /// image — the unit of checkpoint/migrate in the multi-hart
+    /// scheduler. Layout (all little-endian):
+    ///
+    /// | bytes            | field                                   |
+    /// |------------------|-----------------------------------------|
+    /// | 0..4             | magic `PCKP`                            |
+    /// | 4..6             | version (u16, currently 1)              |
+    /// | 6                | quire format code ([`PositFmt::bits`])  |
+    /// | 7                | flags (reserved, 0)                     |
+    /// | 8..16            | pc (u64)                                |
+    /// | 16..272          | x0–x31 (u64 each)                       |
+    /// | 272..528         | f0–f31                                  |
+    /// | 528..784         | p0–p31                                  |
+    /// | 784..784+16·n/8  | quire image ([`PauQuire::image`])       |
+    /// | last 4           | FNV-1a checksum of everything before    |
+    pub fn to_image(&self) -> Vec<u8> {
+        let qimg = self.quire.image();
+        let mut out =
+            Vec::with_capacity(Self::IMAGE_HEADER + Self::IMAGE_REGS + qimg.len() + 4);
+        out.extend_from_slice(&Self::IMAGE_MAGIC);
+        out.extend_from_slice(&Self::IMAGE_VERSION.to_le_bytes());
+        out.push(self.quire.fmt().bits() as u8);
+        out.push(0);
+        out.extend_from_slice(&self.pc.to_le_bytes());
+        for file in [&self.x, &self.f, &self.p] {
+            for v in file {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&qimg);
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Deserialize a checkpoint image, validating magic, version, format
+    /// code, exact length, and checksum — a truncated, corrupted, or
+    /// future-version image is a typed error, never a panic (the
+    /// scheduler falls back to restarting the job from scratch).
+    pub fn from_image(bytes: &[u8]) -> crate::error::Result<Self> {
+        crate::ensure!(
+            bytes.len() >= Self::IMAGE_HEADER,
+            "checkpoint image truncated: {} bytes",
+            bytes.len()
+        );
+        crate::ensure!(bytes[0..4] == Self::IMAGE_MAGIC, "bad checkpoint magic");
+        let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+        crate::ensure!(
+            version == Self::IMAGE_VERSION,
+            "unsupported checkpoint version {version}"
+        );
+        crate::ensure!(bytes[6] < 4, "bad checkpoint quire format code {}", bytes[6]);
+        let fmt = PositFmt::from_bits(bytes[6] as u32);
+        let expect = Self::IMAGE_HEADER + Self::IMAGE_REGS + fmt.quire_bytes() + 4;
+        crate::ensure!(
+            bytes.len() == expect,
+            "checkpoint image is {} bytes, want {expect} for {}",
+            bytes.len(),
+            fmt.name()
+        );
+        let (body, sum) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(sum.try_into().unwrap());
+        crate::ensure!(fnv1a(body) == want, "checkpoint image checksum mismatch");
+
+        let word = |i: usize| {
+            u64::from_le_bytes(body[i..i + 8].try_into().unwrap())
+        };
+        let pc = word(8);
+        let mut x = [0u64; 32];
+        let mut f = [0u64; 32];
+        let mut p = [0u64; 32];
+        for i in 0..32 {
+            x[i] = word(Self::IMAGE_HEADER + 8 * i);
+            f[i] = word(Self::IMAGE_HEADER + 256 + 8 * i);
+            p[i] = word(Self::IMAGE_HEADER + 512 + 8 * i);
+        }
+        let quire = PauQuire::try_restore(fmt, &body[Self::IMAGE_HEADER + Self::IMAGE_REGS..])?;
+        Ok(Self { pc, x, f, p, quire })
     }
 }
 
@@ -271,6 +430,17 @@ pub struct Stats {
     /// Cycles the hart spent in `qsq`/`qlq` context-switch save/restore
     /// sequences (scheduler-filled, like [`Self::ctx_switches`]).
     pub spill_cycles: u64,
+    /// Recoverable faults latched by the core (see [`Trap`]).
+    pub traps: u64,
+    /// Checkpoint images captured (scheduler-filled).
+    pub checkpoints: u64,
+    /// Jobs migrated off a failed hart (scheduler-filled).
+    pub migrations: u64,
+    /// Job restarts after a trap, kill, or bad checkpoint
+    /// (scheduler-filled).
+    pub retries: u64,
+    /// Jobs that blew their deadline (scheduler-filled).
+    pub deadline_misses: u64,
 }
 
 impl Stats {
@@ -323,6 +493,12 @@ pub struct Core {
     /// the distinction the multi-hart scheduler needs between "job
     /// finished" and "quantum expired".
     halt_exit: bool,
+    /// The fault behind the current halt, if any (takes precedence over
+    /// both exit and quantum in [`Core::halt_cause`]).
+    trap: Option<Trap>,
+    /// Lifetime trap count (survives `clear_halt`; reset by
+    /// [`Core::reset_timing`] like the stall counters).
+    traps: u64,
 }
 
 impl Core {
@@ -346,6 +522,8 @@ impl Core {
             mispredicts: 0,
             halted: false,
             halt_exit: false,
+            trap: None,
+            traps: 0,
         }
     }
 
@@ -386,6 +564,7 @@ impl Core {
         self.ctx.pc = 0;
         self.halted = false;
         self.halt_exit = false;
+        self.trap = None;
     }
 
     /// Clone out the architectural context — the save half of a context
@@ -405,6 +584,7 @@ impl Core {
         self.ctx = ctx;
         self.halted = false;
         self.halt_exit = false;
+        self.trap = None;
     }
 
     /// Clear the halt latch without touching any other state — how the
@@ -414,6 +594,7 @@ impl Core {
     pub fn clear_halt(&mut self) {
         self.halted = false;
         self.halt_exit = false;
+        self.trap = None;
     }
 
     /// Reset timing state (cycle counters, scoreboard, stats) but keep
@@ -433,6 +614,8 @@ impl Core {
         self.ctx.pc = 0;
         self.halted = false;
         self.halt_exit = false;
+        self.trap = None;
+        self.traps = 0;
     }
 
     pub fn halted(&self) -> bool {
@@ -443,6 +626,40 @@ impl Core {
     /// the text segment) rather than a `max_instrs` quantum expiry.
     pub fn halted_on_exit(&self) -> bool {
         self.halt_exit
+    }
+
+    /// The fault behind the current halt, if any.
+    pub fn trap(&self) -> Option<Trap> {
+        self.trap
+    }
+
+    /// Why the core is halted (`None` while running). A latched trap
+    /// takes precedence: a faulting instruction never also counts as a
+    /// clean exit or a quantum expiry.
+    pub fn halt_cause(&self) -> Option<HaltCause> {
+        if !self.halted {
+            return None;
+        }
+        Some(match self.trap {
+            Some(t) => HaltCause::Trap(t),
+            None if self.halt_exit => HaltCause::Exit,
+            None => HaltCause::Quantum,
+        })
+    }
+
+    /// Probe a data access for a fault *before* it touches memory or the
+    /// D$ (so trap or not, both engines see identical cache state).
+    /// Multi-byte scalars require natural alignment — CVA6 has no
+    /// hardware misaligned-access support.
+    #[inline]
+    fn mem_trap(&self, addr: u64, len: usize) -> Option<Trap> {
+        if len > 1 && addr % len as u64 != 0 {
+            return Some(Trap::Misaligned { pc: self.ctx.pc, addr, len });
+        }
+        if !self.mem.in_bounds(addr, len) {
+            return Some(Trap::OutOfBounds { pc: self.ctx.pc, addr, len });
+        }
+        None
     }
 
     #[inline]
@@ -486,6 +703,13 @@ impl Core {
         if self.halted {
             return false;
         }
+        if self.ctx.pc % 4 != 0 {
+            // A torn jump target: nothing fetches, nothing issues.
+            self.halted = true;
+            self.trap = Some(Trap::MisalignedPc { pc: self.ctx.pc });
+            self.traps += 1;
+            return false;
+        }
         let idx = (self.ctx.pc / 4) as usize;
         let Some(&ins) = self.program.get(idx) else {
             self.halted = true;
@@ -517,6 +741,18 @@ impl Core {
 
         // ── Execute functionally. ───────────────────────────────────────
         let eff = self.exec(&ins);
+
+        // ── Trap? Latch it as a recoverable halt: the faulting
+        // instruction issued (its stalls are real) but does not retire —
+        // no write-back, no PC advance, no instret.
+        if let Some(trap) = eff.trap {
+            self.cycle = t + 1;
+            self.halted = true;
+            self.halt_exit = false;
+            self.trap = Some(trap);
+            self.traps += 1;
+            return false;
+        }
 
         // ── Write-back timing. ──────────────────────────────────────────
         let lat = pi.latency_for(ins.fmt) + eff.mem_extra;
@@ -619,6 +855,11 @@ impl Core {
             // multi-hart scheduler fills them on its per-hart reports.
             ctx_switches: 0,
             spill_cycles: 0,
+            traps: self.traps,
+            checkpoints: 0,
+            migrations: 0,
+            retries: 0,
+            deadline_misses: 0,
         }
     }
 }
@@ -1294,5 +1535,108 @@ mod tests {
             };
             assert_eq!(run(Engine::Superblock), run(Engine::Oracle), "cap {cap}");
         }
+    }
+
+    #[test]
+    fn oob_access_traps_identically_on_both_engines() {
+        // A wild load halts with a typed trap instead of panicking; the
+        // faulting instruction does not retire and writes nothing, and
+        // both engines agree on stats, cause, and state.
+        let prog = assemble("lw t0, 0(a0)\naddi a2, zero, 7\necall").unwrap();
+        let run = |engine| {
+            let mut c = Core::new(CoreConfig { mem_size: 4096, engine, ..Default::default() });
+            c.load_program(&prog);
+            c.ctx.x[10] = 1 << 20; // far past the 4 KiB memory
+            let s = c.run();
+            (s, c.halt_cause(), c.ctx.clone())
+        };
+        let (s_sb, cause_sb, ctx_sb) = run(Engine::Superblock);
+        let (s_or, cause_or, ctx_or) = run(Engine::Oracle);
+        assert_eq!(s_sb, s_or);
+        assert_eq!(cause_sb, cause_or);
+        assert_eq!(ctx_sb, ctx_or);
+        assert_eq!(s_sb.traps, 1);
+        assert_eq!(s_sb.instret, 0, "the faulting lw does not retire");
+        assert_eq!(ctx_sb.x[5], 0, "no write-back");
+        assert_eq!(ctx_sb.x[12], 0, "nothing after the trap runs");
+        assert_eq!(ctx_sb.pc, 0, "pc stays at the faulting instruction");
+        assert!(matches!(cause_sb, Some(HaltCause::Trap(Trap::OutOfBounds { .. }))));
+    }
+
+    #[test]
+    fn misaligned_store_traps_without_memory_effect() {
+        let prog = assemble("addi t1, zero, 9\nsd t1, 0(a0)\necall").unwrap();
+        let mut c = Core::new(CoreConfig { mem_size: 4096, ..Default::default() });
+        c.load_program(&prog);
+        c.ctx.x[10] = 0x101; // 8-byte store, odd address
+        c.run();
+        assert!(matches!(
+            c.trap(),
+            Some(Trap::Misaligned { addr: 0x101, len: 8, .. })
+        ));
+        assert!(c.mem.bytes().iter().all(|&b| b == 0), "store must not land");
+        assert!(!c.halted_on_exit());
+    }
+
+    #[test]
+    fn illegal_opcode_traps_via_synthetic_stream() {
+        // The decoder never produces Op::Illegal; synthetic streams (the
+        // fuzzer, fault injection) place it directly.
+        let instrs: Arc<[Instr]> =
+            vec![Instr::r(Op::Illegal, 0, 0, 0), Instr::r(Op::Ecall, 0, 0, 0)].into();
+        for engine in [Engine::Superblock, Engine::Oracle] {
+            let mut c = Core::new(CoreConfig { mem_size: 4096, engine, ..Default::default() });
+            c.load_instrs(Arc::clone(&instrs));
+            let s = c.run();
+            assert_eq!(s.instret, 0, "{engine:?}");
+            assert_eq!(s.traps, 1, "{engine:?}");
+            assert_eq!(
+                c.halt_cause(),
+                Some(HaltCause::Trap(Trap::IllegalInstruction { pc: 0 })),
+                "{engine:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn halt_cause_distinguishes_exit_quantum_trap() {
+        // Exit.
+        let mut c = run_src("ecall");
+        assert_eq!(c.halt_cause(), Some(HaltCause::Exit));
+        // Quantum.
+        let prog = assemble("loop: j loop").unwrap();
+        c = Core::new(CoreConfig { mem_size: 4096, max_instrs: 10, ..Default::default() });
+        c.load_program(&prog);
+        c.run();
+        assert_eq!(c.halt_cause(), Some(HaltCause::Quantum));
+        // clear_halt clears the cause; a fresh load clears a trap.
+        c.clear_halt();
+        assert_eq!(c.halt_cause(), None);
+    }
+
+    #[test]
+    fn context_image_roundtrips_and_validates() {
+        // Rich state: dirty quire, patterned registers.
+        let mut ctx = HartContext::new();
+        ctx.pc = 0x44;
+        for i in 0..32 {
+            ctx.x[i] = i as u64 * 3;
+            ctx.f[i] = (i as u64) << 32;
+            ctx.p[i] = !(i as u64);
+        }
+        ctx.quire.madd(PositFmt::P32, 0x4000_0000, 0x4000_0000);
+        let img = ctx.to_image();
+        assert_eq!(HartContext::from_image(&img).unwrap(), ctx);
+        // Truncation, corruption, and a wrong version are typed errors.
+        assert!(HartContext::from_image(&img[..img.len() - 1]).is_err());
+        let mut bad = img.clone();
+        bad[100] ^= 0x40;
+        assert!(HartContext::from_image(&bad).is_err(), "checksum must catch flips");
+        let mut wrong_ver = img.clone();
+        wrong_ver[4] = 0xFF;
+        assert!(HartContext::from_image(&wrong_ver).is_err());
+        let mut wrong_magic = img;
+        wrong_magic[0] = b'X';
+        assert!(HartContext::from_image(&wrong_magic).is_err());
     }
 }

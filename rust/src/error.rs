@@ -8,6 +8,10 @@
 use std::fmt;
 
 /// An opaque error carrying a human-readable message.
+///
+/// `Clone` so per-job failures can be both recorded in a batch report and
+/// counted by the caller.
+#[derive(Clone)]
 pub struct Error {
     msg: String,
 }

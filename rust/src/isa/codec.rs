@@ -143,6 +143,8 @@ pub fn encode(ins: &Instr) -> Result<u32, CodecError> {
             (ins.fmt.bits() << 25) | rs1w | (f3 << 12) | super::OPC_POSIT_LS
         }
         Enc::Sys { imm12 } => (imm12 << 20) | 0b1110011,
+        // The synthetic trapping opcode has no machine encoding.
+        Enc::Invalid => return Err(CodecError::Illegal(0)),
         Enc::Csr { f3 } => {
             // imm = CSR number (unsigned 12-bit).
             if !(0..4096).contains(&ins.imm) {
@@ -199,6 +201,7 @@ pub fn decode(w: u32) -> Result<Instr, CodecError> {
                 opcode == 0b1110011 && f3(w) == 0 && (w >> 20) == imm12 && rd(w) == 0 && rs1(w) == 0
             }
             Enc::Csr { f3: a } => opcode == 0b1110011 && f3(w) == a,
+            Enc::Invalid => false, // never decodable
         };
         if !hit {
             continue;
@@ -292,6 +295,11 @@ mod tests {
     #[test]
     fn roundtrip_every_op() {
         for e in OP_TABLE {
+            if matches!(e.enc, Enc::Invalid) {
+                // Op::Illegal is unencodable by design.
+                assert!(encode(&Instr::r(e.op, 0, 0, 0)).is_err());
+                continue;
+            }
             for (r1, r2, r3, rdv) in [(1u8, 2u8, 3u8, 4u8), (31, 30, 29, 28), (0, 0, 0, 0), (17, 17, 17, 17)] {
                 for imm in [0i64, 4, -4, 16, 2044, -2048] {
                     let ins = Instr {

@@ -86,6 +86,7 @@ pub fn disasm(ins: &Instr) -> String {
         }
         Enc::Sys { .. } => mn.to_string(),
         Enc::Csr { .. } => format!("{mn} {}, {:#x}, {}", rd(), ins.imm, rs1()),
+        Enc::Invalid => mn.to_string(),
     }
 }
 

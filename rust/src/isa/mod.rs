@@ -44,6 +44,29 @@
 //! [`OpInfo`] carries the encoding recipe, operand register classes, the
 //! functional unit, and the result latency (paper §4.1) used by the core
 //! simulator.
+//!
+//! ## Trap model
+//!
+//! The core reports recoverable faults through [`crate::core::Trap`]
+//! rather than panicking (paper Fig. 3's `illegal_instr` arm, generalized
+//! to the memory system):
+//!
+//! - **Illegal instruction** — [`Op::Illegal`] is the mnemonic-level
+//!   representation of an undecodable word. The decoder never *produces*
+//!   it ([`codec::decode`] returns [`codec::CodecError::Illegal`], which
+//!   callers surface at assembly time); it exists so synthetic
+//!   instruction streams (the differential fuzzer, fault injection) can
+//!   place a trapping instruction in a text segment. Its [`Enc::Invalid`]
+//!   recipe makes it unencodable and unparsable by construction.
+//! - **Misaligned access** — loads/stores (and the `qsq`/`qlq` quire
+//!   walks, which require 8-byte alignment) trap on addresses that break
+//!   the operand's natural alignment, before any memory or D$ effect.
+//! - **Out-of-bounds access** — any access past the configured data
+//!   memory traps instead of aborting the simulation.
+//!
+//! Both execution engines latch the identical trap at the identical
+//! instruction count (pinned by `tests/engine_diff.rs`); the scheduler
+//! turns traps into typed per-job failures and retries.
 
 pub mod asm;
 pub mod codec;
@@ -231,6 +254,11 @@ pub enum Enc {
     Sys { imm12: u32 },
     /// CSR access: `csr | rs1 | f3 | rd | 1110011`.
     Csr { f3: u32 },
+    /// No machine encoding. Used by [`Op::Illegal`], the synthetic
+    /// trapping opcode: `codec::encode` rejects it, the assembler refuses
+    /// the mnemonic, and the decoder never produces it (undecodable words
+    /// surface as `CodecError::Illegal` instead).
+    Invalid,
 }
 
 /// Static description of one opcode.
@@ -589,6 +617,7 @@ ops! {
     PeqS => "peq.s", Enc::PositR { f5: 0b11001, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, P);
     PltS => "plt.s", Enc::PositR { f5: 0b11010, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, P);
     PleS => "ple.s", Enc::PositR { f5: 0b11011, rs2_zero: false, rs1_zero: false, rd_zero: false }, Alu, 1, (X, P, P);
+    Illegal => "illegal", Enc::Invalid, Alu, 1, (None, None, None);
 }
 
 #[cfg(test)]

@@ -11,7 +11,7 @@
 //! branches, JAL and JALR; `max_instrs` bounds runaway loops, and both
 //! engines must trip it on the same instruction.
 
-use percival::core::{Core, CoreConfig, Engine, Stats};
+use percival::core::{Core, CoreConfig, Engine, HaltCause, Stats};
 use percival::isa::asm::assemble;
 use percival::isa::{Instr, Op, PositFmt};
 use percival::testing::Rng;
@@ -302,6 +302,7 @@ fn assert_identical(case: u64, instrs: &Arc<[Instr]>, data: &[u64]) {
     assert_eq!(s_sb, s_or, "case {case}: stats diverge");
     assert_eq!(c_sb.halted(), c_or.halted(), "case {case}");
     assert_eq!(c_sb.halted_on_exit(), c_or.halted_on_exit(), "case {case}");
+    assert_eq!(c_sb.trap(), c_or.trap(), "case {case}: trap diverges");
     // The whole architectural context in one compare: pc, x/f/p register
     // files, and the format-tagged quire.
     assert_eq!(c_sb.ctx, c_or.ctx, "case {case}: architectural context diverges");
@@ -316,6 +317,82 @@ fn fuzz_differential_superblock_vs_oracle() {
         let prog: Arc<[Instr]> = random_program(&mut rng, body).into();
         let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
         assert_identical(case, &prog, &data);
+    }
+}
+
+/// One deliberately faulting instruction, chosen by `kind`. `x5` holds
+/// `DATA_BASE` (in bounds), `x6` holds `0x100000` (past the 64 KiB
+/// memory), so every variant traps on its first execution.
+fn faulting_instr(rng: &mut Rng, kind: u64) -> Instr {
+    match kind {
+        // Out-of-bounds scalar/float/posit loads and stores.
+        0 => Instr::i(pick(rng, &[Op::Ld, Op::Lw, Op::Fld, Op::Pld]), xrd(rng), 6, 0),
+        1 => Instr::s(pick(rng, &[Op::Sd, Op::Sw, Op::Fsd, Op::Psd]), 6, xr(rng), 0),
+        // Natural-alignment violations inside the data window.
+        2 => Instr::i(pick(rng, &[Op::Lw, Op::Ld, Op::Lh]), xrd(rng), 5, 1 + 8 * 4),
+        3 => Instr::s(pick(rng, &[Op::Sw, Op::Sd, Op::Psh]), 5, xr(rng), 3 + 8 * 7),
+        // Quire spill/restore: OOB image or torn 8-byte beats.
+        4 => Instr::i(if rng.below(2) == 0 { Op::Qsq } else { Op::Qlq }, 0, 6, 0)
+            .with_fmt(fmt_of(rng)),
+        5 => Instr::i(if rng.below(2) == 0 { Op::Qsq } else { Op::Qlq }, 0, 5, 4)
+            .with_fmt(fmt_of(rng)),
+        // Undecodable opcode in the instruction stream.
+        _ => Instr::i(Op::Illegal, 0, 0, 0),
+    }
+}
+
+/// A linear (branch-free) program whose `lead`-th body instruction
+/// faults: ALU filler, then the fault, then trailing instructions that
+/// must never retire, then the ECALL that must never be reached.
+fn trapping_program(rng: &mut Rng, kind: u64, lead: usize) -> (Vec<Instr>, u64) {
+    let mut prog = Vec::new();
+    prog.push(Instr::i(Op::Lui, 5, 0, (DATA_BASE >> 12) as i64));
+    prog.push(Instr::i(Op::Lui, 6, 0, 0x100)); // x6 = 0x100000: OOB base
+    for r in [10u8, 11, 12] {
+        prog.push(Instr::i(Op::Addi, r, 0, imm12(rng)));
+    }
+    for _ in 0..lead {
+        let op = pick(rng, &[Op::Add, Op::Sub, Op::Xor, Op::Or, Op::And, Op::Mul, Op::Sll]);
+        // Destinations stay clear of the pinned bases x5/x6.
+        prog.push(Instr::r(op, pick(rng, &[10u8, 11, 12, 13, 14]), xr(rng), xr(rng)));
+    }
+    let retired = prog.len() as u64;
+    prog.push(faulting_instr(rng, kind));
+    for _ in 0..4 {
+        prog.push(Instr::i(Op::Addi, 10, 10, 1));
+    }
+    prog.push(Instr::i(Op::Ecall, 0, 0, 0));
+    (prog, retired)
+}
+
+#[test]
+fn fuzz_trapping_programs_trap_identically() {
+    // Robustness pin: OOB accesses, misalignment, torn quire walks and
+    // illegal opcodes all latch the *same* trap at the *same* retired
+    // instruction count on both engines, never a clean exit, never a
+    // panic — and the faulting instruction itself does not retire.
+    let mut rng = Rng::new(0x7A4B_0001);
+    for case in 0..60u64 {
+        let kind = case % 7;
+        let lead = rng.below(40) as usize;
+        let (prog, retired) = trapping_program(&mut rng, kind, lead);
+        let instrs: Arc<[Instr]> = prog.into();
+        let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
+        assert_identical(1000 + case, &instrs, &data);
+        let (stats, core) = run_engine(&instrs, &data, Engine::Superblock);
+        let trap = core.trap();
+        assert!(trap.is_some(), "case {case} (kind {kind}): expected a trap, got none");
+        assert!(core.halted(), "case {case}: trapped core must be halted");
+        assert!(!core.halted_on_exit(), "case {case}: a trap is not a clean exit");
+        assert_eq!(
+            core.halt_cause(),
+            Some(HaltCause::Trap(trap.unwrap())),
+            "case {case}: halt cause must carry the trap"
+        );
+        assert_eq!(
+            stats.instret, retired,
+            "case {case}: the faulting instruction must not retire"
+        );
     }
 }
 

@@ -1,0 +1,374 @@
+//! Fault-tolerance integration tests: checkpoint image round-trips,
+//! corrupted/truncated/wrong-version image rejection, and the multi-hart
+//! scheduler under injected faults — hart kills with job migration,
+//! synthetic traps with bounded retry, deadlines and admission control.
+//!
+//! The load-bearing property throughout: any seeded [`FaultPlan`] leaves
+//! every *recoverable* job bit-identical to `Backend::Native`, every
+//! unrecoverable job failed with a typed error, and nothing ever panics.
+
+use percival::coordinator::sched::{
+    run_batch_sim, run_batch_sim_specs, FaultPlan, HartKill, JobSpec, SimPoolConfig, TrapInject,
+};
+use percival::coordinator::{Backend, Coordinator, Engine, Format, Job};
+use percival::core::{Core, CoreConfig, HartContext};
+use percival::isa::{Instr, Op, PositFmt};
+use percival::posit::convert::from_f64_n;
+use percival::testing::Rng;
+use std::sync::Arc;
+
+// ───────────────────────── checkpoint image ─────────────────────────
+
+/// Run a short instruction sequence to completion and hand back the
+/// architectural context it produced.
+fn ctx_after(instrs: Vec<Instr>) -> HartContext {
+    let mut core = Core::new(CoreConfig { mem_size: 1 << 14, ..Default::default() });
+    let instrs: Arc<[Instr]> = instrs.into();
+    core.load_instrs(instrs);
+    core.run();
+    assert!(core.halted_on_exit(), "checkpoint fixture program must exit cleanly");
+    core.save_context()
+}
+
+/// A program that dirties the quire at `fmt` with a real accumulation
+/// (two posit converts, a clear, a MAC), plus register-file litter.
+fn dirty_quire_program(fmt: PositFmt) -> Vec<Instr> {
+    vec![
+        Instr::i(Op::Addi, 10, 0, 3),
+        Instr::i(Op::Addi, 11, 0, -5),
+        Instr::i(Op::Addi, 28, 0, 0x2A5),
+        Instr::r(Op::PcvtSW, 1, 10, 0).with_fmt(fmt),
+        Instr::r(Op::PcvtSW, 2, 11, 0).with_fmt(fmt),
+        Instr::r(Op::FcvtSW, 3, 28, 0),
+        Instr::r(Op::QclrS, 0, 0, 0).with_fmt(fmt),
+        Instr::r(Op::QmaddS, 0, 1, 2).with_fmt(fmt),
+        Instr::i(Op::Ecall, 0, 0, 0),
+    ]
+}
+
+/// A program that drives the quire to NaR: `1 << (w-1)` is the posit NaR
+/// pattern at every width, and a NaR operand poisons the accumulation.
+fn nar_quire_program(fmt: PositFmt) -> Vec<Instr> {
+    vec![
+        Instr::i(Op::Addi, 12, 0, 1),
+        Instr::i(Op::Slli, 12, 12, fmt.width() as i64 - 1),
+        Instr::r(Op::PmvWX, 3, 12, 0).with_fmt(fmt),
+        Instr::r(Op::QclrS, 0, 0, 0).with_fmt(fmt),
+        Instr::r(Op::QmaddS, 0, 3, 3).with_fmt(fmt),
+        Instr::i(Op::Ecall, 0, 0, 0),
+    ]
+}
+
+#[test]
+fn checkpoint_image_roundtrips_every_format_and_quire_state() {
+    for fmt in PositFmt::ALL {
+        // Dirty quire, cleared quire, and NaR quire all round-trip
+        // bit-exactly through the versioned image.
+        let clear_only = vec![
+            Instr::r(Op::QclrS, 0, 0, 0).with_fmt(fmt),
+            Instr::i(Op::Ecall, 0, 0, 0),
+        ];
+        for prog in [dirty_quire_program(fmt), clear_only, nar_quire_program(fmt)] {
+            let ctx = ctx_after(prog);
+            let image = ctx.to_image();
+            let back = HartContext::from_image(&image)
+                .unwrap_or_else(|e| panic!("{} image rejected: {e}", fmt.name()));
+            assert_eq!(back, ctx, "{} context image does not round-trip", fmt.name());
+        }
+    }
+}
+
+#[test]
+fn checkpoint_image_rejects_bad_inputs() {
+    let ctx = ctx_after(dirty_quire_program(PositFmt::P32));
+    let image = ctx.to_image();
+
+    // Truncations at every interesting boundary.
+    for cut in [0, 3, 8, 15, 16, image.len() / 2, image.len() - 1] {
+        assert!(
+            HartContext::from_image(&image[..cut]).is_err(),
+            "truncated image ({cut} bytes) accepted"
+        );
+    }
+    // A single flipped byte anywhere in the body fails the checksum.
+    for pos in [0usize, 5, 7, 9, 20, 300, image.len() - 5, image.len() - 1] {
+        let mut bad = image.clone();
+        bad[pos] ^= 0x40;
+        assert!(HartContext::from_image(&bad).is_err(), "corrupt byte at {pos} accepted");
+    }
+    // Wrong magic, unsupported version, out-of-range quire format code.
+    let mut bad = image.clone();
+    bad[0] = b'X';
+    assert!(HartContext::from_image(&bad).is_err(), "bad magic accepted");
+    let mut bad = image.clone();
+    bad[4] = (HartContext::IMAGE_VERSION + 1) as u8;
+    let err = HartContext::from_image(&bad).unwrap_err();
+    assert!(err.to_string().contains("version"), "wrong error for bad version: {err}");
+    let mut bad = image;
+    bad[6] = 9;
+    assert!(HartContext::from_image(&bad).is_err(), "bad format code accepted");
+}
+
+// ───────────────────── scheduler under injected faults ─────────────────────
+
+/// `count` Posit32 quire GEMM jobs with deterministic random inputs —
+/// long enough that kills and traps land mid-kernel.
+fn gemm_jobs(count: usize, n: usize, seed: u64) -> Vec<Job> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let a: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
+            let b: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
+            Job::Gemm { fmt: Format::P32, n, a, b, quire: true }
+        })
+        .collect()
+}
+
+/// Each job's reference bits from the native (non-simulated) backend.
+fn native_bits(jobs: &[Job]) -> Vec<Vec<u64>> {
+    let co = Coordinator::new(2, None);
+    let out = jobs
+        .iter()
+        .map(|j| co.run(j.clone(), Backend::Native).expect("native runs").bits64)
+        .collect();
+    co.shutdown();
+    out
+}
+
+#[test]
+fn hart_kill_migrates_jobs_and_preserves_bits() {
+    let jobs = gemm_jobs(4, 6, 0x5EED_0001);
+    let reference = native_bits(&jobs);
+    let pool = SimPoolConfig {
+        harts: 2,
+        quantum: 100,
+        checkpoint_quanta: 2,
+        faults: FaultPlan {
+            kill_harts: vec![HartKill { hart: 0, at_cycle: 500 }],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let r = run_batch_sim(&jobs, &pool).expect("batch schedules");
+    assert_eq!(r.failures(), 0, "every job must survive a single hart kill");
+    assert!(!r.harts[0].alive, "killed hart must report dead");
+    assert!(r.harts[1].alive);
+    let migrated: u64 = r.jobs.iter().map(|j| j.migrations).sum();
+    assert!(migrated > 0, "the kill fired mid-batch, some job must have migrated");
+    assert_eq!(r.harts[1].stats.migrations, migrated);
+    for (i, j) in r.jobs.iter().enumerate() {
+        assert_eq!(j.bits64, reference[i], "job {i} bits changed across migration");
+        assert_eq!(j.hart, 1, "every job must end on the survivor");
+    }
+}
+
+#[test]
+fn kill_with_no_survivor_fails_typed_never_panics() {
+    let jobs = gemm_jobs(3, 6, 0x1D);
+    let pool = SimPoolConfig {
+        harts: 1,
+        quantum: 50,
+        faults: FaultPlan {
+            kill_harts: vec![HartKill { hart: 0, at_cycle: 1 }],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let r = run_batch_sim(&jobs, &pool).expect("the batch itself is valid");
+    assert_eq!(r.failures(), jobs.len(), "no survivor: every job fails");
+    for j in &r.jobs {
+        let err = j.error.as_ref().expect("typed error").to_string();
+        assert!(err.contains("surviving"), "unexpected error text: {err}");
+        assert!(j.bits64.is_empty());
+    }
+    assert!(!r.harts[0].alive);
+}
+
+#[test]
+fn injected_trap_retries_and_recovers_bit_identically() {
+    let jobs = gemm_jobs(2, 6, 0x7A40);
+    let reference = native_bits(&jobs);
+    let pool = SimPoolConfig {
+        harts: 2,
+        quantum: 100,
+        checkpoint_quanta: 2,
+        faults: FaultPlan {
+            inject_traps: vec![TrapInject { job: 0, at_instr: 150 }],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let r = run_batch_sim(&jobs, &pool).expect("batch schedules");
+    assert_eq!(r.failures(), 0);
+    assert!(r.jobs[0].retries >= 1, "the injected trap must cost a retry");
+    assert_eq!(r.jobs[1].retries, 0, "the other job runs clean");
+    let traps: u64 = r.harts.iter().map(|h| h.stats.traps).sum();
+    assert!(traps >= 1, "the injected trap must be counted");
+    for (i, j) in r.jobs.iter().enumerate() {
+        assert_eq!(j.bits64, reference[i], "job {i} bits changed across the retry");
+    }
+}
+
+#[test]
+fn exhausted_retry_budget_fails_typed() {
+    let jobs = gemm_jobs(2, 6, 0xB0);
+    let reference = native_bits(&jobs);
+    let mut specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
+    specs[0].max_retries = 0;
+    let pool = SimPoolConfig {
+        harts: 1,
+        quantum: 100,
+        faults: FaultPlan {
+            inject_traps: vec![TrapInject { job: 0, at_instr: 50 }],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let r = run_batch_sim_specs(&specs, &pool).expect("batch schedules");
+    let err = r.jobs[0].error.as_ref().expect("typed failure").to_string();
+    assert!(err.contains("retry budget"), "unexpected error text: {err}");
+    assert!(r.jobs[0].bits64.is_empty());
+    // The failed job never takes its hart down with it.
+    assert!(r.jobs[1].error.is_none());
+    assert_eq!(r.jobs[1].bits64, reference[1]);
+    assert!(r.harts[0].alive);
+    assert!(r.harts[0].stats.retries >= 1);
+}
+
+#[test]
+fn deadlines_fail_typed_and_are_counted() {
+    let jobs = gemm_jobs(2, 6, 0xDEAD);
+    let reference = native_bits(&jobs);
+    let mut specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
+    specs[0].deadline_cycles = Some(50); // far too tight for a 6×6 GEMM
+    specs[1].deadline_cycles = Some(u64::MAX / 2); // comfortably loose
+    let pool = SimPoolConfig { harts: 1, quantum: 100, ..Default::default() };
+    let r = run_batch_sim_specs(&specs, &pool).expect("batch schedules");
+    let err = r.jobs[0].error.as_ref().expect("typed miss").to_string();
+    assert!(err.contains("deadline"), "unexpected error text: {err}");
+    assert!(r.jobs[1].error.is_none());
+    assert_eq!(r.jobs[1].bits64, reference[1]);
+    let misses: u64 = r.harts.iter().map(|h| h.stats.deadline_misses).sum();
+    assert_eq!(misses, 1);
+}
+
+#[test]
+fn corrupted_checkpoint_recovers_from_scratch() {
+    // Corrupt job 0's next checkpoint image *and* kill its home hart:
+    // the restore on the survivor either uses a later good checkpoint or
+    // detects the corruption and restarts from scratch — both must end
+    // bit-identical to Native, with the kill visible in the counters.
+    let jobs = gemm_jobs(2, 6, 0xCC);
+    let reference = native_bits(&jobs);
+    let pool = SimPoolConfig {
+        harts: 2,
+        quantum: 60,
+        checkpoint_quanta: 1,
+        faults: FaultPlan {
+            kill_harts: vec![HartKill { hart: 0, at_cycle: 400 }],
+            corrupt_checkpoints: vec![0],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let r = run_batch_sim(&jobs, &pool).expect("batch schedules");
+    assert_eq!(r.failures(), 0);
+    assert!(r.jobs.iter().any(|j| j.migrations > 0));
+    for (i, j) in r.jobs.iter().enumerate() {
+        assert_eq!(j.bits64, reference[i], "job {i} bits changed through recovery");
+    }
+}
+
+#[test]
+fn fault_handling_is_engine_identical() {
+    // The whole fault pipeline — kill, migration, checkpoint restore,
+    // injected trap, retry backoff — is driven off cycle/instret at
+    // quantum boundaries, so the superblock and oracle engines must
+    // agree on every report field.
+    let jobs = gemm_jobs(4, 6, 0xEE);
+    let plan = FaultPlan {
+        kill_harts: vec![HartKill { hart: 1, at_cycle: 700 }],
+        inject_traps: vec![TrapInject { job: 1, at_instr: 120 }],
+        corrupt_checkpoints: vec![2],
+    };
+    let mut reports = Vec::new();
+    for engine in [Engine::Superblock, Engine::Oracle] {
+        let pool = SimPoolConfig {
+            harts: 2,
+            quantum: 80,
+            checkpoint_quanta: 2,
+            core: CoreConfig { engine, ..CoreConfig::default() },
+            faults: plan.clone(),
+            ..Default::default()
+        };
+        reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
+    }
+    let (a, b) = (&reports[0], &reports[1]);
+    assert_eq!(a.makespan_s, b.makespan_s);
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.bits64, y.bits64);
+        assert_eq!(x.completion_s, y.completion_s);
+        assert_eq!((x.hart, x.retries, x.migrations, x.checkpoints), (y.hart, y.retries, y.migrations, y.checkpoints));
+        assert_eq!(x.error.is_some(), y.error.is_some());
+    }
+    for (x, y) in a.harts.iter().zip(&b.harts) {
+        assert_eq!(x.stats, y.stats);
+        assert_eq!(x.alive, y.alive);
+    }
+}
+
+#[test]
+fn seeded_fault_plans_never_panic_and_recoverables_match_native() {
+    // The acceptance property: sweep seeded fault plans; every job that
+    // reports success is bit-identical to Native, every failure carries
+    // a typed error, and the scheduler never panics.
+    let jobs = gemm_jobs(4, 5, 0x5EED);
+    let reference = native_bits(&jobs);
+    for seed in 0..8u64 {
+        let pool = SimPoolConfig {
+            harts: 2,
+            quantum: 60,
+            checkpoint_quanta: 2,
+            faults: FaultPlan::seeded(seed, 2, jobs.len()),
+            ..Default::default()
+        };
+        let r = run_batch_sim(&jobs, &pool)
+            .unwrap_or_else(|e| panic!("seed {seed}: valid batch rejected: {e}"));
+        for (i, j) in r.jobs.iter().enumerate() {
+            match &j.error {
+                None => assert_eq!(
+                    j.bits64, reference[i],
+                    "seed {seed}: recovered job {i} diverges from Native"
+                ),
+                Some(e) => assert!(!e.to_string().is_empty(), "seed {seed}: untyped failure"),
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_overhead_stays_under_ten_percent() {
+    // The overhead gate: periodic checkpointing with zero faults must
+    // cost < 10% makespan vs the same batch with checkpointing off.
+    let jobs = gemm_jobs(4, 10, 0x0CEA);
+    let base_pool = SimPoolConfig { harts: 2, quantum: 1_000, ..Default::default() };
+    let ckpt_pool =
+        SimPoolConfig { harts: 2, quantum: 1_000, checkpoint_quanta: 4, ..Default::default() };
+    let base = run_batch_sim(&jobs, &base_pool).expect("base batch schedules");
+    let ckpt = run_batch_sim(&jobs, &ckpt_pool).expect("checkpointed batch schedules");
+    assert_eq!(base.failures() + ckpt.failures(), 0);
+    for (x, y) in base.jobs.iter().zip(&ckpt.jobs) {
+        assert_eq!(x.bits64, y.bits64, "checkpointing changed the bits");
+    }
+    let (b, c) = (base.makespan_cycles(), ckpt.makespan_cycles());
+    assert!(c >= b, "checkpointing cannot be free");
+    assert!(
+        (c as f64) < (b as f64) * 1.10,
+        "checkpoint overhead too high: {b} -> {c} cycles ({:+.2}%)",
+        (c as f64 / b as f64 - 1.0) * 100.0
+    );
+    let cks: u64 = ckpt.jobs.iter().map(|j| j.checkpoints).sum();
+    assert!(cks > 0, "the gate must actually measure checkpoints");
+}
