@@ -2,13 +2,18 @@
 //! report host-side simulation throughput.
 //!
 //! Sizes 16–64 by default for the IEEE sweep and 16–128 for the posit
-//! rows (CI-fast); set `BENCH_FULL=1` for the paper's full 16–256 sweep.
-//! Every posit row at n ≤ 64 is emitted twice: once on the superblock
-//! engine (`gemm_sim_*`) and once on the per-instruction oracle
-//! (`gemm_sim_*_ref`), with the host-time ratio recorded as `speedup_x`
-//! on the superblock row and the two engines hard-asserted stats- and
-//! bit-identical. The `gemm_sim_p32_quire_n64` row is the superblock
-//! PR's ≥3× acceptance gate. Host-side timings are merged into
+//! rows (CI-fast); set `BENCH_FULL=1` for the paper's full 16–256 sweep
+//! (plus an n=512 P32-quire row the translated engine makes routine).
+//! Every posit row runs on three engines: the superblock engine is the
+//! canonical `gemm_sim_*` row; the per-instruction oracle pairs it at
+//! n ≤ 64 (`gemm_sim_*_ref`, host-time ratio recorded as `speedup_x`
+//! on the superblock row); and the binary-translated engine pairs it at
+//! every size (`gemm_sim_*_tx`, `speedup_x` = superblock host time over
+//! translated host time). Each pairing is hard-asserted stats- and
+//! bit-identical before its ratio is recorded. Two acceptance gates
+//! live here: `gemm_sim_p32_quire_n64` (superblock ≥3× vs oracle) and
+//! `gemm_sim_p32_quire_n128_tx` (translated ≥`TRANSLATED_GATE_MIN_X`×,
+//! default 10, vs superblock). Host-side timings are merged into
 //! `BENCH_posit_kernels.json` alongside the native-kernel rows from
 //! `posit_ops` so the perf trajectory is tracked across PRs.
 
@@ -26,6 +31,11 @@ fn main() {
         if full { &tables::SIZES } else { &tables::QUICK_POSIT_SIZES };
     let cfg = CoreConfig::default();
     let oracle_cfg = CoreConfig { engine: Engine::Oracle, ..CoreConfig::default() };
+    let tx_cfg = CoreConfig { engine: Engine::Translated, ..CoreConfig::default() };
+    let gate_min_x: f64 = std::env::var("TRANSLATED_GATE_MIN_X")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10.0);
     let mut rng = Rng::new(tables::SEED);
     let mut rows: Vec<JsonRow> = Vec::new();
 
@@ -70,7 +80,14 @@ fn main() {
     for v in posit_variants {
         let fmt = v.posit_fmt().expect("posit variant");
         let quire = if v.label().ends_with("no quire") { "noquire" } else { "quire" };
-        for &n in posit_sizes {
+        // The translated engine makes half-billion-instruction traces
+        // routine: the full sweep extends the flagship P32-quire row to
+        // n=512 (the paper's sizes stop at 256).
+        let mut var_sizes: Vec<usize> = posit_sizes.to_vec();
+        if full && v == GemmVariant::P32Quire {
+            var_sizes.push(512);
+        }
+        for &n in &var_sizes {
             let a = gen_matrix(&mut rng, n, 0);
             let b = gen_matrix(&mut rng, n, 0);
             let t0 = std::time::Instant::now();
@@ -100,6 +117,30 @@ fn main() {
                     ns_per_op: host_ref / (n * n * n) as f64 * 1e9,
                     speedup_x: None,
                 });
+            }
+            // Translated pair at every size: hard-assert identity, then
+            // record the superblock-over-translated host-time ratio.
+            let t0 = std::time::Instant::now();
+            let tx = run_gemm_sim(tx_cfg, v, n, &a, &b, true);
+            let host_tx = t0.elapsed().as_secs_f64();
+            assert_eq!(run.stats, tx.stats, "{name}: translated stats diverge");
+            assert_eq!(run.result, tx.result, "{name}: translated results diverge");
+            let tx_speedup = host / host_tx;
+            report(&format!("{} (translated)", v.label()), n, tx.seconds, host_tx, tx.stats.instret);
+            rows.push(JsonRow {
+                bench: format!("{name}_tx"),
+                mean_s: host_tx,
+                ns_per_op: host_tx / (n * n * n) as f64 * 1e9,
+                speedup_x: Some(tx_speedup),
+            });
+            if name == "gemm_sim_p32_quire_n128" {
+                // The binary-translation acceptance gate: the fused-MAC
+                // host loop must beat the superblock interpreter by
+                // ≥10× (tunable for exotic hosts via env).
+                assert!(
+                    tx_speedup >= gate_min_x,
+                    "translated gate: {name}_tx speedup {tx_speedup:.1}x < {gate_min_x}x"
+                );
             }
             rows.push(row);
         }

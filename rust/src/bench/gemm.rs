@@ -585,23 +585,16 @@ mod tests {
     }
 
     #[test]
-    fn superblock_matches_oracle_all_variants() {
-        // Every Table 7 variant, both engines: Stats and result bits must
-        // be identical (the superblock acceptance pin at GEMM scale).
+    fn fast_engines_match_oracle_all_variants() {
+        // Every Table 7 variant, all three engines: Stats and result
+        // bits must be identical (the superblock and binary-translation
+        // acceptance pin at GEMM scale).
         use crate::core::Engine;
         let n = 6;
         let mut rng = Rng::new(0xB10C);
         let a = gen_matrix(&mut rng, n, 0);
         let b = gen_matrix(&mut rng, n, 0);
         for v in GemmVariant::ALL.into_iter().chain(GemmVariant::POSIT_EXT) {
-            let sb = run_gemm_sim(
-                CoreConfig { mem_size: 1 << 22, ..Default::default() },
-                v,
-                n,
-                &a,
-                &b,
-                true,
-            );
             let or = run_gemm_sim(
                 CoreConfig { mem_size: 1 << 22, engine: Engine::Oracle, ..Default::default() },
                 v,
@@ -610,9 +603,19 @@ mod tests {
                 &b,
                 true,
             );
-            assert_eq!(sb.stats, or.stats, "{v:?}");
-            assert_eq!(sb.result, or.result, "{v:?}");
-            assert_eq!(sb.seconds, or.seconds, "{v:?}");
+            for engine in [Engine::Superblock, Engine::Translated] {
+                let fast = run_gemm_sim(
+                    CoreConfig { mem_size: 1 << 22, engine, ..Default::default() },
+                    v,
+                    n,
+                    &a,
+                    &b,
+                    true,
+                );
+                assert_eq!(fast.stats, or.stats, "{v:?} ({engine:?})");
+                assert_eq!(fast.result, or.result, "{v:?} ({engine:?})");
+                assert_eq!(fast.seconds, or.seconds, "{v:?} ({engine:?})");
+            }
         }
     }
 

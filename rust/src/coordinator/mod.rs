@@ -177,15 +177,17 @@ impl Coordinator {
     /// Spawn `n_workers` workers. `artifacts_dir` enables the PJRT backend
     /// (jobs routed there fail cleanly if artifacts are missing).
     /// `Backend::Sim` jobs run on the default superblock engine; use
-    /// [`Coordinator::with_sim_engine`] to pin the oracle instead.
+    /// [`Coordinator::with_sim_engine`] to pin the binary-translated
+    /// engine or the oracle instead.
     pub fn new(n_workers: usize, artifacts_dir: Option<String>) -> Self {
         Self::with_sim_engine(n_workers, artifacts_dir, Engine::default())
     }
 
     /// [`Coordinator::new`] with an explicit core engine for the Sim
     /// backend — `Engine::Oracle` runs every Sim job on the
-    /// per-instruction reference interpreter (identical results and
-    /// `sim_seconds`, slower host time).
+    /// per-instruction reference interpreter, `Engine::Translated` on
+    /// pre-compiled host code (identical results and `sim_seconds`
+    /// either way; the engines differ only in host time).
     pub fn with_sim_engine(
         n_workers: usize,
         artifacts_dir: Option<String>,
@@ -672,9 +674,9 @@ mod tests {
 
     #[test]
     fn sim_engine_selection_is_timing_identical() {
-        // `with_sim_engine(Oracle)` and the default superblock
-        // coordinator must return bit-identical results *and* identical
-        // simulated seconds — the engines differ only in host speed.
+        // `with_sim_engine` must return bit-identical results *and*
+        // identical simulated seconds for all three engines — superblock,
+        // translated, and the oracle differ only in host speed.
         use crate::posit::convert::from_f64_n;
         let mut rng = Rng::new(0x5B);
         let n = 6;
@@ -683,7 +685,7 @@ mod tests {
         let b: Vec<u64> =
             (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
         let mut outs = Vec::new();
-        for engine in [Engine::Superblock, Engine::Oracle] {
+        for engine in [Engine::Superblock, Engine::Translated, Engine::Oracle] {
             let co = Coordinator::with_sim_engine(1, None, engine);
             let gemm = Job::Gemm {
                 fmt: Format::P32,
@@ -698,6 +700,7 @@ mod tests {
             co.shutdown();
         }
         assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
     }
 
     #[test]

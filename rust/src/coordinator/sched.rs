@@ -1011,12 +1011,13 @@ mod tests {
 
     #[test]
     fn scheduler_is_engine_identical() {
-        // Superblock vs oracle through the whole scheduler: per-job bits,
-        // per-hart stats (incl. spill counters) and makespan all equal —
-        // quantum preemption trips both engines on the same instruction.
+        // Superblock, translated and oracle through the whole scheduler:
+        // per-job bits, per-hart stats (incl. spill counters) and
+        // makespan all equal — quantum preemption trips all three
+        // engines on the same instruction.
         let jobs = mixed_batch(0xE2A1);
         let mut reports = Vec::new();
-        for engine in [Engine::Superblock, Engine::Oracle] {
+        for engine in [Engine::Superblock, Engine::Translated, Engine::Oracle] {
             let pool = SimPoolConfig {
                 harts: 2,
                 quantum: 45,
@@ -1025,15 +1026,17 @@ mod tests {
             };
             reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
         }
-        let (a, b) = (&reports[0], &reports[1]);
-        assert_eq!(a.makespan_s, b.makespan_s);
-        for (x, y) in a.jobs.iter().zip(&b.jobs) {
-            assert_eq!(x.bits64, y.bits64);
-            assert_eq!(x.completion_s, y.completion_s);
-            assert_eq!(x.hart, y.hart);
-        }
-        for (x, y) in a.harts.iter().zip(&b.harts) {
-            assert_eq!(x.stats, y.stats);
+        let a = &reports[0];
+        for b in &reports[1..] {
+            assert_eq!(a.makespan_s, b.makespan_s);
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.bits64, y.bits64);
+                assert_eq!(x.completion_s, y.completion_s);
+                assert_eq!(x.hart, y.hart);
+            }
+            for (x, y) in a.harts.iter().zip(&b.harts) {
+                assert_eq!(x.stats, y.stats);
+            }
         }
     }
 

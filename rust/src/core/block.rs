@@ -60,6 +60,25 @@
 //!    and scoreboard state directly (no values cached across
 //!    instructions), so register aliasing inside a fused loop (`rb ==
 //!    rs`, `pa == pb`, …) behaves exactly as it does in the oracle.
+//!
+//! ## The engine matrix
+//!
+//! Three engines produce this model's numbers, all bound by the same
+//! identity contract — bit-and-count identical [`super::Stats`] and final
+//! architectural state (registers, quire, memory) on every program:
+//!
+//! | engine                  | dispatch granularity | deopt points        | caching                  |
+//! |-------------------------|----------------------|---------------------|--------------------------|
+//! | [`Engine::Oracle`]      | one instruction      | — (it *is* the ref) | none                     |
+//! | [`Engine::Superblock`]  | one basic block      | JALR, mid-block landings, unaligned PC | plan per `Arc<[Instr]>` |
+//! | [`Engine::Translated`]  | host code per block ([`super::translate`]) | JALR, qsq/qlq, CSR reads, traps, quantum-adjacent blocks, mid-block landings, unaligned PC | plan + translation unit per `Arc<[Instr]>` |
+//!
+//! Every deopt routes through the verbatim [`Core::step`] oracle, so
+//! traps, quantum expiry and the scheduler's checkpoint/migrate machinery
+//! behave identically no matter which engine ran the surrounding code.
+//! The contract is pinned by the three-way differential fuzzer
+//! (`tests/engine_diff.rs`), the fault-injection suite, and hard asserts
+//! in the bench pairs.
 
 use super::Core;
 use crate::isa::{info, Instr, Op, OpInfo, PositFmt, RegClass, Unit};
@@ -68,12 +87,17 @@ use crate::posit::unpacked::mask_n;
 /// Which execution engine [`Core::run`] uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Engine {
-    /// Block-at-a-time superblock engine (the fast path; default).
+    /// Block-at-a-time superblock engine (the default).
     #[default]
     Superblock,
     /// The per-instruction interpreter, kept verbatim as the
     /// timing/semantics oracle.
     Oracle,
+    /// Binary-translating engine: each basic block is lowered once into a
+    /// threaded-code table of monomorphic host handlers, and the fused
+    /// GEMM/dot inner loop into a single host-loop handler — see
+    /// [`super::translate`]. Fastest on the host; identical numbers.
+    Translated,
 }
 
 /// One instruction with the static part of its issue logic pre-resolved.
@@ -292,7 +316,7 @@ impl Core {
     /// the functional-unit stall, exactly as [`Core::step`] does, and
     /// return the issue cycle.
     #[inline]
-    fn issue(&mut self, t_ops: u64, unit: Unit) -> u64 {
+    pub(super) fn issue(&mut self, t_ops: u64, unit: Unit) -> u64 {
         let mut t = self.cycle;
         if t_ops > t {
             self.raw_stalls += t_ops - t;
@@ -309,7 +333,7 @@ impl Core {
     /// Retire bookkeeping shared by the block executors: mirrors the tail
     /// of [`Core::step`]. Returns `true` when the core halted.
     #[inline]
-    fn retire(&mut self) -> bool {
+    pub(super) fn retire(&mut self) -> bool {
         self.instret += 1;
         if self.cfg.max_instrs != 0 && self.instret >= self.cfg.max_instrs {
             self.halted = true;
@@ -427,7 +451,7 @@ impl Core {
     /// through (or `max_instrs` trips). Instruction-for-instruction the
     /// timing and state updates are the oracle's; what is gone is every
     /// per-instruction fetch, table lookup and match dispatch.
-    fn run_fused_mac(&mut self, f: &FusedMac) {
+    pub(super) fn run_fused_mac(&mut self, f: &FusedMac) {
         let w = f.fmt.width();
         let mask = mask_n(w);
         let penalty = self.cfg.mispredict_penalty;
@@ -552,7 +576,7 @@ impl Core {
     /// Posit-element load at the format's memory width (the `pl*` data
     /// path of [`Core::exec`], inlined for the fused loop).
     #[inline]
-    fn read_posit_elem(&self, addr: u64, fmt: PositFmt) -> u64 {
+    pub(super) fn read_posit_elem(&self, addr: u64, fmt: PositFmt) -> u64 {
         match fmt {
             PositFmt::P8 => self.mem.read_u8(addr) as u64,
             PositFmt::P16 => self.mem.read_u16(addr) as u64,

@@ -27,17 +27,17 @@ pub struct Effect {
 }
 
 #[inline]
-fn f32_of(bits: u64) -> f32 {
+pub(super) fn f32_of(bits: u64) -> f32 {
     f32::from_bits(bits as u32)
 }
 
 #[inline]
-fn f64_of(bits: u64) -> f64 {
+pub(super) fn f64_of(bits: u64) -> f64 {
     f64::from_bits(bits)
 }
 
 #[inline]
-fn box32(x: f32) -> u64 {
+pub(super) fn box32(x: f32) -> u64 {
     // NaN-boxing per the RISC-V spec: high 32 bits all ones.
     0xFFFF_FFFF_0000_0000 | x.to_bits() as u64
 }

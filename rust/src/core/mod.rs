@@ -31,23 +31,29 @@
 //! (kernels fit I$), store-buffer stalls, page walks. DESIGN.md discusses
 //! why those do not move the Table 7/8 comparisons.
 //!
-//! Two execution engines produce this model's numbers ([`Engine`]):
+//! Three execution engines produce this model's numbers ([`Engine`]):
 //! the per-instruction interpreter [`Core::step`] (the timing/semantics
-//! **oracle**, kept verbatim) and the [`block`] superblock engine
+//! **oracle**, kept verbatim), the [`block`] superblock engine
 //! (basic-block pre-decode + a fused fast path for the GEMM inner loop),
-//! which is bit-and-count identical but several times faster on the
-//! host. `Core::run` dispatches on [`CoreConfig::engine`].
+//! and the [`translate`] binary-translating engine (blocks lowered once
+//! to threaded host-handler tables, the fused MAC loop to a single
+//! hoisted host loop). All three are bit-and-count identical; each is
+//! several times faster on the host than the previous. `Core::run`
+//! dispatches on [`CoreConfig::engine`]; the full engine matrix is in
+//! the [`block`] module doc.
 
 pub mod block;
 pub mod exec;
 pub mod mem;
+pub mod translate;
 
 pub use block::Engine;
 pub use mem::{CacheConfig, DCache, Memory};
 
 use crate::isa::asm::Program;
 use crate::isa::{info, Instr, Op, PositFmt, RegClass, Unit};
-use crate::posit::{Quire16, Quire32, Quire64, Quire8};
+use crate::posit::unpacked::{Decoded, Unpacked};
+use crate::posit::{PositFormat, Quire, Quire16, Quire32, Quire64, Quire8, SigWord};
 use std::sync::Arc;
 
 /// A recoverable fault latched by the core — the simulator's analogue of
@@ -181,6 +187,42 @@ impl PauQuire {
             PauQuire::Q16(q) => q.msub(a as u32, b as u32),
             PauQuire::Q32(q) => q.msub(a as u32, b as u32),
             PauQuire::Q64(q) => q.msub(a, b),
+        }
+    }
+
+    /// `QMADD`/`QMSUB` on pre-decoded operands — the translated engine's
+    /// entry point ([`translate`]): operands arrive as the runtime-width
+    /// engine's wide `Decoded<u64>` (from the memoized `decode_n`) and
+    /// narrow here to the format's significand word, which is exact by
+    /// construction ([`SigWord::from_wide`]: the discarded low bits are
+    /// zero for every width). Bit-identical to [`Self::madd`]/
+    /// [`Self::msub`], whose `F::decode` is the same `decode_n` + narrow
+    /// composition.
+    fn mac_decoded(&mut self, fmt: PositFmt, a: Decoded<u64>, b: Decoded<u64>, sub: bool) {
+        fn narrow<S: SigWord>(d: Decoded<u64>) -> Decoded<S> {
+            match d {
+                Decoded::Zero => Decoded::Zero,
+                Decoded::NaR => Decoded::NaR,
+                Decoded::Num(u) => Decoded::Num(Unpacked {
+                    sign: u.sign,
+                    scale: u.scale,
+                    sig: S::from_wide(u.sig),
+                }),
+            }
+        }
+        fn go<F: PositFormat>(q: &mut Quire<F>, a: Decoded<u64>, b: Decoded<u64>, sub: bool) {
+            if sub {
+                q.msub_unpacked(narrow(a), narrow(b));
+            } else {
+                q.madd_unpacked(narrow(a), narrow(b));
+            }
+        }
+        self.retag(fmt);
+        match self {
+            PauQuire::Q8(q) => go(q, a, b, sub),
+            PauQuire::Q16(q) => go(q, a, b, sub),
+            PauQuire::Q32(q) => go(q, a, b, sub),
+            PauQuire::Q64(q) => go(q, a, b, sub),
         }
     }
 
@@ -395,9 +437,9 @@ pub struct CoreConfig {
     pub mem_size: usize,
     /// Safety valve for runaway programs (0 = unlimited).
     pub max_instrs: u64,
-    /// Which execution engine [`Core::run`] uses. Both produce
+    /// Which execution engine [`Core::run`] uses. All engines produce
     /// bit-and-count identical `Stats` and architectural state; the
-    /// superblock engine is simply faster on the host.
+    /// superblock and translated engines are simply faster on the host.
     pub engine: Engine,
 }
 
@@ -476,6 +518,14 @@ pub struct Core {
     /// `qsq`/`qlq` switch kernels on every context switch; without this
     /// cache each swap back would rebuild the job kernel's plan.
     plan_cache: Vec<(Arc<[Instr]>, Arc<block::Plan>)>,
+    /// Translated-engine lowering of `program` and its LRU cache, keyed
+    /// like `plan_cache` (`Arc::ptr_eq` on the text segment) — see
+    /// [`translate`]. Built lazily on the first `Engine::Translated` run.
+    trans_cache: Vec<(Arc<[Instr]>, Arc<translate::TransUnit>)>,
+    /// Host-side posit-decode memo for the translated MAC loop (pure
+    /// memoization, no simulated state; lazily allocated, survives
+    /// `reset_timing`).
+    dec_cache: Vec<translate::DecSlot>,
     /// Timing state.
     pub cycle: u64,
     pub instret: u64,
@@ -511,6 +561,8 @@ impl Core {
             program: Vec::new().into(),
             plan: Arc::new(block::Plan::default()),
             plan_cache: Vec::new(),
+            trans_cache: Vec::new(),
+            dec_cache: Vec::new(),
             cycle: 0,
             instret: 0,
             ready_x: [0; 32],
@@ -816,6 +868,7 @@ impl Core {
         match self.cfg.engine {
             Engine::Superblock => self.run_superblock(),
             Engine::Oracle => while self.step() {},
+            Engine::Translated => self.run_translated(),
         }
         self.finish_run()
     }

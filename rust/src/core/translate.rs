@@ -1,0 +1,1100 @@
+//! Binary-translating execution engine — superblocks lifted to straight-
+//! line host code ([`Engine::Translated`][super::Engine::Translated]).
+//!
+//! ## From interpretation to translation
+//!
+//! The superblock engine ([`super::block`]) already amortizes fetch,
+//! bounds checks and classification per basic block, but still walks a
+//! `PreInstr` skeleton and re-enters the full `exec` match for every
+//! dynamic instruction. This module goes one step further and *compiles*
+//! each recovered block, once per program, into host code:
+//!
+//! - **Straight-line blocks** ([`TBlock::Line`]) become a threaded-code
+//!   table of monomorphic op handlers (`fn(&mut Core, &Instr) -> Effect`
+//!   pointers, one per opcode — zero external deps, no literal machine
+//!   code). Register accesses inside a handler are direct indexed loads
+//!   and stores; the per-block `instret` delta is the table length, a
+//!   constant applied once at block exit instead of per instruction.
+//! - **The fused GEMM/dot MAC loop** ([`TBlock::Mac`]) becomes a single
+//!   host-loop handler, [`Core::run_mac_translated`]: whole loop
+//!   iterations execute without re-entering dispatch, with the scoreboard
+//!   slice the loop touches (three integer registers, two posit
+//!   registers, four functional units) hoisted into locals and written
+//!   back only at loop exit, the D$ probed through the MRU fast path
+//!   ([`super::mem::DCache::access_mru`]), and posit operand decodes
+//!   memoized in a direct-mapped host-side cache (bit patterns repeat
+//!   n-fold across a GEMM, and `decode` is a pure function of
+//!   `(width, bits)`).
+//!
+//! ## Deoptimization
+//!
+//! Anything that needs the oracle's per-instruction bookkeeping routes
+//! to the verbatim [`Core::step`], exactly like the superblock engine's
+//! fallback — the dispatcher loop *is* the superblock dispatcher with a
+//! translated table in place of the plan:
+//!
+//! - JALR blocks, mid-block landings, unaligned PCs (as in Superblock);
+//! - blocks containing `qsq`/`qlq` (context-switch boundaries),
+//!   `csrr cycle/instret` (reads live counters that translated blocks
+//!   defer), or the synthetic `Illegal` opcode;
+//! - quantum-adjacent blocks: when fewer than a block's worth of
+//!   instructions remain before `max_instrs`, the block is stepped so the
+//!   quantum valve fires at the oracle's exact instruction;
+//! - fused loops with aliased registers ([`TBlock::MacOracle`]), which
+//!   run the superblock engine's live-state MAC executor;
+//! - memory traps inside a translated block latch identically in place
+//!   (the handler probes before any architectural effect, like `exec`).
+//!
+//! Because every deopt lands in `Core::step`, the PR-6 trap /
+//! checkpoint / migrate machinery works unchanged under translation.
+//!
+//! ## Caching
+//!
+//! Translation units are pure functions of the text segment, cached per
+//! `Arc<[Instr]>` program identity exactly like superblock plans
+//! (`Arc::ptr_eq` key, LRU, capacity 16): the multi-hart scheduler swaps
+//! job kernels every quantum and must not re-translate on each switch —
+//! nor may a *different* program that merely aliases addresses ever reuse
+//! a stale unit (pinned by the pointer-identity tests below).
+//!
+//! ## Identity contract
+//!
+//! Same contract as the superblock engine, same harness: `Stats` and
+//! final architectural state (registers, quire, memory) bit-and-count
+//! identical to [`Engine::Oracle`][super::Engine::Oracle] on every
+//! program — pinned by the three-way differential fuzzer
+//! (`tests/engine_diff.rs`), the fault-injection suite, and hard asserts
+//! in the bench pairs. Target (gated in `benches/table7_gemm_timing.rs`):
+//! ≥10× host-time speedup over Superblock on `gemm_sim_p32_quire_n128`.
+
+use super::block::{BlockKind, FusedMac, Plan, PreInstr};
+use super::exec::{box32, f32_of, f64_of, Effect};
+use super::{Core, Trap};
+use crate::isa::{Instr, Op, RegClass, Unit};
+use crate::posit::ops;
+use crate::posit::unpacked::{decode_n, mask_n, Decoded};
+use std::sync::Arc;
+
+/// A monomorphic op handler: the functional semantics of one opcode,
+/// specialized so dispatch is a single indirect call with no match.
+type Handler = fn(&mut Core, &Instr) -> Effect;
+
+/// One translated instruction: the pre-resolved issue skeleton of
+/// [`PreInstr`] plus its bound handler.
+pub(super) struct TOp {
+    run: Handler,
+    ins: Instr,
+    unit: Unit,
+    lat: u64,
+    rd: RegClass,
+    rs1: RegClass,
+    rs2: RegClass,
+    rs3: RegClass,
+}
+
+impl TOp {
+    fn new(p: &PreInstr) -> Self {
+        Self {
+            run: handler_for(p.ins.op),
+            ins: p.ins,
+            unit: p.unit,
+            lat: p.lat,
+            rd: p.rd,
+            rs1: p.rs1,
+            rs2: p.rs2,
+            rs3: p.rs3,
+        }
+    }
+}
+
+/// A translated basic block.
+pub(super) enum TBlock {
+    /// Threaded-code handler table (straight-line code).
+    Line(Vec<TOp>),
+    /// The fused MAC loop with pairwise-distinct registers: whole
+    /// iterations in one host loop with hoisted scoreboard state.
+    Mac(FusedMac),
+    /// The fused MAC loop with aliased registers: correct only against
+    /// live core state, so it runs the superblock executor.
+    MacOracle(FusedMac),
+    /// Route every entry through the oracle `Core::step`.
+    Deopt,
+}
+
+/// The whole program's translation, indexed like [`Plan::blocks`].
+pub(super) struct TransUnit {
+    pub blocks: Vec<TBlock>,
+}
+
+/// Ops whose oracle semantics read or write per-instruction state a
+/// translated block defers (live `cycle`/`instret` counters, the quire
+/// spill walk, the always-trapping opcode) — their blocks deoptimize.
+fn needs_oracle(op: Op) -> bool {
+    matches!(op, Op::Qsq | Op::Qlq | Op::Csrrs | Op::Csrrw | Op::Illegal)
+}
+
+/// The hoisted-scoreboard MAC executor caches register values in locals,
+/// so every architectural register the loop writes must be distinct and
+/// the stride register (if any) must not be written by the loop.
+fn mac_regs_disjoint(f: &FusedMac) -> bool {
+    if f.ra == f.rb || f.ra == f.rc || f.rb == f.rc || f.pa == f.pb {
+        return false;
+    }
+    match f.rs_b {
+        Some(rs) => rs == 0 || (rs != f.ra && rs != f.rb && rs != f.rc),
+        None => true,
+    }
+}
+
+impl TransUnit {
+    /// Lower a superblock plan. Pure function of the plan (itself a pure
+    /// function of the text segment), so caching by program identity is
+    /// sound.
+    pub(super) fn build(plan: &Plan) -> Self {
+        let blocks = plan
+            .blocks
+            .iter()
+            .map(|b| match b.kind {
+                BlockKind::Irregular => TBlock::Deopt,
+                BlockKind::FusedMac(f) => {
+                    if mac_regs_disjoint(&f) {
+                        TBlock::Mac(f)
+                    } else {
+                        TBlock::MacOracle(f)
+                    }
+                }
+                BlockKind::Straight => {
+                    if b.pre.iter().any(|p| needs_oracle(p.ins.op)) {
+                        TBlock::Deopt
+                    } else {
+                        TBlock::Line(b.pre.iter().map(TOp::new).collect())
+                    }
+                }
+            })
+            .collect();
+        Self { blocks }
+    }
+}
+
+// ───────────────────────── decode memoization ─────────────────────────
+
+/// One slot of the posit-decode cache: full key (bits + width) plus the
+/// decoded value. `w == 0` marks an empty slot (no real format has
+/// width 0, and `bits == 0` at a real width is a live key for Zero).
+#[derive(Clone, Copy)]
+pub(super) struct DecSlot {
+    bits: u64,
+    w: u8,
+    dec: Decoded<u64>,
+}
+
+const DEC_BITS: u32 = 15;
+const DEC_SLOTS: usize = 1 << DEC_BITS;
+const EMPTY_SLOT: DecSlot = DecSlot { bits: 0, w: 0, dec: Decoded::Zero };
+
+impl Core {
+    /// Memoized [`decode_n`]: decode is a pure function of
+    /// `(width, bits)`, and GEMM streams the same n² matrix elements n
+    /// times each, so a direct-mapped host-side cache converts almost
+    /// every regime-decode into a load. Misses fall through to the real
+    /// decoder, so the result is bit-identical by construction. The
+    /// cache is pure host memoization — it carries no simulated state
+    /// and deliberately survives `reset_timing`.
+    #[inline]
+    fn decode_cached(&mut self, bits: u64, w: u32) -> Decoded<u64> {
+        let h = ((bits ^ ((w as u64) << 57)).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            >> (64 - DEC_BITS)) as usize;
+        let slot = &mut self.dec_cache[h];
+        if slot.w == w as u8 && slot.bits == bits {
+            return slot.dec;
+        }
+        let dec = decode_n(w, bits);
+        *slot = DecSlot { bits, w: w as u8, dec };
+        dec
+    }
+}
+
+// ─────────────────────────── op handlers ───────────────────────────────
+
+#[inline(always)]
+fn wx(c: &mut Core, rd: u8, v: u64) {
+    if rd != 0 {
+        c.ctx.x[rd as usize] = v;
+    }
+}
+
+#[inline(always)]
+fn br(c: &Core, ins: &Instr, cond: bool) -> Effect {
+    let mut eff = Effect::default();
+    if cond {
+        eff.next_pc = Some(c.ctx.pc.wrapping_add(ins.imm as u64));
+        eff.taken = true;
+    }
+    eff
+}
+
+/// Every handler transcribes its `Core::exec` arm verbatim — same probe
+/// order, same masking, same write-back — so the functional semantics
+/// are the oracle's with the match dispatch compiled away.
+macro_rules! h_alu {
+    ($name:ident, |$c:ident, $ins:ident| $v:expr) => {
+        fn $name($c: &mut Core, $ins: &Instr) -> Effect {
+            let v = $v;
+            wx($c, $ins.rd, v);
+            Effect::default()
+        }
+    };
+}
+
+macro_rules! h_branch {
+    ($name:ident, |$c:ident, $ins:ident| $cond:expr) => {
+        fn $name($c: &mut Core, $ins: &Instr) -> Effect {
+            let cond = $cond;
+            br($c, $ins, cond)
+        }
+    };
+}
+
+macro_rules! h_load {
+    ($name:ident, $len:expr, |$c:ident, $ins:ident, $a:ident| $body:expr) => {
+        fn $name($c: &mut Core, $ins: &Instr) -> Effect {
+            let mut eff = Effect::default();
+            let $a = $c.ctx.x[$ins.rs1 as usize].wrapping_add($ins.imm as u64);
+            if let Some(t) = $c.mem_trap($a, $len) {
+                eff.trap = Some(t);
+                return eff;
+            }
+            eff.mem_extra = $c.dcache.access($a);
+            $body;
+            eff
+        }
+    };
+}
+
+macro_rules! h_store {
+    ($name:ident, $len:expr, |$c:ident, $ins:ident, $a:ident| $body:expr) => {
+        fn $name($c: &mut Core, $ins: &Instr) -> Effect {
+            let mut eff = Effect::default();
+            let $a = $c.ctx.x[$ins.rs1 as usize].wrapping_add($ins.imm as u64);
+            if let Some(t) = $c.mem_trap($a, $len) {
+                eff.trap = Some(t);
+                return eff;
+            }
+            // The oracle charges no store-miss latency (blocking D$ port
+            // models the walk on loads only); the access still updates
+            // hit/miss counts and LRU state.
+            $c.dcache.access($a);
+            $body;
+            eff
+        }
+    };
+}
+
+h_alu!(h_lui, |_c, ins| (ins.imm << 12) as u64);
+h_alu!(h_auipc, |c, ins| c.ctx.pc.wrapping_add((ins.imm << 12) as u64));
+h_alu!(h_addi, |c, ins| c.ctx.x[ins.rs1 as usize].wrapping_add(ins.imm as u64));
+h_alu!(h_slti, |c, ins| ((c.ctx.x[ins.rs1 as usize] as i64) < ins.imm) as u64);
+h_alu!(h_sltiu, |c, ins| (c.ctx.x[ins.rs1 as usize] < ins.imm as u64) as u64);
+h_alu!(h_xori, |c, ins| c.ctx.x[ins.rs1 as usize] ^ ins.imm as u64);
+h_alu!(h_ori, |c, ins| c.ctx.x[ins.rs1 as usize] | ins.imm as u64);
+h_alu!(h_andi, |c, ins| c.ctx.x[ins.rs1 as usize] & ins.imm as u64);
+h_alu!(h_slli, |c, ins| c.ctx.x[ins.rs1 as usize] << ins.imm);
+h_alu!(h_srli, |c, ins| c.ctx.x[ins.rs1 as usize] >> ins.imm);
+h_alu!(h_srai, |c, ins| ((c.ctx.x[ins.rs1 as usize] as i64) >> ins.imm) as u64);
+h_alu!(h_add, |c, ins| c.ctx.x[ins.rs1 as usize].wrapping_add(c.ctx.x[ins.rs2 as usize]));
+h_alu!(h_sub, |c, ins| c.ctx.x[ins.rs1 as usize].wrapping_sub(c.ctx.x[ins.rs2 as usize]));
+h_alu!(h_sll, |c, ins| c.ctx.x[ins.rs1 as usize] << (c.ctx.x[ins.rs2 as usize] & 63));
+h_alu!(h_srl, |c, ins| c.ctx.x[ins.rs1 as usize] >> (c.ctx.x[ins.rs2 as usize] & 63));
+h_alu!(h_sra, |c, ins| {
+    ((c.ctx.x[ins.rs1 as usize] as i64) >> (c.ctx.x[ins.rs2 as usize] & 63)) as u64
+});
+h_alu!(h_slt, |c, ins| {
+    ((c.ctx.x[ins.rs1 as usize] as i64) < (c.ctx.x[ins.rs2 as usize] as i64)) as u64
+});
+h_alu!(h_sltu, |c, ins| (c.ctx.x[ins.rs1 as usize] < c.ctx.x[ins.rs2 as usize]) as u64);
+h_alu!(h_xor, |c, ins| c.ctx.x[ins.rs1 as usize] ^ c.ctx.x[ins.rs2 as usize]);
+h_alu!(h_or, |c, ins| c.ctx.x[ins.rs1 as usize] | c.ctx.x[ins.rs2 as usize]);
+h_alu!(h_and, |c, ins| c.ctx.x[ins.rs1 as usize] & c.ctx.x[ins.rs2 as usize]);
+h_alu!(h_mul, |c, ins| c.ctx.x[ins.rs1 as usize].wrapping_mul(c.ctx.x[ins.rs2 as usize]));
+
+h_branch!(h_beq, |c, ins| c.ctx.x[ins.rs1 as usize] == c.ctx.x[ins.rs2 as usize]);
+h_branch!(h_bne, |c, ins| c.ctx.x[ins.rs1 as usize] != c.ctx.x[ins.rs2 as usize]);
+h_branch!(h_blt, |c, ins| {
+    (c.ctx.x[ins.rs1 as usize] as i64) < (c.ctx.x[ins.rs2 as usize] as i64)
+});
+h_branch!(h_bge, |c, ins| {
+    (c.ctx.x[ins.rs1 as usize] as i64) >= (c.ctx.x[ins.rs2 as usize] as i64)
+});
+h_branch!(h_bltu, |c, ins| c.ctx.x[ins.rs1 as usize] < c.ctx.x[ins.rs2 as usize]);
+h_branch!(h_bgeu, |c, ins| c.ctx.x[ins.rs1 as usize] >= c.ctx.x[ins.rs2 as usize]);
+
+fn h_jal(c: &mut Core, ins: &Instr) -> Effect {
+    let mut eff = Effect::default();
+    wx(c, ins.rd, c.ctx.pc.wrapping_add(4));
+    eff.next_pc = Some(c.ctx.pc.wrapping_add(ins.imm as u64));
+    eff.taken = true;
+    eff
+}
+
+fn h_halt(_c: &mut Core, _ins: &Instr) -> Effect {
+    Effect { halt: true, ..Effect::default() }
+}
+
+h_load!(h_lb, 1, |c, ins, a| wx(c, ins.rd, c.mem.read_u8(a) as i8 as i64 as u64));
+h_load!(h_lh, 2, |c, ins, a| wx(c, ins.rd, c.mem.read_u16(a) as i16 as i64 as u64));
+h_load!(h_lw, 4, |c, ins, a| wx(c, ins.rd, c.mem.read_u32(a) as i32 as i64 as u64));
+h_load!(h_ld, 8, |c, ins, a| wx(c, ins.rd, c.mem.read_u64(a)));
+h_load!(h_lbu, 1, |c, ins, a| wx(c, ins.rd, c.mem.read_u8(a) as u64));
+h_load!(h_lhu, 2, |c, ins, a| wx(c, ins.rd, c.mem.read_u16(a) as u64));
+h_load!(h_lwu, 4, |c, ins, a| wx(c, ins.rd, c.mem.read_u32(a) as u64));
+h_store!(h_sb, 1, |c, ins, a| c.mem.write_u8(a, c.ctx.x[ins.rs2 as usize] as u8));
+h_store!(h_sh, 2, |c, ins, a| c.mem.write_u16(a, c.ctx.x[ins.rs2 as usize] as u16));
+h_store!(h_sw, 4, |c, ins, a| c.mem.write_u32(a, c.ctx.x[ins.rs2 as usize] as u32));
+h_store!(h_sd, 8, |c, ins, a| c.mem.write_u64(a, c.ctx.x[ins.rs2 as usize]));
+
+h_load!(h_flw, 4, |c, ins, a| {
+    c.ctx.f[ins.rd as usize] = 0xFFFF_FFFF_0000_0000 | c.mem.read_u32(a) as u64
+});
+h_load!(h_fld, 8, |c, ins, a| c.ctx.f[ins.rd as usize] = c.mem.read_u64(a));
+h_store!(h_fsw, 4, |c, ins, a| c.mem.write_u32(a, c.ctx.f[ins.rs2 as usize] as u32));
+h_store!(h_fsd, 8, |c, ins, a| c.mem.write_u64(a, c.ctx.f[ins.rs2 as usize]));
+
+fn h_fmadd_s(c: &mut Core, ins: &Instr) -> Effect {
+    c.ctx.f[ins.rd as usize] = box32(f32_of(c.ctx.f[ins.rs1 as usize]).mul_add(
+        f32_of(c.ctx.f[ins.rs2 as usize]),
+        f32_of(c.ctx.f[ins.rs3 as usize]),
+    ));
+    Effect::default()
+}
+
+fn h_fmadd_d(c: &mut Core, ins: &Instr) -> Effect {
+    c.ctx.f[ins.rd as usize] = f64_of(c.ctx.f[ins.rs1 as usize])
+        .mul_add(f64_of(c.ctx.f[ins.rs2 as usize]), f64_of(c.ctx.f[ins.rs3 as usize]))
+        .to_bits();
+    Effect::default()
+}
+
+h_load!(h_plb, 1, |c, ins, a| c.ctx.p[ins.rd as usize] = c.mem.read_u8(a) as u64);
+h_load!(h_plh, 2, |c, ins, a| c.ctx.p[ins.rd as usize] = c.mem.read_u16(a) as u64);
+h_load!(h_plw, 4, |c, ins, a| c.ctx.p[ins.rd as usize] = c.mem.read_u32(a) as u64);
+h_load!(h_pld, 8, |c, ins, a| c.ctx.p[ins.rd as usize] = c.mem.read_u64(a));
+h_store!(h_psb, 1, |c, ins, a| c.mem.write_u8(a, c.ctx.p[ins.rs2 as usize] as u8));
+h_store!(h_psh, 2, |c, ins, a| c.mem.write_u16(a, c.ctx.p[ins.rs2 as usize] as u16));
+h_store!(h_psw, 4, |c, ins, a| c.mem.write_u32(a, c.ctx.p[ins.rs2 as usize] as u32));
+h_store!(h_psd, 8, |c, ins, a| c.mem.write_u64(a, c.ctx.p[ins.rs2 as usize]));
+
+/// Width-masked posit operand pair, as the `exec` computational arm
+/// reads them.
+#[inline(always)]
+fn pops(c: &Core, ins: &Instr) -> (u32, u64, u64) {
+    let w = ins.fmt.width();
+    let m = mask_n(w);
+    (w, c.ctx.p[ins.rs1 as usize] & m, c.ctx.p[ins.rs2 as usize] & m)
+}
+
+fn h_padd(c: &mut Core, ins: &Instr) -> Effect {
+    let (w, x, y) = pops(c, ins);
+    c.ctx.p[ins.rd as usize] = ops::add_n(w, x, y);
+    Effect::default()
+}
+
+fn h_psub(c: &mut Core, ins: &Instr) -> Effect {
+    let (w, x, y) = pops(c, ins);
+    c.ctx.p[ins.rd as usize] = ops::sub_n(w, x, y);
+    Effect::default()
+}
+
+fn h_pmul(c: &mut Core, ins: &Instr) -> Effect {
+    let (w, x, y) = pops(c, ins);
+    c.ctx.p[ins.rd as usize] = ops::mul_n(w, x, y);
+    Effect::default()
+}
+
+fn h_qmadd(c: &mut Core, ins: &Instr) -> Effect {
+    let (_, x, y) = pops(c, ins);
+    c.ctx.quire.madd(ins.fmt, x, y);
+    Effect::default()
+}
+
+fn h_qmsub(c: &mut Core, ins: &Instr) -> Effect {
+    let (_, x, y) = pops(c, ins);
+    c.ctx.quire.msub(ins.fmt, x, y);
+    Effect::default()
+}
+
+fn h_qclr(c: &mut Core, ins: &Instr) -> Effect {
+    c.ctx.quire.clear(ins.fmt);
+    Effect::default()
+}
+
+fn h_qround(c: &mut Core, ins: &Instr) -> Effect {
+    c.ctx.p[ins.rd as usize] = c.ctx.quire.round(ins.fmt);
+    Effect::default()
+}
+
+/// Everything without a specialized handler runs the full `exec` match —
+/// still correct, just unspecialized (cold ops: conversions, div/sqrt,
+/// sign-injection, compares, CSR-free system ops).
+fn h_generic(c: &mut Core, ins: &Instr) -> Effect {
+    c.exec(ins)
+}
+
+fn handler_for(op: Op) -> Handler {
+    match op {
+        Op::Lui => h_lui,
+        Op::Auipc => h_auipc,
+        Op::Jal => h_jal,
+        Op::Beq => h_beq,
+        Op::Bne => h_bne,
+        Op::Blt => h_blt,
+        Op::Bge => h_bge,
+        Op::Bltu => h_bltu,
+        Op::Bgeu => h_bgeu,
+        Op::Lb => h_lb,
+        Op::Lh => h_lh,
+        Op::Lw => h_lw,
+        Op::Ld => h_ld,
+        Op::Lbu => h_lbu,
+        Op::Lhu => h_lhu,
+        Op::Lwu => h_lwu,
+        Op::Sb => h_sb,
+        Op::Sh => h_sh,
+        Op::Sw => h_sw,
+        Op::Sd => h_sd,
+        Op::Addi => h_addi,
+        Op::Slti => h_slti,
+        Op::Sltiu => h_sltiu,
+        Op::Xori => h_xori,
+        Op::Ori => h_ori,
+        Op::Andi => h_andi,
+        Op::Slli => h_slli,
+        Op::Srli => h_srli,
+        Op::Srai => h_srai,
+        Op::Add => h_add,
+        Op::Sub => h_sub,
+        Op::Sll => h_sll,
+        Op::Slt => h_slt,
+        Op::Sltu => h_sltu,
+        Op::Xor => h_xor,
+        Op::Srl => h_srl,
+        Op::Sra => h_sra,
+        Op::Or => h_or,
+        Op::And => h_and,
+        Op::Mul => h_mul,
+        Op::Ecall | Op::Ebreak => h_halt,
+        Op::Flw => h_flw,
+        Op::Fsw => h_fsw,
+        Op::Fld => h_fld,
+        Op::Fsd => h_fsd,
+        Op::FmaddS => h_fmadd_s,
+        Op::FmaddD => h_fmadd_d,
+        Op::Plb => h_plb,
+        Op::Plh => h_plh,
+        Op::Plw => h_plw,
+        Op::Pld => h_pld,
+        Op::Psb => h_psb,
+        Op::Psh => h_psh,
+        Op::Psw => h_psw,
+        Op::Psd => h_psd,
+        Op::PaddS => h_padd,
+        Op::PsubS => h_psub,
+        Op::PmulS => h_pmul,
+        Op::QmaddS => h_qmadd,
+        Op::QmsubS => h_qmsub,
+        Op::QclrS => h_qclr,
+        Op::QroundS => h_qround,
+        _ => h_generic,
+    }
+}
+
+// ─────────────────────────── the engine ────────────────────────────────
+
+impl Core {
+    /// The current program's translation unit, built on first use and
+    /// cached by text-segment identity (`Arc::ptr_eq`, LRU, capacity 16 —
+    /// mirroring the superblock-plan cache, and for the same reason: the
+    /// multi-hart scheduler alternates job kernels with the tiny
+    /// context-switch kernels every quantum).
+    pub(super) fn translation(&mut self) -> Arc<TransUnit> {
+        if let Some(pos) =
+            self.trans_cache.iter().position(|(seg, _)| Arc::ptr_eq(seg, &self.program))
+        {
+            let entry = self.trans_cache.remove(pos);
+            let tu = Arc::clone(&entry.1);
+            self.trans_cache.push(entry);
+            return tu;
+        }
+        let tu = Arc::new(TransUnit::build(&self.plan));
+        if self.trans_cache.len() >= 16 {
+            self.trans_cache.remove(0);
+        }
+        self.trans_cache.push((Arc::clone(&self.program), Arc::clone(&tu)));
+        tu
+    }
+
+    /// Run the whole program through the translated tables. The
+    /// dispatcher is the superblock dispatcher with the translated block
+    /// table in place of the plan skeletons; every deopt case (see module
+    /// doc) routes to the verbatim oracle `step()`.
+    pub(super) fn run_translated(&mut self) {
+        let tu = self.translation();
+        let plan = Arc::clone(&self.plan);
+        let max_instrs = self.cfg.max_instrs;
+        while !self.halted {
+            let idx = (self.ctx.pc / 4) as usize;
+            if self.ctx.pc % 4 != 0 || idx >= plan.block_of.len() {
+                if !self.step() {
+                    break;
+                }
+                continue;
+            }
+            let bid = plan.block_of[idx] as usize;
+            if plan.blocks[bid].start != idx {
+                // Mid-block landing (JALR): step to the next leader.
+                if !self.step() {
+                    break;
+                }
+                continue;
+            }
+            match &tu.blocks[bid] {
+                TBlock::Deopt => {
+                    if !self.step() {
+                        break;
+                    }
+                }
+                TBlock::MacOracle(f) => self.run_fused_mac(f),
+                TBlock::Mac(f) => {
+                    // Quantum-adjacent: fewer than one iteration's worth
+                    // of instructions left — the valve must fire at the
+                    // oracle's exact instruction, so step.
+                    if max_instrs != 0 && self.instret + 7 >= max_instrs {
+                        if !self.step() {
+                            break;
+                        }
+                    } else {
+                        let f = *f;
+                        self.run_mac_translated(&f);
+                    }
+                }
+                TBlock::Line(ops) => {
+                    if max_instrs != 0 && self.instret + ops.len() as u64 >= max_instrs {
+                        if !self.step() {
+                            break;
+                        }
+                    } else {
+                        self.run_line(ops);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Execute one translated straight-line block: the issue skeleton of
+    /// the superblock's `run_block`, with the `exec` match replaced by
+    /// the bound handler and the block's `instret` delta (a constant —
+    /// the table length) applied at exit. The dispatcher guarantees
+    /// `instret + ops.len() < max_instrs`, so no instruction in here can
+    /// trip the quantum valve; traps and ECALL exits apply the partial
+    /// count, exactly the oracle's retire-before-fault semantics.
+    fn run_line(&mut self, ops: &[TOp]) {
+        let mut executed: u64 = 0;
+        for op in ops {
+            let ins = &op.ins;
+            let t_ops = self
+                .ready_of(op.rs1, ins.rs1)
+                .max(self.ready_of(op.rs2, ins.rs2))
+                .max(self.ready_of(op.rs3, ins.rs3));
+            let t = self.issue(t_ops, op.unit);
+            let eff = (op.run)(self, ins);
+            if let Some(trap) = eff.trap {
+                self.cycle = t + 1;
+                self.halted = true;
+                self.halt_exit = false;
+                self.trap = Some(trap);
+                self.traps += 1;
+                self.instret += executed;
+                return;
+            }
+            let lat = op.lat + eff.mem_extra;
+            self.set_ready(op.rd, ins.rd, t + lat);
+            self.unit_free[op.unit as usize] = match op.unit {
+                Unit::Pau | Unit::Fpu | Unit::Mul => t + lat,
+                Unit::Lsu if matches!(ins.op, Op::Qlq | Op::Qsq) => t + lat,
+                Unit::Lsu => t + 1 + eff.mem_extra,
+                _ => t + 1,
+            };
+            self.cycle = t + 1;
+            let next_seq = self.ctx.pc.wrapping_add(4);
+            if op.unit == Unit::Branch {
+                let taken = eff.taken;
+                let target = eff.next_pc.unwrap_or(next_seq);
+                let predicted_target = match ins.op {
+                    Op::Jal => target,
+                    Op::Jalr => next_seq,
+                    _ => {
+                        if ins.imm < 0 {
+                            self.ctx.pc.wrapping_add(ins.imm as u64)
+                        } else {
+                            next_seq
+                        }
+                    }
+                };
+                let actual = if taken { target } else { next_seq };
+                if actual != predicted_target {
+                    self.mispredicts += 1;
+                    self.cycle += self.cfg.mispredict_penalty;
+                }
+                self.ctx.pc = actual;
+            } else {
+                self.ctx.pc = eff.next_pc.unwrap_or(next_seq);
+            }
+            executed += 1;
+            if eff.halt {
+                self.halted = true;
+                self.halt_exit = true;
+                break;
+            }
+        }
+        self.instret += executed;
+    }
+
+    /// The translated fused-MAC loop: whole iterations in one host loop.
+    ///
+    /// The scoreboard/architectural slice the loop touches — `x[ra]`,
+    /// `x[rb]`, `x[rc]`, their ready times, `ready_p[pa]`, `ready_p[pb]`,
+    /// the LSU/ALU/PAU/Branch unit-free times, the cycle counter and the
+    /// stall accumulators — is hoisted into locals and written back only
+    /// on exit (loop fall-through, quantum-adjacent handoff, or a memory
+    /// trap). Soundness of the hoist is exactly [`mac_regs_disjoint`]:
+    /// no other register aliases the hoisted ones, and the stride
+    /// register (if any) is never written by the loop, so its value and
+    /// ready time are loop-invariant. The arithmetic per instruction is
+    /// the oracle recurrence of `run_fused_mac`, line for line.
+    fn run_mac_translated(&mut self, f: &FusedMac) {
+        if self.dec_cache.is_empty() {
+            self.dec_cache = vec![EMPTY_SLOT; DEC_SLOTS];
+        }
+        let w = f.fmt.width();
+        let mask = mask_n(w);
+        let eb = f.fmt.bytes();
+        let penalty = self.cfg.mispredict_penalty;
+        let max_instrs = self.cfg.max_instrs;
+        let head = self.ctx.pc;
+        let instret0 = self.instret;
+
+        let mut c = self.cycle;
+        let mut raw: u64 = 0;
+        let mut us: u64 = 0;
+        let mut done: u64 = 0;
+        let mut rx_a = self.ready_x[f.ra as usize];
+        let mut rx_b = self.ready_x[f.rb as usize];
+        let mut rx_c = self.ready_x[f.rc as usize];
+        let mut rp_a = self.ready_p[f.pa as usize];
+        let mut rp_b = self.ready_p[f.pb as usize];
+        let mut uf_lsu = self.unit_free[Unit::Lsu as usize];
+        let mut uf_alu = self.unit_free[Unit::Alu as usize];
+        let mut uf_pau = self.unit_free[Unit::Pau as usize];
+        let mut uf_br = self.unit_free[Unit::Branch as usize];
+        let mut x_a = self.ctx.x[f.ra as usize];
+        let mut x_b = self.ctx.x[f.rb as usize];
+        let mut x_c = self.ctx.x[f.rc as usize];
+        // Stride operand: loop-invariant by `mac_regs_disjoint` (x0 reads
+        // as 0 and its ready time is never set).
+        let (rx_s, add_b) = match f.rs_b {
+            Some(rs) => (self.ready_x[rs as usize], self.ctx.x[rs as usize]),
+            None => (0, f.step_b as u64),
+        };
+
+        macro_rules! flush {
+            ($pc:expr) => {{
+                self.cycle = c;
+                self.raw_stalls += raw;
+                self.unit_stalls += us;
+                self.instret += done;
+                self.ready_x[f.ra as usize] = rx_a;
+                self.ready_x[f.rb as usize] = rx_b;
+                self.ready_x[f.rc as usize] = rx_c;
+                self.ready_p[f.pa as usize] = rp_a;
+                self.ready_p[f.pb as usize] = rp_b;
+                self.unit_free[Unit::Lsu as usize] = uf_lsu;
+                self.unit_free[Unit::Alu as usize] = uf_alu;
+                self.unit_free[Unit::Pau as usize] = uf_pau;
+                self.unit_free[Unit::Branch as usize] = uf_br;
+                self.ctx.x[f.ra as usize] = x_a;
+                self.ctx.x[f.rb as usize] = x_b;
+                self.ctx.x[f.rc as usize] = x_c;
+                self.ctx.pc = $pc;
+            }};
+        }
+        macro_rules! trap_exit {
+            ($trap:expr, $t:expr, $pc:expr) => {{
+                c = $t + 1;
+                flush!($pc);
+                self.halted = true;
+                self.halt_exit = false;
+                self.trap = Some($trap);
+                self.traps += 1;
+                return;
+            }};
+        }
+
+        loop {
+            // Quantum-adjacent handoff: the next iteration could cross
+            // `max_instrs`, so flush and let the dispatcher route the
+            // tail through the oracle. An iteration that *does* run
+            // leaves `instret < max_instrs`, so the valve always fires
+            // on the step path at the oracle's exact instruction.
+            if max_instrs != 0 && instret0 + done + 7 >= max_instrs {
+                flush!(head);
+                return;
+            }
+
+            // ── pl* pa, imm_a(ra) ─────────────────────────────────────
+            let mut t = c;
+            if rx_a > t {
+                raw += rx_a - t;
+                t = rx_a;
+            }
+            if uf_lsu > t {
+                us += uf_lsu - t;
+                t = uf_lsu;
+            }
+            let addr = x_a.wrapping_add(f.imm_a as u64);
+            if eb > 1 && addr % eb as u64 != 0 {
+                trap_exit!(Trap::Misaligned { pc: head, addr, len: eb }, t, head);
+            }
+            if !self.mem.in_bounds(addr, eb) {
+                trap_exit!(Trap::OutOfBounds { pc: head, addr, len: eb }, t, head);
+            }
+            let me = self.dcache.access_mru(addr);
+            let bits_a = self.read_posit_elem(addr, f.fmt);
+            self.ctx.p[f.pa as usize] = bits_a;
+            rp_a = t + f.load_lat + me;
+            uf_lsu = t + 1 + me;
+            c = t + 1;
+            done += 1;
+
+            // ── pl* pb, imm_b(rb) ─────────────────────────────────────
+            let mut t = c;
+            if rx_b > t {
+                raw += rx_b - t;
+                t = rx_b;
+            }
+            if uf_lsu > t {
+                us += uf_lsu - t;
+                t = uf_lsu;
+            }
+            let addr = x_b.wrapping_add(f.imm_b as u64);
+            if eb > 1 && addr % eb as u64 != 0 {
+                trap_exit!(
+                    Trap::Misaligned { pc: head.wrapping_add(4), addr, len: eb },
+                    t,
+                    head.wrapping_add(4)
+                );
+            }
+            if !self.mem.in_bounds(addr, eb) {
+                trap_exit!(
+                    Trap::OutOfBounds { pc: head.wrapping_add(4), addr, len: eb },
+                    t,
+                    head.wrapping_add(4)
+                );
+            }
+            let me = self.dcache.access_mru(addr);
+            let bits_b = self.read_posit_elem(addr, f.fmt);
+            self.ctx.p[f.pb as usize] = bits_b;
+            rp_b = t + f.load_lat + me;
+            uf_lsu = t + 1 + me;
+            c = t + 1;
+            done += 1;
+
+            // ── qmadd/qmsub pa, pb ────────────────────────────────────
+            let t_ops = if rp_a > rp_b { rp_a } else { rp_b };
+            let mut t = c;
+            if t_ops > t {
+                raw += t_ops - t;
+                t = t_ops;
+            }
+            if uf_pau > t {
+                us += uf_pau - t;
+                t = uf_pau;
+            }
+            let da = self.decode_cached(bits_a & mask, w);
+            let db = self.decode_cached(bits_b & mask, w);
+            self.ctx.quire.mac_decoded(f.fmt, da, db, f.sub);
+            uf_pau = t + f.mac_lat;
+            c = t + 1;
+            done += 1;
+
+            // ── addi ra, ra, step_a ───────────────────────────────────
+            let mut t = c;
+            if rx_a > t {
+                raw += rx_a - t;
+                t = rx_a;
+            }
+            if uf_alu > t {
+                us += uf_alu - t;
+                t = uf_alu;
+            }
+            x_a = x_a.wrapping_add(f.step_a as u64);
+            rx_a = t + 1;
+            uf_alu = t + 1;
+            c = t + 1;
+            done += 1;
+
+            // ── add rb, rb, rs_b  /  addi rb, rb, step_b ──────────────
+            let t_ops = if rx_b > rx_s { rx_b } else { rx_s };
+            let mut t = c;
+            if t_ops > t {
+                raw += t_ops - t;
+                t = t_ops;
+            }
+            if uf_alu > t {
+                us += uf_alu - t;
+                t = uf_alu;
+            }
+            x_b = x_b.wrapping_add(add_b);
+            rx_b = t + 1;
+            uf_alu = t + 1;
+            c = t + 1;
+            done += 1;
+
+            // ── addi rc, rc, step_c ───────────────────────────────────
+            let mut t = c;
+            if rx_c > t {
+                raw += rx_c - t;
+                t = rx_c;
+            }
+            if uf_alu > t {
+                us += uf_alu - t;
+                t = uf_alu;
+            }
+            x_c = x_c.wrapping_add(f.step_c as u64);
+            rx_c = t + 1;
+            uf_alu = t + 1;
+            c = t + 1;
+            done += 1;
+
+            // ── bnez rc, head (backward → predicted taken) ────────────
+            let mut t = c;
+            if rx_c > t {
+                raw += rx_c - t;
+                t = rx_c;
+            }
+            if uf_br > t {
+                us += uf_br - t;
+                t = uf_br;
+            }
+            uf_br = t + 1;
+            c = t + 1;
+            done += 1;
+            if x_c == 0 {
+                // Loop exit: the one mispredict of the whole loop.
+                self.mispredicts += 1;
+                c += penalty;
+                flush!(head.wrapping_add(28));
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{block, Core, CoreConfig, Engine};
+    use crate::isa::asm::assemble;
+
+    fn core(engine: Engine) -> Core {
+        Core::new(CoreConfig { engine, mem_size: 1 << 16, ..CoreConfig::default() })
+    }
+
+    #[test]
+    fn translation_cache_pins_on_pointer_identity() {
+        let prog = assemble(
+            r#"
+            li a0, 5
+        loop:
+            addi a0, a0, -1
+            bnez a0, loop
+            ecall
+        "#,
+        )
+        .expect("assembles");
+        let mut c = core(Engine::Translated);
+        c.load_program(&prog);
+        let t1 = c.translation();
+        c.run();
+        // Pointer-equal reload: the cached unit is reused.
+        c.load_instrs(Arc::clone(&prog.instrs));
+        assert!(Arc::ptr_eq(&t1, &c.translation()));
+        // A fresh allocation with *identical* text is a different program
+        // identity — a stale unit must never be reused for it.
+        let alias: Arc<[Instr]> = prog.instrs.iter().copied().collect::<Vec<_>>().into();
+        c.load_instrs(Arc::clone(&alias));
+        let t3 = c.translation();
+        assert!(!Arc::ptr_eq(&t1, &t3));
+        // And switching back re-hits the original unit.
+        c.load_instrs(Arc::clone(&prog.instrs));
+        assert!(Arc::ptr_eq(&t1, &c.translation()));
+    }
+
+    #[test]
+    fn aliasing_fused_loops_take_the_oracle_mac_path() {
+        // pa == pb: structurally a fused loop, but the hoisted executor
+        // requires disjoint registers — must classify as MacOracle.
+        let prog = assemble(
+            r#"
+        loop:
+            plw p0, 0(a0)
+            plw p0, 0(a1)
+            qmadd.s p0, p0
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            ecall
+        "#,
+        )
+        .expect("assembles");
+        let plan = block::build_plan(&prog.instrs);
+        let tu = TransUnit::build(&plan);
+        assert!(matches!(tu.blocks[0], TBlock::MacOracle(_)));
+
+        // Disjoint registers lower to the hoisted host loop.
+        let prog = assemble(
+            r#"
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.s p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            ecall
+        "#,
+        )
+        .expect("assembles");
+        let tu = TransUnit::build(&block::build_plan(&prog.instrs));
+        assert!(matches!(tu.blocks[0], TBlock::Mac(_)));
+    }
+
+    #[test]
+    fn csr_and_spill_blocks_deopt() {
+        let prog = assemble(
+            r#"
+            rdcycle a0
+            addi a1, a1, 1
+            li a2, 0x400
+            qsq.s (a2)
+            addi a3, a3, 1
+            ecall
+        "#,
+        )
+        .expect("assembles");
+        let plan = block::build_plan(&prog.instrs);
+        let tu = TransUnit::build(&plan);
+        // The rdcycle block and the qsq block deopt; the trailing
+        // straight-line blocks translate.
+        let kinds: Vec<bool> =
+            tu.blocks.iter().map(|b| matches!(b, TBlock::Deopt)).collect();
+        assert!(kinds.contains(&true), "no deopt block found");
+        assert!(
+            tu.blocks.iter().any(|b| matches!(b, TBlock::Line(_))),
+            "no translated block found"
+        );
+        let qsq_bid = plan
+            .blocks
+            .iter()
+            .position(|b| b.pre.iter().any(|p| p.ins.op == Op::Qsq))
+            .expect("qsq block");
+        assert!(matches!(tu.blocks[qsq_bid], TBlock::Deopt));
+        let csr_bid = plan
+            .blocks
+            .iter()
+            .position(|b| b.pre.iter().any(|p| p.ins.op == Op::Csrrs))
+            .expect("csr block");
+        assert!(matches!(tu.blocks[csr_bid], TBlock::Deopt));
+    }
+
+    /// A dot loop over live data, run at every quantum cut point: the
+    /// translated engine must match the oracle bit-and-count even when
+    /// the valve fires mid-iteration (the quantum-adjacent handoff).
+    #[test]
+    fn translated_matches_oracle_on_fused_loop_and_quanta() {
+        let src = r#"
+            li a0, 0x1000
+            li a1, 0x2000
+            li a2, 6
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.s p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            qround.s p2
+            ecall
+        "#;
+        let prog = assemble(src).expect("assembles");
+        let run = |engine: Engine, max_instrs: u64| {
+            let mut c = Core::new(CoreConfig {
+                engine,
+                mem_size: 1 << 16,
+                max_instrs,
+                ..CoreConfig::default()
+            });
+            for i in 0..8u64 {
+                // Arbitrary nonzero posit patterns.
+                c.mem.write_u32(0x1000 + 4 * i, 0x3a80_0000 + (i as u32) * 0x111);
+                c.mem.write_u32(0x2000 + 4 * i, 0x4100_0000 - (i as u32) * 0x77);
+            }
+            c.load_program(&prog);
+            let stats = c.run();
+            (stats, c.halted_on_exit(), c.ctx.clone())
+        };
+        for max in [0u64, 1, 2, 3, 5, 7, 8, 12, 20, 33, 44, 45, 46, 100] {
+            let oracle = run(Engine::Oracle, max);
+            let translated = run(Engine::Translated, max);
+            assert_eq!(oracle, translated, "max_instrs = {max}");
+        }
+    }
+
+    /// Memory traps inside the hoisted MAC loop latch the oracle's exact
+    /// trap (pc, addr, partial instret) through the flush path.
+    #[test]
+    fn mac_loop_traps_identically() {
+        // The second stream walks off the end of a 4 KiB memory.
+        let src = r#"
+            li a0, 0x100
+            li a1, 0xff0
+            li a2, 50
+        loop:
+            plw p0, 0(a0)
+            plw p1, 0(a1)
+            qmadd.s p0, p1
+            addi a0, a0, 4
+            addi a1, a1, 4
+            addi a2, a2, -1
+            bnez a2, loop
+            ecall
+        "#;
+        let prog = assemble(src).expect("assembles");
+        let run = |engine: Engine| {
+            let mut c = Core::new(CoreConfig {
+                engine,
+                mem_size: 1 << 12,
+                ..CoreConfig::default()
+            });
+            c.load_program(&prog);
+            let stats = c.run();
+            (stats, c.trap(), c.ctx.clone())
+        };
+        let oracle = run(Engine::Oracle);
+        let translated = run(Engine::Translated);
+        assert!(oracle.1.is_some(), "expected a trap");
+        assert_eq!(oracle, translated);
+    }
+}
+

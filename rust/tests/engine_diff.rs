@@ -1,15 +1,18 @@
-//! Differential fuzz: the superblock engine vs the per-instruction
-//! oracle on randomly generated, well-formed programs.
+//! Three-way differential fuzz: the superblock and binary-translated
+//! engines vs the per-instruction oracle on randomly generated,
+//! well-formed programs.
 //!
-//! The superblock engine's contract is *bit-and-count identity*: for any
-//! program, `Stats` (cycles, instret, stall/mispredict/D$ counters) and
-//! the final architectural state (PC, x/f/p register files, the PAU
+//! The fast engines share one contract, *bit-and-count identity*: for
+//! any program, `Stats` (cycles, instret, stall/mispredict/D$ counters)
+//! and the final architectural state (PC, x/f/p register files, the PAU
 //! quire, data memory) must equal a pure `step()` run. The generator
 //! mixes RV64I/M, F/D, Xposit at all four widths (including the
 //! `qsq`/`qlq` quire spill/restore pair and mid-program `qclr` re-tags),
 //! loads/stores through a pinned base register, forward and backward
-//! branches, JAL and JALR; `max_instrs` bounds runaway loops, and both
-//! engines must trip it on the same instruction.
+//! branches, JAL and JALR; `max_instrs` bounds runaway loops, and all
+//! three engines must trip it on the same instruction. One harness pins
+//! every deoptimization edge at once: superblock mid-block landings,
+//! translated `Deopt`/`MacOracle` blocks, and the quantum-guard valves.
 
 use percival::core::{Core, CoreConfig, Engine, HaltCause, Stats};
 use percival::isa::asm::assemble;
@@ -297,20 +300,22 @@ fn run_engine(instrs: &Arc<[Instr]>, data: &[u64], engine: Engine) -> (Stats, Co
 }
 
 fn assert_identical(case: u64, instrs: &Arc<[Instr]>, data: &[u64]) {
-    let (s_sb, c_sb) = run_engine(instrs, data, Engine::Superblock);
     let (s_or, c_or) = run_engine(instrs, data, Engine::Oracle);
-    assert_eq!(s_sb, s_or, "case {case}: stats diverge");
-    assert_eq!(c_sb.halted(), c_or.halted(), "case {case}");
-    assert_eq!(c_sb.halted_on_exit(), c_or.halted_on_exit(), "case {case}");
-    assert_eq!(c_sb.trap(), c_or.trap(), "case {case}: trap diverges");
-    // The whole architectural context in one compare: pc, x/f/p register
-    // files, and the format-tagged quire.
-    assert_eq!(c_sb.ctx, c_or.ctx, "case {case}: architectural context diverges");
-    assert_eq!(c_sb.mem.bytes(), c_or.mem.bytes(), "case {case}: memory diverges");
+    for engine in [Engine::Superblock, Engine::Translated] {
+        let (s_fast, c_fast) = run_engine(instrs, data, engine);
+        assert_eq!(s_fast, s_or, "case {case} ({engine:?}): stats diverge");
+        assert_eq!(c_fast.halted(), c_or.halted(), "case {case} ({engine:?})");
+        assert_eq!(c_fast.halted_on_exit(), c_or.halted_on_exit(), "case {case} ({engine:?})");
+        assert_eq!(c_fast.trap(), c_or.trap(), "case {case} ({engine:?}): trap diverges");
+        // The whole architectural context in one compare: pc, x/f/p
+        // register files, and the format-tagged quire.
+        assert_eq!(c_fast.ctx, c_or.ctx, "case {case} ({engine:?}): context diverges");
+        assert_eq!(c_fast.mem.bytes(), c_or.mem.bytes(), "case {case} ({engine:?}): memory diverges");
+    }
 }
 
 #[test]
-fn fuzz_differential_superblock_vs_oracle() {
+fn fuzz_differential_all_engines_vs_oracle() {
     let mut rng = Rng::new(0xD1FF_2024);
     for case in 0..80u64 {
         let body = 40 + rng.below(260) as usize;
@@ -369,8 +374,8 @@ fn trapping_program(rng: &mut Rng, kind: u64, lead: usize) -> (Vec<Instr>, u64) 
 fn fuzz_trapping_programs_trap_identically() {
     // Robustness pin: OOB accesses, misalignment, torn quire walks and
     // illegal opcodes all latch the *same* trap at the *same* retired
-    // instruction count on both engines, never a clean exit, never a
-    // panic — and the faulting instruction itself does not retire.
+    // instruction count on all three engines, never a clean exit, never
+    // a panic — and the faulting instruction itself does not retire.
     let mut rng = Rng::new(0x7A4B_0001);
     for case in 0..60u64 {
         let kind = case % 7;
@@ -379,20 +384,22 @@ fn fuzz_trapping_programs_trap_identically() {
         let instrs: Arc<[Instr]> = prog.into();
         let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
         assert_identical(1000 + case, &instrs, &data);
-        let (stats, core) = run_engine(&instrs, &data, Engine::Superblock);
-        let trap = core.trap();
-        assert!(trap.is_some(), "case {case} (kind {kind}): expected a trap, got none");
-        assert!(core.halted(), "case {case}: trapped core must be halted");
-        assert!(!core.halted_on_exit(), "case {case}: a trap is not a clean exit");
-        assert_eq!(
-            core.halt_cause(),
-            Some(HaltCause::Trap(trap.unwrap())),
-            "case {case}: halt cause must carry the trap"
-        );
-        assert_eq!(
-            stats.instret, retired,
-            "case {case}: the faulting instruction must not retire"
-        );
+        for engine in [Engine::Superblock, Engine::Translated] {
+            let (stats, core) = run_engine(&instrs, &data, engine);
+            let trap = core.trap();
+            assert!(trap.is_some(), "case {case} (kind {kind}, {engine:?}): expected a trap");
+            assert!(core.halted(), "case {case} ({engine:?}): trapped core must be halted");
+            assert!(!core.halted_on_exit(), "case {case} ({engine:?}): a trap is not a clean exit");
+            assert_eq!(
+                core.halt_cause(),
+                Some(HaltCause::Trap(trap.unwrap())),
+                "case {case} ({engine:?}): halt cause must carry the trap"
+            );
+            assert_eq!(
+                stats.instret, retired,
+                "case {case} ({engine:?}): the faulting instruction must not retire"
+            );
+        }
     }
 }
 
@@ -442,5 +449,80 @@ fn fused_loop_alias_cases_match_oracle() {
         let instrs = Arc::clone(&prog.instrs);
         let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
         assert_identical(999, &instrs, &data);
+    }
+}
+
+#[test]
+fn program_reloads_do_not_reuse_stale_translations() {
+    // Translation-cache pin: a long-lived core hot-swapping between
+    // programs that alias the same PC range (exactly what the multi-hart
+    // scheduler does on every context switch) must resolve translations
+    // by program *identity*, never by address — and must keep hitting
+    // the LRU cache on cyclic reloads. Three long-lived cores (one per
+    // engine) walk the same load → seed → run sequence in lockstep;
+    // stats, context and memory must agree after every phase.
+    let dot = r#"
+        li t2, 0x1000
+        li t3, 0x1400
+        li s2, 24
+        qclr.s
+    loop_k:
+        plw p0, 0(t2)
+        plw p1, 0(t3)
+        qmadd.s p0, p1
+        addi t2, t2, 4
+        addi t3, t3, 4
+        addi s2, s2, -1
+        bnez s2, loop_k
+        qround.s p2
+        psw p2, 0(t2)
+        ecall
+    "#;
+    // Same shape at the same addresses, different semantics: a qmsub
+    // loop at 16 bits with different strides and an integer store.
+    let msub = r#"
+        li t2, 0x1000
+        li t3, 0x1400
+        li s2, 24
+        qclr.h
+    loop_k:
+        plh p0, 0(t2)
+        plh p1, 0(t3)
+        qmsub.h p0, p1
+        addi t2, t2, 2
+        addi t3, t3, 2
+        addi s2, s2, -1
+        bnez s2, loop_k
+        qround.h p3
+        sw s2, 8(t2)
+        ecall
+    "#;
+    let prog_a = Arc::clone(&assemble(dot).expect("assembles").instrs);
+    let prog_b = Arc::clone(&assemble(msub).expect("assembles").instrs);
+    // A fresh allocation over identical text: the same program to the
+    // architecture, a different cache key to the engines — it must
+    // translate afresh and behave exactly like `prog_a`.
+    let prog_a2: Arc<[Instr]> = prog_a.iter().copied().collect::<Vec<_>>().into();
+
+    let mk = |engine| {
+        Core::new(CoreConfig { mem_size: 1 << 16, max_instrs: 20_000, engine, ..Default::default() })
+    };
+    let mut cores = [mk(Engine::Oracle), mk(Engine::Superblock), mk(Engine::Translated)];
+    let mut rng = Rng::new(0x57A1E);
+    let sequence = [&prog_a, &prog_b, &prog_a, &prog_a2, &prog_b, &prog_a];
+    for (phase, prog) in sequence.into_iter().enumerate() {
+        let data: Vec<u64> = (0..DATA_WORDS).map(|_| rng.next_u64()).collect();
+        let mut outs = Vec::new();
+        for core in cores.iter_mut() {
+            core.load_instrs(Arc::clone(prog));
+            for (i, w) in data.iter().enumerate() {
+                core.mem.write_u64(DATA_BASE + 8 * i as u64, *w);
+            }
+            let stats = core.run();
+            assert!(core.halted_on_exit(), "phase {phase}: program must exit cleanly");
+            outs.push((stats, core.ctx.clone(), core.mem.bytes().to_vec()));
+        }
+        assert_eq!(outs[0], outs[1], "phase {phase}: superblock diverges from oracle");
+        assert_eq!(outs[0], outs[2], "phase {phase}: translated diverges from oracle");
     }
 }

@@ -285,8 +285,8 @@ fn corrupted_checkpoint_recovers_from_scratch() {
 fn fault_handling_is_engine_identical() {
     // The whole fault pipeline — kill, migration, checkpoint restore,
     // injected trap, retry backoff — is driven off cycle/instret at
-    // quantum boundaries, so the superblock and oracle engines must
-    // agree on every report field.
+    // quantum boundaries, so all three engines (superblock, translated,
+    // and the per-instruction oracle) must agree on every report field.
     let jobs = gemm_jobs(4, 6, 0xEE);
     let plan = FaultPlan {
         kill_harts: vec![HartKill { hart: 1, at_cycle: 700 }],
@@ -294,7 +294,7 @@ fn fault_handling_is_engine_identical() {
         corrupt_checkpoints: vec![2],
     };
     let mut reports = Vec::new();
-    for engine in [Engine::Superblock, Engine::Oracle] {
+    for engine in [Engine::Superblock, Engine::Translated, Engine::Oracle] {
         let pool = SimPoolConfig {
             harts: 2,
             quantum: 80,
@@ -305,17 +305,19 @@ fn fault_handling_is_engine_identical() {
         };
         reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
     }
-    let (a, b) = (&reports[0], &reports[1]);
-    assert_eq!(a.makespan_s, b.makespan_s);
-    for (x, y) in a.jobs.iter().zip(&b.jobs) {
-        assert_eq!(x.bits64, y.bits64);
-        assert_eq!(x.completion_s, y.completion_s);
-        assert_eq!((x.hart, x.retries, x.migrations, x.checkpoints), (y.hart, y.retries, y.migrations, y.checkpoints));
-        assert_eq!(x.error.is_some(), y.error.is_some());
-    }
-    for (x, y) in a.harts.iter().zip(&b.harts) {
-        assert_eq!(x.stats, y.stats);
-        assert_eq!(x.alive, y.alive);
+    let a = &reports[0];
+    for b in &reports[1..] {
+        assert_eq!(a.makespan_s, b.makespan_s);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.bits64, y.bits64);
+            assert_eq!(x.completion_s, y.completion_s);
+            assert_eq!((x.hart, x.retries, x.migrations, x.checkpoints), (y.hart, y.retries, y.migrations, y.checkpoints));
+            assert_eq!(x.error.is_some(), y.error.is_some());
+        }
+        for (x, y) in a.harts.iter().zip(&b.harts) {
+            assert_eq!(x.stats, y.stats);
+            assert_eq!(x.alive, y.alive);
+        }
     }
 }
 

@@ -2,21 +2,37 @@
 # Perf-regression gate over BENCH_posit_kernels.json (see ROADMAP.md).
 #
 # Compares the freshly generated bench JSON against a baseline and fails
-# (exit 1) when any gated row's ns_per_op regressed by more than the
-# threshold. A missing baseline — or a baseline without a given row —
-# passes that row trivially, so the gate can be wired into CI
-# (non-blocking) before any baseline numbers land in the repo.
+# (exit 1) on a regression in any gated row. A missing baseline — or a
+# baseline without a given row — passes that row trivially, so the gate
+# can be wired into CI (non-blocking) before any baseline numbers land
+# in the repo.
 #
-# Gated rows (comma-separated, overridable via $3):
-#   gemm256_p32_quire_kernel  — the native decode-once kernel headline
-#   gemm_sim_p32_quire_n64    — the superblock simulator host-time row
+# Two row kinds, chosen by prefix:
+#   x:<row> — gate on the row's `speedup_x` field, failing when the
+#             fresh ratio *drops* more than the threshold below the
+#             baseline. Every speedup_x is a same-machine, same-run
+#             ratio (kernel vs naive, engine vs engine, checkpointed vs
+#             not), so it is machine-invariant and safe to gate tightly
+#             even when the baseline was recorded on different hardware.
+#   <row>   — legacy absolute gate on `ns_per_op`, failing when the
+#             fresh value *rises* more than the threshold above the
+#             baseline. Only trustworthy when baseline and fresh run on
+#             the same machine class.
+#
+# Default gated rows (comma-separated, overridable via $3):
+#   x:gemm256_p32_quire_kernel    — native decode-once kernel vs naive
+#   x:gemm_sim_p32_quire_n64      — superblock engine vs oracle
+#   x:gemm_sim_p32_quire_n128_tx  — translated engine vs superblock
+#   x:gemm_sim_sched_ckpt_n16x4   — checkpointed vs uncheckpointed
+#                                   makespan (deterministic simulated
+#                                   ratio)
 #
 # Usage: bench_compare.sh [fresh.json] [baseline.json] [rows] [threshold-%]
 set -euo pipefail
 
 fresh="${1:-BENCH_posit_kernels.json}"
 baseline="${2:-}"
-rows="${3:-gemm256_p32_quire_kernel,gemm_sim_p32_quire_n64}"
+rows="${3:-x:gemm256_p32_quire_kernel,x:gemm_sim_p32_quire_n64,x:gemm_sim_p32_quire_n128_tx,x:gemm_sim_sched_ckpt_n16x4}"
 threshold="${4:-25}"
 
 if [ ! -f "$fresh" ]; then
@@ -28,40 +44,66 @@ if [ -z "$baseline" ] || [ ! -f "$baseline" ]; then
     exit 0
 fi
 
-# Rows are one JSON object per line: {"bench": "...", ..., "ns_per_op": X}.
-# The `|| true` keeps a missing row from tripping errexit/pipefail — the
-# callers below handle the empty-string case explicitly.
-ns_per_op() {
+# Rows are one JSON object per line: {"bench": "...", ..., "ns_per_op": X,
+# "speedup_x": Y}. The `|| true` keeps a missing row from tripping
+# errexit/pipefail — the callers below handle the empty-string case
+# explicitly.
+field() {
     { grep -o "{\"bench\": \"$2\"[^}]*}" "$1" || true; } \
-        | sed -n 's/.*"ns_per_op": *\([0-9.eE+-]*\).*/\1/p' \
+        | sed -n "s/.*\"$3\": *\([0-9.eE+-]*\).*/\1/p" \
         | head -n 1
 }
 
 fail=0
-for row in ${rows//,/ }; do
-    new=$(ns_per_op "$fresh" "$row")
-    old=$(ns_per_op "$baseline" "$row")
+for spec in ${rows//,/ }; do
+    case "$spec" in
+        x:*)
+            row="${spec#x:}"
+            metric="speedup_x"
+            ;;
+        *)
+            row="$spec"
+            metric="ns_per_op"
+            ;;
+    esac
+    new=$(field "$fresh" "$row" "$metric")
+    old=$(field "$baseline" "$row" "$metric")
 
     if [ -z "$old" ]; then
-        echo "bench_compare: baseline has no '$row' row — skipping (PASS)"
+        echo "bench_compare: baseline has no '$row' $metric — skipping (PASS)"
         continue
     fi
     if [ -z "$new" ]; then
-        echo "bench_compare: fresh run is missing the '$row' row" >&2
+        echo "bench_compare: fresh run is missing the '$row' $metric" >&2
         fail=1
         continue
     fi
 
-    echo "bench_compare: $row ns_per_op baseline=$old fresh=$new (threshold +$threshold%)"
-    awk -v old="$old" -v new="$new" -v pct="$threshold" -v row="$row" 'BEGIN {
-        limit = old * (1 + pct / 100.0);
-        if (new > limit) {
-            printf("bench_compare: FAIL %s — %.3f ns/op exceeds %.3f (baseline %.3f +%s%%)\n",
+    echo "bench_compare: $row $metric baseline=$old fresh=$new (threshold $threshold%)"
+    if [ "$metric" = "speedup_x" ]; then
+        # Ratio gate: the fresh speedup may not fall below
+        # baseline * (1 - threshold%).
+        awk -v old="$old" -v new="$new" -v pct="$threshold" -v row="$row" 'BEGIN {
+            limit = old * (1 - pct / 100.0);
+            if (new < limit) {
+                printf("bench_compare: FAIL %s — %.3fx speedup below %.3fx (baseline %.3fx -%s%%)\n",
+                       row, new, limit, old, pct);
+                exit 1;
+            }
+            printf("bench_compare: PASS %s — %.3fx speedup within %.3fx (baseline %.3fx -%s%%)\n",
                    row, new, limit, old, pct);
-            exit 1;
-        }
-        printf("bench_compare: PASS %s — %.3f ns/op within %.3f (baseline %.3f +%s%%)\n",
-               row, new, limit, old, pct);
-    }' || fail=1
+        }' || fail=1
+    else
+        awk -v old="$old" -v new="$new" -v pct="$threshold" -v row="$row" 'BEGIN {
+            limit = old * (1 + pct / 100.0);
+            if (new > limit) {
+                printf("bench_compare: FAIL %s — %.3f ns/op exceeds %.3f (baseline %.3f +%s%%)\n",
+                       row, new, limit, old, pct);
+                exit 1;
+            }
+            printf("bench_compare: PASS %s — %.3f ns/op within %.3f (baseline %.3f +%s%%)\n",
+                   row, new, limit, old, pct);
+        }' || fail=1
+    fi
 done
 exit "$fail"
