@@ -1,9 +1,13 @@
 //! Coordinator throughput bench: GEMM jobs/s across worker counts and
-//! backends (the L3 request path).
+//! backends (the L3 request path), plus the host-parallel hart pool vs
+//! the serial scheduler on the same simulated batch.
 
 use percival::bench::harness::{bench, write_bench_json, JsonRow};
-use percival::coordinator::sched::run_batch_sim;
-use percival::coordinator::{Backend, Coordinator, Format, Job, SimPoolConfig};
+use percival::coordinator::sched::{run_batch_parallel, run_batch_serial};
+use percival::coordinator::{
+    Backend, Engine, Format, Job, JobSpec, Service, ServiceConfig, SimPoolConfig,
+};
+use percival::core::CoreConfig;
 use percival::posit::convert::from_f64_n;
 use percival::posit::Posit32;
 use percival::testing::Rng;
@@ -16,60 +20,81 @@ fn job(rng: &mut Rng, n: usize) -> Job {
     Job::GemmP32 { n, a, b, quire: true }
 }
 
+/// `count` tagged P32 quire GEMM specs for the sim scheduler benches.
+fn sim_specs(rng: &mut Rng, count: usize, n: usize) -> Vec<JobSpec> {
+    (0..count)
+        .map(|_| {
+            let a: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+            let b: Vec<u64> =
+                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+            JobSpec::gemm(Format::P32, n, a, b, true)
+        })
+        .collect()
+}
+
 fn main() {
     let n = 32;
     let jobs = 64;
     for workers in [1usize, 2, 4, 8] {
         let mut rng = Rng::new(0xC0);
-        let co = Coordinator::new(workers, Some("artifacts".into()));
+        let svc = Service::new(ServiceConfig {
+            native_workers: workers,
+            artifacts_dir: Some("artifacts".into()),
+            ..Default::default()
+        });
         let r = bench(&format!("native gemm32 x{jobs}, {workers} workers"), 1, 5, || {
-            let rxs: Vec<_> =
-                (0..jobs).map(|_| co.submit(job(&mut rng, n), Backend::Native)).collect();
-            for rx in rxs {
-                rx.recv().unwrap().expect("ok");
+            let handles: Vec<_> = (0..jobs)
+                .map(|_| {
+                    svc.submit(JobSpec::new(job(&mut rng, n)).backend(Backend::Native))
+                        .expect("job admits")
+                })
+                .collect();
+            for h in handles {
+                h.wait().expect("ok");
             }
         });
         println!("  → {:.0} jobs/s", jobs as f64 / r.mean_s);
-        co.shutdown();
+        svc.shutdown();
     }
 
     // PJRT backend latency (if artifacts are built).
-    let co = Coordinator::new(1, Some("artifacts".into()));
+    let svc = Service::new(ServiceConfig {
+        native_workers: 1,
+        artifacts_dir: Some("artifacts".into()),
+        ..Default::default()
+    });
     let mut rng = Rng::new(0xC1);
-    let probe = co.run(job(&mut rng, 8), Backend::Pjrt);
+    let probe = svc
+        .submit(JobSpec::new(job(&mut rng, 8)).backend(Backend::Pjrt))
+        .and_then(|h| h.wait());
     if probe.is_ok() {
         let r = bench("pjrt gemm8 single-worker", 1, 5, || {
-            co.run(job(&mut rng, 8), Backend::Pjrt).expect("ok");
+            svc.submit(JobSpec::new(job(&mut rng, 8)).backend(Backend::Pjrt))
+                .expect("job admits")
+                .wait()
+                .expect("ok");
         });
         println!("  → {:.1} ms/job", r.mean_s * 1e3);
     } else {
         println!("pjrt backend skipped (artifacts not built)");
     }
-    co.shutdown();
+    svc.shutdown();
 
     // Checkpoint overhead on the multi-hart Sim scheduler: the same
     // batch with periodic checkpointing on vs off. The makespans are
     // simulated cycles (deterministic), so the tracked row regresses
     // only if the checkpoint path itself gets more expensive.
     let mut rng = Rng::new(0xC2);
-    let n = 16;
-    let sched_jobs: Vec<Job> = (0..4)
-        .map(|_| {
-            let a: Vec<u64> =
-                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
-            let b: Vec<u64> =
-                (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
-            Job::Gemm { fmt: Format::P32, n, a, b, quire: true }
-        })
-        .collect();
+    let sched_specs = sim_specs(&mut rng, 4, 16);
     let base_pool = SimPoolConfig { harts: 2, quantum: 1_000, ..Default::default() };
     let ckpt_pool =
         SimPoolConfig { harts: 2, quantum: 1_000, checkpoint_quanta: 4, ..Default::default() };
-    let base = run_batch_sim(&sched_jobs, &base_pool).expect("base batch");
+    let base = run_batch_serial(&sched_specs, &base_pool).expect("base batch");
     bench("sim sched gemm16 x4, ckpt every 4 quanta", 1, 3, || {
-        run_batch_sim(&sched_jobs, &ckpt_pool).expect("ckpt batch");
+        run_batch_serial(&sched_specs, &ckpt_pool).expect("ckpt batch");
     });
-    let ckpt = run_batch_sim(&sched_jobs, &ckpt_pool).expect("ckpt batch");
+    let ckpt = run_batch_serial(&sched_specs, &ckpt_pool).expect("ckpt batch");
     let overhead =
         ckpt.makespan_cycles() as f64 / base.makespan_cycles().max(1) as f64 - 1.0;
     println!(
@@ -81,14 +106,64 @@ fn main() {
     // Tracked row: simulated (deterministic) makespan with checkpoints
     // on; `speedup_x` carries the no-checkpoint/checkpoint ratio, so a
     // drop below ~0.9 means the overhead gate is in danger.
-    let row = JsonRow {
+    let ckpt_row = JsonRow {
         bench: "gemm_sim_sched_ckpt_n16x4".into(),
         mean_s: ckpt.makespan_s,
-        ns_per_op: ckpt.makespan_s * 1e9 / sched_jobs.len() as f64,
+        ns_per_op: ckpt.makespan_s * 1e9 / sched_specs.len() as f64,
         speedup_x: Some(base.makespan_s / ckpt.makespan_s),
     };
-    match write_bench_json("BENCH_posit_kernels.json", &[row]) {
-        Ok(()) => println!("  wrote 1 row to BENCH_posit_kernels.json"),
+
+    // Host-parallel hart pool vs the serial scheduler: same batch, same
+    // virtual time, same bits and per-hart stats — the only thing allowed
+    // to change is the host wall clock. `speedup_x` tracks the ratio.
+    let mut rng = Rng::new(0xC3);
+    let pool_specs = sim_specs(&mut rng, 8, 64);
+    let pool = SimPoolConfig {
+        harts: 4,
+        quantum: 25_000,
+        core: CoreConfig { engine: Engine::Translated, ..CoreConfig::default() },
+        ..Default::default()
+    };
+    let serial = run_batch_serial(&pool_specs, &pool).expect("serial batch");
+    let parallel = run_batch_parallel(&pool_specs, &pool).expect("parallel batch");
+    assert_eq!(serial.makespan_s, parallel.makespan_s, "pool changed virtual time");
+    for (s, p) in serial.jobs.iter().zip(&parallel.jobs) {
+        assert_eq!(s.bits64, p.bits64, "pool changed job bits");
+        assert_eq!(s.completion_s, p.completion_s, "pool changed job timing");
+    }
+    for (s, p) in serial.harts.iter().zip(&parallel.harts) {
+        assert_eq!(s.stats, p.stats, "pool changed hart stats");
+    }
+    let rs = bench("sim pool serial  gemm64 x8 (p32 quire)", 1, 3, || {
+        run_batch_serial(&pool_specs, &pool).expect("serial batch");
+    });
+    let rp = bench("sim pool 4 harts gemm64 x8 (p32 quire)", 1, 3, || {
+        run_batch_parallel(&pool_specs, &pool).expect("parallel batch");
+    });
+    let speedup = rs.mean_s / rp.mean_s;
+    println!("  → host-parallel pool speedup {speedup:.2}x over the serial scheduler");
+    let host_cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let min_x: f64 = std::env::var("SVC_POOL_GATE_MIN_X")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.0);
+    if host_cores >= 4 {
+        assert!(
+            speedup >= min_x,
+            "host-parallel pool too slow: {speedup:.2}x < {min_x:.2}x on {host_cores} host cores"
+        );
+    } else {
+        println!("  (pool speedup gate skipped: only {host_cores} host cores)");
+    }
+    let pool_row = JsonRow {
+        bench: "gemm_sim_svc_pool_p32_n64".into(),
+        mean_s: rp.mean_s,
+        ns_per_op: rp.mean_s * 1e9 / pool_specs.len() as f64,
+        speedup_x: Some(speedup),
+    };
+
+    match write_bench_json("BENCH_posit_kernels.json", &[ckpt_row, pool_row]) {
+        Ok(()) => println!("  wrote 2 rows to BENCH_posit_kernels.json"),
         Err(e) => eprintln!("  could not write BENCH_posit_kernels.json: {e}"),
     }
 }

@@ -17,8 +17,10 @@
 use percival::bench::gemm::{gen_matrix, run_gemm_sim, GemmVariant};
 use percival::bench::harness::fmt_time;
 use percival::bench::mse::{gemm_native, mse, NativeKind};
+use percival::coordinator::sched::{run_batch_parallel, run_batch_serial};
 use percival::coordinator::{
-    Backend, Coordinator, FaultPlan, Format, HartKill, Job, SimPoolConfig,
+    json, Backend, Coordinator, FaultPlan, Format, HartKill, Job, JobSpec, Priority, Service,
+    ServiceConfig, SimPoolConfig,
 };
 use percival::core::CoreConfig;
 use percival::posit::convert::from_f64_n;
@@ -138,8 +140,9 @@ fn main() -> percival::error::Result<()> {
         jobs.push(Job::Gemm { fmt, n: jn, a: a.clone(), b: b.clone(), quire: true });
         jobs.push(Job::Dot { fmt, a, b });
     }
+    let specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
     let pool = SimPoolConfig { harts: 2, quantum: 400, ..Default::default() };
-    let report = co.run_batch_sim(&jobs, &pool)?;
+    let report = run_batch_serial(&specs, &pool)?;
     for (i, (job, out)) in jobs.iter().zip(&report.jobs).enumerate() {
         let native = co.run(job.clone(), Backend::Native)?;
         assert_eq!(out.bits64, native.bits64, "job {i} diverges from Native under preemption");
@@ -170,6 +173,17 @@ fn main() -> percival::error::Result<()> {
         );
     }
 
+    // The same batch on the host-parallel pool: each simulated hart runs
+    // on its own OS thread, and every bit, virtual cycle, and counter
+    // must match the serial schedule exactly.
+    let par = run_batch_parallel(&specs, &pool)?;
+    assert_eq!(par.makespan_s, report.makespan_s, "parallel pool changed virtual time");
+    for (i, (s, p)) in report.jobs.iter().zip(&par.jobs).enumerate() {
+        assert_eq!(s.bits64, p.bits64, "job {i} bits diverge on the parallel pool");
+        assert_eq!(s.completion_s, p.completion_s, "job {i} timing diverges");
+    }
+    println!("  host-parallel pool replayed the schedule bit- and cycle-exactly ✓");
+
     // Fault-injection leg: rerun the batch with checkpointing on and one
     // hart killed mid-flight. The orphaned jobs migrate to the survivor
     // and resume from their last checkpoint — and the bits must *still*
@@ -185,7 +199,7 @@ fn main() -> percival::error::Result<()> {
         },
         ..Default::default()
     };
-    let recovered = co.run_batch_sim(&jobs, &faulty)?;
+    let recovered = run_batch_serial(&specs, &faulty)?;
     for (i, (clean, out)) in report.jobs.iter().zip(&recovered.jobs).enumerate() {
         assert!(out.error.is_none(), "job {i} failed to recover: {:?}", out.error);
         assert_eq!(out.bits64, clean.bits64, "job {i} bits changed across hart failure");
@@ -217,6 +231,35 @@ fn main() -> percival::error::Result<()> {
     );
 
     co.shutdown();
+
+    // Service leg: the long-running submission API. One high-priority
+    // Sim job streams Queued → Started → Checkpointed* → Done, and both
+    // the request and every event render through the versioned wire
+    // schema (`coordinator::json`).
+    println!("\n=== coordinator service (streaming submission API) ===");
+    let svc = Service::new(ServiceConfig {
+        native_workers: 2,
+        pool: SimPoolConfig { harts: 2, quantum: 400, checkpoint_quanta: 2, ..Default::default() },
+        ..Default::default()
+    });
+    let jn = 8;
+    let a: Vec<u64> = (0..jn * jn).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+    let b: Vec<u64> = (0..jn * jn).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+    let spec = JobSpec::gemm(Format::P32, jn, a, b, true)
+        .backend(Backend::Sim)
+        .priority(Priority::High)
+        .deadline(50_000_000);
+    println!("  request: {}", json::job_request(&spec));
+    let handle = svc.submit(spec)?;
+    while let Some(ev) = handle.recv() {
+        let terminal = ev.is_terminal();
+        println!("  event:   {}", json::event_frame(&ev));
+        if terminal {
+            break;
+        }
+    }
+    svc.shutdown();
+
     println!("\nEND-TO-END: all legs agree bit-for-bit ✓");
     Ok(())
 }

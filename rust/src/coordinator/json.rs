@@ -1,10 +1,27 @@
-//! Minimal JSON reader for the oracle test vectors (`artifacts/vectors/`).
+//! Minimal JSON layer: reader for the oracle test vectors
+//! (`artifacts/vectors/`) **and the coordinator service's wire format**.
 //!
-//! serde_json is not in the offline crate set; the vectors only use
-//! objects, arrays, integers and strings, so a ~150-line recursive-descent
-//! parser suffices (numbers are parsed as f64 when fractional, i64/u64
-//! otherwise).
+//! serde_json is not in the offline crate set; the payloads only use
+//! objects, arrays, numbers and strings, so a recursive-descent parser
+//! plus a `Display` writer suffice. The writer emits object keys in
+//! sorted order, so serialization is deterministic (pinned by the
+//! round-trip tests below).
+//!
+//! The service protocol is versioned ([`WIRE_VERSION`]):
+//!
+//! - Submission requests — [`job_request`] / [`parse_job_request`]:
+//!   `{"v":1,"job":{"kind":"gemm","fmt":"posit32","n":4,"quire":true,
+//!   "a":[…],"b":[…],"backend":"sim","priority":"high",
+//!   "deadline_cycles":2000000,"max_retries":3}}` (`deadline_cycles`
+//!   omitted when unset; legacy `GemmP32`/`DotP32` jobs canonicalize to
+//!   their tagged posit32 forms on the wire).
+//! - Streaming frames — [`event_frame`] / [`parse_event_frame`]:
+//!   `{"v":1,"event":{"type":"done","id":7,"seq":3,"result":{…}}}` for
+//!   each [`JobEvent`] a [`super::JobHandle`] yields.
 
+use super::sched::DEFAULT_MAX_RETRIES;
+use super::service::{JobEvent, JobSpec, Priority};
+use super::{Backend, Format, Job, JobResult};
 use std::collections::HashMap;
 
 /// A parsed JSON value.
@@ -14,6 +31,8 @@ pub enum Value {
     Bool(bool),
     /// Integers (the vectors are bit patterns) — kept exact.
     Int(i64),
+    /// Unsigned integers above `i64::MAX` (64-bit posit patterns).
+    UInt(u64),
     Num(f64),
     Str(String),
     Arr(Vec<Value>),
@@ -24,6 +43,7 @@ impl Value {
     pub fn as_u32(&self) -> Option<u32> {
         match self {
             Value::Int(i) => u32::try_from(*i).ok(),
+            Value::UInt(u) => u32::try_from(*u).ok(),
             _ => None,
         }
     }
@@ -31,6 +51,38 @@ impl Value {
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Value::Int(i) => usize::try_from(*i).ok(),
+            Value::UInt(u) => usize::try_from(*u).ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) => u64::try_from(*i).ok(),
+            Value::UInt(u) => Some(*u),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            Value::UInt(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
             _ => None,
         }
     }
@@ -52,6 +104,80 @@ impl Value {
     /// Convenience: array of u32 bit patterns.
     pub fn u32_vec(&self) -> Option<Vec<u32>> {
         self.arr()?.iter().map(|v| v.as_u32()).collect()
+    }
+
+    /// Convenience: array of u64 bit patterns.
+    pub fn u64_vec(&self) -> Option<Vec<u64>> {
+        self.arr()?.iter().map(|v| v.as_u64()).collect()
+    }
+}
+
+/// The smallest integer representation of a u64 (keeps wire output
+/// `Int` wherever i64 suffices, `UInt` only for 64-bit patterns above
+/// `i64::MAX`).
+fn num_u64(x: u64) -> Value {
+    match i64::try_from(x) {
+        Ok(i) => Value::Int(i),
+        Err(_) => Value::UInt(x),
+    }
+}
+
+fn write_escaped(f: &mut std::fmt::Formatter<'_>, s: &str) -> std::fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
+}
+
+/// The JSON writer: `value.to_string()` emits a compact document that
+/// [`parse`] round-trips. Object keys are sorted, so output is
+/// deterministic regardless of `HashMap` iteration order.
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Null => f.write_str("null"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::UInt(u) => write!(f, "{u}"),
+            // Shortest round-trippable repr; JSON has no non-finite
+            // numbers, so those degrade to null.
+            Value::Num(x) if x.is_finite() => write!(f, "{x:?}"),
+            Value::Num(_) => f.write_str("null"),
+            Value::Str(s) => write_escaped(f, s),
+            Value::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Value::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                f.write_str("{")?;
+                for (i, k) in keys.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{}", m[*k])?;
+                }
+                f.write_str("}")
+            }
+        }
     }
 }
 
@@ -216,12 +342,269 @@ impl<'a> Parser<'a> {
         let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
         if float {
             text.parse::<f64>().map(Value::Num).map_err(|e| e.to_string())
+        } else if let Ok(i) = text.parse::<i64>() {
+            Ok(Value::Int(i))
         } else {
-            // Bit patterns may exceed i64 as unsigned — not in our vectors
-            // (max 2^32−1), so i64 is fine.
-            text.parse::<i64>().map(Value::Int).map_err(|e| e.to_string())
+            // 64-bit posit patterns above i64::MAX arrive as unsigned.
+            text.parse::<u64>().map(Value::UInt).map_err(|e| e.to_string())
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Service wire format (v1)
+// ---------------------------------------------------------------------------
+
+/// Wire-format version stamped as `"v"` on every request and frame.
+pub const WIRE_VERSION: i64 = 1;
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn u64_arr(xs: &[u64]) -> Value {
+    Value::Arr(xs.iter().map(|&x| num_u64(x)).collect())
+}
+
+fn backend_name(b: Backend) -> &'static str {
+    match b {
+        Backend::Sim => "sim",
+        Backend::Native => "native",
+        Backend::Pjrt => "pjrt",
+    }
+}
+
+fn priority_name(p: Priority) -> &'static str {
+    match p {
+        Priority::Low => "low",
+        Priority::Normal => "normal",
+        Priority::High => "high",
+    }
+}
+
+fn fmt_from_name(name: &str) -> crate::error::Result<Format> {
+    for fmt in [Format::P8, Format::P16, Format::P32, Format::P64] {
+        if fmt.name().eq_ignore_ascii_case(name) {
+            return Ok(fmt);
+        }
+    }
+    Err(crate::err!("wire: unknown posit format {name:?}"))
+}
+
+fn req_u64(v: &Value, key: &str) -> crate::error::Result<u64> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| crate::err!("wire: missing or non-integer field {key:?}"))
+}
+
+fn req_str<'v>(v: &'v Value, key: &str) -> crate::error::Result<&'v str> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| crate::err!("wire: missing or non-string field {key:?}"))
+}
+
+fn req_u64_vec(v: &Value, key: &str) -> crate::error::Result<Vec<u64>> {
+    v.get(key)
+        .and_then(Value::u64_vec)
+        .ok_or_else(|| crate::err!("wire: missing or malformed bit array {key:?}"))
+}
+
+fn check_version(v: &Value) -> crate::error::Result<()> {
+    match v.get("v").and_then(Value::as_u64) {
+        Some(ver) if ver == WIRE_VERSION as u64 => Ok(()),
+        Some(ver) => Err(crate::err!("wire: unsupported version {ver} (expected {WIRE_VERSION})")),
+        None => Err(crate::err!("wire: missing version field \"v\"")),
+    }
+}
+
+/// Serialize a [`JobSpec`] as a versioned submission request:
+/// `{"v":1,"job":{...}}`. Legacy `GemmP32`/`DotP32` jobs canonicalize to
+/// their format-tagged posit32 equivalents on the wire.
+pub fn job_request(spec: &JobSpec) -> Value {
+    let mut job = match &spec.job {
+        Job::Gemm { fmt, n, a, b, quire } => vec![
+            ("kind", Value::Str("gemm".into())),
+            ("fmt", Value::Str(fmt.name().into())),
+            ("n", num_u64(*n as u64)),
+            ("quire", Value::Bool(*quire)),
+            ("a", u64_arr(a)),
+            ("b", u64_arr(b)),
+        ],
+        Job::Dot { fmt, a, b } => vec![
+            ("kind", Value::Str("dot".into())),
+            ("fmt", Value::Str(fmt.name().into())),
+            ("a", u64_arr(a)),
+            ("b", u64_arr(b)),
+        ],
+        Job::GemmP32 { n, a, b, quire } => vec![
+            ("kind", Value::Str("gemm".into())),
+            ("fmt", Value::Str(Format::P32.name().into())),
+            ("n", num_u64(*n as u64)),
+            ("quire", Value::Bool(*quire)),
+            ("a", Value::Arr(a.iter().map(|&x| num_u64(x as u64)).collect())),
+            ("b", Value::Arr(b.iter().map(|&x| num_u64(x as u64)).collect())),
+        ],
+        Job::DotP32 { a, b } => vec![
+            ("kind", Value::Str("dot".into())),
+            ("fmt", Value::Str(Format::P32.name().into())),
+            ("a", Value::Arr(a.iter().map(|&x| num_u64(x as u64)).collect())),
+            ("b", Value::Arr(b.iter().map(|&x| num_u64(x as u64)).collect())),
+        ],
+    };
+    job.push(("backend", Value::Str(backend_name(spec.backend).into())));
+    job.push(("priority", Value::Str(priority_name(spec.priority).into())));
+    if let Some(d) = spec.deadline_cycles {
+        job.push(("deadline_cycles", num_u64(d)));
+    }
+    job.push(("max_retries", num_u64(spec.max_retries as u64)));
+    obj(vec![("v", Value::Int(WIRE_VERSION)), ("job", obj(job))])
+}
+
+/// Parse a v1 submission request back into a [`JobSpec`]. Always yields
+/// a format-tagged [`Job::Gemm`]/[`Job::Dot`] (the wire has no legacy
+/// variants). Unknown versions, kinds, formats, backends and priorities
+/// are typed errors.
+pub fn parse_job_request(v: &Value) -> crate::error::Result<JobSpec> {
+    check_version(v)?;
+    let jv = v.get("job").ok_or_else(|| crate::err!("wire: missing \"job\" object"))?;
+    let fmt = fmt_from_name(req_str(jv, "fmt")?)?;
+    let a = req_u64_vec(jv, "a")?;
+    let b = req_u64_vec(jv, "b")?;
+    let job = match req_str(jv, "kind")? {
+        "gemm" => Job::Gemm {
+            fmt,
+            n: req_u64(jv, "n")? as usize,
+            a,
+            b,
+            quire: jv.get("quire").and_then(Value::as_bool).unwrap_or(true),
+        },
+        "dot" => Job::Dot { fmt, a, b },
+        kind => return Err(crate::err!("wire: unknown job kind {kind:?}")),
+    };
+    let backend = match req_str(jv, "backend")? {
+        "sim" => Backend::Sim,
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        be => return Err(crate::err!("wire: unknown backend {be:?}")),
+    };
+    let priority = match req_str(jv, "priority")? {
+        "low" => Priority::Low,
+        "normal" => Priority::Normal,
+        "high" => Priority::High,
+        p => return Err(crate::err!("wire: unknown priority {p:?}")),
+    };
+    let mut spec = JobSpec::new(job).backend(backend).priority(priority);
+    if let Some(d) = jv.get("deadline_cycles").and_then(Value::as_u64) {
+        spec = spec.deadline(d);
+    }
+    let retries = jv.get("max_retries").and_then(Value::as_u64);
+    Ok(spec.retries(retries.map(|r| r as u32).unwrap_or(DEFAULT_MAX_RETRIES)))
+}
+
+fn result_obj(r: &JobResult) -> Value {
+    let mut fields = vec![
+        ("backend", Value::Str(backend_name(r.backend).into())),
+        ("bits64", u64_arr(&r.bits64)),
+        ("elapsed_s", Value::Num(r.elapsed_s)),
+    ];
+    if let Some(s) = r.sim_seconds {
+        fields.push(("sim_seconds", Value::Num(s)));
+    }
+    obj(fields)
+}
+
+fn parse_result_obj(v: &Value) -> crate::error::Result<JobResult> {
+    let backend = match req_str(v, "backend")? {
+        "sim" => Backend::Sim,
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt,
+        be => return Err(crate::err!("wire: unknown backend {be:?}")),
+    };
+    let bits64 = req_u64_vec(v, "bits64")?;
+    // The u32 view mirrors `bits64` whenever every pattern fits (the
+    // constructor's rule, keyed on format width — unavailable here, so
+    // keyed on the data instead; only Posit64 patterns overflow u32).
+    let bits = if bits64.iter().all(|&x| u32::try_from(x).is_ok()) {
+        bits64.iter().map(|&x| x as u32).collect()
+    } else {
+        Vec::new()
+    };
+    Ok(JobResult {
+        bits,
+        bits64,
+        backend,
+        elapsed_s: v.get("elapsed_s").and_then(Value::as_f64).unwrap_or(0.0),
+        sim_seconds: v.get("sim_seconds").and_then(Value::as_f64),
+    })
+}
+
+/// Serialize a streamed [`JobEvent`] as a versioned frame:
+/// `{"v":1,"event":{"type":...,"id":...}}`.
+pub fn event_frame(ev: &JobEvent) -> Value {
+    let event = match ev {
+        JobEvent::Queued { id } => {
+            vec![("type", Value::Str("queued".into())), ("id", num_u64(*id))]
+        }
+        JobEvent::Started { id, hart } => vec![
+            ("type", Value::Str("started".into())),
+            ("id", num_u64(*id)),
+            ("hart", num_u64(*hart as u64)),
+        ],
+        JobEvent::Checkpointed { id, count } => vec![
+            ("type", Value::Str("checkpointed".into())),
+            ("id", num_u64(*id)),
+            ("count", num_u64(*count)),
+        ],
+        JobEvent::Migrated { id, from, to } => vec![
+            ("type", Value::Str("migrated".into())),
+            ("id", num_u64(*id)),
+            ("from", num_u64(*from as u64)),
+            ("to", num_u64(*to as u64)),
+        ],
+        JobEvent::Done { id, seq, result } => vec![
+            ("type", Value::Str("done".into())),
+            ("id", num_u64(*id)),
+            ("seq", num_u64(*seq)),
+            ("result", result_obj(result)),
+        ],
+        JobEvent::Failed { id, seq, error } => vec![
+            ("type", Value::Str("failed".into())),
+            ("id", num_u64(*id)),
+            ("seq", num_u64(*seq)),
+            ("error", Value::Str(error.to_string())),
+        ],
+    };
+    obj(vec![("v", Value::Int(WIRE_VERSION)), ("event", obj(event))])
+}
+
+/// Parse a v1 streaming frame back into a [`JobEvent`].
+pub fn parse_event_frame(v: &Value) -> crate::error::Result<JobEvent> {
+    check_version(v)?;
+    let ev = v.get("event").ok_or_else(|| crate::err!("wire: missing \"event\" object"))?;
+    let id = req_u64(ev, "id")?;
+    Ok(match req_str(ev, "type")? {
+        "queued" => JobEvent::Queued { id },
+        "started" => JobEvent::Started { id, hart: req_u64(ev, "hart")? as usize },
+        "checkpointed" => JobEvent::Checkpointed { id, count: req_u64(ev, "count")? },
+        "migrated" => JobEvent::Migrated {
+            id,
+            from: req_u64(ev, "from")? as usize,
+            to: req_u64(ev, "to")? as usize,
+        },
+        "done" => JobEvent::Done {
+            id,
+            seq: req_u64(ev, "seq")?,
+            result: parse_result_obj(
+                ev.get("result").ok_or_else(|| crate::err!("wire: done frame missing result"))?,
+            )?,
+        },
+        "failed" => JobEvent::Failed {
+            id,
+            seq: req_u64(ev, "seq")?,
+            error: crate::error::Error::msg(req_str(ev, "error")?),
+        },
+        ty => return Err(crate::err!("wire: unknown event type {ty:?}")),
+    })
 }
 
 #[cfg(test)]
@@ -262,5 +645,107 @@ mod tests {
         assert_eq!(v.u32_vec(), Some(vec![1, 2, u32::MAX]));
         let bad = parse("[1, -2]").unwrap();
         assert_eq!(bad.u32_vec(), None);
+    }
+
+    #[test]
+    fn writer_round_trips_and_is_deterministic() {
+        let src = r#"{"b":[1,-2,3.5,null,true],"a":"q\"\\\n\tz","c":{"k":18446744073709551615}}"#;
+        let v = parse(src).unwrap();
+        // Writer output re-parses to the same tree…
+        assert_eq!(parse(&v.to_string()).unwrap(), v);
+        // …and is byte-stable (sorted keys), independent of HashMap order.
+        assert_eq!(v.to_string(), parse(&v.to_string()).unwrap().to_string());
+    }
+
+    #[test]
+    fn u64_patterns_above_i64_max_survive() {
+        let v = parse("[9223372036854775807, 9223372036854775808, 18446744073709551615]").unwrap();
+        assert_eq!(v.u64_vec(), Some(vec![i64::MAX as u64, 1 << 63, u64::MAX]));
+        assert_eq!(v.arr().unwrap()[1], Value::UInt(1 << 63));
+        assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn control_chars_escape_as_unicode() {
+        let v = Value::Str("a\u{1}b".into());
+        assert_eq!(v.to_string(), "\"a\\u0001b\"");
+        assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn job_request_round_trips() {
+        let spec = JobSpec::gemm(Format::P64, 2, vec![u64::MAX; 4], vec![1; 4], true)
+            .backend(Backend::Sim)
+            .priority(Priority::High)
+            .deadline(2_000_000)
+            .retries(5);
+        let wire = job_request(&spec).to_string();
+        assert_eq!(parse_job_request(&parse(&wire).unwrap()).unwrap(), spec);
+
+        let dot = JobSpec::dot(Format::P16, vec![3, 4], vec![5, 6]).backend(Backend::Native);
+        let wire = job_request(&dot).to_string();
+        assert_eq!(parse_job_request(&parse(&wire).unwrap()).unwrap(), dot);
+    }
+
+    #[test]
+    fn legacy_jobs_canonicalize_on_the_wire() {
+        let legacy =
+            JobSpec::new(Job::GemmP32 { n: 1, a: vec![7], b: vec![9], quire: false });
+        let back = parse_job_request(&job_request(&legacy)).unwrap();
+        assert_eq!(
+            back.job,
+            Job::Gemm { fmt: Format::P32, n: 1, a: vec![7], b: vec![9], quire: false }
+        );
+    }
+
+    #[test]
+    fn requests_reject_bad_versions_and_fields() {
+        let spec = JobSpec::dot(Format::P32, vec![1], vec![2]);
+        let mut v = job_request(&spec);
+        if let Value::Obj(m) = &mut v {
+            m.insert("v".into(), Value::Int(99));
+        }
+        assert!(parse_job_request(&v).unwrap_err().to_string().contains("unsupported version"));
+        assert!(parse_job_request(&parse(r#"{"v":1,"job":{"kind":"lu","fmt":"Posit32","backend":"sim","priority":"low","a":[],"b":[]}}"#).unwrap())
+            .unwrap_err()
+            .to_string()
+            .contains("unknown job kind"));
+    }
+
+    #[test]
+    fn event_frames_round_trip() {
+        let result = JobResult {
+            bits: vec![7],
+            bits64: vec![7],
+            backend: Backend::Sim,
+            elapsed_s: 0.25,
+            sim_seconds: Some(1.5e-6),
+        };
+        let events = vec![
+            JobEvent::Queued { id: 1 },
+            JobEvent::Started { id: 1, hart: 3 },
+            JobEvent::Checkpointed { id: 1, count: 2 },
+            JobEvent::Migrated { id: 1, from: 3, to: 0 },
+            JobEvent::Done { id: 1, seq: 0, result },
+            JobEvent::Failed { id: 2, seq: 1, error: crate::err!("deadline missed") },
+        ];
+        for ev in events {
+            let wire = event_frame(&ev).to_string();
+            assert_eq!(parse_event_frame(&parse(&wire).unwrap()).unwrap(), ev, "frame {wire}");
+        }
+    }
+
+    #[test]
+    fn p64_done_frame_keeps_bits64_and_empty_u32_view() {
+        let result = JobResult {
+            bits: Vec::new(),
+            bits64: vec![u64::MAX, 1 << 63],
+            backend: Backend::Sim,
+            elapsed_s: 0.0,
+            sim_seconds: None,
+        };
+        let ev = JobEvent::Done { id: 9, seq: 4, result };
+        let back = parse_event_frame(&parse(&event_frame(&ev).to_string()).unwrap()).unwrap();
+        assert_eq!(back, ev);
     }
 }

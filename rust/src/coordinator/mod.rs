@@ -40,13 +40,28 @@
 //! to survivors, and per-job deadline/retry policies turn every failure
 //! mode into a typed [`sched::SimJobReport::error`] — see the [`sched`]
 //! module doc and [`FaultPlan`].
+//!
+//! Since the service redesign the submission surface is
+//! [`JobSpec`]-centric and lives in [`service`]: a long-running
+//! [`Service`] owns a bounded priority queue (admission control +
+//! reject/block backpressure) over both the native worker pool and a
+//! **host-parallel** simulated hart pool ([`sched::run_batch_parallel`]),
+//! streaming per-job [`JobEvent`]s as work progresses. [`Coordinator`]
+//! remains as a thin convenience wrapper over one `Service`; the old
+//! entry points ([`Coordinator::submit`], [`Coordinator::run_batch`],
+//! [`Coordinator::run_batch_sim`], `sched::run_batch_sim{,_specs}`) are
+//! `#[deprecated]` delegating shims — see the deprecation table in the
+//! [`service`] module doc.
 
 pub mod json;
 pub mod sched;
+pub mod service;
 
 pub use sched::{
-    FaultPlan, HartKill, HartReport, JobSpec, SimBatchReport, SimJobReport, SimPoolConfig,
-    TrapInject,
+    FaultPlan, HartKill, HartReport, SimBatchReport, SimJobReport, SimPoolConfig, TrapInject,
+};
+pub use service::{
+    Backpressure, BatchReport, JobEvent, JobHandle, JobSpec, Priority, Service, ServiceConfig,
 };
 
 use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};
@@ -62,8 +77,8 @@ use crate::posit::unpacked::mask_n;
 use crate::posit::{PositBits, PositFormat, P16, P32, P64, P8};
 use crate::runtime::Runtime;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Which engine executes a job.
@@ -83,7 +98,7 @@ pub enum Backend {
 pub use crate::isa::PositFmt as Format;
 
 /// A numeric job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Job {
     /// Posit32 GEMM (bit patterns, row-major n×n) — legacy fixed-format
     /// variant, equivalent to `Gemm { fmt: Format::P32, … }`.
@@ -98,7 +113,7 @@ pub enum Job {
 }
 
 /// Result of a completed job.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobResult {
     /// Result bit patterns, `u32` view — filled for every format except
     /// Posit64 (whose patterns do not fit; see [`Self::bits64`]).
@@ -158,15 +173,12 @@ impl Metrics {
     }
 }
 
-enum Msg {
-    Run(Job, Backend, Sender<Result<JobResult>>),
-    Stop,
-}
-
-/// The coordinator: a fixed worker pool consuming a shared job queue.
+/// The coordinator: a thin convenience wrapper over one long-running
+/// [`Service`] (which owns the priority queue, the native worker pool
+/// and the host-parallel simulated hart pool). Prefer the [`Service`]
+/// API directly for new code — [`Coordinator::service`] exposes it.
 pub struct Coordinator {
-    tx: Sender<Msg>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    svc: Service,
     /// Engine every Sim-backend job runs on (see
     /// [`Coordinator::with_sim_engine`]) — including multi-hart batches.
     sim_engine: Engine,
@@ -174,8 +186,9 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Spawn `n_workers` workers. `artifacts_dir` enables the PJRT backend
-    /// (jobs routed there fail cleanly if artifacts are missing).
+    /// Spawn `n_workers` native workers (plus the service's sim-pool
+    /// dispatcher). `artifacts_dir` enables the PJRT backend (jobs
+    /// routed there fail cleanly if artifacts are missing).
     /// `Backend::Sim` jobs run on the default superblock engine; use
     /// [`Coordinator::with_sim_engine`] to pin the binary-translated
     /// engine or the oracle instead.
@@ -193,93 +206,73 @@ impl Coordinator {
         artifacts_dir: Option<String>,
         engine: Engine,
     ) -> Self {
-        let (tx, rx) = channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
-        let metrics = Arc::new(Metrics::default());
-        let mut workers = Vec::new();
-        for _ in 0..n_workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let metrics = Arc::clone(&metrics);
-            let dir = artifacts_dir.clone();
-            workers.push(std::thread::spawn(move || {
-                // One PJRT runtime per worker (compilation cache inside).
-                let mut rt: Option<Runtime> = None;
-                loop {
-                    let msg = {
-                        let guard = rx.lock().expect("queue lock");
-                        guard.recv()
-                    };
-                    match msg {
-                        Ok(Msg::Run(job, backend, reply)) => {
-                            let t0 = Instant::now();
-                            let res = execute(&job, backend, &dir, &mut rt, engine);
-                            let dt = t0.elapsed();
-                            metrics.busy_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
-                            match &res {
-                                Ok(_) => {
-                                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                                }
-                                Err(_) => {
-                                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                                }
-                            }
-                            let _ = reply.send(res.map(|mut r| {
-                                r.elapsed_s = dt.as_secs_f64();
-                                r
-                            }));
-                        }
-                        Ok(Msg::Stop) | Err(_) => break,
-                    }
-                }
-            }));
-        }
-        Self { tx, workers, sim_engine: engine, metrics }
+        let pool = SimPoolConfig { core: sim_cfg(engine), ..SimPoolConfig::default() };
+        let svc = Service::new(ServiceConfig {
+            native_workers: n_workers,
+            pool,
+            queue_capacity: 0,
+            backpressure: Backpressure::Block,
+            artifacts_dir,
+        });
+        let metrics = Arc::clone(&svc.metrics);
+        Self { svc, sim_engine: engine, metrics }
     }
 
-    /// Submit a job; returns a receiver for the result.
-    pub fn submit(&self, job: Job, backend: Backend) -> Receiver<Result<JobResult>> {
-        let (rtx, rrx) = channel();
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Msg::Run(job, backend, rtx)).expect("coordinator alive");
-        rrx
+    /// The underlying service — the full API (streaming handles,
+    /// priorities, backpressure policies).
+    pub fn service(&self) -> &Service {
+        &self.svc
     }
 
     /// Submit and wait.
     pub fn run(&self, job: Job, backend: Backend) -> Result<JobResult> {
-        self.submit(job, backend).recv().expect("worker alive")
+        self.svc.submit(JobSpec::new(job).backend(backend))?.wait()
     }
 
-    /// The batch API: submit every job up front (they pipeline through the
-    /// worker pool), then collect results in submission order. One bad job
-    /// yields its own `Err` without poisoning the rest of the batch.
+    /// Submit a job; returns a receiver for the result.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use Service::submit(JobSpec) for a streaming JobHandle"
+    )]
+    pub fn submit(&self, job: Job, backend: Backend) -> Receiver<Result<JobResult>> {
+        let (rtx, rrx) = channel();
+        match self.svc.submit(JobSpec::new(job).backend(backend)) {
+            Ok(handle) => {
+                // Adapter: drain the event stream to the terminal result
+                // off-thread so the legacy receiver behaves as before.
+                std::thread::spawn(move || {
+                    let _ = rtx.send(handle.wait());
+                });
+            }
+            Err(e) => {
+                let _ = rtx.send(Err(e));
+            }
+        }
+        rrx
+    }
+
+    /// The batch API: submit every job up front (they pipeline through
+    /// the worker pools), then collect results in submission order.
+    #[deprecated(since = "0.2.0", note = "use Service::run(Vec<JobSpec>) -> BatchReport")]
     pub fn run_batch(&self, jobs: Vec<(Job, Backend)>) -> Vec<Result<JobResult>> {
-        let rxs: Vec<_> = jobs.into_iter().map(|(job, be)| self.submit(job, be)).collect();
-        rxs.into_iter().map(|rx| rx.recv().expect("worker alive")).collect()
+        self.svc
+            .run(jobs.into_iter().map(|(job, be)| JobSpec::new(job).backend(be)).collect())
+            .jobs
     }
 
-    /// The multi-hart Sim batch API: time-slice `jobs` over a pool of
-    /// simulated harts with quantum preemption and `qsq`/`qlq` quire
-    /// context switches (see [`sched`]). Results are bit-identical to
-    /// running each job alone (`Backend::Native` or single-job Sim);
-    /// what contention changes is the reported timing — per-job
-    /// completion latency and the pool's makespan — plus the context
-    /// switch and spill-cycle counters in each hart's [`Stats`]. Unlike
-    /// [`Coordinator::run_batch`], a malformed job rejects the whole
-    /// batch up front, before any simulation.
-    ///
-    /// The coordinator's pinned Sim engine ([`Coordinator::with_sim_engine`])
-    /// applies here exactly as it does to single Sim jobs: the pool's
-    /// `core.engine` is overridden, so pinning the oracle affects every
-    /// Sim path. (Call [`sched::run_batch_sim`] directly to control the
-    /// engine per batch.)
-    ///
-    /// [`Stats`]: crate::core::Stats
+    /// The multi-hart Sim batch API (one-shot, serial host thread).
+    #[deprecated(
+        since = "0.2.0",
+        note = "submit Backend::Sim JobSpecs to the Service (host-parallel pool), or call \
+                sched::run_batch_serial / run_batch_parallel directly"
+    )]
     pub fn run_batch_sim(&self, jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
         self.metrics.submitted.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         let t0 = Instant::now();
         let mut pool = pool.clone();
         pool.core.engine = self.sim_engine;
-        let res = sched::run_batch_sim(jobs, &pool);
+        let specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
+        let res = sched::run_batch_serial(&specs, &pool);
         self.metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         match &res {
             Ok(report) => {
@@ -302,10 +295,12 @@ impl Coordinator {
     /// Run the same job on several backends and require bit-identical
     /// results (the end-to-end cross-check).
     pub fn cross_check(&self, job: Job, backends: &[Backend]) -> Result<Vec<JobResult>> {
-        let rxs: Vec<_> =
-            backends.iter().map(|b| self.submit(job.clone(), *b)).collect();
+        let handles: Result<Vec<JobHandle>> = backends
+            .iter()
+            .map(|b| self.svc.submit(JobSpec::new(job.clone()).backend(*b)))
+            .collect();
         let results: Result<Vec<JobResult>> =
-            rxs.into_iter().map(|rx| rx.recv().expect("worker alive")).collect();
+            handles?.into_iter().map(|h| h.wait()).collect();
         let results = results?;
         for w in results.windows(2) {
             crate::ensure!(
@@ -318,14 +313,10 @@ impl Coordinator {
         Ok(results)
     }
 
-    /// Stop all workers.
-    pub fn shutdown(mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Stop);
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+    /// Stop the service's workers (queued work completes first).
+    pub fn shutdown(self) {
+        let Coordinator { svc, .. } = self;
+        svc.shutdown();
     }
 }
 
@@ -605,28 +596,13 @@ mod tests {
         let a16: Vec<u64> = (0..n * n).map(|_| (rng.posit_bits::<16>()) as u64).collect();
         let b16: Vec<u64> = (0..n * n).map(|_| (rng.posit_bits::<16>()) as u64).collect();
         let co = Coordinator::new(2, None);
-        let results = co.run_batch(vec![
-            (
-                Job::Gemm {
-                    fmt: Format::P8,
-                    n,
-                    a: a8.clone(),
-                    b: b8.clone(),
-                    quire: false,
-                },
-                Backend::Native,
-            ),
-            (
-                Job::Gemm {
-                    fmt: Format::P16,
-                    n,
-                    a: a16.clone(),
-                    b: b16.clone(),
-                    quire: true,
-                },
-                Backend::Native,
-            ),
-        ]);
+        let results = co
+            .service()
+            .run(vec![
+                JobSpec::gemm(Format::P8, n, a8.clone(), b8.clone(), false),
+                JobSpec::gemm(Format::P16, n, a16.clone(), b16.clone(), true),
+            ])
+            .jobs;
         let a8n: Vec<u32> = a8.iter().map(|&x| x as u32).collect();
         let b8n: Vec<u32> = b8.iter().map(|&x| x as u32).collect();
         let a16n: Vec<u32> = a16.iter().map(|&x| x as u32).collect();
@@ -813,7 +789,8 @@ mod tests {
         }
         let co = Coordinator::new(2, None);
         let pool = SimPoolConfig { harts: 1, quantum: 120, ..Default::default() };
-        let report = co.run_batch_sim(&jobs, &pool).expect("batch schedules");
+        let specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
+        let report = sched::run_batch_parallel(&specs, &pool).expect("batch schedules");
         for (i, job) in jobs.iter().enumerate() {
             let native = co.run(job.clone(), Backend::Native).unwrap();
             let solo_sim = co.run(job.clone(), Backend::Sim).unwrap();
@@ -832,19 +809,49 @@ mod tests {
     fn parallel_throughput_and_metrics() {
         let mut rng = Rng::new(9);
         let co = Coordinator::new(4, None);
-        let rxs: Vec<_> = (0..16)
+        let handles: Vec<_> = (0..16)
             .map(|_| {
                 let n = 4;
                 let job =
                     Job::GemmP32 { n, a: mat(&mut rng, n), b: mat(&mut rng, n), quire: true };
-                co.submit(job, Backend::Native)
+                co.service().submit(JobSpec::new(job)).expect("admitted")
             })
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().expect("job ok");
+        for h in handles {
+            h.wait().expect("job ok");
         }
         assert_eq!(co.metrics.completed.load(Ordering::Relaxed), 16);
         assert_eq!(co.metrics.errors.load(Ordering::Relaxed), 0);
+        co.shutdown();
+    }
+
+    /// The `#[deprecated]` entry points still delegate correctly (the
+    /// one place outside their defining module allowed to call them).
+    #[test]
+    fn deprecated_wrappers_still_delegate() {
+        #![allow(deprecated)]
+        let mut rng = Rng::new(0xDE);
+        let n = 4;
+        let (a, b) = (mat(&mut rng, n), mat(&mut rng, n));
+        let job = Job::GemmP32 { n, a, b, quire: true };
+        let co = Coordinator::new(1, None);
+        // submit -> Receiver adapter.
+        let via_submit = co.submit(job.clone(), Backend::Native).recv().unwrap().unwrap();
+        // run_batch -> Service::run.
+        let via_batch = co.run_batch(vec![(job.clone(), Backend::Native)]);
+        assert_eq!(via_batch[0].as_ref().unwrap().bits, via_submit.bits);
+        // run_batch_sim / sched::run_batch_sim{,_specs} -> run_batch_serial.
+        let pool = SimPoolConfig { harts: 1, quantum: 200, ..Default::default() };
+        let via_co = co.run_batch_sim(std::slice::from_ref(&job), &pool).unwrap();
+        let via_sched = sched::run_batch_sim(std::slice::from_ref(&job), &pool).unwrap();
+        let specs = vec![JobSpec::new(job)];
+        let via_specs = sched::run_batch_sim_specs(&specs, &pool).unwrap();
+        let serial = sched::run_batch_serial(&specs, &pool).unwrap();
+        for r in [&via_co, &via_sched, &via_specs] {
+            assert_eq!(r.jobs[0].bits64, serial.jobs[0].bits64);
+            assert_eq!(r.makespan_s, serial.makespan_s);
+        }
+        assert_eq!(via_submit.bits64, serial.jobs[0].bits64);
         co.shutdown();
     }
 

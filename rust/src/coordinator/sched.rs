@@ -75,9 +75,30 @@
 //! and checkpoint-recovery change *when* cycles happen, never *what*
 //! the arithmetic produces.
 //!
+//! ## Host-parallel pool
+//!
+//! Because harts are independent cores over a shared *address layout*
+//! (not shared memory), the batch can also run **host-parallel**:
+//! [`run_batch_parallel`] gives each simulated hart its own
+//! `std::thread::scope` worker. With no hart kills planned the workers
+//! free-run to completion; with kills planned a conductor thread drives
+//! the workers in lockstep rounds (all harts step, then kills fire in
+//! hart order) so migrations resolve in exactly the serial scheduler's
+//! order — orphaned [`Slot`]s, carrying their serialized
+//! [`HartContext`] checkpoint images, move between worker threads over
+//! channels. Either way the parallel pool is bit- *and* stats-identical
+//! to [`run_batch_serial`] (pinned by `tests/service.rs` and the
+//! `gemm_sim_svc_pool_p32_n64` bench row).
+//!
 //! [`Error`]: crate::error::Error
 
-use super::{check_patterns_n, check_shape, Format, Job};
+use super::service::EventSink;
+/// Re-exported for path compatibility: the spec type now lives with the
+/// service API ([`super::service::JobSpec`]), which added `backend` and
+/// `priority` fields. The sched runners use only the job + deadline +
+/// retry fields — they simulate every spec they are given.
+pub use super::service::JobSpec;
+use super::{check_patterns_n, check_shape, Backend, Format, Job, JobResult};
 use crate::bench::gemm::{
     dot_program, gemm_program_cached, set_dot_args, set_gemm_args, GemmVariant,
 };
@@ -86,6 +107,7 @@ use crate::error::Result;
 use crate::isa::asm::{assemble, Program};
 use crate::isa::PositFmt;
 use crate::testing::Rng;
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, OnceLock};
 
 /// Default retry budget for jobs submitted without an explicit
@@ -190,31 +212,6 @@ impl Default for SimPoolConfig {
             max_queue_depth: 0,
             faults: FaultPlan::default(),
         }
-    }
-}
-
-/// A job plus its serving policy: optional completion deadline (in
-/// cycles of the hart timeline it runs on) and retry budget.
-#[derive(Debug, Clone)]
-pub struct JobSpec {
-    pub job: Job,
-    /// Fail the job (typed, counted in [`Stats::deadline_misses`]) if it
-    /// has not completed by this cycle.
-    pub deadline_cycles: Option<u64>,
-    /// Faulted attempts allowed before the job fails for good.
-    pub max_retries: u32,
-}
-
-impl JobSpec {
-    /// Default policy: no deadline, [`DEFAULT_MAX_RETRIES`] retries.
-    pub fn new(job: Job) -> Self {
-        Self { job, deadline_cycles: None, max_retries: DEFAULT_MAX_RETRIES }
-    }
-}
-
-impl From<Job> for JobSpec {
-    fn from(job: Job) -> Self {
-        Self::new(job)
     }
 }
 
@@ -367,6 +364,12 @@ struct Slot {
     trap_at: Option<u64>,
     /// The next checkpoint image of this job gets corrupted (one-shot).
     corrupt_ckpt: bool,
+    /// Streaming event sink when the job came through the service.
+    /// Events only observe the schedule — they can never perturb it, so
+    /// serial/parallel determinism pins hold with or without listeners.
+    events: Option<EventSink>,
+    /// Whether `Started` has been emitted (first dispatch only).
+    announced: bool,
 }
 
 /// Validate one job and stage it (addresses are assigned later, by the
@@ -436,7 +439,17 @@ fn stage(idx: usize, job: &Job) -> Result<Slot> {
         needs_reset: false,
         trap_at: None,
         corrupt_ckpt: false,
+        events: None,
+        announced: false,
     })
+}
+
+/// Emit the terminal `Failed` event for a slot whose `failed` error was
+/// just set (no-op without a listener).
+fn emit_failed(s: &Slot) {
+    if let (Some(ev), Some(e)) = (&s.events, &s.failed) {
+        ev.failed(e.clone());
+    }
 }
 
 /// Assign the slot's region addresses starting at `base` and install the
@@ -466,6 +479,9 @@ fn place(slot: &mut Slot, base: u64) -> u64 {
 
 /// One simulated hart: its core plus the scheduler's bookkeeping.
 struct Hart {
+    /// Pool index (stable across serial and parallel runs; reported in
+    /// `Started` events and [`SimJobReport::hart`]).
+    id: usize,
     core: Core,
     /// Slot indices assigned here; order defines the dispatch rotation.
     queue: Vec<usize>,
@@ -485,6 +501,33 @@ struct Hart {
     deadline_misses: u64,
     injected: u64,
     jobs_done: usize,
+}
+
+impl Hart {
+    fn new(id: usize, cfg: CoreConfig, kill_at: Option<u64>) -> Self {
+        Self {
+            id,
+            core: Core::new(cfg),
+            queue: Vec::new(),
+            active: None,
+            last_pos: None,
+            switches: 0,
+            spill_cycles: 0,
+            alive: true,
+            kill_at,
+            checkpoints: 0,
+            migrations_in: 0,
+            retries: 0,
+            deadline_misses: 0,
+            injected: 0,
+            jobs_done: 0,
+        }
+    }
+}
+
+/// The earliest planned kill of hart `h`, if any.
+fn kill_at_for(pool: &SimPoolConfig, h: usize) -> Option<u64> {
+    pool.faults.kill_harts.iter().filter(|k| k.hart == h).map(|k| k.at_cycle).min()
 }
 
 /// Rebuild a slot's machine state on this hart before (re)dispatch:
@@ -591,6 +634,9 @@ fn checkpoint(hart: &mut Hart, s: &mut Slot) {
     s.ckpt = Some(Checkpoint { image, out_bytes, spill_bytes, instret: s.progress });
     s.checkpoints += 1;
     hart.checkpoints += 1;
+    if let Some(ev) = &s.events {
+        ev.checkpointed(s.checkpoints);
+    }
     core.load_instrs(Arc::clone(&s.program.instrs));
     core.restore_context(s.ctx.clone());
     hart.spill_cycles += core.cycle - t0;
@@ -601,6 +647,7 @@ fn checkpoint(hart: &mut Hart, s: &mut Slot) {
 fn complete(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
     hart.active = None;
     let cycle = hart.core.cycle;
+    let freq = hart.core.cfg.freq_hz as f64;
     let s = &mut slots[idx];
     if let Some(d) = s.deadline {
         if cycle > d {
@@ -609,6 +656,7 @@ fn complete(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
                 "job {}: missed deadline (finished at cycle {cycle}, deadline {d})",
                 s.idx
             ));
+            emit_failed(s);
             return;
         }
     }
@@ -616,6 +664,14 @@ fn complete(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
     s.completion_cycle = cycle;
     s.bits = hart.core.mem.read_posit_slice(s.out_addr, s.fmt.bytes(), s.out_len);
     hart.jobs_done += 1;
+    if let Some(ev) = &s.events {
+        ev.done(JobResult::from_u64_sim(
+            s.fmt,
+            s.bits.clone(),
+            Backend::Sim,
+            Some(cycle as f64 / freq),
+        ));
+    }
 }
 
 /// The running job blew its deadline at a quantum boundary: typed
@@ -630,6 +686,7 @@ fn miss_deadline(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
         s.idx,
         s.deadline.unwrap_or(0)
     ));
+    emit_failed(s);
 }
 
 /// One attempt of a job faulted. Retry from the last checkpoint (or
@@ -648,6 +705,7 @@ fn fail_attempt(hart: &mut Hart, slots: &mut [Slot], idx: usize, trap: Trap) {
             s.idx,
             s.max_retries
         ));
+        emit_failed(s);
         return;
     }
     s.needs_reset = true;
@@ -742,6 +800,12 @@ fn hart_step(hart: &mut Hart, slots: &mut [Slot], pool: &SimPoolConfig) -> bool 
     };
     hart.last_pos = Some(pos);
     let idx = hart.queue[pos];
+    if !slots[idx].announced {
+        slots[idx].announced = true;
+        if let Some(ev) = &slots[idx].events {
+            ev.started(hart.id);
+        }
+    }
     let was_reset = slots[idx].needs_reset;
     if was_reset {
         reset_slot(hart, &mut slots[idx]);
@@ -793,6 +857,9 @@ fn check_kill(harts: &mut [Hart], slots: &mut [Slot], h: usize) {
                 s.needs_reset = true;
                 s.next_eligible = 0;
                 s.hart = d;
+                if let Some(ev) = &s.events {
+                    ev.migrated(h, d);
+                }
                 harts[d].queue.push(i);
                 harts[d].migrations_in += 1;
             }
@@ -803,27 +870,22 @@ fn check_kill(harts: &mut [Hart], slots: &mut [Slot], h: usize) {
                     "job {}: hart {h} failed with no surviving hart left",
                     slots[i].idx
                 ));
+                emit_failed(&slots[i]);
             }
         }
     }
 }
 
-/// Schedule `jobs` over a pool of simulated harts with the default
-/// serving policy (no deadlines, [`DEFAULT_MAX_RETRIES`] retries). Jobs
-/// are validated up front (a malformed job rejects the batch before any
-/// simulation), then assigned round-robin and time-sliced per hart. See
-/// the module doc for the model.
-pub fn run_batch_sim(jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
-    let specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
-    run_batch_sim_specs(&specs, pool)
-}
-
-/// [`run_batch_sim`] with per-job serving policies (deadline, retry
-/// budget). A job that fails — retries exhausted, deadline missed, hart
-/// pool exhausted — comes back with [`SimJobReport::error`] set and does
-/// *not* fail the batch; only admission/validation problems reject the
-/// whole call.
-pub fn run_batch_sim_specs(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+/// Validate and stage a whole batch: slots built (deadline/retry policy
+/// and event sinks installed), the global address layout assigned, the
+/// fault plan armed, and the shared per-hart [`CoreConfig`] fixed up.
+/// Shared by the serial and parallel runners so both schedule the exact
+/// same staged state.
+fn stage_batch(
+    specs: &[JobSpec],
+    pool: &SimPoolConfig,
+    mut sinks: Vec<Option<EventSink>>,
+) -> Result<(Vec<Slot>, CoreConfig)> {
     crate::ensure!(pool.harts >= 1, "hart pool must have at least one hart");
     crate::ensure!(pool.quantum >= 1, "quantum must be at least one instruction");
     crate::ensure!(
@@ -837,6 +899,7 @@ pub fn run_batch_sim_specs(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<Si
         let mut slot = stage(idx, &spec.job)?;
         slot.deadline = spec.deadline_cycles;
         slot.max_retries = spec.max_retries;
+        slot.events = sinks.get_mut(idx).and_then(Option::take);
         slots.push(slot);
     }
     // Global placement: one address-space layout shared by every hart,
@@ -863,60 +926,25 @@ pub fn run_batch_sim_specs(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<Si
     let mut cfg = pool.core;
     cfg.mem_size = cfg.mem_size.max(next_base as usize);
     cfg.max_instrs = 0;
-    let mut harts: Vec<Hart> = (0..pool.harts)
-        .map(|h| Hart {
-            core: Core::new(cfg),
-            queue: Vec::new(),
-            active: None,
-            last_pos: None,
-            switches: 0,
-            spill_cycles: 0,
-            alive: true,
-            kill_at: pool
-                .faults
-                .kill_harts
-                .iter()
-                .filter(|k| k.hart == h)
-                .map(|k| k.at_cycle)
-                .min(),
-            checkpoints: 0,
-            migrations_in: 0,
-            retries: 0,
-            deadline_misses: 0,
-            injected: 0,
-            jobs_done: 0,
-        })
-        .collect();
-    for (i, s) in slots.iter_mut().enumerate() {
-        let h = i % pool.harts;
-        s.hart = h;
-        harts[h].queue.push(i);
-        let eb = s.fmt.bytes();
-        harts[h].core.mem.write_posit_slice(s.a_addr, eb, &s.a);
-        harts[h].core.mem.write_posit_slice(s.b_addr, eb, &s.b);
-    }
-    // Interleaved rounds: each alive hart gets one dispatch + quantum
-    // per round (harts are independent cores, so this is equivalent to
-    // running each hart serially — but it lets kill events interleave
-    // with the surviving harts' progress deterministically).
-    loop {
-        let mut progressed = false;
-        for h in 0..harts.len() {
-            if !harts[h].alive {
-                continue;
-            }
-            if hart_step(&mut harts[h], &mut slots, pool) {
-                progressed = true;
-            }
-            check_kill(&mut harts, &mut slots, h);
-        }
-        if !progressed {
-            break;
-        }
-    }
+    Ok((slots, cfg))
+}
+
+/// Write a slot's inputs into `hart`'s memory and queue it there.
+/// `local` is the slot's index within the hart's own slot slice (equal
+/// to the global index in the serial runner's single shared slice).
+fn seed_slot(hart: &mut Hart, s: &Slot, local: usize) {
+    hart.queue.push(local);
+    let eb = s.fmt.bytes();
+    hart.core.mem.write_posit_slice(s.a_addr, eb, &s.a);
+    hart.core.mem.write_posit_slice(s.b_addr, eb, &s.b);
+}
+
+/// Assemble the batch report from the final hart and slot state (harts
+/// in pool order, slots in submission order).
+fn assemble_report(harts: &[Hart], slots: &mut [Slot], pool: &SimPoolConfig) -> SimBatchReport {
     let freq = pool.core.freq_hz as f64;
     let mut harts_out = Vec::with_capacity(harts.len());
-    for h in &harts {
+    for h in harts {
         let mut stats = h.core.stats();
         stats.ctx_switches = h.switches;
         stats.spill_cycles = h.spill_cycles;
@@ -947,7 +975,331 @@ pub fn run_batch_sim_specs(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<Si
     }
     let makespan_s =
         harts_out.iter().map(|h| h.stats.cycles).max().unwrap_or(0) as f64 / freq;
-    Ok(SimBatchReport { jobs: jobs_out, harts: harts_out, makespan_s })
+    SimBatchReport { jobs: jobs_out, harts: harts_out, makespan_s }
+}
+
+/// Schedule `specs` over the pool on a single host thread — the
+/// reference scheduler the parallel pool is pinned against. A job that
+/// fails (retries exhausted, deadline missed, hart pool exhausted) comes
+/// back with [`SimJobReport::error`] set and does *not* fail the batch;
+/// only admission/validation problems reject the whole call.
+pub fn run_batch_serial(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+    run_batch_serial_ev(specs, pool, Vec::new())
+}
+
+/// [`run_batch_serial`] with per-job event sinks (the service's
+/// streaming path).
+pub(crate) fn run_batch_serial_ev(
+    specs: &[JobSpec],
+    pool: &SimPoolConfig,
+    sinks: Vec<Option<EventSink>>,
+) -> Result<SimBatchReport> {
+    let (mut slots, cfg) = stage_batch(specs, pool, sinks)?;
+    let mut harts: Vec<Hart> =
+        (0..pool.harts).map(|h| Hart::new(h, cfg, kill_at_for(pool, h))).collect();
+    for (i, s) in slots.iter_mut().enumerate() {
+        let h = i % pool.harts;
+        s.hart = h;
+        seed_slot(&mut harts[h], s, i);
+    }
+    // Lockstep rounds: every alive hart gets one dispatch + quantum,
+    // then pending kills fire in hart order. Harts are independent
+    // cores, so absent kills this is equivalent to running each hart
+    // serially to completion; the round structure only exists to make
+    // kill/migration interleaving deterministic — and it is exactly the
+    // order the parallel conductor replays, so serial and parallel
+    // pools resolve migrations identically.
+    loop {
+        let mut progressed = false;
+        for h in 0..harts.len() {
+            if harts[h].alive && hart_step(&mut harts[h], &mut slots, pool) {
+                progressed = true;
+            }
+        }
+        for h in 0..harts.len() {
+            check_kill(&mut harts, &mut slots, h);
+        }
+        if !progressed {
+            break;
+        }
+    }
+    Ok(assemble_report(&harts, &mut slots, pool))
+}
+
+/// Conductor → worker commands of the lockstep parallel pool.
+enum PoolCmd {
+    /// Run one scheduling round (dispatch + quantum) on this hart.
+    Step,
+    /// The fault plan killed this hart: stop, surrender pending slots.
+    Kill,
+    /// Adopt slots migrated off a killed hart (checkpoint images ride
+    /// inside each [`Slot`]).
+    Accept(Vec<Slot>),
+    /// Batch resolved: return the hart and its slots.
+    Finish,
+}
+
+/// Worker → conductor replies.
+enum PoolReply {
+    Stepped { hart: usize, progressed: bool, cycle: u64, pending: usize },
+    Orphans(Vec<Slot>),
+}
+
+/// Lockstep worker: owns one [`Hart`] and its slot partition, executes
+/// conductor commands until `Finish`.
+fn pool_worker(
+    id: usize,
+    mut slots: Vec<Slot>,
+    cfg: CoreConfig,
+    pool: &SimPoolConfig,
+    cmds: Receiver<PoolCmd>,
+    replies: Sender<PoolReply>,
+) -> (Hart, Vec<Slot>) {
+    let mut hart = Hart::new(id, cfg, None);
+    for i in 0..slots.len() {
+        seed_slot(&mut hart, &slots[i], i);
+    }
+    while let Ok(cmd) = cmds.recv() {
+        match cmd {
+            PoolCmd::Step => {
+                let progressed = hart.alive && hart_step(&mut hart, &mut slots, pool);
+                let pending = hart
+                    .queue
+                    .iter()
+                    .filter(|&&i| !slots[i].done && slots[i].failed.is_none())
+                    .count();
+                let _ = replies.send(PoolReply::Stepped {
+                    hart: id,
+                    progressed,
+                    cycle: hart.core.cycle,
+                    pending,
+                });
+            }
+            PoolCmd::Kill => {
+                hart.alive = false;
+                hart.active = None;
+                hart.queue.clear();
+                // Resolved slots stay home (their results are final);
+                // pending ones are surrendered for migration.
+                let mut kept = Vec::with_capacity(slots.len());
+                let mut orphans = Vec::new();
+                for s in slots.drain(..) {
+                    if s.done || s.failed.is_some() {
+                        kept.push(s);
+                    } else {
+                        orphans.push(s);
+                    }
+                }
+                slots = kept;
+                let _ = replies.send(PoolReply::Orphans(orphans));
+            }
+            PoolCmd::Accept(incoming) => {
+                hart.migrations_in += incoming.len() as u64;
+                for s in incoming {
+                    let local = slots.len();
+                    slots.push(s);
+                    seed_slot(&mut hart, &slots[local], local);
+                }
+            }
+            PoolCmd::Finish => break,
+        }
+    }
+    (hart, slots)
+}
+
+/// Schedule `specs` over a **host-parallel** hart pool: each simulated
+/// hart is an independent [`Core`] on its own `std::thread::scope`
+/// worker. Bit- and stats-identical to [`run_batch_serial`] on the same
+/// pool (pinned by `tests/service.rs`); only host wall-clock differs.
+///
+/// With no hart kills planned (the common case) the workers free-run —
+/// zero synchronization until the batch resolves. With kills planned, a
+/// conductor drives the workers in the serial scheduler's lockstep
+/// rounds and relays migrated slots (serialized checkpoint images
+/// included) between worker threads.
+pub fn run_batch_parallel(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+    run_batch_parallel_ev(specs, pool, Vec::new())
+}
+
+/// [`run_batch_parallel`] with per-job event sinks (the service's
+/// streaming path).
+pub(crate) fn run_batch_parallel_ev(
+    specs: &[JobSpec],
+    pool: &SimPoolConfig,
+    sinks: Vec<Option<EventSink>>,
+) -> Result<SimBatchReport> {
+    let (slots, cfg) = stage_batch(specs, pool, sinks)?;
+    let nh = pool.harts;
+    // Partition round-robin — the serial assignment — into per-worker
+    // slot vectors with local queue indices (Slot::idx keeps the global
+    // submission index for reporting).
+    let mut parts: Vec<Vec<Slot>> = (0..nh).map(|_| Vec::new()).collect();
+    for (i, mut s) in slots.into_iter().enumerate() {
+        s.hart = i % nh;
+        parts[i % nh].push(s);
+    }
+    let lockstep = (0..nh).any(|h| kill_at_for(pool, h).is_some());
+    let mut failed_orphans: Vec<Slot> = Vec::new();
+    let mut finished: Vec<(Hart, Vec<Slot>)> = Vec::with_capacity(nh);
+    if !lockstep {
+        // Free-running mode: harts never interact, so each worker runs
+        // its own scheduling loop to completion independently.
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = parts
+                .drain(..)
+                .enumerate()
+                .map(|(h, mut part)| {
+                    scope.spawn(move || {
+                        let mut hart = Hart::new(h, cfg, None);
+                        for i in 0..part.len() {
+                            seed_slot(&mut hart, &part[i], i);
+                        }
+                        while hart_step(&mut hart, &mut part, pool) {}
+                        (hart, part)
+                    })
+                })
+                .collect();
+            for hd in handles {
+                finished.push(hd.join().expect("pool worker panicked"));
+            }
+        });
+    } else {
+        std::thread::scope(|scope| {
+            let (rep_tx, rep_rx) = channel::<PoolReply>();
+            let mut cmd_txs = Vec::with_capacity(nh);
+            let mut handles = Vec::with_capacity(nh);
+            for (h, part) in parts.drain(..).enumerate() {
+                let (cmd_tx, cmd_rx) = channel::<PoolCmd>();
+                let replies = rep_tx.clone();
+                cmd_txs.push(cmd_tx);
+                handles
+                    .push(scope.spawn(move || pool_worker(h, part, cfg, pool, cmd_rx, replies)));
+            }
+            drop(rep_tx);
+            // Conductor state mirrors the serial round loop exactly:
+            // all alive harts step concurrently, then kills fire in
+            // hart order against up-to-date load counts.
+            let mut alive = vec![true; nh];
+            let mut kills: Vec<Option<u64>> = (0..nh).map(|h| kill_at_for(pool, h)).collect();
+            let mut cycles = vec![0u64; nh];
+            // Kills only fire after a step round, and every Stepped
+            // reply refreshes its hart's pending count — so these are
+            // always up to date by the time a destination is chosen.
+            let mut pending = vec![0usize; nh];
+            loop {
+                let steppers: Vec<usize> = (0..nh).filter(|&h| alive[h]).collect();
+                if steppers.is_empty() {
+                    break;
+                }
+                for &h in &steppers {
+                    cmd_txs[h].send(PoolCmd::Step).expect("pool worker alive");
+                }
+                let mut progressed = false;
+                for _ in 0..steppers.len() {
+                    match rep_rx.recv().expect("pool worker alive") {
+                        PoolReply::Stepped { hart, progressed: p, cycle, pending: pd } => {
+                            progressed |= p;
+                            cycles[hart] = cycle;
+                            pending[hart] = pd;
+                        }
+                        PoolReply::Orphans(_) => unreachable!("orphans outside a kill"),
+                    }
+                }
+                for h in 0..nh {
+                    let Some(at) = kills[h] else { continue };
+                    if !alive[h] || cycles[h] < at {
+                        continue;
+                    }
+                    alive[h] = false;
+                    kills[h] = None;
+                    cmd_txs[h].send(PoolCmd::Kill).expect("pool worker alive");
+                    let orphans = loop {
+                        match rep_rx.recv().expect("pool worker alive") {
+                            PoolReply::Orphans(o) => break o,
+                            PoolReply::Stepped { .. } => {
+                                unreachable!("step reply during kill drain")
+                            }
+                        }
+                    };
+                    if orphans.is_empty() {
+                        continue;
+                    }
+                    // Same destination rule as the serial check_kill:
+                    // least pending load, ties to the lowest hart index.
+                    let dest = (0..nh)
+                        .filter(|&d| alive[d])
+                        .min_by_key(|&d| (pending[d], d));
+                    match dest {
+                        Some(d) => {
+                            let mut moved = Vec::with_capacity(orphans.len());
+                            for mut s in orphans {
+                                s.migrations += 1;
+                                s.needs_reset = true;
+                                s.next_eligible = 0;
+                                s.hart = d;
+                                if let Some(ev) = &s.events {
+                                    ev.migrated(h, d);
+                                }
+                                moved.push(s);
+                            }
+                            pending[d] += moved.len();
+                            cmd_txs[d].send(PoolCmd::Accept(moved)).expect("pool worker alive");
+                        }
+                        None => {
+                            for mut s in orphans {
+                                s.failed = Some(crate::err!(
+                                    "job {}: hart {h} failed with no surviving hart left",
+                                    s.idx
+                                ));
+                                emit_failed(&s);
+                                failed_orphans.push(s);
+                            }
+                        }
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            for tx in &cmd_txs {
+                let _ = tx.send(PoolCmd::Finish);
+            }
+            for hd in handles {
+                finished.push(hd.join().expect("pool worker panicked"));
+            }
+        });
+    }
+    // Reassemble: harts in pool order, slots back in submission order.
+    finished.sort_by_key(|(hart, _)| hart.id);
+    let mut harts = Vec::with_capacity(nh);
+    let mut slots: Vec<Slot> = Vec::with_capacity(specs.len());
+    for (hart, part) in finished {
+        harts.push(hart);
+        slots.extend(part);
+    }
+    slots.extend(failed_orphans);
+    slots.sort_by_key(|s| s.idx);
+    Ok(assemble_report(&harts, &mut slots, pool))
+}
+
+/// Schedule `jobs` over a pool of simulated harts with the default
+/// serving policy (no deadlines, [`DEFAULT_MAX_RETRIES`] retries).
+#[deprecated(
+    since = "0.2.0",
+    note = "use service::JobSpec + sched::run_batch_serial (or the Service API)"
+)]
+pub fn run_batch_sim(jobs: &[Job], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+    let specs: Vec<JobSpec> = jobs.iter().cloned().map(JobSpec::new).collect();
+    run_batch_serial(&specs, pool)
+}
+
+/// [`run_batch_sim`] with per-job serving policies.
+#[deprecated(
+    since = "0.2.0",
+    note = "use sched::run_batch_serial (identical semantics, new name)"
+)]
+pub fn run_batch_sim_specs(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<SimBatchReport> {
+    run_batch_serial(specs, pool)
 }
 
 #[cfg(test)]
@@ -956,6 +1308,11 @@ mod tests {
     use crate::coordinator::{Backend, Coordinator, Engine};
     use crate::posit::convert::from_f64_n;
     use crate::testing::Rng;
+
+    /// Default-policy specs for a plain job list.
+    fn specs(jobs: &[Job]) -> Vec<JobSpec> {
+        jobs.iter().cloned().map(JobSpec::new).collect()
+    }
 
     /// A mixed-format batch: quire and no-quire GEMMs plus dots at every
     /// width — more jobs than harts, tiny quantum, so every job is
@@ -984,7 +1341,7 @@ mod tests {
         // context-switch spill cycles are visible in the hart stats.
         let jobs = mixed_batch(0x5C4ED);
         let pool = SimPoolConfig { harts: 3, quantum: 60, ..Default::default() };
-        let report = run_batch_sim(&jobs, &pool).expect("batch schedules");
+        let report = run_batch_serial(&specs(&jobs), &pool).expect("batch schedules");
         assert_eq!(report.jobs.len(), jobs.len());
         assert_eq!(report.failures(), 0);
         let co = Coordinator::new(2, None);
@@ -1024,7 +1381,7 @@ mod tests {
                 core: CoreConfig { engine, ..CoreConfig::default() },
                 ..Default::default()
             };
-            reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
+            reports.push(run_batch_serial(&specs(&jobs), &pool).expect("batch schedules"));
         }
         let a = &reports[0];
         for b in &reports[1..] {
@@ -1046,7 +1403,7 @@ mod tests {
         // completion on first dispatch, so no qsq/qlq ever executes.
         let jobs = mixed_batch(0x0).into_iter().take(2).collect::<Vec<_>>();
         let pool = SimPoolConfig { harts: 2, quantum: u64::MAX / 2, ..Default::default() };
-        let report = run_batch_sim(&jobs, &pool).expect("batch schedules");
+        let report = run_batch_serial(&specs(&jobs), &pool).expect("batch schedules");
         for h in &report.harts {
             assert_eq!(h.stats.spill_cycles, 0, "uncontended hart paid spill cycles");
             assert_eq!(h.stats.ctx_switches, 1, "one dispatch per hart");
@@ -1062,13 +1419,13 @@ mod tests {
         let a: Vec<u64> = (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
         let b: Vec<u64> = (0..n * n).map(|_| from_f64_n(32, rng.range_f64(-2.0, 2.0))).collect();
         let job = Job::Gemm { fmt: Format::P32, n, a, b, quire: true };
-        let solo = run_batch_sim(
-            std::slice::from_ref(&job),
+        let solo = run_batch_serial(
+            &specs(std::slice::from_ref(&job)),
             &SimPoolConfig { harts: 1, quantum: u64::MAX / 2, ..Default::default() },
         )
         .unwrap();
-        let contended = run_batch_sim(
-            &[job.clone(), job.clone(), job],
+        let contended = run_batch_serial(
+            &specs(&[job.clone(), job.clone(), job]),
             &SimPoolConfig { harts: 1, quantum: 100, ..Default::default() },
         )
         .unwrap();
@@ -1089,12 +1446,12 @@ mod tests {
     fn malformed_jobs_reject_the_batch() {
         let bad_shape =
             Job::Gemm { fmt: Format::P16, n: 3, a: vec![0; 9], b: vec![0; 8], quire: true };
-        assert!(run_batch_sim(&[bad_shape], &SimPoolConfig::default()).is_err());
+        assert!(run_batch_serial(&specs(&[bad_shape]), &SimPoolConfig::default()).is_err());
         let bad_bits =
             Job::Gemm { fmt: Format::P8, n: 1, a: vec![0x100], b: vec![0], quire: true };
-        assert!(run_batch_sim(&[bad_bits], &SimPoolConfig::default()).is_err());
+        assert!(run_batch_serial(&specs(&[bad_bits]), &SimPoolConfig::default()).is_err());
         let bad_pool = SimPoolConfig { harts: 0, ..Default::default() };
-        assert!(run_batch_sim(&[], &bad_pool).is_err());
+        assert!(run_batch_serial(&[], &bad_pool).is_err());
     }
 
     #[test]
@@ -1114,7 +1471,7 @@ mod tests {
             quire: true,
         };
         let pool = SimPoolConfig { harts: 1, quantum: 80, ..Default::default() };
-        let r = run_batch_sim(&[legacy, tagged], &pool).unwrap();
+        let r = run_batch_serial(&specs(&[legacy, tagged]), &pool).unwrap();
         assert_eq!(r.jobs[0].bits64, r.jobs[1].bits64);
     }
 
@@ -1125,7 +1482,7 @@ mod tests {
         // the fault-tolerant scheduler costs nothing when unused.
         let jobs = mixed_batch(0xF0).into_iter().take(4).collect::<Vec<_>>();
         let pool = SimPoolConfig { harts: 2, quantum: 100, ..Default::default() };
-        let r = run_batch_sim(&jobs, &pool).unwrap();
+        let r = run_batch_serial(&specs(&jobs), &pool).unwrap();
         assert_eq!(r.failures(), 0);
         for j in &r.jobs {
             assert!(j.error.is_none());
@@ -1145,9 +1502,9 @@ mod tests {
     fn admission_control_rejects_oversized_batches() {
         let jobs = mixed_batch(0xAD).into_iter().take(3).collect::<Vec<_>>();
         let pool = SimPoolConfig { max_queue_depth: 2, ..Default::default() };
-        let err = run_batch_sim(&jobs, &pool).unwrap_err();
+        let err = run_batch_serial(&specs(&jobs), &pool).unwrap_err();
         assert!(err.to_string().contains("admission rejected"), "{err}");
         let pool = SimPoolConfig { max_queue_depth: 3, ..Default::default() };
-        assert!(run_batch_sim(&jobs, &pool).is_ok());
+        assert!(run_batch_serial(&specs(&jobs), &pool).is_ok());
     }
 }

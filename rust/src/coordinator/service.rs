@@ -1,0 +1,689 @@
+//! The coordinator as a **long-running service**: one submission API in
+//! front of every execution backend, with admission control,
+//! backpressure, priorities, and per-job streaming results.
+//!
+//! This is the ROADMAP "millions of users" shape: instead of one-shot
+//! batch calls ([`Coordinator::run_batch`] and friends, now deprecated),
+//! a [`Service`] owns
+//!
+//! - a **bounded priority job queue** ([`ServiceConfig::queue_capacity`])
+//!   with two admission-controlled lanes — native/PJRT jobs feed a
+//!   worker-thread pool, `Backend::Sim` jobs feed the multi-hart
+//!   simulator — and a configurable full-queue policy
+//!   ([`Backpressure::Reject`] fails `submit` typed,
+//!   [`Backpressure::Block`] applies backpressure by blocking the
+//!   submitter until space frees);
+//! - a **host-parallel hart pool**: queued Sim jobs are drained in
+//!   priority order and scheduled over [`sched::run_batch_parallel`],
+//!   which runs each simulated hart as an independent [`Core`] on its own
+//!   `std::thread::scope` worker — bit- and stats-identical to the serial
+//!   reference scheduler ([`sched::run_batch_serial`]), with
+//!   checkpoint/migration traffic crossing threads as serialized
+//!   [`HartContext`] images;
+//! - **streaming results**: every accepted job gets a [`JobHandle`]
+//!   carrying a `Receiver<JobEvent>` that reports
+//!   [`Queued`](JobEvent::Queued) → [`Started`](JobEvent::Started) →
+//!   ([`Checkpointed`](JobEvent::Checkpointed) /
+//!   [`Migrated`](JobEvent::Migrated))* → [`Done`](JobEvent::Done) or
+//!   [`Failed`](JobEvent::Failed) as it happens, not at batch end.
+//!
+//! ## The `JobSpec` builder
+//!
+//! ```ignore
+//! let spec = JobSpec::gemm(Format::P32, n, a, b, true)
+//!     .backend(Backend::Sim)
+//!     .priority(Priority::High)
+//!     .deadline(2_000_000)
+//!     .retries(1);
+//! let handle = svc.submit(spec)?;          // streaming
+//! while let Some(ev) = handle.recv() { … } // ends with Done/Failed
+//! // or: let report = svc.run(specs);      // blocking convenience
+//! ```
+//!
+//! `deadline_cycles`/`max_retries` apply to Sim-pool jobs (the simulated
+//! timeline is what deadlines are measured on); `priority` orders both
+//! lanes' queues.
+//!
+//! ## Wire schema
+//!
+//! [`crate::coordinator::json`] carries the external protocol: versioned
+//! `{"v":1,"job":{…}}` submission requests and `{"v":1,"event":{…}}`
+//! streaming frames, written by `Value::to_string` and parsed by
+//! `json::parse` — round-trip pinned in that module's tests.
+//!
+//! ## Deprecation map (old → new)
+//!
+//! | Old call                          | Replacement                                     |
+//! |-----------------------------------|-------------------------------------------------|
+//! | `Coordinator::submit(job, be)`    | [`Service::submit`]`(JobSpec::new(job).backend(be))` |
+//! | `Coordinator::run_batch(pairs)`   | [`Service::run`]`(specs)` → [`BatchReport`]     |
+//! | `Coordinator::run_batch_sim(..)`  | `ServiceConfig::pool` + [`Service::run`], or [`sched::run_batch_parallel`] |
+//! | `sched::run_batch_sim(jobs, ..)`  | [`sched::run_batch_serial`] (reference oracle)  |
+//! | `sched::run_batch_sim_specs(..)`  | [`sched::run_batch_serial`] / [`sched::run_batch_parallel`] |
+//!
+//! `Coordinator::{run, cross_check}` remain supported conveniences,
+//! reimplemented over the service.
+//!
+//! [`Coordinator::run_batch`]: super::Coordinator::run_batch
+//! [`Core`]: crate::core::Core
+//! [`HartContext`]: crate::core::HartContext
+//! [`sched`]: super::sched
+
+use super::sched::{self, SimPoolConfig, DEFAULT_MAX_RETRIES};
+use super::{check_patterns_n, check_shape, execute, Backend, Format, Job, JobResult, Metrics};
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Scheduling class of a job: higher-priority jobs are dispatched before
+/// lower-priority ones already waiting in the queue (FIFO within a
+/// class, so equal-priority work cannot starve).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+/// What `submit` does when the queue is at capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backpressure {
+    /// Fail the submission with a typed error (load shedding).
+    Reject,
+    /// Block the submitting thread until a slot frees (backpressure
+    /// propagates to the producer). The default.
+    #[default]
+    Block,
+}
+
+/// A job plus its full serving policy — the one submission currency of
+/// the coordinator. Built with [`JobSpec::new`]/[`JobSpec::gemm`]/
+/// [`JobSpec::dot`] and the chainable setters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub job: Job,
+    /// Execution backend (default [`Backend::Native`]; `Backend::Sim`
+    /// routes through the host-parallel hart pool).
+    pub backend: Backend,
+    /// Queue ordering class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Fail the job typed if it has not completed by this cycle of its
+    /// simulated hart's timeline (Sim jobs only).
+    pub deadline_cycles: Option<u64>,
+    /// Faulted attempts allowed before the job fails for good (Sim jobs
+    /// only; see [`sched`]).
+    pub max_retries: u32,
+}
+
+impl JobSpec {
+    /// Default policy: Native backend, normal priority, no deadline,
+    /// [`DEFAULT_MAX_RETRIES`] retries.
+    pub fn new(job: Job) -> Self {
+        Self {
+            job,
+            backend: Backend::Native,
+            priority: Priority::Normal,
+            deadline_cycles: None,
+            max_retries: DEFAULT_MAX_RETRIES,
+        }
+    }
+
+    /// A format-tagged GEMM job (`a`, `b` are n×n bit-pattern matrices).
+    pub fn gemm(fmt: Format, n: usize, a: Vec<u64>, b: Vec<u64>, quire: bool) -> Self {
+        Self::new(Job::Gemm { fmt, n, a, b, quire })
+    }
+
+    /// A format-tagged quire dot-product job.
+    pub fn dot(fmt: Format, a: Vec<u64>, b: Vec<u64>) -> Self {
+        Self::new(Job::Dot { fmt, a, b })
+    }
+
+    /// Select the execution backend.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Select the queue priority class.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a completion deadline in simulated cycles.
+    pub fn deadline(mut self, cycles: u64) -> Self {
+        self.deadline_cycles = Some(cycles);
+        self
+    }
+
+    /// Set the retry budget for faulted attempts.
+    pub fn retries(mut self, max_retries: u32) -> Self {
+        self.max_retries = max_retries;
+        self
+    }
+}
+
+impl From<Job> for JobSpec {
+    fn from(job: Job) -> Self {
+        Self::new(job)
+    }
+}
+
+/// A streamed lifecycle event of one submitted job. `Done`/`Failed` are
+/// terminal; their `seq` is a service-wide completion sequence number
+/// (job A finishing with a smaller `seq` than job B finished first).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobEvent {
+    /// Admitted into the queue.
+    Queued { id: u64 },
+    /// First dispatched — `hart` is the simulated hart index for Sim
+    /// jobs, the native worker index otherwise.
+    Started { id: u64, hart: usize },
+    /// A checkpoint of the job was captured (Sim jobs; `count` is its
+    /// running checkpoint total).
+    Checkpointed { id: u64, count: u64 },
+    /// Migrated off a killed hart to a survivor (Sim jobs).
+    Migrated { id: u64, from: usize, to: usize },
+    /// Completed; the result bits are final.
+    Done { id: u64, seq: u64, result: JobResult },
+    /// Failed typed (validation, execution error, retries exhausted,
+    /// deadline miss, hart pool lost).
+    Failed { id: u64, seq: u64, error: Error },
+}
+
+impl JobEvent {
+    /// The job this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            JobEvent::Queued { id }
+            | JobEvent::Started { id, .. }
+            | JobEvent::Checkpointed { id, .. }
+            | JobEvent::Migrated { id, .. }
+            | JobEvent::Done { id, .. }
+            | JobEvent::Failed { id, .. } => *id,
+        }
+    }
+
+    /// True for `Done`/`Failed` — the stream ends after these.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobEvent::Done { .. } | JobEvent::Failed { .. })
+    }
+}
+
+/// The producing end of one job's event stream, threaded through the
+/// scheduler so events are emitted where they happen (worker threads,
+/// hart workers, the migration conductor). Cloneable; sends never block
+/// and a dropped receiver is fine (events only observe — they cannot
+/// perturb the simulation, which keeps the determinism pins valid).
+#[derive(Clone)]
+pub(crate) struct EventSink {
+    id: u64,
+    tx: Sender<JobEvent>,
+    /// Service-wide completion counter stamping `Done`/`Failed` order.
+    seq: Arc<AtomicU64>,
+}
+
+impl EventSink {
+    fn send(&self, ev: JobEvent) {
+        let _ = self.tx.send(ev);
+    }
+
+    pub(crate) fn queued(&self) {
+        self.send(JobEvent::Queued { id: self.id });
+    }
+
+    pub(crate) fn started(&self, hart: usize) {
+        self.send(JobEvent::Started { id: self.id, hart });
+    }
+
+    pub(crate) fn checkpointed(&self, count: u64) {
+        self.send(JobEvent::Checkpointed { id: self.id, count });
+    }
+
+    pub(crate) fn migrated(&self, from: usize, to: usize) {
+        self.send(JobEvent::Migrated { id: self.id, from, to });
+    }
+
+    pub(crate) fn done(&self, result: JobResult) {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        self.send(JobEvent::Done { id: self.id, seq, result });
+    }
+
+    pub(crate) fn failed(&self, error: Error) {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        self.send(JobEvent::Failed { id: self.id, seq, error });
+    }
+}
+
+/// The client's end of one accepted job: its service-assigned id and the
+/// live event stream.
+#[derive(Debug)]
+pub struct JobHandle {
+    pub id: u64,
+    events: Receiver<JobEvent>,
+}
+
+impl JobHandle {
+    /// Next event, blocking; `None` once the stream has ended.
+    pub fn recv(&self) -> Option<JobEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Next event if one is already pending.
+    pub fn try_recv(&self) -> Option<JobEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Drain to the terminal event and return the job's outcome.
+    pub fn wait(self) -> Result<JobResult> {
+        loop {
+            match self.events.recv() {
+                Ok(JobEvent::Done { result, .. }) => return Ok(result),
+                Ok(JobEvent::Failed { error, .. }) => return Err(error),
+                Ok(_) => {}
+                Err(_) => return Err(crate::err!("service dropped the job stream")),
+            }
+        }
+    }
+}
+
+/// Blocking-batch outcome: one `Result` per submitted spec, in
+/// submission order. The unified error surface — a poisoned job is its
+/// own `Err` entry and never aborts the rest of the batch (admission
+/// rejections included).
+#[derive(Debug)]
+pub struct BatchReport {
+    pub jobs: Vec<Result<JobResult>>,
+}
+
+impl BatchReport {
+    /// Jobs that ended in a typed failure.
+    pub fn failures(&self) -> usize {
+        self.jobs.iter().filter(|j| j.is_err()).count()
+    }
+
+    /// Jobs that completed.
+    pub fn completions(&self) -> usize {
+        self.jobs.len() - self.failures()
+    }
+}
+
+/// Service shape: worker counts, hart pool, queue policy.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Threads serving the native/PJRT lane.
+    pub native_workers: usize,
+    /// The simulated hart pool `Backend::Sim` jobs run on (its
+    /// `core.engine` selects the Sim engine for the whole service;
+    /// `max_queue_depth` is superseded by [`Self::queue_capacity`]).
+    pub pool: SimPoolConfig,
+    /// Total queued-job capacity across both lanes (`0` = unbounded).
+    pub queue_capacity: usize,
+    /// Full-queue policy.
+    pub backpressure: Backpressure,
+    /// Enables the PJRT backend.
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            native_workers: 2,
+            pool: SimPoolConfig::default(),
+            queue_capacity: 0,
+            backpressure: Backpressure::default(),
+            artifacts_dir: None,
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Lane {
+    Native,
+    Sim,
+}
+
+/// One queued job. Heap order: priority class first, then admission
+/// order (earlier first) within a class.
+struct QItem {
+    priority: Priority,
+    seq: u64,
+    spec: JobSpec,
+    sink: EventSink,
+}
+
+impl PartialEq for QItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for QItem {}
+impl PartialOrd for QItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct QueueState {
+    native: BinaryHeap<QItem>,
+    sim: BinaryHeap<QItem>,
+    open: bool,
+}
+
+/// The bounded two-lane priority queue. One capacity covers both lanes;
+/// each lane has its own readiness condvar so native workers and the sim
+/// dispatcher block independently.
+struct JobQueue {
+    state: Mutex<QueueState>,
+    native_ready: Condvar,
+    sim_ready: Condvar,
+    space: Condvar,
+    capacity: usize,
+    policy: Backpressure,
+}
+
+impl JobQueue {
+    fn push(&self, item: QItem, lane: Lane) -> Result<()> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            crate::ensure!(st.open, "service is shut down");
+            if self.capacity == 0 || st.native.len() + st.sim.len() < self.capacity {
+                break;
+            }
+            match self.policy {
+                Backpressure::Reject => {
+                    return Err(crate::err!(
+                        "backpressure: queue full ({} jobs queued, capacity {})",
+                        st.native.len() + st.sim.len(),
+                        self.capacity
+                    ))
+                }
+                Backpressure::Block => st = self.space.wait(st).expect("queue lock"),
+            }
+        }
+        match lane {
+            Lane::Native => {
+                st.native.push(item);
+                self.native_ready.notify_one();
+            }
+            Lane::Sim => {
+                st.sim.push(item);
+                self.sim_ready.notify_one();
+            }
+        }
+        Ok(())
+    }
+
+    /// Highest-priority native-lane job, blocking; `None` once the queue
+    /// is closed *and* drained (shutdown completes queued work).
+    fn pop_native(&self) -> Option<QItem> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            if let Some(item) = st.native.pop() {
+                self.space.notify_all();
+                return Some(item);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.native_ready.wait(st).expect("queue lock");
+        }
+    }
+
+    /// Every queued sim-lane job in priority order, blocking until at
+    /// least one is available; empty once closed and drained.
+    fn drain_sim(&self) -> Vec<QItem> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            if !st.sim.is_empty() {
+                let mut batch = Vec::with_capacity(st.sim.len());
+                while let Some(item) = st.sim.pop() {
+                    batch.push(item);
+                }
+                self.space.notify_all();
+                return batch;
+            }
+            if !st.open {
+                return Vec::new();
+            }
+            st = self.sim_ready.wait(st).expect("queue lock");
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().expect("queue lock");
+        st.open = false;
+        drop(st);
+        self.native_ready.notify_all();
+        self.sim_ready.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// Admission-time validation: shape, bit patterns, backend/format
+/// support. Rejecting here keeps a malformed job from ever reaching a
+/// lane (and, for the sim lane, from poisoning a whole pool batch).
+fn validate(spec: &JobSpec) -> Result<()> {
+    check_shape(&spec.job)?;
+    match &spec.job {
+        Job::Gemm { fmt, a, b, .. } | Job::Dot { fmt, a, b } => {
+            check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
+            check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
+        }
+        // Legacy u32 jobs cannot carry an out-of-format pattern.
+        Job::GemmP32 { .. } | Job::DotP32 { .. } => {}
+    }
+    match (&spec.job, spec.backend) {
+        (Job::Gemm { fmt, .. }, Backend::Pjrt) if *fmt != Format::P32 => {
+            Err(crate::err!("backend Pjrt does not support {} jobs", fmt.name()))
+        }
+        (Job::Dot { fmt, .. }, Backend::Pjrt) => {
+            Err(crate::err!("backend Pjrt does not support {} dot jobs", fmt.name()))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// The long-running coordinator service. See the module doc.
+pub struct Service {
+    queue: Arc<JobQueue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    admit_seq: AtomicU64,
+    done_seq: Arc<AtomicU64>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Service {
+    /// Spawn the service: `native_workers` threads on the native/PJRT
+    /// lane plus the sim-pool dispatcher. Runs until [`Service::shutdown`]
+    /// (or drop), completing already-queued work on the way out.
+    pub fn new(cfg: ServiceConfig) -> Self {
+        let mut pool = cfg.pool.clone();
+        pool.harts = pool.harts.max(1);
+        pool.quantum = pool.quantum.max(1);
+        // Admission control lives at the service queue now; the pool-level
+        // batch limit would misfire on dispatcher-formed batches.
+        pool.max_queue_depth = 0;
+        let queue = Arc::new(JobQueue {
+            state: Mutex::new(QueueState {
+                native: BinaryHeap::new(),
+                sim: BinaryHeap::new(),
+                open: true,
+            }),
+            native_ready: Condvar::new(),
+            sim_ready: Condvar::new(),
+            space: Condvar::new(),
+            capacity: cfg.queue_capacity,
+            policy: cfg.backpressure,
+        });
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for w in 0..cfg.native_workers.max(1) {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let artifacts = cfg.artifacts_dir.clone();
+            let engine = pool.core.engine;
+            workers.push(std::thread::spawn(move || {
+                native_worker(w, &queue, &metrics, &artifacts, engine)
+            }));
+        }
+        {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let pool = pool.clone();
+            workers.push(std::thread::spawn(move || sim_dispatcher(&queue, &pool, &metrics)));
+        }
+        Self {
+            queue,
+            workers,
+            next_id: AtomicU64::new(0),
+            admit_seq: AtomicU64::new(0),
+            done_seq: Arc::new(AtomicU64::new(0)),
+            metrics,
+        }
+    }
+
+    /// Submit one job for streaming execution. Validation and admission
+    /// happen here: a malformed spec, a full queue under
+    /// [`Backpressure::Reject`], or a shut-down service return a typed
+    /// error (counted in [`Metrics::errors`]); under
+    /// [`Backpressure::Block`] a full queue blocks instead.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = validate(&spec) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let sink = EventSink { id, tx, seq: Arc::clone(&self.done_seq) };
+        let lane = if spec.backend == Backend::Sim { Lane::Sim } else { Lane::Native };
+        // Emit Queued before the job becomes poppable so the stream
+        // order Queued → Started is guaranteed.
+        sink.queued();
+        let item = QItem {
+            priority: spec.priority,
+            seq: self.admit_seq.fetch_add(1, Ordering::Relaxed),
+            spec,
+            sink,
+        };
+        if let Err(e) = self.queue.push(item, lane) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        Ok(JobHandle { id, events: rx })
+    }
+
+    /// Blocking convenience: submit every spec, wait for all outcomes.
+    /// Per-job typed errors, in submission order — nothing aborts the
+    /// batch.
+    pub fn run(&self, specs: Vec<JobSpec>) -> BatchReport {
+        let handles: Vec<Result<JobHandle>> =
+            specs.into_iter().map(|s| self.submit(s)).collect();
+        let jobs = handles
+            .into_iter()
+            .map(|h| match h {
+                Ok(handle) => handle.wait(),
+                Err(e) => Err(e),
+            })
+            .collect();
+        BatchReport { jobs }
+    }
+
+    /// Stop admitting, finish queued work, join the workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One native-lane worker: pops by priority, executes, streams the
+/// terminal event. A job error never kills the worker.
+fn native_worker(
+    idx: usize,
+    queue: &JobQueue,
+    metrics: &Metrics,
+    artifacts: &Option<String>,
+    engine: crate::core::Engine,
+) {
+    // One PJRT runtime per worker (compilation cache inside).
+    let mut rt: Option<Runtime> = None;
+    while let Some(QItem { spec, sink, .. }) = queue.pop_native() {
+        sink.started(idx);
+        let t0 = Instant::now();
+        let res = execute(&spec.job, spec.backend, artifacts, &mut rt, engine);
+        let dt = t0.elapsed();
+        metrics.busy_ns.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        match res {
+            Ok(mut r) => {
+                r.elapsed_s = dt.as_secs_f64();
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                sink.done(r);
+            }
+            Err(e) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                sink.failed(e);
+            }
+        }
+    }
+}
+
+/// The sim-lane dispatcher: drains every queued Sim job in priority
+/// order and schedules the batch over the host-parallel hart pool.
+/// Events (Started/Checkpointed/Migrated/Done/Failed) are emitted from
+/// inside the pool as each job progresses.
+fn sim_dispatcher(queue: &JobQueue, pool: &SimPoolConfig, metrics: &Metrics) {
+    loop {
+        let batch = queue.drain_sim();
+        if batch.is_empty() {
+            return; // closed and drained
+        }
+        let n = batch.len() as u64;
+        let mut specs = Vec::with_capacity(batch.len());
+        let mut sinks = Vec::with_capacity(batch.len());
+        for item in batch {
+            specs.push(item.spec);
+            sinks.push(Some(item.sink));
+        }
+        let t0 = Instant::now();
+        let res = sched::run_batch_parallel_ev(&specs, pool, sinks.clone());
+        metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match res {
+            Ok(report) => {
+                let failed = report.failures() as u64;
+                metrics.completed.fetch_add(n - failed, Ordering::Relaxed);
+                metrics.errors.fetch_add(failed, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // Specs are pre-validated at submit, so only a pool
+                // misconfiguration lands here: fail each job typed.
+                metrics.errors.fetch_add(n, Ordering::Relaxed);
+                for sink in sinks.into_iter().flatten() {
+                    sink.failed(e.clone());
+                }
+            }
+        }
+    }
+}

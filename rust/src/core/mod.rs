@@ -500,6 +500,12 @@ impl Stats {
 /// rather than the owner of *the* architectural state: `ctx` is the
 /// save/restorable per-hart state, everything else is the machine
 /// (memory, D$, scoreboard, counters).
+///
+/// `Core` and [`HartContext`] are `Send` (pinned below): the service's
+/// host-parallel hart pool runs one `Core` per `std::thread::scope`
+/// worker and migrates jobs between workers by passing staged state —
+/// including serialized [`HartContext::to_image`] checkpoints — over
+/// channels.
 pub struct Core {
     pub cfg: CoreConfig,
     /// The architectural context the core is currently executing.
@@ -550,6 +556,16 @@ pub struct Core {
     /// [`Core::reset_timing`] like the stall counters).
     traps: u64,
 }
+
+// The host-parallel hart pool moves cores' state between OS threads;
+// keep that property pinned at compile time (a non-Send field sneaking
+// in — an `Rc`, a raw pointer — would break the service, not just fail
+// a test).
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Core>();
+    assert_send::<HartContext>();
+};
 
 impl Core {
     pub fn new(cfg: CoreConfig) -> Self {

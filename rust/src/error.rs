@@ -10,8 +10,9 @@ use std::fmt;
 /// An opaque error carrying a human-readable message.
 ///
 /// `Clone` so per-job failures can be both recorded in a batch report and
-/// counted by the caller.
-#[derive(Clone)]
+/// counted by the caller; `PartialEq` (message equality) so streamed
+/// [`crate::coordinator::JobEvent::Failed`] frames can be compared in tests.
+#[derive(Clone, PartialEq, Eq)]
 pub struct Error {
     msg: String,
 }

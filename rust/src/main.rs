@@ -11,7 +11,7 @@
 //! ```
 
 use percival::bench::{harness, tables};
-use percival::coordinator::{Backend, Coordinator, Job};
+use percival::coordinator::{Backend, Coordinator, Job, JobSpec, Service, ServiceConfig};
 use percival::core::CoreConfig;
 use percival::isa::asm::assemble;
 use percival::isa::disasm::disasm;
@@ -129,10 +129,14 @@ fn main() {
             let workers: usize = opt("--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
             let jobs: usize = opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(32);
             let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16);
-            let co = Coordinator::new(workers, Some("artifacts".into()));
+            let svc = Service::new(ServiceConfig {
+                native_workers: workers,
+                artifacts_dir: Some("artifacts".into()),
+                ..Default::default()
+            });
             let mut rng = Rng::new(7);
             let t0 = std::time::Instant::now();
-            let rxs: Vec<_> = (0..jobs)
+            let handles: Vec<_> = (0..jobs)
                 .map(|_| {
                     let a: Vec<u32> = (0..n * n)
                         .map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits())
@@ -140,12 +144,15 @@ fn main() {
                     let b: Vec<u32> = (0..n * n)
                         .map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits())
                         .collect();
-                    co.submit(Job::GemmP32 { n, a, b, quire: true }, Backend::Native)
+                    svc.submit(
+                        JobSpec::new(Job::GemmP32 { n, a, b, quire: true })
+                            .backend(Backend::Native),
+                    )
                 })
                 .collect();
             let mut ok = 0;
-            for rx in rxs {
-                if rx.recv().unwrap().is_ok() {
+            for h in handles {
+                if h.and_then(|h| h.wait()).is_ok() {
                     ok += 1;
                 }
             }
@@ -155,8 +162,8 @@ fn main() {
                 dt,
                 jobs as f64 / dt
             );
-            println!("metrics: {}", co.metrics.summary());
-            co.shutdown();
+            println!("metrics: {}", svc.metrics.summary());
+            svc.shutdown();
         }
         "version" => println!("percival {} (paper reproduction)", env!("CARGO_PKG_VERSION")),
         _ => {

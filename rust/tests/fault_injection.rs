@@ -8,7 +8,7 @@
 //! unrecoverable job failed with a typed error, and nothing ever panics.
 
 use percival::coordinator::sched::{
-    run_batch_sim, run_batch_sim_specs, FaultPlan, HartKill, JobSpec, SimPoolConfig, TrapInject,
+    run_batch_parallel, run_batch_serial, FaultPlan, HartKill, JobSpec, SimPoolConfig, TrapInject,
 };
 use percival::coordinator::{Backend, Coordinator, Engine, Format, Job};
 use percival::core::{Core, CoreConfig, HartContext};
@@ -111,6 +111,11 @@ fn checkpoint_image_rejects_bad_inputs() {
 
 // ───────────────────── scheduler under injected faults ─────────────────────
 
+/// Default-policy specs for a plain job list.
+fn specs(jobs: &[Job]) -> Vec<JobSpec> {
+    jobs.iter().cloned().map(JobSpec::new).collect()
+}
+
 /// `count` Posit32 quire GEMM jobs with deterministic random inputs —
 /// long enough that kills and traps land mid-kernel.
 fn gemm_jobs(count: usize, n: usize, seed: u64) -> Vec<Job> {
@@ -151,7 +156,7 @@ fn hart_kill_migrates_jobs_and_preserves_bits() {
         },
         ..Default::default()
     };
-    let r = run_batch_sim(&jobs, &pool).expect("batch schedules");
+    let r = run_batch_serial(&specs(&jobs), &pool).expect("batch schedules");
     assert_eq!(r.failures(), 0, "every job must survive a single hart kill");
     assert!(!r.harts[0].alive, "killed hart must report dead");
     assert!(r.harts[1].alive);
@@ -161,6 +166,21 @@ fn hart_kill_migrates_jobs_and_preserves_bits() {
     for (i, j) in r.jobs.iter().enumerate() {
         assert_eq!(j.bits64, reference[i], "job {i} bits changed across migration");
         assert_eq!(j.hart, 1, "every job must end on the survivor");
+    }
+    // The host-parallel pool replays the kill + migrations exactly: this
+    // plan is guaranteed to migrate, so the parity check here always
+    // exercises cross-thread Slot handoff.
+    let p = run_batch_parallel(&specs(&jobs), &pool).expect("parallel batch schedules");
+    assert_eq!(p.makespan_s, r.makespan_s);
+    for (i, (x, y)) in r.jobs.iter().zip(&p.jobs).enumerate() {
+        assert_eq!(x.bits64, y.bits64, "job {i}: parallel bits diverge");
+        assert_eq!(x.completion_s, y.completion_s, "job {i}: parallel timing diverges");
+        assert_eq!(x.migrations, y.migrations, "job {i}: migration counts diverge");
+        assert_eq!(x.hart, y.hart, "job {i}: final hart diverges");
+    }
+    for (x, y) in r.harts.iter().zip(&p.harts) {
+        assert_eq!(x.stats, y.stats);
+        assert_eq!(x.alive, y.alive);
     }
 }
 
@@ -176,7 +196,7 @@ fn kill_with_no_survivor_fails_typed_never_panics() {
         },
         ..Default::default()
     };
-    let r = run_batch_sim(&jobs, &pool).expect("the batch itself is valid");
+    let r = run_batch_serial(&specs(&jobs), &pool).expect("the batch itself is valid");
     assert_eq!(r.failures(), jobs.len(), "no survivor: every job fails");
     for j in &r.jobs {
         let err = j.error.as_ref().expect("typed error").to_string();
@@ -200,7 +220,7 @@ fn injected_trap_retries_and_recovers_bit_identically() {
         },
         ..Default::default()
     };
-    let r = run_batch_sim(&jobs, &pool).expect("batch schedules");
+    let r = run_batch_serial(&specs(&jobs), &pool).expect("batch schedules");
     assert_eq!(r.failures(), 0);
     assert!(r.jobs[0].retries >= 1, "the injected trap must cost a retry");
     assert_eq!(r.jobs[1].retries, 0, "the other job runs clean");
@@ -226,7 +246,7 @@ fn exhausted_retry_budget_fails_typed() {
         },
         ..Default::default()
     };
-    let r = run_batch_sim_specs(&specs, &pool).expect("batch schedules");
+    let r = run_batch_serial(&specs, &pool).expect("batch schedules");
     let err = r.jobs[0].error.as_ref().expect("typed failure").to_string();
     assert!(err.contains("retry budget"), "unexpected error text: {err}");
     assert!(r.jobs[0].bits64.is_empty());
@@ -245,7 +265,7 @@ fn deadlines_fail_typed_and_are_counted() {
     specs[0].deadline_cycles = Some(50); // far too tight for a 6×6 GEMM
     specs[1].deadline_cycles = Some(u64::MAX / 2); // comfortably loose
     let pool = SimPoolConfig { harts: 1, quantum: 100, ..Default::default() };
-    let r = run_batch_sim_specs(&specs, &pool).expect("batch schedules");
+    let r = run_batch_serial(&specs, &pool).expect("batch schedules");
     let err = r.jobs[0].error.as_ref().expect("typed miss").to_string();
     assert!(err.contains("deadline"), "unexpected error text: {err}");
     assert!(r.jobs[1].error.is_none());
@@ -273,7 +293,7 @@ fn corrupted_checkpoint_recovers_from_scratch() {
         },
         ..Default::default()
     };
-    let r = run_batch_sim(&jobs, &pool).expect("batch schedules");
+    let r = run_batch_serial(&specs(&jobs), &pool).expect("batch schedules");
     assert_eq!(r.failures(), 0);
     assert!(r.jobs.iter().any(|j| j.migrations > 0));
     for (i, j) in r.jobs.iter().enumerate() {
@@ -303,7 +323,7 @@ fn fault_handling_is_engine_identical() {
             faults: plan.clone(),
             ..Default::default()
         };
-        reports.push(run_batch_sim(&jobs, &pool).expect("batch schedules"));
+        reports.push(run_batch_serial(&specs(&jobs), &pool).expect("batch schedules"));
     }
     let a = &reports[0];
     for b in &reports[1..] {
@@ -336,7 +356,7 @@ fn seeded_fault_plans_never_panic_and_recoverables_match_native() {
             faults: FaultPlan::seeded(seed, 2, jobs.len()),
             ..Default::default()
         };
-        let r = run_batch_sim(&jobs, &pool)
+        let r = run_batch_serial(&specs(&jobs), &pool)
             .unwrap_or_else(|e| panic!("seed {seed}: valid batch rejected: {e}"));
         for (i, j) in r.jobs.iter().enumerate() {
             match &j.error {
@@ -346,6 +366,26 @@ fn seeded_fault_plans_never_panic_and_recoverables_match_native() {
                 ),
                 Some(e) => assert!(!e.to_string().is_empty(), "seed {seed}: untyped failure"),
             }
+        }
+        // The host-parallel pool must replay the serial scheduler exactly,
+        // fault plan and all: same bits, same virtual timing, same per-job
+        // fault counters, same per-hart stats.
+        let p = run_batch_parallel(&specs(&jobs), &pool)
+            .unwrap_or_else(|e| panic!("seed {seed}: parallel pool rejected the batch: {e}"));
+        assert_eq!(p.makespan_s, r.makespan_s, "seed {seed}: makespan diverges");
+        for (i, (x, y)) in r.jobs.iter().zip(&p.jobs).enumerate() {
+            assert_eq!(x.bits64, y.bits64, "seed {seed}: job {i} bits diverge");
+            assert_eq!(x.completion_s, y.completion_s, "seed {seed}: job {i} timing diverges");
+            assert_eq!(
+                (x.hart, x.retries, x.migrations, x.checkpoints),
+                (y.hart, y.retries, y.migrations, y.checkpoints),
+                "seed {seed}: job {i} fault counters diverge"
+            );
+            assert_eq!(x.error.is_some(), y.error.is_some(), "seed {seed}: job {i} outcome");
+        }
+        for (h, (x, y)) in r.harts.iter().zip(&p.harts).enumerate() {
+            assert_eq!(x.stats, y.stats, "seed {seed}: hart {h} stats diverge");
+            assert_eq!(x.alive, y.alive, "seed {seed}: hart {h} liveness diverges");
         }
     }
 }
@@ -358,8 +398,8 @@ fn checkpoint_overhead_stays_under_ten_percent() {
     let base_pool = SimPoolConfig { harts: 2, quantum: 1_000, ..Default::default() };
     let ckpt_pool =
         SimPoolConfig { harts: 2, quantum: 1_000, checkpoint_quanta: 4, ..Default::default() };
-    let base = run_batch_sim(&jobs, &base_pool).expect("base batch schedules");
-    let ckpt = run_batch_sim(&jobs, &ckpt_pool).expect("checkpointed batch schedules");
+    let base = run_batch_serial(&specs(&jobs), &base_pool).expect("base batch schedules");
+    let ckpt = run_batch_serial(&specs(&jobs), &ckpt_pool).expect("checkpointed batch schedules");
     assert_eq!(base.failures() + ckpt.failures(), 0);
     for (x, y) in base.jobs.iter().zip(&ckpt.jobs) {
         assert_eq!(x.bits64, y.bits64, "checkpointing changed the bits");

@@ -1,0 +1,348 @@
+//! Service-layer integration tests: the long-running coordinator service
+//! behind the redesigned `JobSpec` submission API — streaming event
+//! ordering and completeness, backpressure (reject and block), priority
+//! scheduling without inversion, graceful-shutdown draining, and the
+//! determinism pin that the host-parallel hart pool is bit- and
+//! stat-identical to the serial scheduler and to `Backend::Native`.
+
+use percival::coordinator::sched::{
+    run_batch_parallel, run_batch_serial, FaultPlan, HartKill, SimPoolConfig,
+};
+use percival::coordinator::{
+    Backend, Backpressure, Coordinator, Format, Job, JobEvent, JobHandle, JobSpec, Priority,
+    Service, ServiceConfig,
+};
+use percival::posit::convert::from_f64_n;
+use percival::testing::Rng;
+
+/// `len` in-format posit patterns drawn from a deterministic stream.
+fn pats(fmt: Format, len: usize, rng: &mut Rng) -> Vec<u64> {
+    (0..len).map(|_| from_f64_n(fmt.width(), rng.range_f64(-2.0, 2.0))).collect()
+}
+
+/// A quire GEMM spec at `fmt` on the Sim lane, inputs seeded off `seed`.
+fn gemm_spec(fmt: Format, n: usize, seed: u64) -> JobSpec {
+    let mut rng = Rng::new(seed);
+    let a = pats(fmt, n * n, &mut rng);
+    let b = pats(fmt, n * n, &mut rng);
+    JobSpec::gemm(fmt, n, a, b, true).backend(Backend::Sim)
+}
+
+/// The job's reference bits from the native (non-simulated) backend.
+fn native_ref(job: &Job) -> Vec<u64> {
+    let co = Coordinator::new(1, None);
+    let out = co.run(job.clone(), Backend::Native).expect("native reference runs").bits64;
+    co.shutdown();
+    out
+}
+
+/// Drain a handle's stream to its terminal event.
+fn drain(h: JobHandle) -> (u64, Vec<JobEvent>) {
+    let id = h.id;
+    let mut evs = Vec::new();
+    while let Some(ev) = h.recv() {
+        let terminal = ev.is_terminal();
+        evs.push(ev);
+        if terminal {
+            break;
+        }
+    }
+    (id, evs)
+}
+
+/// Block until the job's `Started` frame arrives; anything terminal
+/// before then is a test failure.
+fn wait_started(h: &JobHandle) {
+    loop {
+        match h.recv().expect("stream live before Started") {
+            JobEvent::Started { .. } => return,
+            ev => assert!(!ev.is_terminal(), "terminal event before Started: {ev:?}"),
+        }
+    }
+}
+
+/// The completion sequence number stamped on a `Done` event.
+fn done_seq(evs: &[JobEvent]) -> u64 {
+    match evs.last() {
+        Some(JobEvent::Done { seq, .. }) => *seq,
+        other => panic!("expected a Done terminal, got {other:?}"),
+    }
+}
+
+#[test]
+fn streaming_events_are_ordered_and_complete() {
+    // Small quantum + checkpoint every quantum so a sim GEMM provably
+    // streams Queued -> Started -> Checkpointed* -> Done.
+    let cfg = ServiceConfig {
+        native_workers: 2,
+        pool: SimPoolConfig {
+            harts: 2,
+            quantum: 100,
+            checkpoint_quanta: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let svc = Service::new(cfg);
+
+    let sim_spec = gemm_spec(Format::P32, 8, 0xE0);
+    let nat_spec = gemm_spec(Format::P16, 8, 0xE1).backend(Backend::Native);
+    let mut rng = Rng::new(0xE2);
+    let dot_spec =
+        JobSpec::dot(Format::P64, pats(Format::P64, 16, &mut rng), pats(Format::P64, 16, &mut rng))
+            .backend(Backend::Sim);
+    let refs: Vec<Vec<u64>> = [&sim_spec, &nat_spec, &dot_spec]
+        .iter()
+        .map(|s| native_ref(&s.job))
+        .collect();
+
+    let handles = vec![
+        svc.submit(sim_spec).expect("sim job admits"),
+        svc.submit(nat_spec).expect("native job admits"),
+        svc.submit(dot_spec).expect("sim dot admits"),
+    ];
+    for (i, h) in handles.into_iter().enumerate() {
+        let (id, evs) = drain(h);
+        assert!(matches!(evs[0], JobEvent::Queued { .. }), "job {i}: first event not Queued");
+        assert!(evs.iter().all(|e| e.id() == id), "job {i}: foreign id in stream");
+        let terminals = evs.iter().filter(|e| e.is_terminal()).count();
+        assert_eq!(terminals, 1, "job {i}: exactly one terminal event");
+        assert!(evs.last().unwrap().is_terminal(), "job {i}: terminal not last");
+        let started = evs.iter().position(|e| matches!(e, JobEvent::Started { .. }));
+        assert!(started.is_some(), "job {i}: completed without a Started event");
+        match evs.last().unwrap() {
+            JobEvent::Done { result, .. } => {
+                assert_eq!(result.bits64, refs[i], "job {i}: streamed bits diverge from Native")
+            }
+            other => panic!("job {i}: unexpected terminal {other:?}"),
+        }
+        if i == 0 {
+            // The sim GEMM ran for many quanta with checkpointing armed.
+            let ckpts = evs.iter().filter(|e| matches!(e, JobEvent::Checkpointed { .. })).count();
+            assert!(ckpts > 0, "sim job streamed no Checkpointed events");
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn migration_events_reach_the_victims_stream() {
+    // Kill hart 0 mid-batch: some job must stream a Migrated frame and
+    // still finish bit-identical to Native.
+    let cfg = ServiceConfig {
+        native_workers: 1,
+        pool: SimPoolConfig {
+            harts: 2,
+            quantum: 60,
+            checkpoint_quanta: 2,
+            faults: FaultPlan {
+                kill_harts: vec![HartKill { hart: 0, at_cycle: 500 }],
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let svc = Service::new(cfg);
+    let specs: Vec<JobSpec> = (0..4).map(|i| gemm_spec(Format::P32, 8, 0xF0 + i)).collect();
+    let refs: Vec<Vec<u64>> = specs.iter().map(|s| native_ref(&s.job)).collect();
+    let handles: Vec<JobHandle> =
+        specs.into_iter().map(|s| svc.submit(s).expect("job admits")).collect();
+    let mut migrated = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let (_, evs) = drain(h);
+        migrated += evs
+            .iter()
+            .filter(|e| matches!(e, JobEvent::Migrated { from: 0, to: 1, .. }))
+            .count();
+        match evs.last().unwrap() {
+            JobEvent::Done { result, .. } => {
+                assert_eq!(result.bits64, refs[i], "job {i}: bits changed across migration")
+            }
+            other => panic!("job {i}: unexpected terminal {other:?}"),
+        }
+    }
+    assert!(migrated > 0, "the hart kill fired, some stream must carry Migrated");
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_reject_fails_fast_when_full() {
+    let cfg = ServiceConfig {
+        native_workers: 1,
+        pool: SimPoolConfig { harts: 1, quantum: 500, ..Default::default() },
+        queue_capacity: 2,
+        backpressure: Backpressure::Reject,
+        ..Default::default()
+    };
+    let svc = Service::new(cfg);
+    // A long blocker; once its Started frame arrives the dispatcher has
+    // drained it and is busy running it, so later jobs stay queued.
+    let blocker = svc.submit(gemm_spec(Format::P32, 32, 0xB0)).expect("blocker admits");
+    wait_started(&blocker);
+    let fill1 = svc.submit(gemm_spec(Format::P32, 4, 0xB1)).expect("first fill admits");
+    let fill2 = svc.submit(gemm_spec(Format::P32, 4, 0xB2)).expect("second fill admits");
+    let err = svc.submit(gemm_spec(Format::P32, 4, 0xB3)).expect_err("third fill must reject");
+    assert!(
+        err.to_string().contains("backpressure: queue full"),
+        "unexpected rejection text: {err}"
+    );
+    // The rejection never poisons admitted work.
+    for h in [fill1, fill2] {
+        assert!(!h.wait().expect("queued fill completes").bits64.is_empty());
+    }
+    assert!(!blocker.wait().expect("blocker completes").bits64.is_empty());
+    assert!(svc.metrics.errors.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn backpressure_block_holds_the_submitter_until_space_frees() {
+    let cfg = ServiceConfig {
+        native_workers: 1,
+        pool: SimPoolConfig { harts: 1, quantum: 500, ..Default::default() },
+        queue_capacity: 1,
+        backpressure: Backpressure::Block,
+        ..Default::default()
+    };
+    let svc = Service::new(cfg);
+    let blocker = svc.submit(gemm_spec(Format::P32, 24, 0xC0)).expect("blocker admits");
+    wait_started(&blocker);
+    let fill_spec = gemm_spec(Format::P32, 4, 0xC1);
+    let fill_ref = native_ref(&fill_spec.job);
+    let late_spec = gemm_spec(Format::P32, 4, 0xC2);
+    let late_ref = native_ref(&late_spec.job);
+    let fill = svc.submit(fill_spec).expect("fill takes the last slot");
+    // The queue is now full; a blocking submit from another thread must
+    // park until the dispatcher drains, then land normally.
+    let late = std::thread::scope(|s| {
+        let svc = &svc;
+        s.spawn(move || svc.submit(late_spec).expect("blocked submit eventually admits"))
+            .join()
+            .expect("submitter thread")
+    });
+    assert_eq!(fill.wait().expect("fill completes").bits64, fill_ref);
+    assert_eq!(late.wait().expect("late job completes").bits64, late_ref);
+    assert!(!blocker.wait().expect("blocker completes").bits64.is_empty());
+    svc.shutdown();
+}
+
+#[test]
+fn high_priority_jobs_jump_the_queue() {
+    // One hart, one busy blocker: everything submitted while it runs is
+    // drained in priority order, so the High job completes before every
+    // Low job submitted ahead of it — no priority inversion.
+    let cfg = ServiceConfig {
+        native_workers: 1,
+        pool: SimPoolConfig { harts: 1, quantum: 100, ..Default::default() },
+        ..Default::default()
+    };
+    let svc = Service::new(cfg);
+    let blocker = svc.submit(gemm_spec(Format::P32, 24, 0xD0)).expect("blocker admits");
+    wait_started(&blocker);
+    let lows: Vec<JobHandle> = (0..3)
+        .map(|i| {
+            svc.submit(gemm_spec(Format::P32, 6, 0xD1 + i).priority(Priority::Low))
+                .expect("low admits")
+        })
+        .collect();
+    let high = svc
+        .submit(gemm_spec(Format::P32, 6, 0xD9).priority(Priority::High))
+        .expect("high admits");
+    let high_seq = done_seq(&drain(high).1);
+    for (i, low) in lows.into_iter().enumerate() {
+        let low_seq = done_seq(&drain(low).1);
+        assert!(
+            high_seq < low_seq,
+            "priority inversion: High finished #{high_seq}, Low {i} finished #{low_seq}"
+        );
+    }
+    blocker.wait().expect("blocker completes");
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_admitted_work() {
+    // Closing the queue must not drop admitted jobs: every handle still
+    // reaches a terminal event, across both lanes.
+    let svc = Service::new(ServiceConfig {
+        native_workers: 1,
+        pool: SimPoolConfig { harts: 2, quantum: 200, ..Default::default() },
+        ..Default::default()
+    });
+    let handles: Vec<JobHandle> = (0..6)
+        .map(|i| {
+            let backend = if i % 2 == 0 { Backend::Sim } else { Backend::Native };
+            svc.submit(gemm_spec(Format::P32, 6, 0xAA + i).backend(backend)).expect("job admits")
+        })
+        .collect();
+    svc.shutdown();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().unwrap_or_else(|e| panic!("job {i} dropped at shutdown: {e}"));
+        assert!(!r.bits64.is_empty(), "job {i} returned no bits");
+    }
+}
+
+#[test]
+fn service_sim_path_matches_native_for_every_format() {
+    let svc = Service::new(ServiceConfig {
+        native_workers: 2,
+        pool: SimPoolConfig { harts: 2, quantum: 64, ..Default::default() },
+        ..Default::default()
+    });
+    for (i, fmt) in Format::ALL.into_iter().enumerate() {
+        let mut rng = Rng::new(0x9000 + i as u64);
+        let jobs = [
+            JobSpec::gemm(fmt, 5, pats(fmt, 25, &mut rng), pats(fmt, 25, &mut rng), true).job,
+            JobSpec::dot(fmt, pats(fmt, 16, &mut rng), pats(fmt, 16, &mut rng)).job,
+        ];
+        for job in jobs {
+            let sim = svc
+                .submit(JobSpec::new(job.clone()).backend(Backend::Sim))
+                .expect("sim admits")
+                .wait()
+                .unwrap_or_else(|e| panic!("{} sim job fails: {e}", fmt.name()));
+            let nat = svc
+                .submit(JobSpec::new(job).backend(Backend::Native))
+                .expect("native admits")
+                .wait()
+                .unwrap_or_else(|e| panic!("{} native job fails: {e}", fmt.name()));
+            assert_eq!(sim.bits64, nat.bits64, "{}: service sim/native disagree", fmt.name());
+        }
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn parallel_pool_is_bit_and_stat_identical_to_serial() {
+    // The headline determinism pin: a contended mixed-format batch with
+    // checkpointing armed runs through the host-parallel pool and the
+    // serial scheduler with identical bits, virtual timing, per-job
+    // counters, and per-hart Stats (ctx switches, spill cycles included).
+    let mut rng = Rng::new(0x1DEA);
+    let mut specs = Vec::new();
+    for fmt in Format::ALL {
+        specs.push(gemm_spec(fmt, 6, rng.next_u64()));
+        specs.push(JobSpec::dot(fmt, pats(fmt, 24, &mut rng), pats(fmt, 24, &mut rng)));
+    }
+    let refs: Vec<Vec<u64>> = specs.iter().map(|s| native_ref(&s.job)).collect();
+    let pool = SimPoolConfig { harts: 3, quantum: 50, checkpoint_quanta: 2, ..Default::default() };
+    let serial = run_batch_serial(&specs, &pool).expect("serial batch schedules");
+    let parallel = run_batch_parallel(&specs, &pool).expect("parallel batch schedules");
+    assert_eq!(serial.failures() + parallel.failures(), 0);
+    assert_eq!(serial.makespan_s, parallel.makespan_s, "makespan diverges");
+    for (i, (s, p)) in serial.jobs.iter().zip(&parallel.jobs).enumerate() {
+        assert_eq!(s.bits64, refs[i], "serial job {i} diverges from Native");
+        assert_eq!(s.bits64, p.bits64, "job {i}: parallel bits diverge");
+        assert_eq!(s.completion_s, p.completion_s, "job {i}: virtual timing diverges");
+        assert_eq!(
+            (s.hart, s.retries, s.migrations, s.checkpoints),
+            (p.hart, p.retries, p.migrations, p.checkpoints),
+            "job {i}: counters diverge"
+        );
+    }
+    for (h, (s, p)) in serial.harts.iter().zip(&parallel.harts).enumerate() {
+        assert_eq!(s.stats, p.stats, "hart {h}: stats diverge");
+        assert_eq!(s.alive, p.alive, "hart {h}: liveness diverges");
+    }
+}

@@ -26,13 +26,17 @@
 #   x:gemm_sim_sched_ckpt_n16x4   — checkpointed vs uncheckpointed
 #                                   makespan (deterministic simulated
 #                                   ratio)
+#   x:gemm_sim_svc_pool_p32_n64   — host-parallel hart pool vs serial
+#                                   scheduler wall clock (same run, same
+#                                   machine; host-core dependent but
+#                                   same-run relative)
 #
 # Usage: bench_compare.sh [fresh.json] [baseline.json] [rows] [threshold-%]
 set -euo pipefail
 
 fresh="${1:-BENCH_posit_kernels.json}"
 baseline="${2:-}"
-rows="${3:-x:gemm256_p32_quire_kernel,x:gemm_sim_p32_quire_n64,x:gemm_sim_p32_quire_n128_tx,x:gemm_sim_sched_ckpt_n16x4}"
+rows="${3:-x:gemm256_p32_quire_kernel,x:gemm_sim_p32_quire_n64,x:gemm_sim_p32_quire_n128_tx,x:gemm_sim_sched_ckpt_n16x4,x:gemm_sim_svc_pool_p32_n64}"
 threshold="${4:-25}"
 
 if [ ! -f "$fresh" ]; then
