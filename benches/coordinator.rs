@@ -5,7 +5,8 @@
 use percival::bench::harness::{bench, write_bench_json, JsonRow};
 use percival::coordinator::sched::{run_batch_parallel, run_batch_serial};
 use percival::coordinator::{
-    Backend, Engine, Format, Job, JobSpec, Service, ServiceConfig, SimPoolConfig,
+    Backend, Client, ClientConfig, Engine, Format, Job, JobSpec, Server, ServerConfig, Service,
+    ServiceConfig, SimPoolConfig,
 };
 use percival::core::CoreConfig;
 use percival::posit::convert::from_f64_n;
@@ -162,8 +163,41 @@ fn main() {
         speedup_x: Some(speedup),
     };
 
-    match write_bench_json("BENCH_posit_kernels.json", &[ckpt_row, pool_row]) {
-        Ok(()) => println!("  wrote 2 rows to BENCH_posit_kernels.json"),
+    // Transport overhead: the same native-lane jobs submitted through
+    // the line-delimited TCP loopback instead of in-process. Wall-clock
+    // and machine-dependent, so the row is informational (not gated).
+    let net_jobs = 16usize;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let server = Server::new(ServerConfig {
+        service: ServiceConfig { native_workers: 2, ..Default::default() },
+        ..Default::default()
+    });
+    let srv = server.clone();
+    let serve_thread = std::thread::spawn(move || srv.serve(listener).expect("serve exits"));
+    let mut rng = Rng::new(0xC4);
+    let net_specs: Vec<JobSpec> =
+        (0..net_jobs).map(|_| JobSpec::new(job(&mut rng, 16)).backend(Backend::Native)).collect();
+    let mut client = Client::connect(ClientConfig::new(addr.to_string())).expect("connects");
+    let rn = bench("net loopback gemm16 x16 (native lane)", 1, 3, || {
+        let ids: Vec<u64> =
+            net_specs.iter().map(|s| client.submit(s).expect("submit acks")).collect();
+        for id in ids {
+            client.wait(id, std::time::Duration::from_secs(60)).expect("job completes");
+        }
+    });
+    println!("  → {:.0} jobs/s through the TCP loopback", net_jobs as f64 / rn.mean_s);
+    client.shutdown_server().expect("shutdown frame lands");
+    serve_thread.join().expect("serve thread");
+    let net_row = JsonRow {
+        bench: "net_loopback_gemm16_native".into(),
+        mean_s: rn.mean_s,
+        ns_per_op: rn.mean_s * 1e9 / net_jobs as f64,
+        speedup_x: None,
+    };
+
+    match write_bench_json("BENCH_posit_kernels.json", &[ckpt_row, pool_row, net_row]) {
+        Ok(()) => println!("  wrote 3 rows to BENCH_posit_kernels.json"),
         Err(e) => eprintln!("  could not write BENCH_posit_kernels.json: {e}"),
     }
 }

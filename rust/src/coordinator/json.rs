@@ -181,9 +181,34 @@ impl std::fmt::Display for Value {
     }
 }
 
-/// Parse a JSON document.
+/// Default nesting ceiling of [`parse`]: deep enough for any payload
+/// this crate emits (requests and frames nest 4–5 levels), shallow
+/// enough that adversarial `[[[[…` input is a typed error long before
+/// the recursive-descent parser could overflow its stack.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
+/// Default document-size ceiling of [`parse`]: covers the largest
+/// in-tree payloads (the oracle vector files and n=256 GEMM requests)
+/// with room to spare; network callers pass tighter limits through
+/// [`parse_with_limits`] / their frame-size cap.
+pub const MAX_PARSE_BYTES: usize = 256 << 20;
+
+/// Parse a JSON document with the default adversarial-input limits
+/// ([`MAX_PARSE_BYTES`], [`MAX_PARSE_DEPTH`]).
 pub fn parse(src: &str) -> Result<Value, String> {
-    let mut p = Parser { b: src.as_bytes(), i: 0 };
+    parse_with_limits(src, MAX_PARSE_BYTES, MAX_PARSE_DEPTH)
+}
+
+/// [`parse`] with explicit total-size and nesting-depth ceilings; both
+/// violations are typed errors, never a panic or a stack overflow.
+pub fn parse_with_limits(src: &str, max_bytes: usize, max_depth: usize) -> Result<Value, String> {
+    if src.len() > max_bytes {
+        return Err(format!(
+            "document of {} bytes exceeds the {max_bytes}-byte limit",
+            src.len()
+        ));
+    }
+    let mut p = Parser { b: src.as_bytes(), i: 0, depth: 0, max_depth };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -196,6 +221,8 @@ pub fn parse(src: &str) -> Result<Value, String> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -227,11 +254,30 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Guard one level of object/array recursion.
+    fn descend(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            return Err(format!("nesting deeper than {} levels", self.max_depth));
+        }
+        Ok(())
+    }
+
     fn value(&mut self) -> Result<Value, String> {
         self.ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => {
+                self.descend()?;
+                let v = self.object()?;
+                self.depth -= 1;
+                Ok(v)
+            }
+            Some(b'[') => {
+                self.descend()?;
+                let v = self.array()?;
+                self.depth -= 1;
+                Ok(v)
+            }
             Some(b'"') => Ok(Value::Str(self.string()?)),
             Some(b't') => self.lit("true", Value::Bool(true)),
             Some(b'f') => self.lit("false", Value::Bool(false)),
@@ -308,8 +354,14 @@ impl<'a> Parser<'a> {
                         b'\\' => '\\',
                         b'"' => '"',
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
-                                .map_err(|e| e.to_string())?;
+                            // Bounds-checked: a document truncated inside
+                            // the escape is a typed error, not a slice
+                            // panic.
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("eof in unicode escape")?;
+                            let hex = std::str::from_utf8(hex).map_err(|e| e.to_string())?;
                             let cp = u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
                             self.i += 4;
                             char::from_u32(cp).ok_or("bad codepoint")?
@@ -317,7 +369,23 @@ impl<'a> Parser<'a> {
                         _ => return Err(format!("bad escape at byte {}", self.i)),
                     });
                 }
-                _ => s.push(c as char),
+                _ if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: the input is a &str, so copy the
+                    // complete character through (pushing lead/continuation
+                    // bytes as chars would mangle it into Latin-1).
+                    let start = self.i - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(format!("bad utf-8 byte at {start}")),
+                    };
+                    let chunk =
+                        self.b.get(start..start + len).ok_or("eof in utf-8 sequence")?;
+                    s.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                    self.i = start + len;
+                }
             }
         }
         Err("unterminated string".into())
@@ -409,7 +477,10 @@ fn req_u64_vec(v: &Value, key: &str) -> crate::error::Result<Vec<u64>> {
         .ok_or_else(|| crate::err!("wire: missing or malformed bit array {key:?}"))
 }
 
-fn check_version(v: &Value) -> crate::error::Result<()> {
+/// Enforce the `{"v":1,…}` version stamp on an inbound frame: a skewed
+/// version (or a missing one) is a typed error the transport can relay
+/// as an error frame — never a panic or a silent misparse.
+pub(crate) fn check_version(v: &Value) -> crate::error::Result<()> {
     match v.get("v").and_then(Value::as_u64) {
         Some(ver) if ver == WIRE_VERSION as u64 => Ok(()),
         Some(ver) => Err(crate::err!("wire: unsupported version {ver} (expected {WIRE_VERSION})")),
@@ -733,6 +804,105 @@ mod tests {
             let wire = event_frame(&ev).to_string();
             assert_eq!(parse_event_frame(&parse(&wire).unwrap()).unwrap(), ev, "frame {wire}");
         }
+    }
+
+    /// Random `Value` generator for the round-trip property test:
+    /// every variant, including non-ASCII strings, escapes, u64
+    /// patterns above `i64::MAX`, and nesting (bounded so the writer
+    /// output stays within the parse limits).
+    fn gen_value(rng: &mut crate::testing::Rng, depth: usize) -> Value {
+        let leaf_only = depth >= 3;
+        match rng.next_u64() % if leaf_only { 6 } else { 8 } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.next_u64() % 2 == 0),
+            2 => Value::Int(rng.next_u64() as i64),
+            // Forced above i64::MAX so the writer keeps it UInt.
+            3 => Value::UInt((1u64 << 63) | rng.next_u64()),
+            4 => Value::Num(rng.range_f64(-1.0e9, 1.0e9)),
+            5 => {
+                let palette =
+                    ['a', 'Z', '9', '"', '\\', '\n', '\t', '\r', '\u{1}', 'é', '中', '🦀', '/'];
+                let len = (rng.next_u64() % 12) as usize;
+                Value::Str(
+                    (0..len)
+                        .map(|_| palette[(rng.next_u64() as usize) % palette.len()])
+                        .collect(),
+                )
+            }
+            6 => Value::Arr(
+                (0..rng.next_u64() % 5).map(|_| gen_value(rng, depth + 1)).collect(),
+            ),
+            _ => Value::Obj(
+                (0..rng.next_u64() % 5)
+                    .map(|k| (format!("k{k}"), gen_value(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn parse_write_round_trips_generated_values() {
+        let mut rng = crate::testing::Rng::new(0x15E3D);
+        for case in 0..300 {
+            let v = gen_value(&mut rng, 0);
+            let text = v.to_string();
+            let back =
+                parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+            assert_eq!(back, v, "case {case}: {text}");
+        }
+    }
+
+    #[test]
+    fn pathological_nesting_is_rejected_not_overflowed() {
+        // 100k unclosed arrays/objects: typed depth error, no stack
+        // overflow (the pre-limit parser recursed once per bracket).
+        let deep_arr = "[".repeat(100_000);
+        assert!(parse(&deep_arr).unwrap_err().contains("nesting"), "array nesting");
+        let deep_obj = "{\"k\":".repeat(100_000);
+        assert!(parse(&deep_obj).unwrap_err().contains("nesting"), "object nesting");
+        // Within the ceiling still parses.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn truncated_documents_err_typed_at_every_cut() {
+        // Every strict prefix (including cuts inside \u escapes and
+        // multi-byte UTF-8) must be a typed error — no panics, no OOB
+        // slices.
+        let doc =
+            r#"{"a":[1,2.5,"xAé\n",{"b":null,"c":[true,false]}],"d":18446744073709551615}"#;
+        assert!(parse(doc).is_ok());
+        for cut in 0..doc.len() {
+            if !doc.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(parse(&doc[..cut]).is_err(), "prefix of {cut} bytes parsed");
+        }
+    }
+
+    #[test]
+    fn size_limit_is_typed() {
+        let doc = "[1,2,3]";
+        assert!(parse_with_limits(doc, 3, 16).unwrap_err().contains("byte limit"));
+        assert!(parse_with_limits(doc, 1024, 16).is_ok());
+    }
+
+    #[test]
+    fn event_frames_reject_version_skew() {
+        // A v2 frame from a newer peer: typed unsupported-version error
+        // on the parse side (the server mirrors this into an error
+        // frame; the client surfaces it typed from `wait`).
+        let mut v = event_frame(&JobEvent::Queued { id: 1 });
+        if let Value::Obj(m) = &mut v {
+            m.insert("v".into(), Value::Int(2));
+        }
+        let err = parse_event_frame(&v).unwrap_err().to_string();
+        assert!(err.contains("unsupported version 2"), "{err}");
+        // And a frame with no version stamp at all.
+        let naked = parse(r#"{"event":{"id":1,"type":"queued"}}"#).unwrap();
+        let err = parse_event_frame(&naked).unwrap_err().to_string();
+        assert!(err.contains("missing version"), "{err}");
     }
 
     #[test]

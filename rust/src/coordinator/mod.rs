@@ -54,14 +54,18 @@
 //! [`service`] module doc.
 
 pub mod json;
+pub mod net;
 pub mod sched;
 pub mod service;
 
+pub use net::{Client, ClientConfig, NetFaultPlan, Server, ServerConfig, ServeSummary};
 pub use sched::{
-    FaultPlan, HartKill, HartReport, SimBatchReport, SimJobReport, SimPoolConfig, TrapInject,
+    FaultPlan, HartKill, HartReport, JobCheckpoint, SimBatchReport, SimJobReport, SimPoolConfig,
+    TrapInject,
 };
 pub use service::{
-    Backpressure, BatchReport, JobEvent, JobHandle, JobSpec, Priority, Service, ServiceConfig,
+    Backpressure, BatchReport, DrainedJob, JobEvent, JobHandle, JobSpec, Priority, Service,
+    ServiceConfig,
 };
 
 use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};

@@ -1,0 +1,334 @@
+//! Line-delimited JSON framing over any byte stream.
+//!
+//! One frame is one JSON object on one `\n`-terminated line. The reader
+//! enforces a per-frame byte ceiling and classifies every failure mode
+//! typed ([`FrameError`]) so the connection layer can decide what is
+//! recoverable (bad JSON, an oversized line — framing resyncs at the
+//! next newline) and what is fatal (the transport died). Timeouts are
+//! surfaced as their own variant: a socket read timeout is how the
+//! server's connection loop polls for drain requests and idle reaping
+//! without dedicating a thread per direction.
+
+use crate::coordinator::json::{self, Value};
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// Default per-frame ceiling (64 MiB): comfortably above the largest
+/// legitimate payload (an n=256 Posit64 GEMM request is ~1.3 MB), small
+/// enough that a hostile writer cannot balloon the server's buffers.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Give up on an oversize-discard resync after this many dropped bytes:
+/// a peer that streams without ever sending a newline is not resyncable
+/// and gets disconnected instead of draining the server forever.
+const MAX_DISCARD_BYTES: usize = 4 * (64 << 20);
+
+/// Typed outcome of a failed frame read/write.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Clean end of stream at a frame boundary.
+    Eof,
+    /// The stream ended mid-line — the peer died with a partial frame
+    /// buffered (`bytes` of it).
+    Truncated { bytes: usize },
+    /// The line exceeded the frame-size ceiling; the rest of the line is
+    /// discarded so the connection can resync at the next newline.
+    Oversize { limit: usize },
+    /// A read/write timed out (socket timeout). The connection is still
+    /// healthy; the caller decides between retrying and reaping.
+    Timeout,
+    /// The line was not valid JSON (or not valid UTF-8) — recoverable;
+    /// framing stays intact.
+    Bad(String),
+    /// Transport error — the connection is gone.
+    Io(String),
+}
+
+impl FrameError {
+    /// Errors the connection survives: the caller can keep reading
+    /// frames (after an error frame back to the peer, typically).
+    pub fn is_recoverable(&self) -> bool {
+        matches!(self, FrameError::Oversize { .. } | FrameError::Bad(_) | FrameError::Timeout)
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "end of stream"),
+            FrameError::Truncated { bytes } => {
+                write!(f, "stream ended mid-frame ({bytes} bytes buffered)")
+            }
+            FrameError::Oversize { limit } => {
+                write!(f, "frame exceeds the {limit}-byte limit")
+            }
+            FrameError::Timeout => write!(f, "read timed out"),
+            FrameError::Bad(msg) => write!(f, "bad frame: {msg}"),
+            FrameError::Io(msg) => write!(f, "transport error: {msg}"),
+        }
+    }
+}
+
+/// Map an I/O error to [`FrameError`], folding both timeout kinds (unix
+/// sockets report `WouldBlock`, Windows `TimedOut`) into `Timeout`.
+fn io_err(e: std::io::Error) -> FrameError {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => FrameError::Timeout,
+        _ => FrameError::Io(e.to_string()),
+    }
+}
+
+/// Buffered line-frame reader over any [`Read`].
+pub struct FrameReader<R: Read> {
+    inner: R,
+    /// Bytes read but not yet consumed (`pos` is the consumed prefix).
+    buf: Vec<u8>,
+    pos: usize,
+    max: usize,
+    /// Oversize recovery: dropping bytes until the next newline.
+    discarding: bool,
+    discarded: usize,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R, max_frame_bytes: usize) -> Self {
+        Self {
+            inner,
+            buf: Vec::new(),
+            pos: 0,
+            max: max_frame_bytes.max(1),
+            discarding: false,
+            discarded: 0,
+        }
+    }
+
+    /// Bytes of a partial frame currently buffered (used by idle
+    /// reaping: a connection mid-frame is not idle).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Read the next frame: blank lines are skipped as keep-alives, a
+    /// non-JSON line is [`FrameError::Bad`] (framing stays intact), an
+    /// overlong line is [`FrameError::Oversize`] with automatic resync
+    /// on the following call.
+    pub fn read_frame(&mut self) -> Result<Value, FrameError> {
+        loop {
+            let line = self.read_line()?;
+            let text = std::str::from_utf8(&line)
+                .map_err(|e| FrameError::Bad(format!("non-UTF-8 frame: {e}")))?;
+            let text = text.trim();
+            if text.is_empty() {
+                continue; // blank-line keep-alive
+            }
+            // The frame ceiling also bounds the parse; the depth limit
+            // guards pathological nesting within it.
+            return json::parse_with_limits(text, self.max, json::MAX_PARSE_DEPTH)
+                .map_err(FrameError::Bad);
+        }
+    }
+
+    /// Extract one `\n`-terminated line (terminator not included).
+    fn read_line(&mut self) -> Result<Vec<u8>, FrameError> {
+        loop {
+            if self.discarding {
+                // Oversize resync: drop everything up to the next
+                // newline, bounded so a newline-free firehose cannot
+                // pin this connection forever.
+                if let Some(off) = find_nl(&self.buf[self.pos..]) {
+                    self.pos += off + 1;
+                    self.discarding = false;
+                    self.discarded = 0;
+                    self.compact();
+                    continue;
+                }
+                self.discarded += self.buffered();
+                self.buf.clear();
+                self.pos = 0;
+                if self.discarded > MAX_DISCARD_BYTES {
+                    return Err(FrameError::Io(format!(
+                        "peer streamed {} bytes without a newline; giving up on resync",
+                        self.discarded
+                    )));
+                }
+                self.fill()?;
+                continue;
+            }
+            if let Some(off) = find_nl(&self.buf[self.pos..]) {
+                let line = self.buf[self.pos..self.pos + off].to_vec();
+                self.pos += off + 1;
+                self.compact();
+                return Ok(line);
+            }
+            if self.buffered() > self.max {
+                self.buf.clear();
+                self.pos = 0;
+                self.discarding = true;
+                return Err(FrameError::Oversize { limit: self.max });
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Pull more bytes from the transport into the buffer.
+    fn fill(&mut self) -> Result<(), FrameError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.inner.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(if self.buffered() == 0 && !self.discarding {
+                        FrameError::Eof
+                    } else {
+                        FrameError::Truncated { bytes: self.buffered() }
+                    })
+                }
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(());
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(io_err(e)),
+            }
+        }
+    }
+
+    /// Drop the consumed prefix once it dominates the buffer.
+    fn compact(&mut self) {
+        if self.pos > 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
+fn find_nl(b: &[u8]) -> Option<usize> {
+    b.iter().position(|&c| c == b'\n')
+}
+
+/// Line-frame writer over any [`Write`]: one JSON object, one `\n`,
+/// flushed (streamed events must not sit in a BufWriter).
+pub struct FrameWriter<W: Write> {
+    inner: W,
+}
+
+impl<W: Write> FrameWriter<W> {
+    pub fn new(inner: W) -> Self {
+        Self { inner }
+    }
+
+    pub fn write_frame(&mut self, v: &Value) -> Result<(), FrameError> {
+        let mut line = v.to_string().into_bytes();
+        line.push(b'\n');
+        self.inner.write_all(&line).and_then(|()| self.inner.flush()).map_err(io_err)
+    }
+}
+
+/// Lowercase hex encoding for binary snapshot payloads (checkpoint
+/// images and memory captures inside the drain snapshot's JSON lines).
+pub fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        use std::fmt::Write as _;
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+/// Decode [`to_hex`] output; typed error on odd length or a non-hex
+/// digit.
+pub fn from_hex(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err(format!("hex string has odd length {}", s.len()));
+    }
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        let hi = hex_digit(pair[0])?;
+        let lo = hex_digit(pair[1])?;
+        out.push((hi << 4) | lo);
+    }
+    Ok(out)
+}
+
+fn hex_digit(c: u8) -> Result<u8, String> {
+    match c {
+        b'0'..=b'9' => Ok(c - b'0'),
+        b'a'..=b'f' => Ok(c - b'a' + 10),
+        b'A'..=b'F' => Ok(c - b'A' + 10),
+        _ => Err(format!("bad hex digit {:?}", c as char)),
+    }
+}
+
+/// FNV-1a (64-bit) over a byte stream — the snapshot file's trailer
+/// checksum (same family as the 32-bit one sealing `HartContext`
+/// images).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn reader(s: &str, max: usize) -> FrameReader<Cursor<Vec<u8>>> {
+        FrameReader::new(Cursor::new(s.as_bytes().to_vec()), max)
+    }
+
+    #[test]
+    fn frames_split_on_newlines_and_skip_blanks() {
+        let mut r = reader("{\"a\":1}\n\n  \n[2,3]\n", 1024);
+        assert_eq!(r.read_frame().unwrap().to_string(), "{\"a\":1}");
+        assert_eq!(r.read_frame().unwrap().to_string(), "[2,3]");
+        assert_eq!(r.read_frame().unwrap_err(), FrameError::Eof);
+    }
+
+    #[test]
+    fn truncated_and_bad_frames_are_typed() {
+        let mut r = reader("{\"a\":1", 1024);
+        assert!(matches!(r.read_frame().unwrap_err(), FrameError::Truncated { bytes: 6 }));
+        let mut r = reader("not json\n{\"ok\":true}\n", 1024);
+        assert!(matches!(r.read_frame().unwrap_err(), FrameError::Bad(_)));
+        // Framing survives the bad line: the next frame still parses.
+        assert_eq!(r.read_frame().unwrap().to_string(), "{\"ok\":true}");
+    }
+
+    #[test]
+    fn oversize_frames_resync_at_the_next_newline() {
+        let long = "x".repeat(64);
+        let doc = format!("[\"{long}\"]\n{{\"ok\":1}}\n");
+        let mut r = reader(&doc, 32);
+        assert_eq!(r.read_frame().unwrap_err(), FrameError::Oversize { limit: 32 });
+        assert_eq!(r.read_frame().unwrap().to_string(), "{\"ok\":1}");
+    }
+
+    #[test]
+    fn writer_reader_round_trip() {
+        let v = json::parse(r#"{"v":1,"job":{"kind":"dot"}}"#).unwrap();
+        let mut buf = Vec::new();
+        FrameWriter::new(&mut buf).write_frame(&v).unwrap();
+        assert!(buf.ends_with(b"\n"));
+        let mut r = FrameReader::new(Cursor::new(buf), 1024);
+        assert_eq!(r.read_frame().unwrap(), v);
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects_garbage() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(from_hex(&to_hex(&data)).unwrap(), data);
+        assert!(from_hex("abc").is_err());
+        assert!(from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn fnv64_is_stable() {
+        // Known FNV-1a vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,0 +1,1295 @@
+//! Crash-safe network serving of the coordinator [`Service`]: a
+//! zero-dependency line-delimited JSON transport over TCP and stdio,
+//! with graceful drain, rolling restart of in-flight sim jobs, and a
+//! fault-injecting in-tree client.
+//!
+//! ## Wire protocol
+//!
+//! One frame is one JSON object on one `\n`-terminated line
+//! ([`frame`]). Every frame carries a version stamp `{"v":1,…}`
+//! ([`json::WIRE_VERSION`]); a skewed or missing version yields a typed
+//! error frame (server side) or a typed error from the client — never a
+//! silent misparse. Blank lines are keep-alives. A malformed or
+//! oversized line gets an error frame back and the connection stays
+//! open (framing resyncs at the next newline); only transport death
+//! closes a connection.
+//!
+//! Client → server:
+//!
+//! | frame                             | meaning                          |
+//! |-----------------------------------|----------------------------------|
+//! | `{"v":1,"job":{…}}`               | submit ([`json::job_request`])   |
+//! | `{"v":1,"cmd":"ping"}`            | liveness probe                   |
+//! | `{"v":1,"cmd":"attach","id":N}`   | (re)query job `N`'s outcome      |
+//! | `{"v":1,"cmd":"shutdown"}`        | request a graceful drain         |
+//!
+//! Server → client:
+//!
+//! | frame                                   | meaning                        |
+//! |-----------------------------------------|--------------------------------|
+//! | `{"v":1,"ack":{"id":N}}`                | job admitted as wire id `N`    |
+//! | `{"v":1,"event":{…}}`                   | streamed [`json::event_frame`] |
+//! | `{"v":1,"ack":{"id":N,"pending":true}}` | attach: still running          |
+//! | `{"v":1,"drained":{"id":N}}`            | job `N` checkpointed by drain  |
+//! | `{"v":1,"error":{"msg":…}}`             | typed error; connection lives  |
+//! | `{"v":1,"pong":true}`                   | ping reply                     |
+//! | `{"v":1,"ack":{"shutdown":true}}`       | drain begins                   |
+//!
+//! Event frames of every job submitted on a connection stream back on
+//! that connection, interleaved, keyed by wire id. Terminal frames
+//! (`done`/`failed`) are additionally retained in a bounded server-side
+//! registry so `attach` can replay an outcome later — from the same
+//! connection, a new one, or (via the drain snapshot) a successor
+//! process.
+//!
+//! ## Drain and rolling restart
+//!
+//! On SIGTERM or a `shutdown` frame the server stops admitting
+//! (submissions get a typed error frame), lets native-lane work finish,
+//! checkpoints every in-flight `Backend::Sim` job at its next quantum
+//! boundary ([`Service::drain`]), notifies attached clients with
+//! `drained` frames, and writes a **snapshot** before exiting cleanly:
+//!
+//! ```text
+//! {"v":1,"snapshot":{"jobs":J,"next_wire_id":K}}      header
+//! {"v":1,"resolved":{"id":N,"frame":{…}}}             retained outcomes
+//! {"v":1,"drained_job":{"id":N,"req":{…},"resume":…}} checkpointed jobs
+//! {"v":1,"end":{"fnv":F}}                             FNV-1a64 trailer
+//! ```
+//!
+//! A freshly exec'd server pointed at the same snapshot path resumes
+//! every drained job **under its original wire id** (hart context image
+//! plus writable regions, re-staged at the original guest addresses),
+//! bit-identical to an uninterrupted run; clients ride through the
+//! restart with reconnect + `attach` polling. The snapshot is written
+//! atomically (tmp + rename), consumed on load, and quarantined as
+//! `*.corrupt` if its checksum fails — a damaged snapshot costs the
+//! drained jobs, never the server.
+
+pub mod frame;
+
+pub use frame::{FrameError, FrameReader, FrameWriter, DEFAULT_MAX_FRAME_BYTES};
+
+use super::json::{self, Value};
+use super::sched::JobCheckpoint;
+use super::service::{DrainedJob, JobEvent, JobHandle, JobSpec, Service, ServiceConfig};
+use super::JobResult;
+use crate::error::Result;
+use frame::{fnv1a64, from_hex, to_hex};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Frame constructors
+// ---------------------------------------------------------------------------
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Smallest integer encoding of a u64 (mirrors the json module's rule).
+fn num(x: u64) -> Value {
+    match i64::try_from(x) {
+        Ok(i) => Value::Int(i),
+        Err(_) => Value::UInt(x),
+    }
+}
+
+fn v1(body: Vec<(&str, Value)>) -> Value {
+    let mut fields = vec![("v", Value::Int(json::WIRE_VERSION))];
+    fields.extend(body);
+    obj(fields)
+}
+
+fn error_frame(msg: &str) -> Value {
+    v1(vec![("error", obj(vec![("msg", Value::Str(msg.into()))]))])
+}
+
+fn ack_frame(id: u64) -> Value {
+    v1(vec![("ack", obj(vec![("id", num(id))]))])
+}
+
+fn pending_frame(id: u64) -> Value {
+    v1(vec![("ack", obj(vec![("id", num(id)), ("pending", Value::Bool(true))]))])
+}
+
+fn shutdown_ack_frame() -> Value {
+    v1(vec![("ack", obj(vec![("shutdown", Value::Bool(true))]))])
+}
+
+fn pong_frame() -> Value {
+    v1(vec![("pong", Value::Bool(true))])
+}
+
+fn drained_frame(id: u64) -> Value {
+    v1(vec![("drained", obj(vec![("id", num(id))]))])
+}
+
+// ---------------------------------------------------------------------------
+// SIGTERM
+// ---------------------------------------------------------------------------
+
+static SIGTERM: AtomicBool = AtomicBool::new(false);
+
+/// Install a SIGTERM handler that requests a graceful drain: the accept
+/// loop observes [`sigterm_received`] and runs the same drain path as a
+/// `shutdown` frame. Direct libc `signal` FFI — the flag store is the
+/// only thing the handler does, which is async-signal-safe.
+#[cfg(unix)]
+pub fn install_sigterm() {
+    extern "C" fn on_term(_sig: i32) {
+        SIGTERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM_NO: i32 = 15;
+    unsafe {
+        signal(SIGTERM_NO, on_term as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm() {}
+
+/// True once SIGTERM has been delivered (sticky).
+pub fn sigterm_received() -> bool {
+    SIGTERM.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Transport-layer policy of a [`Server`] around its [`ServiceConfig`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// The service the transport exposes.
+    pub service: ServiceConfig,
+    /// Per-frame byte ceiling, both directions.
+    pub max_frame_bytes: usize,
+    /// Socket read timeout — the poll tick at which connection threads
+    /// notice drain requests and idle expiry.
+    pub read_timeout: Duration,
+    /// Socket write timeout — bounds how long a slow reader can stall a
+    /// forwarder holding the connection's write lock.
+    pub write_timeout: Duration,
+    /// Reap a connection after this long with no inbound frame, no
+    /// in-flight job, and no buffered partial line.
+    pub idle_timeout: Duration,
+    /// Drain-snapshot location; `None` disables rolling restart (drained
+    /// jobs are lost on exit).
+    pub snapshot_path: Option<PathBuf>,
+    /// Resolved outcomes retained for `attach` (FIFO eviction).
+    pub results_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            service: ServiceConfig::default(),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            read_timeout: Duration::from_millis(250),
+            write_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(60),
+            snapshot_path: None,
+            results_capacity: 1024,
+        }
+    }
+}
+
+/// What a serve run did, reported after the drain completes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServeSummary {
+    /// Jobs the drain checkpointed (or returned undispatched) into the
+    /// snapshot instead of resolving.
+    pub drained: usize,
+    /// Jobs this server resumed from a predecessor's snapshot.
+    pub resumed: usize,
+    /// Terminal outcomes retained in the attach registry at exit.
+    pub resolved: usize,
+    /// TCP connections accepted (stdio counts as one).
+    pub connections: u64,
+}
+
+enum JobState {
+    Running,
+    Resolved(Value),
+}
+
+/// Bounded wire-id → outcome registry backing `attach`.
+struct Registry {
+    jobs: HashMap<u64, JobState>,
+    resolved_order: VecDeque<u64>,
+    capacity: usize,
+}
+
+impl Registry {
+    fn new(capacity: usize) -> Self {
+        Self { jobs: HashMap::new(), resolved_order: VecDeque::new(), capacity: capacity.max(1) }
+    }
+
+    fn resolve(&mut self, id: u64, frame: Value) {
+        self.jobs.insert(id, JobState::Resolved(frame));
+        self.resolved_order.push_back(id);
+        while self.resolved_order.len() > self.capacity {
+            if let Some(old) = self.resolved_order.pop_front() {
+                if matches!(self.jobs.get(&old), Some(JobState::Resolved(_))) {
+                    self.jobs.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn resolved_count(&self) -> usize {
+        self.jobs.values().filter(|s| matches!(s, JobState::Resolved(_))).count()
+    }
+}
+
+type BoxWriter = Box<dyn Write + Send>;
+type SharedWriter = Arc<Mutex<FrameWriter<BoxWriter>>>;
+
+/// Best-effort frame send through a connection's shared writer; false
+/// once the peer is gone (the caller drops the writer and keeps going).
+fn send(w: &SharedWriter, v: &Value) -> bool {
+    w.lock().map(|mut g| g.write_frame(v).is_ok()).unwrap_or(false)
+}
+
+struct Shared {
+    svc: Service,
+    cfg: ServerConfig,
+    draining: AtomicBool,
+    next_wire_id: AtomicU64,
+    registry: Mutex<Registry>,
+    /// Service id → wire id, for the drain snapshot.
+    ids: Mutex<HashMap<u64, u64>>,
+    forwarders: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    conns: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    connections: AtomicU64,
+    resumed: AtomicU64,
+}
+
+/// The network front of a [`Service`]. Cheaply cloneable (an `Arc`);
+/// one clone runs the accept loop while others handle connections. See
+/// the module doc for the protocol.
+#[derive(Clone)]
+pub struct Server(Arc<Shared>);
+
+impl Server {
+    /// Build the server (and its service), then — if
+    /// [`ServerConfig::snapshot_path`] points at a predecessor's drain
+    /// snapshot — resume every drained job under its original wire id.
+    /// A corrupt snapshot is quarantined (`*.corrupt`) and the server
+    /// starts fresh; it never refuses to start.
+    pub fn new(cfg: ServerConfig) -> Self {
+        let svc = Service::new(cfg.service.clone());
+        let capacity = cfg.results_capacity;
+        let server = Server(Arc::new(Shared {
+            svc,
+            cfg,
+            draining: AtomicBool::new(false),
+            next_wire_id: AtomicU64::new(0),
+            registry: Mutex::new(Registry::new(capacity)),
+            ids: Mutex::new(HashMap::new()),
+            forwarders: Mutex::new(Vec::new()),
+            conns: Mutex::new(Vec::new()),
+            connections: AtomicU64::new(0),
+            resumed: AtomicU64::new(0),
+        }));
+        server.load_and_resume();
+        server
+    }
+
+    /// Jobs resumed from a predecessor's snapshot.
+    pub fn resumed(&self) -> u64 {
+        self.0.resumed.load(Ordering::SeqCst)
+    }
+
+    /// Request a graceful drain (same effect as a `shutdown` frame or
+    /// SIGTERM): the accept loop exits and [`Self::serve`] returns.
+    pub fn request_drain(&self) {
+        self.0.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Serve connections from `listener` until a drain is requested
+    /// (`shutdown` frame, [`Self::request_drain`], or SIGTERM), then
+    /// drain, snapshot, and report.
+    pub fn serve(&self, listener: TcpListener) -> Result<ServeSummary> {
+        listener.set_nonblocking(true)?;
+        loop {
+            if self.0.draining.load(Ordering::SeqCst) || sigterm_received() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // The accepted socket can inherit the listener's
+                    // nonblocking mode; connection I/O uses timeouts.
+                    let _ = stream.set_nonblocking(false);
+                    self.0.connections.fetch_add(1, Ordering::SeqCst);
+                    let srv = self.clone();
+                    let h = std::thread::spawn(move || srv.handle_tcp(stream));
+                    if let Ok(mut conns) = self.0.conns.lock() {
+                        conns.push(h);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(self.finish_drain())
+    }
+
+    /// Serve one session over stdin/stdout (frames only on stdout —
+    /// anything human-readable belongs on stderr). Stdin has no read
+    /// timeout, so a drain requested out-of-band is honored at the next
+    /// frame or at EOF; EOF itself triggers the drain.
+    pub fn serve_stdio(&self) -> Result<ServeSummary> {
+        self.0.connections.fetch_add(1, Ordering::SeqCst);
+        let writer: SharedWriter =
+            Arc::new(Mutex::new(FrameWriter::new(Box::new(std::io::stdout()) as BoxWriter)));
+        let mut reader = FrameReader::new(std::io::stdin(), self.0.cfg.max_frame_bytes);
+        let inflight = Arc::new(AtomicU64::new(0));
+        loop {
+            if self.0.draining.load(Ordering::SeqCst) || sigterm_received() {
+                break;
+            }
+            match reader.read_frame() {
+                Ok(v) => self.dispatch(v, &writer, &inflight),
+                Err(FrameError::Timeout) => {}
+                Err(e) if e.is_recoverable() => {
+                    if !send(&writer, &error_frame(&e.to_string())) {
+                        break;
+                    }
+                }
+                Err(_) => break, // EOF / truncation: the session is over
+            }
+        }
+        Ok(self.finish_drain())
+    }
+
+    fn handle_tcp(self, stream: TcpStream) {
+        let cfg = &self.0.cfg;
+        let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+        let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let writer: SharedWriter =
+            Arc::new(Mutex::new(FrameWriter::new(Box::new(write_half) as BoxWriter)));
+        let mut reader = FrameReader::new(stream, cfg.max_frame_bytes);
+        let inflight = Arc::new(AtomicU64::new(0));
+        let mut last_activity = Instant::now();
+        loop {
+            if self.0.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            match reader.read_frame() {
+                Ok(v) => {
+                    last_activity = Instant::now();
+                    self.dispatch(v, &writer, &inflight);
+                }
+                Err(FrameError::Timeout) => {
+                    // The poll tick: reap only a connection that is
+                    // fully quiet — nothing in flight, no partial frame.
+                    if inflight.load(Ordering::SeqCst) == 0
+                        && reader.buffered() == 0
+                        && last_activity.elapsed() >= cfg.idle_timeout
+                    {
+                        break;
+                    }
+                }
+                Err(e) if e.is_recoverable() => {
+                    // Bad JSON or an oversized line: typed error frame
+                    // back, connection stays open (reader resynced).
+                    last_activity = Instant::now();
+                    if !send(&writer, &error_frame(&e.to_string())) {
+                        break;
+                    }
+                }
+                Err(_) => break, // Eof / Truncated / Io
+            }
+        }
+    }
+
+    /// Route one inbound frame. Every failure is an error frame back to
+    /// the peer — bad input never drops a connection.
+    fn dispatch(&self, v: Value, writer: &SharedWriter, inflight: &Arc<AtomicU64>) {
+        if let Err(e) = json::check_version(&v) {
+            send(writer, &error_frame(&e.to_string()));
+            return;
+        }
+        if v.get("job").is_some() {
+            if self.0.draining.load(Ordering::SeqCst) {
+                send(writer, &error_frame("server is draining; resubmit to its successor"));
+                return;
+            }
+            match json::parse_job_request(&v).and_then(|spec| self.0.svc.submit(spec)) {
+                Ok(handle) => {
+                    let wire = self.0.next_wire_id.fetch_add(1, Ordering::SeqCst);
+                    if let Ok(mut ids) = self.0.ids.lock() {
+                        ids.insert(handle.id, wire);
+                    }
+                    if let Ok(mut reg) = self.0.registry.lock() {
+                        reg.jobs.insert(wire, JobState::Running);
+                    }
+                    inflight.fetch_add(1, Ordering::SeqCst);
+                    send(writer, &ack_frame(wire));
+                    self.spawn_forwarder(
+                        wire,
+                        handle,
+                        Some(Arc::clone(writer)),
+                        Some(Arc::clone(inflight)),
+                    );
+                }
+                Err(e) => {
+                    send(writer, &error_frame(&e.to_string()));
+                }
+            }
+            return;
+        }
+        match v.get("cmd").and_then(Value::as_str) {
+            Some("ping") => {
+                send(writer, &pong_frame());
+            }
+            Some("shutdown") => {
+                send(writer, &shutdown_ack_frame());
+                self.0.draining.store(true, Ordering::SeqCst);
+            }
+            Some("attach") => {
+                let Some(id) = v.get("id").and_then(Value::as_u64) else {
+                    send(writer, &error_frame("attach: missing or non-integer \"id\""));
+                    return;
+                };
+                let reply = match self.0.registry.lock() {
+                    Ok(reg) => match reg.jobs.get(&id) {
+                        Some(JobState::Resolved(f)) => f.clone(),
+                        Some(JobState::Running) => pending_frame(id),
+                        None => error_frame(&format!("attach: unknown job id {id}")),
+                    },
+                    Err(_) => error_frame("attach: registry unavailable"),
+                };
+                send(writer, &reply);
+            }
+            Some(cmd) => {
+                send(writer, &error_frame(&format!("unknown command {cmd:?}")));
+            }
+            None => {
+                send(writer, &error_frame("frame has neither \"job\" nor \"cmd\""));
+            }
+        }
+    }
+
+    /// Pump one job's event stream: rewrite service ids to the wire id,
+    /// mirror frames to the submitting connection while it lives, and
+    /// retain the terminal frame for `attach`. A stream that ends
+    /// without a terminal event was drained — the peer (if still
+    /// connected) gets a `drained` notice instead.
+    fn spawn_forwarder(
+        &self,
+        wire: u64,
+        handle: JobHandle,
+        writer: Option<SharedWriter>,
+        inflight: Option<Arc<AtomicU64>>,
+    ) {
+        let shared = Arc::clone(&self.0);
+        let h = std::thread::spawn(move || {
+            let mut writer = writer;
+            let mut terminal = false;
+            while let Some(ev) = handle.recv() {
+                let ev = rewrite_id(ev, wire);
+                let is_term = ev.is_terminal();
+                let frame = json::event_frame(&ev);
+                if is_term {
+                    if let Ok(mut reg) = shared.registry.lock() {
+                        reg.resolve(wire, frame.clone());
+                    }
+                    terminal = true;
+                }
+                if let Some(w) = &writer {
+                    if !send(w, &frame) {
+                        writer = None; // peer gone; keep feeding the registry
+                    }
+                }
+                if is_term {
+                    break;
+                }
+            }
+            if !terminal {
+                if let Some(w) = &writer {
+                    send(w, &drained_frame(wire));
+                }
+            }
+            if let Some(inf) = inflight {
+                inf.fetch_sub(1, Ordering::SeqCst);
+            }
+        });
+        if let Ok(mut fw) = self.0.forwarders.lock() {
+            fw.push(h);
+        }
+    }
+
+    /// The drain sequence: stop admitting, checkpoint in-flight sim work
+    /// ([`Service::drain`]), let forwarders flush their final frames,
+    /// join connection threads, persist the snapshot.
+    fn finish_drain(&self) -> ServeSummary {
+        let sh = &self.0;
+        sh.draining.store(true, Ordering::SeqCst);
+        let drained = sh.svc.drain();
+        // Connection threads first (they observe the drain flag within a
+        // read-timeout tick, and they are what spawns forwarders — once
+        // joined, the forwarder set is final), then the forwarders, whose
+        // streams have ended because the drain joined every event sender.
+        for h in std::mem::take(&mut *sh.conns.lock().expect("connection registry")) {
+            let _ = h.join();
+        }
+        for h in std::mem::take(&mut *sh.forwarders.lock().expect("forwarder registry")) {
+            let _ = h.join();
+        }
+        let resolved = sh.registry.lock().map(|r| r.resolved_count()).unwrap_or(0);
+        if let Some(path) = sh.cfg.snapshot_path.clone() {
+            if let Err(e) = self.write_snapshot(&path, &drained) {
+                eprintln!("percival-serve: snapshot write failed: {e}");
+            }
+        }
+        ServeSummary {
+            drained: drained.len(),
+            resumed: sh.resumed.load(Ordering::SeqCst) as usize,
+            resolved,
+            connections: sh.connections.load(Ordering::SeqCst),
+        }
+    }
+
+    fn write_snapshot(&self, path: &Path, drained: &[DrainedJob]) -> Result<()> {
+        let sh = &self.0;
+        let ids = sh.ids.lock().map_err(|_| crate::err!("id map unavailable"))?;
+        let mut body = String::new();
+        let header = v1(vec![(
+            "snapshot",
+            obj(vec![
+                ("jobs", num(drained.len() as u64)),
+                ("next_wire_id", num(sh.next_wire_id.load(Ordering::SeqCst))),
+            ]),
+        )]);
+        body.push_str(&header.to_string());
+        body.push('\n');
+        {
+            let reg = sh.registry.lock().map_err(|_| crate::err!("registry unavailable"))?;
+            let mut resolved: Vec<(&u64, &Value)> = reg
+                .jobs
+                .iter()
+                .filter_map(|(id, st)| match st {
+                    JobState::Resolved(f) => Some((id, f)),
+                    JobState::Running => None,
+                })
+                .collect();
+            resolved.sort_by_key(|(id, _)| **id);
+            for (id, frame) in resolved {
+                let line =
+                    v1(vec![("resolved", obj(vec![("id", num(*id)), ("frame", frame.clone())]))]);
+                body.push_str(&line.to_string());
+                body.push('\n');
+            }
+        }
+        for dj in drained {
+            let Some(&wire) = ids.get(&dj.id) else {
+                eprintln!("percival-serve: drained job {} has no wire id; dropped", dj.id);
+                continue;
+            };
+            let resume = match &dj.resume {
+                Some(ck) => resume_obj(ck),
+                None => Value::Null,
+            };
+            let line = v1(vec![(
+                "drained_job",
+                obj(vec![
+                    ("id", num(wire)),
+                    ("req", json::job_request(&dj.spec)),
+                    ("resume", resume),
+                ]),
+            )]);
+            body.push_str(&line.to_string());
+            body.push('\n');
+        }
+        let trailer = v1(vec![("end", obj(vec![("fnv", num(fnv1a64(body.as_bytes())))]))]);
+        body.push_str(&trailer.to_string());
+        body.push('\n');
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, body)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    fn load_and_resume(&self) {
+        let Some(path) = self.0.cfg.snapshot_path.clone() else { return };
+        if !path.exists() {
+            return;
+        }
+        match load_snapshot(&path) {
+            Ok(snap) => {
+                self.0.next_wire_id.store(snap.next_wire_id, Ordering::SeqCst);
+                if let Ok(mut reg) = self.0.registry.lock() {
+                    for (id, frame) in snap.resolved {
+                        reg.resolve(id, frame);
+                    }
+                }
+                for (wire, spec) in snap.jobs {
+                    match self.0.svc.submit(spec) {
+                        Ok(handle) => {
+                            if let Ok(mut ids) = self.0.ids.lock() {
+                                ids.insert(handle.id, wire);
+                            }
+                            if let Ok(mut reg) = self.0.registry.lock() {
+                                reg.jobs.insert(wire, JobState::Running);
+                            }
+                            self.0.resumed.fetch_add(1, Ordering::SeqCst);
+                            // No connection owns a resumed job; its
+                            // outcome lands in the registry for attach.
+                            self.spawn_forwarder(wire, handle, None, None);
+                        }
+                        Err(e) => {
+                            eprintln!("percival-serve: could not resume job {wire}: {e}")
+                        }
+                    }
+                }
+                // Consumed: a crash loop must not replay stale state.
+                let _ = std::fs::remove_file(&path);
+            }
+            Err(e) => {
+                eprintln!(
+                    "percival-serve: snapshot {} unreadable ({e}); starting fresh",
+                    path.display()
+                );
+                let _ = std::fs::rename(&path, path.with_extension("corrupt"));
+            }
+        }
+    }
+}
+
+/// Re-key a service-side event onto its wire id.
+fn rewrite_id(ev: JobEvent, wire: u64) -> JobEvent {
+    match ev {
+        JobEvent::Queued { .. } => JobEvent::Queued { id: wire },
+        JobEvent::Started { hart, .. } => JobEvent::Started { id: wire, hart },
+        JobEvent::Checkpointed { count, .. } => JobEvent::Checkpointed { id: wire, count },
+        JobEvent::Migrated { from, to, .. } => JobEvent::Migrated { id: wire, from, to },
+        JobEvent::Done { seq, result, .. } => JobEvent::Done { id: wire, seq, result },
+        JobEvent::Failed { seq, error, .. } => JobEvent::Failed { id: wire, seq, error },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot serialization
+// ---------------------------------------------------------------------------
+
+fn resume_obj(ck: &JobCheckpoint) -> Value {
+    obj(vec![
+        ("image", Value::Str(to_hex(&ck.image))),
+        ("out", Value::Str(to_hex(&ck.out_bytes))),
+        ("spill", Value::Str(to_hex(&ck.spill_bytes))),
+        ("instret", num(ck.instret)),
+        ("a_addr", num(ck.a_addr)),
+        ("b_addr", num(ck.b_addr)),
+        ("out_addr", num(ck.out_addr)),
+        ("spill_addr", num(ck.spill_addr)),
+        ("retries", num(ck.retries)),
+        ("migrations", num(ck.migrations)),
+        ("checkpoints", num(ck.checkpoints)),
+    ])
+}
+
+fn snap_u64(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| crate::err!("snapshot: missing or non-integer field {key:?}"))
+}
+
+fn snap_hex(v: &Value, key: &str) -> Result<Vec<u8>> {
+    let s = v
+        .get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| crate::err!("snapshot: missing hex field {key:?}"))?;
+    from_hex(s).map_err(|e| crate::err!("snapshot: field {key:?}: {e}"))
+}
+
+fn parse_resume(v: &Value) -> Result<JobCheckpoint> {
+    Ok(JobCheckpoint {
+        image: snap_hex(v, "image")?,
+        out_bytes: snap_hex(v, "out")?,
+        spill_bytes: snap_hex(v, "spill")?,
+        instret: snap_u64(v, "instret")?,
+        a_addr: snap_u64(v, "a_addr")?,
+        b_addr: snap_u64(v, "b_addr")?,
+        out_addr: snap_u64(v, "out_addr")?,
+        spill_addr: snap_u64(v, "spill_addr")?,
+        retries: snap_u64(v, "retries")?,
+        migrations: snap_u64(v, "migrations")?,
+        checkpoints: snap_u64(v, "checkpoints")?,
+    })
+}
+
+struct Snapshot {
+    next_wire_id: u64,
+    resolved: Vec<(u64, Value)>,
+    jobs: Vec<(u64, JobSpec)>,
+}
+
+fn load_snapshot(path: &Path) -> Result<Snapshot> {
+    let text = std::fs::read_to_string(path)?;
+    let stripped = text.trim_end();
+    let nl = stripped.rfind('\n').ok_or_else(|| crate::err!("snapshot: too short"))?;
+    let (body, trailer) = stripped.split_at(nl + 1);
+    let tv = json::parse(trailer).map_err(|e| crate::err!("snapshot trailer: {e}"))?;
+    json::check_version(&tv)?;
+    let want = tv
+        .get("end")
+        .and_then(|e| e.get("fnv"))
+        .and_then(Value::as_u64)
+        .ok_or_else(|| crate::err!("snapshot: trailer is not an end frame"))?;
+    let got = fnv1a64(body.as_bytes());
+    crate::ensure!(
+        want == got,
+        "snapshot checksum mismatch (stored {want:#x}, computed {got:#x})"
+    );
+    let mut lines = body.lines();
+    let header = json::parse(
+        lines.next().ok_or_else(|| crate::err!("snapshot: missing header"))?,
+    )
+    .map_err(|e| crate::err!("snapshot header: {e}"))?;
+    json::check_version(&header)?;
+    let hv = header
+        .get("snapshot")
+        .ok_or_else(|| crate::err!("snapshot: first line is not a snapshot header"))?;
+    let next_wire_id = snap_u64(hv, "next_wire_id")?;
+    let mut resolved = Vec::new();
+    let mut jobs = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let v = json::parse(line)
+            .map_err(|e| crate::err!("snapshot line {}: {e}", lineno + 2))?;
+        json::check_version(&v)?;
+        if let Some(r) = v.get("resolved") {
+            let id = snap_u64(r, "id")?;
+            let frame = r
+                .get("frame")
+                .ok_or_else(|| crate::err!("snapshot: resolved {id} missing frame"))?;
+            resolved.push((id, frame.clone()));
+        } else if let Some(d) = v.get("drained_job") {
+            let id = snap_u64(d, "id")?;
+            let req = d
+                .get("req")
+                .ok_or_else(|| crate::err!("snapshot: drained job {id} missing request"))?;
+            let mut spec = json::parse_job_request(req)?;
+            spec.resume = match d.get("resume") {
+                None | Some(Value::Null) => None,
+                Some(r) => Some(parse_resume(r)?),
+            };
+            jobs.push((id, spec));
+        } else {
+            return Err(crate::err!("snapshot line {}: unknown record", lineno + 2));
+        }
+    }
+    Ok(Snapshot { next_wire_id, resolved, jobs })
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Wire-level fault plan of the in-tree [`Client`]: deterministic,
+/// seeded faults injected into the client's **outgoing** frame stream
+/// (frame indices are client-lifetime ordinals across reconnects).
+/// Mirrors the scheduler-level `FaultPlan` one layer down the stack.
+#[derive(Debug, Clone, Default)]
+pub struct NetFaultPlan {
+    /// Kill the connection right after fully writing these frames (the
+    /// server may have admitted the job; the client never learns).
+    pub kill_after: Vec<u64>,
+    /// Write only half of these frames, then kill the connection.
+    pub truncate: Vec<u64>,
+    /// Flip the leading byte of these frames (`{` → `[`): still one
+    /// line, no longer a valid frame — provokes a typed error frame.
+    pub corrupt: Vec<u64>,
+    /// Every `n`-th frame is written in two halves with a pause between
+    /// (`0` disables) — a slow writer the server must tolerate.
+    pub slow_every: u64,
+    pub slow_delay: Duration,
+}
+
+impl NetFaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kill_after.is_empty()
+            && self.truncate.is_empty()
+            && self.corrupt.is_empty()
+            && self.slow_every == 0
+    }
+
+    /// Deterministic plan from a seed: each fault class independently
+    /// present with probability 1/2, aimed at the first few outgoing
+    /// frames (where the submissions are).
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng = crate::testing::Rng::new(seed ^ 0x009E_7F13);
+        let mut plan = Self::none();
+        if rng.next_u64() % 2 == 0 {
+            plan.kill_after.push(rng.next_u64() % 6);
+        }
+        if rng.next_u64() % 2 == 0 {
+            plan.truncate.push(rng.next_u64() % 6);
+        }
+        if rng.next_u64() % 2 == 0 {
+            plan.corrupt.push(rng.next_u64() % 6);
+        }
+        if rng.next_u64() % 2 == 0 {
+            plan.slow_every = 2 + rng.next_u64() % 3;
+            plan.slow_delay = Duration::from_millis(5 + rng.next_u64() % 20);
+        }
+        plan
+    }
+}
+
+/// Client connection/retry policy.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// `host:port` of the server.
+    pub addr: String,
+    /// Reconnect/resubmit attempts before a typed error.
+    pub max_retries: u32,
+    /// Base reconnect backoff, doubled per attempt (capped at 64×).
+    pub backoff: Duration,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    pub max_frame_bytes: usize,
+    /// Wire-level faults to inject (default: none).
+    pub faults: NetFaultPlan,
+}
+
+impl ClientConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            max_retries: 5,
+            backoff: Duration::from_millis(50),
+            read_timeout: Duration::from_millis(250),
+            write_timeout: Duration::from_secs(5),
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            faults: NetFaultPlan::none(),
+        }
+    }
+}
+
+/// What the client observed and injected — retries and migrations stay
+/// visible all the way up, faults included.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    pub reconnects: u64,
+    pub resubmits: u64,
+    pub injected_kills: u64,
+    pub injected_truncations: u64,
+    pub injected_corruptions: u64,
+    pub slow_frames: u64,
+    pub error_frames: u64,
+    pub attach_polls: u64,
+    pub drained_notices: u64,
+    pub skipped_frames: u64,
+}
+
+struct Conn {
+    reader: FrameReader<TcpStream>,
+    writer: TcpStream,
+}
+
+enum Sent {
+    Intact,
+    /// Written whole but deliberately corrupted — an error frame is the
+    /// expected response.
+    Corrupted,
+    /// The connection died under this frame (injected or real).
+    Dead,
+}
+
+enum Inbound {
+    Ack(u64),
+    Pending(u64),
+    ErrorMsg(String),
+    Event(JobEvent),
+    Drained(u64),
+    Other,
+}
+
+/// Reconnecting line-frame client of a [`Server`], with bounded
+/// retry-with-backoff and optional [`NetFaultPlan`] injection. Survives
+/// connection loss mid-stream (falls back to `attach` polling, riding
+/// through a server's rolling restart) and surfaces wire version skew
+/// as a typed error.
+pub struct Client {
+    cfg: ClientConfig,
+    conn: Option<Conn>,
+    /// Bumped per (re)connect; events stream only for jobs submitted on
+    /// the current connection — older jobs are attach-polled.
+    conn_gen: u64,
+    /// Client-lifetime outgoing frame ordinal (the fault-plan index).
+    frames_out: u64,
+    /// Buffered events of interleaved jobs, keyed by wire id.
+    pending: HashMap<u64, VecDeque<JobEvent>>,
+    submitted_gen: HashMap<u64, u64>,
+    /// Jobs the server announced as drained — resolve via attach.
+    drained_ids: HashSet<u64>,
+    pub stats: ClientStats,
+}
+
+impl Client {
+    /// Connect (with retry/backoff) to a server.
+    pub fn connect(cfg: ClientConfig) -> Result<Self> {
+        let mut c = Self {
+            cfg,
+            conn: None,
+            conn_gen: 0,
+            frames_out: 0,
+            pending: HashMap::new(),
+            submitted_gen: HashMap::new(),
+            drained_ids: HashSet::new(),
+            stats: ClientStats::default(),
+        };
+        c.ensure_conn()?;
+        Ok(c)
+    }
+
+    fn backoff_for(&self, attempt: u32) -> Duration {
+        self.cfg.backoff * (1u32 << attempt.min(6))
+    }
+
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut attempt = 0u32;
+        loop {
+            match TcpStream::connect(&self.cfg.addr) {
+                Ok(s) => {
+                    let _ = s.set_read_timeout(Some(self.cfg.read_timeout));
+                    let _ = s.set_write_timeout(Some(self.cfg.write_timeout));
+                    let writer = s.try_clone()?;
+                    self.conn = Some(Conn {
+                        reader: FrameReader::new(s, self.cfg.max_frame_bytes),
+                        writer,
+                    });
+                    self.conn_gen += 1;
+                    if self.conn_gen > 1 {
+                        self.stats.reconnects += 1;
+                    }
+                    return Ok(());
+                }
+                Err(e) => {
+                    attempt += 1;
+                    if attempt > self.cfg.max_retries {
+                        return Err(crate::err!(
+                            "connect {}: {e} (after {attempt} attempts)",
+                            self.cfg.addr
+                        ));
+                    }
+                    std::thread::sleep(self.backoff_for(attempt));
+                }
+            }
+        }
+    }
+
+    /// Write one frame, applying the fault plan by outgoing ordinal.
+    fn send_frame(&mut self, v: &Value) -> Result<Sent> {
+        self.ensure_conn()?;
+        let idx = self.frames_out;
+        self.frames_out += 1;
+        let mut line = v.to_string().into_bytes();
+        line.push(b'\n');
+        let truncate = self.cfg.faults.truncate.contains(&idx);
+        let corrupt = self.cfg.faults.corrupt.contains(&idx);
+        let kill = self.cfg.faults.kill_after.contains(&idx);
+        let slow = self.cfg.faults.slow_every != 0 && idx % self.cfg.faults.slow_every == 1;
+        let slow_delay = self.cfg.faults.slow_delay;
+        let mut conn = self.conn.take().expect("connection present");
+        if truncate {
+            self.stats.injected_truncations += 1;
+            let cut = (line.len() / 2).max(1);
+            let _ = conn.writer.write_all(&line[..cut]);
+            let _ = conn.writer.flush();
+            let _ = conn.writer.shutdown(std::net::Shutdown::Both);
+            return Ok(Sent::Dead); // conn stays None
+        }
+        if corrupt {
+            self.stats.injected_corruptions += 1;
+            line[0] = b'[';
+        }
+        let wrote = if slow {
+            self.stats.slow_frames += 1;
+            let cut = (line.len() / 2).max(1);
+            conn.writer
+                .write_all(&line[..cut])
+                .and_then(|()| conn.writer.flush())
+                .and_then(|()| {
+                    std::thread::sleep(slow_delay);
+                    conn.writer.write_all(&line[cut..])
+                })
+                .and_then(|()| conn.writer.flush())
+        } else {
+            conn.writer.write_all(&line).and_then(|()| conn.writer.flush())
+        };
+        if wrote.is_err() {
+            return Ok(Sent::Dead); // conn stays None; caller retries
+        }
+        if kill {
+            self.stats.injected_kills += 1;
+            let _ = conn.writer.shutdown(std::net::Shutdown::Both);
+            return Ok(Sent::Dead);
+        }
+        self.conn = Some(conn);
+        Ok(if corrupt { Sent::Corrupted } else { Sent::Intact })
+    }
+
+    /// Read one frame from the live connection; `Timeout` is a tick.
+    fn recv_frame(&mut self) -> Result<Value, FrameError> {
+        match self.conn.as_mut() {
+            Some(c) => {
+                let r = c.reader.read_frame();
+                if matches!(r, Err(ref e) if !e.is_recoverable()) {
+                    self.conn = None;
+                }
+                r
+            }
+            None => Err(FrameError::Eof),
+        }
+    }
+
+    /// Classify an inbound frame. Version skew is a typed error — the
+    /// one inbound condition the client refuses to guess about.
+    fn classify(&mut self, v: Value) -> Result<Inbound> {
+        json::check_version(&v)?;
+        if let Some(a) = v.get("ack") {
+            if let Some(id) = a.get("id").and_then(Value::as_u64) {
+                let pending = a.get("pending").and_then(Value::as_bool).unwrap_or(false);
+                return Ok(if pending { Inbound::Pending(id) } else { Inbound::Ack(id) });
+            }
+            return Ok(Inbound::Other); // shutdown ack
+        }
+        if let Some(e) = v.get("error") {
+            self.stats.error_frames += 1;
+            let msg = e.get("msg").and_then(Value::as_str).unwrap_or("unspecified").to_string();
+            return Ok(Inbound::ErrorMsg(msg));
+        }
+        if v.get("event").is_some() {
+            return Ok(Inbound::Event(json::parse_event_frame(&v)?));
+        }
+        if let Some(d) = v.get("drained") {
+            self.stats.drained_notices += 1;
+            return Ok(Inbound::Drained(d.get("id").and_then(Value::as_u64).unwrap_or(u64::MAX)));
+        }
+        if v.get("pong").is_none() {
+            self.stats.skipped_frames += 1;
+        }
+        Ok(Inbound::Other)
+    }
+
+    fn buffer_event(&mut self, ev: JobEvent) {
+        self.pending.entry(ev.id()).or_default().push_back(ev);
+    }
+
+    /// Submit a job; returns its server wire id once acked. A killed or
+    /// corrupted submission (injected or real) is retried on a fresh
+    /// connection, bounded by `max_retries`.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<u64> {
+        let frame = json::job_request(spec);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            if attempt > self.cfg.max_retries + 1 {
+                return Err(crate::err!("submit: no ack after {} attempts", attempt - 1));
+            }
+            if attempt > 1 {
+                self.stats.resubmits += 1;
+            }
+            let sent = self.send_frame(&frame)?;
+            let expect_error = matches!(sent, Sent::Corrupted);
+            if matches!(sent, Sent::Dead) {
+                continue;
+            }
+            match self.read_ack(Duration::from_secs(10)) {
+                Ok(Some(id)) => {
+                    self.submitted_gen.insert(id, self.conn_gen);
+                    return Ok(id);
+                }
+                Ok(None) => continue, // connection died before the ack
+                Err(e) if expect_error => {
+                    // The error frame our own corruption provoked —
+                    // framing held; retry on the same connection.
+                    let _ = e;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Read until this submission's ack. `Ok(None)` = connection died
+    /// (retry); an error frame is a typed rejection.
+    fn read_ack(&mut self, timeout: Duration) -> Result<Option<u64>> {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            match self.recv_frame() {
+                Ok(v) => match self.classify(v)? {
+                    Inbound::Ack(id) => return Ok(Some(id)),
+                    Inbound::ErrorMsg(msg) => return Err(crate::err!("submit rejected: {msg}")),
+                    Inbound::Event(ev) => self.buffer_event(ev),
+                    Inbound::Drained(id) => {
+                        self.drained_ids.insert(id);
+                    }
+                    Inbound::Pending(_) | Inbound::Other => {}
+                },
+                Err(FrameError::Timeout) => {}
+                Err(_) => return Ok(None),
+            }
+        }
+        Err(crate::err!("submit: no ack within {timeout:?}"))
+    }
+
+    /// Take a buffered terminal outcome for `id`, if one arrived while
+    /// other jobs were being serviced.
+    fn take_buffered_terminal(&mut self, id: u64) -> Option<Result<JobResult>> {
+        let q = self.pending.get_mut(&id)?;
+        while let Some(ev) = q.pop_front() {
+            match ev {
+                JobEvent::Done { result, .. } => return Some(Ok(result)),
+                JobEvent::Failed { error, .. } => return Some(Err(error)),
+                _ => {}
+            }
+        }
+        None
+    }
+
+    /// Wait for a job's outcome: stream events while the submitting
+    /// connection lives, fall back to reconnect + `attach` polling once
+    /// it dies or the server announces a drain. Survives a server
+    /// rolling restart (wire ids persist through the snapshot).
+    pub fn wait(&mut self, id: u64, timeout: Duration) -> Result<JobResult> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(outcome) = self.take_buffered_terminal(id) {
+                return outcome;
+            }
+            if Instant::now() >= deadline {
+                return Err(crate::err!("job {id}: no result within {timeout:?}"));
+            }
+            let streaming = self.conn.is_some()
+                && self.submitted_gen.get(&id) == Some(&self.conn_gen)
+                && !self.drained_ids.contains(&id);
+            if streaming {
+                match self.recv_frame() {
+                    Ok(v) => match self.classify(v)? {
+                        Inbound::Event(ev) => self.buffer_event(ev),
+                        Inbound::Drained(d) => {
+                            self.drained_ids.insert(d);
+                        }
+                        _ => {}
+                    },
+                    Err(FrameError::Timeout) => {}
+                    Err(e) if e.is_recoverable() => {}
+                    Err(_) => {} // recv_frame dropped the connection
+                }
+            } else if let Some(ev) = self.attach_once(id)? {
+                match ev {
+                    JobEvent::Done { result, .. } => return Ok(result),
+                    JobEvent::Failed { error, .. } => return Err(error),
+                    _ => {}
+                }
+            } else {
+                std::thread::sleep(self.cfg.backoff);
+            }
+        }
+    }
+
+    /// One attach poll: `Ok(Some(_))` is the job's terminal event;
+    /// `Ok(None)` means still running / server unreachable (back off and
+    /// poll again).
+    fn attach_once(&mut self, id: u64) -> Result<Option<JobEvent>> {
+        self.stats.attach_polls += 1;
+        if self.ensure_conn().is_err() {
+            // Server likely mid-restart; the wait deadline bounds us.
+            return Ok(None);
+        }
+        let fr = v1(vec![("cmd", Value::Str("attach".into())), ("id", num(id))]);
+        match self.send_frame(&fr)? {
+            Sent::Dead => return Ok(None),
+            Sent::Corrupted | Sent::Intact => {}
+        }
+        let poll_deadline = Instant::now() + Duration::from_secs(2);
+        while Instant::now() < poll_deadline {
+            match self.recv_frame() {
+                Ok(v) => match self.classify(v)? {
+                    Inbound::Event(ev) if ev.id() == id && ev.is_terminal() => {
+                        return Ok(Some(ev))
+                    }
+                    Inbound::Event(ev) => self.buffer_event(ev),
+                    Inbound::Pending(p) if p == id => return Ok(None),
+                    Inbound::ErrorMsg(msg) if msg.contains("unknown job id") => {
+                        return Err(crate::err!("attach {id}: {msg}"))
+                    }
+                    // Any other error frame (e.g. from our own injected
+                    // corruption): poll again.
+                    Inbound::ErrorMsg(_) => return Ok(None),
+                    Inbound::Drained(d) => {
+                        self.drained_ids.insert(d);
+                    }
+                    Inbound::Ack(_) | Inbound::Pending(_) | Inbound::Other => {}
+                },
+                Err(FrameError::Timeout) => {}
+                Err(_) => return Ok(None),
+            }
+        }
+        Ok(None)
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        let fr = v1(vec![("cmd", Value::Str("ping".into()))]);
+        match self.send_frame(&fr)? {
+            Sent::Dead => return Err(crate::err!("ping: connection died")),
+            Sent::Corrupted | Sent::Intact => {}
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            match self.recv_frame() {
+                Ok(v) => {
+                    if v.get("pong").is_some() {
+                        return Ok(());
+                    }
+                    match self.classify(v)? {
+                        Inbound::Event(ev) => self.buffer_event(ev),
+                        Inbound::ErrorMsg(msg) => return Err(crate::err!("ping: {msg}")),
+                        _ => {}
+                    }
+                }
+                Err(FrameError::Timeout) => {}
+                Err(e) => return Err(crate::err!("ping: {e}")),
+            }
+        }
+        Err(crate::err!("ping: no pong within 5s"))
+    }
+
+    /// Ask the server to drain and exit (best-effort; the ack may race
+    /// the server's shutdown).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        let fr = v1(vec![("cmd", Value::Str("shutdown".into()))]);
+        match self.send_frame(&fr)? {
+            Sent::Dead => Err(crate::err!("shutdown: connection died")),
+            Sent::Corrupted | Sent::Intact => Ok(()),
+        }
+    }
+}

@@ -107,6 +107,7 @@ use crate::error::Result;
 use crate::isa::asm::{assemble, Program};
 use crate::isa::PositFmt;
 use crate::testing::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, OnceLock};
 
@@ -200,6 +201,13 @@ pub struct SimPoolConfig {
     pub max_queue_depth: usize,
     /// Faults to inject (default: none).
     pub faults: FaultPlan,
+    /// Cooperative drain request, checked at quantum boundaries. When
+    /// the flag flips true every hart checkpoints its in-flight jobs
+    /// (context image + writable regions, quire spilled through the real
+    /// `qsq` kernel) and stops; unresolved jobs come back in the report
+    /// as [`SimJobReport::drained`] with a portable [`JobCheckpoint`] a
+    /// later batch — possibly in a different process — can resume from.
+    pub drain: Option<Arc<AtomicBool>>,
 }
 
 impl Default for SimPoolConfig {
@@ -211,8 +219,43 @@ impl Default for SimPoolConfig {
             checkpoint_quanta: 0,
             max_queue_depth: 0,
             faults: FaultPlan::default(),
+            drain: None,
         }
     }
+}
+
+impl SimPoolConfig {
+    /// Whether a graceful drain has been requested for this pool.
+    pub fn drain_requested(&self) -> bool {
+        self.drain.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+}
+
+/// Portable resume state of a drained in-flight job: everything a later
+/// batch needs to continue it bit-identically — the versioned,
+/// checksummed [`HartContext`] image, the job's writable memory (output
+/// region + quire spill slot), its instruction-count progress, the
+/// absolute region addresses the image's pointers refer to (resumed jobs
+/// are re-staged at exactly these addresses), and the fault-tolerance
+/// counters so `Stats` continuity survives a restart.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobCheckpoint {
+    /// [`HartContext::to_image`] bytes (self-validating at restore).
+    pub image: Vec<u8>,
+    /// Output region at capture.
+    pub out_bytes: Vec<u8>,
+    /// Quire spill slot at capture (authoritative for the quire).
+    pub spill_bytes: Vec<u8>,
+    /// Retired instructions of the checkpointed lineage.
+    pub instret: u64,
+    pub a_addr: u64,
+    pub b_addr: u64,
+    pub out_addr: u64,
+    pub spill_addr: u64,
+    /// Counters carried across the restart.
+    pub retries: u64,
+    pub migrations: u64,
+    pub checkpoints: u64,
 }
 
 /// One job's outcome under contention.
@@ -238,6 +281,13 @@ pub struct SimJobReport {
     /// Why the job failed; `None` means [`Self::bits64`] is valid. A
     /// failed job never fails the batch — and never panics a worker.
     pub error: Option<crate::error::Error>,
+    /// True when a requested drain stopped the batch before this job
+    /// resolved: the job neither completed nor failed, and [`Self::resume`]
+    /// (when the job had started) carries the state to continue it from.
+    pub drained: bool,
+    /// Resume state of a drained in-flight job (`None` for a drained job
+    /// that never got a first quantum — it restarts from scratch).
+    pub resume: Option<JobCheckpoint>,
 }
 
 /// One hart's aggregate outcome.
@@ -462,6 +512,13 @@ fn place(slot: &mut Slot, base: u64) -> u64 {
     slot.b_addr = page(slot.a_addr + slot.a.len() as u64 * eb);
     slot.out_addr = page(slot.b_addr + slot.b.len() as u64 * eb);
     slot.spill_addr = page(slot.out_addr + slot.out_len as u64 * eb);
+    install_args(slot);
+    page(slot.spill_addr + slot.fmt.quire_bytes() as u64)
+}
+
+/// Install the kernel's argument registers for the slot's assigned
+/// addresses and fix the pristine restart image.
+fn install_args(slot: &mut Slot) {
     if slot.dot {
         set_dot_args(
             &mut slot.ctx,
@@ -474,7 +531,54 @@ fn place(slot: &mut Slot, base: u64) -> u64 {
         set_gemm_args(&mut slot.ctx, slot.a_addr, slot.b_addr, slot.out_addr);
     }
     slot.init_ctx = slot.ctx.clone();
-    page(slot.spill_addr + slot.fmt.quire_bytes() as u64)
+}
+
+/// Re-stage a drained job at the exact addresses its [`JobCheckpoint`]
+/// was captured at (a context image holds absolute pointers, so resumed
+/// jobs may not be re-placed) and install the checkpoint as the slot's
+/// restore point. The layout is validated typed — a snapshot from a
+/// hostile or skewed writer is rejected at admission, and a checkpoint
+/// whose *image* fails its checksum later falls back to a from-scratch
+/// restart in [`reset_slot`] (costing one retry), never a panic.
+fn restore_placement(slot: &mut Slot, ck: &JobCheckpoint) -> Result<()> {
+    let page = |x: u64| (x + 0xFFF) & !0xFFF;
+    let eb = slot.fmt.bytes() as u64;
+    let idx = slot.idx;
+    for (name, addr) in
+        [("a", ck.a_addr), ("b", ck.b_addr), ("out", ck.out_addr), ("spill", ck.spill_addr)]
+    {
+        crate::ensure!(
+            addr >= 0x1000 && addr & 0xFFF == 0,
+            "job {idx}: resume {name} address {addr:#x} is not a page-aligned region base"
+        );
+    }
+    crate::ensure!(
+        ck.b_addr >= page(ck.a_addr + slot.a.len() as u64 * eb)
+            && ck.out_addr >= page(ck.b_addr + slot.b.len() as u64 * eb)
+            && ck.spill_addr >= page(ck.out_addr + slot.out_len as u64 * eb),
+        "job {idx}: resume region layout overlaps the job's own regions"
+    );
+    crate::ensure!(
+        ck.out_bytes.len() == slot.out_len * eb as usize
+            && ck.spill_bytes.len() == slot.fmt.quire_bytes(),
+        "job {idx}: resume writable-region capture has the wrong size"
+    );
+    slot.a_addr = ck.a_addr;
+    slot.b_addr = ck.b_addr;
+    slot.out_addr = ck.out_addr;
+    slot.spill_addr = ck.spill_addr;
+    install_args(slot);
+    slot.ckpt = Some(Checkpoint {
+        image: ck.image.clone(),
+        out_bytes: ck.out_bytes.clone(),
+        spill_bytes: ck.spill_bytes.clone(),
+        instret: ck.instret,
+    });
+    slot.needs_reset = true;
+    slot.retries = ck.retries;
+    slot.migrations = ck.migrations;
+    slot.checkpoints = ck.checkpoints;
+    Ok(())
 }
 
 /// One simulated hart: its core plus the scheduler's bookkeeping.
@@ -501,6 +605,10 @@ struct Hart {
     deadline_misses: u64,
     injected: u64,
     jobs_done: usize,
+    /// Set once this hart has observed a drain request and captured its
+    /// in-flight state — keeps [`drain_hart`] one-shot even though the
+    /// runner loops keep polling [`hart_step`] until they notice.
+    drained: bool,
 }
 
 impl Hart {
@@ -521,6 +629,7 @@ impl Hart {
             deadline_misses: 0,
             injected: 0,
             jobs_done: 0,
+            drained: false,
         }
     }
 }
@@ -761,11 +870,56 @@ fn run_quantum(hart: &mut Hart, slots: &mut [Slot], idx: usize, pool: &SimPoolCo
     }
 }
 
+/// A drain request reached this hart: capture resume state for every
+/// unresolved job it owns, then park. The active job goes through the
+/// full [`checkpoint`] path (its quire is spilled through the real `qsq`
+/// kernel, cycle-accounted as usual); preempted-but-started jobs already
+/// have their context snapshot in [`Slot::ctx`] and their quire spilled
+/// to memory from the preemption, so their state is captured directly.
+/// Jobs mid-retry keep their last checkpoint; never-started jobs keep
+/// nothing and will restart from scratch on resume.
+fn drain_hart(hart: &mut Hart, slots: &mut [Slot]) {
+    if let Some(idx) = hart.active.take() {
+        if !slots[idx].done && slots[idx].failed.is_none() {
+            checkpoint(hart, &mut slots[idx]);
+        }
+    }
+    for pos in 0..hart.queue.len() {
+        let s = &mut slots[hart.queue[pos]];
+        if s.done || s.failed.is_some() || !s.started || s.needs_reset {
+            continue;
+        }
+        // Preempted with live state in this hart's memory: the ctx
+        // snapshot plus the memory regions (quire already spilled by the
+        // preemption's qsq) are a complete resume state.
+        let image = s.ctx.to_image();
+        let out_bytes = hart.core.mem.read_bytes(s.out_addr, s.out_len * s.fmt.bytes()).to_vec();
+        let spill_bytes = hart.core.mem.read_bytes(s.spill_addr, s.fmt.quire_bytes()).to_vec();
+        s.ckpt = Some(Checkpoint { image, out_bytes, spill_bytes, instret: s.progress });
+        s.checkpoints += 1;
+        hart.checkpoints += 1;
+        if let Some(ev) = &s.events {
+            ev.checkpointed(s.checkpoints);
+        }
+    }
+}
+
 /// One scheduling round on one hart: pick the next runnable slot
 /// (round-robin, skipping jobs in backoff), context-switch to it, run
 /// one quantum and classify the halt. Returns false when the hart has
 /// nothing left to do.
 fn hart_step(hart: &mut Hart, slots: &mut [Slot], pool: &SimPoolConfig) -> bool {
+    if pool.drain_requested() {
+        // Graceful drain: checkpoint in-flight work at this quantum
+        // boundary and stop. All three runner modes (serial rounds,
+        // free-running workers, lockstep conductor) loop on this return
+        // value, so one check covers every scheduler.
+        if !hart.drained {
+            hart.drained = true;
+            drain_hart(hart, slots);
+        }
+        return false;
+    }
     let n = hart.queue.len();
     if n == 0 {
         return false;
@@ -905,9 +1059,21 @@ fn stage_batch(
     // Global placement: one address-space layout shared by every hart,
     // so a checkpointed context's absolute pointers stay valid wherever
     // the job migrates. Each hart's memory is grown to fit all of it.
+    // Resumed jobs (drained out of an earlier batch, possibly in a
+    // previous process) keep the exact addresses their checkpoint was
+    // captured at; fresh jobs are placed after all resumed regions.
+    let page = |x: u64| (x + 0xFFF) & !0xFFF;
     let mut next_base = 0x1000u64;
-    for slot in slots.iter_mut() {
-        next_base = place(slot, next_base);
+    for (slot, spec) in slots.iter_mut().zip(specs) {
+        if let Some(ck) = &spec.resume {
+            restore_placement(slot, ck)?;
+            next_base = next_base.max(page(slot.spill_addr + slot.fmt.quire_bytes() as u64));
+        }
+    }
+    for (slot, spec) in slots.iter_mut().zip(specs) {
+        if spec.resume.is_none() {
+            next_base = place(slot, next_base);
+        }
     }
     // Arm the fault plan (entries naming jobs/harts outside the batch
     // are ignored; the first trap entry per job wins).
@@ -955,13 +1121,32 @@ fn assemble_report(harts: &[Hart], slots: &mut [Slot], pool: &SimPoolConfig) -> 
         stats.deadline_misses = h.deadline_misses;
         harts_out.push(HartReport { stats, jobs: h.jobs_done, alive: h.alive });
     }
+    let draining = pool.drain_requested();
     let mut jobs_out = Vec::with_capacity(slots.len());
     for s in slots.iter_mut() {
         debug_assert!(
-            s.done || s.failed.is_some(),
+            draining || s.done || s.failed.is_some(),
             "scheduler left job {} unresolved",
             s.idx
         );
+        let drained = draining && !s.done && s.failed.is_none();
+        let resume = if drained {
+            s.ckpt.take().map(|ck| JobCheckpoint {
+                image: ck.image,
+                out_bytes: ck.out_bytes,
+                spill_bytes: ck.spill_bytes,
+                instret: ck.instret,
+                a_addr: s.a_addr,
+                b_addr: s.b_addr,
+                out_addr: s.out_addr,
+                spill_addr: s.spill_addr,
+                retries: s.retries,
+                migrations: s.migrations,
+                checkpoints: s.checkpoints,
+            })
+        } else {
+            None
+        };
         jobs_out.push(SimJobReport {
             bits64: std::mem::take(&mut s.bits),
             fmt: s.fmt,
@@ -971,6 +1156,8 @@ fn assemble_report(harts: &[Hart], slots: &mut [Slot], pool: &SimPoolConfig) -> 
             migrations: s.migrations,
             checkpoints: s.checkpoints,
             error: s.failed.clone(),
+            drained,
+            resume,
         });
     }
     let makespan_s =

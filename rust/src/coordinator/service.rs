@@ -69,15 +69,15 @@
 //! [`HartContext`]: crate::core::HartContext
 //! [`sched`]: super::sched
 
-use super::sched::{self, SimPoolConfig, DEFAULT_MAX_RETRIES};
+use super::sched::{self, JobCheckpoint, SimPoolConfig, DEFAULT_MAX_RETRIES};
 use super::{check_patterns_n, check_shape, execute, Backend, Format, Job, JobResult, Metrics};
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Scheduling class of a job: higher-priority jobs are dispatched before
 /// lower-priority ones already waiting in the queue (FIFO within a
@@ -118,6 +118,13 @@ pub struct JobSpec {
     /// Faulted attempts allowed before the job fails for good (Sim jobs
     /// only; see [`sched`]).
     pub max_retries: u32,
+    /// Resume state from a graceful drain ([`Service::drain`]): when
+    /// set, the Sim scheduler re-stages the job at its checkpointed
+    /// addresses and continues it instead of starting from scratch —
+    /// the rolling-restart path. Never set by the builders; never
+    /// carried on the submission wire schema (the drain snapshot has
+    /// its own serialization).
+    pub resume: Option<JobCheckpoint>,
 }
 
 impl JobSpec {
@@ -130,6 +137,7 @@ impl JobSpec {
             priority: Priority::Normal,
             deadline_cycles: None,
             max_retries: DEFAULT_MAX_RETRIES,
+            resume: None,
         }
     }
 
@@ -287,6 +295,32 @@ impl JobHandle {
                 Ok(JobEvent::Failed { error, .. }) => return Err(error),
                 Ok(_) => {}
                 Err(_) => return Err(crate::err!("service dropped the job stream")),
+            }
+        }
+    }
+
+    /// [`Self::wait`] with a wall-clock bound: a typed error once
+    /// `timeout` has elapsed without a terminal event, so callers (the
+    /// server's drain path included) can never block forever on a
+    /// wedged job. The handle is consumed either way — a timed-out job
+    /// keeps running in the service, only the caller stops waiting.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<JobResult> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.events.recv_timeout(left) {
+                Ok(JobEvent::Done { result, .. }) => return Ok(result),
+                Ok(JobEvent::Failed { error, .. }) => return Err(error),
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(crate::err!(
+                        "job {}: no terminal event within {timeout:?}",
+                        self.id
+                    ))
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(crate::err!("service dropped the job stream"))
+                }
             }
         }
     }
@@ -494,13 +528,44 @@ fn validate(spec: &JobSpec) -> Result<()> {
     }
 }
 
+/// A job a graceful drain ([`Service::drain`]) stopped before it
+/// resolved: either still queued (never dispatched, `resume` is `None`)
+/// or checkpointed mid-flight on a sim hart. Resubmitting
+/// [`Self::into_spec`] — to this service's successor, possibly in a
+/// fresh process — continues the job bit-identically to an
+/// uninterrupted run.
+#[derive(Debug, Clone)]
+pub struct DrainedJob {
+    /// The service id the job's events were streamed under.
+    pub id: u64,
+    /// The original submission.
+    pub spec: JobSpec,
+    /// Checkpointed resume state, when the job had started running.
+    pub resume: Option<JobCheckpoint>,
+}
+
+impl DrainedJob {
+    /// The spec to resubmit: the original job with the drain checkpoint
+    /// installed as its resume point.
+    pub fn into_spec(self) -> JobSpec {
+        let mut spec = self.spec;
+        spec.resume = self.resume;
+        spec
+    }
+}
+
 /// The long-running coordinator service. See the module doc.
 pub struct Service {
     queue: Arc<JobQueue>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next_id: AtomicU64,
     admit_seq: AtomicU64,
     done_seq: Arc<AtomicU64>,
+    /// Set by [`Self::drain`]; observed by the sim pool at quantum
+    /// boundaries and by the dispatcher between batches.
+    drain_flag: Arc<AtomicBool>,
+    /// Jobs the drain stopped, collected by the sim dispatcher.
+    drained: Arc<Mutex<Vec<DrainedJob>>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -515,6 +580,11 @@ impl Service {
         // Admission control lives at the service queue now; the pool-level
         // batch limit would misfire on dispatcher-formed batches.
         pool.max_queue_depth = 0;
+        // The service owns the drain signal; a caller-supplied flag is
+        // replaced so `Service::drain` always controls its own pool.
+        let drain_flag = Arc::new(AtomicBool::new(false));
+        pool.drain = Some(Arc::clone(&drain_flag));
+        let drained = Arc::new(Mutex::new(Vec::new()));
         let queue = Arc::new(JobQueue {
             state: Mutex::new(QueueState {
                 native: BinaryHeap::new(),
@@ -542,14 +612,20 @@ impl Service {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let pool = pool.clone();
-            workers.push(std::thread::spawn(move || sim_dispatcher(&queue, &pool, &metrics)));
+            let drain_flag = Arc::clone(&drain_flag);
+            let drained = Arc::clone(&drained);
+            workers.push(std::thread::spawn(move || {
+                sim_dispatcher(&queue, &pool, &metrics, &drain_flag, &drained)
+            }));
         }
         Self {
             queue,
-            workers,
+            workers: Mutex::new(workers),
             next_id: AtomicU64::new(0),
             admit_seq: AtomicU64::new(0),
             done_seq: Arc::new(AtomicU64::new(0)),
+            drain_flag,
+            drained,
             metrics,
         }
     }
@@ -602,9 +678,35 @@ impl Service {
     }
 
     /// Stop admitting, finish queued work, join the workers.
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
         self.queue.close();
-        for w in self.workers.drain(..) {
+        self.join_workers();
+    }
+
+    /// Graceful drain — the rolling-restart half of shutdown. Stops
+    /// admitting, lets native-lane work finish, checkpoints every
+    /// in-flight `Backend::Sim` job at its next quantum boundary
+    /// (context image + writable regions, quire spilled through the
+    /// real `qsq` kernel), joins the workers, and returns the jobs that
+    /// did not run to completion. Each [`DrainedJob::into_spec`] can be
+    /// resubmitted to a fresh service — in this process or after an
+    /// exec — and finishes bit-identical to an uninterrupted run.
+    /// Drained jobs' event streams end without a terminal event (their
+    /// receivers observe a disconnect, not `Done`/`Failed`).
+    ///
+    /// Takes `&self` so a supervisor can drain through an
+    /// `Arc<Service>` while connection handlers still hold clones.
+    pub fn drain(&self) -> Vec<DrainedJob> {
+        self.drain_flag.store(true, Ordering::SeqCst);
+        self.queue.close();
+        self.join_workers();
+        std::mem::take(&mut *self.drained.lock().expect("drained list"))
+    }
+
+    fn join_workers(&self) {
+        let workers: Vec<_> =
+            std::mem::take(&mut *self.workers.lock().expect("worker registry"));
+        for w in workers {
             let _ = w.join();
         }
     }
@@ -613,9 +715,7 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.join_workers();
     }
 }
 
@@ -653,12 +753,29 @@ fn native_worker(
 /// The sim-lane dispatcher: drains every queued Sim job in priority
 /// order and schedules the batch over the host-parallel hart pool.
 /// Events (Started/Checkpointed/Migrated/Done/Failed) are emitted from
-/// inside the pool as each job progresses.
-fn sim_dispatcher(queue: &JobQueue, pool: &SimPoolConfig, metrics: &Metrics) {
+/// inside the pool as each job progresses. On a drain request, jobs the
+/// pool checkpointed (and jobs still queued, never dispatched) are
+/// handed back through `drained` instead of resolving.
+fn sim_dispatcher(
+    queue: &JobQueue,
+    pool: &SimPoolConfig,
+    metrics: &Metrics,
+    drain_flag: &AtomicBool,
+    drained: &Mutex<Vec<DrainedJob>>,
+) {
     loop {
         let batch = queue.drain_sim();
         if batch.is_empty() {
             return; // closed and drained
+        }
+        if drain_flag.load(Ordering::SeqCst) {
+            // Draining: queued work is never dispatched — it comes back
+            // as fresh (no-resume) drained jobs.
+            let mut d = drained.lock().expect("drained list");
+            for item in batch {
+                d.push(DrainedJob { id: item.sink.id, spec: item.spec, resume: None });
+            }
+            continue;
         }
         let n = batch.len() as u64;
         let mut specs = Vec::with_capacity(batch.len());
@@ -671,9 +788,20 @@ fn sim_dispatcher(queue: &JobQueue, pool: &SimPoolConfig, metrics: &Metrics) {
         let res = sched::run_batch_parallel_ev(&specs, pool, sinks.clone());
         metrics.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         match res {
-            Ok(report) => {
+            Ok(mut report) => {
                 let failed = report.failures() as u64;
-                metrics.completed.fetch_add(n - failed, Ordering::Relaxed);
+                let mut halted = 0u64;
+                for (i, jr) in report.jobs.iter_mut().enumerate() {
+                    if jr.drained {
+                        halted += 1;
+                        drained.lock().expect("drained list").push(DrainedJob {
+                            id: sinks[i].as_ref().map_or(u64::MAX, |s| s.id),
+                            spec: specs[i].clone(),
+                            resume: jr.resume.take(),
+                        });
+                    }
+                }
+                metrics.completed.fetch_add(n - failed - halted, Ordering::Relaxed);
                 metrics.errors.fetch_add(failed, Ordering::Relaxed);
             }
             Err(e) => {

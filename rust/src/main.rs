@@ -7,17 +7,47 @@
 //! percival synth   [--fpga|--fpga-pau|--asic|--ratios|--ablate|--all]
 //! percival run     --n 16 [--quire|--no-quire] [--backend sim|native|pjrt]
 //! percival asm     <file.s>          # assemble + disassemble round trip
-//! percival serve   [--workers 4] [--jobs 32]   # coordinator demo
+//! percival serve   [--workers 4] [--jobs 32]   # in-process demo
+//! percival serve   --listen 127.0.0.1:4590 [--snapshot drain.snap]
+//! percival serve   --stdio                     # frames on stdout, logs on stderr
+//! percival client  --connect 127.0.0.1:4590 [--jobs 4] [--verify]
 //! ```
 
+use std::path::PathBuf;
+use std::time::Duration;
+
 use percival::bench::{harness, tables};
-use percival::coordinator::{Backend, Coordinator, Job, JobSpec, Service, ServiceConfig};
+use percival::coordinator::net::install_sigterm;
+use percival::coordinator::{
+    Backend, Client, ClientConfig, Coordinator, Job, JobSpec, NetFaultPlan, Server, ServerConfig,
+    Service, ServiceConfig,
+};
 use percival::core::CoreConfig;
 use percival::isa::asm::assemble;
 use percival::isa::disasm::disasm;
 use percival::posit::Posit32;
 use percival::synth::report;
 use percival::testing::Rng;
+
+/// The deterministic GEMM job `percival client` submits for index `i`:
+/// both the submitting process and a later `--attach-ids --verify`
+/// process regenerate bit-identical inputs from `(n, seed, i)` alone.
+fn client_job(n: usize, seed: u64, i: u64) -> Job {
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i + 1));
+    let a: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+    let b: Vec<u32> =
+        (0..n * n).map(|_| Posit32::from_f64(rng.range_f64(-1.0, 1.0)).bits()).collect();
+    Job::GemmP32 { n, a, b, quire: true }
+}
+
+/// Ground-truth bits for `--verify`: the same job on the native backend.
+fn native_bits(job: Job) -> Option<Vec<u32>> {
+    let co = Coordinator::new(1, None);
+    let out = co.run(job, Backend::Native).ok().map(|r| r.bits);
+    co.shutdown();
+    out
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -125,6 +155,61 @@ fn main() {
                 }
             }
         }
+        "serve" if has("--listen") || has("--stdio") => {
+            let mut cfg = ServerConfig::default();
+            if let Some(w) = opt("--workers").and_then(|s| s.parse().ok()) {
+                cfg.service.native_workers = w;
+            }
+            if let Some(h) = opt("--harts").and_then(|s| s.parse().ok()) {
+                cfg.service.pool.harts = h;
+            }
+            if let Some(q) = opt("--quantum").and_then(|s| s.parse().ok()) {
+                cfg.service.pool.quantum = q;
+            }
+            if let Some(c) = opt("--ckpt-quanta").and_then(|s| s.parse().ok()) {
+                cfg.service.pool.checkpoint_quanta = c;
+            }
+            if let Some(s) = opt("--idle-timeout-s").and_then(|s| s.parse().ok()) {
+                cfg.idle_timeout = Duration::from_secs(s);
+            }
+            cfg.snapshot_path = opt("--snapshot").map(PathBuf::from);
+            install_sigterm();
+            let server = Server::new(cfg);
+            if server.resumed() > 0 {
+                eprintln!(
+                    "percival-serve: resumed {} drained job(s) from snapshot",
+                    server.resumed()
+                );
+            }
+            let outcome = if has("--stdio") {
+                server.serve_stdio()
+            } else {
+                let addr = opt("--listen").unwrap_or_else(|| "127.0.0.1:0".to_string());
+                match std::net::TcpListener::bind(&addr) {
+                    Ok(listener) => {
+                        if let Ok(local) = listener.local_addr() {
+                            eprintln!("percival-serve: listening on {local}");
+                        }
+                        server.serve(listener)
+                    }
+                    Err(e) => {
+                        eprintln!("percival-serve: bind {addr}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+            };
+            match outcome {
+                Ok(s) => eprintln!(
+                    "percival-serve: drained cleanly: {} in-flight job(s) snapshotted, \
+                     {} resumed, {} resolved, {} connection(s)",
+                    s.drained, s.resumed, s.resolved, s.connections
+                ),
+                Err(e) => {
+                    eprintln!("percival-serve: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
         "serve" => {
             let workers: usize = opt("--workers").and_then(|s| s.parse().ok()).unwrap_or(4);
             let jobs: usize = opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(32);
@@ -151,9 +236,17 @@ fn main() {
                 })
                 .collect();
             let mut ok = 0;
-            for h in handles {
-                if h.and_then(|h| h.wait()).is_ok() {
-                    ok += 1;
+            let mut failures: Vec<String> = Vec::new();
+            for (i, h) in handles.into_iter().enumerate() {
+                match h {
+                    Ok(h) => {
+                        let id = h.id;
+                        match h.wait() {
+                            Ok(_) => ok += 1,
+                            Err(e) => failures.push(format!("job {id}: {e:#}")),
+                        }
+                    }
+                    Err(e) => failures.push(format!("submission {i}: {e:#}")),
                 }
             }
             let dt = t0.elapsed().as_secs_f64();
@@ -164,18 +257,133 @@ fn main() {
             );
             println!("metrics: {}", svc.metrics.summary());
             svc.shutdown();
+            if !failures.is_empty() {
+                for f in &failures {
+                    eprintln!("serve: {f}");
+                }
+                eprintln!("serve: {} of {jobs} job(s) failed", failures.len());
+                std::process::exit(1);
+            }
+        }
+        "client" => {
+            let addr = opt("--connect").unwrap_or_else(|| "127.0.0.1:4590".to_string());
+            let jobs: u64 = opt("--jobs").and_then(|s| s.parse().ok()).unwrap_or(4);
+            let n: usize = opt("--n").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let seed: u64 = opt("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+            let timeout =
+                Duration::from_secs(opt("--timeout-s").and_then(|s| s.parse().ok()).unwrap_or(120));
+            let backend = match opt("--backend").as_deref() {
+                Some("sim") | None => Backend::Sim,
+                Some("native") => Backend::Native,
+                Some("pjrt") => Backend::Pjrt,
+                Some(other) => {
+                    eprintln!("unknown backend `{other}`");
+                    std::process::exit(2);
+                }
+            };
+            let mut ccfg = ClientConfig::new(addr);
+            if let Some(k) = opt("--fault-seed").and_then(|s| s.parse().ok()) {
+                ccfg.faults = NetFaultPlan::seeded(k);
+            }
+            let mut client = match Client::connect(ccfg) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("client: connect: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            let mut failed = 0usize;
+            let check = |client: &mut Client, i: u64, id: u64, failed: &mut usize| {
+                match client.wait(id, timeout) {
+                    Ok(r) => {
+                        if has("--verify") {
+                            match native_bits(client_job(n, seed, i)) {
+                                Some(want) if want == r.bits => {
+                                    println!("job {id}: ok ({} outputs, verified)", r.bits.len());
+                                }
+                                Some(_) => {
+                                    eprintln!("job {id}: BIT MISMATCH vs native backend");
+                                    *failed += 1;
+                                }
+                                None => {
+                                    eprintln!("job {id}: native reference failed");
+                                    *failed += 1;
+                                }
+                            }
+                        } else {
+                            println!("job {id}: ok ({} outputs)", r.bits.len());
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("job {id}: {e:#}");
+                        *failed += 1;
+                    }
+                }
+            };
+            if let Some(path) = opt("--attach-ids") {
+                let ids: Vec<u64> = match std::fs::read_to_string(&path) {
+                    Ok(text) => text.lines().filter_map(|l| l.trim().parse().ok()).collect(),
+                    Err(e) => {
+                        eprintln!("client: read {path}: {e}");
+                        std::process::exit(1);
+                    }
+                };
+                for (i, id) in ids.iter().enumerate() {
+                    check(&mut client, i as u64, *id, &mut failed);
+                }
+            } else {
+                let mut ids = Vec::new();
+                for i in 0..jobs {
+                    let spec = JobSpec::new(client_job(n, seed, i)).backend(backend);
+                    match client.submit(&spec) {
+                        Ok(id) => ids.push(id),
+                        Err(e) => {
+                            eprintln!("client: submit {i}: {e:#}");
+                            failed += 1;
+                        }
+                    }
+                }
+                if let Some(path) = opt("--ids-out") {
+                    let text: String = ids.iter().map(|id| format!("{id}\n")).collect();
+                    if let Err(e) = std::fs::write(&path, text) {
+                        eprintln!("client: write {path}: {e}");
+                        failed += 1;
+                    }
+                }
+                if !has("--submit-only") {
+                    for (i, id) in ids.iter().enumerate() {
+                        check(&mut client, i as u64, *id, &mut failed);
+                    }
+                }
+            }
+            if has("--shutdown") {
+                if let Err(e) = client.shutdown_server() {
+                    eprintln!("client: shutdown: {e:#}");
+                    failed += 1;
+                }
+            }
+            eprintln!("client stats: {:?}", client.stats);
+            if failed > 0 {
+                std::process::exit(1);
+            }
         }
         "version" => println!("percival {} (paper reproduction)", env!("CARGO_PKG_VERSION")),
         _ => {
             println!(
                 "PERCIVAL reproduction CLI\n\
-                 usage: percival <tables|synth|run|asm|serve|version> [flags]\n\
+                 usage: percival <tables|synth|run|asm|serve|client|version> [flags]\n\
                  \n\
                  tables  --table6 --table7 --table8 --fig7 --all --quick\n\
                  synth   --fpga --fpga-pau --asic --ratios --ablate --all\n\
                  run     --n <N> [--no-quire] [--backend sim|native|pjrt]\n\
                  asm     <file.s>\n\
-                 serve   [--workers W] [--jobs J] [--n N]"
+                 serve   [--workers W] [--jobs J] [--n N]            # in-process demo\n\
+                 serve   --listen ADDR|--stdio [--snapshot PATH] [--harts H]\n\
+                 \x20        [--quantum Q] [--ckpt-quanta C] [--idle-timeout-s S]\n\
+                 client  --connect ADDR [--jobs J] [--n N] [--seed S]\n\
+                 \x20        [--backend sim|native] [--verify] [--submit-only]\n\
+                 \x20        [--ids-out PATH] [--attach-ids PATH] [--fault-seed K]\n\
+                 \x20        [--shutdown] [--timeout-s T]"
             );
         }
     }

@@ -1,0 +1,343 @@
+//! Network-serving integration tests: the line-delimited TCP/stdio
+//! transport in front of the coordinator service — loopback streaming
+//! with native-identical bits, malformed/oversized/version-skewed input
+//! answered with typed error frames on a connection that stays open,
+//! the rolling-restart pin (drain snapshot → fresh server → resumed
+//! jobs bit-identical to `Backend::Native` and to an uninterrupted
+//! run), a seeded wire-level fault sweep that must complete every job,
+//! and idle-connection reaping.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use percival::coordinator::json::{self, Value};
+use percival::coordinator::net::{FrameError, FrameReader};
+use percival::coordinator::sched::{run_batch_serial, SimPoolConfig};
+use percival::coordinator::{
+    Backend, Client, ClientConfig, Coordinator, Format, JobEvent, JobSpec, NetFaultPlan, Server,
+    ServerConfig, ServeSummary, ServiceConfig,
+};
+use percival::posit::convert::from_f64_n;
+use percival::testing::Rng;
+
+/// `len` in-format posit patterns drawn from a deterministic stream.
+fn pats(fmt: Format, len: usize, rng: &mut Rng) -> Vec<u64> {
+    (0..len).map(|_| from_f64_n(fmt.width(), rng.range_f64(-2.0, 2.0))).collect()
+}
+
+/// A quire GEMM spec at `fmt` on the Sim lane, inputs seeded off `seed`.
+fn gemm_spec(fmt: Format, n: usize, seed: u64) -> JobSpec {
+    let mut rng = Rng::new(seed);
+    let a = pats(fmt, n * n, &mut rng);
+    let b = pats(fmt, n * n, &mut rng);
+    JobSpec::gemm(fmt, n, a, b, true).backend(Backend::Sim)
+}
+
+/// The job's reference bits from the native (non-simulated) backend.
+fn native_ref(spec: &JobSpec) -> Vec<u64> {
+    let co = Coordinator::new(1, None);
+    let out = co.run(spec.job.clone(), Backend::Native).expect("native reference runs").bits64;
+    co.shutdown();
+    out
+}
+
+/// The pool every server in this file schedules sim jobs on: small
+/// quantum and per-quantum checkpointing so a drain catches work
+/// mid-flight with a restorable checkpoint.
+fn pool() -> SimPoolConfig {
+    SimPoolConfig { harts: 2, quantum: 50, checkpoint_quanta: 1, ..Default::default() }
+}
+
+fn server_cfg(snapshot: Option<PathBuf>) -> ServerConfig {
+    ServerConfig {
+        service: ServiceConfig { native_workers: 1, pool: pool(), ..Default::default() },
+        snapshot_path: snapshot,
+        ..Default::default()
+    }
+}
+
+/// Bind a loopback listener, start the server on it, and return the
+/// handle the drain summary comes back through.
+fn start(cfg: ServerConfig) -> (Server, SocketAddr, JoinHandle<ServeSummary>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let server = Server::new(cfg);
+    let srv = server.clone();
+    let h = std::thread::spawn(move || srv.serve(listener).expect("serve exits cleanly"));
+    (server, addr, h)
+}
+
+fn error_msg(v: &Value) -> &str {
+    v.get("error")
+        .and_then(|e| e.get("msg"))
+        .and_then(Value::as_str)
+        .unwrap_or_else(|| panic!("expected an error frame, got {v}"))
+}
+
+#[test]
+fn loopback_jobs_stream_to_native_identical_bits() {
+    let (_server, addr, h) = start(server_cfg(None));
+    let mut client = Client::connect(ClientConfig::new(addr.to_string())).expect("connects");
+    client.ping().expect("server answers ping");
+    let mut specs: Vec<JobSpec> = (0..3).map(|i| gemm_spec(Format::P32, 8, 0x300 + i)).collect();
+    // One job crosses the wire onto the native lane.
+    specs.push(gemm_spec(Format::P16, 8, 0x310).backend(Backend::Native));
+    let refs: Vec<Vec<u64>> = specs.iter().map(native_ref).collect();
+    let ids: Vec<u64> = specs.iter().map(|s| client.submit(s).expect("submit acks")).collect();
+    for (i, id) in ids.iter().enumerate() {
+        let r = client.wait(*id, Duration::from_secs(120)).expect("job completes");
+        assert_eq!(r.bits64, refs[i], "job {i}: served bits diverge from Native");
+    }
+    assert_eq!(client.stats.error_frames, 0, "clean session saw error frames");
+    client.shutdown_server().expect("shutdown frame lands");
+    let summary = h.join().expect("serve thread");
+    assert_eq!(summary.drained, 0, "all jobs were waited on before shutdown");
+    assert!(summary.resolved >= ids.len(), "registry lost terminal outcomes");
+    assert!(summary.connections >= 1);
+}
+
+#[test]
+fn bad_input_gets_typed_errors_and_never_drops_the_connection() {
+    let mut cfg = server_cfg(None);
+    cfg.max_frame_bytes = 4096;
+    let (server, addr, h) = start(cfg);
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut raw = stream.try_clone().expect("clone socket");
+    let mut reader = FrameReader::new(stream, 1 << 20);
+
+    // Blank lines are keep-alives, not errors.
+    raw.write_all(b"\n\n").expect("write");
+    // Garbage that is not JSON: typed error frame, framing intact.
+    raw.write_all(b"this is not json\n").expect("write");
+    let v = reader.read_frame().expect("error frame for garbage");
+    assert!(v.get("error").is_some(), "garbage line must provoke an error frame, got {v}");
+
+    // A line over the server's frame cap: the reader resyncs at the
+    // next newline and answers with a typed error.
+    let mut big = vec![b'x'; 8192];
+    big.push(b'\n');
+    raw.write_all(&big).expect("write");
+    let v = reader.read_frame().expect("error frame for oversize");
+    assert!(
+        error_msg(&v).contains("oversized"),
+        "oversize line must name the cap, got {v}"
+    );
+
+    // Version skew (satellite: server side): a v2 frame is a typed
+    // unsupported-version error, not a dropped connection.
+    raw.write_all(b"{\"v\":2,\"cmd\":\"ping\"}\n").expect("write");
+    let v = reader.read_frame().expect("error frame for version skew");
+    assert!(
+        error_msg(&v).contains("unsupported version 2"),
+        "skew must be a typed version error, got {v}"
+    );
+
+    // The same connection still serves valid traffic.
+    raw.write_all(b"{\"v\":1,\"cmd\":\"ping\"}\n").expect("write");
+    let v = reader.read_frame().expect("pong after all that abuse");
+    assert!(v.get("pong").is_some(), "connection must survive bad input, got {v}");
+
+    server.request_drain();
+    h.join().expect("serve thread");
+}
+
+#[test]
+fn client_surfaces_server_version_skew_as_a_typed_error() {
+    // A fake "future" server that acks with v2: the client must refuse
+    // to guess and return a typed unsupported-version error.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().expect("one client");
+        s.write_all(b"{\"v\":2,\"ack\":{\"id\":0}}\n").expect("write v2 ack");
+        let _ = s.flush();
+        std::thread::sleep(Duration::from_millis(500));
+    });
+    let mut client = Client::connect(ClientConfig::new(addr.to_string())).expect("connects");
+    let err = client
+        .submit(&gemm_spec(Format::P32, 4, 0x42))
+        .expect_err("a v2 ack must be a typed error");
+    assert!(
+        err.to_string().contains("unsupported version"),
+        "unexpected skew error text: {err}"
+    );
+    fake.join().expect("fake server thread");
+}
+
+#[test]
+fn rolling_restart_resumes_drained_jobs_bit_identical() {
+    let snap = std::env::temp_dir().join(format!("percival_net_restart_{}.snap", std::process::id()));
+    let _ = std::fs::remove_file(&snap);
+
+    let specs: Vec<JobSpec> = (0..4).map(|i| gemm_spec(Format::P32, 12, 0x900 + i)).collect();
+    let refs: Vec<Vec<u64>> = specs.iter().map(native_ref).collect();
+    let uninterrupted = run_batch_serial(&specs, &pool()).expect("uninterrupted batch runs");
+    assert_eq!(uninterrupted.failures(), 0);
+
+    // Server A: admit the batch, then drain mid-flight.
+    let (_a, addr_a, ha) = start(server_cfg(Some(snap.clone())));
+    let mut ca = Client::connect(ClientConfig::new(addr_a.to_string())).expect("connects to A");
+    let ids: Vec<u64> = specs.iter().map(|s| ca.submit(s).expect("submit acks")).collect();
+    ca.shutdown_server().expect("drain request lands");
+    let summary = ha.join().expect("serve A thread");
+    assert!(summary.drained >= 1, "shutdown mid-batch must strand work: {summary:?}");
+    assert!(snap.exists(), "drain must persist a snapshot");
+
+    // Server B: loads the snapshot, resumes under the original wire ids.
+    let (b, addr_b, hb) = start(server_cfg(Some(snap.clone())));
+    assert_eq!(b.resumed() as usize, summary.drained, "every drained job resumes");
+    assert!(!snap.exists(), "the snapshot is consumed on load");
+    let mut cb = Client::connect(ClientConfig::new(addr_b.to_string())).expect("connects to B");
+    for (i, id) in ids.iter().enumerate() {
+        let r = cb.wait(*id, Duration::from_secs(180)).expect("job resolves across restart");
+        assert_eq!(r.bits64, refs[i], "job {i}: bits diverge from Native across restart");
+        assert_eq!(
+            r.bits64, uninterrupted.jobs[i].bits64,
+            "job {i}: bits diverge from an uninterrupted run"
+        );
+    }
+    assert!(cb.stats.attach_polls > 0, "cross-restart results must come via attach");
+    cb.shutdown_server().expect("shutdown B");
+    let sb = hb.join().expect("serve B thread");
+    assert_eq!(sb.resumed as usize, summary.drained);
+    let _ = std::fs::remove_file(&snap);
+}
+
+#[test]
+fn explicit_fault_plan_fires_every_class_and_recovery_is_visible() {
+    let (_server, addr, h) = start(server_cfg(None));
+    // Six submissions so outgoing ordinals 0..=5 all exist: the plan
+    // below provably fires every fault class.
+    let specs: Vec<JobSpec> = (0..6).map(|i| gemm_spec(Format::P32, 8, 0xA10 + i)).collect();
+    let refs: Vec<Vec<u64>> = specs.iter().map(native_ref).collect();
+    let mut ccfg = ClientConfig::new(addr.to_string());
+    ccfg.max_retries = 8;
+    ccfg.faults = NetFaultPlan {
+        kill_after: vec![1],
+        truncate: vec![3],
+        corrupt: vec![5],
+        slow_every: 4,
+        slow_delay: Duration::from_millis(5),
+    };
+    let mut c = Client::connect(ccfg).expect("connects");
+    let ids: Vec<u64> = specs.iter().map(|s| c.submit(s).expect("submit survives faults")).collect();
+    for (i, id) in ids.iter().enumerate() {
+        let r = c.wait(*id, Duration::from_secs(120)).expect("job completes despite faults");
+        assert_eq!(r.bits64, refs[i], "job {i}: wire faults corrupted bits");
+    }
+    let st = &c.stats;
+    assert!(st.injected_kills >= 1, "kill never fired: {st:?}");
+    assert!(st.injected_truncations >= 1, "truncation never fired: {st:?}");
+    assert!(st.injected_corruptions >= 1, "corruption never fired: {st:?}");
+    assert!(st.slow_frames >= 1, "slow writer never fired: {st:?}");
+    // Recovery is visible, not silent: both connection deaths forced a
+    // reconnect + resubmit, and the corruption provoked an error frame.
+    assert!(st.reconnects >= 2, "kill+truncation must reconnect: {st:?}");
+    assert!(st.resubmits >= 3, "each fault-hit submission retries: {st:?}");
+    assert!(st.error_frames >= 1, "corruption must provoke an error frame: {st:?}");
+    let mut clean = Client::connect(ClientConfig::new(addr.to_string())).expect("connects");
+    clean.shutdown_server().expect("shutdown frame lands");
+    h.join().expect("serve thread");
+}
+
+#[test]
+fn seeded_fault_sweep_completes_every_job_with_clean_bits() {
+    let (_server, addr, h) = start(server_cfg(None));
+    let specs: Vec<JobSpec> = (0..6).map(|i| gemm_spec(Format::P32, 8, 0xA00 + i)).collect();
+    let refs: Vec<Vec<u64>> = specs.iter().map(native_ref).collect();
+    for seed in 0..5u64 {
+        let plan = NetFaultPlan::seeded(seed);
+        let armed = !plan.is_empty();
+        let mut ccfg = ClientConfig::new(addr.to_string());
+        ccfg.faults = plan;
+        ccfg.max_retries = 8;
+        let mut c = Client::connect(ccfg).expect("connects");
+        let ids: Vec<u64> =
+            specs.iter().map(|s| c.submit(s).expect("submit survives faults")).collect();
+        for (i, id) in ids.iter().enumerate() {
+            let r = c.wait(*id, Duration::from_secs(120)).expect("job completes despite faults");
+            assert_eq!(r.bits64, refs[i], "seed {seed} job {i}: wire faults corrupted bits");
+        }
+        let fired = c.stats.injected_kills
+            + c.stats.injected_truncations
+            + c.stats.injected_corruptions
+            + c.stats.slow_frames;
+        // Fault indices are mod 6 and six submissions exist, so an
+        // armed plan always fires at least once.
+        assert_eq!(armed, fired > 0, "seed {seed}: plan armed={armed} but fired={fired}");
+    }
+    let mut clean = Client::connect(ClientConfig::new(addr.to_string())).expect("connects");
+    clean.shutdown_server().expect("shutdown frame lands");
+    h.join().expect("serve thread");
+}
+
+#[test]
+fn idle_connections_are_reaped() {
+    let mut cfg = server_cfg(None);
+    cfg.read_timeout = Duration::from_millis(50);
+    cfg.idle_timeout = Duration::from_millis(300);
+    let (server, addr, h) = start(cfg);
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut raw = stream.try_clone().expect("clone socket");
+    let mut reader = FrameReader::new(stream, 1 << 20);
+    raw.write_all(b"{\"v\":1,\"cmd\":\"ping\"}\n").expect("write");
+    assert!(reader.read_frame().expect("pong").get("pong").is_some());
+    // Go quiet: the server must close the connection, observed here as
+    // a clean EOF on a blocking read.
+    assert!(
+        matches!(reader.read_frame(), Err(FrameError::Eof)),
+        "idle connection was not reaped"
+    );
+    server.request_drain();
+    h.join().expect("serve thread");
+}
+
+#[test]
+fn stdio_transport_serves_a_session_and_exits_zero_on_eof() {
+    use std::process::{Command, Stdio};
+    let mut child = Command::new(env!("CARGO_BIN_EXE_percival"))
+        .args(["serve", "--stdio", "--harts", "2", "--workers", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn percival serve --stdio");
+    let mut stdin = child.stdin.take().expect("child stdin");
+    let stdout = child.stdout.take().expect("child stdout");
+
+    let spec = gemm_spec(Format::P32, 6, 0xD00);
+    let want = native_ref(&spec);
+    let frame = json::job_request(&spec);
+    stdin.write_all(frame.to_string().as_bytes()).expect("write job");
+    stdin.write_all(b"\n").expect("write newline");
+    stdin.flush().expect("flush");
+
+    let mut reader = FrameReader::new(stdout, 64 << 20);
+    let ack = reader.read_frame().expect("ack frame");
+    let id = ack
+        .get("ack")
+        .and_then(|a| a.get("id"))
+        .and_then(Value::as_u64)
+        .unwrap_or_else(|| panic!("expected an ack, got {ack}"));
+    let result = loop {
+        let v = reader.read_frame().expect("event frame");
+        if v.get("event").is_none() {
+            continue;
+        }
+        match json::parse_event_frame(&v).expect("event parses") {
+            JobEvent::Done { id: did, result, .. } => {
+                assert_eq!(did, id, "terminal event on a foreign wire id");
+                break result;
+            }
+            ev => assert!(!ev.is_terminal(), "job failed over stdio: {ev:?}"),
+        }
+    };
+    assert_eq!(result.bits64, want, "stdio-served bits diverge from Native");
+
+    drop(stdin); // EOF is the stdio drain signal
+    let status = child.wait().expect("child exits");
+    assert!(status.success(), "serve --stdio must exit 0 after drain, got {status:?}");
+}

@@ -14,6 +14,7 @@ use percival::coordinator::{
 };
 use percival::posit::convert::from_f64_n;
 use percival::testing::Rng;
+use std::time::Duration;
 
 /// `len` in-format posit patterns drawn from a deterministic stream.
 fn pats(fmt: Format, len: usize, rng: &mut Rng) -> Vec<u64> {
@@ -311,6 +312,83 @@ fn service_sim_path_matches_native_for_every_format() {
         }
     }
     svc.shutdown();
+}
+
+#[test]
+fn wait_timeout_covers_both_the_deadline_and_the_success_path() {
+    let svc = Service::new(ServiceConfig {
+        native_workers: 1,
+        pool: SimPoolConfig { harts: 1, quantum: 200, ..Default::default() },
+        ..Default::default()
+    });
+    // Deadline path: a large sim GEMM cannot reach a terminal event in
+    // ~zero wall time, so the caller gets a typed timeout while the job
+    // keeps running (shutdown below still completes it).
+    let slow = svc.submit(gemm_spec(Format::P32, 24, 0x77)).expect("slow job admits");
+    let err = slow.wait_timeout(Duration::from_millis(1)).expect_err("must time out");
+    assert!(
+        err.to_string().contains("no terminal event"),
+        "unexpected timeout text: {err}"
+    );
+    // Success path: a generous deadline behaves exactly like `wait`,
+    // bits included.
+    let spec = gemm_spec(Format::P32, 6, 0x78);
+    let want = native_ref(&spec.job);
+    let fast = svc.submit(spec).expect("fast job admits");
+    let got = fast.wait_timeout(Duration::from_secs(300)).expect("completes inside deadline");
+    assert_eq!(got.bits64, want, "wait_timeout success path returned wrong bits");
+    svc.shutdown();
+}
+
+#[test]
+fn drained_jobs_resume_in_a_fresh_service_bit_identical() {
+    // Service-level rolling restart: drain strands in-flight sim work as
+    // resumable specs; a *fresh* service finishes them bit-identical to
+    // Native, as if never interrupted.
+    let mk = || {
+        Service::new(ServiceConfig {
+            native_workers: 1,
+            pool: SimPoolConfig {
+                harts: 2,
+                quantum: 50,
+                checkpoint_quanta: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+    };
+    let svc = mk();
+    let specs: Vec<JobSpec> = (0..4).map(|i| gemm_spec(Format::P32, 10, 0x500 + i)).collect();
+    let refs: Vec<Vec<u64>> = specs.iter().map(|s| native_ref(&s.job)).collect();
+    let handles: Vec<JobHandle> =
+        specs.into_iter().map(|s| svc.submit(s).expect("job admits")).collect();
+    wait_started(&handles[0]);
+    let drained = svc.drain();
+    assert!(!drained.is_empty(), "drain mid-batch must strand work");
+    let drained_ids: Vec<u64> = drained.iter().map(|d| d.id).collect();
+    let svc2 = mk();
+    let resumed: Vec<(usize, JobHandle)> = drained
+        .into_iter()
+        .map(|dj| {
+            let idx = handles
+                .iter()
+                .position(|h| h.id == dj.id)
+                .expect("drained id maps to a submitted handle");
+            (idx, svc2.submit(dj.into_spec()).expect("resumed job admits"))
+        })
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        if drained_ids.contains(&h.id) {
+            continue; // its stream ended without a terminal event
+        }
+        let r = h.wait().unwrap_or_else(|e| panic!("pre-drain job {i} failed: {e}"));
+        assert_eq!(r.bits64, refs[i], "job {i}: pre-drain bits diverge from Native");
+    }
+    for (i, h) in resumed {
+        let r = h.wait().unwrap_or_else(|e| panic!("resumed job {i} failed: {e}"));
+        assert_eq!(r.bits64, refs[i], "job {i}: bits changed across drain/resume");
+    }
+    svc2.shutdown();
 }
 
 #[test]

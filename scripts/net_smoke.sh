@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# Rolling-restart smoke test of `percival serve --listen`:
+#
+#   1. start a server with a drain-snapshot path,
+#   2. submit a deterministic batch and record the wire ids,
+#   3. SIGTERM the server mid-batch — it must drain, snapshot, exit 0,
+#   4. start a successor on the same snapshot,
+#   5. attach to the original wire ids and verify every result is
+#      bit-identical to the native backend (the client regenerates the
+#      inputs from --n/--seed alone), then shut the successor down.
+#
+# Usage: scripts/net_smoke.sh [path-to-percival-binary]
+set -euo pipefail
+
+BIN=${1:-${PERCIVAL_BIN:-target/release/percival}}
+PORT=${PORT:-45917}
+N=${N:-12}
+SEED=${SEED:-9}
+JOBS=${JOBS:-4}
+
+WORK=$(mktemp -d)
+SNAP="$WORK/drain.snap"
+IDS="$WORK/ids.txt"
+trap 'rm -rf "$WORK"' EXIT
+
+serve() {
+  "$BIN" serve --listen "127.0.0.1:$PORT" --snapshot "$SNAP" \
+    --harts 2 --quantum 50 --ckpt-quanta 1 &
+  SRV=$!
+}
+
+serve
+# The client retries with backoff, riding out server startup.
+"$BIN" client --connect "127.0.0.1:$PORT" --jobs "$JOBS" --n "$N" \
+  --seed "$SEED" --backend sim --submit-only --ids-out "$IDS"
+[ "$(wc -l <"$IDS")" -eq "$JOBS" ] || { echo "net smoke: expected $JOBS ids" >&2; exit 1; }
+
+kill -TERM "$SRV"
+wait "$SRV" || { echo "net smoke: server did not exit 0 on SIGTERM" >&2; exit 1; }
+[ -s "$SNAP" ] || { echo "net smoke: no drain snapshot at $SNAP" >&2; exit 1; }
+
+serve
+"$BIN" client --connect "127.0.0.1:$PORT" --attach-ids "$IDS" --n "$N" \
+  --seed "$SEED" --verify --shutdown
+wait "$SRV" || { echo "net smoke: successor did not exit 0 on shutdown" >&2; exit 1; }
+
+echo "net smoke: OK ($JOBS jobs drained, resumed, and verified across restart)"
