@@ -1,16 +1,18 @@
 //! Coordinator throughput bench: GEMM jobs/s across worker counts and
-//! backends (the L3 request path), plus the host-parallel hart pool vs
-//! the serial scheduler on the same simulated batch.
+//! backends (the L3 request path), the host-parallel hart pool vs the
+//! serial scheduler on the same simulated batch, and the multi-server
+//! fan-out of one exact sharded dot reduction.
 
 use percival::bench::harness::{bench, write_bench_json, JsonRow};
 use percival::coordinator::sched::{run_batch_parallel, run_batch_serial};
 use percival::coordinator::{
-    Backend, Client, ClientConfig, Engine, Format, Job, JobSpec, Server, ServerConfig, Service,
-    ServiceConfig, SimPoolConfig,
+    Backend, Client, ClientConfig, Engine, Fanout, Format, Job, JobSpec, Server, ServerConfig,
+    Service, ServiceConfig, SimPoolConfig,
 };
 use percival::core::CoreConfig;
+use percival::kernels::gemm::dot_quire_serial;
 use percival::posit::convert::from_f64_n;
-use percival::posit::Posit32;
+use percival::posit::{Posit32, P32};
 use percival::testing::Rng;
 
 fn job(rng: &mut Rng, n: usize) -> Job {
@@ -196,8 +198,61 @@ fn main() {
         speedup_x: None,
     };
 
-    match write_bench_json("BENCH_posit_kernels.json", &[ckpt_row, pool_row, net_row]) {
-        Ok(()) => println!("  wrote 3 rows to BENCH_posit_kernels.json"),
+    // Multi-server fan-out of one exact dot: two loopback servers, the
+    // K-range sharded across both, partial-quire images merged locally.
+    // Wall-clock and machine-dependent, so the row is informational (not
+    // gated) — but the merged bits are asserted identical to the serial
+    // kernel, which is the invariant that matters.
+    let dlen = 1usize << 16;
+    let mut rng = Rng::new(0xC5);
+    let da: Vec<u64> = (0..dlen).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+    let db: Vec<u64> = (0..dlen).map(|_| from_f64_n(32, rng.range_f64(-1.0, 1.0))).collect();
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..2 {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(listener.local_addr().expect("local addr").to_string());
+        let server = Server::new(ServerConfig {
+            service: ServiceConfig { native_workers: 2, ..Default::default() },
+            ..Default::default()
+        });
+        let srv = server.clone();
+        let h = std::thread::spawn(move || srv.serve(listener).expect("serve exits"));
+        servers.push((server, h));
+    }
+    let mut fleet =
+        Fanout::connect(addrs.iter().map(|a| ClientConfig::new(a.clone())).collect())
+            .expect("fleet connects");
+    let rf = bench("fanout dot64k p32, 2 servers x 4 shards", 1, 3, || {
+        fleet.dot(Format::P32, &da, &db, Backend::Native, 4).expect("fanned dot");
+    });
+    let rep = fleet.dot(Format::P32, &da, &db, Backend::Native, 4).expect("fanned dot");
+    let da32: Vec<u32> = da.iter().map(|&x| x as u32).collect();
+    let db32: Vec<u32> = db.iter().map(|&x| x as u32).collect();
+    assert_eq!(
+        rep.bits,
+        u64::from(dot_quire_serial::<P32>(&da32, &db32)),
+        "fanned-out dot diverged from the serial kernel"
+    );
+    println!(
+        "  → {:.1} ms per fanned 64k-dot across 2 servers ({} resubmits)",
+        rf.mean_s * 1e3,
+        rep.resubmitted
+    );
+    for (server, h) in servers {
+        server.request_drain();
+        h.join().expect("serve thread");
+    }
+    let fanout_row = JsonRow {
+        bench: "fanout_dot2srv_p32_len64k".into(),
+        mean_s: rf.mean_s,
+        ns_per_op: rf.mean_s * 1e9 / dlen as f64,
+        speedup_x: None,
+    };
+
+    match write_bench_json("BENCH_posit_kernels.json", &[ckpt_row, pool_row, net_row, fanout_row])
+    {
+        Ok(()) => println!("  wrote 4 rows to BENCH_posit_kernels.json"),
         Err(e) => eprintln!("  could not write BENCH_posit_kernels.json: {e}"),
     }
 }

@@ -3,8 +3,10 @@
 //! div/sqrt ablation, and the batched kernel layer: decode-once quire
 //! MACs, Posit8 LUT ops, the Posit16 decode LUT, the format-generic core
 //! at 64 bits (`p64_*`, `q64_*` and the `gemm128_p64_quire_*` rows — the
-//! 1024-bit-quire Big-PERCIVAL configuration), and the headline
-//! kernel-vs-scalar 256×256 quire GEMM.
+//! 1024-bit-quire Big-PERCIVAL configuration), the headline
+//! kernel-vs-scalar 256×256 quire GEMM, and the K-split sharded exact
+//! dot (`dot_kquire_p32_len1m_*` — private per-shard quires merged via
+//! `Quire::merge`, gated ≥ 2× over serial on multi-core hosts).
 //!
 //! Emits machine-readable rows to `BENCH_posit_kernels.json` (merged with
 //! the rows from `table7_gemm_timing`) so the perf trajectory is tracked
@@ -13,7 +15,7 @@
 use percival::bench::harness::{bench, write_bench_json, JsonRow, Report};
 use percival::kernels::{gemm, lut};
 use percival::posit::unpacked::{decode, Decoded};
-use percival::posit::{divsqrt, ops, unpacked, PositFormat, Quire32, Quire64, P64};
+use percival::posit::{divsqrt, ops, unpacked, PositFormat, Quire32, Quire64, P32, P64};
 use percival::testing::Rng;
 use std::hint::black_box;
 
@@ -285,6 +287,54 @@ fn main() {
     let mut p64_row = JsonRow::from_report("gemm128_p64_quire_kernel", &rk64, macs64);
     p64_row.speedup_x = Some(speedup64);
     rows.push(p64_row);
+
+    // ── K-split exact dot: sharded reduction vs serial, bit-identical ──
+    let dlen = 1usize << 20;
+    let mut rngd = Rng::new(0x6ED0);
+    let dda: Vec<u32> = (0..dlen)
+        .map(|_| percival::posit::convert::from_f64::<32>(rngd.range_f64(-1.0, 1.0)))
+        .collect();
+    let ddb: Vec<u32> = (0..dlen)
+        .map(|_| percival::posit::convert::from_f64::<32>(rngd.range_f64(-1.0, 1.0)))
+        .collect();
+    let rser = bench("dot 1M p32+quire serial", 1, 3, || {
+        black_box(gemm::dot_quire_serial::<P32>(black_box(&dda), black_box(&ddb)));
+    });
+    println!("  → {:.1} ns/op", rser.ns_per_op(dlen));
+    rows.push(JsonRow::from_report("dot_kquire_p32_len1m_serial", &rser, dlen));
+    let shards = gemm::worker_threads();
+    let rsh = bench("dot 1M p32+quire sharded (K-split + merge)", 1, 3, || {
+        black_box(gemm::dot_quire_sharded::<P32>(black_box(&dda), black_box(&ddb), shards));
+    });
+    println!("  → {:.1} ns/op", rsh.ns_per_op(dlen));
+    assert_eq!(
+        gemm::dot_quire_sharded::<P32>(&dda, &ddb, shards),
+        gemm::dot_quire_serial::<P32>(&dda, &ddb),
+        "sharded and serial exact dot must agree bit-for-bit"
+    );
+    let shard_x = rser.mean_s / rsh.mean_s;
+    println!("  → sharded speedup over serial ({shards} shards): {shard_x:.2}×  (bit-identical ✓)");
+    let mut shard_row = JsonRow::from_report("dot_kquire_p32_len1m_sharded", &rsh, dlen);
+    shard_row.speedup_x = Some(shard_x);
+    rows.push(shard_row);
+    // The machine-invariant gate: on any host with ≥ 4 cores, splitting
+    // the reduction dimension must pay off at least 2× (the ratio is
+    // host-relative, so the gate travels across CI machines). Override
+    // with DOT_SHARD_GATE_MIN_X for exotic hosts.
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let min_x: f64 = std::env::var("DOT_SHARD_GATE_MIN_X")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0);
+    if cores >= 4 {
+        assert!(
+            shard_x >= min_x,
+            "sharded dot regression: {shard_x:.2}× < {min_x:.2}× on a {cores}-core host \
+             (set DOT_SHARD_GATE_MIN_X to override)"
+        );
+    } else {
+        println!("  → shard gate skipped ({cores} cores < 4)");
+    }
 
     let path = "BENCH_posit_kernels.json";
     match write_bench_json(path, &rows) {

@@ -442,6 +442,37 @@ done:
     assemble(&src).expect("generated dot kernel must assemble")
 }
 
+/// Generate the *partial* quire dot-product kernel: the same Fig. 6 inner
+/// loop as [`dot_program`], but instead of rounding it spills the raw
+/// quire image with `qsq` (cycle-accounted like any other quire
+/// store). Calling convention: `a0 = &A`, `a1 = &B`, `a2 = len`,
+/// `a3 = &out` (8-byte aligned, `fmt.quire_bytes()` long). Shard-
+/// decomposed jobs run this per shard and the host merges the spill
+/// images via `Quire::merge` — bit-identical to one serial dot.
+pub fn dot_partial_program(fmt: PositFmt, len: usize) -> Program {
+    let (load, _, sfx, _) = posit_frags(fmt);
+    let eb = fmt.bytes();
+    let src = format!(
+        r#"
+    # partial quire dot product {fmt:?} len={len} (spills the quire, no round)
+    qclr.{sfx}
+    beqz a2, done
+loop:
+    {load} p0, 0(a0)
+    {load} p1, 0(a1)
+    qmadd.{sfx} p0, p1
+    addi a0, a0, {eb}
+    addi a1, a1, {eb}
+    addi a2, a2, -1
+    bnez a2, loop
+done:
+    qsq.{sfx} (a3)
+    ecall
+"#
+    );
+    assemble(&src).expect("generated partial dot kernel must assemble")
+}
+
 /// Simulated quire dot product on raw posit bit patterns at any width.
 pub fn run_dot_sim_bits(cfg: CoreConfig, fmt: PositFmt, a: &[u64], b: &[u64]) -> SimBitsRun {
     assert_eq!(a.len(), b.len());
@@ -458,6 +489,33 @@ pub fn run_dot_sim_bits(cfg: CoreConfig, fmt: PositFmt, a: &[u64], b: &[u64]) ->
     let stats = core.run();
     let seconds = stats.seconds(&core.cfg);
     SimBitsRun { bits: core.mem.read_posit_slice(out, eb, 1), stats, seconds }
+}
+
+/// Simulated *partial* quire dot product: runs [`dot_partial_program`] and
+/// returns the spilled quire image as little-endian `u64` limbs (the
+/// shard-decomposed jobs' partial-result representation). The `qsq` spill
+/// is cycle-accounted in `stats` like any context-switch spill.
+pub fn run_dot_partial_sim_bits(cfg: CoreConfig, fmt: PositFmt, a: &[u64], b: &[u64]) -> SimBitsRun {
+    assert_eq!(a.len(), b.len());
+    let prog = dot_partial_program(fmt, a.len());
+    let mut core = Core::new(cfg);
+    core.load_program(&prog);
+    let eb = fmt.bytes();
+    let base_a = 0x1_0000u64;
+    let base_b = base_a + ((a.len() * eb + 0xFFF) & !0xFFF) as u64;
+    let out = base_b + ((b.len() * eb + 0xFFF) & !0xFFF) as u64; // page- (so 8-byte-) aligned
+    core.mem.write_posit_slice(base_a, eb, a);
+    core.mem.write_posit_slice(base_b, eb, b);
+    set_dot_args(&mut core.ctx, base_a, base_b, a.len() as u64, out);
+    let stats = core.run();
+    let seconds = stats.seconds(&core.cfg);
+    let bits = core
+        .mem
+        .read_bytes(out, fmt.quire_bytes())
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect();
+    SimBitsRun { bits, stats, seconds }
 }
 
 /// Deterministic uniform matrix in `[-10^i, 10^i]` (paper §7.1's input

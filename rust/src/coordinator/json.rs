@@ -507,6 +507,12 @@ pub fn job_request(spec: &JobSpec) -> Value {
             ("a", u64_arr(a)),
             ("b", u64_arr(b)),
         ],
+        Job::DotPartial { fmt, a, b } => vec![
+            ("kind", Value::Str("dot_partial".into())),
+            ("fmt", Value::Str(fmt.name().into())),
+            ("a", u64_arr(a)),
+            ("b", u64_arr(b)),
+        ],
         Job::GemmP32 { n, a, b, quire } => vec![
             ("kind", Value::Str("gemm".into())),
             ("fmt", Value::Str(Format::P32.name().into())),
@@ -550,6 +556,9 @@ pub fn parse_job_request(v: &Value) -> crate::error::Result<JobSpec> {
             quire: jv.get("quire").and_then(Value::as_bool).unwrap_or(true),
         },
         "dot" => Job::Dot { fmt, a, b },
+        // One shard of a K-split dot: the done frame's result carries the
+        // raw partial-quire image in `bits64` (little-endian limbs).
+        "dot_partial" => Job::DotPartial { fmt, a, b },
         kind => return Err(crate::err!("wire: unknown job kind {kind:?}")),
     };
     let backend = match req_str(jv, "backend")? {
@@ -756,6 +765,12 @@ mod tests {
         let dot = JobSpec::dot(Format::P16, vec![3, 4], vec![5, 6]).backend(Backend::Native);
         let wire = job_request(&dot).to_string();
         assert_eq!(parse_job_request(&parse(&wire).unwrap()).unwrap(), dot);
+
+        let part =
+            JobSpec::dot_partial(Format::P32, vec![3, 4], vec![5, 6]).backend(Backend::Sim);
+        let wire = job_request(&part).to_string();
+        assert!(wire.contains("dot_partial"), "{wire}");
+        assert_eq!(parse_job_request(&parse(&wire).unwrap()).unwrap(), part);
     }
 
     #[test]

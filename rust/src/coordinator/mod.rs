@@ -58,17 +58,19 @@ pub mod net;
 pub mod sched;
 pub mod service;
 
-pub use net::{Client, ClientConfig, NetFaultPlan, Server, ServerConfig, ServeSummary};
+pub use net::{
+    Client, ClientConfig, Fanout, FanoutReport, NetFaultPlan, Server, ServerConfig, ServeSummary,
+};
 pub use sched::{
-    FaultPlan, HartKill, HartReport, JobCheckpoint, SimBatchReport, SimJobReport, SimPoolConfig,
-    TrapInject,
+    run_dot_sharded, FaultPlan, HartKill, HartReport, JobCheckpoint, ShardedDotReport,
+    SimBatchReport, SimJobReport, SimPoolConfig, TrapInject,
 };
 pub use service::{
     Backpressure, BatchReport, DrainedJob, JobEvent, JobHandle, JobSpec, Priority, Service,
     ServiceConfig,
 };
 
-use crate::bench::gemm::{run_dot_sim_bits, run_gemm_sim_bits};
+use crate::bench::gemm::{run_dot_partial_sim_bits, run_dot_sim_bits, run_gemm_sim_bits};
 use crate::core::CoreConfig;
 /// Core execution engine selection for `Backend::Sim` jobs (re-exported
 /// so clients can pin the per-instruction oracle for differentials).
@@ -78,7 +80,7 @@ use crate::kernels::gemm::{
     dot_quire, gemm_noquire, gemm_p8_noquire_lut, gemm_quire, KernelFormat,
 };
 use crate::posit::unpacked::mask_n;
-use crate::posit::{PositBits, PositFormat, P16, P32, P64, P8};
+use crate::posit::{PositBits, PositFormat, Quire, P16, P32, P64, P8};
 use crate::runtime::Runtime;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -114,6 +116,14 @@ pub enum Job {
     Gemm { fmt: Format, n: usize, a: Vec<u64>, b: Vec<u64>, quire: bool },
     /// Format-tagged quire dot product.
     Dot { fmt: Format, a: Vec<u64>, b: Vec<u64> },
+    /// One shard of a K-split quire dot product: accumulate `Σ a[k]·b[k]`
+    /// exactly and return the **raw quire spill image** (canonical
+    /// [`crate::posit::Quire::to_bytes`] layout as little-endian `u64`
+    /// limbs in `bits64`) instead of a rounded posit. Partials from any
+    /// partition of a dot merge via [`merge_partial_quires`] into the
+    /// bit-identical serial result — the scheduler's shard-decomposed
+    /// jobs and the multi-node [`net::Fanout`] both ride on this.
+    DotPartial { fmt: Format, a: Vec<u64>, b: Vec<u64> },
 }
 
 /// Result of a completed job.
@@ -399,7 +409,7 @@ fn check_shape(job: &Job) -> Result<()> {
                 b.len()
             );
         }
-        Job::Dot { fmt, a, b } => {
+        Job::Dot { fmt, a, b } | Job::DotPartial { fmt, a, b } => {
             crate::ensure!(
                 a.len() == b.len(),
                 "Dot({}) length mismatch: {} vs {}",
@@ -514,6 +524,91 @@ fn execute(
         (Job::Dot { fmt, .. }, Backend::Pjrt) => {
             Err(crate::err!("backend Pjrt does not support {} dot jobs", fmt.name()))
         }
+        (Job::DotPartial { fmt, a, b }, Backend::Native) => {
+            let limbs = match fmt {
+                Format::P8 => dot_partial_any::<P8>(a, b)?,
+                Format::P16 => dot_partial_any::<P16>(a, b)?,
+                Format::P32 => dot_partial_any::<P32>(a, b)?,
+                Format::P64 => dot_partial_any::<P64>(a, b)?,
+            };
+            // bits64 carries raw quire limbs, not posit patterns: leave the
+            // u32 view empty at every width.
+            Ok(JobResult { bits: Vec::new(), bits64: limbs, backend, elapsed_s: 0.0, sim_seconds: None })
+        }
+        (Job::DotPartial { fmt, a, b }, Backend::Sim) => {
+            check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
+            check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
+            let run = run_dot_partial_sim_bits(sim_cfg(engine), *fmt, a, b);
+            Ok(JobResult {
+                bits: Vec::new(),
+                bits64: run.bits,
+                backend,
+                elapsed_s: 0.0,
+                sim_seconds: Some(run.seconds),
+            })
+        }
+        (Job::DotPartial { fmt, .. }, Backend::Pjrt) => {
+            Err(crate::err!("backend Pjrt does not support {} partial-dot jobs", fmt.name()))
+        }
+    }
+}
+
+/// Native one-shard partial dot: exact quire accumulation, returned as the
+/// canonical spill image in little-endian `u64` limbs (byte-identical to
+/// what the simulated `qsq` writes for the same shard).
+fn dot_partial_any<F: KernelFormat>(a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
+    check_patterns::<F>("a", a)?;
+    check_patterns::<F>("b", b)?;
+    let av = to_format::<F>(a);
+    let bv = to_format::<F>(b);
+    let mut q = Quire::<F>::new();
+    for (&x, &y) in av.iter().zip(&bv) {
+        q.madd_unpacked(F::decode(x), F::decode(y));
+    }
+    Ok(quire_limbs::<F>(&q))
+}
+
+/// Canonical spill image of a quire as little-endian `u64` limbs.
+fn quire_limbs<F: PositFormat>(q: &Quire<F>) -> Vec<u64> {
+    let mut bytes = vec![0u8; (F::QUIRE_BITS / 8) as usize];
+    q.write_bytes(&mut bytes);
+    bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+        .collect()
+}
+
+fn merge_partials_any<F: PositFormat>(parts: &[Vec<u64>]) -> Result<u64> {
+    let qb = (F::QUIRE_BITS / 8) as usize;
+    let mut acc = Quire::<F>::new();
+    let mut bytes = vec![0u8; qb];
+    for (i, p) in parts.iter().enumerate() {
+        crate::ensure!(
+            p.len() * 8 == qb,
+            "partial {i}: quire image is {} limbs, {} format needs {}",
+            p.len(),
+            F::NAME,
+            qb / 8
+        );
+        for (chunk, &limb) in bytes.chunks_exact_mut(8).zip(p) {
+            chunk.copy_from_slice(&limb.to_le_bytes());
+        }
+        acc.merge(&Quire::<F>::read_bytes(&bytes)?);
+    }
+    Ok(acc.round().to_u64())
+}
+
+/// Merge [`Job::DotPartial`] results (raw quire limb images, any order,
+/// any partition) and round once — the host-side exact reduction used by
+/// the shard-decomposed scheduler path and [`net::Fanout`]. Returns the
+/// rounded posit pattern, bit-identical to the serial dot of the full
+/// vectors.
+pub fn merge_partial_quires(fmt: Format, parts: &[Vec<u64>]) -> Result<u64> {
+    match fmt {
+        Format::P8 => merge_partials_any::<P8>(parts),
+        Format::P16 => merge_partials_any::<P16>(parts),
+        Format::P32 => merge_partials_any::<P32>(parts),
+        Format::P64 => merge_partials_any::<P64>(parts),
     }
 }
 

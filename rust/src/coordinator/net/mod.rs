@@ -42,6 +42,23 @@
 //! connection, a new one, or (via the drain snapshot) a successor
 //! process.
 //!
+//! ### Sharded reductions and partial-quire frames
+//!
+//! A job request whose `"kind"` is `"dot_partial"` asks the server for
+//! one **shard** of an exact dot product: it runs the K-range it was
+//! given and replies — inside the ordinary `done` event frame — with
+//! `"bits64"` holding the raw **quire spill image** as little-endian
+//! u64 limbs (`2·width` bytes, exactly what the `qsq` instruction
+//! writes; NaR travels as its canonical image, top byte `0x80`). The
+//! `"bits"` u32 view is empty for partial results — limbs are not posit
+//! patterns. [`Fanout`] is the client of this scheme: it splits one dot
+//! across several servers via the crate-wide
+//! [`shard_ranges`](crate::kernels::gemm::shard_ranges) partition,
+//! collects each shard's limb image, reassigns shards of a dead server
+//! to survivors, and merges locally with
+//! [`merge_partial_quires`](super::merge_partial_quires) — bit-identical
+//! to a serial run on one machine, no matter how the work was cut.
+//!
 //! ## Drain and rolling restart
 //!
 //! On SIGTERM or a `shutdown` frame the server stops admitting
@@ -73,7 +90,7 @@ pub use frame::{FrameError, FrameReader, FrameWriter, DEFAULT_MAX_FRAME_BYTES};
 use super::json::{self, Value};
 use super::sched::JobCheckpoint;
 use super::service::{DrainedJob, JobEvent, JobHandle, JobSpec, Service, ServiceConfig};
-use super::JobResult;
+use super::{merge_partial_quires, Backend, Format, JobResult};
 use crate::error::Result;
 use frame::{fnv1a64, from_hex, to_hex};
 use std::collections::{HashMap, HashSet, VecDeque};
@@ -1290,6 +1307,173 @@ impl Client {
         match self.send_frame(&fr)? {
             Sent::Dead => Err(crate::err!("shutdown: connection died")),
             Sent::Corrupted | Sent::Intact => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fan-out
+// ---------------------------------------------------------------------------
+
+/// What one fanned-out dot did across the server fleet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FanoutReport {
+    /// The exact dot product — bit-identical to a serial single-machine
+    /// run regardless of sharding or failover.
+    pub bits: u64,
+    /// Shards actually cut (`shard_ranges` clamps to the length).
+    pub shards: usize,
+    /// Shards that had to be reassigned after a server died or failed.
+    pub resubmitted: u64,
+    /// Shards whose result each server delivered, by server index.
+    pub per_server: Vec<usize>,
+}
+
+/// Multi-server fan-out of one exact dot product: shards the K-range
+/// via the crate-wide [`shard_ranges`](crate::kernels::gemm::shard_ranges)
+/// partition into `dot_partial` jobs distributed round-robin across
+/// several [`Client`]s, collects each shard's partial-quire limb image,
+/// and merges locally ([`merge_partial_quires`]) — so the answer is
+/// bit-identical to a serial run no matter how many machines shared the
+/// work.
+///
+/// Crash-safe: each client already rides through a server's rolling
+/// restart (reconnect + `attach` polling); if a server is truly gone —
+/// SIGKILL, no successor — its shards are resubmitted to the surviving
+/// servers and the merge proceeds. Only losing *every* server fails the
+/// reduction.
+pub struct Fanout {
+    clients: Vec<Client>,
+    alive: Vec<bool>,
+    /// Per-shard wait budget before a server is declared dead and its
+    /// shard reassigned.
+    pub wait_timeout: Duration,
+    rr: usize,
+}
+
+impl Fanout {
+    /// Connect to every server; fails if any initial connection fails
+    /// (a fleet that starts degraded is a config error, not a fault).
+    pub fn connect(cfgs: Vec<ClientConfig>) -> Result<Self> {
+        crate::ensure!(!cfgs.is_empty(), "fanout: no servers configured");
+        let mut clients = Vec::with_capacity(cfgs.len());
+        for cfg in cfgs {
+            let addr = cfg.addr.clone();
+            clients.push(
+                Client::connect(cfg).map_err(|e| crate::err!("fanout: server {addr}: {e}"))?,
+            );
+        }
+        let alive = vec![true; clients.len()];
+        Ok(Self { clients, alive, wait_timeout: Duration::from_secs(120), rr: 0 })
+    }
+
+    /// Servers this fan-out was built over.
+    pub fn servers(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Servers still considered alive.
+    pub fn alive(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Per-client wire statistics, by server index.
+    pub fn stats(&self) -> Vec<ClientStats> {
+        self.clients.iter().map(|c| c.stats).collect()
+    }
+
+    /// Submit one shard to the next alive server (round-robin); a
+    /// failed submission marks that server dead and moves on.
+    fn submit_alive(&mut self, spec: &JobSpec) -> Result<(usize, u64)> {
+        let n = self.clients.len();
+        for _ in 0..n {
+            let srv = self.rr % n;
+            self.rr += 1;
+            if !self.alive[srv] {
+                continue;
+            }
+            match self.clients[srv].submit(spec) {
+                Ok(id) => return Ok((srv, id)),
+                Err(_) => self.alive[srv] = false,
+            }
+        }
+        Err(crate::err!("fanout: no servers alive"))
+    }
+
+    /// One exact dot product fanned out over the fleet: cut `shards`
+    /// K-ranges, run each as a `dot_partial` on some server, merge the
+    /// partial quires locally. The result is bit-identical to
+    /// [`Backend::Native`] serial evaluation — and to any other shard
+    /// count or server layout.
+    pub fn dot(
+        &mut self,
+        fmt: Format,
+        a: &[u64],
+        b: &[u64],
+        backend: Backend,
+        shards: usize,
+    ) -> Result<FanoutReport> {
+        crate::ensure!(
+            a.len() == b.len(),
+            "fanout dot: length mismatch ({} vs {})",
+            a.len(),
+            b.len()
+        );
+        crate::ensure!(!a.is_empty(), "fanout dot: empty operands");
+        let ranges = crate::kernels::gemm::shard_ranges(a.len(), shards);
+        let specs: Vec<JobSpec> = ranges
+            .iter()
+            .map(|r| {
+                JobSpec::dot_partial(fmt, a[r.clone()].to_vec(), b[r.clone()].to_vec())
+                    .backend(backend)
+            })
+            .collect();
+        // Submit everything first so the servers overlap their work,
+        // then collect; a shard whose server died is reassigned to a
+        // survivor at collection time.
+        let mut placed: Vec<(usize, u64)> = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            placed.push(self.submit_alive(spec)?);
+        }
+        let mut parts: Vec<Vec<u64>> = vec![Vec::new(); specs.len()];
+        let mut per_server = vec![0usize; self.clients.len()];
+        let mut resubmitted = 0u64;
+        for (i, (mut srv, mut id)) in placed.into_iter().enumerate() {
+            loop {
+                match self.clients[srv].wait(id, self.wait_timeout) {
+                    Ok(res) => {
+                        crate::ensure!(
+                            res.bits64.len() * 8 == fmt.quire_bytes(),
+                            "fanout shard {i}: partial image is {} limbs, want {}",
+                            res.bits64.len(),
+                            fmt.quire_bytes() / 8
+                        );
+                        parts[i] = res.bits64;
+                        per_server[srv] += 1;
+                        break;
+                    }
+                    Err(e) => {
+                        self.alive[srv] = false;
+                        resubmitted += 1;
+                        let (ns, nid) = self.submit_alive(&specs[i]).map_err(|e2| {
+                            crate::err!("fanout shard {i}: {e}; reassignment failed: {e2}")
+                        })?;
+                        srv = ns;
+                        id = nid;
+                    }
+                }
+            }
+        }
+        let bits = merge_partial_quires(fmt, &parts)?;
+        Ok(FanoutReport { bits, shards: specs.len(), resubmitted, per_server })
+    }
+
+    /// Best-effort drain request to every server still alive.
+    pub fn shutdown_all(&mut self) {
+        for (srv, c) in self.clients.iter_mut().enumerate() {
+            if self.alive[srv] {
+                let _ = c.shutdown_server();
+            }
         }
     }
 }

@@ -100,7 +100,8 @@ use super::service::EventSink;
 pub use super::service::JobSpec;
 use super::{check_patterns_n, check_shape, Backend, Format, Job, JobResult};
 use crate::bench::gemm::{
-    dot_program, gemm_program_cached, set_dot_args, set_gemm_args, GemmVariant,
+    dot_partial_program, dot_program, gemm_program_cached, set_dot_args, set_gemm_args,
+    GemmVariant,
 };
 use crate::core::{Core, CoreConfig, HartContext, Stats, Trap};
 use crate::error::Result;
@@ -371,6 +372,10 @@ struct Slot {
     fmt: PositFmt,
     program: Program,
     dot: bool,
+    /// Shard of a K-split dot: the kernel spills the raw quire image
+    /// (`qsq`) instead of rounding, and [`complete`] reads the image back
+    /// as little-endian `u64` limbs rather than posit patterns.
+    partial: bool,
     /// Input bit patterns and where they go.
     a: Vec<u64>,
     b: Vec<u64>,
@@ -429,13 +434,14 @@ fn stage(idx: usize, job: &Job) -> Result<Slot> {
     // index prefixed so a rejected batch names the offending job.
     check_shape(job).map_err(|e| crate::err!("job {idx}: {e}"))?;
     // The legacy fixed-format jobs are equivalent to their tagged forms.
-    let (fmt, n, a, b, quire, dot) = match job {
+    let (fmt, n, a, b, quire, dot, partial) = match job {
         Job::GemmP32 { n, a, b, quire } => (
             Format::P32,
             *n,
             a.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
             b.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
             *quire,
+            false,
             false,
         ),
         Job::DotP32 { a, b } => (
@@ -445,14 +451,23 @@ fn stage(idx: usize, job: &Job) -> Result<Slot> {
             b.iter().map(|&x| x as u64).collect::<Vec<u64>>(),
             true,
             true,
+            false,
         ),
-        Job::Gemm { fmt, n, a, b, quire } => (*fmt, *n, a.clone(), b.clone(), *quire, false),
-        Job::Dot { fmt, a, b } => (*fmt, 0, a.clone(), b.clone(), true, true),
+        Job::Gemm { fmt, n, a, b, quire } => {
+            (*fmt, *n, a.clone(), b.clone(), *quire, false, false)
+        }
+        Job::Dot { fmt, a, b } => (*fmt, 0, a.clone(), b.clone(), true, true, false),
+        Job::DotPartial { fmt, a, b } => (*fmt, 0, a.clone(), b.clone(), true, true, true),
     };
     check_patterns_n(fmt.width(), fmt.name(), "a", &a)
         .and_then(|()| check_patterns_n(fmt.width(), fmt.name(), "b", &b))
         .map_err(|e| crate::err!("job {idx}: {e}"))?;
-    let (program, out_len) = if dot {
+    let (program, out_len) = if partial {
+        // The out region holds the raw quire spill image; out_len is in
+        // format elements so the shared placement/zero/checkpoint code
+        // sizes the region as out_len · fmt.bytes() == quire_bytes.
+        (dot_partial_program(fmt, a.len()), fmt.quire_bytes() / fmt.bytes())
+    } else if dot {
         (dot_program(fmt, a.len()), 1)
     } else {
         (gemm_program_cached(GemmVariant::posit(fmt, quire), n), n * n)
@@ -462,6 +477,7 @@ fn stage(idx: usize, job: &Job) -> Result<Slot> {
         fmt,
         program,
         dot,
+        partial,
         a,
         b,
         a_addr: 0,
@@ -771,15 +787,32 @@ fn complete(hart: &mut Hart, slots: &mut [Slot], idx: usize) {
     }
     s.done = true;
     s.completion_cycle = cycle;
-    s.bits = hart.core.mem.read_posit_slice(s.out_addr, s.fmt.bytes(), s.out_len);
+    s.bits = if s.partial {
+        // The kernel `qsq`-spilled the raw quire: read the image back as
+        // little-endian u64 limbs (not posit patterns).
+        hart.core
+            .mem
+            .read_bytes(s.out_addr, s.fmt.quire_bytes())
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect()
+    } else {
+        hart.core.mem.read_posit_slice(s.out_addr, s.fmt.bytes(), s.out_len)
+    };
     hart.jobs_done += 1;
     if let Some(ev) = &s.events {
-        ev.done(JobResult::from_u64_sim(
-            s.fmt,
-            s.bits.clone(),
-            Backend::Sim,
-            Some(cycle as f64 / freq),
-        ));
+        ev.done(if s.partial {
+            // Quire limbs are not posit patterns: leave the u32 view empty.
+            JobResult {
+                bits: Vec::new(),
+                bits64: s.bits.clone(),
+                backend: Backend::Sim,
+                elapsed_s: 0.0,
+                sim_seconds: Some(cycle as f64 / freq),
+            }
+        } else {
+            JobResult::from_u64_sim(s.fmt, s.bits.clone(), Backend::Sim, Some(cycle as f64 / freq))
+        });
     }
 }
 
@@ -1306,6 +1339,62 @@ fn pool_worker(
 /// included) between worker threads.
 pub fn run_batch_parallel(specs: &[JobSpec], pool: &SimPoolConfig) -> Result<SimBatchReport> {
     run_batch_parallel_ev(specs, pool, Vec::new())
+}
+
+/// Outcome of a shard-decomposed simulated dot ([`run_dot_sharded`]).
+#[derive(Debug, Clone)]
+pub struct ShardedDotReport {
+    /// The rounded posit result — bit-identical to a serial
+    /// [`Job::Dot`] of the full vectors (exact-merge invariant).
+    pub bits: u64,
+    /// Shards the reduction actually split into.
+    pub shards: usize,
+    /// The underlying batch report (per-shard latencies, spill-cycle
+    /// accounting for the `qsq` image writes, hart utilization).
+    pub report: SimBatchReport,
+}
+
+/// Shard-decompose one quire dot across the simulated hart pool: split
+/// the reduction into `shards` [`Job::DotPartial`] jobs via
+/// [`crate::kernels::gemm::shard_ranges`], schedule them host-parallel
+/// ([`run_batch_parallel`]), then reduce the per-hart `qsq` spill images
+/// on the host (`Quire::from_bytes` → `merge` → one round). Any shard
+/// count yields the bit-identical serial result; the spill cycles are
+/// accounted on each hart's timeline like checkpoint spills.
+pub fn run_dot_sharded(
+    fmt: Format,
+    a: &[u64],
+    b: &[u64],
+    shards: usize,
+    pool: &SimPoolConfig,
+) -> Result<ShardedDotReport> {
+    crate::ensure!(
+        a.len() == b.len(),
+        "sharded dot length mismatch: {} vs {}",
+        a.len(),
+        b.len()
+    );
+    let ranges = crate::kernels::gemm::shard_ranges(a.len(), shards);
+    let specs: Vec<JobSpec> = ranges
+        .iter()
+        .map(|r| {
+            JobSpec::new(Job::DotPartial {
+                fmt,
+                a: a[r.clone()].to_vec(),
+                b: b[r.clone()].to_vec(),
+            })
+        })
+        .collect();
+    let report = run_batch_parallel(&specs, pool)?;
+    let mut parts = Vec::with_capacity(report.jobs.len());
+    for j in &report.jobs {
+        if let Some(e) = &j.error {
+            return Err(crate::err!("sharded dot: shard failed: {e}"));
+        }
+        parts.push(j.bits64.clone());
+    }
+    let bits = super::merge_partial_quires(fmt, &parts)?;
+    Ok(ShardedDotReport { bits, shards: parts.len(), report })
 }
 
 /// [`run_batch_parallel`] with per-job event sinks (the service's

@@ -151,6 +151,13 @@ impl JobSpec {
         Self::new(Job::Dot { fmt, a, b })
     }
 
+    /// One shard of a K-split quire dot: the result is the raw partial
+    /// quire image (`bits64` = little-endian limbs), merged exactly with
+    /// the other shards' via [`super::merge_partial_quires`].
+    pub fn dot_partial(fmt: Format, a: Vec<u64>, b: Vec<u64>) -> Self {
+        Self::new(Job::DotPartial { fmt, a, b })
+    }
+
     /// Select the execution backend.
     pub fn backend(mut self, backend: Backend) -> Self {
         self.backend = backend;
@@ -510,7 +517,9 @@ impl JobQueue {
 fn validate(spec: &JobSpec) -> Result<()> {
     check_shape(&spec.job)?;
     match &spec.job {
-        Job::Gemm { fmt, a, b, .. } | Job::Dot { fmt, a, b } => {
+        Job::Gemm { fmt, a, b, .. }
+        | Job::Dot { fmt, a, b }
+        | Job::DotPartial { fmt, a, b } => {
             check_patterns_n(fmt.width(), fmt.name(), "a", a)?;
             check_patterns_n(fmt.width(), fmt.name(), "b", b)?;
         }
@@ -523,6 +532,9 @@ fn validate(spec: &JobSpec) -> Result<()> {
         }
         (Job::Dot { fmt, .. }, Backend::Pjrt) => {
             Err(crate::err!("backend Pjrt does not support {} dot jobs", fmt.name()))
+        }
+        (Job::DotPartial { fmt, .. }, Backend::Pjrt) => {
+            Err(crate::err!("backend Pjrt does not support {} partial-dot jobs", fmt.name()))
         }
         _ => Ok(()),
     }

@@ -448,12 +448,16 @@ impl Core {
                     extra += self.dcache.access(a.wrapping_add(beat));
                 }
                 eff.mem_extra = extra;
+                // A P64 quire image is 128 bytes — the widest case — so a
+                // stack buffer covers every format and the per-instruction
+                // heap allocation disappears from this hot path.
+                let mut buf = [0u8; 128];
                 if ins.op == Op::Qsq {
-                    let img = self.ctx.quire.spill(ins.fmt);
-                    self.mem.write_bytes(a, &img);
+                    self.ctx.quire.spill_into(ins.fmt, &mut buf[..len]);
+                    self.mem.write_bytes(a, &buf[..len]);
                 } else {
-                    let img = self.mem.read_bytes(a, len).to_vec();
-                    self.ctx.quire = crate::core::PauQuire::restore(ins.fmt, &img);
+                    buf[..len].copy_from_slice(self.mem.read_bytes(a, len));
+                    self.ctx.quire = crate::core::PauQuire::restore(ins.fmt, &buf[..len]);
                 }
             }
             // ── The synthetic trapping opcode (undecodable word). ───────

@@ -244,12 +244,23 @@ impl PauQuire {
     /// re-tagged accumulator — software must spill at the format it
     /// accumulated at, exactly as multi-width hardware requires.
     pub fn spill(&mut self, fmt: PositFmt) -> Vec<u8> {
+        let mut out = vec![0u8; fmt.quire_bytes()];
+        self.spill_into(fmt, &mut out);
+        out
+    }
+
+    /// [`Self::spill`] into a caller-provided buffer (exactly
+    /// [`PositFmt::quire_bytes`] long) — the exec path's no-alloc `qsq`:
+    /// a spill happens on every context switch and checkpoint, so the
+    /// hot path writes straight into a stack buffer instead of
+    /// allocating a `Vec` per instruction.
+    pub fn spill_into(&mut self, fmt: PositFmt, out: &mut [u8]) {
         self.retag(fmt);
         match self {
-            PauQuire::Q8(q) => q.to_bytes(),
-            PauQuire::Q16(q) => q.to_bytes(),
-            PauQuire::Q32(q) => q.to_bytes(),
-            PauQuire::Q64(q) => q.to_bytes(),
+            PauQuire::Q8(q) => q.write_bytes(out),
+            PauQuire::Q16(q) => q.write_bytes(out),
+            PauQuire::Q32(q) => q.write_bytes(out),
+            PauQuire::Q64(q) => q.write_bytes(out),
         }
     }
 
@@ -267,10 +278,10 @@ impl PauQuire {
     /// the exec path's exact-length D$ read.
     pub fn try_restore(fmt: PositFmt, bytes: &[u8]) -> crate::error::Result<Self> {
         Ok(match fmt {
-            PositFmt::P8 => PauQuire::Q8(Quire8::from_bytes(bytes)?),
-            PositFmt::P16 => PauQuire::Q16(Quire16::from_bytes(bytes)?),
-            PositFmt::P32 => PauQuire::Q32(Quire32::from_bytes(bytes)?),
-            PositFmt::P64 => PauQuire::Q64(Quire64::from_bytes(bytes)?),
+            PositFmt::P8 => PauQuire::Q8(Quire8::read_bytes(bytes)?),
+            PositFmt::P16 => PauQuire::Q16(Quire16::read_bytes(bytes)?),
+            PositFmt::P32 => PauQuire::Q32(Quire32::read_bytes(bytes)?),
+            PositFmt::P64 => PauQuire::Q64(Quire64::read_bytes(bytes)?),
         })
     }
 
@@ -280,11 +291,19 @@ impl PauQuire {
     /// the live state verbatim rather than model a width-switching
     /// instruction like [`Self::spill`] does.
     pub fn image(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.fmt().quire_bytes()];
+        self.image_into(&mut out);
+        out
+    }
+
+    /// [`Self::image`] into a caller-provided buffer (exactly the
+    /// current format's [`PositFmt::quire_bytes`] long).
+    pub fn image_into(&self, out: &mut [u8]) {
         match self {
-            PauQuire::Q8(q) => q.to_bytes(),
-            PauQuire::Q16(q) => q.to_bytes(),
-            PauQuire::Q32(q) => q.to_bytes(),
-            PauQuire::Q64(q) => q.to_bytes(),
+            PauQuire::Q8(q) => q.write_bytes(out),
+            PauQuire::Q16(q) => q.write_bytes(out),
+            PauQuire::Q32(q) => q.write_bytes(out),
+            PauQuire::Q64(q) => q.write_bytes(out),
         }
     }
 }
@@ -354,9 +373,8 @@ impl HartContext {
     /// | 784..784+16·n/8  | quire image ([`PauQuire::image`])       |
     /// | last 4           | FNV-1a checksum of everything before    |
     pub fn to_image(&self) -> Vec<u8> {
-        let qimg = self.quire.image();
-        let mut out =
-            Vec::with_capacity(Self::IMAGE_HEADER + Self::IMAGE_REGS + qimg.len() + 4);
+        let qlen = self.quire.fmt().quire_bytes();
+        let mut out = Vec::with_capacity(Self::IMAGE_HEADER + Self::IMAGE_REGS + qlen + 4);
         out.extend_from_slice(&Self::IMAGE_MAGIC);
         out.extend_from_slice(&Self::IMAGE_VERSION.to_le_bytes());
         out.push(self.quire.fmt().bits() as u8);
@@ -367,7 +385,9 @@ impl HartContext {
                 out.extend_from_slice(&v.to_le_bytes());
             }
         }
-        out.extend_from_slice(&qimg);
+        let qstart = out.len();
+        out.resize(qstart + qlen, 0);
+        self.quire.image_into(&mut out[qstart..]);
         let sum = fnv1a(&out);
         out.extend_from_slice(&sum.to_le_bytes());
         out

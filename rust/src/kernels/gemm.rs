@@ -89,15 +89,35 @@ pub fn decode_transposed_gen<F: KernelFormat>(bits: &[F::Bits], n: usize) -> Vec
 /// (below this the spawn overhead dominates).
 const PAR_MIN_ELEMS: usize = 4096;
 
-/// Worker count: `PERCIVAL_THREADS` if set, else the machine's available
-/// parallelism.
-fn worker_threads() -> usize {
+/// Worker count: `PERCIVAL_THREADS` if set (clamped to the machine's
+/// available parallelism — oversubscribing scoped workers only adds
+/// context-switch overhead), else available parallelism itself.
+pub fn worker_threads() -> usize {
+    let hw = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
     if let Ok(v) = std::env::var("PERCIVAL_THREADS") {
         if let Ok(t) = v.trim().parse::<usize>() {
-            return t.max(1);
+            return t.clamp(1, hw);
         }
     }
-    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    hw
+}
+
+/// Split `0..len` into `shards` contiguous ranges whose lengths differ by
+/// at most one. Every sharded reduction in the crate (K-split kernels,
+/// shard-decomposed sim jobs, multi-node fan-out) uses this one partition
+/// function, so "the same shard count" always means the same split points.
+pub fn shard_ranges(len: usize, shards: usize) -> Vec<std::ops::Range<usize>> {
+    let shards = shards.clamp(1, len.max(1));
+    let base = len / shards;
+    let extra = len % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let take = base + usize::from(s < extra);
+        out.push(start..start + take);
+        start += take;
+    }
+    out
 }
 
 /// Row-parallel driver: split `out` (a `rows × cols` row-major buffer)
@@ -115,7 +135,11 @@ where
     if rows == 0 || cols == 0 {
         return;
     }
-    let threads = worker_threads().min(rows);
+    // Scale the worker set to the work: never more threads than rows, and
+    // never so many that a thread's block falls under PAR_MIN_ELEMS (a
+    // tiny matrix on a many-core host used to spawn the full worker set).
+    let work_cap = (rows * cols).div_ceil(PAR_MIN_ELEMS);
+    let threads = worker_threads().min(rows).min(work_cap);
     if threads <= 1 || rows * cols < PAR_MIN_ELEMS {
         for (i, row) in out.chunks_mut(cols).enumerate() {
             f(i, row);
@@ -144,6 +168,13 @@ where
 pub fn gemm_quire<F: KernelFormat>(n: usize, a: &[F::Bits], b: &[F::Bits]) -> Vec<F::Bits> {
     assert_eq!(a.len(), n * n);
     assert_eq!(b.len(), n * n);
+    // Row-splitting alone can't use more threads than there are rows; when
+    // the host has spare cores and the matrix is worth threading at all,
+    // tile the reduction dimension too (same bits — the quire is exact).
+    let threads = worker_threads();
+    if threads > n && n >= 2 && n * n >= PAR_MIN_ELEMS {
+        return gemm_quire_tiled::<F>(n, a, b, n, threads.div_ceil(n).min(n));
+    }
     let da = F::decode_slice(a);
     let dbt = decode_transposed_gen::<F>(b, n);
     let mut c = vec![F::ZERO_BITS; n * n];
@@ -155,6 +186,70 @@ pub fn gemm_quire<F: KernelFormat>(n: usize, a: &[F::Bits], b: &[F::Bits]) -> Ve
             let bc = &dbt[j * n..(j + 1) * n];
             for k in 0..n {
                 q.madd_unpacked(ar[k], bc[k]);
+            }
+            *out = q.round();
+        }
+    });
+    c
+}
+
+/// 2D-tiled quire GEMM: the output rows split `row_shards` ways *and* the
+/// reduction dimension splits `k_shards` ways ([`shard_ranges`] both), one
+/// scoped thread per (row-block, k-shard) tile. Each tile accumulates its
+/// partial dot products into a private plane of quires; the planes are
+/// then [`Quire::merge`]d element-wise and rounded once. Exactness of the
+/// quire makes the result bit-identical to [`gemm_quire`] and the scalar
+/// oracles for every (row_shards, k_shards) — pinned by the
+/// partition-invariance suite.
+pub fn gemm_quire_tiled<F: KernelFormat>(
+    n: usize,
+    a: &[F::Bits],
+    b: &[F::Bits],
+    row_shards: usize,
+    k_shards: usize,
+) -> Vec<F::Bits> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * n);
+    if n == 0 {
+        return Vec::new();
+    }
+    let da = F::decode_slice(a);
+    let dbt = decode_transposed_gen::<F>(b, n);
+    let k_ranges = shard_ranges(n, k_shards);
+    // One plane of n×n partial quires per k-shard; plane[s][i·n+j] holds
+    // Σ_{k∈shard s} A[i,k]·B[k,j].
+    let mut planes: Vec<Vec<Quire<F>>> = k_ranges
+        .iter()
+        .map(|_| (0..n * n).map(|_| Quire::<F>::new()).collect())
+        .collect();
+    std::thread::scope(|s| {
+        for (plane, kr) in planes.iter_mut().zip(&k_ranges) {
+            let mut rest = plane.as_mut_slice();
+            for rr in shard_ranges(n, row_shards) {
+                let (block, tail) = rest.split_at_mut(rr.len() * n);
+                rest = tail;
+                let (da, dbt) = (&da, &dbt);
+                let kr = kr.clone();
+                s.spawn(move || {
+                    for (bi, i) in rr.enumerate() {
+                        let ar = &da[i * n..(i + 1) * n];
+                        for (j, q) in block[bi * n..(bi + 1) * n].iter_mut().enumerate() {
+                            let bc = &dbt[j * n..(j + 1) * n];
+                            for k in kr.clone() {
+                                q.madd_unpacked(ar[k], bc[k]);
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    });
+    let mut c = vec![F::ZERO_BITS; n * n];
+    par_rows(n, n, &mut c, |i, row| {
+        for (j, out) in row.iter_mut().enumerate() {
+            let mut q = planes[0][i * n + j];
+            for plane in &planes[1..] {
+                q.merge(&plane[i * n + j]);
             }
             *out = q.round();
         }
@@ -217,14 +312,66 @@ pub fn gemm_p8_noquire_lut(n: usize, a: &[u32], b: &[u32]) -> Vec<u32> {
     c
 }
 
-/// Format-generic quire dot product on bit patterns.
-pub fn dot_quire<F: KernelFormat>(a: &[F::Bits], b: &[F::Bits]) -> F::Bits {
+/// Minimum dot length before [`dot_quire`] shards the reduction across
+/// threads (below this the spawn + merge overhead dominates).
+pub const DOT_SHARD_MIN_LEN: usize = 8192;
+
+/// Format-generic quire dot product, sequential (the K-split oracle).
+pub fn dot_quire_serial<F: KernelFormat>(a: &[F::Bits], b: &[F::Bits]) -> F::Bits {
     assert_eq!(a.len(), b.len());
     let mut q = Quire::<F>::new();
     for (&x, &y) in a.iter().zip(b) {
         q.madd_unpacked(F::decode(x), F::decode(y));
     }
     q.round()
+}
+
+/// K-split quire dot product: shard the reduction dimension into `shards`
+/// contiguous ranges ([`shard_ranges`]), accumulate each on its own scoped
+/// thread into a private quire, then [`Quire::merge`] the partials and
+/// round once. The quire is an exact fixed-point accumulator and `merge`
+/// is an exact fixed-point add, so the result is bit-identical to
+/// [`dot_quire_serial`] for every shard count — pinned by the
+/// partition-invariance suite.
+pub fn dot_quire_sharded<F: KernelFormat>(a: &[F::Bits], b: &[F::Bits], shards: usize) -> F::Bits {
+    assert_eq!(a.len(), b.len());
+    let ranges = shard_ranges(a.len(), shards);
+    if ranges.len() <= 1 {
+        return dot_quire_serial::<F>(a, b);
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                let (ar, br) = (&a[r.clone()], &b[r]);
+                s.spawn(move || {
+                    let mut q = Quire::<F>::new();
+                    for (&x, &y) in ar.iter().zip(br) {
+                        q.madd_unpacked(F::decode(x), F::decode(y));
+                    }
+                    q
+                })
+            })
+            .collect();
+        let mut acc = Quire::<F>::new();
+        for h in handles {
+            acc.merge(&h.join().expect("dot shard worker panicked"));
+        }
+        acc.round()
+    })
+}
+
+/// Format-generic quire dot product on bit patterns. Long reductions
+/// (≥ [`DOT_SHARD_MIN_LEN`]) K-split across [`worker_threads`] — same bits
+/// as the serial loop, see [`dot_quire_sharded`].
+pub fn dot_quire<F: KernelFormat>(a: &[F::Bits], b: &[F::Bits]) -> F::Bits {
+    let threads = worker_threads();
+    if threads > 1 && a.len() >= DOT_SHARD_MIN_LEN {
+        // Keep every shard at least half the threshold long.
+        dot_quire_sharded::<F>(a, b, threads.min(a.len() / (DOT_SHARD_MIN_LEN / 2)))
+    } else {
+        dot_quire_serial::<F>(a, b)
+    }
 }
 
 // ── Posit32 entry points (the paper's format), kept by name ────────────
@@ -439,6 +586,56 @@ mod tests {
             q.madd(x, y);
         }
         assert_eq!(dot_quire::<P64>(&a, &b), q.round());
+    }
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for len in [0usize, 1, 7, 64, 1000] {
+            for shards in [1usize, 2, 3, 7, 64, 2000] {
+                let rs = shard_ranges(len, shards);
+                assert!(!rs.is_empty());
+                assert!(rs.len() <= shards.max(1));
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next, "len={len} shards={shards}");
+                    assert!(r.end >= r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, len, "len={len} shards={shards}");
+                let (min, max) = rs
+                    .iter()
+                    .fold((usize::MAX, 0), |(mn, mx), r| (mn.min(r.len()), mx.max(r.len())));
+                assert!(max - min <= 1, "uneven split len={len} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_sharded_matches_serial_every_split() {
+        let mut rng = Rng::new(0x5AD0);
+        let a: Vec<u32> = (0..1001).map(|_| rng.posit_bits::<32>()).collect();
+        let b: Vec<u32> = (0..1001).map(|_| rng.posit_bits::<32>()).collect();
+        let want = dot_quire_serial::<P32>(&a, &b);
+        for shards in [1usize, 2, 3, 5, 8, 17, 1001, 5000] {
+            assert_eq!(dot_quire_sharded::<P32>(&a, &b, shards), want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn gemm_tiled_matches_row_driver() {
+        let mut rng = Rng::new(0x711E);
+        for n in [1usize, 4, 17] {
+            let a = mat(&mut rng, n);
+            let b = mat(&mut rng, n);
+            let want = gemm_p32_quire_scalar(n, &a, &b);
+            for (rs, ks) in [(1, 1), (1, 4), (4, 1), (3, 3), (n, n), (2, 7)] {
+                assert_eq!(
+                    gemm_quire_tiled::<P32>(n, &a, &b, rs, ks),
+                    want,
+                    "n={n} row_shards={rs} k_shards={ks}"
+                );
+            }
+        }
     }
 
     #[test]

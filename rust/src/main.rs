@@ -11,6 +11,7 @@
 //! percival serve   --listen 127.0.0.1:4590 [--snapshot drain.snap]
 //! percival serve   --stdio                     # frames on stdout, logs on stderr
 //! percival client  --connect 127.0.0.1:4590 [--jobs 4] [--verify]
+//! percival fanout  --connect 127.0.0.1:4590,127.0.0.1:4591 [--len 65536] [--verify]
 //! ```
 
 use std::path::PathBuf;
@@ -19,12 +20,13 @@ use std::time::Duration;
 use percival::bench::{harness, tables};
 use percival::coordinator::net::install_sigterm;
 use percival::coordinator::{
-    Backend, Client, ClientConfig, Coordinator, Job, JobSpec, NetFaultPlan, Server, ServerConfig,
-    Service, ServiceConfig,
+    Backend, Client, ClientConfig, Coordinator, Fanout, Format, Job, JobSpec, NetFaultPlan,
+    Server, ServerConfig, Service, ServiceConfig,
 };
 use percival::core::CoreConfig;
 use percival::isa::asm::assemble;
 use percival::isa::disasm::disasm;
+use percival::posit::convert::from_f64_n;
 use percival::posit::Posit32;
 use percival::synth::report;
 use percival::testing::Rng;
@@ -367,11 +369,119 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "fanout" => {
+            let addrs: Vec<String> = opt("--connect")
+                .map(|s| {
+                    s.split(',')
+                        .map(|t| t.trim().to_string())
+                        .filter(|t| !t.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default();
+            if addrs.is_empty() {
+                eprintln!("usage: percival fanout --connect ADDR1,ADDR2[,...] [flags]");
+                std::process::exit(2);
+            }
+            let len: usize = opt("--len").and_then(|s| s.parse().ok()).unwrap_or(4096);
+            let seed: u64 = opt("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+            let shards: usize =
+                opt("--shards").and_then(|s| s.parse().ok()).unwrap_or(addrs.len() * 2);
+            let timeout =
+                Duration::from_secs(opt("--timeout-s").and_then(|s| s.parse().ok()).unwrap_or(120));
+            let fmt = match opt("--fmt").as_deref() {
+                Some("p8") => Format::P8,
+                Some("p16") => Format::P16,
+                Some("p32") | None => Format::P32,
+                Some("p64") => Format::P64,
+                Some(other) => {
+                    eprintln!("unknown format `{other}`");
+                    std::process::exit(2);
+                }
+            };
+            let backend = match opt("--backend").as_deref() {
+                Some("sim") | None => Backend::Sim,
+                Some("native") => Backend::Native,
+                Some(other) => {
+                    eprintln!("fanout supports sim|native backends, not `{other}`");
+                    std::process::exit(2);
+                }
+            };
+            // Inputs regenerate bit-identically from (fmt, len, seed), so
+            // any two invocations — different fleets, different shard
+            // counts — compute the same reduction and must agree bitwise.
+            let mut rng = Rng::new(seed);
+            let w = fmt.width();
+            let a: Vec<u64> = (0..len).map(|_| from_f64_n(w, rng.range_f64(-1.0, 1.0))).collect();
+            let b: Vec<u64> = (0..len).map(|_| from_f64_n(w, rng.range_f64(-1.0, 1.0))).collect();
+            let cfgs = addrs.iter().map(|a| ClientConfig::new(a.clone())).collect();
+            let mut fan = match Fanout::connect(cfgs) {
+                Ok(f) => f,
+                Err(e) => {
+                    eprintln!("fanout: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            fan.wait_timeout = timeout;
+            let t0 = std::time::Instant::now();
+            let rep = match fan.dot(fmt, &a, &b, backend, shards) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("fanout: {e:#}");
+                    std::process::exit(1);
+                }
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "fanout dot: fmt={} len={len} shards={} servers={} alive={} resubmitted={} \
+                 in {dt:.3}s",
+                fmt.name(),
+                rep.shards,
+                fan.servers(),
+                fan.alive(),
+                rep.resubmitted
+            );
+            println!("bits=0x{:016x}", rep.bits);
+            if let Some(path) = opt("--out") {
+                if let Err(e) = std::fs::write(&path, format!("0x{:016x}\n", rep.bits)) {
+                    eprintln!("fanout: write {path}: {e}");
+                    std::process::exit(1);
+                }
+            }
+            let mut failed = false;
+            if has("--verify") {
+                let co = Coordinator::new(1, None);
+                let want =
+                    co.run(Job::Dot { fmt, a, b }, Backend::Native).map(|r| r.bits64[0]);
+                co.shutdown();
+                match want {
+                    Ok(bits) if bits == rep.bits => {
+                        println!("verified: matches the native serial reduction");
+                    }
+                    Ok(bits) => {
+                        eprintln!(
+                            "BIT MISMATCH: fanout 0x{:016x} vs native 0x{bits:016x}",
+                            rep.bits
+                        );
+                        failed = true;
+                    }
+                    Err(e) => {
+                        eprintln!("fanout: native reference failed: {e:#}");
+                        failed = true;
+                    }
+                }
+            }
+            if has("--shutdown") {
+                fan.shutdown_all();
+            }
+            if failed {
+                std::process::exit(1);
+            }
+        }
         "version" => println!("percival {} (paper reproduction)", env!("CARGO_PKG_VERSION")),
         _ => {
             println!(
                 "PERCIVAL reproduction CLI\n\
-                 usage: percival <tables|synth|run|asm|serve|client|version> [flags]\n\
+                 usage: percival <tables|synth|run|asm|serve|client|fanout|version> [flags]\n\
                  \n\
                  tables  --table6 --table7 --table8 --fig7 --all --quick\n\
                  synth   --fpga --fpga-pau --asic --ratios --ablate --all\n\
@@ -383,7 +493,10 @@ fn main() {
                  client  --connect ADDR [--jobs J] [--n N] [--seed S]\n\
                  \x20        [--backend sim|native] [--verify] [--submit-only]\n\
                  \x20        [--ids-out PATH] [--attach-ids PATH] [--fault-seed K]\n\
-                 \x20        [--shutdown] [--timeout-s T]"
+                 \x20        [--shutdown] [--timeout-s T]\n\
+                 fanout  --connect A1,A2[,...] [--len L] [--seed S] [--shards K]\n\
+                 \x20        [--fmt p8|p16|p32|p64] [--backend sim|native] [--verify]\n\
+                 \x20        [--out PATH] [--shutdown] [--timeout-s T]"
             );
         }
     }

@@ -329,6 +329,50 @@ impl<F: PositFormat> Quire<F> {
         self.hi_dirty = hi_d;
     }
 
+    /// Exact merge of a partial accumulation: `self += other`, as a
+    /// carry-propagating limb-wise add of the two 16n-bit
+    /// two's-complement integers. This is the same mod-2^BITS addition
+    /// the accumulation itself performs, so for any partition of a
+    /// reduction the merged result is bit-identical to the serial
+    /// order — two's complement makes negative partials (whose sign
+    /// extension forces `hi_dirty == LIMBS`) just work. NaR poisons:
+    /// either side holding NaR leaves the merged quire NaR, matching
+    /// the sticky hardware rule. Dirty-window aware: only `other`'s
+    /// dirty limb range is added, plus whatever carry ripple it
+    /// provokes, so merging a mostly-clear partial touches few limbs.
+    pub fn merge(&mut self, other: &Self) {
+        if other.nar {
+            self.nar = true;
+            return;
+        }
+        if self.nar || other.hi_dirty == 0 {
+            return;
+        }
+        let l = Self::LIMBS;
+        let (olo, ohi) = (other.lo_dirty, other.hi_dirty);
+        let lo_d = self.lo_dirty.min(olo);
+        let mut hi_d = self.hi_dirty.max(ohi);
+        let limbs = self.limbs.as_mut_slice();
+        let olimbs = other.limbs.as_slice();
+        let mut carry = 0u64;
+        for i in olo..ohi {
+            let (v, c1) = limbs[i].overflowing_add(olimbs[i]);
+            let (v, c2) = v.overflowing_add(carry);
+            limbs[i] = v;
+            carry = (c1 | c2) as u64;
+        }
+        let mut i = ohi;
+        while carry != 0 && i < l {
+            let (v, c) = limbs[i].overflowing_add(1);
+            limbs[i] = v;
+            hi_d = hi_d.max(i + 1);
+            carry = c as u64;
+            i += 1;
+        }
+        self.lo_dirty = lo_d;
+        self.hi_dirty = hi_d;
+    }
+
     /// `QROUND.S` — round the accumulator to the nearest posit (single
     /// rounding of the whole fused expression). Scans only the dirty
     /// window: a negative accumulator necessarily has a dirty top limb
@@ -402,17 +446,25 @@ impl<F: PositFormat> Quire<F> {
     /// carry-guard bits put real overflow ~2³¹ MACs away), so the
     /// encoding is unambiguous.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let len = Self::BITS as usize / 8;
-        if self.nar {
-            let mut out = vec![0u8; len];
-            out[len - 1] = 0x80;
-            return out;
-        }
-        let mut out = Vec::with_capacity(len);
-        for limb in self.limbs.as_slice() {
-            out.extend_from_slice(&limb.to_le_bytes());
-        }
+        let mut out = vec![0u8; Self::BITS as usize / 8];
+        self.write_bytes(&mut out);
         out
+    }
+
+    /// [`Self::to_bytes`] into a caller-provided buffer — the no-alloc
+    /// spill path (`qsq` and checkpointing serialize a quire on every
+    /// context switch). `out` must be exactly the `16n/8`-byte image.
+    pub fn write_bytes(&self, out: &mut [u8]) {
+        let len = Self::BITS as usize / 8;
+        assert_eq!(out.len(), len, "quire{}: image buffer must be {len} bytes", F::N);
+        if self.nar {
+            out.fill(0);
+            out[len - 1] = 0x80;
+            return;
+        }
+        for (chunk, limb) in out.chunks_exact_mut(8).zip(self.limbs.as_slice()) {
+            chunk.copy_from_slice(&limb.to_le_bytes());
+        }
     }
 
     /// Restore an accumulator from a [`Self::to_bytes`] image. Errors on
@@ -421,6 +473,13 @@ impl<F: PositFormat> Quire<F> {
     /// The dirty window is recomputed tight from the nonzero limbs, which
     /// preserves the windowed-accumulation invariant.
     pub fn from_bytes(bytes: &[u8]) -> crate::error::Result<Self> {
+        Self::read_bytes(bytes)
+    }
+
+    /// [`Self::from_bytes`] under its buffer-oriented name, pairing
+    /// [`Self::write_bytes`] (no allocation either way — the limbs live
+    /// inline in the returned value).
+    pub fn read_bytes(bytes: &[u8]) -> crate::error::Result<Self> {
         let len = Self::BITS as usize / 8;
         crate::ensure!(
             bytes.len() == len,

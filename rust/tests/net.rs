@@ -5,20 +5,21 @@
 //! the rolling-restart pin (drain snapshot → fresh server → resumed
 //! jobs bit-identical to `Backend::Native` and to an uninterrupted
 //! run), a seeded wire-level fault sweep that must complete every job,
-//! and idle-connection reaping.
+//! idle-connection reaping, and the multi-server [`Fanout`] reduction
+//! (bit-identical to one server, with failover off a lying/dead peer).
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use percival::coordinator::json::{self, Value};
 use percival::coordinator::net::{FrameError, FrameReader};
 use percival::coordinator::sched::{run_batch_serial, SimPoolConfig};
 use percival::coordinator::{
-    Backend, Client, ClientConfig, Coordinator, Format, JobEvent, JobSpec, NetFaultPlan, Server,
-    ServerConfig, ServeSummary, ServiceConfig,
+    Backend, Client, ClientConfig, Coordinator, Fanout, Format, JobEvent, JobSpec, NetFaultPlan,
+    Server, ServerConfig, ServeSummary, ServiceConfig,
 };
 use percival::posit::convert::from_f64_n;
 use percival::testing::Rng;
@@ -340,4 +341,128 @@ fn stdio_transport_serves_a_session_and_exits_zero_on_eof() {
     drop(stdin); // EOF is the stdio drain signal
     let status = child.wait().expect("child exits");
     assert!(status.success(), "serve --stdio must exit 0 after drain, got {status:?}");
+}
+
+/// Deterministic dot inputs regenerable from `(fmt, len, seed)`.
+fn dot_inputs(fmt: Format, len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Rng::new(seed);
+    (pats(fmt, len, &mut rng), pats(fmt, len, &mut rng))
+}
+
+#[test]
+fn fanout_over_two_servers_is_bit_identical_to_one_and_to_native() {
+    let (s0, addr0, h0) = start(server_cfg(None));
+    let (s1, addr1, h1) = start(server_cfg(None));
+    let fmt = Format::P32;
+    let (a, b) = dot_inputs(fmt, 257, 0xFA0);
+    let want = native_ref(&JobSpec::dot(fmt, a.clone(), b.clone()))[0];
+
+    // Two servers, five shards, native lane.
+    let mut fleet = Fanout::connect(vec![
+        ClientConfig::new(addr0.to_string()),
+        ClientConfig::new(addr1.to_string()),
+    ])
+    .expect("fleet connects");
+    let rep = fleet.dot(fmt, &a, &b, Backend::Native, 5).expect("fanned dot");
+    assert_eq!(rep.bits, want, "fanned-out bits diverge from Native");
+    assert_eq!(rep.shards, 5);
+    assert_eq!(rep.resubmitted, 0, "healthy fleet must not resubmit");
+    assert_eq!(rep.per_server.iter().sum::<usize>(), 5);
+    assert!(rep.per_server.iter().all(|&c| c > 0), "round-robin must use both servers");
+
+    // One server, three shards: same bits (partition invariance over
+    // the wire), so fleet layout can never change the answer.
+    let mut solo =
+        Fanout::connect(vec![ClientConfig::new(addr0.to_string())]).expect("solo connects");
+    let solo_rep = solo.dot(fmt, &a, &b, Backend::Native, 3).expect("solo dot");
+    assert_eq!(solo_rep.bits, want);
+
+    // And a sharded reduction on the Sim lane crosses the wire as raw
+    // `qsq` spill images that still merge to the native bits.
+    let (sa, sb) = dot_inputs(fmt, 48, 0xFA1);
+    let sim_want = native_ref(&JobSpec::dot(fmt, sa.clone(), sb.clone()))[0];
+    let sim_rep = fleet.dot(fmt, &sa, &sb, Backend::Sim, 3).expect("sim fanned dot");
+    assert_eq!(sim_rep.bits, sim_want, "sim partial quires diverge from Native");
+
+    s0.request_drain();
+    s1.request_drain();
+    h0.join().expect("server 0");
+    h1.join().expect("server 1");
+}
+
+/// A server that acks every submission and then forgets it ever
+/// happened: replies to `attach` with `unknown job id` and drops each
+/// connection after one frame. The fan-out must declare it dead and
+/// reassign its shards to the healthy server.
+fn amnesiac_server() -> (SocketAddr, JoinHandle<()>, std::sync::Arc<std::sync::atomic::AtomicBool>)
+{
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    listener.set_nonblocking(true).expect("nonblocking");
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let h = std::thread::spawn(move || loop {
+        if flag.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+                let mut out = stream.try_clone().expect("clone socket");
+                let mut reader = FrameReader::new(stream, 1 << 20);
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match reader.read_frame() {
+                        Ok(v) => {
+                            let reply = if v.get("job").is_some() {
+                                "{\"v\":1,\"ack\":{\"id\":9}}\n"
+                            } else if v.get("cmd").and_then(Value::as_str) == Some("ping") {
+                                "{\"v\":1,\"pong\":true}\n"
+                            } else {
+                                "{\"v\":1,\"error\":{\"msg\":\"attach: unknown job id 9\"}}\n"
+                            };
+                            let _ = out.write_all(reply.as_bytes());
+                            break; // one frame per connection, then gone
+                        }
+                        Err(FrameError::Timeout) if Instant::now() < deadline => {}
+                        Err(_) => break,
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => return,
+        }
+    });
+    (addr, h, stop)
+}
+
+#[test]
+fn fanout_reassigns_shards_of_a_dead_server() {
+    let (s0, addr0, h0) = start(server_cfg(None));
+    let (bad_addr, bad_h, bad_stop) = amnesiac_server();
+    let fmt = Format::P32;
+    let (a, b) = dot_inputs(fmt, 120, 0xFB0);
+    let want = native_ref(&JobSpec::dot(fmt, a.clone(), b.clone()))[0];
+
+    let mut fleet = Fanout::connect(vec![
+        ClientConfig::new(addr0.to_string()),
+        ClientConfig::new(bad_addr.to_string()),
+    ])
+    .expect("fleet connects (the liar accepts TCP fine)");
+    let rep = fleet.dot(fmt, &a, &b, Backend::Native, 4).expect("degraded fanned dot");
+    assert_eq!(rep.bits, want, "failover changed the reduction bits");
+    assert_eq!(rep.resubmitted, 2, "both shards placed on the liar must move");
+    assert_eq!(fleet.alive(), 1, "the amnesiac server must be declared dead");
+    assert_eq!(rep.per_server[0], 4, "every shard must resolve on the healthy server");
+    assert_eq!(rep.per_server[1], 0);
+
+    bad_stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    bad_h.join().expect("fake server thread");
+    s0.request_drain();
+    h0.join().expect("server 0");
 }

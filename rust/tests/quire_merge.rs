@@ -1,0 +1,268 @@
+//! Merge semantics of the exact sharded-reduction stack.
+//!
+//! `Quire::merge` is the primitive every layer of the sharding story
+//! leans on — K-split kernels, the scheduler's partial-quire jobs, the
+//! multi-server fan-out — so its algebra is pinned here directly:
+//! NaR poisons, a cleared quire is the identity, merge commutes and
+//! associates, carries ripple across the whole dirty window, and any
+//! partition of a multiply-accumulate stream merges to the bit pattern
+//! of serial accumulation. The partition-invariance property is then
+//! driven up through the kernel (`dot_quire_sharded`) and the sim
+//! scheduler (`run_dot_sharded`), cross-checked against
+//! `Backend::Native`.
+
+use percival::coordinator::{
+    run_dot_sharded, Backend, Coordinator, Format, Job, SimPoolConfig,
+};
+use percival::kernels::gemm::{dot_quire_serial, dot_quire_sharded, KernelFormat};
+use percival::posit::convert::from_f64_n;
+use percival::posit::{PositBits, PositFormat, Quire, P16, P32, P64, P8};
+use percival::testing::Rng;
+
+/// `len` in-format posit patterns from a deterministic stream, spanning
+/// both signs so dirty windows reach the sign-extended high limbs.
+fn pats(width: u32, len: usize, rng: &mut Rng) -> Vec<u64> {
+    (0..len).map(|_| from_f64_n(width, rng.range_f64(-2.0, 2.0))).collect()
+}
+
+/// Accumulate `a[i] * b[i]` over `range` into a fresh quire.
+fn partial<F: PositFormat>(a: &[u64], b: &[u64], range: std::ops::Range<usize>) -> Quire<F> {
+    let mut q = Quire::new();
+    for i in range {
+        q.madd(F::Bits::from_u64(a[i]), F::Bits::from_u64(b[i]));
+    }
+    q
+}
+
+/// Any split point merges to the serial accumulation, bit for bit —
+/// bytes, dirty-window behaviour, and the rounded posit all agree.
+fn check_merge_equals_serial<F: PositFormat>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let len = 160;
+    let a = pats(F::N, len, &mut rng);
+    let b = pats(F::N, len, &mut rng);
+    let serial = partial::<F>(&a, &b, 0..len);
+    for cut in [0, 1, 7, len / 2, len - 1, len] {
+        let mut lo = partial::<F>(&a, &b, 0..cut);
+        let hi = partial::<F>(&a, &b, cut..len);
+        lo.merge(&hi);
+        assert_eq!(lo.to_bytes(), serial.to_bytes(), "{} cut={cut}", F::NAME);
+        assert_eq!(lo.round(), serial.round(), "{} cut={cut}", F::NAME);
+    }
+}
+
+#[test]
+fn merge_equals_serial_accumulation_every_format() {
+    check_merge_equals_serial::<P8>(0x9A01);
+    check_merge_equals_serial::<P16>(0x9A02);
+    check_merge_equals_serial::<P32>(0x9A03);
+    check_merge_equals_serial::<P64>(0x9A04);
+}
+
+fn check_nar_poisons<F: PositFormat>() {
+    let one = F::Bits::from_u64(from_f64_n(F::N, 1.0));
+    let mut nar = Quire::<F>::new();
+    nar.madd(F::NAR_BITS, one);
+    assert!(nar.is_nar(), "{}: NaR input must poison the quire", F::NAME);
+    let mut clean = Quire::<F>::new();
+    clean.madd(one, one);
+
+    // NaR absorbs in both merge directions.
+    let mut x = clean;
+    x.merge(&nar);
+    assert!(x.is_nar(), "{}: clean ⊕ NaR", F::NAME);
+    let mut y = nar;
+    y.merge(&clean);
+    assert!(y.is_nar(), "{}: NaR ⊕ clean", F::NAME);
+
+    // And it serializes as the canonical image: top byte 0x80, rest 0.
+    let img = x.to_bytes();
+    assert_eq!(img.len(), 2 * F::N as usize);
+    assert_eq!(img[img.len() - 1], 0x80, "{}", F::NAME);
+    assert!(img[..img.len() - 1].iter().all(|&b| b == 0), "{}", F::NAME);
+    assert_eq!(x.round(), F::NAR_BITS, "{}", F::NAME);
+}
+
+#[test]
+fn nar_poisons_merge_both_directions() {
+    check_nar_poisons::<P8>();
+    check_nar_poisons::<P16>();
+    check_nar_poisons::<P32>();
+    check_nar_poisons::<P64>();
+}
+
+fn check_cleared_identity<F: PositFormat>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let a = pats(F::N, 40, &mut rng);
+    let b = pats(F::N, 40, &mut rng);
+    let q = partial::<F>(&a, &b, 0..40);
+    // q ⊕ 0 = q …
+    let mut x = q;
+    x.merge(&Quire::new());
+    assert_eq!(x.to_bytes(), q.to_bytes(), "{}", F::NAME);
+    // … and 0 ⊕ q = q, including the recomputed dirty window.
+    let mut z = Quire::<F>::new();
+    z.merge(&q);
+    assert_eq!(z.to_bytes(), q.to_bytes(), "{}", F::NAME);
+    assert_eq!(z.round(), q.round(), "{}", F::NAME);
+    // A freshly cleared pair merges to zero.
+    let mut c = Quire::<F>::new();
+    c.merge(&Quire::new());
+    assert!(c.to_bytes().iter().all(|&v| v == 0), "{}", F::NAME);
+}
+
+#[test]
+fn merging_cleared_quire_is_identity() {
+    check_cleared_identity::<P8>(0x9B01);
+    check_cleared_identity::<P16>(0x9B02);
+    check_cleared_identity::<P32>(0x9B03);
+    check_cleared_identity::<P64>(0x9B04);
+}
+
+fn check_commutes_associates<F: PositFormat>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for trial in 0..24 {
+        let a = pats(F::N, 30, &mut rng);
+        let b = pats(F::N, 30, &mut rng);
+        let qa = partial::<F>(&a, &b, 0..10);
+        let qb = partial::<F>(&a, &b, 10..20);
+        let qc = partial::<F>(&a, &b, 20..30);
+        let mut ab = qa;
+        ab.merge(&qb);
+        let mut ba = qb;
+        ba.merge(&qa);
+        assert_eq!(ab.to_bytes(), ba.to_bytes(), "{} trial {trial}: a⊕b ≠ b⊕a", F::NAME);
+        let mut ab_c = ab;
+        ab_c.merge(&qc);
+        let mut bc = qb;
+        bc.merge(&qc);
+        let mut a_bc = qa;
+        a_bc.merge(&bc);
+        assert_eq!(
+            ab_c.to_bytes(),
+            a_bc.to_bytes(),
+            "{} trial {trial}: (a⊕b)⊕c ≠ a⊕(b⊕c)",
+            F::NAME
+        );
+    }
+}
+
+#[test]
+fn merge_commutes_and_associates() {
+    check_commutes_associates::<P8>(0x9C01);
+    check_commutes_associates::<P16>(0x9C02);
+    check_commutes_associates::<P32>(0x9C03);
+    check_commutes_associates::<P64>(0x9C04);
+}
+
+/// Crafted limb images that force carry propagation past the other
+/// operand's dirty window — the edge `merge`'s ripple loop exists for.
+fn check_carry_ripple<F: PositFormat>() {
+    let qb = 2 * F::N as usize;
+    // (-1) ⊕ (+1) = 0: every byte participates in the ripple.
+    let neg_one = Quire::<F>::from_bytes(&vec![0xFF; qb]).expect("all-ones image is a number");
+    let mut one_img = vec![0u8; qb];
+    one_img[0] = 1;
+    let mut acc = Quire::<F>::from_bytes(&one_img).expect("one image");
+    acc.merge(&neg_one);
+    assert!(acc.to_bytes().iter().all(|&v| v == 0), "{}: (-1) + 1 ≠ 0", F::NAME);
+    assert!(!acc.is_nar(), "{}", F::NAME);
+
+    // All-ones in the low limb only, plus 1: the carry must cross the
+    // limb boundary even though the right-hand side's window is limb 0.
+    let mut low_ones = vec![0u8; qb];
+    low_ones[..8].fill(0xFF);
+    let mut acc = Quire::<F>::from_bytes(&low_ones).expect("low-ones image");
+    acc.merge(&Quire::from_bytes(&one_img).expect("one image"));
+    let got = acc.to_bytes();
+    assert!(got[..8].iter().all(|&v| v == 0), "{}: low limb must clear", F::NAME);
+    assert_eq!(got[8], 1, "{}: carry must land in limb 1", F::NAME);
+    assert!(got[9..].iter().all(|&v| v == 0), "{}", F::NAME);
+}
+
+#[test]
+fn carry_ripples_across_limb_boundaries() {
+    check_carry_ripple::<P8>();
+    check_carry_ripple::<P16>();
+    check_carry_ripple::<P32>();
+    check_carry_ripple::<P64>();
+}
+
+/// Kernel layer: `dot_quire_sharded` returns the serial bits for every
+/// shard count, including degenerate (1) and saturated (≥ len) splits.
+fn check_kernel_partition_invariance<F: KernelFormat>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for &len in &[1usize, 2, 37, 501] {
+        let a: Vec<F::Bits> =
+            pats(F::N, len, &mut rng).into_iter().map(F::Bits::from_u64).collect();
+        let b: Vec<F::Bits> =
+            pats(F::N, len, &mut rng).into_iter().map(F::Bits::from_u64).collect();
+        let serial = dot_quire_serial::<F>(&a, &b);
+        for &shards in &[1usize, 2, 3, 5, 13, len, 4 * len] {
+            let got = dot_quire_sharded::<F>(&a, &b, shards);
+            assert_eq!(
+                got.to_u64(),
+                serial.to_u64(),
+                "{} len={len} shards={shards}",
+                F::NAME
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_dot_partition_invariance() {
+    check_kernel_partition_invariance::<P8>(0x9D01);
+    check_kernel_partition_invariance::<P16>(0x9D02);
+    check_kernel_partition_invariance::<P32>(0x9D03);
+    check_kernel_partition_invariance::<P64>(0x9D04);
+}
+
+/// Scheduler layer: shard-decomposed sim jobs whose `qsq` spill images
+/// merge to the same bits as the serial kernel and `Backend::Native`,
+/// for any shard count and hart count.
+#[test]
+fn scheduler_sharded_dot_is_bit_identical_to_native() {
+    let mut rng = Rng::new(0x9E01);
+    let co = Coordinator::new(1, None);
+    for fmt in [Format::P16, Format::P32, Format::P64] {
+        let len = 96;
+        let a = pats(fmt.width(), len, &mut rng);
+        let b = pats(fmt.width(), len, &mut rng);
+        let native = co
+            .run(Job::Dot { fmt, a: a.clone(), b: b.clone() }, Backend::Native)
+            .expect("native dot")
+            .bits64[0];
+        for (shards, harts) in [(1usize, 1usize), (3, 2), (5, 2), (8, 3)] {
+            let pool = SimPoolConfig { harts, quantum: 200, ..Default::default() };
+            let rep = run_dot_sharded(fmt, &a, &b, shards, &pool)
+                .unwrap_or_else(|e| panic!("{fmt:?} shards={shards}: {e}"));
+            assert_eq!(
+                rep.bits, native,
+                "{fmt:?} shards={shards} harts={harts}: sharded sim ≠ native"
+            );
+            assert_eq!(rep.shards, shards.min(len));
+        }
+    }
+    co.shutdown();
+}
+
+/// NaR travels through the sharded path: a NaR operand in one shard
+/// poisons the merged result exactly as it does the serial one.
+#[test]
+fn scheduler_sharded_dot_propagates_nar() {
+    let mut rng = Rng::new(0x9F01);
+    let fmt = Format::P32;
+    let len = 40;
+    let mut a = pats(fmt.width(), len, &mut rng);
+    let b = pats(fmt.width(), len, &mut rng);
+    a[len - 3] = 1u64 << 31; // NaR, parked in the final shard
+    let pool = SimPoolConfig { harts: 2, quantum: 120, ..Default::default() };
+    let rep = run_dot_sharded(fmt, &a, &b, 4, &pool).expect("sharded dot runs");
+    assert_eq!(rep.bits, 1u64 << 31, "NaR must survive the shard merge");
+    let co = Coordinator::new(1, None);
+    let native =
+        co.run(Job::Dot { fmt, a, b }, Backend::Native).expect("native dot").bits64[0];
+    co.shutdown();
+    assert_eq!(rep.bits, native);
+}

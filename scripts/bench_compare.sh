@@ -22,6 +22,9 @@
 # Default gated rows (comma-separated, overridable via $3):
 #   x:gemm256_p32_quire_kernel    — native decode-once kernel vs naive
 #   x:gemm_sim_p32_quire_n64      — superblock engine vs oracle
+#   x:dot_kquire_p32_len1m_sharded — K-split + Quire::merge dot vs the
+#                                   serial kernel (same run, same
+#                                   machine; host-core dependent)
 #   x:gemm_sim_p32_quire_n128_tx  — translated engine vs superblock
 #   x:gemm_sim_sched_ckpt_n16x4   — checkpointed vs uncheckpointed
 #                                   makespan (deterministic simulated
@@ -36,7 +39,7 @@ set -euo pipefail
 
 fresh="${1:-BENCH_posit_kernels.json}"
 baseline="${2:-}"
-rows="${3:-x:gemm256_p32_quire_kernel,x:gemm_sim_p32_quire_n64,x:gemm_sim_p32_quire_n128_tx,x:gemm_sim_sched_ckpt_n16x4,x:gemm_sim_svc_pool_p32_n64}"
+rows="${3:-x:gemm256_p32_quire_kernel,x:dot_kquire_p32_len1m_sharded,x:gemm_sim_p32_quire_n64,x:gemm_sim_p32_quire_n128_tx,x:gemm_sim_sched_ckpt_n16x4,x:gemm_sim_svc_pool_p32_n64}"
 threshold="${4:-25}"
 
 if [ ! -f "$fresh" ]; then

@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Multi-server fan-out smoke test of `percival fanout`:
+#
+#   1. start two real `percival serve --listen` processes,
+#   2. run the whole sharded reduction on server A alone, verified
+#      against the in-process native backend (the reference bits),
+#   3. rerun across BOTH servers while server B is SIGKILLed shortly
+#      after the batch starts — the fan-out must declare B dead,
+#      reassign its shards to A, and land bit-identical results,
+#   4. compare the two bit patterns and tear the survivor down.
+#
+# The kill is wall-clock timed, so on a fast machine the batch may
+# finish before it lands; the bit-equality check holds either way, and
+# the run reports how many shards actually moved.
+#
+# Usage: scripts/fanout_smoke.sh [path-to-percival-binary]
+set -euo pipefail
+
+BIN=${1:-${PERCIVAL_BIN:-target/release/percival}}
+PORT_A=${PORT_A:-45927}
+PORT_B=${PORT_B:-45928}
+LEN=${LEN:-60000}
+SEED=${SEED:-11}
+SHARDS=${SHARDS:-8}
+
+WORK=$(mktemp -d)
+trap 'rm -rf "$WORK"; kill "${SRV_A:-0}" "${SRV_B:-0}" 2>/dev/null || true' EXIT
+
+"$BIN" serve --listen "127.0.0.1:$PORT_A" --harts 2 --quantum 500 &
+SRV_A=$!
+"$BIN" serve --listen "127.0.0.1:$PORT_B" --harts 2 --quantum 500 &
+SRV_B=$!
+
+# Reference: every shard on server A, cross-checked against Native.
+# The client retries with backoff, riding out server startup.
+"$BIN" fanout --connect "127.0.0.1:$PORT_A" --len "$LEN" --seed "$SEED" \
+  --shards "$SHARDS" --backend sim --verify --out "$WORK/ref.txt"
+
+# Fleet run with a mid-batch SIGKILL of server B (no drain, no
+# snapshot — B simply vanishes and its shards must fail over to A).
+( sleep "${KILL_AFTER_S:-0.4}"; kill -KILL "$SRV_B" 2>/dev/null || true ) &
+KILLER=$!
+"$BIN" fanout --connect "127.0.0.1:$PORT_A,127.0.0.1:$PORT_B" --len "$LEN" \
+  --seed "$SEED" --shards "$SHARDS" --backend sim --timeout-s 6 \
+  --out "$WORK/fleet.txt"
+wait "$KILLER" 2>/dev/null || true
+wait "$SRV_B" 2>/dev/null || true
+
+cmp "$WORK/ref.txt" "$WORK/fleet.txt" || {
+  echo "fanout smoke: fleet bits diverge from the single-server run" >&2
+  echo "  ref:   $(cat "$WORK/ref.txt")" >&2
+  echo "  fleet: $(cat "$WORK/fleet.txt")" >&2
+  exit 1
+}
+
+# Graceful teardown of the survivor through the same CLI.
+"$BIN" fanout --connect "127.0.0.1:$PORT_A" --len 64 --seed 1 \
+  --backend native --verify --shutdown
+wait "$SRV_A" || { echo "fanout smoke: server A did not exit 0" >&2; exit 1; }
+
+echo "fanout smoke: OK (sharded bits identical across fleet layouts and a SIGKILL)"
